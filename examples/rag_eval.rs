@@ -1,0 +1,69 @@
+//! RAG evaluation pipeline (paper §4.1 RAG metrics, after RAGAS):
+//! factual-QA workload with retrieved context chunks and a known gold
+//! chunk, scored with faithfulness, context relevance/precision/recall,
+//! and answer relevance (embedding path through the PJRT runtime).
+
+use spark_llm_eval::config::{EvalTask, MetricConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+use spark_llm_eval::report;
+use spark_llm_eval::runtime::{default_artifact_dir, SemanticRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let n = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(600usize);
+    println!("== RAG evaluation: {n} factual-QA examples with retrieved context ==\n");
+
+    // QA-only mix: every example carries context chunks + gold position.
+    let df = synth::generate(
+        n,
+        11,
+        synth::DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 },
+    )?;
+
+    let mut task = EvalTask::default();
+    task.task_id = "rag-eval".into();
+    task.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("faithfulness", "rag"),
+        MetricConfig::new("context_relevance", "rag"),
+        MetricConfig::new("context_precision", "rag"),
+        MetricConfig::new("context_recall", "rag"),
+    ];
+
+    let mut runner = EvalRunner::with_clock(VirtualClock::new());
+    runner.service_config = SimServiceConfig { sleep_latency: false, ..Default::default() };
+    let artifacts = default_artifact_dir();
+    if artifacts.join("manifest.json").exists() {
+        runner.runtime = Some(SemanticRuntime::load(&artifacts)?);
+        task.metrics.push(MetricConfig::new("answer_relevance", "rag"));
+    } else {
+        eprintln!("(artifacts not built — skipping answer_relevance)");
+    }
+
+    let result = runner.evaluate(&df, &task)?;
+    println!("{}", report::eval_summary(&result));
+
+    // Ground truth is known by construction; check the metric semantics.
+    let recall = result.metric("context_recall").unwrap();
+    assert!(
+        recall.value > 0.99,
+        "gold chunk always contains the answer -> recall ≈ 1, got {}",
+        recall.value
+    );
+    let precision = result.metric("context_precision").unwrap();
+    assert!(
+        (0.3..0.9).contains(&precision.value),
+        "gold position uniform over 4 ranks -> MRR-style precision ≈ 0.52, got {}",
+        precision.value
+    );
+    let faith = result.metric("faithfulness").unwrap();
+    println!(
+        "faithfulness {:.3}: correct answers are grounded in the gold chunk; \
+         wrong answers (model quality misses) are not",
+        faith.value
+    );
+    println!("\nrag_eval OK");
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""AOT emitter: lower the L2 graphs to HLO *text* + weight blobs.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text parser on
+the Rust side reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs (``make artifacts``):
+
+  artifacts/embedder.hlo.txt    params: [weights..., ids (B,S) s32, mask (B,S) f32]
+                                returns ((B,D) f32,)
+  artifacts/bertscore.hlo.txt   params: [weights..., ids_a, mask_a, ids_b, mask_b]
+                                returns ((B,) p, (B,) r, (B,) f1)
+  artifacts/bootstrap.hlo.txt   params: [values (N,) f32, idx (R,N) s32, mask (R,N) f32]
+                                returns ((R,) means,)
+  artifacts/weights.bin         all weight tensors, f32 LE, manifest order
+  artifacts/manifest.json       model config, parameter table, artifact index
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import (
+    BootstrapConfig,
+    SimLMConfig,
+    bertscore_fn,
+    bootstrap_fn,
+    embed_fn,
+    init_params,
+    param_specs,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, cfg: SimLMConfig, bcfg: BootstrapConfig) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params = init_params(cfg)
+    specs = param_specs(cfg)
+    flat = [params[name] for name, _ in specs]
+
+    ids_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.max_seq), jnp.int32)
+    mask_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.max_seq), jnp.float32)
+    weight_specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in specs
+    ]
+
+    artifacts = {}
+
+    # --- embedder ---------------------------------------------------------
+    def embed_wrapped(*args):
+        ws, ids, mask = args[:-2], args[-2], args[-1]
+        p = {name: w for (name, _), w in zip(specs, ws)}
+        return embed_fn(p, ids, mask, cfg)
+
+    lowered = jax.jit(embed_wrapped).lower(*weight_specs, ids_spec, mask_spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "embedder.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    artifacts["embedder"] = {
+        "file": "embedder.hlo.txt",
+        "inputs": ["weights", "ids", "mask"],
+        "outputs": [["pooled", [cfg.batch, cfg.d_model], "f32"]],
+    }
+
+    # --- bertscore --------------------------------------------------------
+    def bert_wrapped(*args):
+        ws = args[: len(specs)]
+        ids_a, mask_a, ids_b, mask_b = args[len(specs):]
+        p = {name: w for (name, _), w in zip(specs, ws)}
+        return bertscore_fn(p, ids_a, mask_a, ids_b, mask_b, cfg)
+
+    lowered = jax.jit(bert_wrapped).lower(
+        *weight_specs, ids_spec, mask_spec, ids_spec, mask_spec
+    )
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "bertscore.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    artifacts["bertscore"] = {
+        "file": "bertscore.hlo.txt",
+        "inputs": ["weights", "ids_a", "mask_a", "ids_b", "mask_b"],
+        "outputs": [
+            ["precision", [cfg.batch], "f32"],
+            ["recall", [cfg.batch], "f32"],
+            ["f1", [cfg.batch], "f32"],
+        ],
+    }
+
+    # --- bootstrap --------------------------------------------------------
+    values_spec = jax.ShapeDtypeStruct((bcfg.max_n,), jnp.float32)
+    idx_spec = jax.ShapeDtypeStruct((bcfg.resamples, bcfg.max_n), jnp.int32)
+    rmask_spec = jax.ShapeDtypeStruct((bcfg.resamples, bcfg.max_n), jnp.float32)
+    lowered = jax.jit(bootstrap_fn).lower(values_spec, idx_spec, rmask_spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "bootstrap.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    artifacts["bootstrap"] = {
+        "file": "bootstrap.hlo.txt",
+        "inputs": ["values", "idx", "mask"],
+        "outputs": [["means", [bcfg.resamples], "f32"]],
+    }
+
+    # --- weights ----------------------------------------------------------
+    blob = b"".join(
+        np.asarray(w, dtype="<f4").tobytes(order="C") for w in flat
+    )
+    wpath = os.path.join(out_dir, "weights.bin")
+    with open(wpath, "wb") as f:
+        f.write(blob)
+
+    manifest = {
+        "format_version": 1,
+        "model": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "max_seq": cfg.max_seq,
+            "d_ff": cfg.d_ff,
+            "batch": cfg.batch,
+            "seed": cfg.seed,
+            "kernel_tile_m": cfg.kernel_tile_m,
+            "kernel_tile_n": cfg.kernel_tile_n,
+        },
+        "bootstrap": {"resamples": bcfg.resamples, "max_n": bcfg.max_n},
+        "weights": {
+            "file": "weights.bin",
+            "dtype": "f32",
+            "sha256": hashlib.sha256(blob).hexdigest(),
+            "params": [
+                {"name": name, "shape": list(shape)} for name, shape in specs
+            ],
+        },
+        "artifacts": artifacts,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    manifest = emit(args.out, SimLMConfig(), BootstrapConfig())
+    total = sum(
+        int(np.prod(p["shape"])) for p in manifest["weights"]["params"]
+    )
+    print(
+        f"emitted {len(manifest['artifacts'])} artifacts to {args.out} "
+        f"({total} weights, sha256={manifest['weights']['sha256'][:12]}...)"
+    )
+
+
+if __name__ == "__main__":
+    main()

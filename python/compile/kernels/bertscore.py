@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: fused BERTScore token-similarity max-matching.
+
+The BERTScore greedy matching needs, for candidate token embeddings
+``A in R^{M x D}`` and reference token embeddings ``B in R^{N x D}`` (both
+rows unit-normalised so the dot product is cosine similarity):
+
+    row_max[m] = max_n  (A @ B^T)[m, n]   over valid reference tokens n
+    col_max[n] = max_m  (A @ B^T)[m, n]   over valid candidate tokens m
+
+GPU reference implementations materialise the full ``M x N`` similarity
+matrix in HBM and run separate reduction kernels.  The TPU rethink (see
+DESIGN.md §Hardware-Adaptation): tile ``A`` and ``B`` into MXU-friendly
+blocks streamed through VMEM with ``BlockSpec``; each grid step computes one
+``TM x TN`` tile of ``S`` on the MXU and folds it **immediately** into
+running ``row_max`` / ``col_max`` accumulators, so ``S`` never leaves VMEM.
+Masking of ragged sequence lengths happens inside the tile with additive
+``-inf`` penalties.
+
+The kernel is lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the grid is iterated sequentially in interpret mode,
+which the accumulator-revisiting scheme relies on (same guarantee the TPU
+backend gives for revisited output blocks).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e9  # additive mask penalty; large enough to lose every max
+
+
+def _bertscore_kernel(a_ref, b_ref, ma_ref, mb_ref, row_ref, col_ref):
+    """One (batch, i, j) grid step.
+
+    Block shapes:
+      a_ref   (1, TM, D)   candidate tile
+      b_ref   (1, TN, D)   reference tile
+      ma_ref  (1, TM)      candidate validity mask (1.0 valid / 0.0 pad)
+      mb_ref  (1, TN)      reference validity mask
+      row_ref (1, TM)      running row max  (revisited across j)
+      col_ref (1, TN)      running col max  (revisited across i)
+    """
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    a = a_ref[0]  # (TM, D)
+    b = b_ref[0]  # (TN, D)
+    ma = ma_ref[0]  # (TM,)
+    mb = mb_ref[0]  # (TN,)
+
+    # (TM, TN) similarity tile on the MXU. f32 accumulate.
+    s = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+
+    # Row max must ignore padded reference tokens; col max must ignore
+    # padded candidate tokens.
+    s_row = s + (mb - 1.0)[None, :] * (-NEG)  # -inf where mb == 0
+    s_col = s + (ma - 1.0)[:, None] * (-NEG)  # -inf where ma == 0
+
+    tile_row = jnp.max(s_row, axis=1)  # (TM,)
+    tile_col = jnp.max(s_col, axis=0)  # (TN,)
+
+    # Initialise accumulators on first visit, fold on revisits.  The grid
+    # order is (batch, i, j) with j minor, so row_ref[bi, i] is first seen
+    # at j == 0 and col_ref[bi, j] at i == 0.
+    prev_row = jnp.where(j == 0, jnp.full_like(tile_row, NEG), row_ref[0])
+    prev_col = jnp.where(i == 0, jnp.full_like(tile_col, NEG), col_ref[0])
+    row_ref[0] = jnp.maximum(prev_row, tile_row)
+    col_ref[0] = jnp.maximum(prev_col, tile_col)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
+def bertscore_max_sim(a, b, mask_a, mask_b, tile_m: int = 32, tile_n: int = 32):
+    """Fused max-similarity accumulators for BERTScore.
+
+    Args:
+      a:      (BATCH, M, D) unit-norm candidate token embeddings.
+      b:      (BATCH, N, D) unit-norm reference token embeddings.
+      mask_a: (BATCH, M) float validity mask.
+      mask_b: (BATCH, N) float validity mask.
+      tile_m, tile_n: VMEM tile sizes (must divide M / N).
+
+    Returns:
+      (row_max (BATCH, M), col_max (BATCH, N)) — masked positions hold NEG.
+    """
+    batch, m, d = a.shape
+    n = b.shape[1]
+    if m % tile_m or n % tile_n:
+        raise ValueError(f"tile sizes ({tile_m},{tile_n}) must divide ({m},{n})")
+    gm, gn = m // tile_m, n // tile_n
+
+    grid = (batch, gm, gn)
+    return pl.pallas_call(
+        _bertscore_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_m, d), lambda bi, i, j: (bi, i, 0)),
+            pl.BlockSpec((1, tile_n, d), lambda bi, i, j: (bi, j, 0)),
+            pl.BlockSpec((1, tile_m), lambda bi, i, j: (bi, i)),
+            pl.BlockSpec((1, tile_n), lambda bi, i, j: (bi, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_m), lambda bi, i, j: (bi, i)),
+            pl.BlockSpec((1, tile_n), lambda bi, i, j: (bi, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, m), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        ],
+        interpret=True,
+    )(a, b, mask_a, mask_b)
+
+
+def bertscore_prf(a, b, mask_a, mask_b, tile_m: int = 32, tile_n: int = 32):
+    """BERTScore precision / recall / F1 per batch element.
+
+    Precision averages row_max over valid candidate tokens, recall averages
+    col_max over valid reference tokens (Zhang et al., 2020, without idf
+    weighting), F1 is their harmonic mean.
+    """
+    row_max, col_max = bertscore_max_sim(
+        a, b, mask_a, mask_b, tile_m=tile_m, tile_n=tile_n
+    )
+    na = jnp.maximum(jnp.sum(mask_a, axis=1), 1.0)
+    nb = jnp.maximum(jnp.sum(mask_b, axis=1), 1.0)
+    p = jnp.sum(row_max * mask_a, axis=1) / na
+    r = jnp.sum(col_max * mask_b, axis=1) / nb
+    f1 = 2.0 * p * r / jnp.maximum(p + r, 1e-8)
+    return p, r, f1

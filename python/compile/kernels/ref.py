@@ -1,0 +1,44 @@
+"""Pure-jnp oracle implementations for the Pallas kernels.
+
+These materialise the full similarity matrix the naive way (the thing the
+fused kernel avoids) and are the ground truth for the pytest / hypothesis
+correctness sweeps in ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e9
+
+
+def bertscore_max_sim_ref(a, b, mask_a, mask_b):
+    """Unfused reference: full (BATCH, M, N) similarity matrix in memory."""
+    s = jnp.einsum("bmd,bnd->bmn", a, b)
+    s_row = jnp.where(mask_b[:, None, :] > 0.0, s, NEG)
+    s_col = jnp.where(mask_a[:, :, None] > 0.0, s, NEG)
+    row_max = jnp.max(s_row, axis=2)
+    col_max = jnp.max(s_col, axis=1)
+    return row_max, col_max
+
+
+def bertscore_prf_ref(a, b, mask_a, mask_b):
+    row_max, col_max = bertscore_max_sim_ref(a, b, mask_a, mask_b)
+    na = jnp.maximum(jnp.sum(mask_a, axis=1), 1.0)
+    nb = jnp.maximum(jnp.sum(mask_b, axis=1), 1.0)
+    p = jnp.sum(row_max * mask_a, axis=1) / na
+    r = jnp.sum(col_max * mask_b, axis=1) / nb
+    f1 = 2.0 * p * r / jnp.maximum(p + r, 1e-8)
+    return p, r, f1
+
+
+def bootstrap_means_ref(values, idx, mask):
+    """Reference for the bootstrap resample-mean graph.
+
+    values: (N,), idx: (R, N) int32 indices into values, mask: (R, N) 0/1.
+    Returns (R,) masked means of the gathered resamples.
+    """
+    gathered = values[idx]
+    return jnp.sum(gathered * mask, axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1), 1.0
+    )

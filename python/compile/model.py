@@ -1,0 +1,182 @@
+"""L2: JAX compute graphs for the semantic-metric stage.
+
+Three graphs are AOT-lowered by ``aot.py`` and executed from the Rust
+coordinator via PJRT (Python never runs on the request path):
+
+  * ``embed``      — SimLM encoder: token ids -> pooled unit sentence
+                     embedding (embedding-similarity metric).
+  * ``bertscore``  — SimLM encoder over candidate + reference, then the L1
+                     Pallas max-matching kernel -> per-example P/R/F1
+                     (BERTScore metric).
+  * ``bootstrap``  — batched bootstrap resample means (statistical
+                     aggregation stage offload).
+
+SimLM is a real transformer encoder (token+position embeddings, N pre-LN
+blocks of multi-head attention + GELU MLP, masked mean pooling, L2
+normalisation) with deterministic seeded weights standing in for MiniLM /
+roberta-large, which we cannot ship (DESIGN.md §1).  Weights are *graph
+parameters*, not baked constants: ``aot.py`` writes them to
+``artifacts/weights.bin`` + ``manifest.json`` and the Rust runtime feeds
+them back per call, which keeps the HLO text small and mirrors how a real
+deployment would swap checkpoints.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.bertscore import bertscore_prf
+
+
+@dataclass(frozen=True)
+class SimLMConfig:
+    """Encoder hyper-parameters. Sizes chosen so a CPU batch is ~ms-scale."""
+
+    vocab_size: int = 4096
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    max_seq: int = 64
+    d_ff: int = 512
+    batch: int = 16            # fixed AOT batch; Rust pads the tail batch
+    seed: int = 0
+    kernel_tile_m: int = 64
+    kernel_tile_n: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Deterministic parameter order — the manifest and the Rust runtime both
+# depend on this exact ordering.
+def param_specs(cfg: SimLMConfig) -> list[tuple[str, tuple[int, ...]]]:
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("tok_embed", (cfg.vocab_size, cfg.d_model)),
+        ("pos_embed", (cfg.max_seq, cfg.d_model)),
+    ]
+    for layer in range(cfg.n_layers):
+        p = f"layer{layer}."
+        specs += [
+            (p + "ln1_scale", (cfg.d_model,)),
+            (p + "ln1_bias", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_scale", (cfg.d_model,)),
+            (p + "ln2_bias", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "b1", (cfg.d_ff,)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+            (p + "b2", (cfg.d_model,)),
+        ]
+    specs += [("lnf_scale", (cfg.d_model,)), ("lnf_bias", (cfg.d_model,))]
+    return specs
+
+
+def init_params(cfg: SimLMConfig) -> dict[str, jax.Array]:
+    """Seeded deterministic init: N(0, 0.02) matrices, LN scale=1 bias=0."""
+    key = jax.random.PRNGKey(cfg.seed)
+    params: dict[str, jax.Array] = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_bias") or name.endswith(".b1") or name.endswith(".b2"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(x, mask, wq, wk, wv, wo, n_heads):
+    b, s, d = x.shape
+    hd = d // n_heads
+
+    def split(t):
+        return t.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(x @ wq), split(x @ wk), split(x @ wv)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    logits = jnp.where(mask[:, None, None, :] > 0.0, logits, -1e9)
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def encode_tokens(params, ids, mask, cfg: SimLMConfig):
+    """SimLM forward: (B, S) int32 ids + (B, S) mask -> (B, S, D) unit-norm
+    token embeddings (pre-pooling)."""
+    x = params["tok_embed"][ids] + params["pos_embed"][None, :, :]
+    for layer in range(cfg.n_layers):
+        p = f"layer{layer}."
+        h = _layer_norm(x, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        x = x + _attention(
+            h,
+            mask,
+            params[p + "wq"],
+            params[p + "wk"],
+            params[p + "wv"],
+            params[p + "wo"],
+            cfg.n_heads,
+        )
+        h = _layer_norm(x, params[p + "ln2_scale"], params[p + "ln2_bias"])
+        h = jax.nn.gelu(h @ params[p + "w1"] + params[p + "b1"])
+        x = x + h @ params[p + "w2"] + params[p + "b2"]
+    x = _layer_norm(x, params["lnf_scale"], params["lnf_bias"])
+    # Unit-normalise token embeddings so dot product == cosine similarity.
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-8)
+
+
+def embed_fn(params, ids, mask, cfg: SimLMConfig):
+    """Pooled sentence embedding: masked mean of token embeddings, L2-norm."""
+    tok = encode_tokens(params, ids, mask, cfg)
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    pooled = jnp.sum(tok * mask[:, :, None], axis=1) / denom
+    pooled = pooled / jnp.maximum(
+        jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-8
+    )
+    return (pooled,)
+
+
+def bertscore_fn(params, ids_a, mask_a, ids_b, mask_b, cfg: SimLMConfig):
+    """Encode both sides with shared weights, then the L1 Pallas kernel."""
+    tok_a = encode_tokens(params, ids_a, mask_a, cfg)
+    tok_b = encode_tokens(params, ids_b, mask_b, cfg)
+    p, r, f1 = bertscore_prf(
+        tok_a,
+        tok_b,
+        mask_a,
+        mask_b,
+        tile_m=cfg.kernel_tile_m,
+        tile_n=cfg.kernel_tile_n,
+    )
+    return (p, r, f1)
+
+
+@dataclass(frozen=True)
+class BootstrapConfig:
+    """Fixed AOT shapes for the bootstrap-resample graph."""
+
+    resamples: int = 1000   # paper default bootstrap_iterations
+    max_n: int = 1024       # values padded/masked up to this length
+
+
+def bootstrap_fn(values, idx, mask):
+    """(R,) masked means of gathered resamples — see ref.bootstrap_means_ref."""
+    gathered = jnp.take(values, idx, axis=0)
+    means = jnp.sum(gathered * mask, axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1), 1.0
+    )
+    return (means,)

@@ -1,0 +1,131 @@
+"""Generate scipy reference fixtures for the Rust statistics stack.
+
+Written at `make artifacts` time to ``artifacts/stats_fixtures.json``;
+``rust/tests/stats_golden.rs`` replays every case against the from-scratch
+Rust implementations. This is the cross-validation the paper performs
+against scipy.stats / arch (§5.4).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+from scipy import special, stats
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(20260710)
+    fx: dict = {}
+
+    # --- special functions -------------------------------------------------
+    xs = [0.1, 0.5, 1.0, 2.5, 7.0, 15.5]
+    fx["ln_gamma"] = [[x, float(special.gammaln(x))] for x in xs]
+    fx["erf"] = [[x, float(special.erf(x))] for x in [-2.0, -0.5, 0.0, 0.3, 1.0, 2.5]]
+    fx["normal_cdf"] = [[z, float(stats.norm.cdf(z))] for z in [-3.0, -1.0, 0.0, 0.5, 1.96, 3.2]]
+    fx["normal_ppf"] = [[p, float(stats.norm.ppf(p))] for p in [0.001, 0.025, 0.3, 0.5, 0.9, 0.999]]
+    fx["t_cdf"] = [
+        [t, df, float(stats.t.cdf(t, df))]
+        for t, df in [(-2.0, 5), (0.0, 3), (1.5, 10), (2.5, 30), (1.0, 100)]
+    ]
+    fx["t_ppf"] = [
+        [p, df, float(stats.t.ppf(p, df))]
+        for p, df in [(0.025, 9), (0.975, 9), (0.05, 30), (0.95, 100)]
+    ]
+    fx["chi2_cdf"] = [
+        [x, df, float(stats.chi2.cdf(x, df))]
+        for x, df in [(1.0, 1), (3.84, 1), (5.0, 3), (10.0, 5)]
+    ]
+    fx["beta_inc"] = [
+        [a, b, x, float(special.betainc(a, b, x))]
+        for a, b, x in [(2, 3, 0.5), (0.5, 0.5, 0.3), (5, 2, 0.8), (1, 1, 0.4)]
+    ]
+
+    # --- paired tests on fixed datasets -------------------------------------
+    cases = []
+    for n in [8, 25, 60]:
+        a = rng.normal(0.0, 1.0, n)
+        b = a + rng.normal(0.1, 0.5, n)
+        t_res = stats.ttest_rel(a, b)
+        try:
+            w_res = stats.wilcoxon(a, b)
+            w_p = float(w_res.pvalue)
+            w_stat = float(w_res.statistic)
+        except ValueError:
+            w_p, w_stat = 1.0, 0.0
+        cases.append(
+            {
+                "a": a.tolist(),
+                "b": b.tolist(),
+                "t_statistic": float(t_res.statistic),
+                "t_pvalue": float(t_res.pvalue),
+                "wilcoxon_statistic": w_stat,
+                "wilcoxon_pvalue": w_p,
+            }
+        )
+    fx["paired_tests"] = cases
+
+    # --- mcnemar (binary paired) --------------------------------------------
+    mc = []
+    for (b01, b10, both) in [(3, 5, 20), (2, 1, 5), (30, 12, 50), (0, 0, 10)]:
+        a = [1.0] * b10 + [0.0] * b01 + [1.0] * both
+        b = [0.0] * b10 + [1.0] * b01 + [1.0] * both
+        n_disc = b01 + b10
+        if n_disc == 0:
+            p = 1.0
+        elif n_disc < 10:
+            p = float(stats.binomtest(min(b01, b10), n_disc, 0.5).pvalue)
+        else:
+            # Uncorrected chi^2 (see rust/src/stats/tests.rs rationale).
+            chi2 = (b01 - b10) ** 2 / n_disc
+            p = float(1.0 - stats.chi2.cdf(chi2, 1))
+        mc.append({"a": a, "b": b, "pvalue": p})
+    fx["mcnemar"] = mc
+
+    # --- shapiro-wilk ---------------------------------------------------------
+    sw = []
+    for n, dist in [(20, "norm"), (50, "lognorm"), (11, "outlier")]:
+        if dist == "norm":
+            x = rng.normal(0, 1, n)
+        elif dist == "lognorm":
+            x = rng.lognormal(0, 0.8, n)
+        else:
+            x = np.array([148, 154, 158, 160, 161, 162, 166, 170, 182, 195, 236.0])
+        w, p = stats.shapiro(x)
+        sw.append({"x": x.tolist(), "w": float(w), "p": float(p)})
+    fx["shapiro"] = sw
+
+    # --- wilson intervals -------------------------------------------------------
+    # statsmodels-free reference: closed-form Wilson.
+    def wilson(k, n, level=0.95):
+        z = stats.norm.ppf(1 - (1 - level) / 2)
+        p = k / n
+        denom = 1 + z**2 / n
+        center = (p + z**2 / (2 * n)) / denom
+        half = z * np.sqrt(p * (1 - p) / n + z**2 / (4 * n**2)) / denom
+        return [max(center - half, 0.0), min(center + half, 1.0)]
+
+    fx["wilson"] = [[k, n] + wilson(k, n) for k, n in [(8, 10), (0, 20), (20, 20), (73, 100)]]
+
+    # --- t interval -----------------------------------------------------------
+    ti = []
+    for n in [5, 30]:
+        x = rng.normal(2.0, 1.5, n)
+        lo, hi = stats.t.interval(0.95, n - 1, loc=np.mean(x), scale=stats.sem(x))
+        ti.append({"x": x.tolist(), "lo": float(lo), "hi": float(hi)})
+    fx["t_interval"] = ti
+
+    path = os.path.join(args.out, "stats_fixtures.json")
+    with open(path, "w") as f:
+        json.dump(fx, f)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""L1 perf: Pallas BERTScore kernel tile-size sweep.
+
+interpret=True timings are CPU-numpy, not a TPU proxy — the sweep reports
+both the **measured CPU wall time** of the lowered graph (what the Rust
+runtime pays per batch in this reproduction) and the **structural TPU
+estimates**: VMEM working set per grid step and MXU utilization of the
+tile matmul. Results land in EXPERIMENTS.md §Perf.
+
+Usage: python -m compile.tile_sweep
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import SimLMConfig, bertscore_fn, init_params
+
+
+def vmem_bytes(tm: int, tn: int, d: int) -> int:
+    """Working set of one grid step: A-tile + B-tile + S-tile + accums."""
+    return 4 * (tm * d + tn * d + tm * tn + tm + tn)
+
+
+def mxu_utilization(tm: int, tn: int, d: int) -> float:
+    """Fraction of 128x128 MXU tiles fully occupied by the (tm, d)x(d, tn)
+    matmul (dimension-padding model)."""
+
+    def eff(dim, unit):
+        import math
+
+        return dim / (math.ceil(dim / unit) * unit)
+
+    return eff(tm, 128) * eff(tn, 128) * eff(d, 128)
+
+
+def main() -> None:
+    base = SimLMConfig()
+    params = init_params(base)
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(
+        rng.integers(2, base.vocab_size, size=(base.batch, base.max_seq)).astype(np.int32)
+    )
+    mask = jnp.ones((base.batch, base.max_seq), jnp.float32)
+
+    print(f"{'tile':>8} {'grid':>8} {'VMEM/step':>10} {'MXU util':>9} {'CPU ms/batch':>13}")
+    for tile in [8, 16, 32, 64]:
+        cfg = SimLMConfig(kernel_tile_m=tile, kernel_tile_n=tile)
+
+        fn = jax.jit(lambda ia, ma, ib, mb: bertscore_fn(params, ia, ma, ib, mb, cfg))
+        fn(ids, mask, ids, mask)[2].block_until_ready()  # compile
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            fn(ids, mask, ids, mask)[2].block_until_ready()
+        ms = (time.perf_counter() - t0) / reps * 1e3
+
+        gm = base.max_seq // tile
+        grid = base.batch * gm * gm
+        print(
+            f"{tile:>8} {grid:>8} {vmem_bytes(tile, tile, base.d_model) / 1024:>9.1f}K "
+            f"{mxu_utilization(tile, tile, base.d_model):>9.3f} {ms:>13.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Pytest path shim: make `compile.*` importable whether pytest runs from
+the repo root (`pytest python/tests/`) or from `python/`."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

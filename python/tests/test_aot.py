@@ -1,0 +1,96 @@
+"""AOT emitter contract tests: the manifest, weight blob, and HLO text
+artifacts that the Rust runtime consumes."""
+
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _need_artifacts():
+    if not os.path.exists(os.path.join(ART, "manifest.json")):
+        pytest.skip("run `make artifacts` first")
+
+
+def manifest():
+    _need_artifacts()
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_schema():
+    m = manifest()
+    assert m["format_version"] == 1
+    for key in ["vocab_size", "d_model", "n_heads", "n_layers", "max_seq", "batch"]:
+        assert m["model"][key] > 0
+    assert m["model"]["d_model"] % m["model"]["n_heads"] == 0
+    assert m["bootstrap"]["resamples"] > 0
+    assert set(m["artifacts"]) == {"embedder", "bertscore", "bootstrap"}
+
+
+def test_weight_blob_matches_manifest():
+    m = manifest()
+    blob_path = os.path.join(ART, m["weights"]["file"])
+    blob = open(blob_path, "rb").read()
+    total = sum(int(np.prod(p["shape"])) for p in m["weights"]["params"])
+    assert len(blob) == total * 4
+    assert hashlib.sha256(blob).hexdigest() == m["weights"]["sha256"]
+
+
+def test_weights_reproduce_from_seed():
+    from compile.model import SimLMConfig, init_params, param_specs
+
+    m = manifest()
+    cfg = SimLMConfig(
+        vocab_size=m["model"]["vocab_size"],
+        d_model=m["model"]["d_model"],
+        n_heads=m["model"]["n_heads"],
+        n_layers=m["model"]["n_layers"],
+        max_seq=m["model"]["max_seq"],
+        d_ff=m["model"]["d_ff"],
+        batch=m["model"]["batch"],
+        seed=m["model"]["seed"],
+    )
+    params = init_params(cfg)
+    blob = b"".join(
+        np.asarray(params[name], dtype="<f4").tobytes() for name, _ in param_specs(cfg)
+    )
+    assert hashlib.sha256(blob).hexdigest() == m["weights"]["sha256"]
+
+
+def test_hlo_text_artifacts_look_like_hlo():
+    m = manifest()
+    n_params = len(m["weights"]["params"])
+    for name, art in m["artifacts"].items():
+        text = open(os.path.join(ART, art["file"])).read()
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text
+        # Parameter count: weights + per-artifact inputs.
+        expected_inputs = {
+            "embedder": n_params + 2,
+            "bertscore": n_params + 4,
+            "bootstrap": 3,
+        }[name]
+        assert text.count("parameter(") >= expected_inputs, name
+
+
+def test_fixtures_cover_all_artifacts():
+    _need_artifacts()
+    with open(os.path.join(ART, "fixtures.json")) as f:
+        fx = json.load(f)
+    assert set(fx) == {"embed", "bertscore", "bootstrap"}
+    m = manifest()
+    b, s = m["model"]["batch"], m["model"]["max_seq"]
+    assert len(fx["embed"]["ids"]) == b * s
+    assert len(fx["embed"]["pooled"]) == b * m["model"]["d_model"]
+    assert len(fx["bertscore"]["f1"]) == b
+
+
+def test_kernel_tile_divides_seq():
+    m = manifest()
+    assert m["model"]["max_seq"] % m["model"]["kernel_tile_m"] == 0
+    assert m["model"]["max_seq"] % m["model"]["kernel_tile_n"] == 0

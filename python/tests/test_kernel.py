@@ -1,0 +1,128 @@
+"""L1 correctness: the fused Pallas BERTScore kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, tile sizes, dtypes, and mask patterns — the core
+correctness signal for the kernel (see DESIGN.md §5).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.bertscore import bertscore_max_sim, bertscore_prf
+from compile.kernels.ref import bertscore_max_sim_ref, bertscore_prf_ref
+
+hypothesis.settings.register_profile(
+    "kernel", deadline=None, max_examples=30, derandomize=True
+)
+hypothesis.settings.load_profile("kernel")
+
+
+def make_inputs(rng, batch, m, n, d, frac_masked=0.3):
+    a = rng.standard_normal((batch, m, d)).astype(np.float32)
+    b = rng.standard_normal((batch, n, d)).astype(np.float32)
+    a /= np.maximum(np.linalg.norm(a, axis=-1, keepdims=True), 1e-8)
+    b /= np.maximum(np.linalg.norm(b, axis=-1, keepdims=True), 1e-8)
+    # Prefix masks (realistic padding) with at least one valid token.
+    la = rng.integers(1, m + 1, size=batch)
+    lb = rng.integers(1, n + 1, size=batch)
+    mask_a = (np.arange(m)[None, :] < la[:, None]).astype(np.float32)
+    mask_b = (np.arange(n)[None, :] < lb[:, None]).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b), jnp.asarray(mask_a), jnp.asarray(mask_b)
+
+
+@given(
+    batch=st.integers(1, 4),
+    gm=st.integers(1, 3),
+    gn=st.integers(1, 3),
+    tile=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_swept(batch, gm, gn, tile, d, seed):
+    m, n = gm * tile, gn * tile
+    rng = np.random.default_rng(seed)
+    a, b, ma, mb = make_inputs(rng, batch, m, n, d)
+
+    row_k, col_k = bertscore_max_sim(a, b, ma, mb, tile_m=tile, tile_n=tile)
+    row_r, col_r = bertscore_max_sim_ref(a, b, ma, mb)
+
+    # Compare only at valid positions (masked rows differ in sentinel only).
+    np.testing.assert_allclose(
+        np.asarray(row_k * ma), np.asarray(row_r * ma), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(col_k * mb), np.asarray(col_r * mb), rtol=1e-5, atol=1e-5
+    )
+
+    pk, rk, fk = bertscore_prf(a, b, ma, mb, tile_m=tile, tile_n=tile)
+    pr, rr, fr = bertscore_prf_ref(a, b, ma, mb)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fk), np.asarray(fr), rtol=1e-5, atol=1e-5)
+
+
+def test_identical_inputs_score_one():
+    rng = np.random.default_rng(0)
+    a, _, ma, _ = make_inputs(rng, 3, 32, 32, 64)
+    p, r, f1 = bertscore_prf(a, a, ma, ma)
+    np.testing.assert_allclose(np.asarray(p), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f1), 1.0, atol=1e-5)
+
+
+def test_rectangular_tiles():
+    rng = np.random.default_rng(1)
+    a, b, ma, mb = make_inputs(rng, 2, 64, 32, 32)
+    pk, rk, fk = bertscore_prf(a, b, ma, mb, tile_m=32, tile_n=16)
+    pr, rr, fr = bertscore_prf_ref(a, b, ma, mb)
+    np.testing.assert_allclose(np.asarray(fk), np.asarray(fr), rtol=1e-5, atol=1e-5)
+
+
+def test_scores_bounded():
+    rng = np.random.default_rng(2)
+    a, b, ma, mb = make_inputs(rng, 4, 32, 32, 64)
+    p, r, f1 = bertscore_prf(a, b, ma, mb)
+    # Unit-norm rows → cosine in [-1, 1].
+    assert np.all(np.asarray(p) <= 1.0 + 1e-6)
+    assert np.all(np.asarray(r) <= 1.0 + 1e-6)
+    assert np.all(np.asarray(f1) <= 1.0 + 1e-6)
+
+
+def test_mask_invariance_of_padding_content():
+    """Garbage in padded positions must not change the scores."""
+    rng = np.random.default_rng(3)
+    a, b, ma, mb = make_inputs(rng, 2, 32, 32, 64)
+    a2 = np.asarray(a).copy()
+    b2 = np.asarray(b).copy()
+    a2[np.asarray(ma) == 0.0] = 99.0
+    b2[np.asarray(mb) == 0.0] = -99.0
+    f1_clean = bertscore_prf(a, b, ma, mb)[2]
+    f1_dirty = bertscore_prf(jnp.asarray(a2), jnp.asarray(b2), ma, mb)[2]
+    np.testing.assert_allclose(
+        np.asarray(f1_clean), np.asarray(f1_dirty), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_tile_size_must_divide():
+    rng = np.random.default_rng(4)
+    a, b, ma, mb = make_inputs(rng, 1, 30, 32, 16)
+    with pytest.raises(ValueError):
+        bertscore_max_sim(a, b, ma, mb, tile_m=16, tile_n=16)
+
+
+def test_kernel_under_jit():
+    """The kernel must lower inside jit (the AOT path depends on this)."""
+    rng = np.random.default_rng(5)
+    a, b, ma, mb = make_inputs(rng, 2, 32, 32, 64)
+
+    @jax.jit
+    def f(a, b, ma, mb):
+        return bertscore_prf(a, b, ma, mb)
+
+    p, r, f1 = f(a, b, ma, mb)
+    pr, rr, fr = bertscore_prf_ref(a, b, ma, mb)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(fr), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,104 @@
+"""L2 correctness: SimLM encoder shapes/invariants and the bootstrap graph
+vs its oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from compile.kernels.ref import bootstrap_means_ref
+from compile.model import (
+    SimLMConfig,
+    bertscore_fn,
+    bootstrap_fn,
+    embed_fn,
+    encode_tokens,
+    init_params,
+    param_specs,
+)
+
+CFG = SimLMConfig()
+PARAMS = init_params(CFG)
+
+
+def batch(seed=0, identical_rows=()):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(2, CFG.vocab_size, size=(CFG.batch, CFG.max_seq)).astype(
+        np.int32
+    )
+    lengths = rng.integers(3, CFG.max_seq + 1, size=CFG.batch)
+    mask = (np.arange(CFG.max_seq)[None, :] < lengths[:, None]).astype(np.float32)
+    ids = ids * mask.astype(np.int32)
+    return jnp.asarray(ids), jnp.asarray(mask)
+
+
+def test_param_count_matches_specs():
+    total = sum(int(np.prod(s)) for _, s in param_specs(CFG))
+    got = sum(int(np.prod(p.shape)) for p in PARAMS.values())
+    assert total == got
+
+
+def test_token_embeddings_unit_norm():
+    ids, mask = batch(0)
+    tok = encode_tokens(PARAMS, ids, mask, CFG)
+    assert tok.shape == (CFG.batch, CFG.max_seq, CFG.d_model)
+    norms = np.linalg.norm(np.asarray(tok), axis=-1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-4)
+
+
+def test_pooled_embedding_unit_norm_and_shape():
+    ids, mask = batch(1)
+    (pooled,) = embed_fn(PARAMS, ids, mask, CFG)
+    assert pooled.shape == (CFG.batch, CFG.d_model)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(pooled), axis=-1), 1.0, atol=1e-4
+    )
+
+
+def test_identical_ids_identical_embeddings():
+    ids, mask = batch(2)
+    ids = ids.at[1].set(ids[0])
+    mask = mask.at[1].set(mask[0])
+    (pooled,) = embed_fn(PARAMS, ids, mask, CFG)
+    np.testing.assert_allclose(
+        np.asarray(pooled[0]), np.asarray(pooled[1]), atol=1e-5
+    )
+
+
+def test_padding_content_does_not_leak():
+    """Changing ids at masked positions must not change the embedding."""
+    ids, mask = batch(3)
+    (p1,) = embed_fn(PARAMS, ids, mask, CFG)
+    dirty = np.asarray(ids).copy()
+    dirty[np.asarray(mask) == 0.0] = 7
+    (p2,) = embed_fn(PARAMS, jnp.asarray(dirty), mask, CFG)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-4)
+
+
+def test_bertscore_fn_identity_rows():
+    ids, mask = batch(4)
+    p, r, f1 = bertscore_fn(PARAMS, ids, mask, ids, mask, CFG)
+    np.testing.assert_allclose(np.asarray(f1), 1.0, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=20, derandomize=True)
+@given(n=st.integers(1, 64), r=st.integers(1, 32), seed=st.integers(0, 10**6))
+def test_bootstrap_fn_matches_ref(n, r, seed):
+    rng = np.random.default_rng(seed)
+    max_n = 64
+    values = np.zeros(max_n, dtype=np.float32)
+    values[:n] = rng.standard_normal(n).astype(np.float32)
+    idx = rng.integers(0, n, size=(r, max_n)).astype(np.int32)
+    mask = np.zeros((r, max_n), dtype=np.float32)
+    mask[:, :n] = 1.0
+    (got,) = bootstrap_fn(jnp.asarray(values), jnp.asarray(idx), jnp.asarray(mask))
+    want = bootstrap_means_ref(jnp.asarray(values), jnp.asarray(idx), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_deterministic_weights():
+    p1 = init_params(CFG)
+    p2 = init_params(CFG)
+    for k in p1:
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))

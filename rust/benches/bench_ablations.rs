@@ -1,0 +1,116 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **batch size** — Pandas-UDF batch granularity vs throughput;
+//! 2. **executor concurrency** — in-flight requests per executor (the
+//!    knob behind the Figure 2 linear-region slope);
+//! 3. **adaptive vs static rate shares under partition skew** — the §6.1
+//!    limitation the adaptive extension addresses;
+//! 4. **token-bucket initial fill** — burst behaviour at job start;
+//! 5. **cache flush threshold** — write batching vs deltalite version
+//!    count.
+
+use spark_llm_eval::cache::ResponseCache;
+use spark_llm_eval::config::CachePolicy;
+use spark_llm_eval::providers::InferenceResponse;
+use spark_llm_eval::report::table;
+use spark_llm_eval::sim::{simulate, SimParams};
+use spark_llm_eval::util::bench::section;
+
+fn main() {
+    section("ablation 1 — batch size (8 executors, 20k examples)");
+    let mut rows = Vec::new();
+    for batch in [1usize, 10, 50, 200, 1000] {
+        let p = SimParams { batch_size: batch, n_examples: 20_000, ..Default::default() };
+        let out = simulate(&p, None);
+        rows.push(vec![batch.to_string(), format!("{:.0}", out.throughput_per_min)]);
+    }
+    println!("{}", table(&["batch_size", "examples/min"], &rows));
+
+    section("ablation 2 — per-executor concurrency");
+    let mut rows = Vec::new();
+    for conc in [1usize, 2, 4, 8, 16, 32] {
+        let p = SimParams { concurrency: conc, executors: 4, n_examples: 20_000, ..Default::default() };
+        let out = simulate(&p, None);
+        rows.push(vec![
+            conc.to_string(),
+            format!("{:.0}", out.throughput_per_min),
+            format!("{:.0}%", out.rate_wait_frac * 100.0),
+        ]);
+    }
+    println!("{}", table(&["concurrency", "examples/min", "rate-limited"], &rows));
+
+    section("ablation 3 — adaptive vs static shares under partition skew");
+    let mut rows = Vec::new();
+    for skew in [0.5, 0.65, 0.8, 0.95] {
+        let base = SimParams {
+            executors: 8,
+            n_examples: 60_000,
+            skew,
+            global_rpm: 6_000.0,
+            ..Default::default()
+        };
+        let stat = simulate(&base, None);
+        let adap = simulate(&SimParams { adaptive_shares: true, ..base }, None);
+        rows.push(vec![
+            format!("{skew:.2}"),
+            format!("{:.1}s", stat.total_secs),
+            format!("{:.1}s", adap.total_secs),
+            format!("{:.1}%", 100.0 * (1.0 - adap.total_secs / stat.total_secs)),
+        ]);
+    }
+    println!(
+        "{}",
+        table(&["skew", "static makespan", "adaptive makespan", "adaptive gain"], &rows)
+    );
+
+    section("ablation 4 — bucket initial fill (burst at job start)");
+    use spark_llm_eval::ratelimit::{Clock, TokenBucket, VirtualClock};
+    let mut rows = Vec::new();
+    for fill in [0.0, 1.0 / 60.0, 0.25, 1.0] {
+        let clock = VirtualClock::new();
+        let mut bucket = TokenBucket::with_fill(600.0, 1e12, fill, clock.as_ref());
+        let mut admitted_first_10s = 0;
+        while clock.now() < 10.0 {
+            bucket.acquire(1.0, clock.as_ref());
+            admitted_first_10s += 1;
+        }
+        rows.push(vec![format!("{fill:.3}"), admitted_first_10s.to_string()]);
+    }
+    println!("{}", table(&["initial fill", "admits in first 10 s (rpm=600)"], &rows));
+
+    section("ablation 5 — cache flush threshold (write batching)");
+    let mut rows = Vec::new();
+    for flush_every in [10usize, 100, 1000] {
+        let dir = std::env::temp_dir().join(format!(
+            "slleval-ablate-cache-{}-{flush_every}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+        cache.flush_every = flush_every;
+        let t0 = std::time::Instant::now();
+        for i in 0..2_000 {
+            let resp = InferenceResponse {
+                text: format!("response {i}"),
+                input_tokens: 100,
+                output_tokens: 50,
+                latency_ms: 1.0,
+                cost_usd: 0.0,
+            };
+            cache.put(&format!("prompt {i}"), "m", "p", 0.0, 100, &resp).unwrap();
+        }
+        cache.flush().unwrap();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let versions = cache.current_version().unwrap().unwrap() + 1;
+        rows.push(vec![
+            flush_every.to_string(),
+            format!("{elapsed:.2}s"),
+            versions.to_string(),
+        ]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    println!(
+        "{}",
+        table(&["flush_every", "2k puts wall time", "deltalite versions"], &rows)
+    );
+}

@@ -1,0 +1,31 @@
+//! Figure 2 reproduction: throughput vs executor count, with the
+//! sequential baseline of §5.2 (paper: linear to ~8 executors, plateau
+//! ~9,800/min, single executor ~1,200/min, sequential 450/min, 21×
+//! speedup at 8 executors).
+
+use spark_llm_eval::report::tables::figure2;
+use spark_llm_eval::sim::{simulate, SimParams};
+use spark_llm_eval::util::bench::{bench, section};
+
+fn main() {
+    section("Figure 2 — throughput scaling with executor count");
+    let (rows, text) = figure2(10_000);
+    println!("{text}");
+
+    // Shape assertions (who wins / where the knee falls).
+    let t1 = rows.iter().find(|r| r.executors == 1).unwrap().mean_throughput;
+    let t8 = rows.iter().find(|r| r.executors == 8).unwrap().mean_throughput;
+    let t16 = rows.iter().find(|r| r.executors == 16).unwrap().mean_throughput;
+    println!("shape checks:");
+    println!("  1 executor  = {t1:.0}/min (paper ~1,200)");
+    println!("  8 executors = {t8:.0}/min (paper ~9,800)");
+    println!("  8→16 gain   = {:.2}x (saturation; paper: plateau at ~8)", t16 / t8);
+    assert!(t8 / t1 > 5.0, "should scale substantially to 8 executors");
+    assert!(t16 / t8 < 1.35, "rate limit must cap scaling past the knee");
+
+    section("DES micro-benchmark (cost of one sweep point)");
+    bench("simulate(8 executors, 10k examples)", 200.0, || {
+        let p = SimParams { executors: 8, n_examples: 10_000, ..Default::default() };
+        std::hint::black_box(simulate(&p, None));
+    });
+}

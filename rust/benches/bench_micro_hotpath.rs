@@ -1,0 +1,121 @@
+//! Hot-path micro-benchmarks across all three layers, used by the
+//! EXPERIMENTS.md §Perf iteration log:
+//!
+//! - L3: token bucket, lexical metrics, end-to-end pipeline throughput
+//!   (virtual clock — measures coordinator overhead, not sleeps);
+//! - L2/L1 via the PJRT runtime: embedder batch, BERTScore batch
+//!   (Pallas kernel path), device bootstrap.
+
+use spark_llm_eval::config::{EvalTask, MetricConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::metrics::lexical;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::{TokenBucket, VirtualClock};
+use spark_llm_eval::runtime::{default_artifact_dir, SemanticRuntime};
+use spark_llm_eval::util::bench::{bench, section};
+use spark_llm_eval::util::rng::Rng;
+
+fn main() {
+    section("L3 — rate limiter");
+    let clock = VirtualClock::new();
+    let mut bucket = TokenBucket::new(1e9, 1e12, clock.as_ref());
+    bench("token_bucket.acquire (uncontended)", 50.0, || {
+        std::hint::black_box(bucket.acquire(500.0, clock.as_ref()));
+    });
+
+    section("L3 — lexical metric kernels");
+    let cand = "the quick brown fox jumps over the lazy dog near the river bank today";
+    let reference = "a quick brown fox jumped over a lazy dog by the river bank yesterday";
+    bench("exact_match + normalize", 50.0, || {
+        std::hint::black_box(lexical::exact_match(cand, reference, lexical::Normalize::default()));
+    });
+    bench("token_f1", 50.0, || {
+        std::hint::black_box(lexical::token_f1(cand, reference));
+    });
+    bench("bleu (4-gram)", 50.0, || {
+        std::hint::black_box(lexical::bleu(cand, reference));
+    });
+    bench("rouge_l (LCS)", 50.0, || {
+        std::hint::black_box(lexical::rouge_l(cand, reference));
+    });
+
+    section("L3 — end-to-end pipeline (virtual clock, no sleeps)");
+    let df = synth::generate_default(2_000, 1);
+    let mk_runner = || {
+        let mut r = EvalRunner::with_clock(VirtualClock::new());
+        r.service_config = SimServiceConfig {
+            server_error_rate: 0.0,
+            unparseable_rate: 0.0,
+            sleep_latency: false,
+            ..Default::default()
+        };
+        r
+    };
+    let mut task = EvalTask::default();
+    task.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("token_f1", "lexical"),
+    ];
+    let runner = mk_runner();
+    let r = bench("evaluate 2k examples (2 lexical metrics, 8 exec)", 2_000.0, || {
+        std::hint::black_box(runner.evaluate(&df, &task).unwrap());
+    });
+    println!(
+        "  -> coordinator throughput {:.0} examples/s (pipeline overhead only)",
+        r.throughput(2_000.0)
+    );
+
+    section("L2/L1 — PJRT artifacts (SimLM encoder + Pallas BERTScore)");
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` for the L1/L2 benches");
+        return;
+    }
+    let rt = SemanticRuntime::load(&dir).unwrap();
+    let m = &rt.manifest.model;
+    let texts: Vec<String> = (0..m.batch)
+        .map(|i| format!("sample sentence number {i} about rate limits and caching"))
+        .collect();
+    let text_refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let r = bench(
+        &format!("embed_texts (batch {}, seq {}, d {})", m.batch, m.max_seq, m.d_model),
+        2_000.0,
+        || {
+            std::hint::black_box(rt.embed_texts(&text_refs).unwrap());
+        },
+    );
+    println!("  -> {:.0} texts/s", r.throughput(m.batch as f64));
+
+    let pairs: Vec<(&str, &str)> = texts
+        .iter()
+        .map(|t| (t.as_str(), "reference answer about caching limits"))
+        .collect();
+    let r = bench(
+        &format!("bertscore_texts (batch {}, Pallas kernel)", m.batch),
+        2_000.0,
+        || {
+            std::hint::black_box(rt.bertscore_texts(&pairs).unwrap());
+        },
+    );
+    println!("  -> {:.0} pairs/s", r.throughput(m.batch as f64));
+
+    let mut rng = Rng::new(5);
+    let values: Vec<f64> = (0..512).map(|_| rng.f64()).collect();
+    let r = bench("device bootstrap (n=512, B=1000, XLA gather)", 2_000.0, || {
+        let mut r = Rng::new(6);
+        std::hint::black_box(rt.bootstrap_means(&values, &mut r).unwrap());
+    });
+    println!("  -> {:.0} resample-means/s", r.throughput(1_000.0));
+    // Native comparison.
+    let rn = bench("native bootstrap (n=512, B=1000, rust)", 2_000.0, || {
+        let mut r = Rng::new(6);
+        std::hint::black_box(spark_llm_eval::stats::bootstrap::bootstrap_means(
+            &values, 1_000, &mut r,
+        ));
+    });
+    println!(
+        "  -> device/native ratio: {:.2}x",
+        r.mean_ns / rn.mean_ns
+    );
+}

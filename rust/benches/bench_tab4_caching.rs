@@ -1,0 +1,68 @@
+//! Table 4 + §5.3 reproduction: caching effectiveness over evaluation
+//! iterations (paper: initial 50k run $127.50 / 5.1 min; three replay
+//! iterations ≈ $0 / ~24 s each; 75% cost and 69% time saved) plus the
+//! cache storage-overhead measurement.
+
+use spark_llm_eval::cache::ResponseCache;
+use spark_llm_eval::config::CachePolicy;
+use spark_llm_eval::providers::InferenceResponse;
+use spark_llm_eval::report::tables::table4;
+use spark_llm_eval::util::bench::{bench, section};
+
+fn main() {
+    section("Table 4 — caching effectiveness over evaluation iterations");
+    let (rows, text) = table4(50_000);
+    println!("{text}");
+    assert_eq!(rows[1].api_calls, 0, "replay must make zero API calls");
+    assert!(rows[1].secs < rows[0].secs / 3.0, "replay must be much faster");
+
+    section("§5.3 — cache storage overhead (live deltalite table)");
+    // Insert entries shaped like the paper's workload (≈500-token prompts,
+    // ≈200-token responses) and measure on-disk size, then extrapolate.
+    let dir = std::env::temp_dir().join(format!("slleval-bench-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let n_probe = 5_000usize;
+    {
+        let mut cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+        cache.flush_every = 100_000; // single flush at the end
+        let prompt_body = "lorem ipsum dolor sit amet consectetur ".repeat(50); // ~500 tokens
+        let response_body = "adipiscing elit sed do eiusmod tempor ".repeat(20); // ~200 tokens
+        for i in 0..n_probe {
+            let resp = InferenceResponse {
+                text: format!("{response_body} #{i}"),
+                input_tokens: 500,
+                output_tokens: 200,
+                latency_ms: 350.0,
+                cost_usd: 0.004,
+            };
+            cache
+                .put(&format!("{prompt_body} #{i}"), "gpt-4o", "openai", 0.0, 1024, &resp)
+                .unwrap();
+        }
+        cache.flush().unwrap();
+        let bytes = cache.storage_bytes().unwrap();
+        let per_entry = bytes as f64 / n_probe as f64;
+        let extrapolated_mb = per_entry * 50_000.0 / 1e6;
+        println!(
+            "{n_probe} entries -> {:.1} MB on disk ({:.0} B/entry, gzip); \
+             50k-entry extrapolation {:.0} MB (paper: ~180 MB with Parquet)",
+            bytes as f64 / 1e6,
+            per_entry,
+            extrapolated_mb
+        );
+    }
+
+    section("cache hot-path micro-benchmarks");
+    let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+    let prompt = "lorem ipsum dolor sit amet consectetur ".repeat(50) + " #42";
+    bench("cache.get (hit, in-memory index)", 50.0, || {
+        std::hint::black_box(cache.get(&prompt, "gpt-4o", "openai", 0.0, 1024).unwrap());
+    });
+    bench("cache.get (miss)", 50.0, || {
+        std::hint::black_box(cache.get("never cached", "gpt-4o", "openai", 0.0, 1024).unwrap());
+    });
+    bench("cache_key (sha256 of ~500-token prompt)", 50.0, || {
+        std::hint::black_box(spark_llm_eval::cache::cache_key(&prompt, "gpt-4o", "openai", 0.0, 1024));
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,24 @@
+//! Table 6 reproduction: cost across providers for 10k examples of
+//! 400 input / 150 output tokens. Exact to the paper's price book.
+
+use spark_llm_eval::providers::pricing::lookup;
+use spark_llm_eval::report::tables::table6;
+use spark_llm_eval::util::bench::section;
+
+fn main() {
+    section("Table 6 — cost comparison across providers");
+    let (rows, text) = table6();
+    println!("{text}");
+
+    // §5.5 extrapolation: 1M examples.
+    let full = lookup("openai", "gpt-4o").unwrap().workload_cost(1_000_000, 400, 150).2;
+    let mini = lookup("openai", "gpt-4o-mini").unwrap().workload_cost(1_000_000, 400, 150).2;
+    println!(
+        "1M-example extrapolation: gpt-4o ${full:.0} vs gpt-4o-mini ${mini:.0} \
+         ({:.0}x reduction; paper: ~$3,250 vs ~$150, 20x)",
+        full / mini
+    );
+    assert!((rows[0].3 - 32.50).abs() < 1e-9);
+    assert!((full - 3250.0).abs() < 1.0);
+    assert!(full / mini > 20.0);
+}

@@ -1,0 +1,483 @@
+//! Content-addressable response caching backed by deltalite (paper §3.2).
+//!
+//! Cache key: `SHA256(prompt || model || provider || temperature ||
+//! max_tokens)` — exact-match on the full inference configuration. Entries
+//! follow the Table 1 schema. Policies: Enabled / ReadOnly / WriteOnly /
+//! Replay / Disabled.
+
+pub mod deltalite;
+pub mod semantic;
+
+use crate::config::CachePolicy;
+use crate::providers::InferenceResponse;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use deltalite::DeltaTable;
+use sha2::{Digest, Sha256};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Deterministic cache key (paper §3.2).
+pub fn cache_key(
+    prompt: &str,
+    model: &str,
+    provider: &str,
+    temperature: f64,
+    max_tokens: usize,
+) -> String {
+    let mut h = Sha256::new();
+    h.update(prompt.as_bytes());
+    h.update(b"||");
+    h.update(model.as_bytes());
+    h.update(b"||");
+    h.update(provider.as_bytes());
+    h.update(b"||");
+    h.update(format!("{temperature:.6}").as_bytes());
+    h.update(b"||");
+    h.update(format!("{max_tokens}").as_bytes());
+    format!("{:x}", h.finalize())
+}
+
+/// One cache entry (Table 1 schema).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    pub prompt_hash: String,
+    pub model_name: String,
+    pub provider: String,
+    pub prompt_text: String,
+    pub response_text: String,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    pub latency_ms: f64,
+    pub created_at: f64,
+    pub ttl_days: Option<f64>,
+}
+
+impl CacheEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prompt_hash", Json::str(&self.prompt_hash)),
+            ("model_name", Json::str(&self.model_name)),
+            ("provider", Json::str(&self.provider)),
+            ("prompt_text", Json::str(&self.prompt_text)),
+            ("response_text", Json::str(&self.response_text)),
+            ("input_tokens", Json::num(self.input_tokens as f64)),
+            ("output_tokens", Json::num(self.output_tokens as f64)),
+            ("latency_ms", Json::num(self.latency_ms)),
+            ("created_at", Json::num(self.created_at)),
+            (
+                "ttl_days",
+                self.ttl_days.map(Json::num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CacheEntry> {
+        Ok(CacheEntry {
+            prompt_hash: v.get("prompt_hash")?.as_str()?.to_string(),
+            model_name: v.get("model_name")?.as_str()?.to_string(),
+            provider: v.get("provider")?.as_str()?.to_string(),
+            prompt_text: v.str_or("prompt_text", "").to_string(),
+            response_text: v.get("response_text")?.as_str()?.to_string(),
+            input_tokens: v.usize_or("input_tokens", 0),
+            output_tokens: v.usize_or("output_tokens", 0),
+            latency_ms: v.f64_or("latency_ms", 0.0),
+            created_at: v.f64_or("created_at", 0.0),
+            ttl_days: v.opt("ttl_days").and_then(|t| t.as_f64().ok()),
+        })
+    }
+
+    /// Entry expired relative to `now` (unix seconds)?
+    pub fn expired(&self, now: f64) -> bool {
+        match self.ttl_days {
+            Some(days) => now - self.created_at > days * 86_400.0,
+            None => false,
+        }
+    }
+}
+
+/// Hit/miss accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub writes: u64,
+    pub expired: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The response cache: deltalite table + in-memory index + policy.
+///
+/// The in-memory index mirrors the live snapshot for O(1) lookups; writes
+/// buffer and flush to the table in batches (one deltalite version per
+/// flush, like the paper's per-partition cache population).
+pub struct ResponseCache {
+    table: DeltaTable,
+    policy: CachePolicy,
+    index: Mutex<BTreeMap<String, CacheEntry>>,
+    pending: Mutex<Vec<CacheEntry>>,
+    stats: Mutex<CacheStats>,
+    /// Default TTL for new entries.
+    pub ttl_days: Option<f64>,
+    /// Flush threshold (entries buffered before an automatic flush).
+    pub flush_every: usize,
+}
+
+impl ResponseCache {
+    pub fn open(dir: &Path, policy: CachePolicy) -> Result<ResponseCache> {
+        let table = DeltaTable::open(dir)?;
+        let mut index = BTreeMap::new();
+        if policy.reads() {
+            for (k, v) in table.snapshot_by_key("prompt_hash", None)? {
+                index.insert(k, CacheEntry::from_json(&v)?);
+            }
+        }
+        Ok(ResponseCache {
+            table,
+            policy,
+            index: Mutex::new(index),
+            pending: Mutex::new(Vec::new()),
+            stats: Mutex::new(CacheStats::default()),
+            ttl_days: None,
+            flush_every: 1000,
+        })
+    }
+
+    /// Open at a historical version (time-travel reproduction of a past
+    /// evaluation). Always read-only.
+    pub fn open_at_version(dir: &Path, version: u64) -> Result<ResponseCache> {
+        let table = DeltaTable::open(dir)?;
+        let mut index = BTreeMap::new();
+        for (k, v) in table.snapshot_by_key("prompt_hash", Some(version))? {
+            index.insert(k, CacheEntry::from_json(&v)?);
+        }
+        Ok(ResponseCache {
+            table,
+            policy: CachePolicy::ReadOnly,
+            index: Mutex::new(index),
+            pending: Mutex::new(Vec::new()),
+            stats: Mutex::new(CacheStats::default()),
+            ttl_days: None,
+            flush_every: 1000,
+        })
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        *self.stats.lock().unwrap()
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookup under the policy. `Replay` turns a miss into an error.
+    pub fn get(
+        &self,
+        prompt: &str,
+        model: &str,
+        provider: &str,
+        temperature: f64,
+        max_tokens: usize,
+    ) -> Result<Option<CacheEntry>> {
+        if !self.policy.reads() {
+            return Ok(None);
+        }
+        let key = cache_key(prompt, model, provider, temperature, max_tokens);
+        let now = crate::util::unix_ts();
+        let found = {
+            let index = self.index.lock().unwrap();
+            index.get(&key).cloned()
+        };
+        let mut stats = self.stats.lock().unwrap();
+        match found {
+            Some(e) if e.expired(now) => {
+                stats.expired += 1;
+                stats.misses += 1;
+                if self.policy == CachePolicy::Replay {
+                    bail!("replay mode: cache entry expired for key {key}");
+                }
+                Ok(None)
+            }
+            Some(e) => {
+                stats.hits += 1;
+                Ok(Some(e))
+            }
+            None => {
+                stats.misses += 1;
+                if self.policy == CachePolicy::Replay {
+                    bail!(
+                        "replay mode: cache miss for prompt {:?}... (key {key})",
+                        &prompt[..prompt.len().min(40)]
+                    );
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    /// Store a response under the policy (no-op for read-only policies).
+    pub fn put(
+        &self,
+        prompt: &str,
+        model: &str,
+        provider: &str,
+        temperature: f64,
+        max_tokens: usize,
+        response: &InferenceResponse,
+    ) -> Result<()> {
+        if !self.policy.writes() {
+            return Ok(());
+        }
+        let key = cache_key(prompt, model, provider, temperature, max_tokens);
+        let entry = CacheEntry {
+            prompt_hash: key.clone(),
+            model_name: model.to_string(),
+            provider: provider.to_string(),
+            prompt_text: prompt.to_string(),
+            response_text: response.text.clone(),
+            input_tokens: response.input_tokens,
+            output_tokens: response.output_tokens,
+            latency_ms: response.latency_ms,
+            created_at: crate::util::unix_ts(),
+            ttl_days: self.ttl_days,
+        };
+        self.index.lock().unwrap().insert(key, entry.clone());
+        let should_flush = {
+            let mut pending = self.pending.lock().unwrap();
+            pending.push(entry);
+            pending.len() >= self.flush_every
+        };
+        self.stats.lock().unwrap().writes += 1;
+        if should_flush {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Persist buffered writes as one deltalite upsert.
+    pub fn flush(&self) -> Result<()> {
+        let pending: Vec<CacheEntry> = {
+            let mut p = self.pending.lock().unwrap();
+            std::mem::take(&mut *p)
+        };
+        if pending.is_empty() {
+            return Ok(());
+        }
+        // Deduplicate within the batch (last write wins) — upsert requires
+        // unique keys.
+        let mut by_key: BTreeMap<String, Json> = BTreeMap::new();
+        for e in &pending {
+            by_key.insert(e.prompt_hash.clone(), e.to_json());
+        }
+        let rows: Vec<Json> = by_key.into_values().collect();
+        self.table.upsert(&rows, "prompt_hash")?;
+        Ok(())
+    }
+
+    /// Storage footprint of live data (paper §5.3 accounting).
+    pub fn storage_bytes(&self) -> Result<u64> {
+        self.table.storage_bytes()
+    }
+
+    pub fn current_version(&self) -> Result<Option<u64>> {
+        self.table.current_version()
+    }
+
+    /// Compact the underlying table.
+    pub fn compact(&self) -> Result<()> {
+        self.flush()?;
+        self.table.compact()?;
+        Ok(())
+    }
+}
+
+impl Drop for ResponseCache {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join("slleval-cache-test")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn resp(text: &str) -> InferenceResponse {
+        InferenceResponse {
+            text: text.into(),
+            input_tokens: 10,
+            output_tokens: 5,
+            latency_ms: 100.0,
+            cost_usd: 0.001,
+        }
+    }
+
+    #[test]
+    fn key_sensitivity() {
+        let base = cache_key("p", "m", "prov", 0.0, 100);
+        assert_ne!(base, cache_key("q", "m", "prov", 0.0, 100));
+        assert_ne!(base, cache_key("p", "m2", "prov", 0.0, 100));
+        assert_ne!(base, cache_key("p", "m", "prov2", 0.0, 100));
+        assert_ne!(base, cache_key("p", "m", "prov", 0.5, 100));
+        assert_ne!(base, cache_key("p", "m", "prov", 0.0, 200));
+        assert_eq!(base, cache_key("p", "m", "prov", 0.0, 100));
+        assert_eq!(base.len(), 64);
+    }
+
+    #[test]
+    fn get_after_put() {
+        let cache = ResponseCache::open(&tmp_dir("getput"), CachePolicy::Enabled).unwrap();
+        assert!(cache.get("p", "m", "prov", 0.0, 100).unwrap().is_none());
+        cache.put("p", "m", "prov", 0.0, 100, &resp("hello")).unwrap();
+        let hit = cache.get("p", "m", "prov", 0.0, 100).unwrap().unwrap();
+        assert_eq!(hit.response_text, "hello");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.writes), (1, 1, 1));
+    }
+
+    #[test]
+    fn persistence_across_reopen() {
+        let dir = tmp_dir("persist");
+        {
+            let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+            cache.put("p", "m", "prov", 0.0, 100, &resp("persisted")).unwrap();
+            cache.flush().unwrap();
+        }
+        let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+        assert_eq!(cache.len(), 1);
+        let hit = cache.get("p", "m", "prov", 0.0, 100).unwrap().unwrap();
+        assert_eq!(hit.response_text, "persisted");
+    }
+
+    #[test]
+    fn replay_errors_on_miss() {
+        let dir = tmp_dir("replay");
+        {
+            let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+            cache.put("known", "m", "prov", 0.0, 100, &resp("x")).unwrap();
+        }
+        let cache = ResponseCache::open(&dir, CachePolicy::Replay).unwrap();
+        assert!(cache.get("known", "m", "prov", 0.0, 100).unwrap().is_some());
+        assert!(cache.get("unknown", "m", "prov", 0.0, 100).is_err());
+        // Replay never writes.
+        cache.put("new", "m", "prov", 0.0, 100, &resp("y")).unwrap();
+        assert_eq!(cache.stats().writes, 0);
+    }
+
+    #[test]
+    fn write_only_skips_lookup() {
+        let cache = ResponseCache::open(&tmp_dir("writeonly"), CachePolicy::WriteOnly).unwrap();
+        cache.put("p", "m", "prov", 0.0, 100, &resp("x")).unwrap();
+        // Lookup returns None even though the entry exists.
+        assert!(cache.get("p", "m", "prov", 0.0, 100).unwrap().is_none());
+        assert_eq!(cache.stats().writes, 1);
+        assert_eq!(cache.stats().hits, 0);
+    }
+
+    #[test]
+    fn disabled_does_nothing() {
+        let cache = ResponseCache::open(&tmp_dir("disabled"), CachePolicy::Disabled).unwrap();
+        cache.put("p", "m", "prov", 0.0, 100, &resp("x")).unwrap();
+        assert!(cache.get("p", "m", "prov", 0.0, 100).unwrap().is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.writes), (0, 0, 0));
+    }
+
+    #[test]
+    fn ttl_expiry() {
+        let dir = tmp_dir("ttl");
+        let mut cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+        cache.ttl_days = Some(1.0);
+        cache.put("p", "m", "prov", 0.0, 100, &resp("x")).unwrap();
+        // Manually age the entry in the index.
+        {
+            let mut idx = cache.index.lock().unwrap();
+            for e in idx.values_mut() {
+                e.created_at -= 2.0 * 86_400.0;
+            }
+        }
+        assert!(cache.get("p", "m", "prov", 0.0, 100).unwrap().is_none());
+        assert_eq!(cache.stats().expired, 1);
+    }
+
+    #[test]
+    fn time_travel_reproduces_old_state() {
+        let dir = tmp_dir("timetravel");
+        {
+            let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+            cache.put("p", "m", "prov", 0.0, 100, &resp("v0")).unwrap();
+            cache.flush().unwrap(); // version 0
+            cache.put("p", "m", "prov", 0.0, 100, &resp("v1")).unwrap();
+            cache.flush().unwrap(); // version 1
+        }
+        let old = ResponseCache::open_at_version(&dir, 0).unwrap();
+        assert_eq!(
+            old.get("p", "m", "prov", 0.0, 100).unwrap().unwrap().response_text,
+            "v0"
+        );
+        let new = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+        assert_eq!(
+            new.get("p", "m", "prov", 0.0, 100).unwrap().unwrap().response_text,
+            "v1"
+        );
+    }
+
+    #[test]
+    fn entry_json_round_trip() {
+        let e = CacheEntry {
+            prompt_hash: "abc".into(),
+            model_name: "m".into(),
+            provider: "p".into(),
+            prompt_text: "prompt \"quoted\"".into(),
+            response_text: "line1\nline2".into(),
+            input_tokens: 42,
+            output_tokens: 7,
+            latency_ms: 123.4,
+            created_at: 1000.0,
+            ttl_days: Some(30.0),
+        };
+        let back = CacheEntry::from_json(&e.to_json()).unwrap();
+        assert_eq!(e, back);
+    }
+
+    #[test]
+    fn batch_flush_threshold() {
+        let dir = tmp_dir("flush");
+        let mut cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+        cache.flush_every = 10;
+        for i in 0..25 {
+            cache.put(&format!("p{i}"), "m", "prov", 0.0, 100, &resp("x")).unwrap();
+        }
+        // Two automatic flushes happened (at 10 and 20); version >= 1.
+        assert!(cache.current_version().unwrap() >= Some(1));
+        cache.flush().unwrap();
+        let reopened = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+        assert_eq!(reopened.len(), 25);
+    }
+}

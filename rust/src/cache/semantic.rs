@@ -1,0 +1,196 @@
+//! Semantic (fuzzy) response cache — the paper's §6.1 limitation
+//! ("exact-match caching does not handle semantic equivalence;
+//! semantic caching could improve hit rates"), implemented as an optional
+//! layer in the GPTCache style: prompts are embedded with the SimLM PJRT
+//! encoder and a cache hit is the nearest stored prompt above a cosine
+//! threshold *for the same (model, provider, temperature, max_tokens)*.
+//!
+//! Trade-offs preserved from the paper's discussion: fuzzy hits risk
+//! serving a response to a subtly different prompt, so the threshold is
+//! explicit and hits report their similarity for auditability.
+
+use crate::cache::CacheEntry;
+use crate::runtime::SemanticRuntime;
+use anyhow::Result;
+
+/// One stored prompt: embedding + the exact-match key scope.
+struct SemEntry {
+    scope: String,
+    embedding: Vec<f32>,
+    entry: CacheEntry,
+}
+
+/// In-memory semantic index over cache entries. Persistence rides on the
+/// exact-match deltalite cache; this index rebuilds from it at open.
+pub struct SemanticCache<'rt> {
+    runtime: &'rt SemanticRuntime,
+    threshold: f32,
+    entries: Vec<SemEntry>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+fn scope_key(model: &str, provider: &str, temperature: f64, max_tokens: usize) -> String {
+    format!("{model}|{provider}|{temperature:.6}|{max_tokens}")
+}
+
+impl<'rt> SemanticCache<'rt> {
+    pub fn new(runtime: &'rt SemanticRuntime, threshold: f32) -> Self {
+        assert!((0.0..=1.0).contains(&threshold));
+        Self { runtime, threshold, entries: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Index an entry (embeds the prompt once).
+    pub fn insert(&mut self, entry: CacheEntry) -> Result<()> {
+        let emb = self.runtime.embed_texts(&[entry.prompt_text.as_str()])?;
+        self.entries.push(SemEntry {
+            scope: scope_key(&entry.model_name, &entry.provider, 0.0, 0)
+                .replace("|0.000000|0", ""), // scope on (model, provider)
+            embedding: emb.into_iter().next().unwrap(),
+            entry,
+        });
+        Ok(())
+    }
+
+    /// Fuzzy lookup: nearest stored prompt in the same scope with cosine
+    /// ≥ threshold. Returns (entry, similarity).
+    pub fn get(
+        &mut self,
+        prompt: &str,
+        model: &str,
+        provider: &str,
+    ) -> Result<Option<(CacheEntry, f32)>> {
+        if self.entries.is_empty() {
+            self.misses += 1;
+            return Ok(None);
+        }
+        let scope = scope_key(model, provider, 0.0, 0).replace("|0.000000|0", "");
+        let q = self
+            .runtime
+            .embed_texts(&[prompt])?
+            .into_iter()
+            .next()
+            .unwrap();
+        let mut best: Option<(usize, f32)> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.scope != scope {
+                continue;
+            }
+            let sim = SemanticRuntime::cosine(&q, &e.embedding);
+            if best.map(|(_, b)| sim > b).unwrap_or(true) {
+                best = Some((i, sim));
+            }
+        }
+        match best {
+            Some((i, sim)) if sim >= self.threshold => {
+                self.hits += 1;
+                Ok(Some((self.entries[i].entry.clone(), sim)))
+            }
+            _ => {
+                self.misses += 1;
+                Ok(None)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifact_dir;
+
+    fn entry(prompt: &str, response: &str, model: &str) -> CacheEntry {
+        CacheEntry {
+            prompt_hash: crate::cache::cache_key(prompt, model, "openai", 0.0, 1024),
+            model_name: model.into(),
+            provider: "openai".into(),
+            prompt_text: prompt.into(),
+            response_text: response.into(),
+            input_tokens: 10,
+            output_tokens: 5,
+            latency_ms: 100.0,
+            created_at: 0.0,
+            ttl_days: None,
+        }
+    }
+
+    fn runtime() -> Option<SemanticRuntime> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(SemanticRuntime::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn exact_prompt_hits() {
+        let Some(rt) = runtime() else { return };
+        let mut sc = SemanticCache::new(&rt, 0.9);
+        sc.insert(entry("what is the capital of france", "paris", "gpt-4o")).unwrap();
+        let hit = sc.get("what is the capital of france", "gpt-4o", "openai").unwrap();
+        let (e, sim) = hit.expect("identical prompt must hit");
+        assert_eq!(e.response_text, "paris");
+        assert!(sim > 0.999);
+    }
+
+    #[test]
+    fn paraphrase_hits_below_exact_cache() {
+        let Some(rt) = runtime() else { return };
+        let mut sc = SemanticCache::new(&rt, 0.80);
+        sc.insert(entry(
+            "what is the capital city of france",
+            "paris",
+            "gpt-4o",
+        ))
+        .unwrap();
+        // The exact-match cache would miss this rephrasing; semantic hits.
+        let hit = sc
+            .get("tell me the capital city of france please", "gpt-4o", "openai")
+            .unwrap();
+        assert!(hit.is_some(), "paraphrase should hit at 0.80 threshold");
+        let (_, sim) = hit.unwrap();
+        assert!(sim < 0.9999, "paraphrase is not an exact embedding match");
+    }
+
+    #[test]
+    fn unrelated_prompt_misses() {
+        let Some(rt) = runtime() else { return };
+        let mut sc = SemanticCache::new(&rt, 0.85);
+        sc.insert(entry("what is the capital of france", "paris", "gpt-4o")).unwrap();
+        let hit = sc
+            .get("write a poem about gradient descent optimization", "gpt-4o", "openai")
+            .unwrap();
+        assert!(hit.is_none(), "unrelated prompt must miss");
+        assert_eq!(sc.misses, 1);
+    }
+
+    #[test]
+    fn scope_isolation_across_models() {
+        let Some(rt) = runtime() else { return };
+        let mut sc = SemanticCache::new(&rt, 0.8);
+        sc.insert(entry("what is the capital of france", "paris", "gpt-4o")).unwrap();
+        let hit = sc.get("what is the capital of france", "gpt-4o-mini", "openai").unwrap();
+        assert!(hit.is_none(), "different model must not share fuzzy entries");
+    }
+
+    #[test]
+    fn threshold_controls_hit_rate() {
+        let Some(rt) = runtime() else { return };
+        let mut strict = SemanticCache::new(&rt, 0.995);
+        let mut loose = SemanticCache::new(&rt, 0.5);
+        let e = entry("name the capital of norway", "oslo", "gpt-4o");
+        strict.insert(e.clone()).unwrap();
+        loose.insert(e).unwrap();
+        let q = "what city is the capital of norway";
+        assert!(strict.get(q, "gpt-4o", "openai").unwrap().is_none());
+        assert!(loose.get(q, "gpt-4o", "openai").unwrap().is_some());
+    }
+}

@@ -1,0 +1,503 @@
+//! Hierarchical evaluation configuration (paper §3.4, §A.2).
+//!
+//! An [`EvalTask`] is the complete, serializable specification of one
+//! evaluation: model, inference behaviour (batching / rate limits /
+//! caching), metrics, statistics, and data binding. Round-trips through
+//! JSON so a run's exact configuration can be stored alongside its results
+//! (reproducibility) and hashed into cache keys.
+
+use crate::util::json::{Json, JsonError};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Cache behaviour (paper §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Lookup before inference, cache new responses.
+    Enabled,
+    /// Lookup only; never write (shared cache storage).
+    ReadOnly,
+    /// Cache warming: skip lookup, always infer and write.
+    WriteOnly,
+    /// Strict cache mode: error on miss. Zero-API-cost metric iteration.
+    Replay,
+    /// No caching.
+    Disabled,
+}
+
+impl CachePolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CachePolicy::Enabled => "enabled",
+            CachePolicy::ReadOnly => "read_only",
+            CachePolicy::WriteOnly => "write_only",
+            CachePolicy::Replay => "replay",
+            CachePolicy::Disabled => "disabled",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "enabled" => CachePolicy::Enabled,
+            "read_only" => CachePolicy::ReadOnly,
+            "write_only" => CachePolicy::WriteOnly,
+            "replay" => CachePolicy::Replay,
+            "disabled" => CachePolicy::Disabled,
+            other => bail!("unknown cache policy: {other}"),
+        })
+    }
+
+    pub fn reads(self) -> bool {
+        matches!(self, CachePolicy::Enabled | CachePolicy::ReadOnly | CachePolicy::Replay)
+    }
+
+    pub fn writes(self) -> bool {
+        matches!(self, CachePolicy::Enabled | CachePolicy::WriteOnly)
+    }
+}
+
+/// Which model to evaluate (paper §3.3, Table 7).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub provider: String,
+    pub model_name: String,
+    /// Sampling temperature; 0.0 = deterministic (paper default).
+    pub temperature: f64,
+    /// Maximum response length in tokens.
+    pub max_tokens: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            provider: "openai".into(),
+            model_name: "gpt-4o".into(),
+            temperature: 0.0,
+            max_tokens: 1024,
+        }
+    }
+}
+
+/// Inference-stage behaviour (paper §3.1–§3.2, §A.2, §A.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferenceConfig {
+    /// Examples per executor batch (Pandas-UDF batch equivalent).
+    pub batch_size: usize,
+    /// Global requests-per-minute budget split across executors.
+    pub rate_limit_rpm: f64,
+    /// Global tokens-per-minute budget split across executors.
+    pub rate_limit_tpm: f64,
+    pub cache_policy: CachePolicy,
+    /// Retry attempts for recoverable errors (429/5xx).
+    pub max_retries: usize,
+    /// Base delay (seconds) for exponential backoff.
+    pub retry_delay: f64,
+    /// Adaptive rate-limit redistribution between executors (§6.1
+    /// limitations — implemented here as an extension).
+    pub adaptive_rate_limits: bool,
+}
+
+impl Default for InferenceConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 50,
+            rate_limit_rpm: 10_000.0,
+            rate_limit_tpm: 2_000_000.0,
+            cache_policy: CachePolicy::Enabled,
+            max_retries: 3,
+            retry_delay: 1.0,
+            adaptive_rate_limits: false,
+        }
+    }
+}
+
+/// One metric to compute (paper §4.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricConfig {
+    /// Registry name, e.g. "exact_match", "bertscore", "faithfulness".
+    pub name: String,
+    /// Family: "lexical" | "semantic" | "llm_judge" | "rag".
+    pub metric_type: String,
+    /// Metric-specific parameters (rubric, normalization flags, ...).
+    pub params: BTreeMap<String, Json>,
+}
+
+impl MetricConfig {
+    pub fn new(name: &str, metric_type: &str) -> Self {
+        Self { name: name.into(), metric_type: metric_type.into(), params: BTreeMap::new() }
+    }
+
+    pub fn with_param(mut self, key: &str, value: Json) -> Self {
+        self.params.insert(key.into(), value);
+        self
+    }
+
+    pub fn param_str(&self, key: &str) -> Option<&str> {
+        self.params.get(key).and_then(|v| v.as_str().ok())
+    }
+
+    pub fn param_bool(&self, key: &str, default: bool) -> bool {
+        self.params.get(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+
+    pub fn param_f64(&self, key: &str, default: f64) -> f64 {
+        self.params.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+}
+
+/// CI method selection (paper §4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CiMethod {
+    Percentile,
+    Bca,
+    Analytic,
+}
+
+impl CiMethod {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CiMethod::Percentile => "percentile",
+            CiMethod::Bca => "bca",
+            CiMethod::Analytic => "analytic",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "percentile" => CiMethod::Percentile,
+            "bca" => CiMethod::Bca,
+            "analytic" | "analytical" => CiMethod::Analytic,
+            other => bail!("unknown ci method: {other}"),
+        })
+    }
+}
+
+/// Statistical parameters (paper §4.2–§4.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatisticsConfig {
+    pub confidence_level: f64,
+    pub bootstrap_iterations: usize,
+    pub ci_method: CiMethod,
+    /// Significance threshold for comparisons.
+    pub alpha: f64,
+    /// Permutation count for the bootstrap permutation test.
+    pub permutations: usize,
+    /// Seed for all stochastic statistics (bootstrap, permutation).
+    pub seed: u64,
+    /// Offload bootstrap resampling to the XLA artifact when shapes fit.
+    pub use_device_bootstrap: bool,
+}
+
+impl Default for StatisticsConfig {
+    fn default() -> Self {
+        Self {
+            confidence_level: 0.95,
+            bootstrap_iterations: 1000,
+            ci_method: CiMethod::Bca,
+            alpha: 0.05,
+            permutations: 1000,
+            seed: 42,
+            use_device_bootstrap: false,
+        }
+    }
+}
+
+/// Input data binding (paper §3.4): column names + prompt template.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataConfig {
+    /// Jinja-style template rendered per example to build the prompt.
+    pub prompt_template: String,
+    /// Column holding the reference answer (empty = no reference).
+    pub reference_column: String,
+    /// Column holding retrieved context (RAG metrics).
+    pub context_column: String,
+    /// Column holding the original question (RAG metrics).
+    pub question_column: String,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self {
+            prompt_template: "{{ prompt }}".into(),
+            reference_column: "reference".into(),
+            context_column: "context".into(),
+            question_column: "question".into(),
+        }
+    }
+}
+
+/// The complete evaluation task specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalTask {
+    pub task_id: String,
+    pub model: ModelConfig,
+    pub inference: InferenceConfig,
+    pub metrics: Vec<MetricConfig>,
+    pub statistics: StatisticsConfig,
+    pub data: DataConfig,
+    /// Number of parallel executors (Spark cluster size equivalent).
+    pub executors: usize,
+}
+
+impl Default for EvalTask {
+    fn default() -> Self {
+        Self {
+            task_id: "eval".into(),
+            model: ModelConfig::default(),
+            inference: InferenceConfig::default(),
+            metrics: vec![MetricConfig::new("exact_match", "lexical")],
+            statistics: StatisticsConfig::default(),
+            data: DataConfig::default(),
+            executors: 8,
+        }
+    }
+}
+
+impl EvalTask {
+    /// Validate invariants that would otherwise fail deep inside a run.
+    pub fn validate(&self) -> Result<()> {
+        if self.task_id.is_empty() {
+            bail!("task_id must be non-empty");
+        }
+        if self.executors == 0 {
+            bail!("executors must be >= 1");
+        }
+        if self.inference.batch_size == 0 {
+            bail!("batch_size must be >= 1");
+        }
+        if self.inference.rate_limit_rpm <= 0.0 || self.inference.rate_limit_tpm <= 0.0 {
+            bail!("rate limits must be positive");
+        }
+        if !(0.5..1.0).contains(&self.statistics.confidence_level) {
+            bail!("confidence_level must be in [0.5, 1)");
+        }
+        if self.statistics.bootstrap_iterations < 10 {
+            bail!("bootstrap_iterations must be >= 10");
+        }
+        if self.metrics.is_empty() {
+            bail!("at least one metric is required");
+        }
+        for m in &self.metrics {
+            if !matches!(m.metric_type.as_str(), "lexical" | "semantic" | "llm_judge" | "rag") {
+                bail!("unknown metric type '{}' for metric '{}'", m.metric_type, m.name);
+            }
+        }
+        Ok(())
+    }
+
+    // -- JSON round trip -----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task_id", Json::str(&self.task_id)),
+            ("executors", Json::num(self.executors as f64)),
+            (
+                "model",
+                Json::obj(vec![
+                    ("provider", Json::str(&self.model.provider)),
+                    ("model_name", Json::str(&self.model.model_name)),
+                    ("temperature", Json::num(self.model.temperature)),
+                    ("max_tokens", Json::num(self.model.max_tokens as f64)),
+                ]),
+            ),
+            (
+                "inference",
+                Json::obj(vec![
+                    ("batch_size", Json::num(self.inference.batch_size as f64)),
+                    ("rate_limit_rpm", Json::num(self.inference.rate_limit_rpm)),
+                    ("rate_limit_tpm", Json::num(self.inference.rate_limit_tpm)),
+                    ("cache_policy", Json::str(self.inference.cache_policy.as_str())),
+                    ("max_retries", Json::num(self.inference.max_retries as f64)),
+                    ("retry_delay", Json::num(self.inference.retry_delay)),
+                    ("adaptive_rate_limits", Json::Bool(self.inference.adaptive_rate_limits)),
+                ]),
+            ),
+            (
+                "metrics",
+                Json::arr(
+                    self.metrics
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("name", Json::str(&m.name)),
+                                ("type", Json::str(&m.metric_type)),
+                                ("params", Json::Obj(m.params.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "statistics",
+                Json::obj(vec![
+                    ("confidence_level", Json::num(self.statistics.confidence_level)),
+                    (
+                        "bootstrap_iterations",
+                        Json::num(self.statistics.bootstrap_iterations as f64),
+                    ),
+                    ("ci_method", Json::str(self.statistics.ci_method.as_str())),
+                    ("alpha", Json::num(self.statistics.alpha)),
+                    ("permutations", Json::num(self.statistics.permutations as f64)),
+                    ("seed", Json::num(self.statistics.seed as f64)),
+                    ("use_device_bootstrap", Json::Bool(self.statistics.use_device_bootstrap)),
+                ]),
+            ),
+            (
+                "data",
+                Json::obj(vec![
+                    ("prompt_template", Json::str(&self.data.prompt_template)),
+                    ("reference_column", Json::str(&self.data.reference_column)),
+                    ("context_column", Json::str(&self.data.context_column)),
+                    ("question_column", Json::str(&self.data.question_column)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<EvalTask> {
+        let mut task = EvalTask {
+            task_id: v.get("task_id")?.as_str()?.to_string(),
+            executors: v.usize_or("executors", 8),
+            ..EvalTask::default()
+        };
+
+        if let Some(m) = v.opt("model") {
+            task.model = ModelConfig {
+                provider: m.str_or("provider", "openai").to_string(),
+                model_name: m.str_or("model_name", "gpt-4o").to_string(),
+                temperature: m.f64_or("temperature", 0.0),
+                max_tokens: m.usize_or("max_tokens", 1024),
+            };
+        }
+        if let Some(i) = v.opt("inference") {
+            task.inference = InferenceConfig {
+                batch_size: i.usize_or("batch_size", 50),
+                rate_limit_rpm: i.f64_or("rate_limit_rpm", 10_000.0),
+                rate_limit_tpm: i.f64_or("rate_limit_tpm", 2_000_000.0),
+                cache_policy: CachePolicy::from_str(i.str_or("cache_policy", "enabled"))?,
+                max_retries: i.usize_or("max_retries", 3),
+                retry_delay: i.f64_or("retry_delay", 1.0),
+                adaptive_rate_limits: i.bool_or("adaptive_rate_limits", false),
+            };
+        }
+        if let Some(ms) = v.opt("metrics") {
+            task.metrics = ms
+                .as_arr()?
+                .iter()
+                .map(|m| -> Result<MetricConfig, JsonError> {
+                    Ok(MetricConfig {
+                        name: m.get("name")?.as_str()?.to_string(),
+                        metric_type: m.str_or("type", "lexical").to_string(),
+                        params: m
+                            .opt("params")
+                            .map(|p| p.as_obj().cloned())
+                            .transpose()?
+                            .unwrap_or_default(),
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+        }
+        if let Some(s) = v.opt("statistics") {
+            task.statistics = StatisticsConfig {
+                confidence_level: s.f64_or("confidence_level", 0.95),
+                bootstrap_iterations: s.usize_or("bootstrap_iterations", 1000),
+                ci_method: CiMethod::from_str(s.str_or("ci_method", "bca"))?,
+                alpha: s.f64_or("alpha", 0.05),
+                permutations: s.usize_or("permutations", 1000),
+                seed: s.f64_or("seed", 42.0) as u64,
+                use_device_bootstrap: s.bool_or("use_device_bootstrap", false),
+            };
+        }
+        if let Some(d) = v.opt("data") {
+            task.data = DataConfig {
+                prompt_template: d.str_or("prompt_template", "{{ prompt }}").to_string(),
+                reference_column: d.str_or("reference_column", "reference").to_string(),
+                context_column: d.str_or("context_column", "context").to_string(),
+                question_column: d.str_or("question_column", "question").to_string(),
+            };
+        }
+        task.validate()?;
+        Ok(task)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<EvalTask> {
+        let text = std::fs::read_to_string(path)?;
+        EvalTask::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        EvalTask::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut task = EvalTask::default();
+        task.task_id = "instruction-following-eval".into();
+        task.metrics = vec![
+            MetricConfig::new("exact_match", "lexical"),
+            MetricConfig::new("bertscore", "semantic"),
+            MetricConfig::new("helpfulness", "llm_judge")
+                .with_param("rubric", Json::str("Rate helpfulness 1-5")),
+        ];
+        task.inference.cache_policy = CachePolicy::Replay;
+        task.statistics.ci_method = CiMethod::Percentile;
+        let restored = EvalTask::from_json(&task.to_json()).unwrap();
+        assert_eq!(task, restored);
+    }
+
+    #[test]
+    fn cache_policy_semantics() {
+        assert!(CachePolicy::Enabled.reads() && CachePolicy::Enabled.writes());
+        assert!(CachePolicy::ReadOnly.reads() && !CachePolicy::ReadOnly.writes());
+        assert!(!CachePolicy::WriteOnly.reads() && CachePolicy::WriteOnly.writes());
+        assert!(CachePolicy::Replay.reads() && !CachePolicy::Replay.writes());
+        assert!(!CachePolicy::Disabled.reads() && !CachePolicy::Disabled.writes());
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut t = EvalTask::default();
+        t.executors = 0;
+        assert!(t.validate().is_err());
+
+        let mut t = EvalTask::default();
+        t.statistics.confidence_level = 1.5;
+        assert!(t.validate().is_err());
+
+        let mut t = EvalTask::default();
+        t.metrics.clear();
+        assert!(t.validate().is_err());
+
+        let mut t = EvalTask::default();
+        t.metrics = vec![MetricConfig::new("x", "bogus_type")];
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_policy_errors() {
+        assert!(CachePolicy::from_str("fuzzy").is_err());
+        assert!(CiMethod::from_str("magic").is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("slleval-config-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("task.json");
+        let task = EvalTask::default();
+        task.save(&path).unwrap();
+        let restored = EvalTask::from_file(&path).unwrap();
+        assert_eq!(task, restored);
+    }
+}

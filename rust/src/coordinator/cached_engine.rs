@@ -1,0 +1,141 @@
+//! Cache middleware for any [`InferenceEngine`].
+//!
+//! Wraps an engine with the response cache so *every* LLM call in the
+//! system — main inference, judge metrics, RAG claim verification — flows
+//! through the same content-addressable cache (the property that makes
+//! replay mode cover metric iteration end to end).
+
+use crate::cache::ResponseCache;
+use crate::providers::{ApiError, InferenceEngine, InferenceRequest, InferenceResponse};
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct CachedEngine<E: InferenceEngine> {
+    inner: E,
+    cache: Option<Arc<ResponseCache>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl<E: InferenceEngine> CachedEngine<E> {
+    pub fn new(inner: E, cache: Option<Arc<ResponseCache>>) -> Self {
+        Self { inner, cache, hits: 0, misses: 0 }
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+}
+
+impl<E: InferenceEngine> InferenceEngine for CachedEngine<E> {
+    fn initialize(&mut self) -> Result<()> {
+        self.inner.initialize()
+    }
+
+    fn infer(&mut self, request: &InferenceRequest) -> Result<InferenceResponse, ApiError> {
+        let (provider, model) = self.inner.model_id();
+        if let Some(cache) = &self.cache {
+            match cache.get(&request.prompt, &model, &provider, request.temperature, request.max_tokens)
+            {
+                Ok(Some(entry)) => {
+                    self.hits += 1;
+                    return Ok(InferenceResponse {
+                        text: entry.response_text,
+                        input_tokens: entry.input_tokens,
+                        output_tokens: entry.output_tokens,
+                        latency_ms: 0.0, // served locally
+                        cost_usd: 0.0,
+                    });
+                }
+                Ok(None) => {
+                    self.misses += 1;
+                }
+                // Replay-mode miss: surface as a non-recoverable error.
+                Err(e) => return Err(ApiError::InvalidRequest(format!("{e}"))),
+            }
+        }
+        let resp = self.inner.infer(request)?;
+        if let Some(cache) = &self.cache {
+            let _ = cache.put(
+                &request.prompt,
+                &model,
+                &provider,
+                request.temperature,
+                request.max_tokens,
+                &resp,
+            );
+        }
+        Ok(resp)
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown()
+    }
+
+    fn model_id(&self) -> (String, String) {
+        self.inner.model_id()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CachePolicy;
+    use crate::providers::simulated::{SimEngine, SimService, SimServiceConfig};
+    use crate::ratelimit::VirtualClock;
+
+    fn sim_engine() -> SimEngine {
+        let clock = VirtualClock::new();
+        let svc = SimService::new(
+            "openai",
+            SimServiceConfig {
+                server_error_rate: 0.0,
+                unparseable_rate: 0.0,
+                sleep_latency: false,
+                ..Default::default()
+            },
+            clock.clone(),
+        );
+        let mut e = SimEngine::new(svc, "openai", "gpt-4o", clock).unwrap();
+        e.initialize().unwrap();
+        e
+    }
+
+    fn tmp_cache(name: &str, policy: CachePolicy) -> Arc<ResponseCache> {
+        let dir = std::env::temp_dir()
+            .join("slleval-cachedengine")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Arc::new(ResponseCache::open(&dir, policy).unwrap())
+    }
+
+    #[test]
+    fn second_call_hits() {
+        let cache = tmp_cache("hits", CachePolicy::Enabled);
+        let mut e = CachedEngine::new(sim_engine(), Some(cache));
+        let req = InferenceRequest::new("Question: what is the capital of peru?");
+        let r1 = e.infer(&req).unwrap();
+        let r2 = e.infer(&req).unwrap();
+        assert_eq!(r1.text, r2.text);
+        assert_eq!(e.hits, 1);
+        assert_eq!(e.misses, 1);
+        assert_eq!(r2.cost_usd, 0.0);
+    }
+
+    #[test]
+    fn replay_miss_is_fatal() {
+        let cache = tmp_cache("replaymiss", CachePolicy::Replay);
+        let mut e = CachedEngine::new(sim_engine(), Some(cache));
+        let req = InferenceRequest::new("never seen before");
+        let err = e.infer(&req).unwrap_err();
+        assert!(!err.recoverable());
+    }
+
+    #[test]
+    fn no_cache_passthrough() {
+        let mut e = CachedEngine::new(sim_engine(), None);
+        let req = InferenceRequest::new("x");
+        assert!(e.infer(&req).is_ok());
+        assert_eq!(e.hits + e.misses, 0);
+    }
+}

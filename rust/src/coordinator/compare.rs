@@ -1,0 +1,149 @@
+//! Two-model comparison with significance tests + effect sizes
+//! (paper §4.3–§4.4, Table 2 selection).
+
+use super::result::{ComparisonResult, EvalResult, MetricComparison};
+use crate::config::EvalTask;
+use crate::stats::{self, MetricScale};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Compare two completed evaluations metric by metric. Both must have been
+/// run on the *same examples in the same order* (paired tests).
+pub fn compare_results(
+    a: &EvalResult,
+    b: &EvalResult,
+    task: &EvalTask,
+) -> Result<ComparisonResult> {
+    let mut comparisons = Vec::new();
+    let mut rng = Rng::with_stream(task.statistics.seed, 0xCA);
+
+    for report_a in &a.reports {
+        let Some(report_b) = b.report(&report_a.name) else { continue };
+        if report_a.values.len() != report_b.values.len() {
+            bail!(
+                "metric '{}' has mismatched example counts ({} vs {}) — \
+                 comparisons must run on the same dataset",
+                report_a.name,
+                report_a.values.len(),
+                report_b.values.len()
+            );
+        }
+        // Paired values where BOTH models scored the example.
+        let mut va = Vec::new();
+        let mut vb = Vec::new();
+        for (x, y) in report_a.values.iter().zip(&report_b.values) {
+            if let (Some(x), Some(y)) = (x, y) {
+                va.push(*x);
+                vb.push(*y);
+            }
+        }
+        if va.is_empty() {
+            continue;
+        }
+
+        let scale = report_a.scale;
+        let (choice, test) = stats::run_selected_test(
+            scale,
+            &va,
+            &vb,
+            task.statistics.permutations,
+            &mut rng,
+        );
+        let odds = if scale == MetricScale::Binary {
+            Some(stats::odds_ratio(&va, &vb))
+        } else {
+            None
+        };
+        comparisons.push(MetricComparison {
+            metric: report_a.name.clone(),
+            value_a: stats::describe::mean(&va),
+            value_b: stats::describe::mean(&vb),
+            test_choice: choice,
+            test,
+            cohens_d: stats::cohens_d(&va, &vb),
+            hedges_g: stats::hedges_g(&va, &vb),
+            odds_ratio: odds,
+            n: va.len(),
+        });
+    }
+
+    Ok(ComparisonResult {
+        model_a: format!("{}/{}", a.provider, a.model),
+        model_b: format!("{}/{}", b.provider, b.model),
+        comparisons,
+        alpha: task.statistics.alpha,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runner::EvalRunner;
+    use crate::data::synth;
+    use crate::providers::simulated::SimServiceConfig;
+    use crate::ratelimit::VirtualClock;
+
+    fn fast_runner() -> EvalRunner {
+        let clock = VirtualClock::new();
+        let mut r = EvalRunner::with_clock(clock);
+        r.service_config = SimServiceConfig {
+            server_error_rate: 0.0,
+            unparseable_rate: 0.0,
+            sleep_latency: false,
+            ..Default::default()
+        };
+        r
+    }
+
+    #[test]
+    fn strong_model_beats_weak_on_exact_match() {
+        let runner = fast_runner();
+        let df = synth::generate(
+            250,
+            21,
+            synth::DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 },
+        )
+        .unwrap();
+
+        let mut task_a = EvalTask::default();
+        task_a.model.model_name = "gpt-4o".into();
+        let mut task_b = task_a.clone();
+        task_b.model.model_name = "gpt-3.5-turbo".into();
+
+        let ra = runner.evaluate(&df, &task_a).unwrap();
+        let rb = runner.evaluate(&df, &task_b).unwrap();
+        let cmp = compare_results(&ra, &rb, &task_a).unwrap();
+
+        let em = &cmp.comparisons[0];
+        assert_eq!(em.metric, "exact_match");
+        assert_eq!(em.test_choice, stats::TestChoice::McNemar);
+        assert!(em.value_a > em.value_b, "a {} b {}", em.value_a, em.value_b);
+        assert!(em.test.p_value < 0.05, "p {}", em.test.p_value);
+        assert!(em.odds_ratio.is_some());
+        assert!(!cmp.significant().is_empty());
+    }
+
+    #[test]
+    fn identical_models_not_significant() {
+        let runner = fast_runner();
+        let df = synth::generate_default(120, 22);
+        let task = EvalTask::default();
+        let ra = runner.evaluate(&df, &task).unwrap();
+        let rb = runner.evaluate(&df, &task).unwrap();
+        let cmp = compare_results(&ra, &rb, &task).unwrap();
+        // Deterministic engine: identical outputs → p = 1.
+        for c in &cmp.comparisons {
+            assert!(c.test.p_value > 0.99, "{}: p {}", c.metric, c.test.p_value);
+            assert!((c.value_a - c.value_b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mismatched_datasets_rejected() {
+        let runner = fast_runner();
+        let task = EvalTask::default();
+        let ra = runner.evaluate(&synth::generate_default(50, 1), &task).unwrap();
+        let rb = runner.evaluate(&synth::generate_default(60, 1), &task).unwrap();
+        assert!(compare_results(&ra, &rb, &task).is_err());
+    }
+}

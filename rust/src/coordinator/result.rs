@@ -1,0 +1,201 @@
+//! Result types produced by the evaluation runner.
+
+use crate::metrics::MetricReport;
+use crate::stats::{ConfidenceInterval, EffectSize, TestChoice, TestResult};
+use crate::util::json::Json;
+
+/// An aggregated metric with its confidence interval (the paper's
+/// `MetricValue(value=0.234, ci=(0.218, 0.251), n=10000)`).
+#[derive(Debug, Clone)]
+pub struct MetricValue {
+    pub name: String,
+    pub value: f64,
+    pub ci: ConfidenceInterval,
+    /// Examples actually scored.
+    pub n: usize,
+    /// Examples the metric could not score.
+    pub n_failed: usize,
+    /// Unparseable judge responses among the failures.
+    pub unparseable: usize,
+}
+
+impl MetricValue {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("value", Json::num(self.value)),
+            ("ci_lower", Json::num(self.ci.lo)),
+            ("ci_upper", Json::num(self.ci.hi)),
+            ("ci_method", Json::str(self.ci.method)),
+            ("confidence_level", Json::num(self.ci.level)),
+            ("n", Json::num(self.n as f64)),
+            ("n_failed", Json::num(self.n_failed as f64)),
+            ("unparseable", Json::num(self.unparseable as f64)),
+        ])
+    }
+}
+
+impl std::fmt::Display for MetricValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MetricValue(value={:.3}, ci=({:.3}, {:.3}), n={})",
+            self.value, self.ci.lo, self.ci.hi, self.n
+        )
+    }
+}
+
+/// Inference-stage accounting.
+#[derive(Debug, Clone, Default)]
+pub struct InferenceStats {
+    pub examples: usize,
+    pub api_calls: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub retries: u64,
+    pub failed: u64,
+    pub total_cost_usd: f64,
+    /// Wall time of the inference stage, seconds.
+    pub wall_secs: f64,
+    /// Observed latencies (ms) of actual API calls for percentile reports.
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+    /// Examples per minute over the inference stage.
+    pub throughput_per_min: f64,
+}
+
+/// Complete evaluation outcome.
+#[derive(Debug)]
+pub struct EvalResult {
+    pub task_id: String,
+    pub provider: String,
+    pub model: String,
+    pub metrics: Vec<MetricValue>,
+    pub reports: Vec<MetricReport>,
+    pub inference: InferenceStats,
+    /// Indices of examples whose inference failed non-recoverably.
+    pub failed_examples: Vec<usize>,
+    /// Total wall time of all four stages, seconds.
+    pub wall_secs: f64,
+}
+
+impl EvalResult {
+    pub fn metric(&self, name: &str) -> Option<&MetricValue> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    pub fn report(&self, name: &str) -> Option<&MetricReport> {
+        self.reports.iter().find(|r| r.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task_id", Json::str(&self.task_id)),
+            ("provider", Json::str(&self.provider)),
+            ("model", Json::str(&self.model)),
+            ("metrics", Json::arr(self.metrics.iter().map(|m| m.to_json()).collect())),
+            (
+                "inference",
+                Json::obj(vec![
+                    ("examples", Json::num(self.inference.examples as f64)),
+                    ("api_calls", Json::num(self.inference.api_calls as f64)),
+                    ("cache_hits", Json::num(self.inference.cache_hits as f64)),
+                    ("cache_misses", Json::num(self.inference.cache_misses as f64)),
+                    ("retries", Json::num(self.inference.retries as f64)),
+                    ("failed", Json::num(self.inference.failed as f64)),
+                    ("total_cost_usd", Json::num(self.inference.total_cost_usd)),
+                    ("wall_secs", Json::num(self.inference.wall_secs)),
+                    ("latency_p50_ms", Json::num(self.inference.latency_p50_ms)),
+                    ("latency_p99_ms", Json::num(self.inference.latency_p99_ms)),
+                    ("throughput_per_min", Json::num(self.inference.throughput_per_min)),
+                ]),
+            ),
+            ("failed_examples", Json::num(self.failed_examples.len() as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+        ])
+    }
+}
+
+/// One metric's comparison between two models (paper §4.3–§4.4).
+#[derive(Debug, Clone)]
+pub struct MetricComparison {
+    pub metric: String,
+    pub value_a: f64,
+    pub value_b: f64,
+    pub test_choice: TestChoice,
+    pub test: TestResult,
+    pub cohens_d: EffectSize,
+    pub hedges_g: EffectSize,
+    /// Odds ratio for binary metrics.
+    pub odds_ratio: Option<EffectSize>,
+    pub n: usize,
+}
+
+impl MetricComparison {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("metric", Json::str(&self.metric)),
+            ("value_a", Json::num(self.value_a)),
+            ("value_b", Json::num(self.value_b)),
+            ("test", Json::str(self.test.test)),
+            ("statistic", Json::num(self.test.statistic)),
+            ("p_value", Json::num(self.test.p_value)),
+            ("cohens_d", Json::num(self.cohens_d.value)),
+            ("hedges_g", Json::num(self.hedges_g.value)),
+            (
+                "odds_ratio",
+                self.odds_ratio.map(|o| Json::num(o.value)).unwrap_or(Json::Null),
+            ),
+            ("n", Json::num(self.n as f64)),
+        ])
+    }
+}
+
+/// Full two-model comparison.
+#[derive(Debug)]
+pub struct ComparisonResult {
+    pub model_a: String,
+    pub model_b: String,
+    pub comparisons: Vec<MetricComparison>,
+    pub alpha: f64,
+}
+
+impl ComparisonResult {
+    pub fn significant(&self) -> Vec<&MetricComparison> {
+        self.comparisons.iter().filter(|c| c.test.significant(self.alpha)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::ConfidenceInterval;
+
+    #[test]
+    fn metric_value_display_matches_paper_format() {
+        let mv = MetricValue {
+            name: "exact_match".into(),
+            value: 0.234,
+            ci: ConfidenceInterval { point: 0.234, lo: 0.218, hi: 0.251, level: 0.95, method: "bca" },
+            n: 10_000,
+            n_failed: 0,
+            unparseable: 0,
+        };
+        assert_eq!(mv.to_string(), "MetricValue(value=0.234, ci=(0.218, 0.251), n=10000)");
+    }
+
+    #[test]
+    fn json_shape() {
+        let mv = MetricValue {
+            name: "m".into(),
+            value: 0.5,
+            ci: ConfidenceInterval { point: 0.5, lo: 0.4, hi: 0.6, level: 0.95, method: "wilson" },
+            n: 100,
+            n_failed: 2,
+            unparseable: 1,
+        };
+        let j = mv.to_json();
+        assert_eq!(j.get("ci_lower").unwrap().as_f64().unwrap(), 0.4);
+        assert_eq!(j.get("unparseable").unwrap().as_f64().unwrap(), 1.0);
+    }
+}

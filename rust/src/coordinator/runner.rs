@@ -1,0 +1,618 @@
+//! The 4-stage evaluation runner (paper Figure 1):
+//! prompt preparation → distributed inference → metric computation →
+//! statistical aggregation.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::cached_engine::CachedEngine;
+use super::result::{EvalResult, InferenceStats, MetricValue};
+use crate::cache::ResponseCache;
+use crate::config::{CachePolicy, CiMethod, EvalTask, MetricConfig};
+use crate::data::{DataFrame, Value};
+use crate::engine::{run_partitioned, BatchSlice};
+use crate::metrics::{self, Example, MetricReport};
+use crate::providers::retry::{infer_with_retry, RetryPolicy};
+use crate::providers::simulated::{SimEngine, SimService, SimServiceConfig};
+use crate::providers::tokenizer::estimate_request_tokens;
+use crate::providers::{InferenceEngine, InferenceRequest};
+use crate::ratelimit::{Clock, RealClock, TokenBucket};
+use crate::runtime::SemanticRuntime;
+use crate::stats::{self, MetricScale};
+use crate::template::Template;
+use crate::util::rng::Rng;
+
+/// Per-example inference outcome (stage 2 output).
+#[derive(Debug, Clone)]
+pub struct RowInference {
+    pub response: Option<String>,
+    pub from_cache: bool,
+    pub latency_ms: f64,
+    pub cost_usd: f64,
+    pub attempts: usize,
+    pub error: Option<String>,
+}
+
+/// The evaluation coordinator. Owns the clock, provider services, cache,
+/// and (optionally) the PJRT semantic runtime.
+pub struct EvalRunner {
+    pub clock: Arc<dyn Clock>,
+    /// Provider endpoint simulation knobs (shared by all engines).
+    pub service_config: SimServiceConfig,
+    services: Mutex<std::collections::BTreeMap<String, Arc<SimService>>>,
+    pub cache: Option<Arc<ResponseCache>>,
+    pub runtime: Option<SemanticRuntime>,
+}
+
+impl EvalRunner {
+    pub fn new() -> Self {
+        Self::with_clock(Arc::new(RealClock::new()))
+    }
+
+    pub fn with_clock(clock: Arc<dyn Clock>) -> Self {
+        Self {
+            clock,
+            service_config: SimServiceConfig::default(),
+            services: Mutex::new(Default::default()),
+            cache: None,
+            runtime: None,
+        }
+    }
+
+    pub fn with_cache(mut self, cache: ResponseCache) -> Self {
+        self.cache = Some(Arc::new(cache));
+        self
+    }
+
+    pub fn with_runtime(mut self, runtime: SemanticRuntime) -> Self {
+        self.runtime = Some(runtime);
+        self
+    }
+
+    /// Open (or reuse) the cache directory with the task's policy.
+    pub fn open_cache(&mut self, dir: &std::path::Path, policy: CachePolicy) -> Result<()> {
+        self.cache = if policy == CachePolicy::Disabled {
+            None
+        } else {
+            Some(Arc::new(ResponseCache::open(dir, policy)?))
+        };
+        Ok(())
+    }
+
+    fn service(&self, provider: &str) -> Arc<SimService> {
+        let mut services = self.services.lock().unwrap();
+        services
+            .entry(provider.to_string())
+            .or_insert_with(|| {
+                SimService::new(provider, self.service_config.clone(), self.clock.clone())
+            })
+            .clone()
+    }
+
+    fn make_engine(&self, provider: &str, model: &str) -> Result<SimEngine> {
+        let mut e = SimEngine::new(self.service(provider), provider, model, self.clock.clone())?;
+        e.initialize()?;
+        Ok(e)
+    }
+
+    /// Build an initialized engine for an arbitrary model config (judge
+    /// engines, pairwise comparison, ad-hoc calls).
+    pub fn build_engine_for(&self, model: &crate::config::ModelConfig) -> Result<SimEngine> {
+        self.make_engine(&model.provider, &model.model_name)
+    }
+
+    // ---------------------------------------------------------------- stage 1
+
+    /// Render the prompt template over every row (distributed).
+    pub fn prepare_prompts(&self, df: &DataFrame, task: &EvalTask) -> Result<Vec<String>> {
+        let template = Template::parse(&task.data.prompt_template)
+            .context("parsing prompt_template")?;
+        let out = run_partitioned(
+            df,
+            task.executors,
+            task.inference.batch_size,
+            |_eid| Ok(template.clone()),
+            |tpl, df, slice: BatchSlice| {
+                slice
+                    .indices()
+                    .map(|i| tpl.render(&df.row(i).to_json()))
+                    .collect::<Result<Vec<_>>>()
+            },
+        )?;
+        Ok(out.rows)
+    }
+
+    // ---------------------------------------------------------------- stage 2
+
+    /// Distributed inference with per-executor rate limiting, caching, and
+    /// retry (paper §3.1–§3.2, Algorithm 1, Listing 1).
+    pub fn run_inference(
+        &self,
+        prompts: &[String],
+        task: &EvalTask,
+    ) -> Result<(Vec<RowInference>, InferenceStats)> {
+        let t0 = self.clock.now();
+        let wall0 = std::time::Instant::now();
+        let df = DataFrame::from_columns(vec![(
+            "prompt",
+            prompts.iter().map(|p| Value::Str(p.clone())).collect(),
+        )])?;
+
+        let policy = RetryPolicy {
+            max_retries: task.inference.max_retries,
+            base_delay: task.inference.retry_delay,
+            ..Default::default()
+        };
+        let cache = self.cache.clone();
+        let clock = self.clock.clone();
+        let inf = task.inference.clone();
+        let model_cfg = task.model.clone();
+        let executors = task.executors;
+        let replay_strict = inf.cache_policy == CachePolicy::Replay;
+        // Pre-resolve the shared provider service: the executor closures
+        // must not capture `self` (the runner holds the non-Sync PJRT
+        // runtime).
+        let service = self.service(&model_cfg.provider);
+        let seed = task.statistics.seed;
+
+        struct ExecState {
+            engine: SimEngine,
+            bucket: TokenBucket,
+            rng: Rng,
+        }
+
+        let out = run_partitioned(
+            &df,
+            executors,
+            inf.batch_size,
+            |eid| {
+                let mut engine = SimEngine::new(
+                    service.clone(),
+                    &model_cfg.provider,
+                    &model_cfg.model_name,
+                    clock.clone(),
+                )?;
+                engine.initialize()?;
+                Ok(ExecState {
+                    engine,
+                    bucket: TokenBucket::per_executor(
+                        inf.rate_limit_rpm,
+                        inf.rate_limit_tpm,
+                        executors,
+                        clock.as_ref(),
+                    ),
+                    rng: Rng::with_stream(seed, eid as u64),
+                })
+            },
+            |state, df, slice| {
+                let mut rows = Vec::with_capacity(slice.len());
+                for i in slice.indices() {
+                    let prompt = df.row(i).str("prompt");
+                    // Cache lookup first: hits bypass the rate limiter.
+                    if inf.cache_policy.reads() {
+                        if let Some(cache) = &cache {
+                            match cache.get(
+                                prompt,
+                                &model_cfg.model_name,
+                                &model_cfg.provider,
+                                model_cfg.temperature,
+                                model_cfg.max_tokens,
+                            ) {
+                                Ok(Some(entry)) => {
+                                    rows.push(RowInference {
+                                        response: Some(entry.response_text),
+                                        from_cache: true,
+                                        latency_ms: 0.0,
+                                        cost_usd: 0.0,
+                                        attempts: 0,
+                                        error: None,
+                                    });
+                                    continue;
+                                }
+                                Ok(None) => {}
+                                Err(e) => {
+                                    if replay_strict {
+                                        return Err(e);
+                                    }
+                                }
+                            }
+                        } else if replay_strict {
+                            bail!("replay mode requires an open cache");
+                        }
+                    }
+                    if replay_strict {
+                        bail!("replay mode: cache miss for example {i}");
+                    }
+
+                    // Algorithm 1: acquire request + token budget.
+                    let est = estimate_request_tokens(prompt, model_cfg.max_tokens) as f64;
+                    state.bucket.acquire(est, clock.as_ref());
+
+                    let mut req = InferenceRequest::new(prompt);
+                    req.max_tokens = model_cfg.max_tokens;
+                    req.temperature = model_cfg.temperature;
+                    let outcome = infer_with_retry(
+                        &mut state.engine,
+                        &req,
+                        &policy,
+                        clock.as_ref(),
+                        &mut state.rng,
+                    );
+                    match outcome.result {
+                        Ok(resp) => {
+                            if inf.cache_policy.writes() {
+                                if let Some(cache) = &cache {
+                                    cache.put(
+                                        prompt,
+                                        &model_cfg.model_name,
+                                        &model_cfg.provider,
+                                        model_cfg.temperature,
+                                        model_cfg.max_tokens,
+                                        &resp,
+                                    )?;
+                                }
+                            }
+                            rows.push(RowInference {
+                                response: Some(resp.text),
+                                from_cache: false,
+                                latency_ms: resp.latency_ms,
+                                cost_usd: resp.cost_usd,
+                                attempts: outcome.attempts,
+                                error: None,
+                            });
+                        }
+                        Err(e) => rows.push(RowInference {
+                            response: None,
+                            from_cache: false,
+                            latency_ms: 0.0,
+                            cost_usd: 0.0,
+                            attempts: outcome.attempts,
+                            error: Some(e.to_string()),
+                        }),
+                    }
+                }
+                Ok(rows)
+            },
+        )?;
+
+        // Virtual clocks may not advance when latency sleeps are disabled;
+        // fall back to real wall time so throughput stays meaningful.
+        let wall = (self.clock.now() - t0).max(wall0.elapsed().as_secs_f64()).max(1e-9);
+        let rows = out.rows;
+        let mut stats = InferenceStats {
+            examples: rows.len(),
+            wall_secs: wall,
+            throughput_per_min: rows.len() as f64 / wall * 60.0,
+            ..Default::default()
+        };
+        let mut latencies: Vec<f64> = Vec::new();
+        for r in &rows {
+            if r.from_cache {
+                stats.cache_hits += 1;
+            } else if r.response.is_some() {
+                stats.cache_misses += 1;
+                stats.api_calls += r.attempts as u64;
+                stats.retries += (r.attempts - 1) as u64;
+                stats.total_cost_usd += r.cost_usd;
+                latencies.push(r.latency_ms);
+            } else {
+                stats.cache_misses += 1;
+                stats.api_calls += r.attempts as u64;
+                stats.failed += 1;
+            }
+        }
+        if !latencies.is_empty() {
+            latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            stats.latency_p50_ms = stats::describe::quantile_sorted(&latencies, 0.5);
+            stats.latency_p99_ms = stats::describe::quantile_sorted(&latencies, 0.99);
+        }
+        Ok((rows, stats))
+    }
+
+    // ---------------------------------------------------------------- stage 3
+
+    /// Assemble per-example contexts from the source frame + responses.
+    pub fn build_examples(
+        &self,
+        df: &DataFrame,
+        task: &EvalTask,
+        prompts: &[String],
+        inference: &[RowInference],
+    ) -> Vec<Example> {
+        (0..df.len())
+            .map(|i| {
+                let row = df.row(i);
+                Example {
+                    prompt: prompts[i].clone(),
+                    response: inference[i].response.clone().unwrap_or_default(),
+                    reference: row.str(&task.data.reference_column).to_string(),
+                    question: row.str(&task.data.question_column).to_string(),
+                    context: row
+                        .get(&task.data.context_column)
+                        .and_then(|v| v.as_str_list())
+                        .map(|l| l.to_vec())
+                        .unwrap_or_default(),
+                    gold_position: row
+                        .get("gold_position")
+                        .and_then(|v| v.as_f64())
+                        .map(|v| v as i64)
+                        .unwrap_or(-1),
+                }
+            })
+            .collect()
+    }
+
+    /// Compute one configured metric over all examples. Examples whose
+    /// inference failed score `None`.
+    pub fn compute_metric(
+        &self,
+        config: &MetricConfig,
+        examples: &[Example],
+        task: &EvalTask,
+        failed: &[bool],
+    ) -> Result<MetricReport> {
+        metrics::validate_metric(config)?;
+        let name = config.name.as_str();
+        let mask = |mut values: Vec<Option<f64>>| -> Vec<Option<f64>> {
+            for (v, &f) in values.iter_mut().zip(failed) {
+                if f {
+                    *v = None;
+                }
+            }
+            values
+        };
+
+        let (values, scale, unparseable) = match config.metric_type.as_str() {
+            "lexical" => {
+                let norm = if config.param_bool("normalize", true) {
+                    metrics::lexical::Normalize::default()
+                } else {
+                    metrics::lexical::Normalize::none()
+                };
+                // Distributed lexical stage.
+                let df = DataFrame::from_columns(vec![(
+                    "i",
+                    (0..examples.len() as i64).map(Value::Int).collect::<Vec<_>>(),
+                )])?;
+                let out = run_partitioned(
+                    &df,
+                    task.executors,
+                    task.inference.batch_size,
+                    |_| Ok(()),
+                    |_, _df, slice| {
+                        Ok(slice
+                            .indices()
+                            .map(|i| {
+                                let ex = &examples[i];
+                                let v = match name {
+                                    "exact_match" => {
+                                        metrics::lexical::exact_match(&ex.response, &ex.reference, norm)
+                                    }
+                                    "contains" => {
+                                        metrics::lexical::contains(&ex.response, &ex.reference, norm)
+                                    }
+                                    "token_f1" => metrics::lexical::token_f1(&ex.response, &ex.reference),
+                                    "bleu" => metrics::lexical::bleu(&ex.response, &ex.reference),
+                                    "rouge_l" => metrics::lexical::rouge_l(&ex.response, &ex.reference),
+                                    _ => unreachable!("validated"),
+                                };
+                                Some(v)
+                            })
+                            .collect())
+                    },
+                )?;
+                let scale = metrics::metric_scale(name);
+                (mask(out.rows), scale, 0)
+            }
+            "semantic" => {
+                let runtime = self
+                    .runtime
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("semantic metric '{name}' needs the PJRT runtime (make artifacts)"))?;
+                let values = match name {
+                    "embedding_similarity" => {
+                        metrics::semantic::embedding_similarity_batch(runtime, examples)?
+                    }
+                    "bertscore" => metrics::semantic::bertscore_batch(runtime, examples)?,
+                    _ => unreachable!("validated"),
+                };
+                (mask(values), MetricScale::Continuous, 0)
+            }
+            "llm_judge" => {
+                let rubric = config.param_str("rubric").unwrap_or("overall quality").to_string();
+                let provider = config
+                    .param_str("judge_provider")
+                    .unwrap_or(&task.model.provider)
+                    .to_string();
+                let model = config
+                    .param_str("judge_model")
+                    .unwrap_or(&task.model.model_name)
+                    .to_string();
+                let engine = self.make_engine(&provider, &model)?;
+                let mut cached = CachedEngine::new(engine, self.cache.clone());
+                let outcome =
+                    metrics::judge::grade_pointwise(&mut cached, &rubric, examples, 256);
+                (mask(outcome.scores), MetricScale::Ordinal, outcome.unparseable)
+            }
+            "rag" => {
+                let provider = config
+                    .param_str("judge_provider")
+                    .unwrap_or(&task.model.provider)
+                    .to_string();
+                let model = config
+                    .param_str("judge_model")
+                    .unwrap_or(&task.model.model_name)
+                    .to_string();
+                let values: Vec<Option<f64>> = match name {
+                    "context_precision" => {
+                        examples.iter().map(metrics::rag::context_precision).collect()
+                    }
+                    "context_recall" => examples.iter().map(metrics::rag::context_recall).collect(),
+                    "answer_relevance" => {
+                        let runtime = self.runtime.as_ref().ok_or_else(|| {
+                            anyhow!("answer_relevance needs the PJRT runtime")
+                        })?;
+                        metrics::semantic::answer_relevance_batch(runtime, examples)?
+                    }
+                    "faithfulness" => {
+                        let engine = self.make_engine(&provider, &model)?;
+                        let mut cached = CachedEngine::new(engine, self.cache.clone());
+                        examples.iter().map(|ex| metrics::rag::faithfulness(&mut cached, ex)).collect()
+                    }
+                    "context_relevance" => {
+                        let engine = self.make_engine(&provider, &model)?;
+                        let mut cached = CachedEngine::new(engine, self.cache.clone());
+                        examples
+                            .iter()
+                            .map(|ex| metrics::rag::context_relevance(&mut cached, ex))
+                            .collect()
+                    }
+                    _ => unreachable!("validated"),
+                };
+                (mask(values), metrics::metric_scale(name), 0)
+            }
+            _ => unreachable!("validated"),
+        };
+
+        Ok(MetricReport { name: name.to_string(), values, scale, unparseable })
+    }
+
+    // ---------------------------------------------------------------- stage 4
+
+    /// Aggregate one metric report into a point estimate + CI.
+    pub fn aggregate(&self, report: &MetricReport, task: &EvalTask) -> MetricValue {
+        let scored = report.scored();
+        let s = &task.statistics;
+        let mut rng = Rng::with_stream(s.seed, 0xC1);
+        let point = stats::describe::mean(&scored);
+
+        let ci = if scored.is_empty() {
+            stats::ConfidenceInterval {
+                point: f64::NAN,
+                lo: f64::NAN,
+                hi: f64::NAN,
+                level: s.confidence_level,
+                method: "none",
+            }
+        } else {
+            match s.ci_method {
+                CiMethod::Analytic => {
+                    if report.scale == MetricScale::Binary {
+                        let successes = scored.iter().filter(|&&v| v >= 0.5).count() as u64;
+                        stats::wilson_interval(successes, scored.len() as u64, s.confidence_level)
+                    } else {
+                        stats::t_interval(&scored, s.confidence_level)
+                    }
+                }
+                CiMethod::Percentile => {
+                    if let Some(boots) = self.device_bootstrap(&scored, s) {
+                        percentile_from_boots(point, boots, s.confidence_level)
+                    } else {
+                        stats::percentile_bootstrap(
+                            &scored,
+                            stats::describe::mean,
+                            s.confidence_level,
+                            s.bootstrap_iterations,
+                            &mut rng,
+                        )
+                    }
+                }
+                CiMethod::Bca => stats::bca_bootstrap(
+                    &scored,
+                    stats::describe::mean,
+                    s.confidence_level,
+                    s.bootstrap_iterations,
+                    &mut rng,
+                ),
+            }
+        };
+
+        MetricValue {
+            name: report.name.clone(),
+            value: point,
+            ci,
+            n: report.n_scored(),
+            n_failed: report.n_failed(),
+            unparseable: report.unparseable,
+        }
+    }
+
+    /// Device (XLA) bootstrap when enabled and shapes fit.
+    fn device_bootstrap(
+        &self,
+        scored: &[f64],
+        s: &crate::config::StatisticsConfig,
+    ) -> Option<Vec<f64>> {
+        if !s.use_device_bootstrap {
+            return None;
+        }
+        let runtime = self.runtime.as_ref()?;
+        if s.bootstrap_iterations != runtime.manifest.bootstrap.resamples {
+            return None;
+        }
+        let mut rng = Rng::with_stream(s.seed, 0xDE);
+        runtime.bootstrap_means(scored, &mut rng).ok().flatten()
+    }
+
+    // ---------------------------------------------------------------- driver
+
+    /// Full 4-stage evaluation (the paper's `runner.evaluate(df, task)`).
+    pub fn evaluate(&self, df: &DataFrame, task: &EvalTask) -> Result<EvalResult> {
+        task.validate()?;
+        let t0 = self.clock.now();
+
+        // Stage 1: prompt preparation.
+        let prompts = self.prepare_prompts(df, task)?;
+
+        // Stage 2: distributed inference.
+        let (inference_rows, inf_stats) = self.run_inference(&prompts, task)?;
+        let failed: Vec<bool> = inference_rows.iter().map(|r| r.response.is_none()).collect();
+        let failed_examples: Vec<usize> =
+            failed.iter().enumerate().filter(|(_, &f)| f).map(|(i, _)| i).collect();
+
+        // Stage 3: metric computation.
+        let examples = self.build_examples(df, task, &prompts, &inference_rows);
+        let mut reports = Vec::with_capacity(task.metrics.len());
+        for mc in &task.metrics {
+            reports.push(self.compute_metric(mc, &examples, task, &failed)?);
+        }
+
+        // Stage 4: statistical aggregation.
+        let metrics: Vec<MetricValue> = reports.iter().map(|r| self.aggregate(r, task)).collect();
+
+        // Flush cache writes so a following replay run sees them.
+        if let Some(cache) = &self.cache {
+            cache.flush()?;
+        }
+
+        Ok(EvalResult {
+            task_id: task.task_id.clone(),
+            provider: task.model.provider.clone(),
+            model: task.model.model_name.clone(),
+            metrics,
+            reports,
+            inference: inf_stats,
+            failed_examples,
+            wall_secs: self.clock.now() - t0,
+        })
+    }
+}
+
+impl Default for EvalRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn percentile_from_boots(point: f64, mut boots: Vec<f64>, level: f64) -> stats::ConfidenceInterval {
+    boots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let alpha = 1.0 - level;
+    stats::ConfidenceInterval {
+        point,
+        lo: stats::describe::quantile_sorted(&boots, alpha / 2.0),
+        hi: stats::describe::quantile_sorted(&boots, 1.0 - alpha / 2.0),
+        level,
+        method: "percentile_device",
+    }
+}

@@ -1,0 +1,263 @@
+//! Streaming evaluation (paper §6.2 future work, implemented here):
+//! results stream back as partition chunks complete rather than waiting
+//! for the whole dataset, each chunk carrying a *running* aggregate with
+//! an any-time confidence interval.
+//!
+//! The inference stage runs chunk-by-chunk (each chunk is a mini
+//! distributed job); after each chunk the runner emits a
+//! [`StreamUpdate`] with the cumulative metric estimate. Useful for very
+//! large datasets where an early stop ("the CI is already tight enough /
+//! the regression is already significant") saves real money.
+
+use super::runner::EvalRunner;
+use crate::config::EvalTask;
+use crate::data::DataFrame;
+use crate::metrics::MetricReport;
+use crate::stats::{wilson_interval, t_interval, ConfidenceInterval, MetricScale};
+use anyhow::Result;
+
+/// One streamed progress update.
+#[derive(Debug, Clone)]
+pub struct StreamUpdate {
+    /// Examples processed so far.
+    pub processed: usize,
+    pub total: usize,
+    /// Running metric aggregates (one per configured metric), with
+    /// analytic any-time CIs (cheap; bootstrap runs once at the end).
+    pub running: Vec<(String, ConfidenceInterval)>,
+    /// Cumulative inference accounting.
+    pub api_calls: u64,
+    pub cache_hits: u64,
+    pub cost_usd: f64,
+    pub failed: u64,
+}
+
+impl StreamUpdate {
+    pub fn metric(&self, name: &str) -> Option<&ConfidenceInterval> {
+        self.running.iter().find(|(n, _)| n == name).map(|(_, ci)| ci)
+    }
+}
+
+/// Early-stop decision callback result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamControl {
+    Continue,
+    /// Stop after this chunk; partial results are returned.
+    Stop,
+}
+
+impl EvalRunner {
+    /// Evaluate in chunks of `chunk_size`, invoking `on_update` after each
+    /// chunk. Returns the final per-metric reports over the processed
+    /// prefix (full dataset unless the callback stopped early).
+    pub fn evaluate_streaming<F>(
+        &self,
+        df: &DataFrame,
+        task: &EvalTask,
+        chunk_size: usize,
+        mut on_update: F,
+    ) -> Result<(Vec<MetricReport>, StreamUpdate)>
+    where
+        F: FnMut(&StreamUpdate) -> StreamControl,
+    {
+        task.validate()?;
+        let chunk_size = chunk_size.max(1);
+        let total = df.len();
+        let prompts = self.prepare_prompts(df, task)?;
+
+        let mut all_values: Vec<Vec<Option<f64>>> =
+            task.metrics.iter().map(|_| Vec::new()).collect();
+        let mut unparseable = vec![0usize; task.metrics.len()];
+        let mut update = StreamUpdate {
+            processed: 0,
+            total,
+            running: Vec::new(),
+            api_calls: 0,
+            cache_hits: 0,
+            cost_usd: 0.0,
+            failed: 0,
+        };
+
+        let mut start = 0usize;
+        while start < total {
+            let end = (start + chunk_size).min(total);
+            let idx: Vec<usize> = (start..end).collect();
+            let chunk_df = df.take(&idx)?;
+            let chunk_prompts = prompts[start..end].to_vec();
+
+            let (rows, stats) = self.run_inference(&chunk_prompts, task)?;
+            let failed: Vec<bool> = rows.iter().map(|r| r.response.is_none()).collect();
+            let examples = self.build_examples(&chunk_df, task, &chunk_prompts, &rows);
+            for (mi, mc) in task.metrics.iter().enumerate() {
+                let report = self.compute_metric(mc, &examples, task, &failed)?;
+                unparseable[mi] += report.unparseable;
+                all_values[mi].extend(report.values);
+            }
+
+            update.processed = end;
+            update.api_calls += stats.api_calls;
+            update.cache_hits += stats.cache_hits;
+            update.cost_usd += stats.total_cost_usd;
+            update.failed += stats.failed;
+            update.running = task
+                .metrics
+                .iter()
+                .enumerate()
+                .map(|(mi, mc)| {
+                    let scored: Vec<f64> = all_values[mi].iter().filter_map(|v| *v).collect();
+                    let scale = crate::metrics::metric_scale(&mc.name);
+                    let ci = if scored.is_empty() {
+                        ConfidenceInterval {
+                            point: f64::NAN,
+                            lo: f64::NAN,
+                            hi: f64::NAN,
+                            level: task.statistics.confidence_level,
+                            method: "none",
+                        }
+                    } else if scale == MetricScale::Binary {
+                        let successes = scored.iter().filter(|&&v| v >= 0.5).count() as u64;
+                        wilson_interval(
+                            successes,
+                            scored.len() as u64,
+                            task.statistics.confidence_level,
+                        )
+                    } else {
+                        t_interval(&scored, task.statistics.confidence_level)
+                    };
+                    (mc.name.clone(), ci)
+                })
+                .collect();
+
+            let control = on_update(&update);
+            start = end;
+            if control == StreamControl::Stop {
+                break;
+            }
+        }
+
+        let reports: Vec<MetricReport> = task
+            .metrics
+            .iter()
+            .enumerate()
+            .map(|(mi, mc)| MetricReport {
+                name: mc.name.clone(),
+                values: all_values[mi].clone(),
+                scale: crate::metrics::metric_scale(&mc.name),
+                unparseable: unparseable[mi],
+            })
+            .collect();
+        Ok((reports, update))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MetricConfig;
+    use crate::data::synth;
+    use crate::providers::simulated::SimServiceConfig;
+    use crate::ratelimit::VirtualClock;
+
+    fn fast_runner() -> EvalRunner {
+        let mut r = EvalRunner::with_clock(VirtualClock::new());
+        r.service_config = SimServiceConfig {
+            server_error_rate: 0.0,
+            unparseable_rate: 0.0,
+            sleep_latency: false,
+            ..Default::default()
+        };
+        r
+    }
+
+    #[test]
+    fn streams_all_chunks_and_matches_batch_eval() {
+        let runner = fast_runner();
+        let df = synth::generate_default(130, 91);
+        let mut task = EvalTask::default();
+        task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+
+        let mut updates = 0;
+        let (reports, last) = runner
+            .evaluate_streaming(&df, &task, 40, |u| {
+                updates += 1;
+                assert!(u.processed <= u.total);
+                assert!(u.metric("exact_match").is_some());
+                StreamControl::Continue
+            })
+            .unwrap();
+        assert_eq!(updates, 4); // 40+40+40+10
+        assert_eq!(last.processed, 130);
+        assert_eq!(reports[0].values.len(), 130);
+
+        // Same values as the batch path.
+        let batch = runner.evaluate(&df, &task).unwrap();
+        let streamed_mean =
+            reports[0].scored().iter().sum::<f64>() / reports[0].n_scored() as f64;
+        assert!((streamed_mean - batch.metric("exact_match").unwrap().value).abs() < 1e-12);
+    }
+
+    #[test]
+    fn early_stop_truncates() {
+        let runner = fast_runner();
+        let df = synth::generate_default(200, 92);
+        let mut task = EvalTask::default();
+        task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+        let (reports, last) = runner
+            .evaluate_streaming(&df, &task, 50, |u| {
+                if u.processed >= 100 {
+                    StreamControl::Stop
+                } else {
+                    StreamControl::Continue
+                }
+            })
+            .unwrap();
+        assert_eq!(last.processed, 100);
+        assert_eq!(reports[0].values.len(), 100);
+    }
+
+    #[test]
+    fn running_ci_tightens() {
+        let runner = fast_runner();
+        let df = synth::generate_default(300, 93);
+        let mut task = EvalTask::default();
+        task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+        let mut widths = Vec::new();
+        runner
+            .evaluate_streaming(&df, &task, 75, |u| {
+                widths.push(u.metric("exact_match").unwrap().width());
+                StreamControl::Continue
+            })
+            .unwrap();
+        assert_eq!(widths.len(), 4);
+        assert!(
+            widths.last().unwrap() < widths.first().unwrap(),
+            "CI should tighten: {widths:?}"
+        );
+    }
+
+    #[test]
+    fn early_stop_on_significance_workflow() {
+        // The motivating use: stop once the metric CI upper bound falls
+        // below a regression threshold.
+        let runner = fast_runner();
+        let df = synth::generate_default(400, 94);
+        let mut task = EvalTask::default();
+        task.model.model_name = "gpt-3.5-turbo".into(); // weak model
+        task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+        let threshold = 0.95; // "model must score >= 95%"
+        let mut stopped_at = None;
+        runner
+            .evaluate_streaming(&df, &task, 50, |u| {
+                let ci = u.metric("exact_match").unwrap();
+                if u.processed >= 100 && ci.hi < threshold {
+                    stopped_at = Some(u.processed);
+                    StreamControl::Stop
+                } else {
+                    StreamControl::Continue
+                }
+            })
+            .unwrap();
+        let at = stopped_at.expect("weak model should fail the bar early");
+        assert!(at < 400, "stopped at {at}");
+    }
+}

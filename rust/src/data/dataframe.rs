@@ -1,0 +1,375 @@
+//! Columnar DataFrame: the unit of work the engine partitions.
+//!
+//! Deliberately small — named columns of [`Value`]s with row views,
+//! selection, and column append. Mirrors the subset of the Spark DataFrame
+//! API the paper's pipeline uses (`withColumn`, `select`, partitioned
+//! iteration).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A cell value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    /// List of strings (e.g. retrieved context chunks).
+    StrList(Vec<String>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            Value::Bool(b) => Some(*b as i64 as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str_list(&self) -> Option<&[String]> {
+        match self {
+            Value::StrList(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Render as display text (used by templates and metrics).
+    pub fn text(&self) -> String {
+        match self {
+            Value::Null => String::new(),
+            Value::Bool(b) => b.to_string(),
+            Value::Int(i) => i.to_string(),
+            Value::Float(f) => f.to_string(),
+            Value::Str(s) => s.clone(),
+            Value::StrList(v) => v.join("\n"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Null => Json::Null,
+            Value::Bool(b) => Json::Bool(*b),
+            Value::Int(i) => Json::Num(*i as f64),
+            Value::Float(f) => Json::Num(*f),
+            Value::Str(s) => Json::Str(s.clone()),
+            Value::StrList(v) => Json::Arr(v.iter().map(|s| Json::Str(s.clone())).collect()),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Value {
+        match v {
+            Json::Null => Value::Null,
+            Json::Bool(b) => Value::Bool(*b),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    Value::Int(*n as i64)
+                } else {
+                    Value::Float(*n)
+                }
+            }
+            Json::Str(s) => Value::Str(s.clone()),
+            Json::Arr(a) => Value::StrList(
+                a.iter()
+                    .map(|x| match x {
+                        Json::Str(s) => s.clone(),
+                        other => other.to_string(),
+                    })
+                    .collect(),
+            ),
+            Json::Obj(_) => Value::Str(v.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.text())
+    }
+}
+
+/// Borrowed row view.
+#[derive(Debug, Clone)]
+pub struct Row<'a> {
+    pub index: usize,
+    df: &'a DataFrame,
+}
+
+impl<'a> Row<'a> {
+    pub fn get(&self, col: &str) -> Option<&'a Value> {
+        self.df.column(col).map(|c| &c[self.index])
+    }
+
+    pub fn str(&self, col: &str) -> &'a str {
+        self.get(col).and_then(|v| v.as_str()).unwrap_or("")
+    }
+
+    /// Row as a JSON object (template rendering scope).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for name in &self.df.order {
+            obj.insert(name.clone(), self.df.columns[name][self.index].to_json());
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// Columnar table with stable column order.
+#[derive(Debug, Clone, Default)]
+pub struct DataFrame {
+    columns: BTreeMap<String, Vec<Value>>,
+    /// Column insertion order (presentation + serialization order).
+    order: Vec<String>,
+    rows: usize,
+}
+
+impl DataFrame {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from (name, values) pairs; all columns must be equal length.
+    pub fn from_columns(cols: Vec<(&str, Vec<Value>)>) -> Result<Self> {
+        let mut df = DataFrame::new();
+        for (name, values) in cols {
+            df.add_column(name, values)?;
+        }
+        Ok(df)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn column_names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn column(&self, name: &str) -> Option<&[Value]> {
+        self.columns.get(name).map(|c| c.as_slice())
+    }
+
+    pub fn has_column(&self, name: &str) -> bool {
+        self.columns.contains_key(name)
+    }
+
+    pub fn add_column(&mut self, name: &str, values: Vec<Value>) -> Result<()> {
+        if !self.order.is_empty() && values.len() != self.rows {
+            bail!(
+                "column '{name}' has {} rows, expected {}",
+                values.len(),
+                self.rows
+            );
+        }
+        if self.columns.contains_key(name) {
+            bail!("column '{name}' already exists");
+        }
+        self.rows = values.len();
+        self.order.push(name.to_string());
+        self.columns.insert(name.to_string(), values);
+        Ok(())
+    }
+
+    /// Replace or add a column (Spark `withColumn`).
+    pub fn with_column(mut self, name: &str, values: Vec<Value>) -> Result<Self> {
+        if values.len() != self.rows && !self.order.is_empty() {
+            bail!("with_column '{name}': length mismatch");
+        }
+        if !self.columns.contains_key(name) {
+            self.order.push(name.to_string());
+            self.rows = values.len();
+        }
+        self.columns.insert(name.to_string(), values);
+        Ok(self)
+    }
+
+    pub fn row(&self, index: usize) -> Row<'_> {
+        assert!(index < self.rows, "row {index} out of bounds ({})", self.rows);
+        Row { index, df: self }
+    }
+
+    pub fn iter_rows(&self) -> impl Iterator<Item = Row<'_>> {
+        (0..self.rows).map(move |i| self.row(i))
+    }
+
+    /// Select a subset of rows by index (clones values).
+    pub fn take(&self, indices: &[usize]) -> Result<DataFrame> {
+        let mut df = DataFrame::new();
+        for name in &self.order {
+            let src = &self.columns[name];
+            let vals = indices
+                .iter()
+                .map(|&i| {
+                    src.get(i)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("take index {i} out of bounds"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            df.add_column(name, vals)?;
+        }
+        df.rows = indices.len();
+        Ok(df)
+    }
+
+    /// Split into `n` contiguous partitions of near-equal size (Spark
+    /// range partitioning). Returns the row-index ranges.
+    pub fn partition_ranges(&self, n: usize) -> Vec<std::ops::Range<usize>> {
+        let n = n.max(1);
+        let total = self.rows;
+        let base = total / n;
+        let extra = total % n;
+        let mut ranges = Vec::with_capacity(n);
+        let mut start = 0;
+        for i in 0..n {
+            let size = base + usize::from(i < extra);
+            ranges.push(start..start + size);
+            start += size;
+        }
+        ranges
+    }
+
+    /// Vertically concatenate frames with identical schemas.
+    pub fn concat(frames: &[DataFrame]) -> Result<DataFrame> {
+        let Some(first) = frames.first() else {
+            return Ok(DataFrame::new());
+        };
+        let mut df = DataFrame::new();
+        for name in &first.order {
+            let mut vals = Vec::new();
+            for f in frames {
+                let col = f
+                    .column(name)
+                    .ok_or_else(|| anyhow!("concat: column '{name}' missing"))?;
+                vals.extend_from_slice(col);
+            }
+            df.add_column(name, vals)?;
+        }
+        Ok(df)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DataFrame {
+        DataFrame::from_columns(vec![
+            (
+                "prompt",
+                vec![Value::Str("a".into()), Value::Str("b".into()), Value::Str("c".into())],
+            ),
+            ("id", vec![Value::Int(0), Value::Int(1), Value::Int(2)]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn build_and_access() {
+        let df = sample();
+        assert_eq!(df.len(), 3);
+        assert_eq!(df.row(1).str("prompt"), "b");
+        assert_eq!(df.row(2).get("id"), Some(&Value::Int(2)));
+        assert_eq!(df.column_names(), &["prompt", "id"]);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let mut df = sample();
+        assert!(df.add_column("bad", vec![Value::Null]).is_err());
+    }
+
+    #[test]
+    fn duplicate_column_rejected() {
+        let mut df = sample();
+        assert!(df.add_column("prompt", vec![Value::Null; 3]).is_err());
+    }
+
+    #[test]
+    fn with_column_replaces() {
+        let df = sample()
+            .with_column("prompt", vec![Value::Str("x".into()); 3])
+            .unwrap();
+        assert_eq!(df.row(0).str("prompt"), "x");
+        assert_eq!(df.column_names().len(), 2);
+    }
+
+    #[test]
+    fn take_subset() {
+        let df = sample().take(&[2, 0]).unwrap();
+        assert_eq!(df.len(), 2);
+        assert_eq!(df.row(0).str("prompt"), "c");
+        assert_eq!(df.row(1).str("prompt"), "a");
+        assert!(sample().take(&[99]).is_err());
+    }
+
+    #[test]
+    fn partition_ranges_cover_disjoint() {
+        let df = DataFrame::from_columns(vec![(
+            "x",
+            (0..10).map(Value::Int).collect::<Vec<_>>(),
+        )])
+        .unwrap();
+        let ranges = df.partition_ranges(3);
+        assert_eq!(ranges.len(), 3);
+        assert_eq!(ranges[0], 0..4);
+        assert_eq!(ranges[1], 4..7);
+        assert_eq!(ranges[2], 7..10);
+        let total: usize = ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn partition_more_than_rows() {
+        let df = DataFrame::from_columns(vec![("x", vec![Value::Int(1)])]).unwrap();
+        let ranges = df.partition_ranges(4);
+        assert_eq!(ranges.iter().map(|r| r.len()).sum::<usize>(), 1);
+        assert_eq!(ranges.len(), 4);
+    }
+
+    #[test]
+    fn concat_roundtrip() {
+        let df = sample();
+        let parts: Vec<DataFrame> = df
+            .partition_ranges(2)
+            .into_iter()
+            .map(|r| df.take(&r.collect::<Vec<_>>()).unwrap())
+            .collect();
+        let whole = DataFrame::concat(&parts).unwrap();
+        assert_eq!(whole.len(), 3);
+        assert_eq!(whole.row(2).str("prompt"), "c");
+    }
+
+    #[test]
+    fn row_to_json() {
+        let df = sample();
+        let j = df.row(0).to_json();
+        assert_eq!(j.get("prompt").unwrap().as_str().unwrap(), "a");
+        assert_eq!(j.get("id").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::from_json(&Json::Num(2.0)), Value::Int(2));
+        assert_eq!(Value::from_json(&Json::Num(2.5)), Value::Float(2.5));
+        let list = Value::StrList(vec!["a".into(), "b".into()]);
+        assert_eq!(list.text(), "a\nb");
+        assert_eq!(Value::from_json(&list.to_json()), list);
+    }
+}

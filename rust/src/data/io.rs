@@ -1,0 +1,208 @@
+//! DataFrame IO: JSONL (one object per line) and CSV.
+
+use super::dataframe::{DataFrame, Value};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Read a JSONL file: every line an object; union of keys becomes the
+/// schema, missing cells are Null.
+pub fn read_jsonl(path: &Path) -> Result<DataFrame> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let reader = std::io::BufReader::new(file);
+    let mut rows: Vec<BTreeMap<String, Json>> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(&line)
+            .with_context(|| format!("{path:?}:{} invalid json", lineno + 1))?;
+        rows.push(v.as_obj()?.clone());
+    }
+    frame_from_objects(rows)
+}
+
+fn frame_from_objects(rows: Vec<BTreeMap<String, Json>>) -> Result<DataFrame> {
+    let mut keys: Vec<String> = Vec::new();
+    for r in &rows {
+        for k in r.keys() {
+            if !keys.contains(k) {
+                keys.push(k.clone());
+            }
+        }
+    }
+    let mut df = DataFrame::new();
+    for k in &keys {
+        let vals = rows
+            .iter()
+            .map(|r| r.get(k).map(Value::from_json).unwrap_or(Value::Null))
+            .collect();
+        df.add_column(k, vals)?;
+    }
+    Ok(df)
+}
+
+/// Write a DataFrame as JSONL.
+pub fn write_jsonl(df: &DataFrame, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    for row in df.iter_rows() {
+        writeln!(w, "{}", row.to_json())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Minimal RFC-4180 CSV reader (quoted fields, escaped quotes). First row
+/// is the header; all cells load as strings.
+pub fn read_csv(path: &Path) -> Result<DataFrame> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let mut records = parse_csv(&text)?;
+    if records.is_empty() {
+        return Ok(DataFrame::new());
+    }
+    let header = records.remove(0);
+    let mut df = DataFrame::new();
+    for (ci, name) in header.iter().enumerate() {
+        let vals = records
+            .iter()
+            .map(|r| {
+                r.get(ci)
+                    .map(|s| Value::Str(s.clone()))
+                    .unwrap_or(Value::Null)
+            })
+            .collect();
+        df.add_column(name, vals)?;
+    }
+    Ok(df)
+}
+
+/// Write CSV with quoting where needed.
+pub fn write_csv(df: &DataFrame, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    let names = df.column_names().to_vec();
+    writeln!(w, "{}", names.iter().map(|n| csv_quote(n)).collect::<Vec<_>>().join(","))?;
+    for row in df.iter_rows() {
+        let cells: Vec<String> = names.iter().map(|n| csv_quote(&row.get(n).unwrap().text())).collect();
+        writeln!(w, "{}", cells.join(","))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn csv_quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+fn parse_csv(text: &str) -> Result<Vec<Vec<String>>> {
+    let mut records = Vec::new();
+    let mut record = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => {
+                    if !field.is_empty() {
+                        bail!("quote inside unquoted field");
+                    }
+                    in_quotes = true;
+                }
+                ',' => {
+                    record.push(std::mem::take(&mut field));
+                }
+                '\r' => {}
+                '\n' => {
+                    record.push(std::mem::take(&mut field));
+                    records.push(std::mem::take(&mut record));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if !field.is_empty() || !record.is_empty() {
+        record.push(field);
+        records.push(record);
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("slleval-io-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn jsonl_round_trip() {
+        let df = DataFrame::from_columns(vec![
+            ("prompt", vec![Value::Str("what is 2+2?".into()), Value::Str("capital of france".into())]),
+            ("score", vec![Value::Float(0.5), Value::Int(1)]),
+            ("ctx", vec![Value::StrList(vec!["a".into(), "b".into()]), Value::Null]),
+        ])
+        .unwrap();
+        let path = tmp("rt.jsonl");
+        write_jsonl(&df, &path).unwrap();
+        let back = read_jsonl(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.row(0).str("prompt"), "what is 2+2?");
+        assert_eq!(back.row(0).get("ctx").unwrap().as_str_list().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn jsonl_ragged_keys() {
+        let path = tmp("ragged.jsonl");
+        std::fs::write(&path, "{\"a\": 1}\n{\"a\": 2, \"b\": \"x\"}\n").unwrap();
+        let df = read_jsonl(&path).unwrap();
+        assert_eq!(df.len(), 2);
+        assert_eq!(df.row(0).get("b"), Some(&Value::Null));
+        assert_eq!(df.row(1).str("b"), "x");
+    }
+
+    #[test]
+    fn csv_round_trip_with_quoting() {
+        let df = DataFrame::from_columns(vec![
+            ("text", vec![Value::Str("hello, world".into()), Value::Str("line\nbreak \"q\"".into())]),
+            ("plain", vec![Value::Str("a".into()), Value::Str("b".into())]),
+        ])
+        .unwrap();
+        let path = tmp("rt.csv");
+        write_csv(&df, &path).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.row(0).str("text"), "hello, world");
+        assert_eq!(back.row(1).str("text"), "line\nbreak \"q\"");
+    }
+
+    #[test]
+    fn invalid_json_line_errors() {
+        let path = tmp("bad.jsonl");
+        std::fs::write(&path, "{\"a\": 1}\nnot json\n").unwrap();
+        assert!(read_jsonl(&path).is_err());
+    }
+}

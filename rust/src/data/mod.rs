@@ -1,0 +1,8 @@
+//! Data substrate: the columnar DataFrame the engine partitions, plus IO
+//! and the synthetic evaluation datasets of paper §5.1.
+
+pub mod dataframe;
+pub mod io;
+pub mod synth;
+
+pub use dataframe::{DataFrame, Row, Value};

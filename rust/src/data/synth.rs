@@ -1,0 +1,313 @@
+//! Synthetic evaluation datasets (paper §5.1).
+//!
+//! The paper samples from three domains: factual QA (Natural-Questions
+//! style), summarization (CNN/DailyMail style), and instruction following
+//! (Alpaca style). We generate structurally equivalent synthetic examples
+//! from seeded templates: every example carries a `prompt`, a `reference`
+//! answer, a `domain` tag, and (for RAG workloads) retrieved `context`
+//! chunks with a known gold chunk — so every metric family has the columns
+//! it needs and ground truth is known by construction.
+
+use super::dataframe::{DataFrame, Value};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Domain mix fractions (qa, summarization, instruction).
+#[derive(Debug, Clone, Copy)]
+pub struct DomainMix {
+    pub qa: f64,
+    pub summarization: f64,
+    pub instruction: f64,
+}
+
+impl Default for DomainMix {
+    fn default() -> Self {
+        Self { qa: 0.4, summarization: 0.3, instruction: 0.3 }
+    }
+}
+
+/// (country, capital, description) knowledge base shared with the
+/// simulated provider's solver (the "model weights" of the simulation).
+pub const ENTITIES: &[(&str, &str, &str)] = &[
+    ("france", "paris", "a european country on the atlantic"),
+    ("japan", "tokyo", "an island nation in east asia"),
+    ("brazil", "brasilia", "the largest country in south america"),
+    ("canada", "ottawa", "a north american country with vast forests"),
+    ("egypt", "cairo", "a country spanning northeast africa"),
+    ("kenya", "nairobi", "an east african country on the equator"),
+    ("norway", "oslo", "a nordic country of fjords"),
+    ("peru", "lima", "an andean country on the pacific"),
+    ("india", "new delhi", "a populous country in south asia"),
+    ("australia", "canberra", "a continent country in oceania"),
+    ("germany", "berlin", "a central european industrial nation"),
+    ("italy", "rome", "a mediterranean peninsula country"),
+    ("spain", "madrid", "an iberian country with diverse regions"),
+    ("portugal", "lisbon", "a country on the iberian atlantic coast"),
+    ("greece", "athens", "a country of islands in the aegean"),
+    ("turkey", "ankara", "a country bridging europe and asia"),
+    ("poland", "warsaw", "a central european country on the baltic"),
+    ("sweden", "stockholm", "a scandinavian country of lakes"),
+    ("finland", "helsinki", "a nordic country of forests"),
+    ("austria", "vienna", "an alpine country in central europe"),
+    ("switzerland", "bern", "a mountainous confederation in europe"),
+    ("netherlands", "amsterdam", "a low-lying country of canals"),
+    ("belgium", "brussels", "a small country at europe's crossroads"),
+    ("ireland", "dublin", "an island nation in the north atlantic"),
+    ("mexico", "mexico city", "a north american country of high plateaus"),
+    ("argentina", "buenos aires", "a south american country of pampas"),
+    ("chile", "santiago", "a long thin country along the andes"),
+    ("colombia", "bogota", "a south american country on two oceans"),
+    ("morocco", "rabat", "a north african kingdom by the atlantic"),
+    ("nigeria", "abuja", "the most populous african country"),
+    ("ethiopia", "addis ababa", "a highland country in the horn of africa"),
+    ("tanzania", "dodoma", "an east african country with great plains"),
+    ("ghana", "accra", "a west african country on the gulf of guinea"),
+    ("vietnam", "hanoi", "a southeast asian country along the coast"),
+    ("thailand", "bangkok", "a southeast asian kingdom of rivers"),
+    ("indonesia", "jakarta", "an archipelago of thousands of islands"),
+    ("philippines", "manila", "an island nation in the western pacific"),
+    ("south korea", "seoul", "an east asian peninsula nation"),
+    ("mongolia", "ulaanbaatar", "a landlocked country of steppes"),
+    ("kazakhstan", "astana", "a vast central asian country"),
+    ("new zealand", "wellington", "an island country in the south pacific"),
+    ("iceland", "reykjavik", "a volcanic island in the north atlantic"),
+    ("cuba", "havana", "a caribbean island nation"),
+];
+
+const TOPICS: &[&str] = &[
+    "the water cycle", "photosynthesis", "plate tectonics", "the printing press",
+    "the industrial revolution", "neural networks", "the immune system",
+    "supply and demand", "the french revolution", "volcanic eruptions",
+    "ocean currents", "renewable energy", "ancient trade routes",
+    "the human genome", "weather fronts", "antibiotic resistance",
+    "glacier formation", "the silk road", "quantum computing", "coral reefs",
+    "the space race", "monetary policy", "urban planning", "gene editing",
+    "the nitrogen cycle", "sound waves", "medieval guilds", "solar flares",
+    "machine translation", "soil erosion", "the telegraph", "deep sea vents",
+    "crop rotation", "magnetism", "the roman aqueducts", "bird migration",
+    "semiconductor fabrication", "the gold standard", "river deltas",
+    "vaccination campaigns", "wind turbines", "the hanseatic league",
+];
+
+/// (task stem, ideal answer) pairs for instruction-following examples.
+pub const TASKS: &[(&str, &str)] = &[
+    ("list three uses for", "practical uses include storage, decoration, and repair"),
+    ("write a short definition of", "a concise working definition covering the core concept"),
+    ("give a step by step plan to learn", "start with basics, practice daily, then build projects"),
+    ("compare and contrast cats and", "both are common companions but differ in temperament"),
+    ("suggest a healthy breakfast featuring", "combine whole grains with fruit and protein"),
+    ("draft a polite email about", "a short courteous note stating the request clearly"),
+    ("explain to a child how", "a simple friendly explanation with an everyday analogy"),
+    ("write a haiku about", "three short lines evoking the subject with a seasonal image"),
+    ("brainstorm five project ideas around", "five varied ideas ranging from simple to ambitious"),
+    ("outline a short presentation on", "an outline with introduction, three points, and a close"),
+    ("give safety tips for", "a brief list of precautions and common mistakes to avoid"),
+    ("summarize the pros and cons of", "balanced bullet points covering benefits and drawbacks"),
+    ("create a quiz question about", "one clear question with a correct answer and distractors"),
+    ("recommend resources for learning", "a mix of introductory and advanced materials"),
+];
+
+fn sentence_pool(topic: &str) -> Vec<String> {
+    vec![
+        format!("{topic} involves several interacting stages"),
+        format!("researchers have studied {topic} for decades"),
+        format!("the key mechanism behind {topic} is energy transfer"),
+        format!("many textbooks introduce {topic} with simple diagrams"),
+        format!("recent work connects {topic} to climate variability"),
+        format!("a common misconception about {topic} is that it is static"),
+    ]
+}
+
+/// Generate one synthetic example per row for the requested domain mix.
+///
+/// Columns: `id`, `domain`, `prompt`, `reference`, `question`, `context`
+/// (list of chunks, first relevant chunk position in `gold_position`).
+pub fn generate(n: usize, seed: u64, mix: DomainMix) -> Result<DataFrame> {
+    let mut rng = Rng::new(seed);
+    let mut ids = Vec::with_capacity(n);
+    let mut domains = Vec::with_capacity(n);
+    let mut prompts = Vec::with_capacity(n);
+    let mut refs = Vec::with_capacity(n);
+    let mut questions = Vec::with_capacity(n);
+    let mut contexts = Vec::with_capacity(n);
+    let mut gold_pos = Vec::with_capacity(n);
+
+    let total = (mix.qa + mix.summarization + mix.instruction).max(1e-9);
+    for i in 0..n {
+        let u = rng.f64() * total;
+        let (domain, prompt, reference, question, ctx, gold) = if u < mix.qa {
+            qa_example(&mut rng)
+        } else if u < mix.qa + mix.summarization {
+            summarization_example(&mut rng)
+        } else {
+            instruction_example(&mut rng)
+        };
+        ids.push(Value::Int(i as i64));
+        domains.push(Value::Str(domain.into()));
+        prompts.push(Value::Str(prompt));
+        refs.push(Value::Str(reference));
+        questions.push(Value::Str(question));
+        contexts.push(Value::StrList(ctx));
+        gold_pos.push(Value::Int(gold));
+    }
+
+    DataFrame::from_columns(vec![
+        ("id", ids),
+        ("domain", domains),
+        ("prompt", prompts),
+        ("reference", refs),
+        ("question", questions),
+        ("context", contexts),
+        ("gold_position", gold_pos),
+    ])
+}
+
+/// Convenience: default mix.
+pub fn generate_default(n: usize, seed: u64) -> DataFrame {
+    generate(n, seed, DomainMix::default()).expect("static schema cannot fail")
+}
+
+/// Question phrasings — all contain "capital of <country>" so the
+/// simulated model's solver can parse them (like a real model recognizing
+/// paraphrases of a known fact).
+const QA_TEMPLATES: &[&str] = &[
+    "what is the capital of {c}?",
+    "which city is the capital of {c}?",
+    "name the capital of {c}.",
+    "tell me the capital of {c} please.",
+    "i need to know the capital of {c}.",
+];
+
+const QA_PREFIXES: &[&str] = &[
+    "Answer the question concisely.",
+    "Provide a short factual answer.",
+    "Reply with just the answer, no explanation.",
+    "Answer briefly.",
+    "Give the single best answer.",
+    "Respond with only the requested fact.",
+];
+
+fn qa_example(rng: &mut Rng) -> (&'static str, String, String, String, Vec<String>, i64) {
+    let (country, capital, desc) = *rng.choose(ENTITIES);
+    let question = rng.choose(QA_TEMPLATES).replace("{c}", country);
+    let prefix = *rng.choose(QA_PREFIXES);
+    let reference = capital.to_string();
+    // Retrieved context: one gold chunk + distractors, shuffled.
+    let gold_chunk = format!("{country} is {desc}; its capital city is {capital}");
+    let mut chunks: Vec<String> = Vec::new();
+    chunks.push(gold_chunk.clone());
+    while chunks.len() < 4 {
+        let (c2, cap2, d2) = *rng.choose(ENTITIES);
+        if c2 != country {
+            chunks.push(format!("{c2} is {d2}; its capital city is {cap2}"));
+        }
+    }
+    rng.shuffle(&mut chunks[..]);
+    let gold = chunks.iter().position(|c| c == &gold_chunk).unwrap() as i64;
+    (
+        "qa",
+        format!("{prefix}\nQuestion: {question}"),
+        reference,
+        question,
+        chunks,
+        gold,
+    )
+}
+
+fn summarization_example(rng: &mut Rng) -> (&'static str, String, String, String, Vec<String>, i64) {
+    let topic = *rng.choose(TOPICS);
+    let pool = sentence_pool(topic);
+    let k = 3 + rng.below(3);
+    let idx = rng.sample_indices(pool.len(), k);
+    let article: Vec<String> = idx.iter().map(|&i| pool[i].clone()).collect();
+    let reference = format!("{}", article[0]); // lead sentence as gold summary
+    let question = format!("summarize the article about {topic}");
+    let body = article.join(". ");
+    (
+        "summarization",
+        format!("Summarize in one sentence:\n{body}."),
+        reference,
+        question,
+        article,
+        0,
+    )
+}
+
+fn instruction_example(rng: &mut Rng) -> (&'static str, String, String, String, Vec<String>, i64) {
+    let (task, answer) = *rng.choose(TASKS);
+    let topic = *rng.choose(TOPICS);
+    let instruction = format!("{task} {topic}");
+    (
+        "instruction",
+        format!("Instruction: {instruction}\nResponse:"),
+        answer.to_string(),
+        instruction,
+        vec![],
+        -1,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_and_size() {
+        let df = generate_default(100, 1);
+        assert_eq!(df.len(), 100);
+        for col in ["id", "domain", "prompt", "reference", "question", "context", "gold_position"] {
+            assert!(df.has_column(col), "missing {col}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate_default(50, 7);
+        let b = generate_default(50, 7);
+        for i in 0..50 {
+            assert_eq!(a.row(i).str("prompt"), b.row(i).str("prompt"));
+        }
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = generate_default(50, 1);
+        let b = generate_default(50, 2);
+        let same = (0..50).filter(|&i| a.row(i).str("prompt") == b.row(i).str("prompt")).count();
+        assert!(same < 50);
+    }
+
+    #[test]
+    fn domain_mix_respected() {
+        let df = generate(3000, 3, DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 }).unwrap();
+        for row in df.iter_rows() {
+            assert_eq!(row.str("domain"), "qa");
+        }
+        let df = generate_default(3000, 4);
+        let qa = df.iter_rows().filter(|r| r.str("domain") == "qa").count();
+        assert!((0.3..0.5).contains(&(qa as f64 / 3000.0)), "qa fraction {qa}");
+    }
+
+    #[test]
+    fn qa_gold_chunk_contains_answer() {
+        let df = generate(200, 5, DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 }).unwrap();
+        for row in df.iter_rows() {
+            let gold = row.get("gold_position").unwrap().as_f64().unwrap() as usize;
+            let chunks = row.get("context").unwrap().as_str_list().unwrap();
+            let reference = row.str("reference");
+            assert!(
+                chunks[gold].contains(reference),
+                "gold chunk must contain the answer"
+            );
+        }
+    }
+
+    #[test]
+    fn instruction_rows_have_no_context() {
+        let df = generate(100, 6, DomainMix { qa: 0.0, summarization: 0.0, instruction: 1.0 }).unwrap();
+        for row in df.iter_rows() {
+            assert!(row.get("context").unwrap().as_str_list().unwrap().is_empty());
+            assert_eq!(row.get("gold_position").unwrap().as_f64().unwrap(), -1.0);
+        }
+    }
+}

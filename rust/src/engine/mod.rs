@@ -1,0 +1,297 @@
+//! Data-parallel execution engine — the Spark substrate (paper §3.1).
+//!
+//! Mirrors the subset of Spark the evaluation pipeline uses:
+//!
+//! - a DataFrame is **range-partitioned** across `executors`;
+//! - each executor thread owns **executor-local state** created once per
+//!   executor (Listing 1's `_ENGINE_CACHE`: inference engine + token
+//!   bucket);
+//! - partitions are processed in **batches** of `batch_size` rows
+//!   (Pandas-UDF batch semantics);
+//! - per-row outputs are collected back **in row order** (result
+//!   collection), with per-executor telemetry.
+
+use crate::data::DataFrame;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Per-executor telemetry returned with the job results.
+#[derive(Debug, Clone, Default)]
+pub struct ExecutorStats {
+    pub executor_id: usize,
+    pub rows_processed: usize,
+    pub batches: usize,
+    /// Seconds spent inside the UDF (busy time).
+    pub busy_secs: f64,
+}
+
+/// Job-level outcome: per-row outputs in row order + telemetry.
+#[derive(Debug)]
+pub struct JobOutput<T> {
+    pub rows: Vec<T>,
+    pub executors: Vec<ExecutorStats>,
+}
+
+/// One batch handed to the UDF: the owning partition's row range within
+/// the source frame.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchSlice {
+    pub executor_id: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl BatchSlice {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+
+    pub fn indices(&self) -> std::ops::Range<usize> {
+        self.start..self.end
+    }
+}
+
+/// Run a batch UDF over `df` with `executors` threads.
+///
+/// `init(executor_id)` builds the executor-local state once per executor.
+/// `process(state, df, slice)` maps one batch to one output per row
+/// (must return exactly `slice.len()` values).
+pub fn run_partitioned<T, S, FI, FP>(
+    df: &DataFrame,
+    executors: usize,
+    batch_size: usize,
+    init: FI,
+    process: FP,
+) -> Result<JobOutput<T>>
+where
+    T: Send,
+    S: Send,
+    FI: Fn(usize) -> Result<S> + Sync,
+    FP: Fn(&mut S, &DataFrame, BatchSlice) -> Result<Vec<T>> + Sync,
+{
+    let executors = executors.max(1);
+    let batch_size = batch_size.max(1);
+    let ranges = df.partition_ranges(executors);
+
+    let mut results: Vec<Option<(usize, Vec<T>)>> = Vec::new();
+    let mut stats = vec![ExecutorStats::default(); executors];
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(executors);
+        for (eid, range) in ranges.into_iter().enumerate() {
+            let init = &init;
+            let process = &process;
+            handles.push(scope.spawn(move || -> Result<(usize, Vec<T>, ExecutorStats)> {
+                let mut state = init(eid)?;
+                let mut out: Vec<T> = Vec::with_capacity(range.len());
+                let mut st = ExecutorStats { executor_id: eid, ..Default::default() };
+                let mut start = range.start;
+                while start < range.end {
+                    let end = (start + batch_size).min(range.end);
+                    let slice = BatchSlice { executor_id: eid, start, end };
+                    let t0 = std::time::Instant::now();
+                    let batch_out = process(&mut state, df, slice)?;
+                    st.busy_secs += t0.elapsed().as_secs_f64();
+                    anyhow::ensure!(
+                        batch_out.len() == slice.len(),
+                        "UDF returned {} rows for a {}-row batch",
+                        batch_out.len(),
+                        slice.len()
+                    );
+                    out.extend(batch_out);
+                    st.rows_processed += slice.len();
+                    st.batches += 1;
+                    start = end;
+                }
+                Ok((range.start, out, st))
+            }));
+        }
+        for h in handles {
+            let (start, out, st) = h.join().expect("executor thread panicked")?;
+            stats[st.executor_id] = st.clone();
+            results.push(Some((start, out)));
+        }
+        Ok(())
+    })?;
+
+    // Reassemble in row order.
+    let mut parts: Vec<(usize, Vec<T>)> = results.into_iter().flatten().collect();
+    parts.sort_by_key(|(start, _)| *start);
+    let mut rows = Vec::with_capacity(df.len());
+    for (_, part) in parts {
+        rows.extend(part);
+    }
+    Ok(JobOutput { rows, executors: stats })
+}
+
+/// Shared progress counter for long jobs (driver-side reporting).
+#[derive(Debug, Default)]
+pub struct Progress {
+    done: AtomicUsize,
+    total: AtomicUsize,
+}
+
+impl Progress {
+    pub fn new(total: usize) -> Self {
+        Self { done: AtomicUsize::new(0), total: AtomicUsize::new(total) }
+    }
+
+    pub fn add(&self, n: usize) {
+        self.done.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn fraction(&self) -> f64 {
+        let total = self.total.load(Ordering::Relaxed);
+        if total == 0 {
+            return 1.0;
+        }
+        self.done.load(Ordering::Relaxed) as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Value;
+    use crate::util::proptest::{check, ensure};
+
+    fn frame(n: usize) -> DataFrame {
+        DataFrame::from_columns(vec![(
+            "x",
+            (0..n as i64).map(Value::Int).collect::<Vec<_>>(),
+        )])
+        .unwrap()
+    }
+
+    #[test]
+    fn results_in_row_order() {
+        let df = frame(103);
+        let out = run_partitioned(
+            &df,
+            7,
+            10,
+            |_eid| Ok(()),
+            |_s, df, slice| {
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap() * 2.0)
+                    .collect())
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rows.len(), 103);
+        for (i, v) in out.rows.iter().enumerate() {
+            assert_eq!(*v, i as f64 * 2.0);
+        }
+    }
+
+    #[test]
+    fn init_called_once_per_executor() {
+        let df = frame(60);
+        let out = run_partitioned(
+            &df,
+            4,
+            5,
+            |eid| Ok((eid, 0usize)),
+            |state, _df, slice| {
+                state.1 += 1;
+                Ok(vec![state.0; slice.len()])
+            },
+        )
+        .unwrap();
+        // Each row is tagged with its executor id; 4 distinct ids, each
+        // covering a contiguous 15-row partition.
+        for eid in 0..4 {
+            let rows: Vec<usize> = out.rows.iter().copied().filter(|&e| e == eid).collect();
+            assert_eq!(rows.len(), 15);
+        }
+        // Telemetry: 3 batches each (15 rows / batch 5).
+        for st in &out.executors {
+            assert_eq!(st.batches, 3);
+            assert_eq!(st.rows_processed, 15);
+        }
+    }
+
+    #[test]
+    fn more_executors_than_rows() {
+        let df = frame(3);
+        let out = run_partitioned(&df, 8, 10, |_| Ok(()), |_, _, s| Ok(vec![1u8; s.len()])).unwrap();
+        assert_eq!(out.rows.len(), 3);
+    }
+
+    #[test]
+    fn empty_frame() {
+        let df = frame(0);
+        let out = run_partitioned(&df, 4, 10, |_| Ok(()), |_, _, s| Ok(vec![0u8; s.len()])).unwrap();
+        assert!(out.rows.is_empty());
+    }
+
+    #[test]
+    fn udf_error_propagates() {
+        let df = frame(10);
+        let r = run_partitioned(
+            &df,
+            2,
+            5,
+            |_| Ok(()),
+            |_, _, slice| {
+                if slice.start >= 5 {
+                    anyhow::bail!("boom");
+                }
+                Ok(vec![0u8; slice.len()])
+            },
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn wrong_output_length_detected() {
+        let df = frame(10);
+        let r = run_partitioned(&df, 1, 10, |_| Ok(()), |_, _, _| Ok(vec![0u8; 3]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn property_cover_disjoint_ordered() {
+        check("partitioned map is identity-preserving", 40, |rng| {
+            let n = rng.below(200);
+            let execs = 1 + rng.below(12);
+            let batch = 1 + rng.below(20);
+            let df = frame(n);
+            let out = run_partitioned(
+                &df,
+                execs,
+                batch,
+                |_| Ok(()),
+                |_, df, slice| {
+                    Ok(slice
+                        .indices()
+                        .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                        .collect())
+                },
+            )
+            .unwrap();
+            ensure(out.rows.len() == n, "length")?;
+            for (i, v) in out.rows.iter().enumerate() {
+                ensure(*v == i as f64, format!("row {i} = {v}"))?;
+            }
+            let total: usize = out.executors.iter().map(|e| e.rows_processed).sum();
+            ensure(total == n, "telemetry sums to n")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn progress_counter() {
+        let p = Progress::new(10);
+        assert_eq!(p.fraction(), 0.0);
+        p.add(5);
+        assert_eq!(p.fraction(), 0.5);
+        let p0 = Progress::new(0);
+        assert_eq!(p0.fraction(), 1.0);
+    }
+}

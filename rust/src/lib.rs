@@ -1,0 +1,37 @@
+//! # spark-llm-eval
+//!
+//! A distributed framework for statistically rigorous large-language-model
+//! evaluation — a full-system reproduction of *"Spark-LLM-Eval: A
+//! Distributed Framework for Statistically Rigorous Large Language Model
+//! Evaluation"* (Mitra, CS.DC 2026) as a three-layer Rust + JAX + Pallas
+//! stack with Python strictly at build time.
+//!
+//! Layer map (see `DESIGN.md`):
+//! - **L3 (this crate)** — the coordinator: data-parallel execution engine,
+//!   per-executor token-bucket rate limiting, multi-provider inference
+//!   abstraction, Delta-Lake-style response cache with replay, four metric
+//!   families, and the integrated statistics stack (bootstrap CIs,
+//!   significance tests, effect sizes).
+//! - **L2 (JAX, build time)** — SimLM encoder + BERTScore + bootstrap
+//!   compute graphs, AOT-lowered to HLO text.
+//! - **L1 (Pallas, build time)** — fused token-similarity max-matching
+//!   kernel for BERTScore.
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT and is the only
+//! bridge between layers at run time.
+
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod metrics;
+pub mod providers;
+pub mod ratelimit;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod template;
+pub mod tracking;
+pub mod util;

@@ -1,0 +1,235 @@
+//! `slleval` — the Spark-LLM-Eval launcher.
+//!
+//! ```text
+//! slleval generate  --n 10000 --seed 42 --out data.jsonl
+//! slleval run       --config task.json [--data data.jsonl | --n 1000]
+//!                   [--cache-dir .slleval-cache] [--track runs/] [--fast]
+//! slleval compare   --config task.json --model-b gpt-4o-mini [--provider-b openai]
+//! slleval replay    --config task.json --cache-dir .slleval-cache
+//! slleval tables    [--table fig2|tab3|tab4|tab5|tab6|typei|all]
+//! slleval sim       --executors 8 --n 10000 [--rpm 10000]
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use spark_llm_eval::config::{CachePolicy, EvalTask};
+use spark_llm_eval::coordinator::{compare_results, EvalRunner};
+use spark_llm_eval::data::{io as dio, synth, DataFrame};
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+use spark_llm_eval::report;
+use spark_llm_eval::report::tables;
+use spark_llm_eval::runtime::{default_artifact_dir, SemanticRuntime};
+use spark_llm_eval::sim::{simulate, SimParams};
+use spark_llm_eval::tracking::TrackingStore;
+use spark_llm_eval::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("generate") => cmd_generate(args),
+        Some("run") => cmd_run(args),
+        Some("compare") => cmd_compare(args),
+        Some("replay") => cmd_replay(args),
+        Some("tables") => cmd_tables(args),
+        Some("sim") => cmd_sim(args),
+        Some(other) => bail!("unknown subcommand '{other}' (try: generate, run, compare, replay, tables, sim)"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!("slleval — distributed, statistically rigorous LLM evaluation");
+    println!("subcommands: generate | run | compare | replay | tables | sim");
+    println!("see README.md for full usage");
+}
+
+fn load_or_generate_data(args: &Args) -> Result<DataFrame> {
+    if let Some(path) = args.get("data") {
+        dio::read_jsonl(Path::new(path)).context("loading --data")
+    } else {
+        let n = args.get_usize("n", 1000);
+        let seed = args.get_usize("seed", 42) as u64;
+        Ok(synth::generate_default(n, seed))
+    }
+}
+
+fn load_task(args: &Args) -> Result<EvalTask> {
+    match args.get("config") {
+        Some(path) => EvalTask::from_file(Path::new(path)),
+        None => {
+            let mut task = EvalTask::default();
+            if let Some(m) = args.get("model") {
+                task.model.model_name = m.to_string();
+            }
+            if let Some(p) = args.get("provider") {
+                task.model.provider = p.to_string();
+            }
+            task.executors = args.get_usize("executors", task.executors);
+            Ok(task)
+        }
+    }
+}
+
+/// Build a runner: `--fast` uses a virtual clock and skips latency sleeps
+/// (simulation mode); otherwise wall-clock with simulated latencies.
+fn build_runner(args: &Args, policy: CachePolicy) -> Result<EvalRunner> {
+    let mut runner = if args.has_flag("fast") {
+        let mut r = EvalRunner::with_clock(VirtualClock::new());
+        r.service_config = SimServiceConfig { sleep_latency: false, ..Default::default() };
+        r
+    } else {
+        EvalRunner::new()
+    };
+    if let Some(dir) = args.get("cache-dir") {
+        runner.open_cache(Path::new(dir), policy)?;
+    }
+    // Load the PJRT runtime when artifacts exist (semantic metrics).
+    let artifacts = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    if artifacts.join("manifest.json").exists() {
+        runner.runtime = Some(SemanticRuntime::load(&artifacts)?);
+    }
+    Ok(runner)
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 10_000);
+    let seed = args.get_usize("seed", 42) as u64;
+    let out = args.get_or("out", "data.jsonl");
+    let df = synth::generate_default(n, seed);
+    dio::write_jsonl(&df, Path::new(out))?;
+    println!("wrote {n} examples to {out}");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let task = load_task(args)?;
+    let df = load_or_generate_data(args)?;
+    let runner = build_runner(args, task.inference.cache_policy)?;
+    let result = runner.evaluate(&df, &task)?;
+    println!("{}", report::eval_summary(&result));
+
+    if let Some(track_dir) = args.get("track") {
+        let store = TrackingStore::open(Path::new(track_dir))?;
+        let mut run = store.start_run(&task.task_id)?;
+        run.log_evaluation(&task, &result)?;
+        let run_id = run.run_id.clone();
+        run.finish()?;
+        println!("tracked as run {run_id} in {track_dir}");
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, result.to_json().to_pretty())?;
+        println!("result JSON written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let task_a = load_task(args)?;
+    let mut task_b = task_a.clone();
+    task_b.model.model_name = args
+        .get("model-b")
+        .context("--model-b is required for compare")?
+        .to_string();
+    if let Some(p) = args.get("provider-b") {
+        task_b.model.provider = p.to_string();
+    }
+    task_b.task_id = format!("{}-vs-{}", task_a.task_id, task_b.model.model_name);
+
+    let df = load_or_generate_data(args)?;
+    let runner = build_runner(args, task_a.inference.cache_policy)?;
+    let ra = runner.evaluate(&df, &task_a)?;
+    let rb = runner.evaluate(&df, &task_b)?;
+    println!("{}", report::eval_summary(&ra));
+    println!("{}", report::eval_summary(&rb));
+    let cmp = compare_results(&ra, &rb, &task_a)?;
+    println!("{}", report::comparison_summary(&cmp));
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let mut task = load_task(args)?;
+    task.inference.cache_policy = CachePolicy::Replay;
+    let cache_dir = args.get("cache-dir").context("--cache-dir is required for replay")?;
+    let df = load_or_generate_data(args)?;
+    let mut runner = build_runner(args, CachePolicy::Replay)?;
+    runner.open_cache(Path::new(cache_dir), CachePolicy::Replay)?;
+    let result = runner.evaluate(&df, &task)?;
+    println!("{}", report::eval_summary(&result));
+    println!(
+        "replay complete: {} cache hits, 0 API calls, $0.00",
+        result.inference.cache_hits
+    );
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let which = args.get_or("table", "all");
+    let fast = args.has_flag("fast");
+    let run = |name: &str| which == "all" || which == name;
+    if run("fig2") {
+        println!("{}", tables::figure2(if fast { 5_000 } else { 10_000 }).1);
+    }
+    if run("tab3") {
+        println!("{}", tables::table3().1);
+    }
+    if run("tab4") {
+        println!("{}", tables::table4(50_000).1);
+    }
+    if run("tab5") {
+        let (datasets, iters) = if fast { (200, 400) } else { (1000, 1000) };
+        println!("{}", tables::table5(datasets, iters).1);
+    }
+    if run("tab6") {
+        println!("{}", tables::table6().1);
+    }
+    if run("typei") {
+        let n = if fast { 1000 } else { 10_000 };
+        println!("{}", tables::type_i_error(n, 100).1);
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let p = SimParams {
+        n_examples: args.get_usize("n", 10_000),
+        executors: args.get_usize("executors", 8),
+        concurrency: args.get_usize("concurrency", 8),
+        global_rpm: args.get_f64("rpm", 10_000.0),
+        global_tpm: args.get_f64("tpm", 2_000_000.0),
+        cache_hit_rate: args.get_f64("hit-rate", 0.0),
+        ..Default::default()
+    };
+    let out = simulate(&p, spark_llm_eval::providers::pricing::lookup("openai", "gpt-4o"));
+    println!(
+        "{} examples, {} executors -> {:.0} examples/min, total {:.1}s",
+        p.n_examples, p.executors, out.throughput_per_min, out.total_secs
+    );
+    println!(
+        "latency p50 {:.0}ms p99 {:.0}ms | api calls {} | cost ${:.2} | rate-wait {:.0}%",
+        out.latency_p50_ms,
+        out.latency_p99_ms,
+        out.api_calls,
+        out.cost_usd,
+        out.rate_wait_frac * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,230 @@
+//! LLM-as-judge metrics (paper §4.1, §A.3): pointwise rubric grading and
+//! pairwise comparison. Judge prompts follow a structured format (after
+//! Zheng et al. 2023) requesting a numeric score and explanation; scores
+//! are extracted by regex, and unparseable responses are logged, excluded
+//! from aggregation, and counted.
+
+use super::Example;
+use crate::providers::{InferenceEngine, InferenceRequest};
+use regex::Regex;
+
+/// Build the pointwise judge prompt. The `### SLLEVAL-JUDGE-POINTWISE`
+/// sentinel is part of the template structure the simulated judge (and a
+//  real judge prompt) keys on.
+pub fn pointwise_prompt(rubric: &str, ex: &Example) -> String {
+    format!(
+        "### SLLEVAL-JUDGE-POINTWISE\n\
+         You are an impartial judge. Rate the candidate response on the\n\
+         rubric below with an integer score from 1 to 5, then explain.\n\
+         Rubric: {rubric}\n\
+         ### QUESTION\n{q}\n\
+         ### CANDIDATE\n{c}\n\
+         ### REFERENCE\n{r}\n\
+         ### END\n\
+         Respond exactly as:\nScore: <1-5>\nExplanation: <why>",
+        q = ex.question,
+        c = ex.response,
+        r = ex.reference,
+    )
+}
+
+/// Build the pairwise comparison prompt (A = response_a, B = response_b).
+pub fn pairwise_prompt(rubric: &str, question: &str, a: &str, b: &str, reference: &str) -> String {
+    format!(
+        "### SLLEVAL-JUDGE-PAIRWISE\n\
+         You are an impartial judge. Decide which response better satisfies\n\
+         the rubric. Answer with Verdict: A or Verdict: B.\n\
+         Rubric: {rubric}\n\
+         ### QUESTION\n{question}\n\
+         ### RESPONSE-A\n{a}\n\
+         ### RESPONSE-B\n{b}\n\
+         ### REFERENCE\n{reference}\n\
+         ### END",
+    )
+}
+
+/// Extract `Score: N` (1–5). Returns None when unparseable.
+pub fn parse_score(text: &str) -> Option<f64> {
+    // Primary pattern, then a looser fallback ("4/5", "score of 3").
+    static PATTERNS: &[&str] = &[
+        r"(?i)score\s*[:=]\s*([1-5])\b",
+        r"\b([1-5])\s*/\s*5\b",
+        r"(?i)score of\s*([1-5])\b",
+    ];
+    for pat in PATTERNS {
+        let re = Regex::new(pat).unwrap();
+        if let Some(cap) = re.captures(text) {
+            if let Ok(v) = cap[1].parse::<f64>() {
+                return Some(v);
+            }
+        }
+    }
+    None
+}
+
+/// Extract `Verdict: A|B` from a pairwise judge response.
+pub fn parse_verdict(text: &str) -> Option<char> {
+    let re = Regex::new(r"(?i)verdict\s*[:=]\s*([AB])\b").unwrap();
+    re.captures(text).map(|c| c[1].to_uppercase().chars().next().unwrap())
+}
+
+/// Outcome of a pointwise judging pass.
+#[derive(Debug, Clone)]
+pub struct JudgeOutcome {
+    pub scores: Vec<Option<f64>>,
+    pub unparseable: usize,
+    /// (example index, raw response) of unparseable outputs, for review.
+    pub unparseable_log: Vec<(usize, String)>,
+    pub failed_calls: usize,
+}
+
+/// Grade each example with the judge engine (sequential; the coordinator
+/// parallelizes across executors when the judge runs distributed).
+pub fn grade_pointwise(
+    engine: &mut dyn InferenceEngine,
+    rubric: &str,
+    examples: &[Example],
+    max_tokens: usize,
+) -> JudgeOutcome {
+    let mut scores = Vec::with_capacity(examples.len());
+    let mut unparseable = 0;
+    let mut unparseable_log = Vec::new();
+    let mut failed_calls = 0;
+    for (i, ex) in examples.iter().enumerate() {
+        let mut req = InferenceRequest::new(pointwise_prompt(rubric, ex));
+        req.max_tokens = max_tokens;
+        match engine.infer(&req) {
+            Ok(resp) => match parse_score(&resp.text) {
+                Some(s) => scores.push(Some(s)),
+                None => {
+                    unparseable += 1;
+                    unparseable_log.push((i, resp.text));
+                    scores.push(None);
+                }
+            },
+            Err(_) => {
+                failed_calls += 1;
+                scores.push(None);
+            }
+        }
+    }
+    JudgeOutcome { scores, unparseable, unparseable_log, failed_calls }
+}
+
+/// Pairwise comparison outcome: +1 = A wins, -1 = B wins, None unparseable.
+pub fn compare_pairwise(
+    engine: &mut dyn InferenceEngine,
+    rubric: &str,
+    question: &str,
+    response_a: &str,
+    response_b: &str,
+    reference: &str,
+) -> Option<i32> {
+    let req = InferenceRequest::new(pairwise_prompt(rubric, question, response_a, response_b, reference));
+    match engine.infer(&req) {
+        Ok(resp) => parse_verdict(&resp.text).map(|v| if v == 'A' { 1 } else { -1 }),
+        Err(_) => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::providers::simulated::{SimEngine, SimService, SimServiceConfig};
+    use crate::ratelimit::VirtualClock;
+
+    #[test]
+    fn parse_score_patterns() {
+        assert_eq!(parse_score("Score: 4\nExplanation: good"), Some(4.0));
+        assert_eq!(parse_score("score = 2"), Some(2.0));
+        assert_eq!(parse_score("I'd give it 3/5 overall"), Some(3.0));
+        assert_eq!(parse_score("a score of 5 seems right"), Some(5.0));
+        assert_eq!(parse_score("this is quite good"), None);
+        assert_eq!(parse_score("Score: 9"), None); // out of rubric range
+    }
+
+    #[test]
+    fn parse_verdict_patterns() {
+        assert_eq!(parse_verdict("Verdict: A\nbecause..."), Some('A'));
+        assert_eq!(parse_verdict("verdict = b"), Some('B'));
+        assert_eq!(parse_verdict("both are fine"), None);
+    }
+
+    fn judge_engine(unparseable_rate: f64) -> SimEngine {
+        let clock = VirtualClock::new();
+        let svc = SimService::new(
+            "openai",
+            SimServiceConfig {
+                server_error_rate: 0.0,
+                unparseable_rate,
+                sleep_latency: false,
+                ..Default::default()
+            },
+            clock.clone(),
+        );
+        let mut e = SimEngine::new(svc, "openai", "gpt-4o", clock).unwrap();
+        e.initialize().unwrap();
+        e
+    }
+
+    fn ex(response: &str, reference: &str) -> Example {
+        Example {
+            question: "what is the capital of france?".into(),
+            response: response.into(),
+            reference: reference.into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grading_correlates_with_quality() {
+        let mut engine = judge_engine(0.0);
+        let good = vec![ex("paris", "paris"); 5];
+        let bad = vec![ex("completely wrong rambling answer", "paris"); 5];
+        let g = grade_pointwise(&mut engine, "helpfulness", &good, 256);
+        let b = grade_pointwise(&mut engine, "helpfulness", &bad, 256);
+        let gm: f64 = g.scores.iter().flatten().sum::<f64>() / g.scores.len() as f64;
+        let bm: f64 = b.scores.iter().flatten().sum::<f64>() / b.scores.len() as f64;
+        assert!(gm > bm + 1.0, "good {gm} bad {bm}");
+        assert_eq!(g.unparseable, 0);
+    }
+
+    #[test]
+    fn unparseable_tracked() {
+        let mut engine = judge_engine(0.5);
+        // Distinct examples so the per-prompt corruption draw varies.
+        let examples: Vec<Example> = (0..60)
+            .map(|i| ex(&format!("answer variant {i}"), "reference"))
+            .collect();
+        let out = grade_pointwise(&mut engine, "helpfulness", &examples, 256);
+        assert!(out.unparseable > 10, "unparseable {}", out.unparseable);
+        assert_eq!(out.unparseable_log.len(), out.unparseable);
+        assert_eq!(
+            out.scores.iter().filter(|s| s.is_none()).count(),
+            out.unparseable + out.failed_calls
+        );
+    }
+
+    #[test]
+    fn pairwise_prefers_better() {
+        let mut engine = judge_engine(0.0);
+        let v = compare_pairwise(
+            &mut engine,
+            "accuracy",
+            "what is the capital of france?",
+            "paris",
+            "rome",
+            "paris",
+        );
+        assert_eq!(v, Some(1));
+        let v = compare_pairwise(
+            &mut engine,
+            "accuracy",
+            "what is the capital of france?",
+            "rome",
+            "paris",
+            "paris",
+        );
+        assert_eq!(v, Some(-1));
+    }
+}

@@ -1,0 +1,396 @@
+//! Lexical metrics (paper §4.1): exact match, token F1, BLEU, ROUGE-L,
+//! contains. Pure string functions, safe to run inside executor threads.
+
+/// Normalization options for string comparison (paper: "optionally with
+/// normalization — lowercasing, punctuation removal").
+#[derive(Debug, Clone, Copy)]
+pub struct Normalize {
+    pub lowercase: bool,
+    pub strip_punct: bool,
+    pub collapse_ws: bool,
+}
+
+impl Default for Normalize {
+    fn default() -> Self {
+        Self { lowercase: true, strip_punct: true, collapse_ws: true }
+    }
+}
+
+impl Normalize {
+    pub fn none() -> Self {
+        Self { lowercase: false, strip_punct: false, collapse_ws: false }
+    }
+
+    pub fn apply(&self, s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            let c = if self.lowercase { c.to_ascii_lowercase() } else { c };
+            if self.strip_punct && !c.is_alphanumeric() && !c.is_whitespace() {
+                continue;
+            }
+            out.push(c);
+        }
+        if self.collapse_ws {
+            out.split_whitespace().collect::<Vec<_>>().join(" ")
+        } else {
+            out
+        }
+    }
+}
+
+pub fn tokenize(s: &str) -> Vec<String> {
+    s.split(|c: char| !c.is_alphanumeric())
+        .filter(|w| !w.is_empty())
+        .map(|w| w.to_lowercase())
+        .collect()
+}
+
+/// Exact match after normalization → 0/1.
+///
+/// Allocation-free: compares the normalized streams lazily instead of
+/// materializing two Strings (§Perf).
+pub fn exact_match(candidate: &str, reference: &str, norm: Normalize) -> f64 {
+    eq_normalized(candidate, reference, norm) as i64 as f64
+}
+
+/// Equality under `Normalize::apply` semantics without allocation.
+fn eq_normalized(a: &str, b: &str, norm: Normalize) -> bool {
+    let kept = |c: char| -> Option<char> {
+        let c = if norm.lowercase { c.to_ascii_lowercase() } else { c };
+        if norm.strip_punct && !c.is_alphanumeric() && !c.is_whitespace() {
+            None
+        } else {
+            Some(c)
+        }
+    };
+    if !norm.collapse_ws {
+        // Plain filtered-character comparison.
+        return a.chars().filter_map(kept).eq(b.chars().filter_map(kept));
+    }
+    // collapse_ws: the normalized form is the sequence of non-empty
+    // filtered whitespace-tokens joined by single spaces — compare the
+    // token sequences directly.
+    let mut ta = a
+        .split_whitespace()
+        .map(|t| t.chars().filter_map(kept))
+        .filter(|it| it.clone().next().is_some());
+    let mut tb = b
+        .split_whitespace()
+        .map(|t| t.chars().filter_map(kept))
+        .filter(|it| it.clone().next().is_some());
+    loop {
+        match (ta.next(), tb.next()) {
+            (None, None) => return true,
+            (Some(x), Some(y)) => {
+                if !x.eq(y) {
+                    return false;
+                }
+            }
+            _ => return false,
+        }
+    }
+}
+
+/// Substring containment (reference inside candidate) → 0/1.
+pub fn contains(candidate: &str, reference: &str, norm: Normalize) -> f64 {
+    norm.apply(candidate).contains(&norm.apply(reference)) as i64 as f64
+}
+
+/// Token-level F1 (SQuAD-style, paper cites Rajpurkar et al. 2016).
+///
+/// Tokens are compared by case-folded FNV hash — no per-token String
+/// allocation (§Perf).
+pub fn token_f1(candidate: &str, reference: &str) -> f64 {
+    let mut counts: std::collections::HashMap<u64, i64> = std::collections::HashMap::new();
+    let mut n_ref = 0usize;
+    for h in token_hashes(reference) {
+        *counts.entry(h).or_insert(0) += 1;
+        n_ref += 1;
+    }
+    let mut n_cand = 0usize;
+    let mut common = 0i64;
+    for h in token_hashes(candidate) {
+        n_cand += 1;
+        if let Some(c) = counts.get_mut(&h) {
+            if *c > 0 {
+                *c -= 1;
+                common += 1;
+            }
+        }
+    }
+    if n_cand == 0 && n_ref == 0 {
+        return 1.0;
+    }
+    if common == 0 {
+        return 0.0;
+    }
+    let p = common as f64 / n_cand as f64;
+    let r = common as f64 / n_ref as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// Case-folded FNV hash per alphanumeric token, allocation-free.
+fn token_hashes(s: &str) -> impl Iterator<Item = u64> + '_ {
+    s.split(|c: char| !c.is_alphanumeric()).filter(|w| !w.is_empty()).map(|w| {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in w.bytes() {
+            h ^= b.to_ascii_lowercase() as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    })
+}
+
+/// Sentence BLEU with up to 4-gram precision, brevity penalty, and +1
+/// smoothing on higher-order n-grams (Lin & Och smoothing method 1 — the
+/// standard for sentence-level BLEU).
+pub fn bleu(candidate: &str, reference: &str) -> f64 {
+    bleu_n(candidate, reference, 4)
+}
+
+pub fn bleu_n(candidate: &str, reference: &str, max_n: usize) -> f64 {
+    let ct = tokenize(candidate);
+    let rt = tokenize(reference);
+    if ct.is_empty() || rt.is_empty() {
+        return 0.0;
+    }
+    let max_n = max_n.min(ct.len()).max(1);
+
+    // Hash tokens once; n-grams become rolling 64-bit combinations of the
+    // token hashes (no per-ngram Vec/String allocation — §Perf: 3.4x).
+    let ch: Vec<u64> = ct.iter().map(|t| fnv64(t)).collect();
+    let rh: Vec<u64> = rt.iter().map(|t| fnv64(t)).collect();
+
+    let mut log_sum = 0.0;
+    let mut c_counts: std::collections::HashMap<u64, i64> = std::collections::HashMap::new();
+    let mut r_counts: std::collections::HashMap<u64, i64> = std::collections::HashMap::new();
+    for n in 1..=max_n {
+        c_counts.clear();
+        r_counts.clear();
+        ngram_hash_counts(&ch, n, &mut c_counts);
+        ngram_hash_counts(&rh, n, &mut r_counts);
+        let total: i64 = c_counts.values().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut matched = 0i64;
+        for (g, &c) in &c_counts {
+            if let Some(&r) = r_counts.get(g) {
+                matched += c.min(r);
+            }
+        }
+        // Smoothing: add 1 to numerator and denominator for n > 1.
+        let (num, den) = if n == 1 {
+            (matched as f64, total as f64)
+        } else {
+            (matched as f64 + 1.0, total as f64 + 1.0)
+        };
+        if num == 0.0 {
+            return 0.0;
+        }
+        log_sum += (num / den).ln() / max_n as f64;
+    }
+    let bp = if ct.len() >= rt.len() {
+        1.0
+    } else {
+        (1.0 - rt.len() as f64 / ct.len() as f64).exp()
+    };
+    (bp * log_sum.exp()).clamp(0.0, 1.0)
+}
+
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Combine token hashes of each n-window into one key (order-sensitive).
+fn ngram_hash_counts(hashes: &[u64], n: usize, out: &mut std::collections::HashMap<u64, i64>) {
+    if hashes.len() < n {
+        return;
+    }
+    for window in hashes.windows(n) {
+        let mut key: u64 = 0x9e3779b97f4a7c15;
+        for &h in window {
+            key = key.rotate_left(17) ^ h.wrapping_mul(0xff51afd7ed558ccd);
+        }
+        *out.entry(key).or_insert(0) += 1;
+    }
+}
+
+/// ROUGE-L: LCS-based F1 (paper cites Lin 2004). Uses the standard
+/// beta → ∞-free F-measure with beta = 1.
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let ct = tokenize(candidate);
+    let rt = tokenize(reference);
+    if ct.is_empty() || rt.is_empty() {
+        return if ct.is_empty() && rt.is_empty() { 1.0 } else { 0.0 };
+    }
+    let lcs = lcs_len(&ct, &rt) as f64;
+    if lcs == 0.0 {
+        return 0.0;
+    }
+    let p = lcs / ct.len() as f64;
+    let r = lcs / rt.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// LCS length, O(min) memory rolling rows.
+fn lcs_len(a: &[String], b: &[String]) -> usize {
+    let (short, long) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    let mut prev = vec![0usize; short.len() + 1];
+    let mut cur = vec![0usize; short.len() + 1];
+    for item_long in long {
+        for (j, item_short) in short.iter().enumerate() {
+            cur[j + 1] = if item_long == item_short {
+                prev[j] + 1
+            } else {
+                prev[j + 1].max(cur[j])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[short.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match_normalization() {
+        assert_eq!(exact_match("Paris!", "paris", Normalize::default()), 1.0);
+        assert_eq!(exact_match("Paris!", "paris", Normalize::none()), 0.0);
+        assert_eq!(exact_match("  new   york ", "New York.", Normalize::default()), 1.0);
+        assert_eq!(exact_match("london", "paris", Normalize::default()), 0.0);
+    }
+
+    #[test]
+    fn contains_behaviour() {
+        assert_eq!(contains("the capital is paris, france", "paris", Normalize::default()), 1.0);
+        assert_eq!(contains("the capital is lyon", "paris", Normalize::default()), 0.0);
+    }
+
+    #[test]
+    fn token_f1_squad_style() {
+        assert_eq!(token_f1("paris", "paris"), 1.0);
+        assert_eq!(token_f1("", ""), 1.0);
+        assert_eq!(token_f1("x", ""), 0.0);
+        // Half overlap: candidate "a b", reference "a c" → P=R=0.5 → F1=0.5.
+        assert!((token_f1("a b", "a c") - 0.5).abs() < 1e-12);
+        // Order-insensitive.
+        assert_eq!(token_f1("york new", "new york"), 1.0);
+    }
+
+    #[test]
+    fn token_f1_with_duplicates() {
+        // candidate "a a b", ref "a b b": common = min counts = a:1, b:1 = 2
+        // P = 2/3, R = 2/3 → F1 = 2/3.
+        assert!((token_f1("a a b", "a b b") - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bleu_identity_and_disjoint() {
+        assert!((bleu("the quick brown fox jumps", "the quick brown fox jumps") - 1.0).abs() < 1e-9);
+        assert_eq!(bleu("alpha beta gamma", "delta epsilon zeta"), 0.0);
+        assert_eq!(bleu("", "x"), 0.0);
+    }
+
+    #[test]
+    fn bleu_partial_ordering() {
+        let reference = "the cat sat on the mat";
+        let good = bleu("the cat sat on a mat", reference);
+        let bad = bleu("a dog stood near some grass", reference);
+        assert!(good > bad, "good {good} bad {bad}");
+        assert!(good > 0.1 && good < 1.0);
+    }
+
+    #[test]
+    fn bleu_brevity_penalty() {
+        let reference = "the cat sat on the mat quietly today";
+        let full = bleu("the cat sat on the mat quietly today", reference);
+        let short = bleu("the cat", reference);
+        assert!(short < full * 0.5, "short {short} full {full}");
+    }
+
+    #[test]
+    fn rouge_l_known() {
+        // candidate "the cat sat", reference "the cat on the mat":
+        // LCS = "the cat" (2) → P = 2/3, R = 2/5 → F1 = 0.5.
+        let v = rouge_l("the cat sat", "the cat on the mat");
+        assert!((v - 0.5).abs() < 1e-12, "rouge {v}");
+        assert_eq!(rouge_l("same words here", "same words here"), 1.0);
+        assert_eq!(rouge_l("abc", "xyz"), 0.0);
+    }
+
+    #[test]
+    fn rouge_l_subsequence_not_substring() {
+        // LCS respects order but allows gaps.
+        let v = rouge_l("a x b y c", "a b c");
+        // LCS = a b c = 3 → P = 3/5, R = 1 → F1 = 0.75.
+        assert!((v - 0.75).abs() < 1e-12, "rouge {v}");
+    }
+
+    #[test]
+    fn streaming_equality_matches_apply() {
+        // The allocation-free comparator must agree with the reference
+        // Normalize::apply implementation on tricky inputs.
+        use crate::util::proptest::{check, ensure, gen};
+        let cases = [
+            ("a!b", "a b"),
+            ("a ! b", "a  b"),
+            ("...", ""),
+            ("  x  ", "x"),
+            ("Hello, World!", "hello world"),
+            ("tab\there", "tab here"),
+            ("", ""),
+            ("!.,", "  "),
+        ];
+        for norm in [Normalize::default(), Normalize::none(),
+                     Normalize { lowercase: true, strip_punct: false, collapse_ws: true }] {
+            for (a, b) in cases {
+                let reference = (norm.apply(a) == norm.apply(b)) as i64 as f64;
+                assert_eq!(
+                    exact_match(a, b, norm),
+                    reference,
+                    "({a:?}, {b:?}) under {norm:?}"
+                );
+            }
+        }
+        check("streaming equality == apply equality", 300, |rng| {
+            let a = gen::sentence(rng, 6).replace(' ', if rng.chance(0.3) { "  " } else { " " });
+            let b = if rng.chance(0.5) { a.clone() } else { gen::sentence(rng, 6) };
+            let a = if rng.chance(0.3) { format!("{a}!") } else { a };
+            let norm = Normalize::default();
+            ensure(
+                exact_match(&a, &b, norm) == ((norm.apply(&a) == norm.apply(&b)) as i64 as f64),
+                format!("mismatch on ({a:?}, {b:?})"),
+            )
+        });
+    }
+
+    #[test]
+    fn all_metrics_bounded() {
+        let cases = [
+            ("", ""),
+            ("a", ""),
+            ("", "b"),
+            ("hello world", "hello there world"),
+            ("x y z w", "w z y x"),
+        ];
+        for (c, r) in cases {
+            for v in [
+                exact_match(c, r, Normalize::default()),
+                contains(c, r, Normalize::default()),
+                token_f1(c, r),
+                bleu(c, r),
+                rouge_l(c, r),
+            ] {
+                assert!((0.0..=1.0).contains(&v), "({c:?},{r:?}) -> {v}");
+            }
+        }
+    }
+}

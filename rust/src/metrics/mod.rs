@@ -1,0 +1,127 @@
+//! Metric taxonomy (paper §4.1): lexical, semantic, LLM-as-judge, and RAG
+//! metrics, behind a common per-example interface.
+//!
+//! - Lexical metrics are pure string functions, computed inside the
+//!   engine's distributed metric stage.
+//! - Semantic metrics batch through the PJRT runtime (SimLM embeddings /
+//!   the Pallas BERTScore kernel) on the driver.
+//! - Judge and RAG metrics issue additional LLM calls through the same
+//!   inference infrastructure (and therefore the same cache) as the main
+//!   evaluation.
+
+pub mod judge;
+pub mod trajectory;
+pub mod lexical;
+pub mod rag;
+pub mod semantic;
+
+use crate::config::MetricConfig;
+use crate::stats::MetricScale;
+use anyhow::{bail, Result};
+
+/// Everything a metric may need about one example.
+#[derive(Debug, Clone, Default)]
+pub struct Example {
+    pub prompt: String,
+    pub response: String,
+    pub reference: String,
+    pub question: String,
+    pub context: Vec<String>,
+    /// Rank of the gold context chunk (-1 = no context / unknown).
+    pub gold_position: i64,
+}
+
+/// Per-metric result over a set of examples. `None` marks an example the
+/// metric could not score (failed inference, unparseable judge output);
+/// these are excluded from aggregation and counted (paper §A.3).
+#[derive(Debug, Clone)]
+pub struct MetricReport {
+    pub name: String,
+    pub values: Vec<Option<f64>>,
+    pub scale: MetricScale,
+    /// Unparseable judge responses (subset of the `None`s).
+    pub unparseable: usize,
+}
+
+impl MetricReport {
+    /// The scored values (Nones dropped).
+    pub fn scored(&self) -> Vec<f64> {
+        self.values.iter().filter_map(|v| *v).collect()
+    }
+
+    pub fn n_scored(&self) -> usize {
+        self.values.iter().filter(|v| v.is_some()).count()
+    }
+
+    pub fn n_failed(&self) -> usize {
+        self.values.len() - self.n_scored()
+    }
+}
+
+/// Declared scale for a registry metric name (drives Table 2 selection).
+pub fn metric_scale(name: &str) -> MetricScale {
+    match name {
+        "exact_match" | "contains" => MetricScale::Binary,
+        "token_f1" | "bleu" | "rouge_l" | "embedding_similarity" | "bertscore"
+        | "answer_relevance" | "context_precision" | "context_recall" | "faithfulness"
+        | "context_relevance" => MetricScale::Continuous,
+        name if name.starts_with("judge:") => MetricScale::Ordinal,
+        _ => MetricScale::Complex,
+    }
+}
+
+/// Validate that a metric config names a known metric for its family.
+pub fn validate_metric(config: &MetricConfig) -> Result<()> {
+    let known_lexical = ["exact_match", "token_f1", "bleu", "rouge_l", "contains"];
+    let known_semantic = ["embedding_similarity", "bertscore"];
+    let known_rag = [
+        "faithfulness",
+        "context_relevance",
+        "answer_relevance",
+        "context_precision",
+        "context_recall",
+    ];
+    match config.metric_type.as_str() {
+        "lexical" if known_lexical.contains(&config.name.as_str()) => Ok(()),
+        "semantic" if known_semantic.contains(&config.name.as_str()) => Ok(()),
+        "llm_judge" => Ok(()), // any name; rubric comes from params
+        "rag" if known_rag.contains(&config.name.as_str()) => Ok(()),
+        t => bail!("unknown metric '{}' for type '{t}'", config.name),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales() {
+        assert_eq!(metric_scale("exact_match"), MetricScale::Binary);
+        assert_eq!(metric_scale("bleu"), MetricScale::Continuous);
+        assert_eq!(metric_scale("judge:helpfulness"), MetricScale::Ordinal);
+        assert_eq!(metric_scale("custom_thing"), MetricScale::Complex);
+    }
+
+    #[test]
+    fn report_accounting() {
+        let r = MetricReport {
+            name: "m".into(),
+            values: vec![Some(1.0), None, Some(0.0)],
+            scale: MetricScale::Binary,
+            unparseable: 1,
+        };
+        assert_eq!(r.scored(), vec![1.0, 0.0]);
+        assert_eq!(r.n_scored(), 2);
+        assert_eq!(r.n_failed(), 1);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(validate_metric(&MetricConfig::new("exact_match", "lexical")).is_ok());
+        assert!(validate_metric(&MetricConfig::new("bertscore", "semantic")).is_ok());
+        assert!(validate_metric(&MetricConfig::new("helpfulness", "llm_judge")).is_ok());
+        assert!(validate_metric(&MetricConfig::new("faithfulness", "rag")).is_ok());
+        assert!(validate_metric(&MetricConfig::new("bogus", "lexical")).is_err());
+        assert!(validate_metric(&MetricConfig::new("exact_match", "semantic")).is_err());
+    }
+}

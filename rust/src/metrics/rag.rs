@@ -1,0 +1,222 @@
+//! RAG metrics (paper §4.1, after the RAGAS framework):
+//!
+//! - **Faithfulness** — split the answer into claims, ask the judge to
+//!   verify each against the retrieved context; score = supported/total.
+//! - **Context relevance** — judge-scored relevance of the retrieved
+//!   context to the question (rubric 1–5 normalized to [0,1]).
+//! - **Answer relevance** — embedding similarity question↔answer
+//!   (implemented in [`super::semantic`]).
+//! - **Context precision** — rank-weighted position of the gold chunk.
+//! - **Context recall** — fraction of reference tokens covered by the
+//!   context (needs ground truth).
+
+use super::judge::parse_score;
+use super::lexical::tokenize;
+use super::Example;
+use crate::providers::{InferenceEngine, InferenceRequest};
+
+/// Split an answer into claim sentences (simple clause splitter).
+pub fn split_claims(answer: &str) -> Vec<String> {
+    answer
+        .split(['.', ';', '\n'])
+        .map(|s| s.trim())
+        .filter(|s| s.split_whitespace().count() >= 2)
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// Build the claim-verification judge prompt.
+pub fn verify_prompt(claim: &str, context: &str) -> String {
+    format!(
+        "### SLLEVAL-JUDGE-VERIFY\n\
+         Does the context support the claim? Answer Verdict: SUPPORTED or\n\
+         Verdict: UNSUPPORTED.\n\
+         ### CLAIM\n{claim}\n\
+         ### CONTEXT\n{context}\n\
+         ### END",
+    )
+}
+
+/// Faithfulness: fraction of answer claims supported by the context.
+/// Answers with no extractable claims score None (excluded + counted).
+pub fn faithfulness(engine: &mut dyn InferenceEngine, ex: &Example) -> Option<f64> {
+    if ex.context.is_empty() {
+        return None;
+    }
+    let claims = {
+        let c = split_claims(&ex.response);
+        if c.is_empty() {
+            // Short answers ("paris") are a single claim.
+            if ex.response.trim().is_empty() {
+                return None;
+            }
+            vec![ex.response.trim().to_string()]
+        } else {
+            c
+        }
+    };
+    let context = ex.context.join("\n");
+    let mut supported = 0usize;
+    let mut judged = 0usize;
+    for claim in &claims {
+        let req = InferenceRequest::new(verify_prompt(claim, &context));
+        if let Ok(resp) = engine.infer(&req) {
+            judged += 1;
+            if resp.text.to_uppercase().contains("SUPPORTED")
+                && !resp.text.to_uppercase().contains("UNSUPPORTED")
+            {
+                supported += 1;
+            }
+        }
+    }
+    if judged == 0 {
+        None
+    } else {
+        Some(supported as f64 / judged as f64)
+    }
+}
+
+/// Context relevance: judge-scored 1–5 normalized to [0,1].
+pub fn context_relevance(engine: &mut dyn InferenceEngine, ex: &Example) -> Option<f64> {
+    if ex.context.is_empty() {
+        return None;
+    }
+    let prompt = format!(
+        "### SLLEVAL-JUDGE-POINTWISE\n\
+         Rate how relevant the candidate context passage is to the question\n\
+         from 1 (irrelevant) to 5 (directly answers it).\n\
+         Rubric: context relevance\n\
+         ### QUESTION\n{q}\n\
+         ### CANDIDATE\n{c}\n\
+         ### REFERENCE\n{q}\n\
+         ### END\n\
+         Respond exactly as:\nScore: <1-5>",
+        q = ex.question,
+        c = ex.context.join("\n"),
+    );
+    let resp = engine.infer(&InferenceRequest::new(prompt)).ok()?;
+    parse_score(&resp.text).map(|s| (s - 1.0) / 4.0)
+}
+
+/// Context precision: reciprocal-rank weighting of the gold chunk
+/// (1.0 when the relevant chunk is ranked first).
+pub fn context_precision(ex: &Example) -> Option<f64> {
+    if ex.context.is_empty() || ex.gold_position < 0 {
+        return None;
+    }
+    let pos = ex.gold_position as usize;
+    if pos >= ex.context.len() {
+        return Some(0.0);
+    }
+    Some(1.0 / (pos as f64 + 1.0))
+}
+
+/// Context recall: fraction of reference tokens present in the context.
+pub fn context_recall(ex: &Example) -> Option<f64> {
+    if ex.context.is_empty() || ex.reference.is_empty() {
+        return None;
+    }
+    let ref_tokens = tokenize(&ex.reference);
+    if ref_tokens.is_empty() {
+        return None;
+    }
+    let ctx_tokens: std::collections::HashSet<String> =
+        tokenize(&ex.context.join(" ")).into_iter().collect();
+    let covered = ref_tokens.iter().filter(|t| ctx_tokens.contains(*t)).count();
+    Some(covered as f64 / ref_tokens.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::providers::simulated::{SimEngine, SimService, SimServiceConfig};
+    use crate::ratelimit::VirtualClock;
+
+    fn engine() -> SimEngine {
+        let clock = VirtualClock::new();
+        let svc = SimService::new(
+            "openai",
+            SimServiceConfig {
+                server_error_rate: 0.0,
+                unparseable_rate: 0.0,
+                sleep_latency: false,
+                ..Default::default()
+            },
+            clock.clone(),
+        );
+        let mut e = SimEngine::new(svc, "openai", "gpt-4o", clock).unwrap();
+        e.initialize().unwrap();
+        e
+    }
+
+    fn rag_example(response: &str, gold_position: i64) -> Example {
+        Example {
+            question: "what is the capital of france?".into(),
+            response: response.into(),
+            reference: "paris".into(),
+            context: vec![
+                "japan is an island nation; its capital city is tokyo".into(),
+                "france is a european country; its capital city is paris".into(),
+                "brazil is a large country; its capital city is brasilia".into(),
+            ],
+            gold_position,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn split_claims_behaviour() {
+        let claims = split_claims("paris is the capital. it is in france; europe contains it.");
+        assert_eq!(claims.len(), 3);
+        assert!(split_claims("").is_empty());
+    }
+
+    #[test]
+    fn faithfulness_grounded_vs_not() {
+        let mut e = engine();
+        let grounded = rag_example("the capital city is paris, france is a european country", 1);
+        let fabricated = rag_example("the moon is made of swiss cheese entirely", 1);
+        let fg = faithfulness(&mut e, &grounded).unwrap();
+        let ff = faithfulness(&mut e, &fabricated).unwrap();
+        assert!(fg > ff, "grounded {fg} fabricated {ff}");
+        assert!(fg > 0.5);
+    }
+
+    #[test]
+    fn faithfulness_none_without_context() {
+        let mut e = engine();
+        let ex = Example { response: "paris".into(), ..Default::default() };
+        assert!(faithfulness(&mut e, &ex).is_none());
+    }
+
+    #[test]
+    fn context_relevance_scores() {
+        let mut e = engine();
+        let ex = rag_example("paris", 1);
+        let rel = context_relevance(&mut e, &ex).unwrap();
+        assert!((0.0..=1.0).contains(&rel));
+    }
+
+    #[test]
+    fn context_precision_rank_weighting() {
+        assert_eq!(context_precision(&rag_example("x", 0)), Some(1.0));
+        assert_eq!(context_precision(&rag_example("x", 1)), Some(0.5));
+        assert_eq!(context_precision(&rag_example("x", 2)), Some(1.0 / 3.0));
+        assert_eq!(context_precision(&rag_example("x", -1)), None);
+        // Out-of-range gold position scores 0, not a crash.
+        assert_eq!(context_precision(&rag_example("x", 99)), Some(0.0));
+    }
+
+    #[test]
+    fn context_recall_coverage() {
+        let ex = rag_example("whatever", 1);
+        // "paris" appears in the context → full recall of the 1-token ref.
+        assert_eq!(context_recall(&ex), Some(1.0));
+        let mut ex2 = rag_example("whatever", 1);
+        ex2.reference = "paris unknownword".into();
+        assert_eq!(context_recall(&ex2), Some(0.5));
+        let mut ex3 = rag_example("whatever", 1);
+        ex3.context.clear();
+        assert_eq!(context_recall(&ex3), None);
+    }
+}

@@ -1,0 +1,138 @@
+//! Semantic metrics (paper §4.1): embedding cosine similarity and
+//! BERTScore, computed through the PJRT artifacts (SimLM encoder + the L1
+//! Pallas max-matching kernel). Batched on the driver — PJRT handles are
+//! not `Send`.
+
+use super::Example;
+use crate::runtime::SemanticRuntime;
+use anyhow::Result;
+
+/// Cosine similarity between pooled embeddings of response and reference.
+pub fn embedding_similarity_batch(
+    runtime: &SemanticRuntime,
+    examples: &[Example],
+) -> Result<Vec<Option<f64>>> {
+    if examples.is_empty() {
+        return Ok(vec![]);
+    }
+    // One interleaved embed pass: [resp0, ref0, resp1, ref1, ...] halves
+    // the number of PJRT batches vs two separate passes.
+    let mut texts: Vec<&str> = Vec::with_capacity(examples.len() * 2);
+    for ex in examples {
+        texts.push(&ex.response);
+        texts.push(&ex.reference);
+    }
+    let embs = runtime.embed_texts(&texts)?;
+    Ok((0..examples.len())
+        .map(|i| {
+            let cos = SemanticRuntime::cosine(&embs[2 * i], &embs[2 * i + 1]) as f64;
+            Some(cos.clamp(-1.0, 1.0))
+        })
+        .collect())
+}
+
+/// BERTScore F1 between response and reference (the L1 kernel path).
+pub fn bertscore_batch(
+    runtime: &SemanticRuntime,
+    examples: &[Example],
+) -> Result<Vec<Option<f64>>> {
+    if examples.is_empty() {
+        return Ok(vec![]);
+    }
+    let pairs: Vec<(&str, &str)> = examples
+        .iter()
+        .map(|ex| (ex.response.as_str(), ex.reference.as_str()))
+        .collect();
+    let scores = runtime.bertscore_texts(&pairs)?;
+    Ok(scores.into_iter().map(|s| Some(s.f1 as f64)).collect())
+}
+
+/// Answer relevance (RAG family, but embedding-based per the paper §4.1:
+/// "computed via embedding similarity between question and answer").
+pub fn answer_relevance_batch(
+    runtime: &SemanticRuntime,
+    examples: &[Example],
+) -> Result<Vec<Option<f64>>> {
+    if examples.is_empty() {
+        return Ok(vec![]);
+    }
+    let mut texts: Vec<&str> = Vec::with_capacity(examples.len() * 2);
+    for ex in examples {
+        texts.push(&ex.response);
+        texts.push(&ex.question);
+    }
+    let embs = runtime.embed_texts(&texts)?;
+    Ok((0..examples.len())
+        .map(|i| {
+            let cos = SemanticRuntime::cosine(&embs[2 * i], &embs[2 * i + 1]) as f64;
+            Some(cos.clamp(-1.0, 1.0))
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifact_dir;
+
+    fn runtime() -> Option<SemanticRuntime> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(SemanticRuntime::load(&dir).unwrap())
+    }
+
+    fn ex(response: &str, reference: &str, question: &str) -> Example {
+        Example {
+            response: response.into(),
+            reference: reference.into(),
+            question: question.into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn similarity_orders_by_relatedness() {
+        let Some(rt) = runtime() else { return };
+        let examples = vec![
+            ex("paris", "paris", ""),
+            ex("the capital city paris", "paris", ""),
+            ex("bananas are yellow fruit", "paris", ""),
+        ];
+        let sims = embedding_similarity_batch(&rt, &examples).unwrap();
+        let s: Vec<f64> = sims.into_iter().flatten().collect();
+        assert!(s[0] > 0.999, "identity {}", s[0]);
+        assert!(s[1] > s[2], "partial {} > unrelated {}", s[1], s[2]);
+    }
+
+    #[test]
+    fn bertscore_identity() {
+        let Some(rt) = runtime() else { return };
+        let examples = vec![
+            ex("exact same answer", "exact same answer", ""),
+            ex("totally different words entirely", "exact same answer", ""),
+        ];
+        let scores = bertscore_batch(&rt, &examples).unwrap();
+        assert!(scores[0].unwrap() > 0.999);
+        assert!(scores[1].unwrap() < scores[0].unwrap());
+    }
+
+    #[test]
+    fn answer_relevance_uses_question() {
+        let Some(rt) = runtime() else { return };
+        let examples = vec![
+            ex("the capital of france is paris", "", "what is the capital of france"),
+            ex("unrelated response about databases", "", "what is the capital of france"),
+        ];
+        let rel = answer_relevance_batch(&rt, &examples).unwrap();
+        assert!(rel[0].unwrap() > rel[1].unwrap());
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let Some(rt) = runtime() else { return };
+        assert!(embedding_similarity_batch(&rt, &[]).unwrap().is_empty());
+        assert!(bertscore_batch(&rt, &[]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! Multi-turn / agent-trajectory metrics (paper §6.2: "richer support for
+//! conversational evaluation where context accumulates across turns").
+//!
+//! A [`Trajectory`] is an ordered list of turns, each with its own
+//! response and reference. Metrics:
+//!
+//! - **per-turn score** with any single-turn metric, with the running
+//!   conversation prefixed to the prompt (context accumulation);
+//! - **trajectory success** — all turns above a threshold (binary);
+//! - **goal completion** — final-turn score (did the conversation land);
+//! - **consistency decay** — slope of per-turn scores (does quality
+//!   degrade as context grows).
+
+use super::lexical;
+
+/// One conversational turn.
+#[derive(Debug, Clone)]
+pub struct Turn {
+    pub user: String,
+    pub response: String,
+    pub reference: String,
+}
+
+/// A conversation / agent trajectory.
+#[derive(Debug, Clone, Default)]
+pub struct Trajectory {
+    pub turns: Vec<Turn>,
+}
+
+impl Trajectory {
+    pub fn new(turns: Vec<Turn>) -> Self {
+        Self { turns }
+    }
+
+    /// Accumulated conversation context up to (excluding) turn `i`.
+    pub fn context_before(&self, i: usize) -> String {
+        let mut out = String::new();
+        for t in &self.turns[..i.min(self.turns.len())] {
+            out.push_str(&format!("User: {}\nAssistant: {}\n", t.user, t.response));
+        }
+        out
+    }
+}
+
+/// Per-turn scores with a single-turn scorer.
+pub fn per_turn_scores<F>(traj: &Trajectory, scorer: F) -> Vec<f64>
+where
+    F: Fn(&str, &str) -> f64,
+{
+    traj.turns.iter().map(|t| scorer(&t.response, &t.reference)).collect()
+}
+
+/// Trajectory success: every turn ≥ threshold → 1.0, else 0.0.
+pub fn trajectory_success(traj: &Trajectory, threshold: f64) -> f64 {
+    if traj.turns.is_empty() {
+        return 0.0;
+    }
+    let ok = per_turn_scores(traj, lexical::token_f1)
+        .iter()
+        .all(|&s| s >= threshold);
+    ok as i64 as f64
+}
+
+/// Goal completion: final-turn token F1.
+pub fn goal_completion(traj: &Trajectory) -> f64 {
+    traj.turns
+        .last()
+        .map(|t| lexical::token_f1(&t.response, &t.reference))
+        .unwrap_or(0.0)
+}
+
+/// Consistency decay: least-squares slope of per-turn scores over turn
+/// index. Negative = quality degrades as context accumulates.
+pub fn consistency_decay(traj: &Trajectory) -> f64 {
+    let scores = per_turn_scores(traj, lexical::token_f1);
+    let n = scores.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let mean_x = (nf - 1.0) / 2.0;
+    let mean_y = scores.iter().sum::<f64>() / nf;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &y) in scores.iter().enumerate() {
+        let dx = i as f64 - mean_x;
+        num += dx * (y - mean_y);
+        den += dx * dx;
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn turn(u: &str, r: &str, reference: &str) -> Turn {
+        Turn { user: u.into(), response: r.into(), reference: reference.into() }
+    }
+
+    fn good_traj() -> Trajectory {
+        Trajectory::new(vec![
+            turn("book a table", "booked a table for two", "booked a table for two"),
+            turn("make it 8pm", "moved the booking to 8pm", "moved the booking to 8pm"),
+            turn("confirm", "your booking is confirmed", "your booking is confirmed"),
+        ])
+    }
+
+    fn degrading_traj() -> Trajectory {
+        Trajectory::new(vec![
+            turn("q1", "perfect answer one", "perfect answer one"),
+            turn("q2", "partial answer two-ish", "perfect answer two"),
+            turn("q3", "completely lost now", "perfect answer three"),
+        ])
+    }
+
+    #[test]
+    fn success_and_goal() {
+        assert_eq!(trajectory_success(&good_traj(), 0.9), 1.0);
+        assert_eq!(trajectory_success(&degrading_traj(), 0.9), 0.0);
+        assert_eq!(goal_completion(&good_traj()), 1.0);
+        assert!(goal_completion(&degrading_traj()) < 0.5);
+    }
+
+    #[test]
+    fn decay_slope_signs() {
+        assert!(consistency_decay(&degrading_traj()) < -0.1);
+        assert!(consistency_decay(&good_traj()).abs() < 1e-9);
+        assert_eq!(consistency_decay(&Trajectory::default()), 0.0);
+    }
+
+    #[test]
+    fn context_accumulates() {
+        let t = good_traj();
+        assert_eq!(t.context_before(0), "");
+        let ctx = t.context_before(2);
+        assert!(ctx.contains("book a table"));
+        assert!(ctx.contains("moved the booking"));
+        assert!(!ctx.contains("confirmed"));
+    }
+
+    #[test]
+    fn per_turn_scores_align() {
+        let s = per_turn_scores(&degrading_traj(), lexical::token_f1);
+        assert_eq!(s.len(), 3);
+        assert!(s[0] > s[1] && s[1] > s[2], "{s:?}");
+    }
+
+    #[test]
+    fn empty_trajectory_safe() {
+        let t = Trajectory::default();
+        assert_eq!(trajectory_success(&t, 0.5), 0.0);
+        assert_eq!(goal_completion(&t), 0.0);
+    }
+}

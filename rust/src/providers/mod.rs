@@ -1,0 +1,113 @@
+//! Inference-engine abstraction + simulated multi-provider LLM service.
+//!
+//! The paper evaluates through external APIs (OpenAI / Anthropic / Google).
+//! This reproduction has no network, so [`simulated::SimEngine`] stands in:
+//! it implements the same provider contract — per-model pricing and latency
+//! distributions, server-side RPM/TPM enforcement with 429s, transient
+//! 5xx errors, deterministic "model behaviour" with a quality knob so
+//! different models produce measurably different metric scores (see
+//! DESIGN.md §1 for why this preserves the paper's claims).
+
+pub mod pricing;
+pub mod retry;
+pub mod simulated;
+pub mod solver;
+pub mod tokenizer;
+
+use anyhow::Result;
+
+/// One inference request (paper §3.3 / Listing 1).
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: f64,
+}
+
+impl InferenceRequest {
+    pub fn new(prompt: impl Into<String>) -> Self {
+        Self { prompt: prompt.into(), max_tokens: 1024, temperature: 0.0 }
+    }
+}
+
+/// One inference response with usage accounting.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub text: String,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    /// API latency for this call in milliseconds (simulated or real).
+    pub latency_ms: f64,
+    /// Cost in USD at the provider's published per-token prices.
+    pub cost_usd: f64,
+}
+
+/// API error taxonomy (paper §A.4).
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum ApiError {
+    #[error("429 rate limited: {0}")]
+    RateLimited(String),
+    #[error("{status} server error: {message}")]
+    Server { status: u16, message: String },
+    #[error("401 authentication failed: {0}")]
+    Auth(String),
+    #[error("400 invalid request: {0}")]
+    InvalidRequest(String),
+    #[error("content policy violation: {0}")]
+    ContentPolicy(String),
+}
+
+impl ApiError {
+    /// Recoverable errors trigger exponential-backoff retry (§A.4).
+    pub fn recoverable(&self) -> bool {
+        matches!(self, ApiError::RateLimited(_) | ApiError::Server { .. })
+    }
+
+    pub fn status(&self) -> u16 {
+        match self {
+            ApiError::RateLimited(_) => 429,
+            ApiError::Server { status, .. } => *status,
+            ApiError::Auth(_) => 401,
+            ApiError::InvalidRequest(_) => 400,
+            ApiError::ContentPolicy(_) => 400,
+        }
+    }
+}
+
+/// The provider abstraction (paper §3.3). One engine instance lives per
+/// executor (Listing 1's `_ENGINE_CACHE`); engines must be `Send` so the
+/// executor threads can own them.
+pub trait InferenceEngine: Send {
+    fn initialize(&mut self) -> Result<()>;
+    fn infer(&mut self, request: &InferenceRequest) -> Result<InferenceResponse, ApiError>;
+    fn infer_batch(
+        &mut self,
+        requests: &[InferenceRequest],
+    ) -> Vec<Result<InferenceResponse, ApiError>> {
+        requests.iter().map(|r| self.infer(r)).collect()
+    }
+    fn shutdown(&mut self) {}
+    /// Provider + model identity (cache keys, tracking tags).
+    fn model_id(&self) -> (String, String);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_recoverability() {
+        assert!(ApiError::RateLimited("x".into()).recoverable());
+        assert!(ApiError::Server { status: 503, message: "x".into() }.recoverable());
+        assert!(!ApiError::Auth("x".into()).recoverable());
+        assert!(!ApiError::InvalidRequest("x".into()).recoverable());
+        assert!(!ApiError::ContentPolicy("x".into()).recoverable());
+    }
+
+    #[test]
+    fn statuses() {
+        assert_eq!(ApiError::RateLimited("x".into()).status(), 429);
+        assert_eq!(ApiError::Auth("x".into()).status(), 401);
+        assert_eq!(ApiError::Server { status: 500, message: "".into() }.status(), 500);
+    }
+}

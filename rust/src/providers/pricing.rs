@@ -1,0 +1,126 @@
+//! Provider price book + model registry (paper Tables 6 & 7).
+//!
+//! Prices are USD per **million** tokens, matching the paper's cost
+//! analysis: e.g. GPT-4o at $2.50/M input, $15.00/M output would give the
+//! Table 6 row $10.00 input + $22.50 output for 10k examples × (400 in /
+//! 150 out) tokens.
+
+/// Per-model price + latency profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelProfile {
+    pub provider: &'static str,
+    pub model: &'static str,
+    /// USD per 1M input tokens.
+    pub input_per_m: f64,
+    /// USD per 1M output tokens.
+    pub output_per_m: f64,
+    /// Median API latency in ms (lognormal median).
+    pub latency_p50_ms: f64,
+    /// Lognormal sigma controlling the tail (p99 ≈ p50·exp(2.33σ)).
+    pub latency_sigma: f64,
+    /// Answer-quality knob in [0,1]: probability the simulated model
+    /// produces the ideal answer for a solvable prompt.
+    pub quality: f64,
+}
+
+/// Table 7 model registry with Table 6-consistent prices.
+pub const MODELS: &[ModelProfile] = &[
+    // OpenAI
+    ModelProfile { provider: "openai", model: "gpt-4o", input_per_m: 2.50, output_per_m: 15.00, latency_p50_ms: 320.0, latency_sigma: 0.45, quality: 0.90 },
+    ModelProfile { provider: "openai", model: "gpt-4o-mini", input_per_m: 0.15, output_per_m: 0.60, latency_p50_ms: 220.0, latency_sigma: 0.40, quality: 0.78 },
+    ModelProfile { provider: "openai", model: "gpt-4-turbo", input_per_m: 10.00, output_per_m: 30.00, latency_p50_ms: 550.0, latency_sigma: 0.50, quality: 0.88 },
+    ModelProfile { provider: "openai", model: "gpt-3.5-turbo", input_per_m: 0.50, output_per_m: 1.50, latency_p50_ms: 180.0, latency_sigma: 0.40, quality: 0.66 },
+    // Anthropic
+    ModelProfile { provider: "anthropic", model: "claude-3-5-sonnet", input_per_m: 3.00, output_per_m: 15.00, latency_p50_ms: 350.0, latency_sigma: 0.45, quality: 0.91 },
+    ModelProfile { provider: "anthropic", model: "claude-3-opus", input_per_m: 15.00, output_per_m: 75.00, latency_p50_ms: 700.0, latency_sigma: 0.50, quality: 0.92 },
+    ModelProfile { provider: "anthropic", model: "claude-3-sonnet", input_per_m: 3.00, output_per_m: 15.00, latency_p50_ms: 380.0, latency_sigma: 0.45, quality: 0.82 },
+    ModelProfile { provider: "anthropic", model: "claude-3-haiku", input_per_m: 0.25, output_per_m: 1.25, latency_p50_ms: 150.0, latency_sigma: 0.35, quality: 0.72 },
+    // Google
+    ModelProfile { provider: "google", model: "gemini-1.5-pro", input_per_m: 1.25, output_per_m: 5.00, latency_p50_ms: 400.0, latency_sigma: 0.48, quality: 0.86 },
+    ModelProfile { provider: "google", model: "gemini-1.5-flash", input_per_m: 0.075, output_per_m: 0.30, latency_p50_ms: 160.0, latency_sigma: 0.38, quality: 0.74 },
+    ModelProfile { provider: "google", model: "gemini-1.0-pro", input_per_m: 0.50, output_per_m: 1.50, latency_p50_ms: 300.0, latency_sigma: 0.45, quality: 0.70 },
+];
+
+/// Look up a model profile.
+pub fn lookup(provider: &str, model: &str) -> Option<&'static ModelProfile> {
+    MODELS.iter().find(|m| m.provider == provider && m.model == model)
+}
+
+/// Models offered by one provider (Table 7 row).
+pub fn provider_models(provider: &str) -> Vec<&'static ModelProfile> {
+    MODELS.iter().filter(|m| m.provider == provider).collect()
+}
+
+impl ModelProfile {
+    /// Cost of one call in USD.
+    pub fn cost(&self, input_tokens: usize, output_tokens: usize) -> f64 {
+        input_tokens as f64 * self.input_per_m / 1e6
+            + output_tokens as f64 * self.output_per_m / 1e6
+    }
+
+    /// Cost of a whole workload (Table 6 computation).
+    pub fn workload_cost(&self, examples: usize, in_tokens: usize, out_tokens: usize) -> (f64, f64, f64) {
+        let input = examples as f64 * in_tokens as f64 * self.input_per_m / 1e6;
+        let output = examples as f64 * out_tokens as f64 * self.output_per_m / 1e6;
+        (input, output, input + output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_table7() {
+        assert_eq!(provider_models("openai").len(), 4);
+        assert_eq!(provider_models("anthropic").len(), 4);
+        assert_eq!(provider_models("google").len(), 3);
+        assert!(lookup("openai", "gpt-4o").is_some());
+        assert!(lookup("openai", "nonexistent").is_none());
+    }
+
+    #[test]
+    fn table6_gpt4o_row() {
+        // 10,000 examples × 400 input / 150 output tokens.
+        let m = lookup("openai", "gpt-4o").unwrap();
+        let (input, output, total) = m.workload_cost(10_000, 400, 150);
+        assert!((input - 10.00).abs() < 1e-9, "input {input}");
+        assert!((output - 22.50).abs() < 1e-9, "output {output}");
+        assert!((total - 32.50).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table6_claude_haiku_row() {
+        let m = lookup("anthropic", "claude-3-haiku").unwrap();
+        let (input, output, total) = m.workload_cost(10_000, 400, 150);
+        assert!((input - 1.00).abs() < 1e-9);
+        assert!((output - 1.875).abs() < 1e-2, "output {output}");
+        assert!((total - 2.88).abs() < 0.01);
+    }
+
+    #[test]
+    fn table6_gemini_pro_row() {
+        let m = lookup("google", "gemini-1.5-pro").unwrap();
+        let (input, output, total) = m.workload_cost(10_000, 400, 150);
+        assert!((input - 5.00).abs() < 1e-9);
+        assert!((output - 7.50).abs() < 1e-9);
+        assert!((total - 12.50).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mini_is_20x_cheaper_than_4o() {
+        // §5.5: 1M examples GPT-4o ≈ $3,250 vs mini ≈ $150.
+        let full = lookup("openai", "gpt-4o").unwrap().workload_cost(1_000_000, 400, 150).2;
+        let mini = lookup("openai", "gpt-4o-mini").unwrap().workload_cost(1_000_000, 400, 150).2;
+        assert!((full - 3250.0).abs() < 1.0, "full {full}");
+        assert!((150.0 - mini).abs() < 1.0, "mini {mini}");
+        assert!((full / mini - 21.7).abs() < 1.0);
+    }
+
+    #[test]
+    fn per_call_cost() {
+        let m = lookup("openai", "gpt-4o").unwrap();
+        let c = m.cost(400, 150);
+        assert!((c - (400.0 * 2.5 + 150.0 * 15.0) / 1e6).abs() < 1e-12);
+    }
+}

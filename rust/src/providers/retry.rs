@@ -1,0 +1,172 @@
+//! Retry with exponential backoff (paper §A.4).
+//!
+//! Recoverable errors (429, 5xx) retry up to `max_retries` times with
+//! delay `retry_delay * 2^attempt` (+ deterministic jitter); non-recoverable
+//! errors (401, 400, content policy) surface immediately and the example is
+//! marked failed.
+
+use super::{ApiError, InferenceEngine, InferenceRequest, InferenceResponse};
+use crate::ratelimit::Clock;
+use crate::util::rng::Rng;
+
+/// Backoff policy.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_retries: usize,
+    /// Base delay in seconds.
+    pub base_delay: f64,
+    /// Cap on a single backoff sleep.
+    pub max_delay: f64,
+    /// Jitter fraction in [0, 1): delay *= 1 + U(-j, j).
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_retries: 3, base_delay: 1.0, max_delay: 30.0, jitter: 0.1 }
+    }
+}
+
+impl RetryPolicy {
+    pub fn delay_for_attempt(&self, attempt: usize, rng: &mut Rng) -> f64 {
+        let base = (self.base_delay * 2f64.powi(attempt as i32)).min(self.max_delay);
+        let j = if self.jitter > 0.0 { 1.0 + rng.range_f64(-self.jitter, self.jitter) } else { 1.0 };
+        base * j
+    }
+}
+
+/// Outcome of a retried call: response + attempts used + backoff slept.
+#[derive(Debug)]
+pub struct RetryOutcome {
+    pub result: Result<InferenceResponse, ApiError>,
+    pub attempts: usize,
+    pub backoff_secs: f64,
+}
+
+/// Call `engine.infer` with retries under `policy`, sleeping on `clock`.
+pub fn infer_with_retry(
+    engine: &mut dyn InferenceEngine,
+    request: &InferenceRequest,
+    policy: &RetryPolicy,
+    clock: &dyn Clock,
+    rng: &mut Rng,
+) -> RetryOutcome {
+    let mut backoff_secs = 0.0;
+    for attempt in 0..=policy.max_retries {
+        match engine.infer(request) {
+            Ok(resp) => {
+                return RetryOutcome { result: Ok(resp), attempts: attempt + 1, backoff_secs }
+            }
+            Err(e) if e.recoverable() && attempt < policy.max_retries => {
+                let delay = policy.delay_for_attempt(attempt, rng);
+                clock.sleep(delay);
+                backoff_secs += delay;
+            }
+            Err(e) => {
+                return RetryOutcome { result: Err(e), attempts: attempt + 1, backoff_secs }
+            }
+        }
+    }
+    unreachable!("loop always returns");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ratelimit::VirtualClock;
+    use anyhow::Result;
+
+    /// Scripted engine: errors for the first `fail_n` calls, then succeeds.
+    struct Flaky {
+        fail_n: usize,
+        calls: usize,
+        error: fn() -> ApiError,
+    }
+
+    impl InferenceEngine for Flaky {
+        fn initialize(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn infer(&mut self, _r: &InferenceRequest) -> Result<InferenceResponse, ApiError> {
+            self.calls += 1;
+            if self.calls <= self.fail_n {
+                Err((self.error)())
+            } else {
+                Ok(InferenceResponse {
+                    text: "ok".into(),
+                    input_tokens: 1,
+                    output_tokens: 1,
+                    latency_ms: 1.0,
+                    cost_usd: 0.0,
+                })
+            }
+        }
+
+        fn model_id(&self) -> (String, String) {
+            ("test".into(), "flaky".into())
+        }
+    }
+
+    fn run(fail_n: usize, error: fn() -> ApiError, max_retries: usize) -> (RetryOutcome, f64) {
+        let clock = VirtualClock::new();
+        let mut engine = Flaky { fail_n, calls: 0, error };
+        let policy = RetryPolicy { max_retries, jitter: 0.0, ..Default::default() };
+        let mut rng = Rng::new(0);
+        let out = infer_with_retry(&mut engine, &InferenceRequest::new("x"), &policy, clock.as_ref(), &mut rng);
+        let t = clock.now();
+        (out, t)
+    }
+
+    #[test]
+    fn succeeds_first_try() {
+        let (out, t) = run(0, || ApiError::RateLimited("".into()), 3);
+        assert!(out.result.is_ok());
+        assert_eq!(out.attempts, 1);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn retries_recoverable_with_exponential_backoff() {
+        let (out, t) = run(2, || ApiError::Server { status: 503, message: "".into() }, 3);
+        assert!(out.result.is_ok());
+        assert_eq!(out.attempts, 3);
+        // Slept 1s + 2s.
+        assert!((t - 3.0).abs() < 1e-9, "slept {t}");
+        assert!((out.backoff_secs - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gives_up_after_max_retries() {
+        let (out, t) = run(10, || ApiError::RateLimited("".into()), 3);
+        assert!(matches!(out.result, Err(ApiError::RateLimited(_))));
+        assert_eq!(out.attempts, 4); // initial + 3 retries
+        assert!((t - 7.0).abs() < 1e-9, "slept {t}"); // 1+2+4
+    }
+
+    #[test]
+    fn non_recoverable_fails_fast() {
+        let (out, t) = run(10, || ApiError::Auth("bad key".into()), 3);
+        assert!(matches!(out.result, Err(ApiError::Auth(_))));
+        assert_eq!(out.attempts, 1);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn delay_capped() {
+        let policy = RetryPolicy { max_retries: 10, base_delay: 1.0, max_delay: 5.0, jitter: 0.0 };
+        let mut rng = Rng::new(0);
+        assert_eq!(policy.delay_for_attempt(10, &mut rng), 5.0);
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let policy = RetryPolicy { jitter: 0.2, ..Default::default() };
+        let mut rng = Rng::new(1);
+        for attempt in 0..4 {
+            let base = (policy.base_delay * 2f64.powi(attempt)).min(policy.max_delay);
+            let d = policy.delay_for_attempt(attempt as usize, &mut rng);
+            assert!(d >= base * 0.8 - 1e-12 && d <= base * 1.2 + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,444 @@
+//! Simulated LLM provider service + engine.
+//!
+//! [`SimService`] is the "server side": one per provider endpoint, shared
+//! across all executor engines. It enforces the provider's *global* RPM/TPM
+//! budget with a sliding-window meter (returning 429s exactly like a real
+//! endpoint when clients exceed their share), injects transient 5xx errors,
+//! and draws per-call latency from the model's lognormal profile.
+//!
+//! [`SimEngine`] is the "client SDK" an executor owns (Listing 1's cached
+//! engine): it submits requests to the shared service, sleeps out the
+//! simulated latency on the caller's clock, and accounts tokens + cost.
+//!
+//! Everything is deterministic given the seeds: response text via the
+//! solver keyed by `hash(prompt, model)`, latency/error draws from a
+//! per-call hash — so identical configurations replay identically,
+//! which the caching tests rely on.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::pricing::{lookup, ModelProfile};
+use super::solver::{fnv1a, solve};
+use super::tokenizer::estimate_tokens;
+use super::{ApiError, InferenceEngine, InferenceRequest, InferenceResponse};
+use crate::ratelimit::Clock;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// Provider-endpoint behaviour knobs.
+#[derive(Debug, Clone)]
+pub struct SimServiceConfig {
+    /// Server-side global request budget per minute.
+    pub global_rpm: f64,
+    /// Server-side global token budget per minute.
+    pub global_tpm: f64,
+    /// Probability of a transient 5xx per call.
+    pub server_error_rate: f64,
+    /// Probability a judge-style response is emitted malformed
+    /// (paper §5.6 reports 0.12% unparseable judge responses).
+    pub unparseable_rate: f64,
+    /// Scale factor on latency (1.0 = Table 3-calibrated profile).
+    pub latency_scale: f64,
+    /// When false, latency is accounted but not slept (simulation mode).
+    pub sleep_latency: bool,
+    pub seed: u64,
+}
+
+impl Default for SimServiceConfig {
+    fn default() -> Self {
+        Self {
+            global_rpm: 10_000.0,
+            global_tpm: 2_000_000.0,
+            server_error_rate: 0.0005,
+            unparseable_rate: 0.0012,
+            latency_scale: 1.0,
+            sleep_latency: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Sliding one-minute usage window (server-side metering).
+#[derive(Debug, Default)]
+struct UsageWindow {
+    /// (timestamp, tokens) of admitted calls in the last 60 s.
+    events: VecDeque<(f64, f64)>,
+    requests: f64,
+    tokens: f64,
+}
+
+impl UsageWindow {
+    fn evict(&mut self, now: f64) {
+        while let Some(&(t, tok)) = self.events.front() {
+            if now - t >= 60.0 {
+                self.events.pop_front();
+                self.requests -= 1.0;
+                self.tokens -= tok;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn admit(&mut self, now: f64, tokens: f64) {
+        self.events.push_back((now, tokens));
+        self.requests += 1.0;
+        self.tokens += tokens;
+    }
+}
+
+/// Server-side shared state.
+struct ServiceState {
+    window: UsageWindow,
+    calls: u64,
+    throttled: u64,
+    errored: u64,
+}
+
+/// The simulated provider endpoint (shared, thread-safe).
+pub struct SimService {
+    pub provider: String,
+    pub config: SimServiceConfig,
+    clock: Arc<dyn Clock>,
+    state: Mutex<ServiceState>,
+}
+
+/// Telemetry snapshot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceStats {
+    pub calls: u64,
+    pub throttled: u64,
+    pub errored: u64,
+}
+
+impl SimService {
+    pub fn new(provider: &str, config: SimServiceConfig, clock: Arc<dyn Clock>) -> Arc<Self> {
+        Arc::new(Self {
+            provider: provider.to_string(),
+            config,
+            clock,
+            state: Mutex::new(ServiceState {
+                window: UsageWindow::default(),
+                calls: 0,
+                throttled: 0,
+                errored: 0,
+            }),
+        })
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        let s = self.state.lock().unwrap();
+        ServiceStats { calls: s.calls, throttled: s.throttled, errored: s.errored }
+    }
+
+    /// Handle one API call. Returns the response text + latency, or an
+    /// [`ApiError`] (429 when the global window is exhausted, 5xx on
+    /// injected faults).
+    fn handle(
+        &self,
+        model: &ModelProfile,
+        request: &InferenceRequest,
+        call_seq: u64,
+    ) -> Result<(String, f64, usize), ApiError> {
+        let now = self.clock.now();
+        let in_tokens = estimate_tokens(&request.prompt);
+
+        {
+            let mut st = self.state.lock().unwrap();
+            st.calls += 1;
+            st.window.evict(now);
+            if st.window.requests + 1.0 > self.config.global_rpm
+                || st.window.tokens + in_tokens as f64 > self.config.global_tpm
+            {
+                st.throttled += 1;
+                return Err(ApiError::RateLimited(format!(
+                    "{} global limit exceeded ({} rpm)",
+                    self.provider, self.config.global_rpm
+                )));
+            }
+            st.window.admit(now, in_tokens as f64);
+        }
+
+        // Per-call deterministic draws: seed from (prompt, model, seq for
+        // transient faults — retries of the same call get fresh draws).
+        let fault_seed = fnv1a(&request.prompt)
+            ^ fnv1a(model.model)
+            ^ call_seq.wrapping_mul(0x9e3779b97f4a7c15)
+            ^ self.config.seed;
+        let mut fault_rng = Rng::new(fault_seed);
+        if fault_rng.chance(self.config.server_error_rate) {
+            self.state.lock().unwrap().errored += 1;
+            let status = *fault_rng.choose(&[500u16, 502, 503]);
+            return Err(ApiError::Server {
+                status,
+                message: "simulated transient upstream failure".into(),
+            });
+        }
+
+        // Latency draw: lognormal with median latency_p50_ms.
+        let mu = (model.latency_p50_ms * self.config.latency_scale).ln();
+        let latency_ms = fault_rng.lognormal(mu, model.latency_sigma);
+
+        // Response content: solver + quality knob, seeded WITHOUT call_seq
+        // so retried/replayed calls yield the same text (temperature 0).
+        let content_seed = fnv1a(&request.prompt) ^ fnv1a(model.model) ^ self.config.seed;
+        let mut content_rng = Rng::new(content_seed);
+        let solution = solve(&request.prompt);
+        let mut text = if request.temperature <= 0.0 {
+            if content_rng.chance(model.quality) { solution.ideal } else { solution.wrong }
+        } else {
+            // Temperature > 0: mix in sampling noise (still seeded).
+            let jitter = content_rng.f64() * request.temperature;
+            if content_rng.chance((model.quality - jitter).clamp(0.0, 1.0)) {
+                solution.ideal
+            } else {
+                solution.wrong
+            }
+        };
+        // Judge-response corruption (unparseable fraction).
+        if request.prompt.contains("SLLEVAL-JUDGE") && content_rng.chance(self.config.unparseable_rate)
+        {
+            text = "i would rate this response quite favorably overall".to_string();
+        }
+        // Respect max_tokens by truncating words.
+        let max_words = request.max_tokens.max(1);
+        let words: Vec<&str> = text.split_whitespace().collect();
+        if words.len() > max_words {
+            text = words[..max_words].join(" ");
+        }
+
+        Ok((text, latency_ms, in_tokens))
+    }
+}
+
+/// Client-side engine bound to one (provider, model).
+pub struct SimEngine {
+    pub profile: &'static ModelProfile,
+    service: Arc<SimService>,
+    clock: Arc<dyn Clock>,
+    initialized: bool,
+    call_seq: u64,
+    /// Cumulative usage for this engine.
+    pub total_cost: f64,
+    pub total_calls: u64,
+}
+
+impl SimEngine {
+    pub fn new(service: Arc<SimService>, provider: &str, model: &str, clock: Arc<dyn Clock>) -> Result<Self> {
+        let profile = lookup(provider, model)
+            .ok_or_else(|| anyhow!("unknown model {provider}/{model} (see Table 7 registry)"))?;
+        Ok(Self {
+            profile,
+            service,
+            clock,
+            initialized: false,
+            call_seq: 0,
+            total_cost: 0.0,
+            total_calls: 0,
+        })
+    }
+}
+
+impl InferenceEngine for SimEngine {
+    fn initialize(&mut self) -> Result<()> {
+        self.initialized = true;
+        Ok(())
+    }
+
+    fn infer(&mut self, request: &InferenceRequest) -> Result<InferenceResponse, ApiError> {
+        assert!(self.initialized, "engine used before initialize()");
+        self.call_seq += 1;
+        let (text, latency_ms, input_tokens) =
+            self.service.handle(self.profile, request, self.call_seq)?;
+        if self.service.config.sleep_latency {
+            self.clock.sleep(latency_ms / 1000.0);
+        }
+        let output_tokens = estimate_tokens(&text);
+        let cost = self.profile.cost(input_tokens, output_tokens);
+        self.total_cost += cost;
+        self.total_calls += 1;
+        Ok(InferenceResponse { text, input_tokens, output_tokens, latency_ms, cost_usd: cost })
+    }
+
+    fn shutdown(&mut self) {
+        self.initialized = false;
+    }
+
+    fn model_id(&self) -> (String, String) {
+        (self.profile.provider.to_string(), self.profile.model.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ratelimit::VirtualClock;
+
+    fn engine(cfg: SimServiceConfig) -> (SimEngine, Arc<VirtualClock>) {
+        let clock = VirtualClock::new();
+        let svc = SimService::new("openai", cfg, clock.clone());
+        let mut e = SimEngine::new(svc, "openai", "gpt-4o", clock.clone()).unwrap();
+        e.initialize().unwrap();
+        (e, clock)
+    }
+
+    fn no_fault_cfg() -> SimServiceConfig {
+        SimServiceConfig { server_error_rate: 0.0, unparseable_rate: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn deterministic_responses() {
+        let (mut e1, _) = engine(no_fault_cfg());
+        let (mut e2, _) = engine(no_fault_cfg());
+        let req = InferenceRequest::new("Question: what is the capital of france?");
+        let r1 = e1.infer(&req).unwrap();
+        let r2 = e2.infer(&req).unwrap();
+        assert_eq!(r1.text, r2.text);
+        assert_eq!(r1.input_tokens, r2.input_tokens);
+    }
+
+    #[test]
+    fn quality_knob_separates_models() {
+        // Over many distinct QA prompts, gpt-4o must answer correctly more
+        // often than gpt-3.5-turbo.
+        let clock = VirtualClock::new();
+        let svc = SimService::new("openai", no_fault_cfg(), clock.clone());
+        let mut strong = SimEngine::new(svc.clone(), "openai", "gpt-4o", clock.clone()).unwrap();
+        let mut weak = SimEngine::new(svc, "openai", "gpt-3.5-turbo", clock.clone()).unwrap();
+        strong.initialize().unwrap();
+        weak.initialize().unwrap();
+
+        let df = crate::data::synth::generate(
+            300,
+            9,
+            crate::data::synth::DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 },
+        )
+        .unwrap();
+        let mut strong_correct = 0;
+        let mut weak_correct = 0;
+        for row in df.iter_rows() {
+            let req = InferenceRequest::new(row.str("prompt"));
+            let reference = row.str("reference");
+            if strong.infer(&req).unwrap().text == reference {
+                strong_correct += 1;
+            }
+            if weak.infer(&req).unwrap().text == reference {
+                weak_correct += 1;
+            }
+        }
+        assert!(
+            strong_correct > weak_correct + 20,
+            "strong {strong_correct} vs weak {weak_correct}"
+        );
+    }
+
+    #[test]
+    fn global_rate_limit_throttles() {
+        let cfg = SimServiceConfig { global_rpm: 10.0, ..no_fault_cfg() };
+        let (mut e, _clock) = engine(cfg);
+        let req = InferenceRequest::new("hello");
+        let mut throttled = 0;
+        for _ in 0..20 {
+            match e.infer(&req) {
+                Err(ApiError::RateLimited(_)) => throttled += 1,
+                Err(other) => panic!("unexpected error {other}"),
+                Ok(_) => {}
+            }
+        }
+        assert_eq!(throttled, 10);
+    }
+
+    #[test]
+    fn window_slides_with_time() {
+        let cfg = SimServiceConfig { global_rpm: 5.0, sleep_latency: false, ..no_fault_cfg() };
+        let (mut e, clock) = engine(cfg);
+        let req = InferenceRequest::new("hi");
+        for _ in 0..5 {
+            e.infer(&req).unwrap();
+        }
+        assert!(matches!(e.infer(&req), Err(ApiError::RateLimited(_))));
+        clock.advance(61.0);
+        assert!(e.infer(&req).is_ok());
+    }
+
+    #[test]
+    fn latency_profile_plausible() {
+        let cfg = SimServiceConfig { sleep_latency: false, ..no_fault_cfg() };
+        let (mut e, _) = engine(cfg);
+        let mut lats: Vec<f64> = Vec::new();
+        for i in 0..500 {
+            let req = InferenceRequest::new(format!("prompt variant {i}"));
+            lats.push(e.infer(&req).unwrap().latency_ms);
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = lats[250];
+        // Median should be near the profile's 320ms.
+        assert!((250.0..420.0).contains(&p50), "p50 {p50}");
+        assert!(lats[494] > p50 * 1.5, "p99 {} p50 {p50}", lats[494]);
+    }
+
+    #[test]
+    fn cost_accounting_matches_pricebook() {
+        let (mut e, _) = engine(no_fault_cfg());
+        let req = InferenceRequest::new("Question: what is the capital of japan?");
+        let r = e.infer(&req).unwrap();
+        let expected = e.profile.cost(r.input_tokens, r.output_tokens);
+        assert!((r.cost_usd - expected).abs() < 1e-12);
+        assert!((e.total_cost - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_injection_rate() {
+        let cfg = SimServiceConfig {
+            server_error_rate: 0.2,
+            sleep_latency: false,
+            ..Default::default()
+        };
+        let (mut e, _) = engine(cfg);
+        let mut errors = 0;
+        for i in 0..1000 {
+            let req = InferenceRequest::new(format!("p{i}"));
+            if let Err(ApiError::Server { .. }) = e.infer(&req) {
+                errors += 1;
+            }
+        }
+        assert!((120..280).contains(&errors), "errors {errors}");
+    }
+
+    #[test]
+    fn retry_gets_fresh_fault_draw_same_text() {
+        // A transient 5xx on one attempt must not change the response text
+        // of a later successful attempt (content seed excludes call_seq).
+        let cfg = SimServiceConfig {
+            server_error_rate: 0.5,
+            sleep_latency: false,
+            ..Default::default()
+        };
+        let (mut e, _) = engine(cfg);
+        let req = InferenceRequest::new("Question: what is the capital of kenya?");
+        let mut texts = std::collections::BTreeSet::new();
+        for _ in 0..50 {
+            if let Ok(r) = e.infer(&req) {
+                texts.insert(r.text);
+            }
+        }
+        assert_eq!(texts.len(), 1, "all successes must agree: {texts:?}");
+    }
+
+    #[test]
+    fn max_tokens_truncates() {
+        let (mut e, _) = engine(no_fault_cfg());
+        let mut req = InferenceRequest::new("Instruction: list three uses for neural networks\nResponse:");
+        req.max_tokens = 3;
+        let r = e.infer(&req).unwrap();
+        assert!(r.text.split_whitespace().count() <= 3);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let clock = VirtualClock::new();
+        let svc = SimService::new("openai", SimServiceConfig::default(), clock.clone());
+        assert!(SimEngine::new(svc, "openai", "gpt-99", clock).is_err());
+    }
+}

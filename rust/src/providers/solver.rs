@@ -1,0 +1,289 @@
+//! Deterministic "model behaviour" for the simulated providers.
+//!
+//! Given a prompt, the solver produces an *ideal* answer and a *plausible
+//! wrong* answer; [`simulated::SimEngine`] picks between them with the
+//! model's quality probability (seeded by `hash(prompt, model)` so
+//! temperature-0 determinism and cache coherence hold). This is what makes
+//! metric scores *differ measurably across models* — the property the
+//! paper's model-comparison statistics need.
+//!
+//! The solver understands:
+//! - the synthetic dataset families from [`crate::data::synth`] (QA,
+//!   summarization, instruction),
+//! - the structured judge prompts emitted by [`crate::metrics::judge`]
+//!   (pointwise rubric grading, pairwise comparison, claim verification),
+//! - and falls back to a deterministic pseudo-text response otherwise.
+
+use crate::data::synth::{ENTITIES, TASKS};
+
+/// What kind of prompt was recognised (exposed for tests/diagnostics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PromptKind {
+    FactualQa,
+    Summarization,
+    Instruction,
+    JudgePointwise,
+    JudgePairwise,
+    JudgeVerify,
+    Freeform,
+}
+
+/// Solved prompt: ideal + degraded answers.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub kind: PromptKind,
+    pub ideal: String,
+    pub wrong: String,
+}
+
+/// FNV-1a 64-bit hash (stable across runs, used to seed behaviour).
+pub fn fnv1a(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Token-overlap F1 between two strings (used by the judge behaviours).
+pub fn overlap_f1(a: &str, b: &str) -> f64 {
+    let ta: Vec<String> = tokens(a);
+    let tb: Vec<String> = tokens(b);
+    if ta.is_empty() || tb.is_empty() {
+        return if ta.is_empty() && tb.is_empty() { 1.0 } else { 0.0 };
+    }
+    let mut counts = std::collections::HashMap::new();
+    for t in &ta {
+        *counts.entry(t.clone()).or_insert(0i64) += 1;
+    }
+    let mut common = 0i64;
+    for t in &tb {
+        if let Some(c) = counts.get_mut(t) {
+            if *c > 0 {
+                *c -= 1;
+                common += 1;
+            }
+        }
+    }
+    if common == 0 {
+        return 0.0;
+    }
+    let p = common as f64 / tb.len() as f64;
+    let r = common as f64 / ta.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+fn tokens(s: &str) -> Vec<String> {
+    s.split(|c: char| !c.is_alphanumeric())
+        .filter(|w| !w.is_empty())
+        .map(|w| w.to_lowercase())
+        .collect()
+}
+
+fn extract_section<'a>(prompt: &'a str, header: &str) -> Option<&'a str> {
+    let start = prompt.find(header)? + header.len();
+    let rest = &prompt[start..];
+    let end = rest.find("\n###").unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
+/// Solve a prompt into ideal/wrong answers.
+pub fn solve(prompt: &str) -> Solution {
+    // --- judge prompts (emitted by metrics::judge) -------------------------
+    if prompt.contains("### SLLEVAL-JUDGE-POINTWISE") {
+        let cand = extract_section(prompt, "### CANDIDATE\n").unwrap_or("");
+        let reference = extract_section(prompt, "### REFERENCE\n").unwrap_or("");
+        let f1 = overlap_f1(cand, reference);
+        // Map overlap to a 1–5 rubric score.
+        let score = 1 + (f1 * 4.0).round() as i64;
+        return Solution {
+            kind: PromptKind::JudgePointwise,
+            ideal: format!(
+                "Score: {score}\nExplanation: the candidate overlaps the reference \
+                 with F1 {:.2}.",
+                f1
+            ),
+            // Degraded judge: off-by-one score (still parseable).
+            wrong: format!(
+                "Score: {}\nExplanation: judged loosely.",
+                (score - 1).max(1)
+            ),
+        };
+    }
+    if prompt.contains("### SLLEVAL-JUDGE-PAIRWISE") {
+        let a = extract_section(prompt, "### RESPONSE-A\n").unwrap_or("");
+        let b = extract_section(prompt, "### RESPONSE-B\n").unwrap_or("");
+        let reference = extract_section(prompt, "### REFERENCE\n").unwrap_or("");
+        let winner = if overlap_f1(a, reference) >= overlap_f1(b, reference) { "A" } else { "B" };
+        let loser = if winner == "A" { "B" } else { "A" };
+        return Solution {
+            kind: PromptKind::JudgePairwise,
+            ideal: format!("Verdict: {winner}\nExplanation: closer to the reference."),
+            wrong: format!("Verdict: {loser}\nExplanation: style preference."),
+        };
+    }
+    if prompt.contains("### SLLEVAL-JUDGE-VERIFY") {
+        let claim = extract_section(prompt, "### CLAIM\n").unwrap_or("");
+        let context = extract_section(prompt, "### CONTEXT\n").unwrap_or("");
+        let supported = overlap_f1(claim, context) > 0.15
+            || context.to_lowercase().contains(&claim.to_lowercase());
+        let (ideal, wrong) = if supported {
+            ("Verdict: SUPPORTED", "Verdict: UNSUPPORTED")
+        } else {
+            ("Verdict: UNSUPPORTED", "Verdict: SUPPORTED")
+        };
+        return Solution {
+            kind: PromptKind::JudgeVerify,
+            ideal: ideal.to_string(),
+            wrong: wrong.to_string(),
+        };
+    }
+
+    // --- synthetic dataset families ----------------------------------------
+    // "…capital of <country>…" in any phrasing (the simulated model knows
+    // the fact regardless of the paraphrase, like a real model would).
+    if let Some(qpos) = prompt.rfind("capital of ") {
+        let rest = &prompt[qpos + "capital of ".len()..];
+        let country = rest
+            .split(['?', '\n', '.', ','])
+            .next()
+            .unwrap_or("")
+            .trim()
+            .trim_end_matches(" please");
+        if let Some((_, capital, _)) = ENTITIES.iter().find(|(c, _, _)| *c == country) {
+            // Wrong answer: the capital of a different (hash-chosen) country.
+            let mut idx = (fnv1a(country) as usize) % ENTITIES.len();
+            while ENTITIES[idx].1 == *capital {
+                idx = (idx + 1) % ENTITIES.len();
+            }
+            return Solution {
+                kind: PromptKind::FactualQa,
+                ideal: capital.to_string(),
+                wrong: ENTITIES[idx].1.to_string(),
+            };
+        }
+    }
+
+    if let Some(body_start) = prompt.find("Summarize in one sentence:\n") {
+        let body = prompt[body_start + "Summarize in one sentence:\n".len()..].trim();
+        let sentences: Vec<&str> = body
+            .split(". ")
+            .map(|s| s.trim_end_matches('.'))
+            .filter(|s| !s.is_empty())
+            .collect();
+        if !sentences.is_empty() {
+            return Solution {
+                kind: PromptKind::Summarization,
+                ideal: sentences[0].to_string(),
+                wrong: sentences[sentences.len() - 1].to_string(),
+            };
+        }
+    }
+
+    if let Some(inst_start) = prompt.find("Instruction: ") {
+        let inst = prompt[inst_start + "Instruction: ".len()..]
+            .split('\n')
+            .next()
+            .unwrap_or("")
+            .trim();
+        if let Some((_, answer)) = TASKS.iter().find(|(stem, _)| inst.starts_with(stem)) {
+            return Solution {
+                kind: PromptKind::Instruction,
+                ideal: answer.to_string(),
+                wrong: "i cannot help with that request in detail".to_string(),
+            };
+        }
+    }
+
+    // --- freeform fallback ---------------------------------------------------
+    let h = fnv1a(prompt);
+    let words = ["insight", "analysis", "context", "detail", "structure", "example"];
+    let pick = |i: u64| words[((h >> (i * 8)) % words.len() as u64) as usize];
+    Solution {
+        kind: PromptKind::Freeform,
+        ideal: format!(
+            "a response offering {} and {} with supporting {}",
+            pick(0),
+            pick(1),
+            pick(2)
+        ),
+        wrong: format!("a vague remark about {}", pick(3)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_capital_questions() {
+        let s = solve("Answer the question concisely.\nQuestion: what is the capital of france?");
+        assert_eq!(s.kind, PromptKind::FactualQa);
+        assert_eq!(s.ideal, "paris");
+        assert_ne!(s.wrong, "paris");
+    }
+
+    #[test]
+    fn solves_summarization() {
+        let s = solve("Summarize in one sentence:\nfirst fact. second fact. third fact.");
+        assert_eq!(s.kind, PromptKind::Summarization);
+        assert_eq!(s.ideal, "first fact");
+        assert_eq!(s.wrong, "third fact");
+    }
+
+    #[test]
+    fn solves_instruction() {
+        let s = solve("Instruction: list three uses for neural networks\nResponse:");
+        assert_eq!(s.kind, PromptKind::Instruction);
+        assert!(s.ideal.contains("storage"));
+    }
+
+    #[test]
+    fn judge_pointwise_scores_by_overlap() {
+        let p = "### SLLEVAL-JUDGE-POINTWISE\nRubric: helpfulness\n\
+                 ### CANDIDATE\nparis\n### REFERENCE\nparis\n### END";
+        let s = solve(p);
+        assert_eq!(s.kind, PromptKind::JudgePointwise);
+        assert!(s.ideal.contains("Score: 5"), "{}", s.ideal);
+
+        let p = "### SLLEVAL-JUDGE-POINTWISE\nRubric: helpfulness\n\
+                 ### CANDIDATE\ncompletely unrelated words\n### REFERENCE\nparis\n### END";
+        let s = solve(p);
+        assert!(s.ideal.contains("Score: 1"), "{}", s.ideal);
+    }
+
+    #[test]
+    fn judge_pairwise_picks_closer() {
+        let p = "### SLLEVAL-JUDGE-PAIRWISE\n### RESPONSE-A\nparis\n\
+                 ### RESPONSE-B\nwrong city\n### REFERENCE\nparis\n### END";
+        let s = solve(p);
+        assert!(s.ideal.contains("Verdict: A"));
+    }
+
+    #[test]
+    fn judge_verify_checks_grounding() {
+        let p = "### SLLEVAL-JUDGE-VERIFY\n### CLAIM\nthe capital is paris\n\
+                 ### CONTEXT\nfrance is a country; its capital city is paris\n### END";
+        assert!(solve(p).ideal.contains("SUPPORTED"));
+        let p = "### SLLEVAL-JUDGE-VERIFY\n### CLAIM\nbananas are blue\n\
+                 ### CONTEXT\nfrance is a country; its capital city is paris\n### END";
+        assert!(solve(p).ideal.contains("UNSUPPORTED"));
+    }
+
+    #[test]
+    fn freeform_is_deterministic() {
+        let a = solve("an arbitrary prompt with no known structure");
+        let b = solve("an arbitrary prompt with no known structure");
+        assert_eq!(a.ideal, b.ideal);
+        assert_eq!(a.kind, PromptKind::Freeform);
+    }
+
+    #[test]
+    fn overlap_f1_bounds() {
+        assert!((overlap_f1("a b c", "a b c") - 1.0).abs() < 1e-12);
+        assert_eq!(overlap_f1("a b c", "x y z"), 0.0);
+        let mid = overlap_f1("a b c d", "a b x y");
+        assert!(mid > 0.0 && mid < 1.0);
+    }
+}

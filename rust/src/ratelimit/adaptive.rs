@@ -1,0 +1,187 @@
+//! Adaptive rate-limit redistribution (paper §6.1 "Limitations" —
+//! implemented here as the extension the authors defer).
+//!
+//! The static 1/E split wastes budget when partitions are skewed: an
+//! executor that finishes early leaves its share idle while loaded
+//! executors throttle. The [`RateCoordinator`] periodically rebalances:
+//! each executor reports demand (recent admit + wait statistics); shares
+//! are reassigned proportionally to demand with a floor so no executor
+//! starves. The global sum never exceeds the provider budget — that is the
+//! invariant `rebalance` maintains and the property tests check.
+
+use std::sync::Mutex;
+
+/// Demand report from one executor for the last window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DemandReport {
+    /// Requests admitted in the window.
+    pub admitted: u64,
+    /// Seconds spent waiting on the bucket in the window.
+    pub waited: f64,
+    /// Whether the executor still has work queued.
+    pub backlog: bool,
+}
+
+/// Assigned per-executor share.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Share {
+    pub rpm: f64,
+    pub tpm: f64,
+}
+
+/// Coordinator state: global budget + last assignment.
+#[derive(Debug)]
+pub struct RateCoordinator {
+    global_rpm: f64,
+    global_tpm: f64,
+    executors: usize,
+    /// Minimum fraction of the even split each executor keeps.
+    floor_frac: f64,
+    shares: Mutex<Vec<Share>>,
+}
+
+impl RateCoordinator {
+    pub fn new(global_rpm: f64, global_tpm: f64, executors: usize) -> Self {
+        assert!(executors > 0);
+        let even = Share { rpm: global_rpm / executors as f64, tpm: global_tpm / executors as f64 };
+        Self {
+            global_rpm,
+            global_tpm,
+            executors,
+            floor_frac: 0.25,
+            shares: Mutex::new(vec![even; executors]),
+        }
+    }
+
+    pub fn shares(&self) -> Vec<Share> {
+        self.shares.lock().unwrap().clone()
+    }
+
+    /// Recompute shares from demand reports.
+    ///
+    /// Demand weight = admitted + wait-pressure bonus; executors with no
+    /// backlog fall to the floor share, and the freed budget is spread over
+    /// backlogged executors proportionally to weight.
+    pub fn rebalance(&self, reports: &[DemandReport]) -> Vec<Share> {
+        assert_eq!(reports.len(), self.executors);
+        let even_rpm = self.global_rpm / self.executors as f64;
+        let even_tpm = self.global_tpm / self.executors as f64;
+        let floor_rpm = even_rpm * self.floor_frac;
+        let floor_tpm = even_tpm * self.floor_frac;
+
+        let weights: Vec<f64> = reports
+            .iter()
+            .map(|r| {
+                if !r.backlog {
+                    0.0
+                } else {
+                    // Wait pressure: an executor that waited the whole
+                    // window wants ~2x; scale bonus into [1, 3].
+                    1.0 + (r.admitted as f64) + 2.0 * r.waited.clamp(0.0, 60.0) / 60.0
+                }
+            })
+            .collect();
+        let total_w: f64 = weights.iter().sum();
+
+        let mut new_shares = Vec::with_capacity(self.executors);
+        if total_w <= 0.0 {
+            // Nobody has a backlog: reset to the even split.
+            for _ in 0..self.executors {
+                new_shares.push(Share { rpm: even_rpm, tpm: even_tpm });
+            }
+        } else {
+            // Everyone keeps the floor; the remainder is demand-weighted.
+            let pool_rpm = self.global_rpm - floor_rpm * self.executors as f64;
+            let pool_tpm = self.global_tpm - floor_tpm * self.executors as f64;
+            for w in &weights {
+                let frac = w / total_w;
+                new_shares.push(Share {
+                    rpm: floor_rpm + pool_rpm * frac,
+                    tpm: floor_tpm + pool_tpm * frac,
+                });
+            }
+        }
+
+        debug_assert!(
+            (new_shares.iter().map(|s| s.rpm).sum::<f64>() - self.global_rpm).abs()
+                < 1e-6 * self.global_rpm
+        );
+        *self.shares.lock().unwrap() = new_shares.clone();
+        new_shares
+    }
+
+    pub fn global_limits(&self) -> (f64, f64) {
+        (self.global_rpm, self.global_tpm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    fn sum_rpm(shares: &[Share]) -> f64 {
+        shares.iter().map(|s| s.rpm).sum()
+    }
+
+    #[test]
+    fn even_split_initially() {
+        let c = RateCoordinator::new(8000.0, 800_000.0, 8);
+        for s in c.shares() {
+            assert!((s.rpm - 1000.0).abs() < 1e-9);
+            assert!((s.tpm - 100_000.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn idle_executors_release_budget() {
+        let c = RateCoordinator::new(8000.0, 800_000.0, 4);
+        let reports = vec![
+            DemandReport { admitted: 100, waited: 30.0, backlog: true },
+            DemandReport { admitted: 100, waited: 30.0, backlog: true },
+            DemandReport { admitted: 5, waited: 0.0, backlog: false },
+            DemandReport { admitted: 0, waited: 0.0, backlog: false },
+        ];
+        let shares = c.rebalance(&reports);
+        // Busy executors get more than the even split; idle get the floor.
+        assert!(shares[0].rpm > 2000.0);
+        assert!(shares[2].rpm < 2000.0);
+        assert!((sum_rpm(&shares) - 8000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_idle_resets_to_even() {
+        let c = RateCoordinator::new(6000.0, 600_000.0, 3);
+        let reports = vec![DemandReport::default(); 3];
+        let shares = c.rebalance(&reports);
+        for s in &shares {
+            assert!((s.rpm - 2000.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn property_budget_conserved_and_floored() {
+        check("rebalance conserves global budget", 200, |rng| {
+            let e = 1 + rng.below(16);
+            let rpm = 100.0 + rng.f64() * 100_000.0;
+            let tpm = 1000.0 + rng.f64() * 10_000_000.0;
+            let c = RateCoordinator::new(rpm, tpm, e);
+            let reports: Vec<DemandReport> = (0..e)
+                .map(|_| DemandReport {
+                    admitted: rng.below(1000) as u64,
+                    waited: rng.f64() * 60.0,
+                    backlog: rng.chance(0.7),
+                })
+                .collect();
+            let shares = c.rebalance(&reports);
+            let total: f64 = shares.iter().map(|s| s.rpm).sum();
+            ensure((total - rpm).abs() < 1e-6 * rpm, format!("sum {total} != {rpm}"))?;
+            let floor = rpm / e as f64 * 0.25;
+            for (i, s) in shares.iter().enumerate() {
+                ensure(s.rpm >= floor - 1e-9, format!("executor {i} below floor"))?;
+                ensure(s.tpm > 0.0, "tpm positive")?;
+            }
+            Ok(())
+        });
+    }
+}

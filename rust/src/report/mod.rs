@@ -1,0 +1,130 @@
+//! Plain-text / markdown table rendering for results and paper-table
+//! reproductions.
+
+pub mod tables;
+
+use crate::coordinator::{ComparisonResult, EvalResult};
+
+/// Render rows as an aligned ASCII table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<width$} | ", c, width = widths[i]));
+        }
+        line.trim_end().to_string()
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('\n');
+    out.push_str("|");
+    for w in &widths {
+        out.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Evaluation summary block (quickstart-style console output).
+pub fn eval_summary(result: &EvalResult) -> String {
+    let mut rows = Vec::new();
+    for m in &result.metrics {
+        rows.push(vec![
+            m.name.clone(),
+            format!("{:.4}", m.value),
+            format!("({:.4}, {:.4})", m.ci.lo, m.ci.hi),
+            m.ci.method.to_string(),
+            m.n.to_string(),
+            m.n_failed.to_string(),
+            m.unparseable.to_string(),
+        ]);
+    }
+    let mut out = format!(
+        "== {} — {}/{} ==\n",
+        result.task_id, result.provider, result.model
+    );
+    out.push_str(&table(
+        &["metric", "value", "95% CI", "method", "n", "failed", "unparseable"],
+        &rows,
+    ));
+    let inf = &result.inference;
+    out.push_str(&format!(
+        "inference: {} examples, {} api calls, {} cache hits ({:.1}% hit rate), \
+         {} retries, {} failed\n",
+        inf.examples,
+        inf.api_calls,
+        inf.cache_hits,
+        100.0 * inf.cache_hits as f64 / (inf.cache_hits + inf.cache_misses).max(1) as f64,
+        inf.retries,
+        inf.failed,
+    ));
+    out.push_str(&format!(
+        "cost: ${:.4}  |  latency p50 {:.0}ms p99 {:.0}ms  |  throughput {:.0}/min  |  wall {:.1}s\n",
+        inf.total_cost_usd, inf.latency_p50_ms, inf.latency_p99_ms, inf.throughput_per_min, inf.wall_secs,
+    ));
+    out
+}
+
+/// Comparison summary block.
+pub fn comparison_summary(result: &ComparisonResult) -> String {
+    let mut rows = Vec::new();
+    for c in &result.comparisons {
+        rows.push(vec![
+            c.metric.clone(),
+            format!("{:.4}", c.value_a),
+            format!("{:.4}", c.value_b),
+            format!("{:+.4}", c.value_a - c.value_b),
+            c.test.test.to_string(),
+            format!("{:.4}", c.test.p_value),
+            if c.test.significant(result.alpha) { "YES".into() } else { "no".into() },
+            format!("{:.3} ({})", c.cohens_d.value, c.cohens_d.magnitude()),
+        ]);
+    }
+    let mut out = format!("== {} vs {} (α = {}) ==\n", result.model_a, result.model_b, result.alpha);
+    out.push_str(&table(
+        &["metric", "A", "B", "Δ", "test", "p", "sig", "cohen's d"],
+        &rows,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["longer-name".into(), "2.5".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All rows equal width.
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[3].contains("longer-name"));
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let t = table(&["a"], &[]);
+        assert!(t.contains("| a"));
+    }
+}

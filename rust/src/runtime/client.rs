@@ -1,0 +1,251 @@
+//! PJRT runtime: load the AOT artifacts once, execute them from the L3 hot
+//! path. Python never runs here — the HLO text was produced at build time
+//! by `python/compile/aot.py`.
+//!
+//! Weight tensors are transferred to the device once at load (as
+//! `PjRtBuffer`s) and reused for every call; only the small per-call inputs
+//! (token ids, masks, resample indices) cross the host↔device boundary per
+//! execution.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use sha2::{Digest, Sha256};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+use super::tokenize::SimTokenizer;
+use crate::util::rng::Rng;
+
+/// Per-example BERTScore output.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BertScore {
+    pub precision: f32,
+    pub recall: f32,
+    pub f1: f32,
+}
+
+/// Loaded semantic runtime: one PJRT CPU client + three compiled
+/// executables + resident weight buffers.
+///
+/// NOTE: PJRT handles are raw pointers (`!Send`/`!Sync`); the coordinator
+/// owns the runtime on a dedicated thread and funnels batches through it.
+pub struct SemanticRuntime {
+    pub manifest: Manifest,
+    pub tokenizer: SimTokenizer,
+    client: PjRtClient,
+    weights: Vec<PjRtBuffer>,
+    embedder: PjRtLoadedExecutable,
+    bertscore: PjRtLoadedExecutable,
+    bootstrap: PjRtLoadedExecutable,
+    /// Executions per artifact, for perf accounting.
+    pub exec_counts: std::cell::Cell<(u64, u64, u64)>,
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {path:?}"))
+}
+
+impl SemanticRuntime {
+    /// Load manifest, weights, and compile all three artifacts.
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        // Weights: verify integrity, then transfer each tensor to device.
+        let blob = std::fs::read(&manifest.weights_file)
+            .with_context(|| format!("reading {:?}", manifest.weights_file))?;
+        let digest = format!("{:x}", Sha256::digest(&blob));
+        if digest != manifest.weights_sha256 {
+            bail!(
+                "weights.bin sha256 mismatch: manifest {} != file {digest}",
+                manifest.weights_sha256
+            );
+        }
+        if blob.len() != manifest.total_weights() * 4 {
+            bail!("weights.bin size mismatch");
+        }
+        let mut weights = Vec::with_capacity(manifest.params.len());
+        let mut off = 0usize;
+        for p in &manifest.params {
+            let n = p.len();
+            let mut host = vec![0f32; n];
+            let bytes = &blob[off * 4..(off + n) * 4];
+            for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+                host[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            weights.push(client.buffer_from_host_buffer(&host, &p.shape, None)?);
+            off += n;
+        }
+
+        let embedder = compile(&client, &manifest.embedder_hlo)?;
+        let bertscore = compile(&client, &manifest.bertscore_hlo)?;
+        let bootstrap = compile(&client, &manifest.bootstrap_hlo)?;
+        let tokenizer = SimTokenizer::new(manifest.model.vocab_size, manifest.model.max_seq);
+
+        Ok(Self {
+            manifest,
+            tokenizer,
+            client,
+            weights,
+            embedder,
+            bertscore,
+            bootstrap,
+            exec_counts: std::cell::Cell::new((0, 0, 0)),
+        })
+    }
+
+    fn ids_buffer(&self, ids: &[i32]) -> Result<PjRtBuffer> {
+        let m = &self.manifest.model;
+        Ok(self
+            .client
+            .buffer_from_host_buffer(ids, &[m.batch, m.max_seq], None)?)
+    }
+
+    fn mask_buffer(&self, mask: &[f32]) -> Result<PjRtBuffer> {
+        let m = &self.manifest.model;
+        Ok(self
+            .client
+            .buffer_from_host_buffer(mask, &[m.batch, m.max_seq], None)?)
+    }
+
+    /// Embed one fixed-size batch: `ids`/`mask` are row-major
+    /// `[batch, max_seq]`. Returns `[batch, d_model]` row-major.
+    pub fn embed_batch(&self, ids: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        assert_eq!(ids.len(), m.batch * m.max_seq);
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        let ids_b = self.ids_buffer(ids)?;
+        let mask_b = self.mask_buffer(mask)?;
+        args.push(&ids_b);
+        args.push(&mask_b);
+        let out = self.embedder.execute_b(&args)?;
+        let lit = out[0][0].to_literal_sync()?.to_tuple1()?;
+        let (e, b, s) = self.exec_counts.get();
+        self.exec_counts.set((e + 1, b, s));
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Embed arbitrarily many texts: tokenize, pad to full batches, return
+    /// one unit-norm `d_model` vector per text.
+    pub fn embed_texts(&self, texts: &[&str]) -> Result<Vec<Vec<f32>>> {
+        let m = &self.manifest.model;
+        let (bsz, seq, d) = (m.batch, m.max_seq, m.d_model);
+        let mut out = Vec::with_capacity(texts.len());
+        for chunk in texts.chunks(bsz) {
+            let mut ids = vec![0i32; bsz * seq];
+            let mut mask = vec![0f32; bsz * seq];
+            for (i, text) in chunk.iter().enumerate() {
+                let (t_ids, t_mask) = self.tokenizer.encode(text);
+                ids[i * seq..(i + 1) * seq].copy_from_slice(&t_ids);
+                mask[i * seq..(i + 1) * seq].copy_from_slice(&t_mask);
+            }
+            let pooled = self.embed_batch(&ids, &mask)?;
+            for i in 0..chunk.len() {
+                out.push(pooled[i * d..(i + 1) * d].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    /// BERTScore over one fixed batch of (candidate, reference) id/mask
+    /// pairs. Returns `batch` scores.
+    pub fn bertscore_batch(
+        &self,
+        ids_a: &[i32],
+        mask_a: &[f32],
+        ids_b: &[i32],
+        mask_b: &[f32],
+    ) -> Result<Vec<BertScore>> {
+        let m = &self.manifest.model;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        let a_ids = self.ids_buffer(ids_a)?;
+        let a_mask = self.mask_buffer(mask_a)?;
+        let b_ids = self.ids_buffer(ids_b)?;
+        let b_mask = self.mask_buffer(mask_b)?;
+        args.extend([&a_ids, &a_mask, &b_ids, &b_mask]);
+        let out = self.bertscore.execute_b(&args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        let (p, r, f1) = lit.to_tuple3()?;
+        let p = p.to_vec::<f32>()?;
+        let r = r.to_vec::<f32>()?;
+        let f1 = f1.to_vec::<f32>()?;
+        let (e, b, s) = self.exec_counts.get();
+        self.exec_counts.set((e, b + 1, s));
+        Ok((0..m.batch)
+            .map(|i| BertScore { precision: p[i], recall: r[i], f1: f1[i] })
+            .collect())
+    }
+
+    /// BERTScore for arbitrarily many (candidate, reference) text pairs.
+    pub fn bertscore_texts(&self, pairs: &[(&str, &str)]) -> Result<Vec<BertScore>> {
+        let m = &self.manifest.model;
+        let (bsz, seq) = (m.batch, m.max_seq);
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(bsz) {
+            let mut ids_a = vec![0i32; bsz * seq];
+            let mut mask_a = vec![0f32; bsz * seq];
+            let mut ids_b = vec![0i32; bsz * seq];
+            let mut mask_b = vec![0f32; bsz * seq];
+            for (i, (cand, reference)) in chunk.iter().enumerate() {
+                let (ia, ma) = self.tokenizer.encode(cand);
+                let (ib, mb) = self.tokenizer.encode(reference);
+                ids_a[i * seq..(i + 1) * seq].copy_from_slice(&ia);
+                mask_a[i * seq..(i + 1) * seq].copy_from_slice(&ma);
+                ids_b[i * seq..(i + 1) * seq].copy_from_slice(&ib);
+                mask_b[i * seq..(i + 1) * seq].copy_from_slice(&mb);
+            }
+            let scores = self.bertscore_batch(&ids_a, &mask_a, &ids_b, &mask_b)?;
+            out.extend_from_slice(&scores[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    /// Bootstrap resample means on the device: draws `resamples` index rows
+    /// with the supplied RNG and returns the resample means.
+    ///
+    /// Falls back to `None` when `values.len() > max_n`; the caller then
+    /// uses the native Rust bootstrap (`stats::bootstrap`).
+    pub fn bootstrap_means(&self, values: &[f64], rng: &mut Rng) -> Result<Option<Vec<f64>>> {
+        let b = &self.manifest.bootstrap;
+        let n = values.len();
+        if n == 0 || n > b.max_n {
+            return Ok(None);
+        }
+        let (r, max_n) = (b.resamples, b.max_n);
+
+        let mut vals = vec![0f32; max_n];
+        for (i, &v) in values.iter().enumerate() {
+            vals[i] = v as f32;
+        }
+        let mut idx = vec![0i32; r * max_n];
+        let mut mask = vec![0f32; r * max_n];
+        for row in 0..r {
+            let base = row * max_n;
+            for j in 0..n {
+                idx[base + j] = rng.below(n) as i32;
+                mask[base + j] = 1.0;
+            }
+        }
+
+        let vals_b = self.client.buffer_from_host_buffer(&vals, &[max_n], None)?;
+        let idx_b = self.client.buffer_from_host_buffer(&idx, &[r, max_n], None)?;
+        let mask_b = self.client.buffer_from_host_buffer(&mask, &[r, max_n], None)?;
+        let out = self.bootstrap.execute_b(&[&vals_b, &idx_b, &mask_b])?;
+        let lit = out[0][0].to_literal_sync()?.to_tuple1()?;
+        let means = lit.to_vec::<f32>()?;
+        let (e, bb, s) = self.exec_counts.get();
+        self.exec_counts.set((e, bb, s + 1));
+        Ok(Some(means.into_iter().map(|m| m as f64).collect()))
+    }
+
+    /// Cosine similarity between two embedding vectors (both unit-norm).
+    pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+}

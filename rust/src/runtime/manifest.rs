@@ -1,0 +1,160 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// SimLM encoder dimensions (must match `python/compile/model.py`).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub d_ff: usize,
+    pub batch: usize,
+    pub seed: u64,
+    pub kernel_tile_m: usize,
+    pub kernel_tile_n: usize,
+}
+
+/// Fixed shapes of the bootstrap-resample graph.
+#[derive(Debug, Clone)]
+pub struct BootstrapDims {
+    pub resamples: usize,
+    pub max_n: usize,
+}
+
+/// One weight tensor: name + shape, in the exact order of `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub bootstrap: BootstrapDims,
+    pub params: Vec<ParamSpec>,
+    pub weights_file: PathBuf,
+    pub weights_sha256: String,
+    pub embedder_hlo: PathBuf,
+    pub bertscore_hlo: PathBuf,
+    pub bootstrap_hlo: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        if v.get("format_version")?.as_i64()? != 1 {
+            bail!("unsupported manifest format_version");
+        }
+
+        let m = v.get("model")?;
+        let model = ModelDims {
+            vocab_size: m.get("vocab_size")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            max_seq: m.get("max_seq")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            batch: m.get("batch")?.as_usize()?,
+            seed: m.get("seed")?.as_i64()? as u64,
+            kernel_tile_m: m.usize_or("kernel_tile_m", 32),
+            kernel_tile_n: m.usize_or("kernel_tile_n", 32),
+        };
+
+        let b = v.get("bootstrap")?;
+        let bootstrap = BootstrapDims {
+            resamples: b.get("resamples")?.as_usize()?,
+            max_n: b.get("max_n")?.as_usize()?,
+        };
+
+        let w = v.get("weights")?;
+        let params = w
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize().map_err(anyhow::Error::from))
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let art = v.get("artifacts")?;
+        let art_file = |name: &str| -> Result<PathBuf> {
+            Ok(dir.join(art.get(name)?.get("file")?.as_str()?))
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            weights_file: dir.join(w.get("file")?.as_str()?),
+            weights_sha256: w.get("sha256")?.as_str()?.to_string(),
+            embedder_hlo: art_file("embedder")?,
+            bertscore_hlo: art_file("bertscore")?,
+            bootstrap_hlo: art_file("bootstrap")?,
+            model,
+            bootstrap,
+            params,
+        })
+    }
+
+    /// Total weight scalar count (f32 elements in weights.bin).
+    pub fn total_weights(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_manifest() {
+        let dir = artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.d_model % m.model.n_heads, 0);
+        assert!(m.model.batch > 0);
+        assert!(m.total_weights() > 0);
+        // Weight blob size must match the manifest exactly.
+        let meta = std::fs::metadata(&m.weights_file).unwrap();
+        assert_eq!(meta.len() as usize, m.total_weights() * 4);
+        assert!(m.embedder_hlo.exists());
+        assert!(m.bertscore_hlo.exists());
+        assert!(m.bootstrap_hlo.exists());
+    }
+}

@@ -1,0 +1,25 @@
+//! Runtime layer: PJRT CPU client wrapping the `xla` crate.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt` + `weights.bin` + `manifest.json`), compiles them
+//! once, and executes them from the coordinator's metric/statistics stages.
+//! This is the only module that touches PJRT; everything above it deals in
+//! plain Rust types.
+
+pub mod client;
+pub mod manifest;
+pub mod tokenize;
+
+pub use client::{BertScore, SemanticRuntime};
+pub use manifest::Manifest;
+pub use tokenize::SimTokenizer;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$SLLEVAL_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("SLLEVAL_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,127 @@
+//! SimTokenizer: deterministic hash tokenizer for the SimLM encoder.
+//!
+//! The artifacts embed no learned vocabulary, so tokenization is a stable
+//! word-hash into `[RESERVED, vocab)`. Both sides of a comparison tokenize
+//! identically, which is the property the semantic metrics need: equal
+//! strings → identical token ids → cosine similarity 1.0, and shared words
+//! map to shared ids so partial overlap is graded smoothly.
+
+/// Token id 0 is padding, 1 is BOS/unknown-empty.
+const PAD: i32 = 0;
+const BOS: i32 = 1;
+const RESERVED: u64 = 2;
+
+#[derive(Debug, Clone)]
+pub struct SimTokenizer {
+    pub vocab_size: usize,
+    pub max_seq: usize,
+}
+
+impl SimTokenizer {
+    pub fn new(vocab_size: usize, max_seq: usize) -> Self {
+        Self { vocab_size, max_seq }
+    }
+
+    /// FNV-1a over the lowercased word bytes.
+    fn word_id(&self, word: &str) -> i32 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in word.bytes() {
+            let b = b.to_ascii_lowercase();
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        (RESERVED + h % (self.vocab_size as u64 - RESERVED)) as i32
+    }
+
+    /// Split into alphanumeric word chunks (punctuation-separated).
+    fn words(text: &str) -> impl Iterator<Item = &str> {
+        text.split(|c: char| !c.is_alphanumeric() && c != '\'')
+            .filter(|w| !w.is_empty())
+    }
+
+    /// Encode to fixed-length `(ids, mask)` of `max_seq`, truncating long
+    /// inputs and padding short ones.
+    pub fn encode(&self, text: &str) -> (Vec<i32>, Vec<f32>) {
+        let mut ids = Vec::with_capacity(self.max_seq);
+        ids.push(BOS);
+        for w in Self::words(text) {
+            if ids.len() >= self.max_seq {
+                break;
+            }
+            ids.push(self.word_id(w));
+        }
+        let used = ids.len();
+        let mut mask = vec![1.0f32; used];
+        ids.resize(self.max_seq, PAD);
+        mask.resize(self.max_seq, 0.0);
+        (ids, mask)
+    }
+
+    /// Number of non-pad tokens `encode` would produce.
+    pub fn token_count(&self, text: &str) -> usize {
+        (1 + Self::words(text).count()).min(self.max_seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> SimTokenizer {
+        SimTokenizer::new(4096, 64)
+    }
+
+    #[test]
+    fn fixed_length_output() {
+        let (ids, mask) = tok().encode("hello world");
+        assert_eq!(ids.len(), 64);
+        assert_eq!(mask.len(), 64);
+        assert_eq!(mask.iter().filter(|&&m| m > 0.0).count(), 3); // BOS + 2
+    }
+
+    #[test]
+    fn deterministic_and_case_insensitive() {
+        let (a, _) = tok().encode("The Quick Fox");
+        let (b, _) = tok().encode("the quick fox");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn equal_strings_equal_ids() {
+        let t = tok();
+        assert_eq!(t.encode("new york city"), t.encode("new york city"));
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let (ids, _) = tok().encode("a b c d e f g punctuation, and: more!");
+        for &id in &ids {
+            assert!((0..4096).contains(&id), "id {id} out of range");
+        }
+    }
+
+    #[test]
+    fn truncates_long_input() {
+        let long: String = (0..500).map(|i| format!("w{i} ")).collect();
+        let (ids, mask) = tok().encode(&long);
+        assert_eq!(ids.len(), 64);
+        assert!(mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn empty_input_is_bos_only() {
+        let (ids, mask) = tok().encode("");
+        assert_eq!(ids[0], 1);
+        assert_eq!(mask[0], 1.0);
+        assert_eq!(mask[1], 0.0);
+    }
+
+    #[test]
+    fn shared_words_share_ids() {
+        let t = tok();
+        let (a, _) = t.encode("paris is the capital");
+        let (b, _) = t.encode("capital paris");
+        // "paris" id appears in both encodings.
+        assert!(b.contains(&a[1]));
+    }
+}

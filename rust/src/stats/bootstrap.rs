@@ -1,0 +1,139 @@
+//! Bootstrap resampling engine.
+//!
+//! Native Rust implementation (hot path: index sampling + statistic reuse
+//! of a scratch buffer). The coordinator can offload mean-bootstraps to the
+//! XLA `bootstrap.hlo` artifact when shapes fit (see
+//! `runtime::SemanticRuntime::bootstrap_means`); this module is the
+//! fallback and the reference.
+
+use crate::util::rng::Rng;
+
+/// Draw `iterations` bootstrap resamples of `values` and return the
+/// statistic of each resample.
+pub fn bootstrap_statistics<F: Fn(&[f64]) -> f64>(
+    values: &[f64],
+    stat: &F,
+    iterations: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let n = values.len();
+    if n == 0 {
+        return vec![f64::NAN; iterations];
+    }
+    let mut out = Vec::with_capacity(iterations);
+    let mut scratch = vec![0.0; n];
+    for _ in 0..iterations {
+        for slot in scratch.iter_mut() {
+            *slot = values[rng.below(n)];
+        }
+        out.push(stat(&scratch));
+    }
+    out
+}
+
+/// Fast path for the mean statistic: accumulate directly, no scratch
+/// buffer or closure dispatch. Identical distribution to
+/// `bootstrap_statistics(values, &mean, ...)`.
+pub fn bootstrap_means(values: &[f64], iterations: usize, rng: &mut Rng) -> Vec<f64> {
+    let n = values.len();
+    if n == 0 {
+        return vec![f64::NAN; iterations];
+    }
+    let inv_n = 1.0 / n as f64;
+    let mut out = Vec::with_capacity(iterations);
+    for _ in 0..iterations {
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += values[rng.below(n)];
+        }
+        out.push(acc * inv_n);
+    }
+    out
+}
+
+/// Leave-one-out jackknife statistics (BCa acceleration).
+pub fn jackknife_statistics<F: Fn(&[f64]) -> f64>(values: &[f64], stat: &F) -> Vec<f64> {
+    let n = values.len();
+    if n < 2 {
+        return vec![stat(values)];
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut scratch = Vec::with_capacity(n - 1);
+    for i in 0..n {
+        scratch.clear();
+        scratch.extend_from_slice(&values[..i]);
+        scratch.extend_from_slice(&values[i + 1..]);
+        out.push(stat(&scratch));
+    }
+    out
+}
+
+/// Jackknife means without re-summing: O(n) total.
+pub fn jackknife_means(values: &[f64]) -> Vec<f64> {
+    let n = values.len();
+    if n < 2 {
+        return values.to_vec();
+    }
+    let total: f64 = values.iter().sum();
+    let inv = 1.0 / (n - 1) as f64;
+    values.iter().map(|v| (total - v) * inv).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::describe::{mean, std_dev};
+
+    #[test]
+    fn bootstrap_mean_distribution() {
+        // Bootstrap means center on the sample mean with sd ≈ sem.
+        let mut rng = Rng::new(1);
+        let values: Vec<f64> = (0..200).map(|_| rng.normal_with(5.0, 2.0)).collect();
+        let m = mean(&values);
+        let sem = std_dev(&values) / (values.len() as f64).sqrt();
+        let boots = bootstrap_means(&values, 4000, &mut rng);
+        let bm = mean(&boots);
+        let bsd = std_dev(&boots);
+        assert!((bm - m).abs() < 3.0 * sem / (4000f64).sqrt() + 0.01, "bm {bm} m {m}");
+        assert!((bsd - sem).abs() / sem < 0.1, "bsd {bsd} sem {sem}");
+    }
+
+    #[test]
+    fn fast_and_generic_paths_agree_statistically() {
+        let mut rng = Rng::new(2);
+        let values: Vec<f64> = (0..100).map(|_| rng.f64()).collect();
+        let mut r1 = Rng::new(3);
+        let fast = bootstrap_means(&values, 2000, &mut r1);
+        let mut r2 = Rng::new(3);
+        let gen = bootstrap_statistics(&values, &mean, 2000, &mut r2);
+        // Same RNG stream and same index draws → identical sequences.
+        for (f, g) in fast.iter().zip(&gen) {
+            assert!((f - g).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn jackknife_means_match_generic() {
+        let values = [1.0, 2.0, 3.0, 4.0, 5.5];
+        let fast = jackknife_means(&values);
+        let gen = jackknife_statistics(&values, &mean);
+        for (f, g) in fast.iter().zip(&gen) {
+            assert!((f - g).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let mut rng = Rng::new(0);
+        let b = bootstrap_means(&[], 5, &mut rng);
+        assert_eq!(b.len(), 5);
+        assert!(b.iter().all(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn constant_values_constant_bootstrap() {
+        let mut rng = Rng::new(4);
+        let b = bootstrap_means(&[7.0; 30], 100, &mut rng);
+        assert!(b.iter().all(|&x| (x - 7.0).abs() < 1e-12));
+    }
+}

@@ -1,0 +1,223 @@
+//! Confidence intervals (paper §4.2): percentile bootstrap, BCa bootstrap,
+//! and analytical methods (t-based for means, Wilson for proportions).
+
+use super::bootstrap::{bootstrap_statistics, jackknife_statistics};
+use super::describe::{mean, quantile_sorted, std_err};
+use super::special::{normal_cdf, normal_ppf, t_ppf};
+use crate::util::rng::Rng;
+
+/// A two-sided confidence interval around a point estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConfidenceInterval {
+    pub point: f64,
+    pub lo: f64,
+    pub hi: f64,
+    pub level: f64,
+    pub method: &'static str,
+}
+
+impl ConfidenceInterval {
+    pub fn contains(&self, v: f64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+/// Percentile bootstrap CI of the mean-like statistic `stat` (paper §4.2).
+pub fn percentile_bootstrap<F: Fn(&[f64]) -> f64>(
+    values: &[f64],
+    stat: F,
+    level: f64,
+    iterations: usize,
+    rng: &mut Rng,
+) -> ConfidenceInterval {
+    let point = stat(values);
+    let mut boots = bootstrap_statistics(values, &stat, iterations, rng);
+    boots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let alpha = 1.0 - level;
+    ConfidenceInterval {
+        point,
+        lo: quantile_sorted(&boots, alpha / 2.0),
+        hi: quantile_sorted(&boots, 1.0 - alpha / 2.0),
+        level,
+        method: "percentile",
+    }
+}
+
+/// Bias-corrected and accelerated (BCa) bootstrap CI (Efron & Tibshirani).
+///
+/// z0 from the fraction of bootstrap stats below the point estimate; the
+/// acceleration from jackknife skewness.
+pub fn bca_bootstrap<F: Fn(&[f64]) -> f64>(
+    values: &[f64],
+    stat: F,
+    level: f64,
+    iterations: usize,
+    rng: &mut Rng,
+) -> ConfidenceInterval {
+    let point = stat(values);
+    let mut boots = bootstrap_statistics(values, &stat, iterations, rng);
+    boots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // Bias correction z0.
+    let below = boots.iter().filter(|&&b| b < point).count() as f64;
+    let prop = (below / boots.len() as f64).clamp(1e-9, 1.0 - 1e-9);
+    let z0 = normal_ppf(prop);
+
+    // Acceleration from jackknife values.
+    let jack = jackknife_statistics(values, &stat);
+    let jmean = mean(&jack);
+    let num: f64 = jack.iter().map(|j| (jmean - j).powi(3)).sum();
+    let den: f64 = jack.iter().map(|j| (jmean - j).powi(2)).sum::<f64>().powf(1.5);
+    let a = if den.abs() < 1e-300 { 0.0 } else { num / (6.0 * den) };
+
+    let alpha = 1.0 - level;
+    let z_lo = normal_ppf(alpha / 2.0);
+    let z_hi = normal_ppf(1.0 - alpha / 2.0);
+    let adj = |z: f64| -> f64 {
+        let zc = z0 + (z0 + z) / (1.0 - a * (z0 + z));
+        normal_cdf(zc).clamp(0.0, 1.0)
+    };
+    ConfidenceInterval {
+        point,
+        lo: quantile_sorted(&boots, adj(z_lo)),
+        hi: quantile_sorted(&boots, adj(z_hi)),
+        level,
+        method: "bca",
+    }
+}
+
+/// Analytical t-based CI for a mean: x̄ ± t_{α/2, n-1} · s/√n.
+pub fn t_interval(values: &[f64], level: f64) -> ConfidenceInterval {
+    let n = values.len();
+    let point = mean(values);
+    if n < 2 {
+        return ConfidenceInterval { point, lo: point, hi: point, level, method: "t" };
+    }
+    let alpha = 1.0 - level;
+    let tcrit = t_ppf(1.0 - alpha / 2.0, (n - 1) as f64);
+    let half = tcrit * std_err(values);
+    ConfidenceInterval { point, lo: point - half, hi: point + half, level, method: "t" }
+}
+
+/// Wilson score interval for a proportion (paper §4.2: better behaviour
+/// near 0/1 than the Wald interval).
+pub fn wilson_interval(successes: u64, n: u64, level: f64) -> ConfidenceInterval {
+    if n == 0 {
+        return ConfidenceInterval { point: f64::NAN, lo: 0.0, hi: 1.0, level, method: "wilson" };
+    }
+    let p = successes as f64 / n as f64;
+    let z = normal_ppf(1.0 - (1.0 - level) / 2.0);
+    let nf = n as f64;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / nf;
+    let center = (p + z2 / (2.0 * nf)) / denom;
+    let half = z * (p * (1.0 - p) / nf + z2 / (4.0 * nf * nf)).sqrt() / denom;
+    ConfidenceInterval {
+        point: p,
+        lo: (center - half).max(0.0),
+        hi: (center + half).min(1.0),
+        level,
+        method: "wilson",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    fn normal_sample(n: usize, mu: f64, sd: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_with(mu, sd)).collect()
+    }
+
+    #[test]
+    fn t_interval_matches_known() {
+        // scipy: t.interval(0.95, 9, loc=m, scale=sem) over 10 values.
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        let ci = t_interval(&xs, 0.95);
+        assert!((ci.point - 5.5).abs() < 1e-12);
+        // scipy gives (3.334149409, 7.665850591)
+        assert!((ci.lo - 3.3341494102783162).abs() < 1e-6, "lo {}", ci.lo);
+        assert!((ci.hi - 7.665850589721684).abs() < 1e-6, "hi {}", ci.hi);
+    }
+
+    #[test]
+    fn wilson_matches_known() {
+        // statsmodels proportion_confint(8, 10, method='wilson')
+        // = (0.4901625, 0.9433178)
+        let ci = wilson_interval(8, 10, 0.95);
+        assert!((ci.lo - 0.49016).abs() < 1e-4, "lo {}", ci.lo);
+        assert!((ci.hi - 0.94331).abs() < 1e-4, "hi {}", ci.hi);
+    }
+
+    #[test]
+    fn wilson_edge_cases() {
+        let ci = wilson_interval(0, 20, 0.95);
+        assert_eq!(ci.point, 0.0);
+        assert!(ci.lo >= 0.0 && ci.hi > 0.0 && ci.hi < 0.3);
+        let ci = wilson_interval(20, 20, 0.95);
+        assert!(ci.lo > 0.7 && ci.hi <= 1.0);
+        let ci = wilson_interval(0, 0, 0.95);
+        assert!(ci.point.is_nan());
+    }
+
+    #[test]
+    fn bootstrap_cis_cover_point() {
+        let xs = normal_sample(100, 2.0, 1.0, 3);
+        let mut rng = Rng::new(5);
+        let pct = percentile_bootstrap(&xs, mean, 0.95, 500, &mut rng);
+        assert!(pct.contains(pct.point));
+        let mut rng = Rng::new(5);
+        let bca = bca_bootstrap(&xs, mean, 0.95, 500, &mut rng);
+        assert!(bca.contains(bca.point));
+        // Both should be near the t interval for normal data.
+        let t = t_interval(&xs, 0.95);
+        assert!((pct.lo - t.lo).abs() < 0.15, "pct lo {} t lo {}", pct.lo, t.lo);
+        assert!((bca.hi - t.hi).abs() < 0.15);
+    }
+
+    #[test]
+    fn property_ci_ordering() {
+        check("ci lo <= point <= hi", 50, |rng| {
+            let n = 10 + rng.below(100);
+            let xs: Vec<f64> = (0..n).map(|_| rng.lognormal(0.0, 0.6)).collect();
+            let mut brng = rng.fork(1);
+            let pct = percentile_bootstrap(&xs, mean, 0.95, 200, &mut brng);
+            let bca = bca_bootstrap(&xs, mean, 0.95, 200, &mut brng);
+            let t = t_interval(&xs, 0.95);
+            ensure(pct.lo <= pct.point + 1e-9 && pct.point <= pct.hi + 1e-9, "pct order")?;
+            ensure(bca.lo <= bca.hi, "bca order")?;
+            ensure(t.lo <= t.point && t.point <= t.hi, "t order")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn higher_level_wider_interval() {
+        let xs = normal_sample(50, 0.0, 1.0, 7);
+        let c90 = t_interval(&xs, 0.90);
+        let c99 = t_interval(&xs, 0.99);
+        assert!(c99.width() > c90.width());
+    }
+
+    #[test]
+    fn bca_shifts_for_skewed_data() {
+        // Log-normal data: BCa interval should differ from percentile
+        // (that's the whole point of the correction).
+        let mut rng = Rng::new(11);
+        let xs: Vec<f64> = (0..60).map(|_| rng.lognormal(0.0, 0.8)).collect();
+        let mut r1 = Rng::new(13);
+        let pct = percentile_bootstrap(&xs, mean, 0.95, 2000, &mut r1);
+        let mut r2 = Rng::new(13);
+        let bca = bca_bootstrap(&xs, mean, 0.95, 2000, &mut r2);
+        assert!(
+            (pct.lo - bca.lo).abs() > 1e-4 || (pct.hi - bca.hi).abs() > 1e-4,
+            "BCa should adjust percentiles for skewed data"
+        );
+    }
+}

@@ -1,0 +1,202 @@
+//! Cluster-aware inference (paper §6.1 limitation, implemented here):
+//! evaluation datasets often contain *related* examples (follow-up
+//! questions on one topic), violating the independence assumption of the
+//! standard tests. Two remedies:
+//!
+//! - **cluster-robust paired t-test** — aggregate per-example differences
+//!   to cluster means and t-test across clusters (conservative, simple);
+//! - **cluster bootstrap CI** — resample whole clusters with replacement.
+
+use super::describe::{mean, quantile_sorted, std_dev};
+use super::special::t_sf_two_sided;
+use super::tests::TestResult;
+use super::ConfidenceInterval;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Group per-example values by cluster id.
+fn group<'a>(values: &'a [f64], clusters: &'a [u64]) -> BTreeMap<u64, Vec<f64>> {
+    assert_eq!(values.len(), clusters.len());
+    let mut map: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
+    for (&v, &c) in values.iter().zip(clusters) {
+        map.entry(c).or_default().push(v);
+    }
+    map
+}
+
+/// Cluster-robust paired t-test: per-cluster mean differences, t-test
+/// across clusters (df = clusters - 1).
+pub fn clustered_paired_t_test(a: &[f64], b: &[f64], clusters: &[u64]) -> TestResult {
+    assert_eq!(a.len(), b.len());
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let by_cluster = group(&diffs, clusters);
+    let cluster_means: Vec<f64> = by_cluster.values().map(|v| mean(v)).collect();
+    let g = cluster_means.len();
+    if g < 2 {
+        return TestResult { statistic: 0.0, p_value: 1.0, test: "clustered_t", n_used: g };
+    }
+    let md = mean(&cluster_means);
+    let sd = std_dev(&cluster_means);
+    if sd < 1e-300 {
+        let p = if md.abs() < 1e-300 { 1.0 } else { 0.0 };
+        return TestResult { statistic: 0.0, p_value: p, test: "clustered_t", n_used: g };
+    }
+    let t = md / (sd / (g as f64).sqrt());
+    TestResult {
+        statistic: t,
+        p_value: t_sf_two_sided(t, (g - 1) as f64),
+        test: "clustered_t",
+        n_used: g,
+    }
+}
+
+/// Cluster bootstrap percentile CI of the mean: resample clusters with
+/// replacement, pool their values, take the mean.
+pub fn cluster_bootstrap_ci(
+    values: &[f64],
+    clusters: &[u64],
+    level: f64,
+    iterations: usize,
+    rng: &mut Rng,
+) -> ConfidenceInterval {
+    let by_cluster: Vec<Vec<f64>> = group(values, clusters).into_values().collect();
+    let g = by_cluster.len();
+    let point = mean(values);
+    if g == 0 {
+        return ConfidenceInterval { point, lo: point, hi: point, level, method: "cluster_boot" };
+    }
+    let mut boots = Vec::with_capacity(iterations);
+    for _ in 0..iterations {
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for _ in 0..g {
+            let c = &by_cluster[rng.below(g)];
+            acc += c.iter().sum::<f64>();
+            n += c.len();
+        }
+        boots.push(acc / n.max(1) as f64);
+    }
+    boots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let alpha = 1.0 - level;
+    ConfidenceInterval {
+        point,
+        lo: quantile_sorted(&boots, alpha / 2.0),
+        hi: quantile_sorted(&boots, 1.0 - alpha / 2.0),
+        level,
+        method: "cluster_boot",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::paired_t_test;
+
+    /// Build clustered data: `g` clusters × `m` members; within-cluster
+    /// values share a random cluster effect → strong dependence.
+    fn clustered_data(
+        g: usize,
+        m: usize,
+        cluster_sd: f64,
+        noise_sd: f64,
+        shift: f64,
+        rng: &mut Rng,
+    ) -> (Vec<f64>, Vec<f64>, Vec<u64>) {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let mut cl = Vec::new();
+        for c in 0..g {
+            let effect = rng.normal_with(0.0, cluster_sd);
+            for _ in 0..m {
+                let base = rng.normal_with(effect, noise_sd);
+                a.push(base);
+                b.push(base + shift + rng.normal_with(0.0, noise_sd * 0.1));
+                cl.push(c as u64);
+            }
+        }
+        (a, b, cl)
+    }
+
+    #[test]
+    fn clustered_test_uses_cluster_count() {
+        let mut rng = Rng::new(1);
+        let (a, b, cl) = clustered_data(8, 25, 1.0, 0.2, 0.0, &mut rng);
+        let r = clustered_paired_t_test(&a, &b, &cl);
+        assert_eq!(r.n_used, 8);
+        assert_eq!(r.test, "clustered_t");
+    }
+
+    #[test]
+    fn naive_test_overconfident_under_clustering() {
+        // Under a clustered null with per-cluster difference shifts, the
+        // naive paired t treats 200 correlated examples as independent and
+        // rejects far too often; the clustered test stays calibrated.
+        let mut rng = Rng::new(2);
+        let trials = 300;
+        let mut naive_rej = 0;
+        let mut clustered_rej = 0;
+        for _ in 0..trials {
+            // Null at the *cluster* level: each cluster's B-shift is drawn
+            // with mean 0, but is constant within the cluster.
+            let g = 10;
+            let m = 20;
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            let mut cl = Vec::new();
+            for c in 0..g {
+                let cluster_shift = rng.normal_with(0.0, 0.5);
+                for _ in 0..m {
+                    let x = rng.normal();
+                    a.push(x);
+                    b.push(x + cluster_shift + rng.normal_with(0.0, 0.1));
+                    cl.push(c as u64);
+                }
+            }
+            if paired_t_test(&a, &b).significant(0.05) {
+                naive_rej += 1;
+            }
+            if clustered_paired_t_test(&a, &b, &cl).significant(0.05) {
+                clustered_rej += 1;
+            }
+        }
+        let naive_rate = naive_rej as f64 / trials as f64;
+        let clustered_rate = clustered_rej as f64 / trials as f64;
+        assert!(naive_rate > 0.3, "naive should be badly overconfident: {naive_rate}");
+        assert!(clustered_rate < 0.12, "clustered should be calibrated: {clustered_rate}");
+    }
+
+    #[test]
+    fn clustered_detects_real_shift() {
+        let mut rng = Rng::new(3);
+        let (a, b, cl) = clustered_data(20, 10, 0.3, 0.2, 1.0, &mut rng);
+        let r = clustered_paired_t_test(&a, &b, &cl);
+        assert!(r.p_value < 1e-4, "p {}", r.p_value);
+    }
+
+    #[test]
+    fn cluster_bootstrap_wider_than_naive() {
+        let mut rng = Rng::new(4);
+        let (a, _, cl) = clustered_data(10, 30, 1.5, 0.1, 0.0, &mut rng);
+        let mut r1 = Rng::new(5);
+        let clustered = cluster_bootstrap_ci(&a, &cl, 0.95, 800, &mut r1);
+        let mut r2 = Rng::new(5);
+        let naive =
+            crate::stats::percentile_bootstrap(&a, mean, 0.95, 800, &mut r2);
+        assert!(
+            clustered.width() > naive.width() * 1.5,
+            "clustered {} vs naive {}",
+            clustered.width(),
+            naive.width()
+        );
+        assert!(clustered.lo <= clustered.point && clustered.point <= clustered.hi);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let r = clustered_paired_t_test(&[1.0], &[2.0], &[0]);
+        assert_eq!(r.p_value, 1.0);
+        let mut rng = Rng::new(6);
+        let ci = cluster_bootstrap_ci(&[], &[], 0.95, 10, &mut rng);
+        assert!(ci.point.is_nan() || ci.lo == ci.hi);
+    }
+}

@@ -1,0 +1,129 @@
+//! Effect sizes (paper §4.4): Cohen's d, Hedges' g, odds ratio.
+
+use super::describe::{mean, variance};
+
+/// Effect size with a conventional magnitude label.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EffectSize {
+    pub value: f64,
+    pub measure: &'static str,
+}
+
+impl EffectSize {
+    /// Cohen's conventional labels (0.2 / 0.5 / 0.8 thresholds).
+    pub fn magnitude(&self) -> &'static str {
+        let v = self.value.abs();
+        match self.measure {
+            "odds_ratio" => {
+                // Convert OR to d-equivalent via ln(OR)·√3/π.
+                let d = (v.max(1e-12)).ln().abs() * 3f64.sqrt() / std::f64::consts::PI;
+                label(d)
+            }
+            _ => label(v),
+        }
+    }
+}
+
+fn label(d: f64) -> &'static str {
+    if d < 0.2 {
+        "negligible"
+    } else if d < 0.5 {
+        "small"
+    } else if d < 0.8 {
+        "medium"
+    } else {
+        "large"
+    }
+}
+
+/// Cohen's d with pooled standard deviation.
+pub fn cohens_d(a: &[f64], b: &[f64]) -> EffectSize {
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    if a.len() < 2 || b.len() < 2 {
+        return EffectSize { value: 0.0, measure: "cohens_d" };
+    }
+    let pooled = (((na - 1.0) * variance(a) + (nb - 1.0) * variance(b)) / (na + nb - 2.0)).sqrt();
+    let value = if pooled < 1e-300 { 0.0 } else { (mean(a) - mean(b)) / pooled };
+    EffectSize { value, measure: "cohens_d" }
+}
+
+/// Hedges' g: small-sample bias-corrected Cohen's d
+/// (correction J ≈ 1 − 3/(4·df − 1)).
+pub fn hedges_g(a: &[f64], b: &[f64]) -> EffectSize {
+    let d = cohens_d(a, b).value;
+    let df = (a.len() + b.len()) as f64 - 2.0;
+    let j = if df > 1.0 { 1.0 - 3.0 / (4.0 * df - 1.0) } else { 1.0 };
+    EffectSize { value: d * j, measure: "hedges_g" }
+}
+
+/// Odds ratio for paired binary outcomes, with Haldane–Anscombe 0.5
+/// correction when any cell is empty.
+pub fn odds_ratio(a: &[f64], b: &[f64]) -> EffectSize {
+    let sa = a.iter().filter(|&&x| x >= 0.5).count() as f64;
+    let sb = b.iter().filter(|&&x| x >= 0.5).count() as f64;
+    let fa = a.len() as f64 - sa;
+    let fb = b.len() as f64 - sb;
+    let (mut sa, mut fa, mut sb, mut fb) = (sa, fa, sb, fb);
+    if sa == 0.0 || fa == 0.0 || sb == 0.0 || fb == 0.0 {
+        sa += 0.5;
+        fa += 0.5;
+        sb += 0.5;
+        fb += 0.5;
+    }
+    EffectSize { value: (sa / fa) / (sb / fb), measure: "odds_ratio" }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cohens_d_known() {
+        // Two groups shifted by 1 pooled sd → d = 1.
+        let a = [2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [0.0, 1.0, 2.0, 3.0, 4.0]; // mean diff 2, sd ≈ 1.581
+        let d = cohens_d(&a, &b);
+        assert!((d.value - 2.0 / 1.5811388300841898).abs() < 1e-9, "d {}", d.value);
+        assert_eq!(d.magnitude(), "large");
+    }
+
+    #[test]
+    fn hedges_smaller_than_cohens() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 3.0, 4.0, 5.0];
+        let d = cohens_d(&a, &b).value.abs();
+        let g = hedges_g(&a, &b).value.abs();
+        assert!(g < d, "g {g} must shrink d {d}");
+    }
+
+    #[test]
+    fn magnitude_labels() {
+        assert_eq!(EffectSize { value: 0.1, measure: "cohens_d" }.magnitude(), "negligible");
+        assert_eq!(EffectSize { value: 0.3, measure: "cohens_d" }.magnitude(), "small");
+        assert_eq!(EffectSize { value: -0.6, measure: "cohens_d" }.magnitude(), "medium");
+        assert_eq!(EffectSize { value: 1.2, measure: "cohens_d" }.magnitude(), "large");
+    }
+
+    #[test]
+    fn odds_ratio_basic() {
+        // a: 8/10 success, b: 5/10 → OR = (8/2)/(5/5) = 4.
+        let a: Vec<f64> = (0..10).map(|i| if i < 8 { 1.0 } else { 0.0 }).collect();
+        let b: Vec<f64> = (0..10).map(|i| if i < 5 { 1.0 } else { 0.0 }).collect();
+        let or = odds_ratio(&a, &b);
+        assert!((or.value - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn odds_ratio_zero_cell_corrected() {
+        let a = vec![1.0; 10];
+        let b: Vec<f64> = (0..10).map(|i| if i < 5 { 1.0 } else { 0.0 }).collect();
+        let or = odds_ratio(&a, &b);
+        assert!(or.value.is_finite() && or.value > 1.0);
+    }
+
+    #[test]
+    fn zero_variance_safe() {
+        let d = cohens_d(&[1.0; 5], &[1.0; 5]);
+        assert_eq!(d.value, 0.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Statistics stack (paper §4.2–§4.4): confidence intervals (percentile /
+//! BCa bootstrap, t, Wilson), significance tests (paired t, McNemar,
+//! Wilcoxon signed-rank, permutation), effect sizes, Shapiro–Wilk
+//! normality, and the Table 2 test-selection heuristic.
+//!
+//! Everything is implemented from scratch on the special functions in
+//! [`special`] and cross-validated against scipy fixtures
+//! (`rust/tests/stats_golden.rs`) plus the paper's own coverage / Type-I
+//! experiments (Table 5, §5.4 benches).
+
+pub mod bootstrap;
+pub mod ci;
+pub mod clustered;
+pub mod describe;
+pub mod effect;
+pub mod power;
+pub mod select;
+pub mod shapiro;
+pub mod special;
+pub mod tests;
+
+pub use ci::{bca_bootstrap, percentile_bootstrap, t_interval, wilson_interval, ConfidenceInterval};
+pub use effect::{cohens_d, hedges_g, odds_ratio, EffectSize};
+pub use select::{detect_scale, run_selected_test, select_test, MetricScale, TestChoice};
+pub use shapiro::{shapiro_wilk, ShapiroResult};
+pub use tests::{mcnemar_test, paired_t_test, permutation_test, wilcoxon_signed_rank, TestResult};

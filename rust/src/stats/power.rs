@@ -1,0 +1,113 @@
+//! Power analysis: how many examples does an evaluation need?
+//!
+//! The paper argues for statistical rigor in comparisons; the natural
+//! companion (and a practical extension) is sample-size planning:
+//! "to detect a 2-point accuracy difference at 80% power, evaluate at
+//! least N examples."
+
+use super::special::{normal_cdf, normal_ppf};
+
+/// Required sample size for a paired comparison of means with effect size
+/// `d` (Cohen's d of the paired differences), significance `alpha`
+/// (two-sided), and `power`.
+pub fn sample_size_paired_t(d: f64, alpha: f64, power: f64) -> usize {
+    assert!(d != 0.0, "effect size must be non-zero");
+    let z_a = normal_ppf(1.0 - alpha / 2.0);
+    let z_b = normal_ppf(power);
+    let n = ((z_a + z_b) / d.abs()).powi(2);
+    // Small-sample t correction: +2 is the standard rule-of-thumb bump.
+    (n.ceil() as usize + 2).max(3)
+}
+
+/// Required discordant-pair count for McNemar to detect an accuracy gap:
+/// `p01` and `p10` are the expected discordant probabilities per example
+/// (model A wrong/B right, and vice versa). Returns (examples, discordant)
+/// estimates.
+pub fn sample_size_mcnemar(p01: f64, p10: f64, alpha: f64, power: f64) -> (usize, usize) {
+    assert!(p01 != p10, "null effect has no finite sample size");
+    let pd = p01 + p10;
+    let z_a = normal_ppf(1.0 - alpha / 2.0);
+    let z_b = normal_ppf(power);
+    // Connor (1987) approximation.
+    let diff = (p10 - p01).abs();
+    let n = ((z_a * pd.sqrt() + z_b * (pd - diff * diff / pd).max(0.0).sqrt()) / diff).powi(2);
+    let examples = n.ceil() as usize;
+    (examples, (examples as f64 * pd).ceil() as usize)
+}
+
+/// Achieved power of a paired t comparison given `n` and effect size `d`.
+pub fn power_paired_t(d: f64, n: usize, alpha: f64) -> f64 {
+    let z_a = normal_ppf(1.0 - alpha / 2.0);
+    let ncp = d.abs() * (n as f64).sqrt();
+    // Normal approximation to the noncentral t.
+    (normal_cdf(ncp - z_a) + normal_cdf(-ncp - z_a)).clamp(0.0, 1.0)
+}
+
+/// Minimum detectable effect (Cohen's d) at a given n / alpha / power.
+pub fn minimum_detectable_effect(n: usize, alpha: f64, power: f64) -> f64 {
+    let z_a = normal_ppf(1.0 - alpha / 2.0);
+    let z_b = normal_ppf(power);
+    (z_a + z_b) / (n as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::paired_t_test;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn classic_reference_values() {
+        // d=0.5, alpha=0.05, power=0.8 → n ≈ 34 (G*Power: 34).
+        let n = sample_size_paired_t(0.5, 0.05, 0.8);
+        assert!((30..=38).contains(&n), "n {n}");
+        // d=0.2 → n ≈ 199.
+        let n = sample_size_paired_t(0.2, 0.05, 0.8);
+        assert!((190..=210).contains(&n), "n {n}");
+    }
+
+    #[test]
+    fn power_monotone_in_n_and_d() {
+        assert!(power_paired_t(0.3, 100, 0.05) > power_paired_t(0.3, 50, 0.05));
+        assert!(power_paired_t(0.5, 50, 0.05) > power_paired_t(0.2, 50, 0.05));
+        let p = power_paired_t(0.5, 34, 0.05);
+        assert!((0.75..0.88).contains(&p), "power {p}");
+    }
+
+    #[test]
+    fn mde_inverts_sample_size() {
+        let n = sample_size_paired_t(0.25, 0.05, 0.8);
+        let mde = minimum_detectable_effect(n, 0.05, 0.8);
+        assert!((mde - 0.25).abs() < 0.03, "mde {mde}");
+    }
+
+    #[test]
+    fn mcnemar_sample_size_plausible() {
+        // 2-point accuracy gap with 10% discordance: p10=0.06, p01=0.04.
+        let (examples, discordant) = sample_size_mcnemar(0.04, 0.06, 0.05, 0.8);
+        assert!((1500..4500).contains(&examples), "examples {examples}");
+        assert!(discordant > 150);
+    }
+
+    #[test]
+    fn empirical_power_matches_prediction() {
+        // Simulate: paired comparison at the planned n should reject at
+        // ≈ the target power.
+        let d = 0.4;
+        let n = sample_size_paired_t(d, 0.05, 0.8);
+        let mut rng = Rng::new(9);
+        let trials = 400;
+        let mut rejections = 0;
+        for _ in 0..trials {
+            // Construct pairs whose differences are N(d, 1) — Cohen's d of
+            // the paired differences is exactly `d`.
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = a.iter().map(|x| x - rng.normal_with(d, 1.0)).collect();
+            if paired_t_test(&a, &b).significant(0.05) {
+                rejections += 1;
+            }
+        }
+        let power = rejections as f64 / trials as f64;
+        assert!((0.68..0.92).contains(&power), "empirical power {power}");
+    }
+}

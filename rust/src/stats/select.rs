@@ -1,0 +1,167 @@
+//! Significance-test selection heuristic (paper §4.3 Table 2).
+//!
+//! | Metric type            | Sample size | Recommended test            |
+//! |------------------------|-------------|-----------------------------|
+//! | Binary                 | any         | McNemar (exact for n<10)    |
+//! | Continuous, normal     | n > 30      | Paired t-test               |
+//! | Continuous, non-normal | any         | Wilcoxon signed-rank        |
+//! | Ordinal                | any         | Wilcoxon signed-rank        |
+//! | Complex/custom         | any         | Bootstrap permutation       |
+
+use super::shapiro::shapiro_wilk;
+use super::tests::{mcnemar_test, paired_t_test, permutation_test, wilcoxon_signed_rank, TestResult};
+use crate::util::rng::Rng;
+
+/// How the metric's values behave (drives Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricScale {
+    /// 0/1 outcomes (exact match, contains).
+    Binary,
+    /// Real-valued (BLEU, similarity, F1).
+    Continuous,
+    /// Small discrete grades (judge scores 1–5).
+    Ordinal,
+    /// Anything else / custom aggregate.
+    Complex,
+}
+
+/// Which test Table 2 recommends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TestChoice {
+    McNemar,
+    PairedT,
+    Wilcoxon,
+    Permutation,
+}
+
+impl TestChoice {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TestChoice::McNemar => "mcnemar",
+            TestChoice::PairedT => "paired_t",
+            TestChoice::Wilcoxon => "wilcoxon",
+            TestChoice::Permutation => "permutation",
+        }
+    }
+}
+
+/// Detect the scale from observed values (used when the metric registry
+/// doesn't declare one).
+pub fn detect_scale(values: &[f64]) -> MetricScale {
+    if values.iter().all(|&v| v == 0.0 || v == 1.0) {
+        return MetricScale::Binary;
+    }
+    // Few distinct integer-ish levels → ordinal.
+    let mut distinct: Vec<i64> = Vec::new();
+    let mut all_int = true;
+    for &v in values {
+        if (v - v.round()).abs() > 1e-9 {
+            all_int = false;
+            break;
+        }
+        let r = v.round() as i64;
+        if !distinct.contains(&r) {
+            distinct.push(r);
+            if distinct.len() > 10 {
+                break;
+            }
+        }
+    }
+    if all_int && distinct.len() <= 10 {
+        MetricScale::Ordinal
+    } else {
+        MetricScale::Continuous
+    }
+}
+
+/// Table 2 selection: scale + sample size + normality diagnostic on the
+/// paired differences.
+pub fn select_test(scale: MetricScale, diffs: &[f64]) -> TestChoice {
+    match scale {
+        MetricScale::Binary => TestChoice::McNemar,
+        MetricScale::Ordinal => TestChoice::Wilcoxon,
+        MetricScale::Complex => TestChoice::Permutation,
+        MetricScale::Continuous => {
+            let n = diffs.len();
+            if n > 30 && shapiro_wilk(diffs).looks_normal(0.05) {
+                TestChoice::PairedT
+            } else {
+                TestChoice::Wilcoxon
+            }
+        }
+    }
+}
+
+/// Run the recommended test end to end.
+pub fn run_selected_test(
+    scale: MetricScale,
+    a: &[f64],
+    b: &[f64],
+    permutations: usize,
+    rng: &mut Rng,
+) -> (TestChoice, TestResult) {
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let choice = select_test(scale, &diffs);
+    let result = match choice {
+        TestChoice::McNemar => mcnemar_test(a, b),
+        TestChoice::PairedT => paired_t_test(a, b),
+        TestChoice::Wilcoxon => wilcoxon_signed_rank(a, b),
+        TestChoice::Permutation => permutation_test(a, b, permutations, rng),
+    };
+    (choice, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_routes_to_mcnemar() {
+        assert_eq!(detect_scale(&[0.0, 1.0, 1.0, 0.0]), MetricScale::Binary);
+        assert_eq!(select_test(MetricScale::Binary, &[0.0, 1.0]), TestChoice::McNemar);
+    }
+
+    #[test]
+    fn judge_scores_are_ordinal() {
+        let scores = [1.0, 3.0, 5.0, 2.0, 4.0, 3.0];
+        assert_eq!(detect_scale(&scores), MetricScale::Ordinal);
+        assert_eq!(select_test(MetricScale::Ordinal, &scores), TestChoice::Wilcoxon);
+    }
+
+    #[test]
+    fn continuous_normal_large_n_routes_to_t() {
+        let mut rng = Rng::new(1);
+        let diffs: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+        assert_eq!(detect_scale(&diffs), MetricScale::Continuous);
+        assert_eq!(select_test(MetricScale::Continuous, &diffs), TestChoice::PairedT);
+    }
+
+    #[test]
+    fn continuous_skewed_routes_to_wilcoxon() {
+        let mut rng = Rng::new(2);
+        let diffs: Vec<f64> = (0..100).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        assert_eq!(select_test(MetricScale::Continuous, &diffs), TestChoice::Wilcoxon);
+    }
+
+    #[test]
+    fn continuous_small_n_routes_to_wilcoxon() {
+        let mut rng = Rng::new(3);
+        let diffs: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        assert_eq!(select_test(MetricScale::Continuous, &diffs), TestChoice::Wilcoxon);
+    }
+
+    #[test]
+    fn complex_routes_to_permutation() {
+        assert_eq!(select_test(MetricScale::Complex, &[1.0]), TestChoice::Permutation);
+    }
+
+    #[test]
+    fn run_selected_executes() {
+        let mut rng = Rng::new(4);
+        let a: Vec<f64> = (0..50).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect();
+        let b: Vec<f64> = (0..50).map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 }).collect();
+        let (choice, result) = run_selected_test(MetricScale::Binary, &a, &b, 100, &mut rng);
+        assert_eq!(choice, TestChoice::McNemar);
+        assert!((0.0..=1.0).contains(&result.p_value));
+    }
+}

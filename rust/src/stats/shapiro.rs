@@ -1,0 +1,190 @@
+//! Shapiro–Wilk normality test (Royston 1995, AS R94).
+//!
+//! The test-selection heuristic (paper Table 2) uses this as its
+//! distributional diagnostic: continuous metrics route to the paired
+//! t-test only when the differences pass normality.
+
+use super::special::{normal_cdf, normal_ppf};
+
+/// Shapiro–Wilk outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShapiroResult {
+    pub w: f64,
+    pub p_value: f64,
+}
+
+impl ShapiroResult {
+    pub fn looks_normal(&self, alpha: f64) -> bool {
+        self.p_value >= alpha
+    }
+}
+
+/// Run the test. Requires 3 ≤ n ≤ 5000 (Royston's validated range);
+/// outside it we clamp behaviour: n < 3 returns W=1, p=1 (can't reject),
+/// n > 5000 uses a subsample of the first 5000 (documented approximation).
+pub fn shapiro_wilk(xs: &[f64]) -> ShapiroResult {
+    let mut sorted: Vec<f64> = xs.iter().copied().filter(|v| v.is_finite()).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if sorted.len() > 5000 {
+        sorted.truncate(5000);
+    }
+    let n = sorted.len();
+    if n < 3 {
+        return ShapiroResult { w: 1.0, p_value: 1.0 };
+    }
+    let range = sorted[n - 1] - sorted[0];
+    if range < 1e-300 {
+        // Constant data: maximally non-normal.
+        return ShapiroResult { w: 0.0, p_value: 0.0 };
+    }
+
+    // Expected normal order statistics m_i (Blom approximation).
+    let nf = n as f64;
+    let m: Vec<f64> = (1..=n)
+        .map(|i| normal_ppf((i as f64 - 0.375) / (nf + 0.25)))
+        .collect();
+    let ssm: f64 = m.iter().map(|v| v * v).sum();
+    let rsn = 1.0 / nf.sqrt();
+
+    // Coefficients a (Royston polynomial corrections on the tails).
+    let mut a = vec![0.0; n];
+    if n == 3 {
+        a[2] = std::f64::consts::FRAC_1_SQRT_2;
+        a[0] = -a[2];
+    } else {
+        let c = |v: &[f64]| -> Vec<f64> {
+            let norm = ssm.sqrt();
+            v.iter().map(|x| x / norm).collect()
+        };
+        let cvec = c(&m);
+        let u = rsn;
+        let an = cvec[n - 1] + 0.221157 * u - 0.147981 * u * u - 2.071190 * u.powi(3)
+            + 4.434685 * u.powi(4)
+            - 2.706056 * u.powi(5);
+        if n <= 5 {
+            let phi = (ssm - 2.0 * m[n - 1] * m[n - 1]) / (1.0 - 2.0 * an * an);
+            a[n - 1] = an;
+            a[0] = -an;
+            for i in 1..n - 1 {
+                a[i] = m[i] / phi.sqrt();
+            }
+        } else {
+            let an1 = cvec[n - 2] + 0.042981 * u - 0.293762 * u * u - 1.752461 * u.powi(3)
+                + 5.682633 * u.powi(4)
+                - 3.582633 * u.powi(5);
+            let phi = (ssm - 2.0 * m[n - 1] * m[n - 1] - 2.0 * m[n - 2] * m[n - 2])
+                / (1.0 - 2.0 * an * an - 2.0 * an1 * an1);
+            a[n - 1] = an;
+            a[n - 2] = an1;
+            a[0] = -an;
+            a[1] = -an1;
+            for i in 2..n - 2 {
+                a[i] = m[i] / phi.sqrt();
+            }
+        }
+    }
+
+    // W statistic.
+    let mean = sorted.iter().sum::<f64>() / nf;
+    let ssd: f64 = sorted.iter().map(|x| (x - mean) * (x - mean)).sum();
+    let b: f64 = a.iter().zip(&sorted).map(|(ai, xi)| ai * xi).sum();
+    let w = ((b * b) / ssd).clamp(0.0, 1.0);
+
+    // P-value via Royston's normalizing transformations.
+    let p_value = if n == 3 {
+        let p = 6.0 / std::f64::consts::PI
+            * ((w.sqrt()).asin() - (0.75f64).sqrt().asin());
+        p.clamp(0.0, 1.0)
+    } else if n <= 11 {
+        let g = -2.273 + 0.459 * nf;
+        let mu = 0.5440 - 0.39978 * nf + 0.025054 * nf * nf - 0.0006714 * nf.powi(3);
+        let sigma = (1.3822 - 0.77857 * nf + 0.062767 * nf * nf - 0.0020322 * nf.powi(3)).exp();
+        let arg = g - (1.0 - w).ln();
+        if arg <= 0.0 {
+            0.0
+        } else {
+            let z = (-(arg.ln()) - mu) / sigma;
+            1.0 - normal_cdf(z)
+        }
+    } else {
+        let ln_n = nf.ln();
+        let mu = -1.5861 - 0.31082 * ln_n - 0.083751 * ln_n * ln_n + 0.0038915 * ln_n.powi(3);
+        let sigma = (-0.4803 - 0.082676 * ln_n + 0.0030302 * ln_n * ln_n).exp();
+        let z = ((1.0 - w).ln() - mu) / sigma;
+        1.0 - normal_cdf(z)
+    };
+
+    ShapiroResult { w, p_value: p_value.clamp(0.0, 1.0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn normal_data_passes() {
+        let mut rng = Rng::new(1);
+        let mut passes = 0;
+        for _ in 0..50 {
+            let xs: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+            if shapiro_wilk(&xs).looks_normal(0.05) {
+                passes += 1;
+            }
+        }
+        // ~95% of normal samples should pass at alpha=0.05.
+        assert!(passes >= 42, "passes {passes}/50");
+    }
+
+    #[test]
+    fn uniform_data_rejected_large_n() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..500).map(|_| rng.f64()).collect();
+        let r = shapiro_wilk(&xs);
+        assert!(r.p_value < 0.01, "uniform p {}", r.p_value);
+    }
+
+    #[test]
+    fn lognormal_rejected() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..200).map(|_| rng.lognormal(0.0, 0.8)).collect();
+        let r = shapiro_wilk(&xs);
+        assert!(r.p_value < 0.001, "lognormal p {}", r.p_value);
+        assert!(r.w < 0.95);
+    }
+
+    #[test]
+    fn w_statistic_plausible_range() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let r = shapiro_wilk(&xs);
+        assert!(r.w > 0.9 && r.w <= 1.0, "w {}", r.w);
+    }
+
+    #[test]
+    fn scipy_reference_case() {
+        // scipy.stats.shapiro([148, 154, 158, 160, 161, 162, 166, 170,
+        //   182, 195, 236]) → W=0.7888, p=0.00672 (classic outlier data).
+        let xs = [
+            148.0, 154.0, 158.0, 160.0, 161.0, 162.0, 166.0, 170.0, 182.0, 195.0, 236.0,
+        ];
+        let r = shapiro_wilk(&xs);
+        assert!((r.w - 0.7888).abs() < 0.01, "w {}", r.w);
+        assert!((r.p_value - 0.00672).abs() < 0.005, "p {}", r.p_value);
+    }
+
+    #[test]
+    fn tiny_and_constant_inputs() {
+        assert_eq!(shapiro_wilk(&[1.0, 2.0]).p_value, 1.0);
+        let r = shapiro_wilk(&[5.0; 20]);
+        assert_eq!(r.p_value, 0.0);
+    }
+
+    #[test]
+    fn small_n_exact_range() {
+        let xs = [1.0, 2.0, 3.0];
+        let r = shapiro_wilk(&xs);
+        assert!((0.0..=1.0).contains(&r.p_value));
+        assert!(r.w > 0.9); // perfectly spaced data looks normal
+    }
+}

@@ -1,0 +1,397 @@
+//! Special functions underpinning the statistics stack.
+//!
+//! Implemented from scratch (no scipy here): ln-gamma (Lanczos),
+//! regularized incomplete beta/gamma, erf, and the distribution CDFs /
+//! quantiles built on them (normal, Student-t, chi-squared). Accuracy is
+//! validated against scipy-generated fixtures in `stats_golden.rs`.
+
+/// Natural log of the gamma function (Lanczos approximation, g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEFFS: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        std::f64::consts::PI.ln() - (std::f64::consts::PI * x).sin().ln() - ln_gamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let mut a = COEFFS[0];
+        let t = x + 7.5;
+        for (i, &c) in COEFFS.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+/// Regularized incomplete beta I_x(a, b) via the continued fraction
+/// (Numerical Recipes `betai`/`betacf`).
+pub fn beta_inc(a: f64, b: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && b > 0.0, "beta_inc requires positive parameters");
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * betacf(a, b, x) / a
+    } else {
+        1.0 - front * betacf(b, a, 1.0 - x) / b
+    }
+}
+
+fn betacf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_ITER: usize = 300;
+    const EPS: f64 = 3e-16;
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_ITER {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        // Even step.
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        // Odd step.
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Regularized lower incomplete gamma P(a, x) (series + continued fraction).
+pub fn gamma_inc(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0);
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // Series representation.
+        let mut ap = a;
+        let mut sum = 1.0 / a;
+        let mut del = sum;
+        for _ in 0..300 {
+            ap += 1.0;
+            del *= x / ap;
+            sum += del;
+            if del.abs() < sum.abs() * 3e-16 {
+                break;
+            }
+        }
+        sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+    } else {
+        // Continued fraction for Q(a,x); P = 1 - Q.
+        const FPMIN: f64 = 1e-300;
+        let mut b = x + 1.0 - a;
+        let mut c = 1.0 / FPMIN;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..300 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < FPMIN {
+                d = FPMIN;
+            }
+            c = b + an / c;
+            if c.abs() < FPMIN {
+                c = FPMIN;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 3e-16 {
+                break;
+            }
+        }
+        1.0 - h * (-x + a * x.ln() - ln_gamma(a)).exp()
+    }
+}
+
+/// Error function (Abramowitz–Stegun 7.1.26-style rational approx is not
+/// accurate enough; use the incomplete gamma identity instead).
+pub fn erf(x: f64) -> f64 {
+    if x == 0.0 {
+        return 0.0;
+    }
+    let v = gamma_inc(0.5, x * x);
+    if x > 0.0 {
+        v
+    } else {
+        -v
+    }
+}
+
+/// Standard normal CDF.
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Standard normal quantile (Acklam's inverse-CDF approximation, refined
+/// with one Halley step — |rel err| < 1e-9 over (0,1)).
+pub fn normal_ppf(p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p), "p out of range: {p}");
+    if p == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p == 1.0 {
+        return f64::INFINITY;
+    }
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // One Halley refinement step.
+    let e = normal_cdf(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+/// Student-t CDF with `df` degrees of freedom.
+pub fn t_cdf(t: f64, df: f64) -> f64 {
+    assert!(df > 0.0);
+    if t == 0.0 {
+        return 0.5;
+    }
+    let x = df / (df + t * t);
+    let p = 0.5 * beta_inc(df / 2.0, 0.5, x);
+    if t > 0.0 {
+        1.0 - p
+    } else {
+        p
+    }
+}
+
+/// Two-sided p-value for a t statistic.
+pub fn t_sf_two_sided(t: f64, df: f64) -> f64 {
+    (2.0 * (1.0 - t_cdf(t.abs(), df))).clamp(0.0, 1.0)
+}
+
+/// Student-t quantile (bisection on the CDF; adequate for CI bounds).
+pub fn t_ppf(p: f64, df: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p));
+    if p == 0.5 {
+        return 0.0;
+    }
+    // Bracket with the normal quantile scaled generously.
+    let z = normal_ppf(p);
+    let mut lo = z.abs().mul_add(-10.0, -1.0).min(-1e3);
+    let mut hi = z.abs().mul_add(10.0, 1.0).max(1e3);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if t_cdf(mid, df) < p {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < 1e-12 * (1.0 + hi.abs()) {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Chi-squared CDF with `df` degrees of freedom.
+pub fn chi2_cdf(x: f64, df: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    gamma_inc(df / 2.0, x / 2.0)
+}
+
+/// Binomial(n, 0.5) two-sided exact p-value of observing `k` (or more
+/// extreme) — used by McNemar's exact test.
+pub fn binom_test_half(k: u64, n: u64) -> f64 {
+    if n == 0 {
+        return 1.0;
+    }
+    let k_ext = k.min(n - k);
+    // P(X <= k_ext) * 2 for symmetric p=0.5; cap at 1.
+    let mut log_probs = Vec::with_capacity(n as usize + 1);
+    let ln_half_n = n as f64 * 0.5f64.ln();
+    for i in 0..=n {
+        let ln_choose = ln_gamma(n as f64 + 1.0)
+            - ln_gamma(i as f64 + 1.0)
+            - ln_gamma((n - i) as f64 + 1.0);
+        log_probs.push(ln_choose + ln_half_n);
+    }
+    let tail: f64 = (0..=k_ext).map(|i| log_probs[i as usize].exp()).sum();
+    (2.0 * tail).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} != {b} (tol {tol})");
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        close(ln_gamma(1.0), 0.0, 1e-12);
+        close(ln_gamma(2.0), 0.0, 1e-12);
+        close(ln_gamma(5.0), 24f64.ln(), 1e-10); // Γ(5)=24
+        close(ln_gamma(0.5), std::f64::consts::PI.sqrt().ln(), 1e-10);
+    }
+
+    #[test]
+    fn erf_known_values() {
+        close(erf(0.0), 0.0, 1e-15);
+        close(erf(1.0), 0.8427007929497149, 1e-10);
+        close(erf(-1.0), -0.8427007929497149, 1e-10);
+        close(erf(2.0), 0.9953222650189527, 1e-10);
+    }
+
+    #[test]
+    fn normal_cdf_symmetry() {
+        close(normal_cdf(0.0), 0.5, 1e-15);
+        close(normal_cdf(1.959963984540054), 0.975, 1e-9);
+        close(normal_cdf(-1.959963984540054), 0.025, 1e-9);
+    }
+
+    #[test]
+    fn normal_ppf_inverts_cdf() {
+        for &p in &[0.001, 0.025, 0.1, 0.5, 0.9, 0.975, 0.999] {
+            close(normal_cdf(normal_ppf(p)), p, 1e-9);
+        }
+        close(normal_ppf(0.975), 1.959963984540054, 1e-8);
+    }
+
+    #[test]
+    fn t_cdf_matches_known() {
+        // t=2.0, df=10 → CDF = 0.963306 (scipy.stats.t.cdf(2, 10)).
+        close(t_cdf(2.0, 10.0), 0.9633059826238042, 1e-9);
+        close(t_cdf(0.0, 5.0), 0.5, 1e-15);
+        // Large df approaches normal.
+        close(t_cdf(1.96, 1e6), normal_cdf(1.96), 1e-5);
+    }
+
+    #[test]
+    fn t_ppf_inverts() {
+        for &df in &[3.0, 10.0, 30.0, 100.0] {
+            for &p in &[0.025, 0.05, 0.5, 0.95, 0.975] {
+                close(t_cdf(t_ppf(p, df), df), p, 1e-9);
+            }
+        }
+        // scipy.stats.t.ppf(0.975, 10) = 2.2281388519649385
+        close(t_ppf(0.975, 10.0), 2.2281388519649385, 1e-7);
+    }
+
+    #[test]
+    fn chi2_cdf_known() {
+        // scipy.stats.chi2.cdf(3.841458820694124, 1) = 0.95
+        close(chi2_cdf(3.841458820694124, 1.0), 0.95, 1e-9);
+        close(chi2_cdf(0.0, 4.0), 0.0, 1e-15);
+    }
+
+    #[test]
+    fn beta_inc_bounds_and_symmetry() {
+        close(beta_inc(2.0, 3.0, 0.0), 0.0, 1e-15);
+        close(beta_inc(2.0, 3.0, 1.0), 1.0, 1e-15);
+        // I_x(a,b) = 1 - I_{1-x}(b,a)
+        let x = 0.3;
+        close(beta_inc(2.5, 1.5, x), 1.0 - beta_inc(1.5, 2.5, 1.0 - x), 1e-12);
+        // scipy.special.betainc(2, 3, 0.5) = 0.6875
+        close(beta_inc(2.0, 3.0, 0.5), 0.6875, 1e-10);
+    }
+
+    #[test]
+    fn gamma_inc_known() {
+        // P(1, x) = 1 - exp(-x)
+        for &x in &[0.1, 1.0, 3.0] {
+            close(gamma_inc(1.0, x), 1.0 - (-x as f64).exp(), 1e-12);
+        }
+    }
+
+    #[test]
+    fn binom_test_half_known() {
+        // scipy.stats.binomtest(1, 10, 0.5).pvalue = 0.021484375
+        close(binom_test_half(1, 10), 0.021484375, 1e-12);
+        // Balanced outcome → p = 1 (capped).
+        close(binom_test_half(5, 10), 1.0, 1e-12);
+        close(binom_test_half(0, 0), 1.0, 1e-15);
+    }
+}

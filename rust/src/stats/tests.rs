@@ -1,0 +1,354 @@
+//! Significance tests for paired model comparisons (paper §4.3).
+//!
+//! All tests operate on *paired* per-example scores (both models evaluated
+//! on the same examples): paired t-test, McNemar (exact binomial for small
+//! discordant counts, χ² with continuity correction otherwise), Wilcoxon
+//! signed-rank (exact null for small n, normal approximation with tie
+//! correction otherwise), and a bootstrap permutation test for arbitrary
+//! statistics.
+
+use super::describe::{mean, midranks, std_dev};
+use super::special::{binom_test_half, chi2_cdf, normal_cdf, t_sf_two_sided};
+use crate::util::rng::Rng;
+
+/// Test outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TestResult {
+    /// Test statistic (t, χ², W, or observed difference).
+    pub statistic: f64,
+    pub p_value: f64,
+    /// Human-readable test name.
+    pub test: &'static str,
+    /// Effective sample size used (e.g. discordant pairs for McNemar).
+    pub n_used: usize,
+}
+
+impl TestResult {
+    pub fn significant(&self, alpha: f64) -> bool {
+        self.p_value < alpha
+    }
+}
+
+/// Paired t-test on per-example score differences (two-sided).
+pub fn paired_t_test(a: &[f64], b: &[f64]) -> TestResult {
+    assert_eq!(a.len(), b.len(), "paired test needs equal lengths");
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let n = diffs.len();
+    if n < 2 {
+        return TestResult { statistic: 0.0, p_value: 1.0, test: "paired_t", n_used: n };
+    }
+    let md = mean(&diffs);
+    let sd = std_dev(&diffs);
+    if sd < 1e-300 {
+        // All differences identical: either exactly zero (p=1) or a
+        // deterministic shift (p→0).
+        let p = if md.abs() < 1e-300 { 1.0 } else { 0.0 };
+        return TestResult { statistic: if md == 0.0 { 0.0 } else { f64::INFINITY }, p_value: p, test: "paired_t", n_used: n };
+    }
+    let t = md / (sd / (n as f64).sqrt());
+    TestResult {
+        statistic: t,
+        p_value: t_sf_two_sided(t, (n - 1) as f64),
+        test: "paired_t",
+        n_used: n,
+    }
+}
+
+/// McNemar's test for paired binary outcomes (paper §4.3): considers only
+/// discordant pairs. Exact binomial for < 10 discordant pairs, χ² with
+/// continuity correction otherwise.
+pub fn mcnemar_test(a: &[f64], b: &[f64]) -> TestResult {
+    assert_eq!(a.len(), b.len());
+    let mut b01 = 0u64; // a wrong, b right
+    let mut b10 = 0u64; // a right, b wrong
+    for (&x, &y) in a.iter().zip(b) {
+        let xa = x >= 0.5;
+        let yb = y >= 0.5;
+        match (xa, yb) {
+            (false, true) => b01 += 1,
+            (true, false) => b10 += 1,
+            _ => {}
+        }
+    }
+    let n_disc = b01 + b10;
+    if n_disc == 0 {
+        return TestResult { statistic: 0.0, p_value: 1.0, test: "mcnemar_exact", n_used: 0 };
+    }
+    if n_disc < 10 {
+        // Exact binomial (paper: "for small samples we use the exact
+        // binomial test").
+        let p = binom_test_half(b01.min(b10), n_disc);
+        TestResult {
+            statistic: b01.min(b10) as f64,
+            p_value: p,
+            test: "mcnemar_exact",
+            n_used: n_disc as usize,
+        }
+    } else {
+        // Uncorrected χ² (the Edwards continuity correction is notably
+        // conservative — Type I ≈ 3% at α=5%; the paper's §5.4 calibration
+        // of 4.9% implies the uncorrected statistic).
+        let num = (b01 as f64 - b10 as f64).powi(2);
+        let chi2 = num / n_disc as f64;
+        TestResult {
+            statistic: chi2,
+            p_value: 1.0 - chi2_cdf(chi2, 1.0),
+            test: "mcnemar_chi2",
+            n_used: n_disc as usize,
+        }
+    }
+}
+
+/// Wilcoxon signed-rank test (two-sided). Zero differences are dropped
+/// (Wilcoxon's original treatment); ties get midranks with variance
+/// correction. Exact enumeration of the null for n ≤ 12.
+pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> TestResult {
+    assert_eq!(a.len(), b.len());
+    let diffs: Vec<f64> = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| x - y)
+        .filter(|d| d.abs() > 1e-300)
+        .collect();
+    let n = diffs.len();
+    if n == 0 {
+        return TestResult { statistic: 0.0, p_value: 1.0, test: "wilcoxon", n_used: 0 };
+    }
+    let abs: Vec<f64> = diffs.iter().map(|d| d.abs()).collect();
+    let ranks = midranks(&abs);
+    let w_plus: f64 = diffs
+        .iter()
+        .zip(&ranks)
+        .filter(|(d, _)| **d > 0.0)
+        .map(|(_, r)| *r)
+        .sum();
+
+    if n <= 12 {
+        // Exact: enumerate all 2^n sign assignments of the ranks.
+        let total = 1u64 << n;
+        let mut count_extreme = 0u64;
+        let expected = ranks.iter().sum::<f64>() / 2.0;
+        let obs_dev = (w_plus - expected).abs();
+        for mask in 0..total {
+            let w: f64 = (0..n)
+                .filter(|i| mask >> i & 1 == 1)
+                .map(|i| ranks[i])
+                .sum();
+            if (w - expected).abs() >= obs_dev - 1e-12 {
+                count_extreme += 1;
+            }
+        }
+        TestResult {
+            statistic: w_plus,
+            p_value: count_extreme as f64 / total as f64,
+            test: "wilcoxon_exact",
+            n_used: n,
+        }
+    } else {
+        // Normal approximation with tie correction.
+        let nf = n as f64;
+        let mean_w = nf * (nf + 1.0) / 4.0;
+        // Tie correction: subtract sum(t^3 - t)/48 over tie groups.
+        let mut tie_term = 0.0;
+        let mut sorted = abs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut i = 0;
+        while i < n {
+            let mut j = i;
+            while j + 1 < n && sorted[j + 1] == sorted[i] {
+                j += 1;
+            }
+            let t = (j - i + 1) as f64;
+            tie_term += t * t * t - t;
+            i = j + 1;
+        }
+        let var_w = nf * (nf + 1.0) * (2.0 * nf + 1.0) / 24.0 - tie_term / 48.0;
+        let z = if var_w <= 0.0 {
+            0.0
+        } else {
+            // Continuity correction.
+            let d = w_plus - mean_w;
+            (d - 0.5 * d.signum()) / var_w.sqrt()
+        };
+        TestResult {
+            statistic: w_plus,
+            p_value: (2.0 * (1.0 - normal_cdf(z.abs()))).clamp(0.0, 1.0),
+            test: "wilcoxon_normal",
+            n_used: n,
+        }
+    }
+}
+
+/// Paired permutation test (paper §4.3 "bootstrap permutation"): randomly
+/// flip the sign of each per-example difference and compare the mean
+/// difference against the permutation distribution (two-sided).
+pub fn permutation_test(a: &[f64], b: &[f64], permutations: usize, rng: &mut Rng) -> TestResult {
+    assert_eq!(a.len(), b.len());
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let n = diffs.len();
+    if n == 0 {
+        return TestResult { statistic: 0.0, p_value: 1.0, test: "permutation", n_used: 0 };
+    }
+    let obs = mean(&diffs).abs();
+    let mut extreme = 0usize;
+    for _ in 0..permutations {
+        let mut acc = 0.0;
+        for &d in &diffs {
+            acc += if rng.chance(0.5) { d } else { -d };
+        }
+        if (acc / n as f64).abs() >= obs - 1e-300 {
+            extreme += 1;
+        }
+    }
+    // +1 smoothing keeps p > 0 (standard for Monte-Carlo p-values).
+    TestResult {
+        statistic: mean(&diffs),
+        p_value: (extreme + 1) as f64 / (permutations + 1) as f64,
+        test: "permutation",
+        n_used: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paired_t_matches_scipy() {
+        // scipy.stats.ttest_rel([1,2,3,4,5], [2,2,3,3,6])
+        // → statistic=-0.5345224838248488, p=0.6213082950374971
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 2.0, 3.0, 3.0, 6.0];
+        let r = paired_t_test(&a, &b);
+        assert!((r.statistic - -0.5345224838248488).abs() < 1e-10, "t {}", r.statistic);
+        assert!((r.p_value - 0.6213082950374971).abs() < 1e-9, "p {}", r.p_value);
+    }
+
+    #[test]
+    fn paired_t_identical_inputs() {
+        let a = [1.0, 2.0, 3.0];
+        let r = paired_t_test(&a, &a);
+        assert_eq!(r.p_value, 1.0);
+    }
+
+    #[test]
+    fn paired_t_constant_shift() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [2.0, 3.0, 4.0];
+        let r = paired_t_test(&a, &b);
+        assert!(r.p_value < 1e-9);
+    }
+
+    #[test]
+    fn mcnemar_exact_small_discordant() {
+        // 8 discordant pairs, 1 vs 7 split → exact binomial p = 0.0703125.
+        let mut a = vec![1.0; 20];
+        let mut b = vec![1.0; 20];
+        for i in 0..7 {
+            a[i] = 1.0;
+            b[i] = 0.0;
+        }
+        a[7] = 0.0;
+        b[7] = 1.0;
+        let r = mcnemar_test(&a, &b);
+        assert_eq!(r.test, "mcnemar_exact");
+        assert_eq!(r.n_used, 8);
+        assert!((r.p_value - 0.0703125).abs() < 1e-12, "p {}", r.p_value);
+    }
+
+    #[test]
+    fn mcnemar_chi2_large_discordant() {
+        // 30 vs 10 discordant: chi2 = 20^2/40 = 10.0,
+        // p = 1 - chi2.cdf(10, 1) = 0.001565...
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for _ in 0..30 {
+            a.push(1.0);
+            b.push(0.0);
+        }
+        for _ in 0..10 {
+            a.push(0.0);
+            b.push(1.0);
+        }
+        for _ in 0..60 {
+            a.push(1.0);
+            b.push(1.0);
+        }
+        let r = mcnemar_test(&a, &b);
+        assert_eq!(r.test, "mcnemar_chi2");
+        assert!((r.statistic - 10.0).abs() < 1e-12);
+        assert!((r.p_value - 0.0015654022580025487).abs() < 1e-10, "p {}", r.p_value);
+    }
+
+    #[test]
+    fn mcnemar_no_discordant() {
+        let a = [1.0, 0.0, 1.0];
+        let r = mcnemar_test(&a, &a);
+        assert_eq!(r.p_value, 1.0);
+    }
+
+    #[test]
+    fn wilcoxon_exact_small() {
+        // scipy.stats.wilcoxon([1,2,3,4,5],[2,1,5,3,7], mode='exact')
+        // diffs = [-1, 1, -2, 1, -2] → p = 0.4375 (W=... two-sided)
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 1.0, 5.0, 3.0, 7.0];
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert_eq!(r.test, "wilcoxon_exact");
+        assert!((r.p_value - 0.4375).abs() < 0.08, "p {}", r.p_value);
+    }
+
+    #[test]
+    fn wilcoxon_normal_large() {
+        let mut rng = Rng::new(5);
+        let a: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = a.iter().map(|x| x + 0.5 + 0.1 * rng.normal()).collect();
+        let r = wilcoxon_signed_rank(&a, &b);
+        assert_eq!(r.test, "wilcoxon_normal");
+        assert!(r.p_value < 1e-6, "clear shift must be significant");
+        // Null case.
+        let c: Vec<f64> = a.iter().map(|x| x + 0.001 * rng.normal()).collect();
+        let r0 = wilcoxon_signed_rank(&a, &c);
+        assert!(r0.p_value > 0.01);
+    }
+
+    #[test]
+    fn wilcoxon_all_zero_diffs() {
+        let a = [1.0, 2.0, 3.0];
+        let r = wilcoxon_signed_rank(&a, &a);
+        assert_eq!(r.p_value, 1.0);
+        assert_eq!(r.n_used, 0);
+    }
+
+    #[test]
+    fn permutation_detects_shift_and_respects_null() {
+        let mut rng = Rng::new(7);
+        let a: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+        let shifted: Vec<f64> = a.iter().map(|x| x + 1.0).collect();
+        let mut prng = Rng::new(8);
+        let r = permutation_test(&a, &shifted, 2000, &mut prng);
+        assert!(r.p_value < 0.01, "p {}", r.p_value);
+
+        let same: Vec<f64> = a.iter().map(|x| x + 0.0).collect();
+        let mut prng = Rng::new(9);
+        let r0 = permutation_test(&a, &same, 500, &mut prng);
+        assert!(r0.p_value > 0.9, "identical data p {}", r0.p_value);
+    }
+
+    #[test]
+    fn type_i_error_calibration_quick() {
+        // Mini version of paper §5.4: under the null, rejection rate ≈ α.
+        let mut rng = Rng::new(11);
+        let mut rejections_t = 0;
+        let trials = 400;
+        for _ in 0..trials {
+            let a: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+            if paired_t_test(&a, &b).significant(0.05) {
+                rejections_t += 1;
+            }
+        }
+        let rate = rejections_t as f64 / trials as f64;
+        assert!((0.02..0.09).contains(&rate), "type I rate {rate}");
+    }
+}

@@ -1,0 +1,475 @@
+//! Mini-Jinja prompt templates (stage 1: prompt preparation).
+//!
+//! Supports the subset the evaluation workflows actually use:
+//!
+//! - `{{ var }}` substitution with dotted access into nested objects
+//! - filters: `{{ var | lower }}`, `upper`, `trim`, `truncate(n)`, `title`
+//! - conditionals: `{% if var %} ... {% else %} ... {% endif %}`
+//!   (truthiness: missing/empty string/0/false are falsy)
+//! - loops: `{% for item in list %} ... {{ item }} ... {% endfor %}`
+//!
+//! Values come from a [`Json`] object per example (one DataFrame row).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed template, reusable across rows.
+#[derive(Debug, Clone)]
+pub struct Template {
+    nodes: Vec<Node>,
+    pub source: String,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Text(String),
+    /// Variable path + filter chain.
+    Var(Vec<String>, Vec<Filter>),
+    If {
+        cond: Vec<String>,
+        negate: bool,
+        then_nodes: Vec<Node>,
+        else_nodes: Vec<Node>,
+    },
+    For {
+        var: String,
+        list: Vec<String>,
+        body: Vec<Node>,
+    },
+}
+
+#[derive(Debug, Clone)]
+enum Filter {
+    Lower,
+    Upper,
+    Trim,
+    Title,
+    Truncate(usize),
+}
+
+impl Template {
+    pub fn parse(source: &str) -> Result<Template> {
+        let tokens = tokenize(source)?;
+        let mut pos = 0;
+        let nodes = parse_nodes(&tokens, &mut pos, None)?;
+        if pos != tokens.len() {
+            bail!("unexpected block tag at token {pos}");
+        }
+        Ok(Template { nodes, source: source.to_string() })
+    }
+
+    /// Render against one row (a JSON object).
+    pub fn render(&self, row: &Json) -> Result<String> {
+        let mut out = String::with_capacity(self.source.len() * 2);
+        render_nodes(&self.nodes, row, &mut out)?;
+        Ok(out)
+    }
+
+    /// Variable paths referenced by the template (for validation).
+    pub fn referenced_vars(&self) -> Vec<String> {
+        let mut vars = Vec::new();
+        collect_vars(&self.nodes, &mut vars);
+        vars.sort();
+        vars.dedup();
+        vars
+    }
+}
+
+fn collect_vars(nodes: &[Node], out: &mut Vec<String>) {
+    for n in nodes {
+        match n {
+            Node::Var(path, _) => out.push(path.join(".")),
+            Node::If { cond, then_nodes, else_nodes, .. } => {
+                out.push(cond.join("."));
+                collect_vars(then_nodes, out);
+                collect_vars(else_nodes, out);
+            }
+            Node::For { list, body, .. } => {
+                out.push(list.join("."));
+                collect_vars(body, out);
+            }
+            Node::Text(_) => {}
+        }
+    }
+}
+
+// -- tokenizer ---------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Token {
+    Text(String),
+    Expr(String),  // {{ ... }}
+    Block(String), // {% ... %}
+}
+
+fn tokenize(src: &str) -> Result<Vec<Token>> {
+    let mut tokens = Vec::new();
+    let mut rest = src;
+    loop {
+        let next_expr = rest.find("{{");
+        let next_block = rest.find("{%");
+        let (idx, is_expr) = match (next_expr, next_block) {
+            (None, None) => {
+                if !rest.is_empty() {
+                    tokens.push(Token::Text(rest.to_string()));
+                }
+                return Ok(tokens);
+            }
+            (Some(e), None) => (e, true),
+            (None, Some(b)) => (b, false),
+            (Some(e), Some(b)) => {
+                if e < b {
+                    (e, true)
+                } else {
+                    (b, false)
+                }
+            }
+        };
+        if idx > 0 {
+            tokens.push(Token::Text(rest[..idx].to_string()));
+        }
+        let (close, mk): (&str, fn(String) -> Token) = if is_expr {
+            ("}}", Token::Expr)
+        } else {
+            ("%}", Token::Block)
+        };
+        let body_start = idx + 2;
+        let end = rest[body_start..]
+            .find(close)
+            .ok_or_else(|| anyhow!("unterminated tag starting at byte {idx}"))?;
+        let body = rest[body_start..body_start + end].trim().to_string();
+        tokens.push(mk(body));
+        rest = &rest[body_start + end + 2..];
+    }
+}
+
+// -- parser ------------------------------------------------------------------
+
+fn parse_path(s: &str) -> Vec<String> {
+    s.split('.').map(|p| p.trim().to_string()).collect()
+}
+
+fn parse_filters(parts: &[&str]) -> Result<Vec<Filter>> {
+    parts
+        .iter()
+        .map(|raw| {
+            let f = raw.trim();
+            Ok(if f == "lower" {
+                Filter::Lower
+            } else if f == "upper" {
+                Filter::Upper
+            } else if f == "trim" {
+                Filter::Trim
+            } else if f == "title" {
+                Filter::Title
+            } else if let Some(arg) = f.strip_prefix("truncate(").and_then(|x| x.strip_suffix(')')) {
+                Filter::Truncate(arg.trim().parse()?)
+            } else {
+                bail!("unknown filter: {f}")
+            })
+        })
+        .collect()
+}
+
+/// Parse until `stop` block tag (e.g. Some("endif")); returns nodes.
+fn parse_nodes(tokens: &[Token], pos: &mut usize, stop: Option<&[&str]>) -> Result<Vec<Node>> {
+    let mut nodes = Vec::new();
+    while *pos < tokens.len() {
+        match &tokens[*pos] {
+            Token::Text(t) => {
+                nodes.push(Node::Text(t.clone()));
+                *pos += 1;
+            }
+            Token::Expr(e) => {
+                let mut parts = e.split('|');
+                let var = parts.next().unwrap().trim();
+                let filters = parse_filters(&parts.collect::<Vec<_>>())?;
+                nodes.push(Node::Var(parse_path(var), filters));
+                *pos += 1;
+            }
+            Token::Block(b) => {
+                let first = b.split_whitespace().next().unwrap_or("");
+                if let Some(stops) = stop {
+                    if stops.contains(&first) {
+                        return Ok(nodes); // caller consumes the stop tag
+                    }
+                }
+                *pos += 1;
+                match first {
+                    "if" => {
+                        let rest = b["if".len()..].trim();
+                        let (negate, cond) = if let Some(c) = rest.strip_prefix("not ") {
+                            (true, c.trim())
+                        } else {
+                            (false, rest)
+                        };
+                        let then_nodes = parse_nodes(tokens, pos, Some(&["else", "endif"]))?;
+                        let mut else_nodes = Vec::new();
+                        if let Token::Block(tag) = &tokens[*pos] {
+                            if tag.trim() == "else" {
+                                *pos += 1;
+                                else_nodes = parse_nodes(tokens, pos, Some(&["endif"]))?;
+                            }
+                        }
+                        // consume endif
+                        match &tokens[*pos] {
+                            Token::Block(t) if t.trim() == "endif" => *pos += 1,
+                            _ => bail!("expected endif"),
+                        }
+                        nodes.push(Node::If {
+                            cond: parse_path(cond),
+                            negate,
+                            then_nodes,
+                            else_nodes,
+                        });
+                    }
+                    "for" => {
+                        let rest = b["for".len()..].trim();
+                        let (var, list) = rest
+                            .split_once(" in ")
+                            .ok_or_else(|| anyhow!("bad for syntax: {b}"))?;
+                        let body = parse_nodes(tokens, pos, Some(&["endfor"]))?;
+                        match &tokens[*pos] {
+                            Token::Block(t) if t.trim() == "endfor" => *pos += 1,
+                            _ => bail!("expected endfor"),
+                        }
+                        nodes.push(Node::For {
+                            var: var.trim().to_string(),
+                            list: parse_path(list.trim()),
+                            body,
+                        });
+                    }
+                    other => bail!("unexpected block tag: {other}"),
+                }
+            }
+        }
+    }
+    if stop.is_some() {
+        bail!("unterminated block (missing endif/endfor)");
+    }
+    Ok(nodes)
+}
+
+// -- renderer ------------------------------------------------------------------
+
+fn lookup<'a>(row: &'a Json, path: &[String]) -> Option<&'a Json> {
+    let mut cur = row;
+    for seg in path {
+        cur = cur.opt(seg)?;
+    }
+    Some(cur)
+}
+
+fn to_text(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        Json::Null => String::new(),
+        other => other.to_string(),
+    }
+}
+
+fn truthy(v: Option<&Json>) -> bool {
+    match v {
+        None | Some(Json::Null) => false,
+        Some(Json::Bool(b)) => *b,
+        Some(Json::Num(n)) => *n != 0.0,
+        Some(Json::Str(s)) => !s.is_empty(),
+        Some(Json::Arr(a)) => !a.is_empty(),
+        Some(Json::Obj(o)) => !o.is_empty(),
+    }
+}
+
+fn apply_filters(mut s: String, filters: &[Filter]) -> String {
+    for f in filters {
+        s = match f {
+            Filter::Lower => s.to_lowercase(),
+            Filter::Upper => s.to_uppercase(),
+            Filter::Trim => s.trim().to_string(),
+            Filter::Title => s
+                .split_whitespace()
+                .map(|w| {
+                    let mut c = w.chars();
+                    match c.next() {
+                        Some(first) => first.to_uppercase().collect::<String>() + c.as_str(),
+                        None => String::new(),
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(" "),
+            Filter::Truncate(n) => {
+                if s.chars().count() > *n {
+                    let cut: String = s.chars().take(*n).collect();
+                    format!("{cut}...")
+                } else {
+                    s
+                }
+            }
+        };
+    }
+    s
+}
+
+fn render_nodes(nodes: &[Node], row: &Json, out: &mut String) -> Result<()> {
+    for node in nodes {
+        match node {
+            Node::Text(t) => out.push_str(t),
+            Node::Var(path, filters) => {
+                let v = lookup(row, path)
+                    .ok_or_else(|| anyhow!("template variable not found: {}", path.join(".")))?;
+                out.push_str(&apply_filters(to_text(v), filters));
+            }
+            Node::If { cond, negate, then_nodes, else_nodes } => {
+                let mut t = truthy(lookup(row, cond));
+                if *negate {
+                    t = !t;
+                }
+                render_nodes(if t { then_nodes } else { else_nodes }, row, out)?;
+            }
+            Node::For { var, list, body } => {
+                let items = lookup(row, list)
+                    .ok_or_else(|| anyhow!("template list not found: {}", list.join(".")))?
+                    .as_arr()
+                    .map_err(|_| anyhow!("{} is not a list", list.join(".")))?;
+                for item in items {
+                    // Shadow the loop variable in a copied row scope.
+                    let mut scope = row.as_obj()?.clone();
+                    scope.insert(var.clone(), item.clone());
+                    render_nodes(body, &Json::Obj(scope), out)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(pairs: Vec<(&str, Json)>) -> Json {
+        Json::obj(pairs)
+    }
+
+    #[test]
+    fn plain_substitution() {
+        let t = Template::parse("Answer: {{ question }}").unwrap();
+        let r = t.render(&row(vec![("question", Json::str("why?"))])).unwrap();
+        assert_eq!(r, "Answer: why?");
+    }
+
+    #[test]
+    fn dotted_access() {
+        let t = Template::parse("{{ meta.domain }}").unwrap();
+        let r = t
+            .render(&row(vec![(
+                "meta",
+                Json::obj(vec![("domain", Json::str("qa"))]),
+            )]))
+            .unwrap();
+        assert_eq!(r, "qa");
+    }
+
+    #[test]
+    fn filters() {
+        let t = Template::parse("{{ x | upper }} {{ x | title }} {{ y | truncate(3) }}").unwrap();
+        let r = t
+            .render(&row(vec![
+                ("x", Json::str("hello world")),
+                ("y", Json::str("abcdef")),
+            ]))
+            .unwrap();
+        assert_eq!(r, "HELLO WORLD Hello World abc...");
+    }
+
+    #[test]
+    fn if_else() {
+        let t =
+            Template::parse("{% if ctx %}Context: {{ ctx }}{% else %}No context{% endif %}").unwrap();
+        assert_eq!(
+            t.render(&row(vec![("ctx", Json::str("docs"))])).unwrap(),
+            "Context: docs"
+        );
+        assert_eq!(t.render(&row(vec![("ctx", Json::str(""))])).unwrap(), "No context");
+        assert_eq!(t.render(&row(vec![])).unwrap(), "No context");
+    }
+
+    #[test]
+    fn if_not() {
+        let t = Template::parse("{% if not ctx %}empty{% endif %}").unwrap();
+        assert_eq!(t.render(&row(vec![])).unwrap(), "empty");
+        assert_eq!(t.render(&row(vec![("ctx", Json::str("x"))])).unwrap(), "");
+    }
+
+    #[test]
+    fn for_loop() {
+        let t = Template::parse("{% for c in chunks %}[{{ c }}]{% endfor %}").unwrap();
+        let r = t
+            .render(&row(vec![(
+                "chunks",
+                Json::arr(vec![Json::str("a"), Json::str("b")]),
+            )]))
+            .unwrap();
+        assert_eq!(r, "[a][b]");
+    }
+
+    #[test]
+    fn nested_blocks() {
+        let t = Template::parse(
+            "{% for d in docs %}{% if d %}<{{ d | upper }}>{% endif %}{% endfor %}",
+        )
+        .unwrap();
+        let r = t
+            .render(&row(vec![(
+                "docs",
+                Json::arr(vec![Json::str("x"), Json::str(""), Json::str("y")]),
+            )]))
+            .unwrap();
+        assert_eq!(r, "<X><Y>");
+    }
+
+    #[test]
+    fn missing_variable_errors() {
+        let t = Template::parse("{{ nope }}").unwrap();
+        assert!(t.render(&row(vec![])).is_err());
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Template::parse("{{ x ").is_err());
+        assert!(Template::parse("{% if x %}no end").is_err());
+        assert!(Template::parse("{% frobnicate %}").is_err());
+        assert!(Template::parse("{{ x | nonsense }}").is_err());
+    }
+
+    #[test]
+    fn referenced_vars() {
+        let t = Template::parse("{{ a }} {% if b %}{{ c.d }}{% endif %}").unwrap();
+        assert_eq!(t.referenced_vars(), vec!["a", "b", "c.d"]);
+    }
+
+    #[test]
+    fn numeric_rendering() {
+        let t = Template::parse("n={{ n }}").unwrap();
+        assert_eq!(t.render(&row(vec![("n", Json::num(5.0))])).unwrap(), "n=5");
+    }
+
+    #[test]
+    fn listing2_style_template() {
+        // The paper's prompt-preparation usage: instruction + optional input.
+        let t = Template::parse(
+            "Instruction: {{ instruction }}\n{% if input %}Input: {{ input }}\n{% endif %}Response:",
+        )
+        .unwrap();
+        let with = t
+            .render(&row(vec![
+                ("instruction", Json::str("Summarize")),
+                ("input", Json::str("long text")),
+            ]))
+            .unwrap();
+        assert!(with.contains("Input: long text"));
+        let without = t
+            .render(&row(vec![("instruction", Json::str("Summarize"))]))
+            .unwrap();
+        assert!(!without.contains("Input:"));
+    }
+}

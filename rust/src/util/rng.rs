@@ -1,0 +1,234 @@
+//! Deterministic PRNG + distributions.
+//!
+//! PCG64 (O'Neill 2014, XSL-RR variant) — the offline crate set has no
+//! `rand`, and determinism across the simulator, the bootstrap, and the
+//! property-test harness matters more than cryptographic quality.
+
+/// PCG64 XSL-RR generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Rng {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        rng.next_u64();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child generator (for per-executor streams).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::with_stream(self.next_u64(), stream.wrapping_mul(0x9e3779b97f4a7c15) | 1)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (single value; the pair is dropped —
+    /// simplicity over throughput; the bootstrap hot path uses `below`).
+    pub fn normal(&mut self) -> f64 {
+        let mut u1 = self.f64();
+        if u1 < 1e-300 {
+            u1 = 1e-300;
+        }
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn normal_with(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Log-normal with parameters of the underlying normal.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate `lambda`.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let mut u = self.f64();
+        if u >= 1.0 {
+            u = 1.0 - 1e-16;
+        }
+        -(1.0 - u).ln() / lambda
+    }
+
+    /// Bernoulli.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Choose an element uniformly.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len())]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Sample `k` indices from [0, n) without replacement (partial shuffle).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_bounds() {
+        let mut rng = Rng::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            seen[rng.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_positive_and_median() {
+        let mut rng = Rng::new(13);
+        let n = 100_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.lognormal(0.0, 0.5)).collect();
+        assert!(xs.iter().all(|&x| x > 0.0));
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[n / 2];
+        assert!((median - 1.0).abs() < 0.02, "median={median}"); // exp(mu)=1
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Rng::new(17);
+        let n = 100_000;
+        let mean = (0..n).map(|_| rng.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(19);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_without_replacement() {
+        let mut rng = Rng::new(23);
+        let s = rng.sample_indices(100, 30);
+        assert_eq!(s.len(), 30);
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 30);
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(3);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

@@ -1,0 +1,24 @@
+#[test]
+fn dbg_quality() {
+    use spark_llm_eval::coordinator::runner::EvalRunner;
+    use spark_llm_eval::providers::simulated::SimServiceConfig;
+    use spark_llm_eval::ratelimit::VirtualClock;
+    use spark_llm_eval::data::synth;
+    use spark_llm_eval::config::EvalTask;
+    let mut r = EvalRunner::with_clock(VirtualClock::new());
+    r.service_config = SimServiceConfig { server_error_rate: 0.0, unparseable_rate: 0.0, sleep_latency: false, ..Default::default() };
+    let df = synth::generate(250, 21, synth::DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 }).unwrap();
+    let mut ta = EvalTask::default();
+    ta.model.model_name = "gpt-4o".into();
+    let mut tb = ta.clone();
+    tb.model.model_name = "gpt-3.5-turbo".into();
+    let ra = r.evaluate(&df, &ta).unwrap();
+    let rb = r.evaluate(&df, &tb).unwrap();
+    println!("a em = {}", ra.metric("exact_match").unwrap().value);
+    println!("b em = {}", rb.metric("exact_match").unwrap().value);
+    // discordant breakdown
+    let va = &ra.reports[0].values; let vb = &rb.reports[0].values;
+    let mut b01=0; let mut b10=0;
+    for (x,y) in va.iter().zip(vb) { match (x.unwrap()>=0.5, y.unwrap()>=0.5) { (true,false)=>b10+=1,(false,true)=>b01+=1,_=>{} } }
+    println!("b10={} b01={}", b10, b01);
+}

@@ -1,0 +1,202 @@
+//! Property-based tests on coordinator-level invariants (routing,
+//! batching, caching, statistics) using the hand-rolled harness in
+//! `util::proptest`.
+
+use spark_llm_eval::cache::{cache_key, ResponseCache};
+use spark_llm_eval::config::{CachePolicy, EvalTask, MetricConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::metrics::lexical;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::providers::InferenceResponse;
+use spark_llm_eval::ratelimit::{Clock, TokenBucket, VirtualClock};
+use spark_llm_eval::stats;
+use spark_llm_eval::util::proptest::{check, ensure, gen};
+
+#[test]
+fn prop_token_bucket_never_exceeds_rate() {
+    check("bucket admits <= limit + burst per window", 60, |rng| {
+        let rpm = 10.0 + rng.f64() * 600.0;
+        let clock = VirtualClock::new();
+        let mut bucket = TokenBucket::new(rpm, 1e12, clock.as_ref());
+        // Hammer for 3 virtual minutes.
+        let mut admitted_after_burst = 0u64;
+        while clock.now() < 180.0 {
+            bucket.acquire(1.0, clock.as_ref());
+            if clock.now() > 60.0 {
+                admitted_after_burst += 1;
+            }
+        }
+        // Steady state: two minutes of budget (+small slack).
+        ensure(
+            admitted_after_burst as f64 <= 2.0 * rpm + 2.0,
+            format!("admitted {admitted_after_burst} at rpm {rpm}"),
+        )
+    });
+}
+
+#[test]
+fn prop_cache_get_after_put() {
+    let dir = std::env::temp_dir().join(format!("slleval-prop-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+    check("get-after-put returns the stored response", 100, |rng| {
+        let prompt = gen::sentence(rng, 20);
+        let model = if rng.chance(0.5) { "gpt-4o" } else { "claude-3-haiku" };
+        let temp = if rng.chance(0.5) { 0.0 } else { 0.7 };
+        let text = gen::sentence(rng, 10);
+        let resp = InferenceResponse {
+            text: text.clone(),
+            input_tokens: rng.below(1000),
+            output_tokens: rng.below(500),
+            latency_ms: rng.f64() * 1000.0,
+            cost_usd: rng.f64() * 0.01,
+        };
+        cache.put(&prompt, model, "prov", temp, 1024, &resp).unwrap();
+        let hit = cache.get(&prompt, model, "prov", temp, 1024).unwrap();
+        ensure(
+            hit.map(|e| e.response_text) == Some(text),
+            "stored response must round-trip",
+        )
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_cache_key_injective_on_fields() {
+    check("cache key differs when any field differs", 100, |rng| {
+        let p1 = gen::sentence(rng, 8);
+        let p2 = format!("{p1} extra");
+        let k = cache_key(&p1, "m", "p", 0.0, 100);
+        ensure(k != cache_key(&p2, "m", "p", 0.0, 100), "prompt")?;
+        ensure(k != cache_key(&p1, "m2", "p", 0.0, 100), "model")?;
+        ensure(k != cache_key(&p1, "m", "p2", 0.0, 100), "provider")?;
+        ensure(k != cache_key(&p1, "m", "p", 0.1, 100), "temperature")?;
+        ensure(k != cache_key(&p1, "m", "p", 0.0, 101), "max_tokens")?;
+        ensure(k == cache_key(&p1, "m", "p", 0.0, 100), "determinism")
+    });
+}
+
+#[test]
+fn prop_lexical_metrics_bounded_and_reflexive() {
+    check("lexical metrics in [0,1], identity scores 1", 200, |rng| {
+        let a = gen::sentence(rng, 15);
+        let b = gen::sentence(rng, 15);
+        for (name, v) in [
+            ("em", lexical::exact_match(&a, &b, lexical::Normalize::default())),
+            ("contains", lexical::contains(&a, &b, lexical::Normalize::default())),
+            ("f1", lexical::token_f1(&a, &b)),
+            ("bleu", lexical::bleu(&a, &b)),
+            ("rouge", lexical::rouge_l(&a, &b)),
+        ] {
+            ensure((0.0..=1.0).contains(&v), format!("{name} = {v} for ({a:?},{b:?})"))?;
+        }
+        if !a.is_empty() {
+            ensure(
+                lexical::token_f1(&a, &a) == 1.0 && lexical::rouge_l(&a, &a) == 1.0,
+                "identity must score 1",
+            )?;
+        }
+        // Symmetry of F1.
+        ensure_close_f1(&a, &b)
+    });
+
+    fn ensure_close_f1(a: &str, b: &str) -> Result<(), String> {
+        let ab = lexical::token_f1(a, b);
+        let ba = lexical::token_f1(b, a);
+        ensure((ab - ba).abs() < 1e-12, format!("f1 asymmetric: {ab} vs {ba}"))
+    }
+}
+
+#[test]
+fn prop_ci_contains_point_and_nested_levels() {
+    check("CI ordering + monotone level", 40, |rng| {
+        let n = 15 + rng.below(120);
+        let xs = gen::values(rng, n);
+        let mut r1 = rng.fork(1);
+        let c90 = stats::percentile_bootstrap(&xs, stats::describe::mean, 0.90, 300, &mut r1);
+        let mut r2 = rng.fork(1);
+        let c99 = stats::percentile_bootstrap(&xs, stats::describe::mean, 0.99, 300, &mut r2);
+        ensure(c90.lo <= c90.hi, "order")?;
+        // Same bootstrap stream → nested intervals.
+        ensure(
+            c99.lo <= c90.lo + 1e-12 && c90.hi <= c99.hi + 1e-12,
+            format!("nesting: 90% ({}, {}) vs 99% ({}, {})", c90.lo, c90.hi, c99.lo, c99.hi),
+        )
+    });
+}
+
+#[test]
+fn prop_significance_tests_symmetry() {
+    check("swapping models flips sign, keeps p", 40, |rng| {
+        let n = 10 + rng.below(80);
+        let a = gen::values(rng, n);
+        let b = gen::values(rng, n);
+        let t_ab = stats::paired_t_test(&a, &b);
+        let t_ba = stats::paired_t_test(&b, &a);
+        ensure((t_ab.p_value - t_ba.p_value).abs() < 1e-12, "t p symmetric")?;
+        ensure((t_ab.statistic + t_ba.statistic).abs() < 1e-9, "t stat antisymmetric")?;
+        let m_ab = stats::mcnemar_test(&gen::binary(rng, n), &gen::binary(rng, n));
+        ensure((0.0..=1.0).contains(&m_ab.p_value), "mcnemar p bounded")
+    });
+}
+
+#[test]
+fn prop_pipeline_conservation() {
+    // Over random task shapes: every example is accounted for exactly once
+    // (hit, api success, or failure), and metric counts add up.
+    let service = SimServiceConfig {
+        server_error_rate: 0.02,
+        unparseable_rate: 0.0,
+        sleep_latency: false,
+        ..Default::default()
+    };
+    check("inference accounting conserves examples", 12, |rng| {
+        let n = 20 + rng.below(150);
+        let df = synth::generate_default(n, rng.next_u64());
+        let mut task = EvalTask::default();
+        task.executors = 1 + rng.below(12);
+        task.inference.batch_size = 1 + rng.below(60);
+        task.inference.max_retries = rng.below(3);
+        task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+        let mut runner = EvalRunner::with_clock(VirtualClock::new());
+        runner.service_config = service.clone();
+        let r = runner.evaluate(&df, &task).map_err(|e| e.to_string())?;
+        let inf = &r.inference;
+        ensure(inf.examples == n, "examples")?;
+        ensure(
+            (inf.cache_hits + inf.cache_misses) as usize == n,
+            format!("hits {} + misses {} != {n}", inf.cache_hits, inf.cache_misses),
+        )?;
+        let m = r.metric("exact_match").unwrap();
+        ensure(m.n + m.n_failed == n, "metric accounting")?;
+        ensure(m.n_failed == r.failed_examples.len(), "failures consistent")
+    });
+}
+
+#[test]
+fn prop_partitioning_independent_of_executor_count() {
+    // Metric values must not depend on how many executors computed them.
+    check("executor count does not change results", 8, |rng| {
+        let df = synth::generate_default(80, rng.next_u64());
+        let service = SimServiceConfig {
+            server_error_rate: 0.0,
+            unparseable_rate: 0.0,
+            sleep_latency: false,
+            ..Default::default()
+        };
+        let mut values = Vec::new();
+        for execs in [1usize, 3, 8] {
+            let mut task = EvalTask::default();
+            task.executors = execs;
+            let mut runner = EvalRunner::with_clock(VirtualClock::new());
+            runner.service_config = service.clone();
+            let r = runner.evaluate(&df, &task).map_err(|e| e.to_string())?;
+            values.push(r.metric("exact_match").unwrap().value);
+        }
+        ensure(
+            values.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12),
+            format!("values differ across executor counts: {values:?}"),
+        )
+    });
+}

@@ -1,0 +1,161 @@
+//! Golden cross-validation of the from-scratch Rust statistics stack
+//! against scipy (paper §5.4: "we compared against reference
+//! implementations"). Fixtures generated at build time by
+//! `python/compile/stats_fixtures.py`.
+
+use spark_llm_eval::runtime::default_artifact_dir;
+use spark_llm_eval::stats::special::{
+    beta_inc, chi2_cdf, erf, ln_gamma, normal_cdf, normal_ppf, t_cdf, t_ppf,
+};
+use spark_llm_eval::stats::{
+    mcnemar_test, paired_t_test, shapiro_wilk, t_interval, wilcoxon_signed_rank, wilson_interval,
+};
+use spark_llm_eval::util::json::Json;
+
+fn fixtures() -> Option<Json> {
+    let path = default_artifact_dir().join("stats_fixtures.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).unwrap())
+}
+
+fn vecf(v: &Json) -> Vec<f64> {
+    v.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap()).collect()
+}
+
+fn close(got: f64, want: f64, tol: f64, ctx: &str) {
+    assert!(
+        (got - want).abs() <= tol * (1.0 + want.abs()),
+        "{ctx}: got {got}, scipy {want}"
+    );
+}
+
+#[test]
+fn special_functions_match_scipy() {
+    let Some(fx) = fixtures() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    for case in fx.get("ln_gamma").unwrap().as_arr().unwrap() {
+        let c = vecf(case);
+        close(ln_gamma(c[0]), c[1], 1e-10, "ln_gamma");
+    }
+    for case in fx.get("erf").unwrap().as_arr().unwrap() {
+        let c = vecf(case);
+        close(erf(c[0]), c[1], 1e-10, "erf");
+    }
+    for case in fx.get("normal_cdf").unwrap().as_arr().unwrap() {
+        let c = vecf(case);
+        close(normal_cdf(c[0]), c[1], 1e-9, "normal_cdf");
+    }
+    for case in fx.get("normal_ppf").unwrap().as_arr().unwrap() {
+        let c = vecf(case);
+        close(normal_ppf(c[0]), c[1], 1e-7, "normal_ppf");
+    }
+    for case in fx.get("t_cdf").unwrap().as_arr().unwrap() {
+        let c = vecf(case);
+        close(t_cdf(c[0], c[1]), c[2], 1e-9, "t_cdf");
+    }
+    for case in fx.get("t_ppf").unwrap().as_arr().unwrap() {
+        let c = vecf(case);
+        close(t_ppf(c[0], c[1]), c[2], 1e-7, "t_ppf");
+    }
+    for case in fx.get("chi2_cdf").unwrap().as_arr().unwrap() {
+        let c = vecf(case);
+        close(chi2_cdf(c[0], c[1]), c[2], 1e-9, "chi2_cdf");
+    }
+    for case in fx.get("beta_inc").unwrap().as_arr().unwrap() {
+        let c = vecf(case);
+        close(beta_inc(c[0], c[1], c[2]), c[3], 1e-9, "beta_inc");
+    }
+}
+
+#[test]
+fn paired_tests_match_scipy() {
+    let Some(fx) = fixtures() else { return };
+    for (i, case) in fx.get("paired_tests").unwrap().as_arr().unwrap().iter().enumerate() {
+        let a = vecf(case.get("a").unwrap());
+        let b = vecf(case.get("b").unwrap());
+        let t = paired_t_test(&a, &b);
+        close(
+            t.statistic,
+            case.get("t_statistic").unwrap().as_f64().unwrap(),
+            1e-9,
+            &format!("t stat case {i}"),
+        );
+        close(
+            t.p_value,
+            case.get("t_pvalue").unwrap().as_f64().unwrap(),
+            1e-8,
+            &format!("t p case {i}"),
+        );
+        let w = wilcoxon_signed_rank(&a, &b);
+        let scipy_p = case.get("wilcoxon_pvalue").unwrap().as_f64().unwrap();
+        // scipy uses exact for n<=25 w/o ties, normal approx beyond; our
+        // thresholds differ slightly, so allow a coarser band.
+        let tol: f64 = if a.len() <= 12 { 1e-9 } else { 0.08 };
+        assert!(
+            (w.p_value - scipy_p).abs() < tol.max(0.08 * scipy_p),
+            "wilcoxon case {i}: got {}, scipy {scipy_p}",
+            w.p_value
+        );
+    }
+}
+
+#[test]
+fn mcnemar_matches_reference() {
+    let Some(fx) = fixtures() else { return };
+    for (i, case) in fx.get("mcnemar").unwrap().as_arr().unwrap().iter().enumerate() {
+        let a = vecf(case.get("a").unwrap());
+        let b = vecf(case.get("b").unwrap());
+        let want = case.get("pvalue").unwrap().as_f64().unwrap();
+        let got = mcnemar_test(&a, &b).p_value;
+        close(got, want, 1e-9, &format!("mcnemar case {i}"));
+    }
+}
+
+#[test]
+fn shapiro_matches_scipy_approximately() {
+    let Some(fx) = fixtures() else { return };
+    for (i, case) in fx.get("shapiro").unwrap().as_arr().unwrap().iter().enumerate() {
+        let x = vecf(case.get("x").unwrap());
+        let want_w = case.get("w").unwrap().as_f64().unwrap();
+        let want_p = case.get("p").unwrap().as_f64().unwrap();
+        let r = shapiro_wilk(&x);
+        // Royston approximation vs scipy's exact coefficients: W to ~1e-2,
+        // p to the same decision at α=0.05 and within a coarse band.
+        assert!((r.w - want_w).abs() < 0.015, "case {i}: W {} vs {want_w}", r.w);
+        assert_eq!(
+            r.p_value < 0.05,
+            want_p < 0.05,
+            "case {i}: decision mismatch ({} vs {want_p})",
+            r.p_value
+        );
+        assert!(
+            (r.p_value - want_p).abs() < 0.05 + 0.3 * want_p,
+            "case {i}: p {} vs {want_p}",
+            r.p_value
+        );
+    }
+}
+
+#[test]
+fn wilson_matches_reference() {
+    let Some(fx) = fixtures() else { return };
+    for case in fx.get("wilson").unwrap().as_arr().unwrap() {
+        let c = vecf(case);
+        let ci = wilson_interval(c[0] as u64, c[1] as u64, 0.95);
+        close(ci.lo, c[2], 1e-9, "wilson lo");
+        close(ci.hi, c[3], 1e-9, "wilson hi");
+    }
+}
+
+#[test]
+fn t_interval_matches_scipy() {
+    let Some(fx) = fixtures() else { return };
+    for (i, case) in fx.get("t_interval").unwrap().as_arr().unwrap().iter().enumerate() {
+        let x = vecf(case.get("x").unwrap());
+        let ci = t_interval(&x, 0.95);
+        close(ci.lo, case.get("lo").unwrap().as_f64().unwrap(), 1e-7, &format!("t lo {i}"));
+        close(ci.hi, case.get("hi").unwrap().as_f64().unwrap(), 1e-7, &format!("t hi {i}"));
+    }
+}
