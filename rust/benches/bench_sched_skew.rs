@@ -1,0 +1,201 @@
+//! Straggler benchmark: static range partitioning vs work stealing vs
+//! work stealing + speculation + adaptive splitting, under injected
+//! heavy-tailed (pareto) per-row latency and a slow-node scenario.
+//!
+//! This is the scheduler's reason to exist (ISSUE 1 / paper §6.1): with
+//! static partitioning one hot partition sets the makespan; dynamic task
+//! scheduling keeps every executor busy. Results are recorded in
+//! `BENCH_sched.json` at the repository root.
+
+use spark_llm_eval::data::{DataFrame, Value};
+use spark_llm_eval::sched::{run_scheduled, SchedOutput, SchedulerConfig};
+use spark_llm_eval::util::bench::section;
+use spark_llm_eval::util::json::Json;
+use spark_llm_eval::util::rng::Rng;
+use std::time::Instant;
+
+const EXECUTORS: usize = 8;
+const BATCH: usize = 10;
+const ROWS: usize = 1600;
+const BASE_US: u64 = 80;
+const REPS: usize = 3;
+
+/// Busy-wait for `us` microseconds (thread::sleep is too coarse).
+fn spin(us: u64) {
+    let t = Instant::now();
+    while (t.elapsed().as_micros() as u64) < us {
+        std::hint::spin_loop();
+    }
+}
+
+/// Per-row cost in microseconds for each scenario.
+struct Scenario {
+    name: &'static str,
+    description: &'static str,
+    /// cost(row) in µs.
+    cost: Box<dyn Fn(usize) -> u64 + Sync>,
+    /// Extra multiplier for executor 0 (slow-node scenario).
+    slow_node_mult: u64,
+}
+
+fn scenarios() -> Vec<Scenario> {
+    // Deterministic pareto draws per row: x = u^(-1/alpha), alpha = 1.1,
+    // capped. Heavy tail: a few rows cost ~40x the base.
+    let mut rng = Rng::new(0x5EED);
+    let pareto: Vec<u64> = (0..ROWS)
+        .map(|_| {
+            let u = (1.0 - rng.f64()).max(1e-9);
+            let x = u.powf(-1.0 / 1.1);
+            (BASE_US as f64 * x.min(40.0)) as u64
+        })
+        .collect();
+
+    vec![
+        Scenario {
+            name: "clustered_hot_partition",
+            description: "first eighth of the rows is 20x slower (hot partition)",
+            cost: Box::new(|row| {
+                if row < ROWS / EXECUTORS {
+                    BASE_US * 20
+                } else {
+                    BASE_US
+                }
+            }),
+            slow_node_mult: 1,
+        },
+        Scenario {
+            name: "pareto_tail",
+            description: "iid pareto(1.1) per-row cost, capped at 40x",
+            cost: Box::new(move |row| pareto[row]),
+            slow_node_mult: 1,
+        },
+        Scenario {
+            name: "slow_node",
+            description: "uniform rows but executor 0 runs 8x slower",
+            cost: Box::new(|_| BASE_US),
+            slow_node_mult: 8,
+        },
+    ]
+}
+
+fn frame() -> DataFrame {
+    DataFrame::from_columns(vec![(
+        "x",
+        (0..ROWS as i64).map(Value::Int).collect::<Vec<_>>(),
+    )])
+    .unwrap()
+}
+
+/// Run one configuration over a scenario; returns (best seconds, output of
+/// the last rep for telemetry).
+fn measure(df: &DataFrame, sc: &Scenario, cfg: &SchedulerConfig) -> (f64, SchedOutput<i64>) {
+    let mut best = f64::INFINITY;
+    let mut last = None;
+    for _ in 0..REPS {
+        let t = Instant::now();
+        let out = run_scheduled(
+            df,
+            EXECUTORS,
+            BATCH,
+            cfg,
+            None,
+            |eid| Ok(if eid == 0 { sc.slow_node_mult } else { 1 }),
+            |mult, df, slice| {
+                let mut out = Vec::with_capacity(slice.len());
+                for i in slice.indices() {
+                    spin((sc.cost)(i) * *mult);
+                    out.push(df.row(i).get("x").unwrap().as_f64().unwrap() as i64);
+                }
+                Ok(out)
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rows.len(), ROWS, "row conservation");
+        assert!(out.rows.iter().enumerate().all(|(i, &v)| v == i as i64), "row order");
+        best = best.min(t.elapsed().as_secs_f64());
+        last = Some(out);
+    }
+    (best, last.unwrap())
+}
+
+fn main() {
+    let parallelism = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    section(&format!(
+        "scheduler skew benchmark — {ROWS} rows, {EXECUTORS} executors, {parallelism} cores"
+    ));
+
+    let df = frame();
+    let static_cfg = SchedulerConfig::legacy();
+    let ws_cfg = SchedulerConfig {
+        speculation: false,
+        adaptive_split: false,
+        ..Default::default()
+    };
+    let full_cfg = SchedulerConfig::default();
+
+    let mut scenario_jsons = Vec::new();
+    for sc in scenarios() {
+        section(&format!("{} — {}", sc.name, sc.description));
+        let (t_static, _) = measure(&df, &sc, &static_cfg);
+        let (t_ws, ws_out) = measure(&df, &sc, &ws_cfg);
+        let (t_full, full_out) = measure(&df, &sc, &full_cfg);
+        let speedup_ws = t_static / t_ws;
+        let speedup_full = t_static / t_full;
+        println!(
+            "static {:>8.1}ms | stealing {:>8.1}ms ({speedup_ws:.2}x) | \
+             +speculation+split {:>8.1}ms ({speedup_full:.2}x)",
+            t_static * 1e3,
+            t_ws * 1e3,
+            t_full * 1e3,
+        );
+        println!(
+            "telemetry (full): {} tasks, {} steals, {} speculative ({} won), {} splits, \
+             skew {:.2}x",
+            full_out.sched.tasks,
+            full_out.sched.steals,
+            full_out.sched.speculative_launched,
+            full_out.sched.speculative_wins,
+            full_out.sched.splits,
+            full_out.sched.skew_ratio,
+        );
+        scenario_jsons.push(Json::obj(vec![
+            ("name", Json::str(sc.name)),
+            ("description", Json::str(sc.description)),
+            ("rows", Json::num(ROWS as f64)),
+            ("executors", Json::num(EXECUTORS as f64)),
+            ("static_secs", Json::num(t_static)),
+            ("work_stealing_secs", Json::num(t_ws)),
+            ("ws_speculation_split_secs", Json::num(t_full)),
+            ("speedup_ws_vs_static", Json::num(speedup_ws)),
+            ("speedup_full_vs_static", Json::num(speedup_full)),
+            ("steals", Json::num(ws_out.sched.steals as f64)),
+            ("full_telemetry", full_out.sched.to_json()),
+        ]));
+
+        // Acceptance gate (ISSUE 1): ≥1.5x over static partitioning under
+        // latency skew — only meaningful with real parallelism available.
+        if parallelism >= 4 && sc.name == "clustered_hot_partition" {
+            assert!(
+                speedup_ws.max(speedup_full) >= 1.5,
+                "work stealing must beat static partitioning by ≥1.5x under clustered skew \
+                 (got ws {speedup_ws:.2}x, full {speedup_full:.2}x)"
+            );
+        }
+    }
+
+    let report = Json::obj(vec![
+        ("benchmark", Json::str("bench_sched_skew")),
+        ("rows", Json::num(ROWS as f64)),
+        ("executors", Json::num(EXECUTORS as f64)),
+        ("batch_size", Json::num(BATCH as f64)),
+        ("reps", Json::num(REPS as f64)),
+        ("host_parallelism", Json::num(parallelism as f64)),
+        ("scenarios", Json::arr(scenario_jsons)),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_sched.json");
+    std::fs::write(&out_path, report.to_pretty()).expect("writing BENCH_sched.json");
+    println!("\nresults written to {}", out_path.display());
+}

@@ -10,6 +10,8 @@ use crate::util::json::{Json, JsonError};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
+pub use crate::sched::SchedulerConfig;
+
 /// Cache behaviour (paper §3.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CachePolicy {
@@ -237,6 +239,9 @@ pub struct EvalTask {
     pub data: DataConfig,
     /// Number of parallel executors (Spark cluster size equivalent).
     pub executors: usize,
+    /// Task scheduling behaviour: granularity, work stealing, speculative
+    /// execution, retry/blacklist fault tolerance (see [`crate::sched`]).
+    pub scheduler: SchedulerConfig,
 }
 
 impl Default for EvalTask {
@@ -249,6 +254,7 @@ impl Default for EvalTask {
             statistics: StatisticsConfig::default(),
             data: DataConfig::default(),
             executors: 8,
+            scheduler: SchedulerConfig::default(),
         }
     }
 }
@@ -282,6 +288,7 @@ impl EvalTask {
                 bail!("unknown metric type '{}' for metric '{}'", m.metric_type, m.name);
             }
         }
+        self.scheduler.validate()?;
         Ok(())
     }
 
@@ -351,6 +358,7 @@ impl EvalTask {
                     ("question_column", Json::str(&self.data.question_column)),
                 ]),
             ),
+            ("scheduler", self.scheduler.to_json()),
         ])
     }
 
@@ -415,6 +423,9 @@ impl EvalTask {
                 context_column: d.str_or("context_column", "context").to_string(),
                 question_column: d.str_or("question_column", "question").to_string(),
             };
+        }
+        if let Some(s) = v.opt("scheduler") {
+            task.scheduler = SchedulerConfig::from_json(s)?;
         }
         task.validate()?;
         Ok(task)
@@ -482,6 +493,20 @@ mod tests {
         let mut t = EvalTask::default();
         t.metrics = vec![MetricConfig::new("x", "bogus_type")];
         assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn scheduler_config_round_trips_and_validates() {
+        let mut task = EvalTask::default();
+        task.scheduler.tasks_per_executor = 9;
+        task.scheduler.speculation = false;
+        task.scheduler.max_task_attempts = 5;
+        let restored = EvalTask::from_json(&task.to_json()).unwrap();
+        assert_eq!(task, restored);
+
+        let mut bad = EvalTask::default();
+        bad.scheduler.tasks_per_executor = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

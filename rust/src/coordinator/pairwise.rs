@@ -8,7 +8,9 @@ use super::runner::EvalRunner;
 use crate::config::EvalTask;
 use crate::data::DataFrame;
 use crate::metrics::judge::{pairwise_prompt, parse_verdict};
+use crate::providers::simulated::SimEngine;
 use crate::providers::{InferenceEngine, InferenceRequest};
+use crate::sched::run_scheduled;
 use crate::stats::special::binom_test_half;
 use anyhow::Result;
 
@@ -56,6 +58,16 @@ impl EvalRunner {
     /// Run a pairwise comparison: infer both models' responses over `df`
     /// (through cache/rate-limit machinery via `evaluate`-style inference),
     /// then judge each response pair in both presentation orders.
+    ///
+    /// Judging runs through the task scheduler (`task_a.scheduler`): one
+    /// cached judge engine per executor, contiguous pair blocks as tasks,
+    /// with work stealing / speculation / retry. Verdicts come back in row
+    /// order, and judge response *content* is keyed on prompt text alone,
+    /// so absent transient provider faults the outcome is identical to
+    /// sequential judging. Injected 5xx faults are drawn per engine call
+    /// sequence and the judge path (like the sequential one it replaced)
+    /// does not retry, so under a nonzero `server_error_rate` *which*
+    /// pairs land as `Unscored` can vary with the schedule.
     pub fn evaluate_pairwise(
         &self,
         df: &DataFrame,
@@ -69,38 +81,61 @@ impl EvalRunner {
         let (rows_a, _) = self.run_inference(&prompts, task_a)?;
         let (rows_b, _) = self.run_inference(&prompts, task_b)?;
 
-        let engine = self.make_judge_engine(judge_provider, judge_model)?;
-        let mut judge = CachedEngine::new(engine, self.cache.clone());
+        // Pre-resolve shared handles: the executor closures must not
+        // capture `self` (the runner holds the non-Sync PJRT runtime).
+        let service = self.service(judge_provider);
+        let clock = self.clock.clone();
+        let cache = self.cache.clone();
 
-        let mut verdicts = Vec::with_capacity(df.len());
+        let out = run_scheduled(
+            df,
+            task_a.executors,
+            task_a.inference.batch_size,
+            &task_a.scheduler,
+            None,
+            |_eid| {
+                let mut engine =
+                    SimEngine::new(service.clone(), judge_provider, judge_model, clock.clone())?;
+                engine.initialize()?;
+                Ok(CachedEngine::new(engine, cache.clone()))
+            },
+            |judge, df, slice| {
+                let mut verdicts = Vec::with_capacity(slice.len());
+                for i in slice.indices() {
+                    let (Some(resp_a), Some(resp_b)) = (&rows_a[i].response, &rows_b[i].response)
+                    else {
+                        verdicts.push(PairVerdict::Unscored);
+                        continue;
+                    };
+                    let row = df.row(i);
+                    let question = row.str(&task_a.data.question_column);
+                    let reference = row.str(&task_a.data.reference_column);
+
+                    // Judge both presentation orders.
+                    let fwd = judge_once(judge, rubric, question, resp_a, resp_b, reference);
+                    let rev = judge_once(judge, rubric, question, resp_b, resp_a, reference);
+                    verdicts.push(match (fwd, rev) {
+                        // fwd 'A' means A wins; rev 'A' means B wins
+                        // (order swapped).
+                        (Some('A'), Some('B')) => PairVerdict::AWins,
+                        (Some('B'), Some('A')) => PairVerdict::BWins,
+                        (Some(_), Some(_)) => PairVerdict::Inconsistent,
+                        _ => PairVerdict::Unscored,
+                    });
+                }
+                Ok(verdicts)
+            },
+        )?;
+
+        let verdicts = out.rows;
         let (mut a_wins, mut b_wins, mut inconsistent, mut unscored) = (0, 0, 0, 0);
-        for i in 0..df.len() {
-            let (Some(resp_a), Some(resp_b)) = (&rows_a[i].response, &rows_b[i].response) else {
-                verdicts.push(PairVerdict::Unscored);
-                unscored += 1;
-                continue;
-            };
-            let row = df.row(i);
-            let question = row.str(&task_a.data.question_column);
-            let reference = row.str(&task_a.data.reference_column);
-
-            // Judge both presentation orders.
-            let fwd = judge_once(&mut judge, rubric, question, resp_a, resp_b, reference);
-            let rev = judge_once(&mut judge, rubric, question, resp_b, resp_a, reference);
-            let verdict = match (fwd, rev) {
-                // fwd 'A' means A wins; rev 'A' means B wins (order swapped).
-                (Some('A'), Some('B')) => PairVerdict::AWins,
-                (Some('B'), Some('A')) => PairVerdict::BWins,
-                (Some(_), Some(_)) => PairVerdict::Inconsistent,
-                _ => PairVerdict::Unscored,
-            };
+        for verdict in &verdicts {
             match verdict {
                 PairVerdict::AWins => a_wins += 1,
                 PairVerdict::BWins => b_wins += 1,
                 PairVerdict::Inconsistent => inconsistent += 1,
                 PairVerdict::Unscored => unscored += 1,
             }
-            verdicts.push(verdict);
         }
 
         let judged = a_wins + b_wins + inconsistent;
@@ -119,19 +154,6 @@ impl EvalRunner {
                 inconsistent as f64 / judged as f64
             },
         })
-    }
-
-    fn make_judge_engine(
-        &self,
-        provider: &str,
-        model: &str,
-    ) -> Result<crate::providers::simulated::SimEngine> {
-        // Reuse the runner's provider service plumbing via a tiny shim:
-        // identical to the engines the metric stage builds.
-        let mut task = EvalTask::default();
-        task.model.provider = provider.to_string();
-        task.model.model_name = model.to_string();
-        self.build_engine_for(&task.model)
     }
 }
 

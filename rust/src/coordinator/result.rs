@@ -1,6 +1,7 @@
 //! Result types produced by the evaluation runner.
 
 use crate::metrics::MetricReport;
+use crate::sched::{SchedulerStats, TaskRecord};
 use crate::stats::{ConfidenceInterval, EffectSize, TestChoice, TestResult};
 use crate::util::json::Json;
 
@@ -62,6 +63,11 @@ pub struct InferenceStats {
     pub latency_p99_ms: f64,
     /// Examples per minute over the inference stage.
     pub throughput_per_min: f64,
+    /// Task-scheduler telemetry for the inference stage (stealing,
+    /// speculation, retries, skew).
+    pub sched: SchedulerStats,
+    /// Per-task-attempt timeline of the inference stage.
+    pub timeline: Vec<TaskRecord>,
 }
 
 /// Complete evaluation outcome.
@@ -109,6 +115,11 @@ impl EvalResult {
                     ("latency_p99_ms", Json::num(self.inference.latency_p99_ms)),
                     ("throughput_per_min", Json::num(self.inference.throughput_per_min)),
                 ]),
+            ),
+            ("scheduler", self.inference.sched.to_json()),
+            (
+                "task_timeline",
+                Json::arr(self.inference.timeline.iter().map(|t| t.to_json()).collect()),
             ),
             ("failed_examples", Json::num(self.failed_examples.len() as f64)),
             ("wall_secs", Json::num(self.wall_secs)),

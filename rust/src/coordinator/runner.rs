@@ -11,8 +11,9 @@ use super::result::{EvalResult, InferenceStats, MetricValue};
 use crate::cache::ResponseCache;
 use crate::config::{CachePolicy, CiMethod, EvalTask, MetricConfig};
 use crate::data::{DataFrame, Value};
-use crate::engine::{run_partitioned, BatchSlice};
+use crate::engine::{BatchSlice, Progress};
 use crate::metrics::{self, Example, MetricReport};
+use crate::sched::run_scheduled;
 use crate::providers::retry::{infer_with_retry, RetryPolicy};
 use crate::providers::simulated::{SimEngine, SimService, SimServiceConfig};
 use crate::providers::tokenizer::estimate_request_tokens;
@@ -43,6 +44,10 @@ pub struct EvalRunner {
     services: Mutex<std::collections::BTreeMap<String, Arc<SimService>>>,
     pub cache: Option<Arc<ResponseCache>>,
     pub runtime: Option<SemanticRuntime>,
+    /// Optional driver-side progress counter: the scheduler advances it as
+    /// inference tasks complete, so long/streaming jobs can report real
+    /// progress from another thread.
+    pub progress: Option<Arc<Progress>>,
 }
 
 impl EvalRunner {
@@ -57,7 +62,15 @@ impl EvalRunner {
             services: Mutex::new(Default::default()),
             cache: None,
             runtime: None,
+            progress: None,
         }
+    }
+
+    /// Attach a driver-side progress counter (advanced by the scheduler as
+    /// inference tasks complete).
+    pub fn with_progress(mut self, progress: Arc<Progress>) -> Self {
+        self.progress = Some(progress);
+        self
     }
 
     pub fn with_cache(mut self, cache: ResponseCache) -> Self {
@@ -80,7 +93,10 @@ impl EvalRunner {
         Ok(())
     }
 
-    fn service(&self, provider: &str) -> Arc<SimService> {
+    /// Shared provider endpoint handle (one per provider name). `pub(crate)`
+    /// so sibling coordinator stages (pairwise judging) can build executor-
+    /// local engines without capturing the non-`Sync` runner in closures.
+    pub(crate) fn service(&self, provider: &str) -> Arc<SimService> {
         let mut services = self.services.lock().unwrap();
         services
             .entry(provider.to_string())
@@ -108,10 +124,12 @@ impl EvalRunner {
     pub fn prepare_prompts(&self, df: &DataFrame, task: &EvalTask) -> Result<Vec<String>> {
         let template = Template::parse(&task.data.prompt_template)
             .context("parsing prompt_template")?;
-        let out = run_partitioned(
+        let out = run_scheduled(
             df,
             task.executors,
             task.inference.batch_size,
+            &task.scheduler,
+            None,
             |_eid| Ok(template.clone()),
             |tpl, df, slice: BatchSlice| {
                 slice
@@ -155,6 +173,14 @@ impl EvalRunner {
         // runtime).
         let service = self.service(&model_cfg.provider);
         let seed = task.statistics.seed;
+        let progress = self.progress.as_deref();
+        // API-call/cost accounting accumulated inside the UDF so it covers
+        // EVERY attempt — including speculative duplicates and abandoned
+        // task attempts whose row outputs the scheduler discards. The
+        // provider bills those calls; the per-row fields below (cache
+        // hits, failures, latencies) describe the winning rows only.
+        // (api_calls, retries, cost_usd)
+        let spend = Mutex::new((0u64, 0u64, 0.0f64));
 
         struct ExecState {
             engine: SimEngine,
@@ -162,10 +188,12 @@ impl EvalRunner {
             rng: Rng,
         }
 
-        let out = run_partitioned(
+        let out = run_scheduled(
             &df,
             executors,
             inf.batch_size,
+            &task.scheduler,
+            progress,
             |eid| {
                 let mut engine = SimEngine::new(
                     service.clone(),
@@ -253,6 +281,12 @@ impl EvalRunner {
                                     )?;
                                 }
                             }
+                            {
+                                let mut s = spend.lock().unwrap();
+                                s.0 += outcome.attempts as u64;
+                                s.1 += (outcome.attempts - 1) as u64;
+                                s.2 += resp.cost_usd;
+                            }
                             rows.push(RowInference {
                                 response: Some(resp.text),
                                 from_cache: false,
@@ -262,14 +296,17 @@ impl EvalRunner {
                                 error: None,
                             });
                         }
-                        Err(e) => rows.push(RowInference {
-                            response: None,
-                            from_cache: false,
-                            latency_ms: 0.0,
-                            cost_usd: 0.0,
-                            attempts: outcome.attempts,
-                            error: Some(e.to_string()),
-                        }),
+                        Err(e) => {
+                            spend.lock().unwrap().0 += outcome.attempts as u64;
+                            rows.push(RowInference {
+                                response: None,
+                                from_cache: false,
+                                latency_ms: 0.0,
+                                cost_usd: 0.0,
+                                attempts: outcome.attempts,
+                                error: Some(e.to_string()),
+                            })
+                        }
                     }
                 }
                 Ok(rows)
@@ -284,21 +321,25 @@ impl EvalRunner {
             examples: rows.len(),
             wall_secs: wall,
             throughput_per_min: rows.len() as f64 / wall * 60.0,
+            sched: out.sched,
+            timeline: out.timeline,
             ..Default::default()
         };
+        // True provider spend over every attempt (speculative duplicates
+        // included); per-row accounting below covers the winning rows.
+        let (api_calls, retries, cost_usd) = *spend.lock().unwrap();
+        stats.api_calls = api_calls;
+        stats.retries = retries;
+        stats.total_cost_usd = cost_usd;
         let mut latencies: Vec<f64> = Vec::new();
         for r in &rows {
             if r.from_cache {
                 stats.cache_hits += 1;
             } else if r.response.is_some() {
                 stats.cache_misses += 1;
-                stats.api_calls += r.attempts as u64;
-                stats.retries += (r.attempts - 1) as u64;
-                stats.total_cost_usd += r.cost_usd;
                 latencies.push(r.latency_ms);
             } else {
                 stats.cache_misses += 1;
-                stats.api_calls += r.attempts as u64;
                 stats.failed += 1;
             }
         }
@@ -375,10 +416,12 @@ impl EvalRunner {
                     "i",
                     (0..examples.len() as i64).map(Value::Int).collect::<Vec<_>>(),
                 )])?;
-                let out = run_partitioned(
+                let out = run_scheduled(
                     &df,
                     task.executors,
                     task.inference.batch_size,
+                    &task.scheduler,
+                    None,
                     |_| Ok(()),
                     |_, _df, slice| {
                         Ok(slice

@@ -13,6 +13,7 @@ use super::runner::EvalRunner;
 use crate::config::EvalTask;
 use crate::data::DataFrame;
 use crate::metrics::MetricReport;
+use crate::sched::SchedulerStats;
 use crate::stats::{wilson_interval, t_interval, ConfidenceInterval, MetricScale};
 use anyhow::Result;
 
@@ -30,6 +31,9 @@ pub struct StreamUpdate {
     pub cache_hits: u64,
     pub cost_usd: f64,
     pub failed: u64,
+    /// Cumulative scheduler telemetry (stealing / speculation / retries)
+    /// across the chunks processed so far.
+    pub sched: SchedulerStats,
 }
 
 impl StreamUpdate {
@@ -50,6 +54,11 @@ impl EvalRunner {
     /// Evaluate in chunks of `chunk_size`, invoking `on_update` after each
     /// chunk. Returns the final per-metric reports over the processed
     /// prefix (full dataset unless the callback stopped early).
+    ///
+    /// For intra-chunk progress, attach a [`crate::engine::Progress`] via
+    /// [`EvalRunner::with_progress`] (sized to `df.len()`): the scheduler
+    /// advances it as individual inference tasks complete, so another
+    /// thread can observe real driver-side progress between updates.
     pub fn evaluate_streaming<F>(
         &self,
         df: &DataFrame,
@@ -76,6 +85,7 @@ impl EvalRunner {
             cache_hits: 0,
             cost_usd: 0.0,
             failed: 0,
+            sched: SchedulerStats::default(),
         };
 
         let mut start = 0usize;
@@ -99,6 +109,7 @@ impl EvalRunner {
             update.cache_hits += stats.cache_hits;
             update.cost_usd += stats.total_cost_usd;
             update.failed += stats.failed;
+            update.sched.merge(&stats.sched);
             update.running = task
                 .metrics
                 .iter()
@@ -233,6 +244,29 @@ mod tests {
             widths.last().unwrap() < widths.first().unwrap(),
             "CI should tighten: {widths:?}"
         );
+    }
+
+    #[test]
+    fn progress_counter_tracks_streaming_inference() {
+        let df = synth::generate_default(120, 98);
+        let progress = std::sync::Arc::new(crate::engine::Progress::new(120));
+        let runner = fast_runner().with_progress(progress.clone());
+        let mut task = EvalTask::default();
+        task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+        let mut fractions = Vec::new();
+        runner
+            .evaluate_streaming(&df, &task, 40, |_| {
+                fractions.push(progress.fraction());
+                StreamControl::Continue
+            })
+            .unwrap();
+        assert!((progress.fraction() - 1.0).abs() < 1e-12);
+        assert_eq!(fractions.len(), 3);
+        assert!(
+            fractions.windows(2).all(|w| w[0] <= w[1]),
+            "progress must be monotone: {fractions:?}"
+        );
+        assert!((fractions[0] - 1.0 / 3.0).abs() < 1e-9, "{fractions:?}");
     }
 
     #[test]

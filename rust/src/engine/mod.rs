@@ -12,6 +12,7 @@
 //!   collection), with per-executor telemetry.
 
 use crate::data::DataFrame;
+use crate::sched::SchedulerConfig;
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -60,6 +61,14 @@ impl BatchSlice {
 /// `init(executor_id)` builds the executor-local state once per executor.
 /// `process(state, df, slice)` maps one batch to one output per row
 /// (must return exactly `slice.len()` values).
+///
+/// This is now a thin compatibility wrapper over the task scheduler
+/// ([`crate::sched::run_scheduled`]) with [`SchedulerConfig::legacy`]: one
+/// pinned task per executor, no stealing, no speculation, no retry —
+/// exactly the original static range-partitioning semantics (each executor
+/// processes its own contiguous partition, errors propagate on first
+/// failure). Callers that want dynamic scheduling call the scheduler
+/// directly with a real [`SchedulerConfig`].
 pub fn run_partitioned<T, S, FI, FP>(
     df: &DataFrame,
     executors: usize,
@@ -73,59 +82,16 @@ where
     FI: Fn(usize) -> Result<S> + Sync,
     FP: Fn(&mut S, &DataFrame, BatchSlice) -> Result<Vec<T>> + Sync,
 {
-    let executors = executors.max(1);
-    let batch_size = batch_size.max(1);
-    let ranges = df.partition_ranges(executors);
-
-    let mut results: Vec<Option<(usize, Vec<T>)>> = Vec::new();
-    let mut stats = vec![ExecutorStats::default(); executors];
-
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::with_capacity(executors);
-        for (eid, range) in ranges.into_iter().enumerate() {
-            let init = &init;
-            let process = &process;
-            handles.push(scope.spawn(move || -> Result<(usize, Vec<T>, ExecutorStats)> {
-                let mut state = init(eid)?;
-                let mut out: Vec<T> = Vec::with_capacity(range.len());
-                let mut st = ExecutorStats { executor_id: eid, ..Default::default() };
-                let mut start = range.start;
-                while start < range.end {
-                    let end = (start + batch_size).min(range.end);
-                    let slice = BatchSlice { executor_id: eid, start, end };
-                    let t0 = std::time::Instant::now();
-                    let batch_out = process(&mut state, df, slice)?;
-                    st.busy_secs += t0.elapsed().as_secs_f64();
-                    anyhow::ensure!(
-                        batch_out.len() == slice.len(),
-                        "UDF returned {} rows for a {}-row batch",
-                        batch_out.len(),
-                        slice.len()
-                    );
-                    out.extend(batch_out);
-                    st.rows_processed += slice.len();
-                    st.batches += 1;
-                    start = end;
-                }
-                Ok((range.start, out, st))
-            }));
-        }
-        for h in handles {
-            let (start, out, st) = h.join().expect("executor thread panicked")?;
-            stats[st.executor_id] = st.clone();
-            results.push(Some((start, out)));
-        }
-        Ok(())
-    })?;
-
-    // Reassemble in row order.
-    let mut parts: Vec<(usize, Vec<T>)> = results.into_iter().flatten().collect();
-    parts.sort_by_key(|(start, _)| *start);
-    let mut rows = Vec::with_capacity(df.len());
-    for (_, part) in parts {
-        rows.extend(part);
-    }
-    Ok(JobOutput { rows, executors: stats })
+    let out = crate::sched::run_scheduled(
+        df,
+        executors,
+        batch_size,
+        &SchedulerConfig::legacy(),
+        None,
+        init,
+        process,
+    )?;
+    Ok(JobOutput { rows: out.rows, executors: out.executors })
 }
 
 /// Shared progress counter for long jobs (driver-side reporting).

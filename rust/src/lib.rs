@@ -30,6 +30,7 @@ pub mod providers;
 pub mod ratelimit;
 pub mod report;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod stats;
 pub mod template;

@@ -1,12 +1,12 @@
 //! LLM-as-judge metrics (paper §4.1, §A.3): pointwise rubric grading and
 //! pairwise comparison. Judge prompts follow a structured format (after
 //! Zheng et al. 2023) requesting a numeric score and explanation; scores
-//! are extracted by regex, and unparseable responses are logged, excluded
-//! from aggregation, and counted.
+//! are extracted by hand-rolled scanners (the offline crate set has no
+//! `regex`), and unparseable responses are logged, excluded from
+//! aggregation, and counted.
 
 use super::Example;
 use crate::providers::{InferenceEngine, InferenceRequest};
-use regex::Regex;
 
 /// Build the pointwise judge prompt. The `### SLLEVAL-JUDGE-POINTWISE`
 /// sentinel is part of the template structure the simulated judge (and a
@@ -43,29 +43,109 @@ pub fn pairwise_prompt(rubric: &str, question: &str, a: &str, b: &str, reference
     )
 }
 
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets (leftmost-first) where `needle` occurs in `haystack`,
+/// compared ASCII-case-insensitively.
+fn find_ci(haystack: &[u8], needle: &[u8]) -> impl Iterator<Item = usize> + '_ {
+    let needle: Vec<u8> = needle.to_ascii_lowercase();
+    (0..haystack.len().saturating_sub(needle.len() - 1)).filter(move |&i| {
+        haystack[i..i + needle.len()].eq_ignore_ascii_case(&needle)
+    })
+}
+
+/// Advance past ASCII whitespace starting at `pos`.
+fn skip_ws(bytes: &[u8], mut pos: usize) -> usize {
+    while pos < bytes.len() && bytes[pos].is_ascii_whitespace() {
+        pos += 1;
+    }
+    pos
+}
+
+/// Parse a single digit in `lo..=hi` at `pos`, requiring a word boundary
+/// after it (equivalent of the `([lo-hi])\b` capture).
+fn digit_at(bytes: &[u8], pos: usize, lo: u8, hi: u8) -> Option<u8> {
+    let b = *bytes.get(pos)?;
+    if !(lo..=hi).contains(&b) {
+        return None;
+    }
+    match bytes.get(pos + 1) {
+        Some(&next) if is_word_byte(next) => None,
+        _ => Some(b - b'0'),
+    }
+}
+
 /// Extract `Score: N` (1–5). Returns None when unparseable.
+///
+/// Primary pattern `score [:=] N`, then looser fallbacks ("4/5",
+/// "score of 3") — hand-rolled equivalents of the original regexes.
 pub fn parse_score(text: &str) -> Option<f64> {
-    // Primary pattern, then a looser fallback ("4/5", "score of 3").
-    static PATTERNS: &[&str] = &[
-        r"(?i)score\s*[:=]\s*([1-5])\b",
-        r"\b([1-5])\s*/\s*5\b",
-        r"(?i)score of\s*([1-5])\b",
-    ];
-    for pat in PATTERNS {
-        let re = Regex::new(pat).unwrap();
-        if let Some(cap) = re.captures(text) {
-            if let Ok(v) = cap[1].parse::<f64>() {
-                return Some(v);
-            }
+    let bytes = text.as_bytes();
+
+    // (?i)score\s*[:=]\s*([1-5])\b
+    for start in find_ci(bytes, b"score") {
+        let pos = skip_ws(bytes, start + 5);
+        if !matches!(bytes.get(pos), Some(b':') | Some(b'=')) {
+            continue;
+        }
+        let pos = skip_ws(bytes, pos + 1);
+        if let Some(d) = digit_at(bytes, pos, b'1', b'5') {
+            return Some(d as f64);
         }
     }
+
+    // \b([1-5])\s*/\s*5\b
+    for (i, &b) in bytes.iter().enumerate() {
+        if !(b'1'..=b'5').contains(&b) {
+            continue;
+        }
+        if i > 0 && is_word_byte(bytes[i - 1]) {
+            continue; // no word boundary before the digit
+        }
+        let pos = skip_ws(bytes, i + 1);
+        if bytes.get(pos) != Some(&b'/') {
+            continue;
+        }
+        let pos = skip_ws(bytes, pos + 1);
+        if digit_at(bytes, pos, b'5', b'5').is_some() {
+            return Some((b - b'0') as f64);
+        }
+    }
+
+    // (?i)score of\s*([1-5])\b
+    for start in find_ci(bytes, b"score of") {
+        let pos = skip_ws(bytes, start + 8);
+        if let Some(d) = digit_at(bytes, pos, b'1', b'5') {
+            return Some(d as f64);
+        }
+    }
+
     None
 }
 
-/// Extract `Verdict: A|B` from a pairwise judge response.
+/// Extract `Verdict: A|B` from a pairwise judge response (the hand-rolled
+/// equivalent of `(?i)verdict\s*[:=]\s*([AB])\b`).
 pub fn parse_verdict(text: &str) -> Option<char> {
-    let re = Regex::new(r"(?i)verdict\s*[:=]\s*([AB])\b").unwrap();
-    re.captures(text).map(|c| c[1].to_uppercase().chars().next().unwrap())
+    let bytes = text.as_bytes();
+    for start in find_ci(bytes, b"verdict") {
+        let pos = skip_ws(bytes, start + 7);
+        if !matches!(bytes.get(pos), Some(b':') | Some(b'=')) {
+            continue;
+        }
+        let pos = skip_ws(bytes, pos + 1);
+        let verdict = match bytes.get(pos) {
+            Some(b'A') | Some(b'a') => 'A',
+            Some(b'B') | Some(b'b') => 'B',
+            _ => continue,
+        };
+        match bytes.get(pos + 1) {
+            Some(&next) if is_word_byte(next) => continue,
+            _ => return Some(verdict),
+        }
+    }
+    None
 }
 
 /// Outcome of a pointwise judging pass.

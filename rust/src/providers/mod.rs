@@ -43,19 +43,28 @@ pub struct InferenceResponse {
 }
 
 /// API error taxonomy (paper §A.4).
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum ApiError {
-    #[error("429 rate limited: {0}")]
     RateLimited(String),
-    #[error("{status} server error: {message}")]
     Server { status: u16, message: String },
-    #[error("401 authentication failed: {0}")]
     Auth(String),
-    #[error("400 invalid request: {0}")]
     InvalidRequest(String),
-    #[error("content policy violation: {0}")]
     ContentPolicy(String),
 }
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApiError::RateLimited(msg) => write!(f, "429 rate limited: {msg}"),
+            ApiError::Server { status, message } => write!(f, "{status} server error: {message}"),
+            ApiError::Auth(msg) => write!(f, "401 authentication failed: {msg}"),
+            ApiError::InvalidRequest(msg) => write!(f, "400 invalid request: {msg}"),
+            ApiError::ContentPolicy(msg) => write!(f, "content policy violation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
 
 impl ApiError {
     /// Recoverable errors trigger exponential-backoff retry (§A.4).

@@ -42,6 +42,14 @@ pub struct SimServiceConfig {
     pub latency_scale: f64,
     /// When false, latency is accounted but not slept (simulation mode).
     pub sleep_latency: bool,
+    /// Latency-skew injection (straggler testing, paper §6.1): fraction of
+    /// prompts whose calls land in the heavy tail. The draw is keyed on
+    /// prompt content (not call sequence), so a slow prompt stays slow
+    /// across retries and speculative re-executions — the content-dependent
+    /// skew the scheduler exists to absorb. 0.0 disables.
+    pub tail_latency_rate: f64,
+    /// Latency multiplier applied to tail calls.
+    pub tail_latency_mult: f64,
     pub seed: u64,
 }
 
@@ -54,6 +62,8 @@ impl Default for SimServiceConfig {
             unparseable_rate: 0.0012,
             latency_scale: 1.0,
             sleep_latency: true,
+            tail_latency_rate: 0.0,
+            tail_latency_mult: 10.0,
             seed: 0,
         }
     }
@@ -178,7 +188,17 @@ impl SimService {
 
         // Latency draw: lognormal with median latency_p50_ms.
         let mu = (model.latency_p50_ms * self.config.latency_scale).ln();
-        let latency_ms = fault_rng.lognormal(mu, model.latency_sigma);
+        let mut latency_ms = fault_rng.lognormal(mu, model.latency_sigma);
+        if self.config.tail_latency_rate > 0.0 {
+            // Content-keyed (no call_seq): the same prompt is slow on every
+            // attempt, like a genuinely long/hard request.
+            let skew_seed =
+                fnv1a(&request.prompt) ^ fnv1a(model.model) ^ self.config.seed ^ 0x7461696c;
+            let mut skew_rng = Rng::new(skew_seed);
+            if skew_rng.chance(self.config.tail_latency_rate) {
+                latency_ms *= self.config.tail_latency_mult.max(1.0);
+            }
+        }
 
         // Response content: solver + quality knob, seeded WITHOUT call_seq
         // so retried/replayed calls yield the same text (temperature 0).
@@ -424,6 +444,32 @@ mod tests {
             }
         }
         assert_eq!(texts.len(), 1, "all successes must agree: {texts:?}");
+    }
+
+    #[test]
+    fn tail_latency_skew_injection() {
+        let base_cfg = SimServiceConfig { sleep_latency: false, ..no_fault_cfg() };
+        let skew_cfg = SimServiceConfig {
+            tail_latency_rate: 0.2,
+            tail_latency_mult: 25.0,
+            ..base_cfg.clone()
+        };
+        let (mut base, _) = engine(base_cfg);
+        let (mut skew, _) = engine(skew_cfg);
+        let mut n_slow = 0;
+        for i in 0..300 {
+            let req = InferenceRequest::new(format!("tail probe {i}"));
+            let a = base.infer(&req).unwrap().latency_ms;
+            let b = skew.infer(&req).unwrap().latency_ms;
+            // Same per-call base draw: the skewed engine either matches it
+            // exactly or multiplies it by exactly tail_latency_mult.
+            let exact = (b - a).abs() < 1e-9 || (b - 25.0 * a).abs() < 1e-6;
+            assert!(exact, "prompt {i}: base {a} skewed {b}");
+            if b > a * 10.0 {
+                n_slow += 1;
+            }
+        }
+        assert!((30..100).contains(&n_slow), "tail fraction {n_slow}/300");
     }
 
     #[test]

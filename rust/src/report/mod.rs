@@ -76,6 +76,19 @@ pub fn eval_summary(result: &EvalResult) -> String {
         "cost: ${:.4}  |  latency p50 {:.0}ms p99 {:.0}ms  |  throughput {:.0}/min  |  wall {:.1}s\n",
         inf.total_cost_usd, inf.latency_p50_ms, inf.latency_p99_ms, inf.throughput_per_min, inf.wall_secs,
     ));
+    let s = &inf.sched;
+    out.push_str(&format!(
+        "scheduler: {} tasks, {} steals, {} speculative ({} won), {} splits, {} retries, \
+         {} blacklisted  |  task skew {:.2}x\n",
+        s.tasks,
+        s.steals,
+        s.speculative_launched,
+        s.speculative_wins,
+        s.splits,
+        s.retries,
+        s.blacklisted_executors.len(),
+        s.skew_ratio,
+    ));
     out
 }
 

@@ -1,0 +1,1347 @@
+//! Spark-style task scheduler: work stealing, speculative execution, and
+//! fault tolerance (paper §3.1, extended per §6.1 "stragglers").
+//!
+//! The static range partitioning in [`crate::engine`] assigns one fixed
+//! slice per executor, so a single slow partition (skewed prompt lengths,
+//! rate-limit backoff, provider latency spikes) stalls the whole job. This
+//! module replaces it with dynamic task scheduling:
+//!
+//! - the DataFrame is split into **many more tasks than executors**
+//!   (`tasks_per_executor`), each a contiguous row range;
+//! - executors pull from per-executor deques and **steal** from the
+//!   longest queue when their own runs dry;
+//! - once ≥ `speculation_quantile` of tasks have finished, idle executors
+//!   **speculatively re-execute** the longest-running in-flight task
+//!   (each task is duplicated at most once; first completion wins);
+//! - failed tasks are **retried** on a different executor up to
+//!   `max_task_attempts`, and executors are **blacklisted** after
+//!   `blacklist_after` failures (their queues are redistributed);
+//! - oversized tasks are **adaptively split** while running: when idle
+//!   executors exist and a task's own observed batch latency projects its
+//!   remaining work past the target per-task wall time, its tail half is
+//!   re-enqueued as a fresh task.
+//!
+//! Output is **row-order exact**: tasks cover disjoint contiguous ranges
+//! whose results are reassembled by range start, so a scheduled job is
+//! byte-identical to the static engine's output regardless of the
+//! schedule. [`crate::engine::run_partitioned`] is now a thin wrapper over
+//! this scheduler with [`SchedulerConfig::legacy`] (one pinned task per
+//! executor, no stealing/speculation/retry), preserving the original
+//! semantics bit for bit.
+
+use crate::data::DataFrame;
+use crate::engine::{BatchSlice, ExecutorStats, Progress};
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// `blacklist_after` values at or beyond this serialize as the sentinel
+/// and parse back to `usize::MAX` ("never blacklist") — f64 JSON numbers
+/// cannot represent `usize::MAX` exactly.
+const BLACKLIST_NEVER_SENTINEL: usize = 1 << 52;
+
+/// Scheduler behaviour knobs (serialized inside the task config).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerConfig {
+    /// Tasks created per executor (task granularity). 1 reproduces static
+    /// range partitioning; larger values enable load balancing.
+    pub tasks_per_executor: usize,
+    /// Idle executors steal queued tasks from busy ones.
+    pub work_stealing: bool,
+    /// Re-execute stragglers once most tasks have finished.
+    pub speculation: bool,
+    /// Fraction of tasks that must be complete before speculation starts.
+    pub speculation_quantile: f64,
+    /// Attempts per task before the job fails (1 = no retry).
+    pub max_task_attempts: usize,
+    /// Task failures on one executor before it is blacklisted.
+    pub blacklist_after: usize,
+    /// Split oversized in-flight tasks when executors go idle.
+    pub adaptive_split: bool,
+    /// Target per-task wall time for adaptive splitting, seconds.
+    /// `0.0` derives the target from the observed mean batch latency.
+    pub target_task_secs: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            tasks_per_executor: 4,
+            work_stealing: true,
+            speculation: true,
+            speculation_quantile: 0.75,
+            max_task_attempts: 3,
+            blacklist_after: 3,
+            adaptive_split: true,
+            target_task_secs: 0.0,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// The static-engine compatibility preset: one pinned task per
+    /// executor, no stealing, no speculation, no retry, no splitting —
+    /// exactly the semantics of the original `run_partitioned`.
+    pub fn legacy() -> Self {
+        Self {
+            tasks_per_executor: 1,
+            work_stealing: false,
+            speculation: false,
+            speculation_quantile: 1.0,
+            max_task_attempts: 1,
+            blacklist_after: usize::MAX,
+            adaptive_split: false,
+            target_task_secs: 0.0,
+        }
+    }
+
+    /// Validate invariants (called from `EvalTask::validate`).
+    pub fn validate(&self) -> Result<()> {
+        if self.tasks_per_executor == 0 {
+            bail!("scheduler.tasks_per_executor must be >= 1");
+        }
+        if self.max_task_attempts == 0 {
+            bail!("scheduler.max_task_attempts must be >= 1");
+        }
+        if self.blacklist_after == 0 {
+            bail!("scheduler.blacklist_after must be >= 1");
+        }
+        if !(self.speculation_quantile > 0.0 && self.speculation_quantile <= 1.0) {
+            bail!("scheduler.speculation_quantile must be in (0, 1]");
+        }
+        if self.target_task_secs < 0.0 {
+            bail!("scheduler.target_task_secs must be >= 0");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tasks_per_executor", Json::num(self.tasks_per_executor as f64)),
+            ("work_stealing", Json::Bool(self.work_stealing)),
+            ("speculation", Json::Bool(self.speculation)),
+            ("speculation_quantile", Json::num(self.speculation_quantile)),
+            ("max_task_attempts", Json::num(self.max_task_attempts as f64)),
+            (
+                "blacklist_after",
+                // usize::MAX does not survive f64; serialize anything at or
+                // beyond the sentinel as the sentinel, and from_json maps
+                // it back to usize::MAX ("never") so round-trips are exact.
+                Json::num(self.blacklist_after.min(BLACKLIST_NEVER_SENTINEL) as f64),
+            ),
+            ("adaptive_split", Json::Bool(self.adaptive_split)),
+            ("target_task_secs", Json::num(self.target_task_secs)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = SchedulerConfig::default();
+        let blacklist_after = v.usize_or("blacklist_after", d.blacklist_after);
+        let cfg = SchedulerConfig {
+            tasks_per_executor: v.usize_or("tasks_per_executor", d.tasks_per_executor),
+            work_stealing: v.bool_or("work_stealing", d.work_stealing),
+            speculation: v.bool_or("speculation", d.speculation),
+            speculation_quantile: v.f64_or("speculation_quantile", d.speculation_quantile),
+            max_task_attempts: v.usize_or("max_task_attempts", d.max_task_attempts),
+            blacklist_after: if blacklist_after >= BLACKLIST_NEVER_SENTINEL {
+                usize::MAX
+            } else {
+                blacklist_after
+            },
+            adaptive_split: v.bool_or("adaptive_split", d.adaptive_split),
+            target_task_secs: v.f64_or("target_task_secs", d.target_task_secs),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// How one task attempt ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskOutcome {
+    /// First completion of the task: its rows are in the job output.
+    Won,
+    /// Completed after a twin already won (wasted speculative work).
+    Lost,
+    /// The UDF returned an error; the task was retried or the job failed.
+    Failed,
+    /// Abandoned mid-run because a twin completed first.
+    Abandoned,
+}
+
+impl TaskOutcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TaskOutcome::Won => "won",
+            TaskOutcome::Lost => "lost",
+            TaskOutcome::Failed => "failed",
+            TaskOutcome::Abandoned => "abandoned",
+        }
+    }
+}
+
+/// One task attempt in the scheduler timeline (driver-side telemetry).
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub task_id: usize,
+    /// Row range covered at completion time (post-split).
+    pub start: usize,
+    pub end: usize,
+    pub executor_id: usize,
+    /// 1-based attempt number (speculative twins share the original's id).
+    pub attempt: usize,
+    pub speculative: bool,
+    /// Seconds since job start.
+    pub started_at: f64,
+    pub finished_at: f64,
+    pub outcome: TaskOutcome,
+}
+
+impl TaskRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task_id", Json::num(self.task_id as f64)),
+            ("start", Json::num(self.start as f64)),
+            ("end", Json::num(self.end as f64)),
+            ("executor_id", Json::num(self.executor_id as f64)),
+            ("attempt", Json::num(self.attempt as f64)),
+            ("speculative", Json::Bool(self.speculative)),
+            ("started_at", Json::num(self.started_at)),
+            ("finished_at", Json::num(self.finished_at)),
+            ("outcome", Json::str(self.outcome.as_str())),
+        ])
+    }
+}
+
+/// Aggregate scheduler telemetry for one job.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerStats {
+    /// Final task count (including adaptive-split children).
+    pub tasks: usize,
+    /// Tasks executed by an executor other than their initial assignee.
+    pub steals: usize,
+    /// Speculative twins launched / twins that finished first.
+    pub speculative_launched: usize,
+    pub speculative_wins: usize,
+    /// Adaptive splits performed.
+    pub splits: usize,
+    /// Task attempts beyond each task's first.
+    pub retries: usize,
+    pub blacklisted_executors: Vec<usize>,
+    /// Rows processed by losing or abandoned attempts (duplicated work).
+    pub wasted_rows: usize,
+    /// Wall-time statistics over winning task attempts.
+    pub longest_task_secs: f64,
+    pub mean_task_secs: f64,
+    /// longest/mean winning-task wall time (1.0 = perfectly balanced).
+    pub skew_ratio: f64,
+}
+
+impl SchedulerStats {
+    /// Fold another job's telemetry into this one (streaming evaluation
+    /// accumulates per-chunk scheduler stats into a run total).
+    pub fn merge(&mut self, other: &SchedulerStats) {
+        let tasks_before = self.tasks;
+        self.tasks += other.tasks;
+        self.steals += other.steals;
+        self.speculative_launched += other.speculative_launched;
+        self.speculative_wins += other.speculative_wins;
+        self.splits += other.splits;
+        self.retries += other.retries;
+        for &e in &other.blacklisted_executors {
+            if !self.blacklisted_executors.contains(&e) {
+                self.blacklisted_executors.push(e);
+            }
+        }
+        self.blacklisted_executors.sort_unstable();
+        self.wasted_rows += other.wasted_rows;
+        self.longest_task_secs = self.longest_task_secs.max(other.longest_task_secs);
+        // Task-count-weighted mean of winning task wall times.
+        if self.tasks > 0 {
+            self.mean_task_secs = (self.mean_task_secs * tasks_before as f64
+                + other.mean_task_secs * other.tasks as f64)
+                / self.tasks as f64;
+        }
+        self.skew_ratio = if self.mean_task_secs > 0.0 {
+            self.longest_task_secs / self.mean_task_secs
+        } else {
+            1.0
+        };
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tasks", Json::num(self.tasks as f64)),
+            ("steals", Json::num(self.steals as f64)),
+            ("speculative_launched", Json::num(self.speculative_launched as f64)),
+            ("speculative_wins", Json::num(self.speculative_wins as f64)),
+            ("splits", Json::num(self.splits as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            (
+                "blacklisted_executors",
+                Json::arr(
+                    self.blacklisted_executors.iter().map(|&e| Json::num(e as f64)).collect(),
+                ),
+            ),
+            ("wasted_rows", Json::num(self.wasted_rows as f64)),
+            ("longest_task_secs", Json::num(self.longest_task_secs)),
+            ("mean_task_secs", Json::num(self.mean_task_secs)),
+            ("skew_ratio", Json::num(self.skew_ratio)),
+        ])
+    }
+}
+
+/// Scheduled-job outcome: per-row outputs in row order + telemetry.
+#[derive(Debug)]
+pub struct SchedOutput<T> {
+    pub rows: Vec<T>,
+    pub executors: Vec<ExecutorStats>,
+    pub sched: SchedulerStats,
+    pub timeline: Vec<TaskRecord>,
+}
+
+/// A queued task attempt. Row ranges live in `SchedState::ranges` so
+/// adaptive splits apply to whichever attempt eventually runs.
+#[derive(Debug, Clone, Copy)]
+struct TaskItem {
+    id: usize,
+    speculative: bool,
+}
+
+/// In-flight attempt registry entry.
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    task_id: usize,
+    executor_id: usize,
+    speculative: bool,
+    started_secs: f64,
+}
+
+struct SchedState<T> {
+    /// Per-executor task queues (own: pop_front; steal: pop_back).
+    deques: Vec<VecDeque<TaskItem>>,
+    /// Current row range per task id (end shrinks on split).
+    ranges: Vec<(usize, usize)>,
+    /// First-completion flag per task id.
+    completed: Vec<bool>,
+    completed_tasks: usize,
+    /// Failed attempts per task id.
+    attempts_failed: Vec<usize>,
+    /// Task already duplicated (speculation) — also seals it against splits.
+    speculated: Vec<bool>,
+    /// Winning output per task id.
+    results: Vec<Option<Vec<T>>>,
+    inflight: Vec<InFlight>,
+    rows_done: usize,
+    total_rows: usize,
+    failures_per_executor: Vec<usize>,
+    blacklisted: Vec<bool>,
+    /// Executors currently parked waiting for work.
+    idle: usize,
+    fatal: Option<anyhow::Error>,
+    /// EWMA of batch wall time across all executors (split heuristic).
+    ewma_batch_secs: f64,
+    timeline: Vec<TaskRecord>,
+    steals: usize,
+    speculative_launched: usize,
+    speculative_wins: usize,
+    splits: usize,
+    retries: usize,
+}
+
+impl<T> SchedState<T> {
+    fn done(&self) -> bool {
+        self.fatal.is_some() || self.rows_done == self.total_rows
+    }
+
+    fn new_task(&mut self, start: usize, end: usize) -> usize {
+        let id = self.ranges.len();
+        self.ranges.push((start, end));
+        self.completed.push(false);
+        self.attempts_failed.push(0);
+        self.speculated.push(false);
+        self.results.push(None);
+        id
+    }
+}
+
+/// What a worker decided to do after consulting the shared state.
+enum Decision {
+    Run { item: TaskItem, attempt: usize, start: usize, end: usize, started_secs: f64 },
+    Wait,
+    Exit,
+}
+
+/// Shuts the pool down if a worker unwinds (UDF/init panic): without this,
+/// the dead worker's in-flight task never settles, the other workers can
+/// never reach `done()`, and the scoped join blocks forever. With it, the
+/// survivors exit on `fatal`, the panicked thread's join handle surfaces
+/// the panic to the caller (same observable behaviour as the old static
+/// engine), and nothing hangs.
+struct PanicGuard<'a, T> {
+    shared: &'a Mutex<SchedState<T>>,
+    work_ready: &'a Condvar,
+}
+
+impl<T> Drop for PanicGuard<'_, T> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            // The mutex may be poisoned by the panicking thread itself;
+            // the state write is still sound (counters + an error slot).
+            let mut state = match self.shared.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            if state.fatal.is_none() {
+                state.fatal = Some(anyhow::anyhow!("executor thread panicked"));
+            }
+            self.work_ready.notify_all();
+        }
+    }
+}
+
+/// Run a batch UDF over `df` with `executors` threads under `cfg`.
+///
+/// Semantics match [`crate::engine::run_partitioned`]: `init(executor_id)`
+/// builds executor-local state once per executor thread; `process(state,
+/// df, slice)` maps one batch to one output per row. Outputs are returned
+/// in row order regardless of the schedule. `progress`, when supplied, is
+/// advanced by each task's row count at first completion (driver-side
+/// progress for streaming jobs).
+pub fn run_scheduled<T, S, FI, FP>(
+    df: &DataFrame,
+    executors: usize,
+    batch_size: usize,
+    cfg: &SchedulerConfig,
+    progress: Option<&Progress>,
+    init: FI,
+    process: FP,
+) -> Result<SchedOutput<T>>
+where
+    T: Send,
+    S: Send,
+    FI: Fn(usize) -> Result<S> + Sync,
+    FP: Fn(&mut S, &DataFrame, BatchSlice) -> Result<Vec<T>> + Sync,
+{
+    cfg.validate()?;
+    let executors = executors.max(1);
+    let batch_size = batch_size.max(1);
+    let total_rows = df.len();
+    let t0 = Instant::now();
+
+    // Carve the frame into tasks: contiguous near-equal ranges (empty
+    // slots are skipped), assigned contiguously so the initial layout
+    // matches the static engine's `partition_ranges` exactly when
+    // tasks_per_executor == 1.
+    let n_slots = executors * cfg.tasks_per_executor;
+    let mut state = SchedState::<T> {
+        deques: (0..executors).map(|_| VecDeque::new()).collect(),
+        ranges: Vec::new(),
+        completed: Vec::new(),
+        completed_tasks: 0,
+        attempts_failed: Vec::new(),
+        speculated: Vec::new(),
+        results: Vec::new(),
+        inflight: Vec::new(),
+        rows_done: 0,
+        total_rows,
+        failures_per_executor: vec![0; executors],
+        blacklisted: vec![false; executors],
+        idle: 0,
+        fatal: None,
+        ewma_batch_secs: 0.0,
+        timeline: Vec::new(),
+        steals: 0,
+        speculative_launched: 0,
+        speculative_wins: 0,
+        splits: 0,
+        retries: 0,
+    };
+    for (slot, range) in df.partition_ranges(n_slots).into_iter().enumerate() {
+        if range.is_empty() {
+            continue;
+        }
+        let id = state.new_task(range.start, range.end);
+        let home = slot * executors / n_slots;
+        state.deques[home].push_back(TaskItem { id, speculative: false });
+    }
+
+    let shared = Mutex::new(state);
+    let work_ready = Condvar::new();
+    let mut exec_stats: Vec<ExecutorStats> = (0..executors)
+        .map(|eid| ExecutorStats { executor_id: eid, ..Default::default() })
+        .collect();
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(executors);
+        for eid in 0..executors {
+            let init = &init;
+            let process = &process;
+            let shared = &shared;
+            let work_ready = &work_ready;
+            let cfg = cfg.clone();
+            handles.push(scope.spawn(move || -> Result<ExecutorStats> {
+                worker(
+                    eid, df, batch_size, &cfg, progress, t0, shared, work_ready, init, process,
+                )
+            }));
+        }
+        for h in handles {
+            let st = h.join().expect("executor thread panicked")?;
+            exec_stats[st.executor_id] = st;
+        }
+        Ok(())
+    })?;
+
+    let mut state = shared.into_inner().unwrap();
+    if let Some(e) = state.fatal.take() {
+        return Err(e);
+    }
+
+    // Reassemble in row order and verify coverage: completed task ranges
+    // must partition [0, total_rows) exactly (no duplicated/dropped rows).
+    let mut parts: Vec<(usize, usize, Vec<T>)> = Vec::with_capacity(state.ranges.len());
+    for (id, result) in state.results.into_iter().enumerate() {
+        let (start, end) = state.ranges[id];
+        if start == end {
+            continue;
+        }
+        let Some(rows) = result else {
+            bail!("scheduler invariant violated: task {id} [{start}, {end}) never completed");
+        };
+        parts.push((start, end, rows));
+    }
+    parts.sort_by_key(|(start, _, _)| *start);
+    let mut rows = Vec::with_capacity(total_rows);
+    let mut cursor = 0;
+    for (start, end, part) in parts {
+        anyhow::ensure!(
+            start == cursor && part.len() == end - start,
+            "scheduler invariant violated: task range [{start}, {end}) does not tile the frame \
+             at row {cursor}"
+        );
+        rows.extend(part);
+        cursor = end;
+    }
+    anyhow::ensure!(
+        cursor == total_rows,
+        "scheduler invariant violated: covered {cursor} of {total_rows} rows"
+    );
+
+    // Aggregate telemetry.
+    let mut sched = SchedulerStats {
+        tasks: state.ranges.iter().filter(|(s, e)| s != e).count(),
+        steals: state.steals,
+        speculative_launched: state.speculative_launched,
+        speculative_wins: state.speculative_wins,
+        splits: state.splits,
+        retries: state.retries,
+        blacklisted_executors: (0..executors).filter(|&e| state.blacklisted[e]).collect(),
+        wasted_rows: state
+            .timeline
+            .iter()
+            .filter(|r| matches!(r.outcome, TaskOutcome::Lost | TaskOutcome::Abandoned))
+            .map(|r| r.end - r.start)
+            .sum(),
+        ..Default::default()
+    };
+    let wins: Vec<f64> = state
+        .timeline
+        .iter()
+        .filter(|r| r.outcome == TaskOutcome::Won)
+        .map(|r| r.finished_at - r.started_at)
+        .collect();
+    if !wins.is_empty() {
+        sched.longest_task_secs = wins.iter().cloned().fold(0.0, f64::max);
+        sched.mean_task_secs = wins.iter().sum::<f64>() / wins.len() as f64;
+        sched.skew_ratio = if sched.mean_task_secs > 0.0 {
+            sched.longest_task_secs / sched.mean_task_secs
+        } else {
+            1.0
+        };
+    }
+
+    Ok(SchedOutput { rows, executors: exec_stats, sched, timeline: state.timeline })
+}
+
+/// One executor thread: pull/steal/speculate tasks until the job is done.
+#[allow(clippy::too_many_arguments)]
+fn worker<T, S, FI, FP>(
+    eid: usize,
+    df: &DataFrame,
+    batch_size: usize,
+    cfg: &SchedulerConfig,
+    progress: Option<&Progress>,
+    t0: Instant,
+    shared: &Mutex<SchedState<T>>,
+    work_ready: &Condvar,
+    init: &FI,
+    process: &FP,
+) -> Result<ExecutorStats>
+where
+    T: Send,
+    S: Send,
+    FI: Fn(usize) -> Result<S> + Sync,
+    FP: Fn(&mut S, &DataFrame, BatchSlice) -> Result<Vec<T>> + Sync,
+{
+    let _panic_guard = PanicGuard { shared, work_ready };
+    let mut st = ExecutorStats { executor_id: eid, ..Default::default() };
+    // Executor-local state is created once, before any task runs (the
+    // paper's `_ENGINE_CACHE` semantics). An init failure is fatal for the
+    // whole job, matching the static engine.
+    let mut local = match init(eid) {
+        Ok(s) => s,
+        Err(e) => {
+            // Shut the pool down, then surface the real error through this
+            // worker's join handle.
+            let mut state = shared.lock().unwrap();
+            if state.fatal.is_none() {
+                state.fatal = Some(anyhow::anyhow!("executor {eid} failed to initialize"));
+            }
+            work_ready.notify_all();
+            drop(state);
+            return Err(e.context(format!("initializing executor {eid}")));
+        }
+    };
+
+    loop {
+        // ------------------------------------------------ pick the next task
+        let decision = {
+            let mut state = shared.lock().unwrap();
+            loop {
+                if state.done() || state.blacklisted[eid] {
+                    break Decision::Exit;
+                }
+                if let Some(d) = claim_task(&mut state, eid, cfg, t0) {
+                    break d;
+                }
+                // Nothing claimable from here. If no attempt is running
+                // anywhere AND every queue is drained, rows can never
+                // complete — only reachable through a scheduler bug (with
+                // stealing off, another executor's non-empty queue is not
+                // claimable from here but is still live).
+                if state.inflight.is_empty() && state.deques.iter().all(|d| d.is_empty()) {
+                    state.fatal = Some(anyhow::anyhow!(
+                        "scheduler stalled with {}/{} rows done",
+                        state.rows_done,
+                        state.total_rows
+                    ));
+                    work_ready.notify_all();
+                    break Decision::Exit;
+                }
+                break Decision::Wait;
+            }
+        };
+
+        let (item, attempt, start, end, started_secs) = match decision {
+            Decision::Exit => break,
+            Decision::Wait => {
+                let mut state = shared.lock().unwrap();
+                state.idle += 1;
+                // Timed wait: bounded staleness for the idle counter the
+                // split heuristic reads, and a safety net against a missed
+                // wakeup ever deadlocking the pool.
+                let (s, _timeout) = work_ready
+                    .wait_timeout(state, std::time::Duration::from_millis(5))
+                    .unwrap();
+                state = s;
+                state.idle -= 1;
+                continue;
+            }
+            Decision::Run { item, attempt, start, end, started_secs } => {
+                (item, attempt, start, end, started_secs)
+            }
+        };
+
+        // ------------------------------------------------ run the task
+        let mut out: Vec<T> = Vec::with_capacity(end - start);
+        let mut cursor = start;
+        let mut end = end;
+        let mut failure: Option<anyhow::Error> = None;
+        let mut abandoned = false;
+
+        while cursor < end {
+            let batch_end = (cursor + batch_size).min(end);
+            let slice = BatchSlice { executor_id: eid, start: cursor, end: batch_end };
+            let bt0 = Instant::now();
+            match process(&mut local, df, slice) {
+                Ok(batch_out) => {
+                    let batch_secs = bt0.elapsed().as_secs_f64();
+                    st.busy_secs += batch_secs;
+                    if batch_out.len() != slice.len() {
+                        failure = Some(anyhow::anyhow!(
+                            "UDF returned {} rows for a {}-row batch",
+                            batch_out.len(),
+                            slice.len()
+                        ));
+                        break;
+                    }
+                    out.extend(batch_out);
+                    st.rows_processed += slice.len();
+                    st.batches += 1;
+                    cursor = batch_end;
+
+                    // Between batches: observe latency, abandon if a twin
+                    // won, and adaptively split oversized remainders.
+                    let mut state = shared.lock().unwrap();
+                    state.ewma_batch_secs = if state.ewma_batch_secs == 0.0 {
+                        batch_secs
+                    } else {
+                        0.8 * state.ewma_batch_secs + 0.2 * batch_secs
+                    };
+                    if state.completed[item.id] || state.fatal.is_some() {
+                        abandoned = true;
+                        break;
+                    }
+                    // The twin may have been launched after this attempt
+                    // started; splits are sealed from then on, but the
+                    // current range end may have shrunk earlier.
+                    end = state.ranges[item.id].1;
+                    if cursor >= end {
+                        continue;
+                    }
+                    if cfg.adaptive_split
+                        && cfg.work_stealing
+                        && !item.speculative
+                        && !state.speculated[item.id]
+                        && state.idle > 0
+                        && end - cursor > batch_size
+                    {
+                        let elapsed = (Instant::now() - t0).as_secs_f64() - started_secs;
+                        let own_row_secs = elapsed / (cursor - start).max(1) as f64;
+                        let est_remaining = (end - cursor) as f64 * own_row_secs;
+                        let target = if cfg.target_task_secs > 0.0 {
+                            cfg.target_task_secs
+                        } else {
+                            // Derived target: a task should not run much
+                            // longer than a couple of observed batches.
+                            (2.0 * state.ewma_batch_secs).max(1e-6)
+                        };
+                        if est_remaining > target {
+                            let mid = cursor + (end - cursor).div_ceil(2);
+                            state.ranges[item.id].1 = mid;
+                            let child = state.new_task(mid, end);
+                            state.splits += 1;
+                            state.deques[eid].push_back(TaskItem { id: child, speculative: false });
+                            end = mid;
+                            work_ready.notify_all();
+                        }
+                    }
+                }
+                Err(e) => {
+                    st.busy_secs += bt0.elapsed().as_secs_f64();
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+
+        // ------------------------------------------------ settle the attempt
+        let finished_secs = (Instant::now() - t0).as_secs_f64();
+        let mut state = shared.lock().unwrap();
+        state.inflight.retain(|f| !(f.task_id == item.id && f.executor_id == eid));
+        let (range_start, range_end) = state.ranges[item.id];
+
+        let outcome = if let Some(err) = failure {
+            settle_failure(&mut state, eid, item.id, cfg, err)
+        } else if abandoned {
+            TaskOutcome::Abandoned
+        } else if state.completed[item.id] {
+            TaskOutcome::Lost
+        } else {
+            debug_assert_eq!((cursor, out.len()), (range_end, range_end - range_start));
+            state.completed[item.id] = true;
+            state.completed_tasks += 1;
+            state.results[item.id] = Some(std::mem::take(&mut out));
+            state.rows_done += range_end - range_start;
+            if let Some(p) = progress {
+                p.add(range_end - range_start);
+            }
+            if item.speculative {
+                state.speculative_wins += 1;
+            }
+            TaskOutcome::Won
+        };
+        state.timeline.push(TaskRecord {
+            task_id: item.id,
+            start: range_start,
+            end: if outcome == TaskOutcome::Abandoned { cursor.max(range_start) } else { range_end },
+            executor_id: eid,
+            attempt,
+            speculative: item.speculative,
+            started_at: started_secs,
+            finished_at: finished_secs,
+            outcome,
+        });
+        work_ready.notify_all();
+    }
+
+    work_ready.notify_all();
+    Ok(st)
+}
+
+/// Under the lock: find something for `eid` to do. Returns `None` when
+/// there is nothing to run right now (caller waits or exits).
+fn claim_task<T>(
+    state: &mut SchedState<T>,
+    eid: usize,
+    cfg: &SchedulerConfig,
+    t0: Instant,
+) -> Option<Decision> {
+    // 1. Own queue, front first (ascending row order).
+    let mut claimed: Option<TaskItem> = state.deques[eid].pop_front();
+
+    // 2. Steal from the back of the longest other queue.
+    if claimed.is_none() && cfg.work_stealing {
+        let victim = (0..state.deques.len())
+            .filter(|&v| v != eid && !state.deques[v].is_empty())
+            .max_by_key(|&v| state.deques[v].len());
+        if let Some(v) = victim {
+            claimed = state.deques[v].pop_back();
+            state.steals += 1;
+        }
+    }
+
+    // 3. Speculate: duplicate the longest-running unduplicated straggler.
+    if claimed.is_none() && cfg.speculation {
+        let total = state.ranges.len();
+        let threshold = (cfg.speculation_quantile * total as f64).ceil() as usize;
+        if total > 0 && state.completed_tasks >= threshold && state.completed_tasks < total {
+            let straggler = state
+                .inflight
+                .iter()
+                .filter(|f| {
+                    !f.speculative
+                        && !state.completed[f.task_id]
+                        && !state.speculated[f.task_id]
+                })
+                .min_by(|a, b| a.started_secs.total_cmp(&b.started_secs))
+                .copied();
+            if let Some(f) = straggler {
+                state.speculated[f.task_id] = true;
+                state.speculative_launched += 1;
+                claimed = Some(TaskItem { id: f.task_id, speculative: true });
+            }
+        }
+    }
+
+    let item = claimed?;
+    // Queued tasks are never completed (only in-flight attempts complete),
+    // so every claim is runnable.
+    debug_assert!(item.speculative || !state.completed[item.id]);
+    let (start, end) = state.ranges[item.id];
+    let started_secs = (Instant::now() - t0).as_secs_f64();
+    state.inflight.push(InFlight {
+        task_id: item.id,
+        executor_id: eid,
+        speculative: item.speculative,
+        started_secs,
+    });
+    let attempt = state.attempts_failed[item.id] + 1;
+    Some(Decision::Run { item, attempt, start, end, started_secs })
+}
+
+/// Under the lock: record a failed attempt, schedule a retry or declare the
+/// job dead, and blacklist repeat-offender executors.
+fn settle_failure<T>(
+    state: &mut SchedState<T>,
+    eid: usize,
+    task_id: usize,
+    cfg: &SchedulerConfig,
+    err: anyhow::Error,
+) -> TaskOutcome {
+    state.failures_per_executor[eid] += 1;
+
+    // Blacklist before re-enqueueing so the retry never lands back on the
+    // failing executor's queue.
+    if state.failures_per_executor[eid] >= cfg.blacklist_after && !state.blacklisted[eid] {
+        state.blacklisted[eid] = true;
+        let orphans: Vec<TaskItem> = state.deques[eid].drain(..).collect();
+        let heirs: Vec<usize> =
+            (0..state.deques.len()).filter(|&e| !state.blacklisted[e]).collect();
+        if heirs.is_empty() {
+            if state.fatal.is_none() {
+                state.fatal = Some(err.context(format!(
+                    "all {} executors blacklisted after repeated task failures",
+                    state.deques.len()
+                )));
+            }
+            return TaskOutcome::Failed;
+        }
+        for (i, item) in orphans.into_iter().enumerate() {
+            state.deques[heirs[i % heirs.len()]].push_back(item);
+        }
+    }
+
+    if state.completed[task_id] {
+        // A twin already won; the failure costs nothing.
+        return TaskOutcome::Failed;
+    }
+
+    state.attempts_failed[task_id] += 1;
+    let still_running = state
+        .inflight
+        .iter()
+        .any(|f| f.task_id == task_id);
+    if still_running {
+        // A twin attempt is still in flight; it is the retry.
+        return TaskOutcome::Failed;
+    }
+
+    if state.attempts_failed[task_id] >= cfg.max_task_attempts {
+        if state.fatal.is_none() {
+            let (start, end) = state.ranges[task_id];
+            state.fatal = Some(err.context(format!(
+                "task {task_id} [rows {start}..{end}) failed after {} attempts",
+                state.attempts_failed[task_id]
+            )));
+        }
+        return TaskOutcome::Failed;
+    }
+
+    state.retries += 1;
+    // Retry on the next non-blacklisted executor after the failing one.
+    let n = state.deques.len();
+    let target = (1..=n)
+        .map(|d| (eid + d) % n)
+        .find(|&e| !state.blacklisted[e])
+        .unwrap_or(eid);
+    state.deques[target].push_back(TaskItem { id: task_id, speculative: false });
+    TaskOutcome::Failed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Value;
+    use crate::engine::run_partitioned;
+    use crate::util::proptest::{check, ensure};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn frame(n: usize) -> DataFrame {
+        DataFrame::from_columns(vec![(
+            "x",
+            (0..n as i64).map(Value::Int).collect::<Vec<_>>(),
+        )])
+        .unwrap()
+    }
+
+    fn identity_udf(
+    ) -> impl Fn(&mut (), &DataFrame, BatchSlice) -> Result<Vec<f64>> + Sync {
+        |_s, df, slice: BatchSlice| {
+            Ok(slice
+                .indices()
+                .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                .collect())
+        }
+    }
+
+    #[test]
+    fn output_matches_static_engine_property() {
+        check("scheduled output == static output", 40, |rng| {
+            let n = rng.below(300);
+            let executors = 1 + rng.below(8);
+            let batch = 1 + rng.below(16);
+            let cfg = SchedulerConfig {
+                tasks_per_executor: 1 + rng.below(6),
+                speculation_quantile: 0.5 + 0.5 * rng.f64(),
+                ..Default::default()
+            };
+            let df = frame(n);
+            let out =
+                run_scheduled(&df, executors, batch, &cfg, None, |_| Ok(()), identity_udf())
+                    .unwrap();
+            let expected =
+                run_partitioned(&df, executors, batch, |_| Ok(()), identity_udf()).unwrap();
+            ensure(out.rows == expected.rows, "row-for-row identity")?;
+            ensure(out.rows.len() == n, "length")?;
+            let processed: usize = out.executors.iter().map(|e| e.rows_processed).sum();
+            ensure(processed >= n, "telemetry covers all rows")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn retry_and_speculation_never_duplicate_or_drop_rows() {
+        check("faulty UDF still yields exact rows", 25, |rng| {
+            let n = 1 + rng.below(250);
+            let executors = 1 + rng.below(6);
+            let batch = 1 + rng.below(10);
+            let seed = rng.next_u64();
+            let cfg = SchedulerConfig {
+                tasks_per_executor: 1 + rng.below(5),
+                max_task_attempts: 12,
+                blacklist_after: usize::MAX,
+                ..Default::default()
+            };
+            let df = frame(n);
+            let out = run_scheduled(
+                &df,
+                executors,
+                batch,
+                &cfg,
+                None,
+                |eid| Ok(crate::util::rng::Rng::with_stream(seed, eid as u64)),
+                |rng, df, slice: BatchSlice| {
+                    if rng.chance(0.25) {
+                        anyhow::bail!("injected transient failure");
+                    }
+                    Ok(slice
+                        .indices()
+                        .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                        .collect())
+                },
+            )
+            .unwrap();
+            ensure(out.rows.len() == n, "length")?;
+            for (i, v) in out.rows.iter().enumerate() {
+                ensure(*v == i as f64, format!("row {i} = {v}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn work_stealing_rebalances_skewed_partitions() {
+        // Executor 0 is 30x slower per row; with stealing, the fast
+        // executors take most of its queued tasks.
+        let n = 120;
+        let df = frame(n);
+        let cfg = SchedulerConfig {
+            tasks_per_executor: 6,
+            speculation: false,
+            adaptive_split: false,
+            ..Default::default()
+        };
+        let out = run_scheduled(
+            &df,
+            4,
+            5,
+            &cfg,
+            None,
+            |eid| Ok(eid),
+            |eid, df, slice: BatchSlice| {
+                if *eid == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(3 * slice.len() as u64));
+                }
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect())
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rows, (0..n).map(|i| i as f64).collect::<Vec<_>>());
+        assert!(out.sched.steals > 0, "expected steals, got {:?}", out.sched);
+        let slow_rows = out.executors[0].rows_processed;
+        assert!(
+            slow_rows < n / 2,
+            "slow executor should shed load, processed {slow_rows}/{n}"
+        );
+    }
+
+    #[test]
+    fn speculation_duplicates_straggler_and_first_completion_wins() {
+        // Executor 0 crawls (40ms per row); everyone else is instant. Once
+        // the fast executors finish, the straggler's task is duplicated and
+        // the duplicate wins.
+        let n = 64;
+        let df = frame(n);
+        let cfg = SchedulerConfig {
+            tasks_per_executor: 2,
+            speculation: true,
+            speculation_quantile: 0.5,
+            adaptive_split: false,
+            ..Default::default()
+        };
+        let out = run_scheduled(
+            &df,
+            4,
+            4,
+            &cfg,
+            None,
+            |eid| Ok(eid),
+            |eid, df, slice: BatchSlice| {
+                if *eid == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(40 * slice.len() as u64));
+                }
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect())
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rows, (0..n).map(|i| i as f64).collect::<Vec<_>>());
+        assert!(
+            out.sched.speculative_launched >= 1,
+            "expected speculation: {:?}",
+            out.sched
+        );
+        assert!(
+            out.sched.speculative_wins >= 1,
+            "duplicate should beat a 40ms/row straggler: {:?}",
+            out.sched
+        );
+        assert!(out
+            .timeline
+            .iter()
+            .any(|r| r.speculative && r.outcome == TaskOutcome::Won));
+    }
+
+    #[test]
+    fn failing_executor_is_blacklisted_and_job_completes() {
+        let n = 90;
+        let df = frame(n);
+        let cfg = SchedulerConfig {
+            tasks_per_executor: 3,
+            speculation: false,
+            adaptive_split: false,
+            max_task_attempts: 4,
+            blacklist_after: 2,
+            ..Default::default()
+        };
+        let out = run_scheduled(
+            &df,
+            3,
+            5,
+            &cfg,
+            None,
+            |eid| Ok(eid),
+            |eid, df, slice: BatchSlice| {
+                if *eid == 1 {
+                    anyhow::bail!("executor 1 always fails");
+                }
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect())
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rows, (0..n).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(out.sched.blacklisted_executors, vec![1]);
+        assert!(out.sched.retries >= 1, "{:?}", out.sched);
+        assert!(out
+            .timeline
+            .iter()
+            .any(|r| r.executor_id == 1 && r.outcome == TaskOutcome::Failed));
+    }
+
+    #[test]
+    #[should_panic(expected = "executor thread panicked")]
+    fn udf_panic_propagates_without_hanging() {
+        let df = frame(40);
+        let cfg = SchedulerConfig::default();
+        let _ = run_scheduled(
+            &df,
+            3,
+            5,
+            &cfg,
+            None,
+            |_| Ok(()),
+            |_, _df, slice: BatchSlice| {
+                if slice.start >= 20 {
+                    panic!("boom in udf");
+                }
+                Ok(vec![0u8; slice.len()])
+            },
+        );
+    }
+
+    #[test]
+    fn task_exhausting_attempts_fails_the_job() {
+        let df = frame(40);
+        let cfg = SchedulerConfig {
+            tasks_per_executor: 2,
+            max_task_attempts: 3,
+            blacklist_after: usize::MAX,
+            ..Default::default()
+        };
+        let err = run_scheduled(
+            &df,
+            2,
+            10,
+            &cfg,
+            None,
+            |_| Ok(()),
+            |_, df, slice: BatchSlice| {
+                if slice.start >= 20 {
+                    anyhow::bail!("rows past 20 are poison");
+                }
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect())
+            },
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("failed after 3 attempts"), "{msg}");
+    }
+
+    #[test]
+    fn adaptive_split_carves_up_oversized_tasks() {
+        // Two tasks; task 0's rows are slow. The idle second executor
+        // should receive split-off children of the big slow task.
+        let n = 80;
+        let df = frame(n);
+        let cfg = SchedulerConfig {
+            tasks_per_executor: 1,
+            speculation: false,
+            adaptive_split: true,
+            ..Default::default()
+        };
+        let out = run_scheduled(
+            &df,
+            2,
+            4,
+            &cfg,
+            None,
+            |_| Ok(()),
+            |_, df, slice: BatchSlice| {
+                if slice.start < n / 2 {
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        4 * slice.len() as u64,
+                    ));
+                }
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect())
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rows, (0..n).map(|i| i as f64).collect::<Vec<_>>());
+        assert!(out.sched.splits >= 1, "expected adaptive splits: {:?}", out.sched);
+    }
+
+    #[test]
+    fn progress_counter_reaches_completion() {
+        let df = frame(130);
+        let progress = Progress::new(130);
+        let cfg = SchedulerConfig::default();
+        run_scheduled(&df, 4, 10, &cfg, Some(&progress), |_| Ok(()), identity_udf()).unwrap();
+        assert!((progress.fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn init_runs_once_per_executor_even_with_stealing() {
+        let inits = AtomicUsize::new(0);
+        let df = frame(200);
+        let cfg = SchedulerConfig::default();
+        run_scheduled(
+            &df,
+            6,
+            7,
+            &cfg,
+            None,
+            |eid| {
+                inits.fetch_add(1, Ordering::SeqCst);
+                Ok(eid)
+            },
+            |_, df, slice: BatchSlice| {
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect::<Vec<_>>())
+            },
+        )
+        .unwrap();
+        assert_eq!(inits.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn init_error_fails_the_job() {
+        let df = frame(30);
+        let cfg = SchedulerConfig::default();
+        let r = run_scheduled(
+            &df,
+            3,
+            5,
+            &cfg,
+            None,
+            |eid| {
+                if eid == 2 {
+                    anyhow::bail!("no credentials on executor 2");
+                }
+                Ok(())
+            },
+            identity_udf(),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn empty_frame_and_tiny_frames() {
+        let cfg = SchedulerConfig::default();
+        let out =
+            run_scheduled(&frame(0), 4, 10, &cfg, None, |_| Ok(()), identity_udf()).unwrap();
+        assert!(out.rows.is_empty());
+        assert_eq!(out.sched.tasks, 0);
+
+        let out =
+            run_scheduled(&frame(3), 8, 10, &cfg, None, |_| Ok(()), identity_udf()).unwrap();
+        assert_eq!(out.rows, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn config_json_round_trip_and_validation() {
+        let cfg = SchedulerConfig {
+            tasks_per_executor: 7,
+            work_stealing: false,
+            speculation: true,
+            speculation_quantile: 0.9,
+            max_task_attempts: 5,
+            blacklist_after: 2,
+            adaptive_split: false,
+            target_task_secs: 1.5,
+        };
+        let restored = SchedulerConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, restored);
+
+        // The legacy preset's blacklist_after = usize::MAX ("never") must
+        // survive the round-trip via the sentinel.
+        let legacy = SchedulerConfig::legacy();
+        assert_eq!(SchedulerConfig::from_json(&legacy.to_json()).unwrap(), legacy);
+
+        let mut bad = SchedulerConfig::default();
+        bad.tasks_per_executor = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = SchedulerConfig::default();
+        bad.speculation_quantile = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = SchedulerConfig::default();
+        bad.max_task_attempts = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn legacy_preset_matches_static_partition_layout() {
+        // With the legacy preset each executor processes exactly its own
+        // contiguous partition — the static engine contract.
+        let df = frame(60);
+        let out = run_scheduled(
+            &df,
+            4,
+            5,
+            &SchedulerConfig::legacy(),
+            None,
+            |eid| Ok(eid),
+            |eid, _df, slice: BatchSlice| Ok(vec![*eid; slice.len()]),
+        )
+        .unwrap();
+        for eid in 0..4 {
+            let rows: Vec<usize> = out.rows.iter().copied().filter(|&e| e == eid).collect();
+            assert_eq!(rows.len(), 15);
+        }
+        assert_eq!(out.sched.steals, 0);
+        assert_eq!(out.sched.speculative_launched, 0);
+        for st in &out.executors {
+            assert_eq!(st.rows_processed, 15);
+            assert_eq!(st.batches, 3);
+        }
+    }
+}

@@ -20,15 +20,28 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json type error: expected {expected}, found {found}")]
     Type { expected: &'static str, found: &'static str },
-    #[error("json missing key: {0}")]
     MissingKey(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Type { expected, found } => {
+                write!(f, "json type error: expected {expected}, found {found}")
+            }
+            JsonError::MissingKey(key) => write!(f, "json missing key: {key}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn type_name(&self) -> &'static str {

@@ -1,0 +1,121 @@
+//! End-to-end scheduler integration: the dynamic work-stealing scheduler
+//! must produce results identical to the static-compatibility preset —
+//! including under injected provider faults and heavy-tailed latency
+//! (`SimServiceConfig` hooks) — and its telemetry must surface in run
+//! reports.
+
+use spark_llm_eval::config::{EvalTask, MetricConfig, SchedulerConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+
+fn runner_with(sim: &SimServiceConfig) -> EvalRunner {
+    let mut r = EvalRunner::with_clock(VirtualClock::new());
+    r.service_config = sim.clone();
+    r
+}
+
+#[test]
+fn dynamic_scheduler_matches_static_results_under_latency_skew() {
+    // Heavy-tailed latency keyed on prompt content: the exact straggler
+    // profile the scheduler absorbs. Results must be row-identical to the
+    // static engine regardless of the schedule.
+    let sim = SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: false,
+        tail_latency_rate: 0.15,
+        tail_latency_mult: 30.0,
+        ..Default::default()
+    };
+    let df = synth::generate_default(300, 71);
+    let mut task = EvalTask::default();
+    task.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("token_f1", "lexical"),
+    ];
+    assert_ne!(task.scheduler, SchedulerConfig::legacy(), "default must be dynamic");
+
+    let dynamic = runner_with(&sim).evaluate(&df, &task).unwrap();
+
+    let mut task_static = task.clone();
+    task_static.scheduler = SchedulerConfig::legacy();
+    let static_ = runner_with(&sim).evaluate(&df, &task_static).unwrap();
+
+    for (i, name) in ["exact_match", "token_f1"].iter().enumerate() {
+        let a = dynamic.metric(name).unwrap();
+        let b = static_.metric(name).unwrap();
+        assert!((a.value - b.value).abs() < 1e-12, "{name}: {} vs {}", a.value, b.value);
+        // Row-for-row identical scores, not just identical aggregates.
+        assert_eq!(dynamic.reports[i].values, static_.reports[i].values, "{name} rows");
+    }
+    assert_eq!(dynamic.inference.examples, 300);
+    assert!(dynamic.inference.sched.tasks > 0, "scheduler telemetry missing");
+}
+
+#[test]
+fn scheduler_survives_injected_server_faults() {
+    // Transient 5xx injection: provider-level retries recover every row and
+    // the scheduler never loses or duplicates one.
+    let sim = SimServiceConfig {
+        server_error_rate: 0.25,
+        unparseable_rate: 0.0,
+        sleep_latency: false,
+        ..Default::default()
+    };
+    let df = synth::generate_default(200, 72);
+    let mut task = EvalTask::default();
+    task.inference.max_retries = 8;
+    task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+
+    let result = runner_with(&sim).evaluate(&df, &task).unwrap();
+    assert!(result.failed_examples.is_empty(), "retries should recover all rows");
+    assert_eq!(result.reports[0].values.len(), 200);
+    assert!(result.inference.retries > 0, "fault injection should force retries");
+
+    // Same metric values as a clean run: responses are content-keyed.
+    let clean = SimServiceConfig { server_error_rate: 0.0, ..sim };
+    let clean_result = runner_with(&clean).evaluate(&df, &task).unwrap();
+    assert_eq!(result.reports[0].values, clean_result.reports[0].values);
+}
+
+#[test]
+fn run_report_carries_task_timeline_and_scheduler_telemetry() {
+    let sim = SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: false,
+        ..Default::default()
+    };
+    let df = synth::generate_default(120, 73);
+    let task = EvalTask::default();
+    let result = runner_with(&sim).evaluate(&df, &task).unwrap();
+
+    // Telemetry in the struct…
+    let sched = &result.inference.sched;
+    assert!(sched.tasks > 0);
+    assert!(!result.inference.timeline.is_empty());
+    let won_rows: usize = result
+        .inference
+        .timeline
+        .iter()
+        .filter(|t| t.outcome == spark_llm_eval::sched::TaskOutcome::Won)
+        .map(|t| t.end - t.start)
+        .sum();
+    assert_eq!(won_rows, 120, "winning task attempts must cover every row exactly once");
+
+    // …and in the serialized run report.
+    let json = result.to_json();
+    let sched_json = json.get("scheduler").unwrap();
+    assert_eq!(
+        sched_json.get("tasks").unwrap().as_f64().unwrap() as usize,
+        sched.tasks
+    );
+    let timeline = json.get("task_timeline").unwrap().as_arr().unwrap();
+    assert_eq!(timeline.len(), result.inference.timeline.len());
+
+    // The human-readable summary mentions the scheduler line.
+    let summary = spark_llm_eval::report::eval_summary(&result);
+    assert!(summary.contains("scheduler:"), "{summary}");
+}
