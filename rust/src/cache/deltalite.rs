@@ -8,7 +8,7 @@
 //! <table>/
 //!   _log/00000000.json     one commit per version: schema + actions
 //!   _log/00000001.json
-//!   data/<version>-<n>.jsonl.gz   immutable row files (gzip JSONL)
+//!   data/<version>-<n>-<writer>.jsonl.gz   immutable row files (gzip JSONL)
 //! ```
 //!
 //! Each commit lists `add` actions (new data files) and `remove` actions
@@ -18,6 +18,7 @@
 //! are small). Upserts deduplicate on a key column: the newest version of
 //! a key wins.
 
+use crate::util::fsx::{self, Publish};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use flate2::read::GzDecoder;
@@ -41,6 +42,16 @@ struct Commit {
 /// A versioned table rooted at a directory.
 pub struct DeltaTable {
     root: PathBuf,
+}
+
+/// Does `err` denote a commit conflict — an `append`/`upsert`/`compact`
+/// losing the optimistic-concurrency race for its version? Callers retry
+/// these (the next attempt re-reads the log and targets the next free
+/// version); any other error is a real failure. The vendored `anyhow`
+/// shim has no `downcast`, so conflicts travel as a message marker —
+/// this helper is the one place allowed to know that.
+pub fn is_commit_conflict(err: &anyhow::Error) -> bool {
+    err.chain().any(|m| m.contains("commit conflict"))
 }
 
 impl DeltaTable {
@@ -125,7 +136,11 @@ impl DeltaTable {
     }
 
     fn write_data_file(&self, version: u64, part: usize, rows: &[Json]) -> Result<String> {
-        let name = format!("{version:08}-{part:04}.jsonl.gz");
+        // The name carries a per-writer discriminator so two writers racing
+        // on the same version can never clobber each other's data file:
+        // the losing commit leaves an orphaned (never referenced, harmless)
+        // file behind, exactly like Delta's GUID-named parquet parts.
+        let name = format!("{version:08}-{part:04}-{}.jsonl.gz", fsx::unique_suffix());
         let path = self.data_dir().join(&name);
         let file = std::fs::File::create(&path)?;
         let mut enc = GzEncoder::new(file, Compression::fast());
@@ -150,8 +165,23 @@ impl DeltaTable {
         Ok(rows)
     }
 
-    fn commit(&self, adds: Vec<String>, removes: Vec<String>, op: &str) -> Result<u64> {
-        let version = self.current_version()?.map_or(0, |v| v + 1);
+    /// Next unclaimed version number.
+    fn next_version(&self) -> Result<u64> {
+        Ok(self.current_version()?.map_or(0, |v| v + 1))
+    }
+
+    /// Commit `adds`/`removes` at exactly `version`. The log entry is
+    /// published with an exclusive first-writer-wins claim (O_EXCL
+    /// semantics via `link(2)`; see [`crate::util::fsx`]): a plain
+    /// check-then-rename would race — on Linux `rename(2)` silently
+    /// replaces an existing destination, so two writers committing the
+    /// same version would clobber a committed log entry. Here exactly one
+    /// racing writer wins the version and every loser gets a hard
+    /// "commit conflict" error. The version is computed once by the
+    /// calling operation (never recomputed between naming the data file
+    /// and claiming the log slot), so a commit can only ever reference
+    /// data files written for that same version.
+    fn commit(&self, version: u64, adds: Vec<String>, removes: Vec<String>, op: &str) -> Result<u64> {
         let entry = Json::obj(vec![
             ("version", Json::num(version as f64)),
             ("op", Json::str(op)),
@@ -159,28 +189,30 @@ impl DeltaTable {
             ("add", Json::arr(adds.into_iter().map(Json::Str).collect())),
             ("remove", Json::arr(removes.into_iter().map(Json::Str).collect())),
         ]);
-        // Atomic-ish commit: write temp then rename. A concurrent writer
-        // racing on the same version loses the rename (file exists check).
         let final_path = self.log_dir().join(format!("{version:08}.json"));
-        if final_path.exists() {
-            bail!("commit conflict at version {version}");
+        match fsx::publish_exclusive(&final_path, entry.to_pretty().as_bytes())? {
+            Publish::Committed => Ok(version),
+            Publish::Conflict => bail!("commit conflict at version {version}"),
         }
-        let tmp = self.log_dir().join(format!(".tmp-{version:08}-{}", std::process::id()));
-        std::fs::write(&tmp, entry.to_pretty())?;
-        std::fs::rename(&tmp, &final_path)?;
-        Ok(version)
     }
 
-    /// Append rows as a new version. Returns the version.
+    /// Append rows as a new version. Returns the version. A concurrent
+    /// writer claiming the same version first surfaces as a
+    /// "commit conflict" error; retrying the append re-reads the log and
+    /// targets the next free version.
     pub fn append(&self, rows: &[Json]) -> Result<u64> {
-        let version = self.current_version()?.map_or(0, |v| v + 1);
+        let version = self.next_version()?;
         let file = self.write_data_file(version, 0, rows)?;
-        self.commit(vec![file], vec![], "append")
+        self.commit(version, vec![file], vec![], "append")
     }
 
     /// Upsert rows keyed on `key_col`: rows with existing keys replace the
     /// old rows (old files containing them are rewritten), new keys append.
     pub fn upsert(&self, rows: &[Json], key_col: &str) -> Result<u64> {
+        // Claim the target version *before* scanning live files: any commit
+        // that lands while we rewrite makes our claim conflict (instead of
+        // us committing a rewrite based on a stale snapshot).
+        let version = self.next_version()?;
         let new_keys: BTreeSet<String> = rows
             .iter()
             .filter_map(|r| r.opt(key_col).and_then(|k| k.as_str().ok()).map(String::from))
@@ -212,13 +244,12 @@ impl DeltaTable {
             }
         }
 
-        let version = self.current_version()?.map_or(0, |v| v + 1);
         let mut adds = Vec::new();
         if !rewritten.is_empty() {
             adds.push(self.write_data_file(version, 1, &rewritten)?);
         }
         adds.push(self.write_data_file(version, 0, rows)?);
-        self.commit(adds, removes, "upsert")
+        self.commit(version, adds, removes, "upsert")
     }
 
     /// Read the full snapshot at `version` (None = latest). Rows from all
@@ -244,11 +275,11 @@ impl DeltaTable {
 
     /// Rewrite all live rows into a single file (log stays, data shrinks).
     pub fn compact(&self) -> Result<u64> {
+        let version = self.next_version()?;
         let live = self.live_files(None)?;
         let rows = self.snapshot(None)?;
-        let version = self.current_version()?.map_or(0, |v| v + 1);
         let file = self.write_data_file(version, 0, &rows)?;
-        self.commit(vec![file], live, "compact")
+        self.commit(version, vec![file], live, "compact")
     }
 
     /// Total bytes of live data files (storage-overhead accounting, §5.3).
@@ -365,6 +396,79 @@ mod tests {
         t.compact().unwrap();
         let after = t.storage_bytes().unwrap();
         assert!(after <= before, "compaction must not grow live storage");
+    }
+
+    #[test]
+    fn same_version_commit_conflicts_hard() {
+        let t = tmp_table("conflict");
+        t.append(&[row("a", 1.0)]).unwrap(); // claims version 0
+        // A stale writer that still believes version 0 is free must get a
+        // hard conflict, not silently clobber the committed entry.
+        let file = t.write_data_file(0, 0, &[row("stale", 9.0)]).unwrap();
+        let err = t.commit(0, vec![file], vec![], "append").unwrap_err();
+        assert!(is_commit_conflict(&err), "{err:#}");
+        // The original commit is untouched.
+        let snap = t.snapshot_by_key("key", None).unwrap();
+        assert_eq!(snap["a"].get("value").unwrap().as_f64().unwrap(), 1.0);
+        assert!(!snap.contains_key("stale"));
+    }
+
+    #[test]
+    fn two_racing_writers_exactly_one_wins_each_version() {
+        let dir = std::env::temp_dir()
+            .join("slleval-delta-test")
+            .join(format!("race-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        DeltaTable::open(&dir).unwrap();
+
+        const PER_WRITER: usize = 12;
+        let committed: Vec<u64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2)
+                .map(|w| {
+                    let dir = dir.clone();
+                    scope.spawn(move || {
+                        // Each writer has its own table handle (two
+                        // processes in miniature) and retries conflicts.
+                        let t = DeltaTable::open(&dir).unwrap();
+                        let mut versions = Vec::new();
+                        for i in 0..PER_WRITER {
+                            let r = [row(&format!("w{w}-{i}"), i as f64)];
+                            loop {
+                                match t.append(&r) {
+                                    Ok(v) => {
+                                        versions.push(v);
+                                        break;
+                                    }
+                                    Err(e) => {
+                                        assert!(
+                                            is_commit_conflict(&e),
+                                            "only conflicts are expected: {e:#}"
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        versions
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+
+        // Every version committed exactly once, contiguously.
+        let mut versions = committed;
+        versions.sort_unstable();
+        let expected: Vec<u64> = (0..2 * PER_WRITER as u64).collect();
+        assert_eq!(versions, expected, "each version must have exactly one winner");
+
+        // The table replays cleanly and holds every row exactly once.
+        let t = DeltaTable::open(&dir).unwrap();
+        assert_eq!(t.current_version().unwrap(), Some(2 * PER_WRITER as u64 - 1));
+        let snap = t.snapshot_by_key("key", None).unwrap();
+        assert_eq!(snap.len(), 2 * PER_WRITER);
+        let ops: Vec<String> =
+            t.history().unwrap().into_iter().map(|(_, op, _)| op).collect();
+        assert!(ops.iter().all(|op| op == "append"));
     }
 
     #[test]

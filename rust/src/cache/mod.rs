@@ -127,6 +127,8 @@ pub struct ResponseCache {
     policy: CachePolicy,
     index: Mutex<BTreeMap<String, CacheEntry>>,
     pending: Mutex<Vec<CacheEntry>>,
+    /// Serializes deltalite commits from this process; see [`Self::flush`].
+    commit_lock: Mutex<()>,
     stats: Mutex<CacheStats>,
     /// Default TTL for new entries.
     pub ttl_days: Option<f64>,
@@ -148,6 +150,7 @@ impl ResponseCache {
             policy,
             index: Mutex::new(index),
             pending: Mutex::new(Vec::new()),
+            commit_lock: Mutex::new(()),
             stats: Mutex::new(CacheStats::default()),
             ttl_days: None,
             flush_every: 1000,
@@ -167,6 +170,7 @@ impl ResponseCache {
             policy: CachePolicy::ReadOnly,
             index: Mutex::new(index),
             pending: Mutex::new(Vec::new()),
+            commit_lock: Mutex::new(()),
             stats: Mutex::new(CacheStats::default()),
             ttl_days: None,
             flush_every: 1000,
@@ -274,7 +278,14 @@ impl ResponseCache {
     }
 
     /// Persist buffered writes as one deltalite upsert.
+    ///
+    /// Commits are serialized through `commit_lock` so concurrent executor
+    /// flushes from this process never race each other on a version, and
+    /// commit conflicts from *other* processes sharing the table (deltalite
+    /// now fails those hard instead of clobbering the log) are retried
+    /// with a freshly recomputed version a few times before giving up.
     pub fn flush(&self) -> Result<()> {
+        let _commit_guard = self.commit_lock.lock().unwrap();
         let pending: Vec<CacheEntry> = {
             let mut p = self.pending.lock().unwrap();
             std::mem::take(&mut *p)
@@ -289,8 +300,15 @@ impl ResponseCache {
             by_key.insert(e.prompt_hash.clone(), e.to_json());
         }
         let rows: Vec<Json> = by_key.into_values().collect();
-        self.table.upsert(&rows, "prompt_hash")?;
-        Ok(())
+        let mut last_err = None;
+        for _ in 0..4 {
+            match self.table.upsert(&rows, "prompt_hash") {
+                Ok(_) => return Ok(()),
+                Err(e) if deltalite::is_commit_conflict(&e) => last_err = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last_err.unwrap().context("flushing response cache"))
     }
 
     /// Storage footprint of live data (paper §5.3 accounting).

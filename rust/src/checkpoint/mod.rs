@@ -1,0 +1,473 @@
+//! Run checkpointing: crash-safe persistence of completed scheduler tasks
+//! so an interrupted evaluation can resume without repaying API cost.
+//!
+//! The paper's cost argument (§3.2) is that cached responses make metric
+//! iteration free — but a crashed *first* run still used to throw away
+//! every completed task. This module makes paid work durable at task
+//! granularity: as the scheduler finishes a task, its row results are
+//! spilled to a run directory together with a manifest record, both
+//! published with the same atomic first-writer-wins discipline as the
+//! deltalite transaction log ([`crate::util::fsx`]).
+//!
+//! Layout (one run directory, one subdirectory per checkpointed stage):
+//!
+//! ```text
+//! <run_dir>/
+//!   <stage>/meta.json                      fingerprint binding the stage
+//!                                          to its exact inputs
+//!   <stage>/tasks/<start>-<end>.json       manifest record per completed
+//!                                          task range (exclusive publish)
+//!   <stage>/data/<start>-<end>.jsonl       row results, one JSON per row
+//! ```
+//!
+//! Stages are content-addressed: the stage name embeds a hash of the exact
+//! inputs (prompts, model, sampling parameters), so a resumed run restores
+//! a stage only when its inputs are byte-identical — streaming chunks,
+//! pairwise A/B inference, and judge passes all get distinct stages for
+//! free, and resuming against a changed dataset silently (and correctly)
+//! re-executes instead of stitching mismatched rows.
+//!
+//! Crash-safety protocol per completed task:
+//!
+//! 1. write the row data file atomically (temp + rename);
+//! 2. publish the manifest record pointing at it with an exclusive claim.
+//!
+//! A crash between the steps leaves an unreferenced data file — garbage,
+//! never a dangling pointer. A crash mid-write leaves only hidden temp
+//! files, which loading ignores. Records whose data file is missing or has
+//! the wrong row count are skipped on restore (that range simply
+//! re-executes).
+
+use crate::util::fsx::{self, Publish};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+const TASKS_DIR: &str = "tasks";
+const DATA_DIR: &str = "data";
+
+/// One completed-task record in a stage manifest.
+#[derive(Debug, Clone)]
+pub struct TaskManifest {
+    /// Row range covered by the spilled results (post-split, exact).
+    pub start: usize,
+    pub end: usize,
+    /// Attempt number that won the task.
+    pub attempt: usize,
+    /// Executor that produced the winning attempt.
+    pub executor_id: usize,
+    /// Data file (relative to the stage's `data/` directory).
+    pub rows_file: String,
+    /// Unix timestamp of the checkpoint write.
+    pub recorded_at: f64,
+}
+
+impl TaskManifest {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("start", Json::num(self.start as f64)),
+            ("end", Json::num(self.end as f64)),
+            ("status", Json::str("done")),
+            ("attempt", Json::num(self.attempt as f64)),
+            ("executor_id", Json::num(self.executor_id as f64)),
+            ("rows_file", Json::str(&self.rows_file)),
+            ("recorded_at", Json::num(self.recorded_at)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<TaskManifest> {
+        Ok(TaskManifest {
+            start: v.get("start")?.as_usize()?,
+            end: v.get("end")?.as_usize()?,
+            attempt: v.usize_or("attempt", 1),
+            executor_id: v.usize_or("executor_id", 0),
+            rows_file: v.get("rows_file")?.as_str()?.to_string(),
+            recorded_at: v.f64_or("recorded_at", 0.0),
+        })
+    }
+}
+
+/// Handle on a run directory holding per-stage checkpoints.
+pub struct RunCheckpoint {
+    root: PathBuf,
+    resume: bool,
+}
+
+impl RunCheckpoint {
+    /// Start a fresh run directory. Refuses a non-empty existing directory:
+    /// continuing one requires the explicit `--resume` intent (otherwise a
+    /// stale manifest could silently shadow freshly computed results).
+    pub fn create(root: &Path) -> Result<RunCheckpoint> {
+        if root.exists() {
+            let occupied = std::fs::read_dir(root)
+                .with_context(|| format!("inspecting checkpoint dir {root:?}"))?
+                .next()
+                .is_some();
+            if occupied {
+                bail!(
+                    "checkpoint directory {root:?} already holds a run; \
+                     resume it with --resume or choose a fresh directory"
+                );
+            }
+        }
+        std::fs::create_dir_all(root)
+            .with_context(|| format!("creating checkpoint dir {root:?}"))?;
+        Ok(RunCheckpoint { root: root.to_path_buf(), resume: false })
+    }
+
+    /// Reopen an interrupted run's directory for resumption.
+    pub fn resume(root: &Path) -> Result<RunCheckpoint> {
+        if !root.is_dir() {
+            bail!("cannot resume: checkpoint directory {root:?} does not exist");
+        }
+        Ok(RunCheckpoint { root: root.to_path_buf(), resume: true })
+    }
+
+    pub fn is_resume(&self) -> bool {
+        self.resume
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Open (creating on first use) one stage's checkpoint store.
+    /// `fingerprint` binds the stage to its exact inputs; reopening an
+    /// existing stage with a different fingerprint is an error rather than
+    /// a silent mix of incompatible results.
+    pub fn stage(
+        &self,
+        name: &str,
+        fingerprint: &Json,
+        total_rows: usize,
+    ) -> Result<StageCheckpoint> {
+        let dir = self.root.join(name);
+        std::fs::create_dir_all(dir.join(TASKS_DIR))?;
+        std::fs::create_dir_all(dir.join(DATA_DIR))?;
+        let meta = Json::obj(vec![
+            ("fingerprint", fingerprint.clone()),
+            ("total_rows", Json::num(total_rows as f64)),
+        ]);
+        let meta_path = dir.join("meta.json");
+        if meta_path.exists() {
+            let existing = Json::parse(&std::fs::read_to_string(&meta_path)?)
+                .map_err(|e| anyhow::anyhow!("corrupt stage meta {meta_path:?}: {e}"))?;
+            if existing != meta {
+                bail!(
+                    "checkpoint stage '{name}' in {:?} was written with different \
+                     inputs (fingerprint mismatch); refusing to mix runs",
+                    self.root
+                );
+            }
+        } else {
+            fsx::write_atomic(&meta_path, meta.to_pretty().as_bytes())?;
+        }
+        Ok(StageCheckpoint { dir, total_rows })
+    }
+}
+
+/// Checkpoint store for one scheduler stage.
+pub struct StageCheckpoint {
+    dir: PathBuf,
+    total_rows: usize,
+}
+
+impl StageCheckpoint {
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Crash-safely record one completed task: `lines` are the task's rows
+    /// already encoded as single-line JSON. Racing twins of the same range
+    /// are benign — the first record published wins and later ones are
+    /// dropped (their rows are identical task outputs).
+    pub fn record_task(
+        &self,
+        start: usize,
+        end: usize,
+        attempt: usize,
+        executor_id: usize,
+        lines: &[String],
+    ) -> Result<()> {
+        if lines.len() != end - start {
+            bail!(
+                "checkpoint record for [{start}, {end}) has {} rows, expected {}",
+                lines.len(),
+                end - start
+            );
+        }
+        let manifest_path = self.dir.join(TASKS_DIR).join(format!("{start:08}-{end:08}.json"));
+        let rows_file = format!("{start:08}-{end:08}.jsonl");
+        if manifest_path.exists() {
+            // Already recorded (a re-run of the same stage, or a resume
+            // re-executing a range whose spill was lost). Skip only when
+            // the spilled data is actually healthy — right row count and
+            // every row parseable, mirroring what `restore` will demand —
+            // otherwise fall through and repair it, or the range would be
+            // re-paid on every future resume.
+            let healthy = std::fs::read_to_string(self.dir.join(DATA_DIR).join(&rows_file))
+                .map(|t| {
+                    let lines: Vec<&str> =
+                        t.lines().filter(|l| !l.trim().is_empty()).collect();
+                    lines.len() == end - start
+                        && lines.iter().all(|l| Json::parse(l).is_ok())
+                })
+                .unwrap_or(false);
+            if healthy {
+                return Ok(());
+            }
+        }
+        let mut body = String::new();
+        for line in lines {
+            body.push_str(line);
+            body.push('\n');
+        }
+        // Data first, then the manifest pointer: a crash in between leaves
+        // an unreferenced data file, never a pointer to missing data.
+        fsx::write_atomic(&self.dir.join(DATA_DIR).join(&rows_file), body.as_bytes())?;
+        let record = TaskManifest {
+            start,
+            end,
+            attempt,
+            executor_id,
+            rows_file,
+            recorded_at: crate::util::unix_ts(),
+        };
+        // `Conflict` means a racing writer already recorded this range —
+        // benign (its rows are the same task's output).
+        let _: Publish =
+            fsx::publish_exclusive(&manifest_path, record.to_json().to_pretty().as_bytes())?;
+        Ok(())
+    }
+
+    /// Load and validate the manifest: records sorted by range start,
+    /// ranges strictly disjoint and in-bounds. Overlap means the directory
+    /// holds records from incompatible runs — an error, not a guess.
+    pub fn manifest(&self) -> Result<Vec<TaskManifest>> {
+        let mut records = Vec::new();
+        for entry in std::fs::read_dir(self.dir.join(TASKS_DIR))? {
+            let path = entry?.path();
+            let name = path.file_name().map(|n| n.to_string_lossy().into_owned());
+            let Some(name) = name else { continue };
+            if name.starts_with('.') || !name.ends_with(".json") {
+                continue; // temp litter from a crash mid-publish
+            }
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading manifest record {path:?}"))?;
+            let v = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("corrupt manifest record {path:?}: {e}"))?;
+            records.push(TaskManifest::from_json(&v)?);
+        }
+        records.sort_by_key(|r| (r.start, r.end));
+        let mut cursor = 0usize;
+        for r in &records {
+            if r.end <= r.start || r.end > self.total_rows {
+                bail!(
+                    "manifest record [{}, {}) out of bounds for a {}-row stage",
+                    r.start,
+                    r.end,
+                    self.total_rows
+                );
+            }
+            if r.start < cursor {
+                bail!(
+                    "manifest records overlap at row {} (range [{}, {})); \
+                     the checkpoint directory mixes incompatible runs",
+                    r.start,
+                    r.start,
+                    r.end
+                );
+            }
+            cursor = r.end;
+        }
+        Ok(records)
+    }
+
+    /// Fraction of the stage's rows already covered by the manifest.
+    pub fn coverage(&self) -> Result<f64> {
+        if self.total_rows == 0 {
+            return Ok(1.0);
+        }
+        let covered: usize = self.manifest()?.iter().map(|r| r.end - r.start).sum();
+        Ok(covered as f64 / self.total_rows as f64)
+    }
+
+    /// Restore completed ranges, decoding each spilled row with `decode`.
+    /// Records whose data file is missing, truncated, or undecodable are
+    /// skipped with a warning — those ranges simply re-execute.
+    pub fn restore<T>(
+        &self,
+        decode: &dyn Fn(&Json) -> Result<T>,
+    ) -> Result<Vec<(usize, usize, Vec<T>)>> {
+        let mut restored = Vec::new();
+        'records: for record in self.manifest()? {
+            let path = self.dir.join(DATA_DIR).join(&record.rows_file);
+            let text = match std::fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!(
+                        "warning: checkpoint data file {path:?} unreadable ({e}); \
+                         re-executing rows [{}, {})",
+                        record.start, record.end
+                    );
+                    continue;
+                }
+            };
+            let mut rows = Vec::with_capacity(record.end - record.start);
+            for line in text.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let parsed = Json::parse(line)
+                    .map_err(anyhow::Error::msg)
+                    .and_then(|v| decode(&v));
+                match parsed {
+                    Ok(row) => rows.push(row),
+                    Err(e) => {
+                        eprintln!(
+                            "warning: corrupt checkpoint row in {path:?} ({e:#}); \
+                             re-executing rows [{}, {})",
+                            record.start, record.end
+                        );
+                        continue 'records;
+                    }
+                }
+            }
+            if rows.len() != record.end - record.start {
+                eprintln!(
+                    "warning: checkpoint data file {path:?} holds {} rows, expected {}; \
+                     re-executing rows [{}, {})",
+                    rows.len(),
+                    record.end - record.start,
+                    record.start,
+                    record.end
+                );
+                continue;
+            }
+            restored.push((record.start, record.end, rows));
+        }
+        Ok(restored)
+    }
+}
+
+/// Hash helper for stage fingerprints: SHA-256 over length-prefixed parts,
+/// so concatenation ambiguity cannot alias two different input sets.
+pub fn fingerprint_sha256<S: AsRef<str>>(parts: impl IntoIterator<Item = S>) -> String {
+    use sha2::{Digest, Sha256};
+    let mut h = Sha256::new();
+    for part in parts {
+        let bytes = part.as_ref().as_bytes();
+        h.update((bytes.len() as u64).to_le_bytes());
+        h.update(bytes);
+    }
+    format!("{:x}", h.finalize())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("slleval-ckpt-test")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn enc(v: f64) -> String {
+        Json::obj(vec![("v", Json::num(v))]).to_string()
+    }
+
+    fn dec(j: &Json) -> Result<f64> {
+        Ok(j.get("v")?.as_f64()?)
+    }
+
+    #[test]
+    fn record_and_restore_round_trip() {
+        let run = RunCheckpoint::create(&tmp_dir("roundtrip")).unwrap();
+        let fp = Json::obj(vec![("sha", Json::str("abc"))]);
+        let stage = run.stage("infer-abc", &fp, 10).unwrap();
+        stage.record_task(0, 4, 1, 0, &[enc(0.0), enc(1.0), enc(2.0), enc(3.0)]).unwrap();
+        stage.record_task(7, 10, 2, 3, &[enc(7.0), enc(8.0), enc(9.0)]).unwrap();
+
+        let manifest = stage.manifest().unwrap();
+        assert_eq!(manifest.len(), 2);
+        assert_eq!((manifest[0].start, manifest[0].end), (0, 4));
+        assert_eq!(manifest[1].attempt, 2);
+        assert!((stage.coverage().unwrap() - 0.7).abs() < 1e-12);
+
+        let restored = stage.restore(&dec).unwrap();
+        assert_eq!(restored.len(), 2);
+        assert_eq!(restored[0].2, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(restored[1].2, vec![7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn duplicate_range_record_is_benign_first_wins() {
+        let run = RunCheckpoint::create(&tmp_dir("dup")).unwrap();
+        let stage = run.stage("s", &Json::Null, 4).unwrap();
+        stage.record_task(0, 2, 1, 0, &[enc(1.0), enc(2.0)]).unwrap();
+        // A speculative twin finishing later re-records the same range.
+        stage.record_task(0, 2, 1, 1, &[enc(1.0), enc(2.0)]).unwrap();
+        let manifest = stage.manifest().unwrap();
+        assert_eq!(manifest.len(), 1);
+        assert_eq!(manifest[0].executor_id, 0, "first record wins");
+    }
+
+    #[test]
+    fn truncated_data_file_is_skipped() {
+        let run = RunCheckpoint::create(&tmp_dir("truncated")).unwrap();
+        let stage = run.stage("s", &Json::Null, 6).unwrap();
+        stage.record_task(0, 3, 1, 0, &[enc(0.0), enc(1.0), enc(2.0)]).unwrap();
+        stage.record_task(3, 6, 1, 0, &[enc(3.0), enc(4.0), enc(5.0)]).unwrap();
+        // Corrupt the second data file (simulated torn write).
+        std::fs::write(stage.dir().join("data").join("00000003-00000006.jsonl"), "{\"v\":3}\n")
+            .unwrap();
+        let restored = stage.restore(&dec).unwrap();
+        assert_eq!(restored.len(), 1);
+        assert_eq!(restored[0].0, 0);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_refuses_stage() {
+        let dir = tmp_dir("fp");
+        let run = RunCheckpoint::create(&dir).unwrap();
+        run.stage("s", &Json::str("inputs-v1"), 5).unwrap();
+        let reopened = RunCheckpoint::resume(&dir).unwrap();
+        assert!(reopened.stage("s", &Json::str("inputs-v2"), 5).is_err());
+        assert!(reopened.stage("s", &Json::str("inputs-v1"), 5).is_ok());
+    }
+
+    #[test]
+    fn create_refuses_occupied_dir_resume_accepts() {
+        let dir = tmp_dir("occupied");
+        {
+            let run = RunCheckpoint::create(&dir).unwrap();
+            run.stage("s", &Json::Null, 3).unwrap();
+        }
+        assert!(RunCheckpoint::create(&dir).is_err());
+        let resumed = RunCheckpoint::resume(&dir).unwrap();
+        assert!(resumed.is_resume());
+        assert!(RunCheckpoint::resume(&tmp_dir("missing")).is_err());
+    }
+
+    #[test]
+    fn overlapping_records_error() {
+        let run = RunCheckpoint::create(&tmp_dir("overlap")).unwrap();
+        let stage = run.stage("s", &Json::Null, 10).unwrap();
+        stage.record_task(0, 5, 1, 0, &(0..5).map(|i| enc(i as f64)).collect::<Vec<_>>()).unwrap();
+        stage.record_task(3, 8, 1, 0, &(3..8).map(|i| enc(i as f64)).collect::<Vec<_>>()).unwrap();
+        assert!(stage.manifest().is_err());
+    }
+
+    #[test]
+    fn fingerprint_hash_is_length_prefixed() {
+        assert_ne!(
+            fingerprint_sha256(["ab", "c"]),
+            fingerprint_sha256(["a", "bc"]),
+            "length prefixing must disambiguate concatenation"
+        );
+        assert_eq!(fingerprint_sha256(["x", "y"]), fingerprint_sha256(["x", "y"]));
+    }
+}

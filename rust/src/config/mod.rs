@@ -38,6 +38,7 @@ impl CachePolicy {
         }
     }
 
+    #[allow(clippy::should_implement_trait)]
     pub fn from_str(s: &str) -> Result<Self> {
         Ok(match s {
             "enabled" => CachePolicy::Enabled,
@@ -97,6 +98,11 @@ pub struct InferenceConfig {
     /// Adaptive rate-limit redistribution between executors (§6.1
     /// limitations — implemented here as an extension).
     pub adaptive_rate_limits: bool,
+    /// Hard provider-spend ceiling (USD) for one inference stage: once
+    /// cumulative cost crosses it the run aborts between batches. With
+    /// checkpointing enabled, everything completed up to the abort stays
+    /// resumable via `--resume`. `None` = unlimited.
+    pub max_cost_usd: Option<f64>,
 }
 
 impl Default for InferenceConfig {
@@ -109,6 +115,7 @@ impl Default for InferenceConfig {
             max_retries: 3,
             retry_delay: 1.0,
             adaptive_rate_limits: false,
+            max_cost_usd: None,
         }
     }
 }
@@ -164,6 +171,7 @@ impl CiMethod {
         }
     }
 
+    #[allow(clippy::should_implement_trait)]
     pub fn from_str(s: &str) -> Result<Self> {
         Ok(match s {
             "percentile" => CiMethod::Percentile,
@@ -201,6 +209,29 @@ impl Default for StatisticsConfig {
             seed: 42,
             use_device_bootstrap: false,
         }
+    }
+}
+
+/// Run-durability configuration: where (and whether) to checkpoint
+/// completed scheduler tasks, and whether this run resumes an interrupted
+/// one (see [`crate::checkpoint`]).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CheckpointConfig {
+    /// Run directory for crash-safe task checkpoints. `None` disables
+    /// checkpointing entirely.
+    pub dir: Option<String>,
+    /// Resume from `dir` instead of requiring it to be fresh: completed
+    /// task ranges are restored from the manifest and only the gaps
+    /// re-execute.
+    pub resume: bool,
+}
+
+impl CheckpointConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.resume && self.dir.is_none() {
+            bail!("checkpoint.resume requires checkpoint.dir");
+        }
+        Ok(())
     }
 }
 
@@ -242,6 +273,8 @@ pub struct EvalTask {
     /// Task scheduling behaviour: granularity, work stealing, speculative
     /// execution, retry/blacklist fault tolerance (see [`crate::sched`]).
     pub scheduler: SchedulerConfig,
+    /// Run durability: task checkpointing and crash resumption.
+    pub checkpoint: CheckpointConfig,
 }
 
 impl Default for EvalTask {
@@ -255,6 +288,7 @@ impl Default for EvalTask {
             data: DataConfig::default(),
             executors: 8,
             scheduler: SchedulerConfig::default(),
+            checkpoint: CheckpointConfig::default(),
         }
     }
 }
@@ -274,6 +308,11 @@ impl EvalTask {
         if self.inference.rate_limit_rpm <= 0.0 || self.inference.rate_limit_tpm <= 0.0 {
             bail!("rate limits must be positive");
         }
+        if let Some(budget) = self.inference.max_cost_usd {
+            if budget <= 0.0 {
+                bail!("max_cost_usd must be positive when set");
+            }
+        }
         if !(0.5..1.0).contains(&self.statistics.confidence_level) {
             bail!("confidence_level must be in [0.5, 1)");
         }
@@ -289,6 +328,7 @@ impl EvalTask {
             }
         }
         self.scheduler.validate()?;
+        self.checkpoint.validate()?;
         Ok(())
     }
 
@@ -317,6 +357,10 @@ impl EvalTask {
                     ("max_retries", Json::num(self.inference.max_retries as f64)),
                     ("retry_delay", Json::num(self.inference.retry_delay)),
                     ("adaptive_rate_limits", Json::Bool(self.inference.adaptive_rate_limits)),
+                    (
+                        "max_cost_usd",
+                        self.inference.max_cost_usd.map(Json::num).unwrap_or(Json::Null),
+                    ),
                 ]),
             ),
             (
@@ -359,6 +403,16 @@ impl EvalTask {
                 ]),
             ),
             ("scheduler", self.scheduler.to_json()),
+            (
+                "checkpoint",
+                Json::obj(vec![
+                    (
+                        "dir",
+                        self.checkpoint.dir.as_deref().map(Json::str).unwrap_or(Json::Null),
+                    ),
+                    ("resume", Json::Bool(self.checkpoint.resume)),
+                ]),
+            ),
         ])
     }
 
@@ -386,6 +440,7 @@ impl EvalTask {
                 max_retries: i.usize_or("max_retries", 3),
                 retry_delay: i.f64_or("retry_delay", 1.0),
                 adaptive_rate_limits: i.bool_or("adaptive_rate_limits", false),
+                max_cost_usd: i.opt("max_cost_usd").and_then(|v| v.as_f64().ok()),
             };
         }
         if let Some(ms) = v.opt("metrics") {
@@ -426,6 +481,12 @@ impl EvalTask {
         }
         if let Some(s) = v.opt("scheduler") {
             task.scheduler = SchedulerConfig::from_json(s)?;
+        }
+        if let Some(c) = v.opt("checkpoint") {
+            task.checkpoint = CheckpointConfig {
+                dir: c.opt("dir").and_then(|d| d.as_str().ok()).map(String::from),
+                resume: c.bool_or("resume", false),
+            };
         }
         task.validate()?;
         Ok(task)
@@ -506,6 +567,27 @@ mod tests {
 
         let mut bad = EvalTask::default();
         bad.scheduler.tasks_per_executor = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_and_budget_round_trip_and_validate() {
+        let mut task = EvalTask::default();
+        task.checkpoint = CheckpointConfig { dir: Some("runs/ckpt-7".into()), resume: true };
+        task.inference.max_cost_usd = Some(12.5);
+        let restored = EvalTask::from_json(&task.to_json()).unwrap();
+        assert_eq!(task, restored);
+
+        // Defaults (no checkpoint, no budget) survive too.
+        let plain = EvalTask::default();
+        assert_eq!(EvalTask::from_json(&plain.to_json()).unwrap(), plain);
+
+        let mut bad = EvalTask::default();
+        bad.checkpoint.resume = true; // resume without a dir
+        assert!(bad.validate().is_err());
+
+        let mut bad = EvalTask::default();
+        bad.inference.max_cost_usd = Some(0.0);
         assert!(bad.validate().is_err());
     }
 

@@ -201,4 +201,124 @@ mod tests {
             r2.metric("exact_match").unwrap().value
         );
     }
+
+    /// Checkpoint-friendly task: cache disabled (so provider-call counts
+    /// are not masked by cache hits), no speculation/splitting (so each
+    /// row costs exactly one API call), small batches (so aborts land
+    /// mid-flight).
+    fn durable_task() -> EvalTask {
+        let mut task = EvalTask::default();
+        task.inference.cache_policy = CachePolicy::Disabled;
+        task.inference.batch_size = 5;
+        task.scheduler.speculation = false;
+        task.scheduler.adaptive_split = false;
+        task
+    }
+
+    #[test]
+    fn interrupted_run_resumes_byte_identical_without_repaying_completed_work() {
+        let n = 200;
+        let df = synth::generate_default(n, 55);
+
+        // Reference: one uninterrupted run.
+        let full = fast_runner().evaluate(&df, &durable_task()).unwrap();
+        assert_eq!(full.inference.api_calls, n as u64, "1 call per row in this setup");
+        assert!(full.inference.total_cost_usd > 0.0);
+
+        // Interrupted run: a provider-spend budget of ~40% of the full
+        // cost aborts the job mid-flight; completed tasks are spilled to
+        // the checkpoint directory as they win.
+        let dir = tmp_dir("resume-interrupt");
+        let mut task = durable_task();
+        task.inference.max_cost_usd = Some(0.4 * full.inference.total_cost_usd);
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, false).unwrap();
+        let err = runner.evaluate(&df, &task).unwrap_err();
+        assert!(format!("{err:#}").contains("aborted"), "{err:#}");
+
+        // Resumed run: restore the manifest, execute only the gaps.
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, true).unwrap();
+        let resumed = runner.evaluate(&df, &durable_task()).unwrap();
+
+        let restored = resumed.inference.sched.restored_rows;
+        assert!(restored > 0, "the interrupted run must have completed some tasks");
+        assert!(restored < n, "the interrupted run must not have finished");
+        // Completed ranges are never re-executed: every fresh row costs
+        // exactly one provider call, and restored rows cost zero.
+        assert_eq!(resumed.inference.api_calls, (n - restored) as u64);
+        assert_eq!(resumed.inference.examples, n);
+
+        // The stitched-together report is identical to the uninterrupted
+        // run: same per-row metric values, same aggregates, same CIs.
+        assert_eq!(resumed.reports[0].values, full.reports[0].values);
+        let (m_full, m_res) = (
+            full.metric("exact_match").unwrap(),
+            resumed.metric("exact_match").unwrap(),
+        );
+        assert_eq!(m_full.value, m_res.value);
+        assert_eq!((m_full.ci.lo, m_full.ci.hi), (m_res.ci.lo, m_res.ci.hi));
+        assert_eq!(m_full.n, m_res.n);
+    }
+
+    #[test]
+    fn resuming_a_completed_run_restores_everything_with_zero_calls() {
+        let n = 120;
+        let df = synth::generate_default(n, 56);
+        let dir = tmp_dir("resume-complete");
+
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, false).unwrap();
+        let r1 = runner.evaluate(&df, &durable_task()).unwrap();
+        assert_eq!(r1.inference.api_calls, n as u64);
+
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, true).unwrap();
+        let r2 = runner.evaluate(&df, &durable_task()).unwrap();
+        assert_eq!(r2.inference.api_calls, 0, "everything restored, nothing re-paid");
+        assert_eq!(r2.inference.total_cost_usd, 0.0);
+        assert_eq!(r2.inference.sched.restored_rows, n);
+        // Per-row accounting is fresh-only: restored rows must not be
+        // re-reported as this run's cache misses or latencies.
+        assert_eq!(r2.inference.cache_misses, 0);
+        assert_eq!(r2.inference.latency_p50_ms, 0.0);
+        assert_eq!(r2.reports[0].values, r1.reports[0].values);
+        assert_eq!(
+            r1.metric("exact_match").unwrap().value,
+            r2.metric("exact_match").unwrap().value
+        );
+    }
+
+    #[test]
+    fn fresh_checkpoint_refuses_an_occupied_run_dir() {
+        let df = synth::generate_default(30, 57);
+        let dir = tmp_dir("resume-occupied");
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, false).unwrap();
+        runner.evaluate(&df, &durable_task()).unwrap();
+
+        let mut runner = fast_runner();
+        assert!(
+            runner.attach_checkpoint(&dir, false).is_err(),
+            "starting a fresh run over an existing one must be explicit (--resume)"
+        );
+    }
+
+    #[test]
+    fn resume_with_changed_inputs_reexecutes_instead_of_mixing() {
+        // The stage is content-addressed on the prompts: resuming against
+        // a different dataset silently re-executes everything rather than
+        // stitching mismatched rows.
+        let dir = tmp_dir("resume-changed");
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, false).unwrap();
+        runner.evaluate(&synth::generate_default(40, 58), &durable_task()).unwrap();
+
+        let other = synth::generate_default(40, 59); // different seed
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, true).unwrap();
+        let r = runner.evaluate(&other, &durable_task()).unwrap();
+        assert_eq!(r.inference.sched.restored_rows, 0);
+        assert_eq!(r.inference.api_calls, 40);
+    }
 }

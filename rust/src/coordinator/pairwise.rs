@@ -10,9 +10,10 @@ use crate::data::DataFrame;
 use crate::metrics::judge::{pairwise_prompt, parse_verdict};
 use crate::providers::simulated::SimEngine;
 use crate::providers::{InferenceEngine, InferenceRequest};
-use crate::sched::run_scheduled;
+use crate::sched::{run_scheduled_ext, TaskCheckpoint, TaskSink};
 use crate::stats::special::binom_test_half;
-use anyhow::Result;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
 
 /// Verdict for one example pair.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,6 +25,37 @@ pub enum PairVerdict {
     Inconsistent,
     /// One or both judge calls failed / unparseable.
     Unscored,
+}
+
+impl PairVerdict {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PairVerdict::AWins => "a_wins",
+            PairVerdict::BWins => "b_wins",
+            PairVerdict::Inconsistent => "inconsistent",
+            PairVerdict::Unscored => "unscored",
+        }
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(s: &str) -> Result<PairVerdict> {
+        Ok(match s {
+            "a_wins" => PairVerdict::AWins,
+            "b_wins" => PairVerdict::BWins,
+            "inconsistent" => PairVerdict::Inconsistent,
+            "unscored" => PairVerdict::Unscored,
+            other => bail!("unknown pair verdict: {other}"),
+        })
+    }
+
+    /// Checkpoint-spill encoding (one JSON value per judged pair).
+    pub fn to_json(self) -> Json {
+        Json::str(self.as_str())
+    }
+
+    pub fn from_json(v: &Json) -> Result<PairVerdict> {
+        PairVerdict::from_str(v.as_str()?)
+    }
 }
 
 /// Aggregated pairwise outcome.
@@ -87,12 +119,33 @@ impl EvalRunner {
         let clock = self.clock.clone();
         let cache = self.cache.clone();
 
-        let out = run_scheduled(
+        // Judging is the third provider-priced stage of a pairwise run;
+        // checkpoint it like inference. The stage is content-addressed on
+        // the judge configuration + both response columns, so a resumed
+        // run restores verdicts only when the underlying responses are
+        // byte-identical (which they are, since the inference stages
+        // restore first).
+        let mut parts: Vec<&str> = vec!["pairwise-judge", judge_provider, judge_model, rubric];
+        for i in 0..df.len() {
+            parts.push(rows_a[i].response.as_deref().unwrap_or(""));
+            parts.push(rows_b[i].response.as_deref().unwrap_or(""));
+        }
+        let (checkpoint_stage, restored) =
+            self.open_checkpoint_stage("judge", parts, df.len(), &PairVerdict::from_json)?;
+        let encode_verdict = |v: &PairVerdict| v.to_json();
+        let checkpoint = checkpoint_stage.as_ref().map(|stage| TaskCheckpoint {
+            restored,
+            sink: Some(TaskSink { stage, encode: &encode_verdict }),
+        });
+
+        let out = run_scheduled_ext(
             df,
             task_a.executors,
             task_a.inference.batch_size,
             &task_a.scheduler,
             None,
+            checkpoint,
+            self.abort.as_deref(),
             |_eid| {
                 let mut engine =
                     SimEngine::new(service.clone(), judge_provider, judge_model, clock.clone())?;
@@ -228,6 +281,53 @@ mod tests {
         // also says first → inconsistent (position-symmetric) — so no
         // decisive wins should dominate.
         assert!(r.p_value > 0.05 || r.a_wins.abs_diff(r.b_wins) < 8, "{r:?}");
+    }
+
+    #[test]
+    fn pairwise_run_resumes_with_zero_provider_calls() {
+        // A completed pairwise run (two inference stages + one judging
+        // stage) resumed from its checkpoint issues no provider calls at
+        // all and reproduces the exact same verdicts.
+        let df = synth::generate(
+            80,
+            99,
+            synth::DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 },
+        )
+        .unwrap();
+        let mut task_a = EvalTask::default();
+        task_a.inference.cache_policy = crate::config::CachePolicy::Disabled;
+        task_a.scheduler.speculation = false;
+        task_a.scheduler.adaptive_split = false;
+        task_a.model.model_name = "gpt-4o".into();
+        let mut task_b = task_a.clone();
+        task_b.model.model_name = "gpt-3.5-turbo".into();
+
+        let dir = std::env::temp_dir()
+            .join("slleval-coord-test")
+            .join(format!("pairwise-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, false).unwrap();
+        let r1 = runner
+            .evaluate_pairwise(&df, &task_a, &task_b, "accuracy", "openai", "gpt-4o")
+            .unwrap();
+        let calls_first = runner.service("openai").stats().calls;
+        assert!(calls_first > 0);
+
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, true).unwrap();
+        let r2 = runner
+            .evaluate_pairwise(&df, &task_a, &task_b, "accuracy", "openai", "gpt-4o")
+            .unwrap();
+        assert_eq!(
+            runner.service("openai").stats().calls,
+            0,
+            "a fully checkpointed pairwise run must not issue any provider calls"
+        );
+        assert_eq!(r1.verdicts, r2.verdicts);
+        assert_eq!((r1.a_wins, r1.b_wins), (r2.a_wins, r2.b_wins));
+        assert_eq!(r1.p_value, r2.p_value);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! prompt preparation → distributed inference → metric computation →
 //! statistical aggregation.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -9,11 +10,12 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::cached_engine::CachedEngine;
 use super::result::{EvalResult, InferenceStats, MetricValue};
 use crate::cache::ResponseCache;
+use crate::checkpoint::{fingerprint_sha256, RunCheckpoint, StageCheckpoint};
 use crate::config::{CachePolicy, CiMethod, EvalTask, MetricConfig};
 use crate::data::{DataFrame, Value};
 use crate::engine::{BatchSlice, Progress};
 use crate::metrics::{self, Example, MetricReport};
-use crate::sched::run_scheduled;
+use crate::sched::{run_scheduled, run_scheduled_ext, TaskCheckpoint, TaskSink};
 use crate::providers::retry::{infer_with_retry, RetryPolicy};
 use crate::providers::simulated::{SimEngine, SimService, SimServiceConfig};
 use crate::providers::tokenizer::estimate_request_tokens;
@@ -22,6 +24,7 @@ use crate::ratelimit::{Clock, RealClock, TokenBucket};
 use crate::runtime::SemanticRuntime;
 use crate::stats::{self, MetricScale};
 use crate::template::Template;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Per-example inference outcome (stage 2 output).
@@ -33,6 +36,35 @@ pub struct RowInference {
     pub cost_usd: f64,
     pub attempts: usize,
     pub error: Option<String>,
+}
+
+impl RowInference {
+    /// Checkpoint-spill encoding (one JSON value per row; numbers use the
+    /// shortest-round-trip float format, so restore is bit-exact).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "response",
+                self.response.as_deref().map(Json::str).unwrap_or(Json::Null),
+            ),
+            ("from_cache", Json::Bool(self.from_cache)),
+            ("latency_ms", Json::num(self.latency_ms)),
+            ("cost_usd", Json::num(self.cost_usd)),
+            ("attempts", Json::num(self.attempts as f64)),
+            ("error", self.error.as_deref().map(Json::str).unwrap_or(Json::Null)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<RowInference> {
+        Ok(RowInference {
+            response: v.opt("response").and_then(|r| r.as_str().ok()).map(String::from),
+            from_cache: v.bool_or("from_cache", false),
+            latency_ms: v.f64_or("latency_ms", 0.0),
+            cost_usd: v.f64_or("cost_usd", 0.0),
+            attempts: v.usize_or("attempts", 0),
+            error: v.opt("error").and_then(|e| e.as_str().ok()).map(String::from),
+        })
+    }
 }
 
 /// The evaluation coordinator. Owns the clock, provider services, cache,
@@ -48,6 +80,14 @@ pub struct EvalRunner {
     /// inference tasks complete, so long/streaming jobs can report real
     /// progress from another thread.
     pub progress: Option<Arc<Progress>>,
+    /// Run-checkpoint store: when set, every inference/judging stage
+    /// spills completed tasks crash-safely, and (in resume mode) restores
+    /// completed ranges instead of re-executing them.
+    pub checkpoint: Option<Arc<RunCheckpoint>>,
+    /// Cooperative abort flag: set to `true` (from any thread — signal
+    /// handler, UI, cost watchdog) to stop in-flight scheduled stages
+    /// between batches. Checkpointed work survives the abort.
+    pub abort: Option<Arc<AtomicBool>>,
 }
 
 impl EvalRunner {
@@ -63,6 +103,8 @@ impl EvalRunner {
             cache: None,
             runtime: None,
             progress: None,
+            checkpoint: None,
+            abort: None,
         }
     }
 
@@ -81,6 +123,46 @@ impl EvalRunner {
     pub fn with_runtime(mut self, runtime: SemanticRuntime) -> Self {
         self.runtime = Some(runtime);
         self
+    }
+
+    /// Attach a run-checkpoint directory: `resume = false` starts a fresh
+    /// run (the directory must not already hold one), `resume = true`
+    /// reloads an interrupted run's manifest so completed task ranges are
+    /// restored instead of re-executed.
+    pub fn attach_checkpoint(&mut self, dir: &std::path::Path, resume: bool) -> Result<()> {
+        let run =
+            if resume { RunCheckpoint::resume(dir)? } else { RunCheckpoint::create(dir)? };
+        self.checkpoint = Some(Arc::new(run));
+        Ok(())
+    }
+
+    /// Attach a cooperative abort flag (see [`EvalRunner::abort`]).
+    pub fn with_abort(mut self, abort: Arc<AtomicBool>) -> Self {
+        self.abort = Some(abort);
+        self
+    }
+
+    /// Open a content-addressed checkpoint stage (when a checkpoint
+    /// directory is attached) and restore its completed ranges (when
+    /// resuming). `parts` are the stage's exact inputs: their hash names
+    /// the stage, so distinct inputs can never mix and a resume restores
+    /// only byte-identical work.
+    pub(crate) fn open_checkpoint_stage<T>(
+        &self,
+        kind: &str,
+        parts: Vec<&str>,
+        total_rows: usize,
+        decode: &dyn Fn(&Json) -> Result<T>,
+    ) -> Result<(Option<StageCheckpoint>, Vec<(usize, usize, Vec<T>)>)> {
+        let Some(run) = &self.checkpoint else {
+            return Ok((None, Vec::new()));
+        };
+        let digest = fingerprint_sha256(parts);
+        let fingerprint =
+            Json::obj(vec![("kind", Json::str(kind)), ("sha256", Json::str(&digest))]);
+        let stage = run.stage(&format!("{kind}-{}", &digest[..16]), &fingerprint, total_rows)?;
+        let restored = if run.is_resume() { stage.restore(decode)? } else { Vec::new() };
+        Ok((Some(stage), restored))
     }
 
     /// Open (or reuse) the cache directory with the task's policy.
@@ -182,18 +264,58 @@ impl EvalRunner {
         // (api_calls, retries, cost_usd)
         let spend = Mutex::new((0u64, 0u64, 0.0f64));
 
+        // Content-addressed checkpoint stage over the exact inference
+        // inputs (prompts + model + sampling parameters): streaming
+        // chunks and pairwise A/B passes get distinct stages for free.
+        let temperature = format!("{:.6}", model_cfg.temperature);
+        let max_tokens = model_cfg.max_tokens.to_string();
+        let mut parts: Vec<&str> = vec![
+            "inference",
+            &model_cfg.provider,
+            &model_cfg.model_name,
+            &temperature,
+            &max_tokens,
+        ];
+        parts.extend(prompts.iter().map(|p| p.as_str()));
+        let (checkpoint_stage, restored) =
+            self.open_checkpoint_stage("infer", parts, prompts.len(), &RowInference::from_json)?;
+        let restored_spans: Vec<(usize, usize)> =
+            restored.iter().map(|(s, e, _)| (*s, *e)).collect();
+
+        // Abort plumbing. The externally attached handle is read-only from
+        // here: a budget trip must not poison the caller's long-lived flag
+        // (a reused runner would then abort every later stage at zero
+        // spend). With a budget configured, the scheduler watches a
+        // stage-local flag; the external handle (if any) is mirrored into
+        // it once per row.
+        let external_abort = self.abort.clone();
+        let abort: Option<Arc<AtomicBool>> = match (&external_abort, inf.max_cost_usd) {
+            (Some(flag), None) => Some(flag.clone()),
+            (None, None) => None,
+            (_, Some(_)) => Some(Arc::new(AtomicBool::new(false))),
+        };
+        let stage_abort = abort.clone();
+
         struct ExecState {
             engine: SimEngine,
             bucket: TokenBucket,
             rng: Rng,
         }
 
-        let out = run_scheduled(
+        let encode_row = |r: &RowInference| r.to_json();
+        let checkpoint = checkpoint_stage.as_ref().map(|stage| TaskCheckpoint {
+            restored,
+            sink: Some(TaskSink { stage, encode: &encode_row }),
+        });
+
+        let out = run_scheduled_ext(
             &df,
             executors,
             inf.batch_size,
             &task.scheduler,
             progress,
+            checkpoint,
+            abort.as_deref(),
             |eid| {
                 let mut engine = SimEngine::new(
                     service.clone(),
@@ -216,6 +338,13 @@ impl EvalRunner {
             |state, df, slice| {
                 let mut rows = Vec::with_capacity(slice.len());
                 for i in slice.indices() {
+                    // Mirror the caller's abort handle into the stage
+                    // flag (no-op when they are the same flag).
+                    if let (Some(ext), Some(local)) = (&external_abort, &stage_abort) {
+                        if ext.load(Ordering::Relaxed) {
+                            local.store(true, Ordering::Relaxed);
+                        }
+                    }
                     let prompt = df.row(i).str("prompt");
                     // Cache lookup first: hits bypass the rate limiter.
                     if inf.cache_policy.reads() {
@@ -286,6 +415,18 @@ impl EvalRunner {
                                 s.0 += outcome.attempts as u64;
                                 s.1 += (outcome.attempts - 1) as u64;
                                 s.2 += resp.cost_usd;
+                                // Cost-budget watchdog: crossing the cap
+                                // raises the shared abort flag; the
+                                // scheduler winds the job down between
+                                // batches, keeping completed (and
+                                // checkpointed) tasks.
+                                if let (Some(budget), Some(flag)) =
+                                    (inf.max_cost_usd, &stage_abort)
+                                {
+                                    if s.2 > budget {
+                                        flag.store(true, Ordering::Relaxed);
+                                    }
+                                }
                             }
                             rows.push(RowInference {
                                 response: Some(resp.text),
@@ -331,8 +472,17 @@ impl EvalRunner {
         stats.api_calls = api_calls;
         stats.retries = retries;
         stats.total_cost_usd = cost_usd;
+        // Per-row accounting describes THIS run's fresh work only: rows
+        // restored from the checkpoint are reported via
+        // `sched.restored_rows`, and their cache hits / latencies belong
+        // to the run that paid for them (api_calls/cost above are
+        // fresh-only for the same reason).
+        let in_restored = |i: usize| restored_spans.iter().any(|&(s, e)| i >= s && i < e);
         let mut latencies: Vec<f64> = Vec::new();
-        for r in &rows {
+        for (i, r) in rows.iter().enumerate() {
+            if in_restored(i) {
+                continue;
+            }
             if r.from_cache {
                 stats.cache_hits += 1;
             } else if r.response.is_some() {

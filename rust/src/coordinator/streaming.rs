@@ -270,6 +270,58 @@ mod tests {
     }
 
     #[test]
+    fn early_stopped_stream_resumes_without_repaying_finished_chunks() {
+        // Chunked inference checkpoints per chunk (each chunk is its own
+        // content-addressed stage), so a stream stopped after chunk 1
+        // resumes with chunk 1 restored and only the rest paid for.
+        let n = 120;
+        let chunk = 40;
+        let df = synth::generate_default(n, 99);
+        let mut task = EvalTask::default();
+        task.inference.cache_policy = crate::config::CachePolicy::Disabled;
+        task.scheduler.speculation = false;
+        task.scheduler.adaptive_split = false;
+        task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+
+        let dir = std::env::temp_dir()
+            .join("slleval-coord-test")
+            .join(format!("stream-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Interrupted stream: stop after the first chunk completes.
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, false).unwrap();
+        let (_, stopped) = runner
+            .evaluate_streaming(&df, &task, chunk, |_| StreamControl::Stop)
+            .unwrap();
+        assert_eq!(stopped.processed, chunk);
+        assert_eq!(stopped.api_calls, chunk as u64);
+
+        // Resumed stream over the full dataset: chunk 1 restores, the
+        // remaining chunks execute fresh.
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, true).unwrap();
+        let mut first_update_calls = None;
+        let (reports, last) = runner
+            .evaluate_streaming(&df, &task, chunk, |u| {
+                if first_update_calls.is_none() {
+                    first_update_calls = Some((u.api_calls, u.sched.restored_rows));
+                }
+                StreamControl::Continue
+            })
+            .unwrap();
+        assert_eq!(first_update_calls, Some((0, chunk)), "chunk 1 must be free");
+        assert_eq!(last.processed, n);
+        assert_eq!(last.api_calls, (n - chunk) as u64);
+        assert_eq!(last.sched.restored_rows, chunk);
+        assert_eq!(reports[0].values.len(), n);
+
+        // Same values as an uninterrupted batch evaluation.
+        let batch = fast_runner().evaluate(&df, &task).unwrap();
+        assert_eq!(reports[0].values, batch.reports[0].values);
+    }
+
+    #[test]
     fn early_stop_on_significance_workflow() {
         // The motivating use: stop once the metric CI upper bound falls
         // below a regression threshold.

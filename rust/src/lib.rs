@@ -21,6 +21,7 @@
 //! bridge between layers at run time.
 
 pub mod cache;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;

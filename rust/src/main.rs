@@ -4,11 +4,18 @@
 //! slleval generate  --n 10000 --seed 42 --out data.jsonl
 //! slleval run       --config task.json [--data data.jsonl | --n 1000]
 //!                   [--cache-dir .slleval-cache] [--track runs/] [--fast]
+//!                   [--checkpoint run_dir | --resume run_dir]
 //! slleval compare   --config task.json --model-b gpt-4o-mini [--provider-b openai]
+//!                   [--checkpoint run_dir | --resume run_dir]
 //! slleval replay    --config task.json --cache-dir .slleval-cache
 //! slleval tables    [--table fig2|tab3|tab4|tab5|tab6|typei|all]
 //! slleval sim       --executors 8 --n 10000 [--rpm 10000]
 //! ```
+//!
+//! `--checkpoint <run_dir>` spills every completed scheduler task to
+//! `run_dir` crash-safely; after an interruption (crash, Ctrl-C, cost
+//! budget), `--resume <run_dir>` reloads the manifest and re-executes only
+//! the incomplete ranges — completed work is never re-paid.
 
 use std::path::{Path, PathBuf};
 
@@ -70,8 +77,8 @@ fn load_or_generate_data(args: &Args) -> Result<DataFrame> {
 }
 
 fn load_task(args: &Args) -> Result<EvalTask> {
-    match args.get("config") {
-        Some(path) => EvalTask::from_file(Path::new(path)),
+    let mut task = match args.get("config") {
+        Some(path) => EvalTask::from_file(Path::new(path))?,
         None => {
             let mut task = EvalTask::default();
             if let Some(m) = args.get("model") {
@@ -81,9 +88,19 @@ fn load_task(args: &Args) -> Result<EvalTask> {
                 task.model.provider = p.to_string();
             }
             task.executors = args.get_usize("executors", task.executors);
-            Ok(task)
+            task
         }
+    };
+    // CLI checkpoint flags override the task file: --resume implies the
+    // directory holds an interrupted run, --checkpoint starts a fresh one.
+    if let Some(dir) = args.get("resume") {
+        task.checkpoint.dir = Some(dir.to_string());
+        task.checkpoint.resume = true;
+    } else if let Some(dir) = args.get("checkpoint") {
+        task.checkpoint.dir = Some(dir.to_string());
+        task.checkpoint.resume = false;
     }
+    Ok(task)
 }
 
 /// Build a runner: `--fast` uses a virtual clock and skips latency sleeps
@@ -123,8 +140,21 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let task = load_task(args)?;
     let df = load_or_generate_data(args)?;
-    let runner = build_runner(args, task.inference.cache_policy)?;
+    let mut runner = build_runner(args, task.inference.cache_policy)?;
+    if let Some(dir) = &task.checkpoint.dir {
+        runner.attach_checkpoint(Path::new(dir), task.checkpoint.resume)?;
+        if task.checkpoint.resume {
+            println!("resuming interrupted run from {dir}");
+        }
+    }
     let result = runner.evaluate(&df, &task)?;
+    let restored = result.inference.sched.restored_rows;
+    if restored > 0 {
+        println!(
+            "resume: {restored} of {} rows restored from checkpoint (not re-executed)",
+            result.inference.examples
+        );
+    }
     println!("{}", report::eval_summary(&result));
 
     if let Some(track_dir) = args.get("track") {
@@ -155,7 +185,10 @@ fn cmd_compare(args: &Args) -> Result<()> {
     task_b.task_id = format!("{}-vs-{}", task_a.task_id, task_b.model.model_name);
 
     let df = load_or_generate_data(args)?;
-    let runner = build_runner(args, task_a.inference.cache_policy)?;
+    let mut runner = build_runner(args, task_a.inference.cache_policy)?;
+    if let Some(dir) = &task_a.checkpoint.dir {
+        runner.attach_checkpoint(Path::new(dir), task_a.checkpoint.resume)?;
+    }
     let ra = runner.evaluate(&df, &task_a)?;
     let rb = runner.evaluate(&df, &task_b)?;
     println!("{}", report::eval_summary(&ra));

@@ -89,6 +89,17 @@ pub fn eval_summary(result: &EvalResult) -> String {
         s.blacklisted_executors.len(),
         s.skew_ratio,
     ));
+    if s.restored_rows > 0 {
+        // Distinguish carried-over (restored) work from re-executed work:
+        // api_calls/cost above cover only this run's fresh executions.
+        out.push_str(&format!(
+            "resume: {} tasks ({} rows) restored from checkpoint; \
+             {} rows freshly executed this run\n",
+            s.restored_tasks,
+            s.restored_rows,
+            inf.examples.saturating_sub(s.restored_rows),
+        ));
+    }
     out
 }
 

@@ -19,7 +19,18 @@
 //! - oversized tasks are **adaptively split** while running: when idle
 //!   executors exist and a task's own observed batch latency projects its
 //!   remaining work past the target per-task wall time, its tail half is
-//!   re-enqueued as a fresh task.
+//!   re-enqueued as a fresh task;
+//! - a **UDF panic** is caught and handled like an erroring UDF: the
+//!   attempt fails and the task is retried on another executor (repeat
+//!   offenders are blacklisted). Only executor *init* panics still shut
+//!   the whole pool down;
+//! - completed tasks can be **checkpointed** through a [`TaskSink`]
+//!   (crash-safe spill via [`crate::checkpoint`]), and a resumed run can
+//!   inject **restored ranges** as pre-completed tasks so only the gaps
+//!   re-execute ([`run_scheduled_ext`]);
+//! - an optional **abort flag** stops the job between batches (cost
+//!   budgets, Ctrl-C): in-flight work is abandoned, already-completed
+//!   tasks stay checkpointed.
 //!
 //! Output is **row-order exact**: tasks cover disjoint contiguous ranges
 //! whose results are reassembled by range start, so a scheduled job is
@@ -29,11 +40,14 @@
 //! executor, no stealing/speculation/retry), preserving the original
 //! semantics bit for bit.
 
+use crate::checkpoint::StageCheckpoint;
 use crate::data::DataFrame;
 use crate::engine::{BatchSlice, ExecutorStats, Progress};
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
@@ -230,6 +244,10 @@ pub struct SchedulerStats {
     /// Task attempts beyond each task's first.
     pub retries: usize,
     pub blacklisted_executors: Vec<usize>,
+    /// Tasks/rows restored from a run checkpoint instead of re-executed
+    /// (paid-for work carried over by `--resume`).
+    pub restored_tasks: usize,
+    pub restored_rows: usize,
     /// Rows processed by losing or abandoned attempts (duplicated work).
     pub wasted_rows: usize,
     /// Wall-time statistics over winning task attempts.
@@ -256,6 +274,8 @@ impl SchedulerStats {
             }
         }
         self.blacklisted_executors.sort_unstable();
+        self.restored_tasks += other.restored_tasks;
+        self.restored_rows += other.restored_rows;
         self.wasted_rows += other.wasted_rows;
         self.longest_task_secs = self.longest_task_secs.max(other.longest_task_secs);
         // Task-count-weighted mean of winning task wall times.
@@ -285,6 +305,8 @@ impl SchedulerStats {
                     self.blacklisted_executors.iter().map(|&e| Json::num(e as f64)).collect(),
                 ),
             ),
+            ("restored_tasks", Json::num(self.restored_tasks as f64)),
+            ("restored_rows", Json::num(self.restored_rows as f64)),
             ("wasted_rows", Json::num(self.wasted_rows as f64)),
             ("longest_task_secs", Json::num(self.longest_task_secs)),
             ("mean_task_secs", Json::num(self.mean_task_secs)),
@@ -300,6 +322,27 @@ pub struct SchedOutput<T> {
     pub executors: Vec<ExecutorStats>,
     pub sched: SchedulerStats,
     pub timeline: Vec<TaskRecord>,
+}
+
+/// Where and how to spill one completed task's rows (checkpointing).
+pub struct TaskSink<'a, T> {
+    /// Stage store the manifest + data files go to.
+    pub stage: &'a StageCheckpoint,
+    /// Row encoder: one JSON value per row, serialized one per line.
+    pub encode: &'a (dyn Fn(&T) -> Json + Sync),
+}
+
+/// Bridge between the scheduler and the run-checkpoint store
+/// ([`crate::checkpoint`]): ranges restored from a previous run enter the
+/// job as pre-completed tasks, and freshly completed tasks are persisted
+/// through the sink as they win.
+pub struct TaskCheckpoint<'a, T> {
+    /// Completed `(start, end, rows)` ranges restored from a prior run's
+    /// manifest. Must be disjoint and in-bounds, with exactly
+    /// `end - start` rows each; only the uncovered gaps are executed.
+    pub restored: Vec<(usize, usize, Vec<T>)>,
+    /// Sink persisting freshly completed tasks (`None` = restore-only).
+    pub sink: Option<TaskSink<'a, T>>,
 }
 
 /// A queued task attempt. Row ranges live in `SchedState::ranges` so
@@ -329,6 +372,10 @@ struct SchedState<T> {
     completed_tasks: usize,
     /// Failed attempts per task id.
     attempts_failed: Vec<usize>,
+    /// Tasks injected pre-completed from a run checkpoint (these are
+    /// excluded from the speculation-quantile bookkeeping, which reasons
+    /// about *this* run's progress).
+    restored_tasks: usize,
     /// Task already duplicated (speculation) — also seals it against splits.
     speculated: Vec<bool>,
     /// Winning output per task id.
@@ -374,12 +421,14 @@ enum Decision {
     Exit,
 }
 
-/// Shuts the pool down if a worker unwinds (UDF/init panic): without this,
-/// the dead worker's in-flight task never settles, the other workers can
-/// never reach `done()`, and the scoped join blocks forever. With it, the
-/// survivors exit on `fatal`, the panicked thread's join handle surfaces
-/// the panic to the caller (same observable behaviour as the old static
-/// engine), and nothing hangs.
+/// Shuts the pool down if a worker thread unwinds. UDF panics are caught
+/// per batch and converted into retryable task failures, so the unwinds
+/// that reach this guard are executor *init* panics and scheduler-internal
+/// bugs — cases where executor-local state never existed or the pool
+/// itself is suspect, and aborting the job is the only safe move. Without
+/// the guard, the dead worker's in-flight task would never settle and the
+/// scoped join would block forever; with it, the survivors exit on
+/// `fatal` and the panicked thread's join handle surfaces the panic.
 struct PanicGuard<'a, T> {
     shared: &'a Mutex<SchedState<T>>,
     work_ready: &'a Condvar,
@@ -425,16 +474,64 @@ where
     FI: Fn(usize) -> Result<S> + Sync,
     FP: Fn(&mut S, &DataFrame, BatchSlice) -> Result<Vec<T>> + Sync,
 {
+    run_scheduled_ext(df, executors, batch_size, cfg, progress, None, None, init, process)
+}
+
+/// [`run_scheduled`] plus durability hooks: `checkpoint` injects ranges
+/// restored from a previous run as pre-completed tasks (only uncovered
+/// gaps execute) and spills freshly completed tasks through its sink;
+/// `abort`, when set to `true` by any thread, stops the job between
+/// batches with a "run aborted" error while keeping everything already
+/// checkpointed.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheduled_ext<T, S, FI, FP>(
+    df: &DataFrame,
+    executors: usize,
+    batch_size: usize,
+    cfg: &SchedulerConfig,
+    progress: Option<&Progress>,
+    checkpoint: Option<TaskCheckpoint<'_, T>>,
+    abort: Option<&AtomicBool>,
+    init: FI,
+    process: FP,
+) -> Result<SchedOutput<T>>
+where
+    T: Send,
+    S: Send,
+    FI: Fn(usize) -> Result<S> + Sync,
+    FP: Fn(&mut S, &DataFrame, BatchSlice) -> Result<Vec<T>> + Sync,
+{
     cfg.validate()?;
     let executors = executors.max(1);
     let batch_size = batch_size.max(1);
     let total_rows = df.len();
     let t0 = Instant::now();
 
-    // Carve the frame into tasks: contiguous near-equal ranges (empty
-    // slots are skipped), assigned contiguously so the initial layout
-    // matches the static engine's `partition_ranges` exactly when
-    // tasks_per_executor == 1.
+    let (mut restored, sink) = match checkpoint {
+        Some(c) => (c.restored, c.sink),
+        None => (Vec::new(), None),
+    };
+    let sink = sink.as_ref();
+    restored.sort_by_key(|(start, _, _)| *start);
+    {
+        let mut cursor = 0usize;
+        for (start, end, rows) in &restored {
+            anyhow::ensure!(
+                start < end && *end <= total_rows,
+                "restored range [{start}, {end}) out of bounds for {total_rows} rows"
+            );
+            anyhow::ensure!(*start >= cursor, "restored ranges overlap at row {start}");
+            anyhow::ensure!(
+                rows.len() == end - start,
+                "restored range [{start}, {end}) carries {} rows",
+                rows.len()
+            );
+            cursor = *end;
+        }
+    }
+    let restored_spans: Vec<(usize, usize)> =
+        restored.iter().map(|(start, end, _)| (*start, *end)).collect();
+
     let n_slots = executors * cfg.tasks_per_executor;
     let mut state = SchedState::<T> {
         deques: (0..executors).map(|_| VecDeque::new()).collect(),
@@ -442,6 +539,7 @@ where
         completed: Vec::new(),
         completed_tasks: 0,
         attempts_failed: Vec::new(),
+        restored_tasks: 0,
         speculated: Vec::new(),
         results: Vec::new(),
         inflight: Vec::new(),
@@ -459,13 +557,68 @@ where
         splits: 0,
         retries: 0,
     };
-    for (slot, range) in df.partition_ranges(n_slots).into_iter().enumerate() {
-        if range.is_empty() {
-            continue;
+
+    // Restored ranges enter as already-won tasks: their rows are final,
+    // they hold no queue slot, and the per-run progress/speculation
+    // bookkeeping never sees them as live work.
+    let mut restored_rows = 0usize;
+    for (start, end, rows) in restored {
+        let id = state.new_task(start, end);
+        state.completed[id] = true;
+        state.completed_tasks += 1;
+        state.restored_tasks += 1;
+        state.results[id] = Some(rows);
+        state.rows_done += end - start;
+        restored_rows += end - start;
+        if let Some(p) = progress {
+            p.add(end - start);
         }
-        let id = state.new_task(range.start, range.end);
-        let home = slot * executors / n_slots;
-        state.deques[home].push_back(TaskItem { id, speculative: false });
+    }
+
+    if restored_spans.is_empty() {
+        // Carve the frame into tasks: contiguous near-equal ranges (empty
+        // slots are skipped), assigned contiguously so the initial layout
+        // matches the static engine's `partition_ranges` exactly when
+        // tasks_per_executor == 1.
+        for (slot, range) in df.partition_ranges(n_slots).into_iter().enumerate() {
+            if range.is_empty() {
+                continue;
+            }
+            let id = state.new_task(range.start, range.end);
+            let home = slot * executors / n_slots;
+            state.deques[home].push_back(TaskItem { id, speculative: false });
+        }
+    } else {
+        // Carve only the gaps between restored ranges, splitting each gap
+        // into a slot share proportional to its size.
+        let mut gaps: Vec<(usize, usize)> = Vec::new();
+        let mut cursor = 0usize;
+        for &(start, end) in &restored_spans {
+            if start > cursor {
+                gaps.push((cursor, start));
+            }
+            cursor = end;
+        }
+        if cursor < total_rows {
+            gaps.push((cursor, total_rows));
+        }
+        let total_gap: usize = gaps.iter().map(|(s, e)| e - s).sum();
+        let mut slot = 0usize;
+        for &(gap_start, gap_end) in &gaps {
+            let len = gap_end - gap_start;
+            let parts = (len * n_slots).div_ceil(total_gap).clamp(1, len);
+            let base = len / parts;
+            let rem = len % parts;
+            let mut start = gap_start;
+            for i in 0..parts {
+                let end = start + base + usize::from(i < rem);
+                let id = state.new_task(start, end);
+                let home = (slot * executors / n_slots).min(executors - 1);
+                state.deques[home].push_back(TaskItem { id, speculative: false });
+                slot += 1;
+                start = end;
+            }
+        }
     }
 
     let shared = Mutex::new(state);
@@ -484,7 +637,8 @@ where
             let cfg = cfg.clone();
             handles.push(scope.spawn(move || -> Result<ExecutorStats> {
                 worker(
-                    eid, df, batch_size, &cfg, progress, t0, shared, work_ready, init, process,
+                    eid, df, batch_size, &cfg, progress, t0, shared, work_ready, sink, abort,
+                    init, process,
                 )
             }));
         }
@@ -538,6 +692,8 @@ where
         speculative_wins: state.speculative_wins,
         splits: state.splits,
         retries: state.retries,
+        restored_tasks: state.restored_tasks,
+        restored_rows,
         blacklisted_executors: (0..executors).filter(|&e| state.blacklisted[e]).collect(),
         wasted_rows: state
             .timeline
@@ -577,6 +733,8 @@ fn worker<T, S, FI, FP>(
     t0: Instant,
     shared: &Mutex<SchedState<T>>,
     work_ready: &Condvar,
+    sink: Option<&TaskSink<'_, T>>,
+    abort: Option<&AtomicBool>,
     init: &FI,
     process: &FP,
 ) -> Result<ExecutorStats>
@@ -611,6 +769,7 @@ where
         let decision = {
             let mut state = shared.lock().unwrap();
             loop {
+                check_abort(&mut state, abort, work_ready);
                 if state.done() || state.blacklisted[eid] {
                     break Decision::Exit;
                 }
@@ -666,7 +825,24 @@ where
             let batch_end = (cursor + batch_size).min(end);
             let slice = BatchSlice { executor_id: eid, start: cursor, end: batch_end };
             let bt0 = Instant::now();
-            match process(&mut local, df, slice) {
+            // A panicking UDF is handled exactly like an erroring one: the
+            // attempt fails and the task becomes eligible for retry /
+            // blacklisting, instead of tearing the whole pool down. (The
+            // executor-local state may be mid-mutation after an unwind;
+            // it is only ever reused for full fresh batches, which every
+            // UDF must already tolerate because retries replay batches.)
+            let batch_result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                process(&mut local, df, slice)
+            }))
+            .unwrap_or_else(|payload| {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                Err(anyhow::anyhow!("UDF panicked: {msg}"))
+            });
+            match batch_result {
                 Ok(batch_out) => {
                     let batch_secs = bt0.elapsed().as_secs_f64();
                     st.busy_secs += batch_secs;
@@ -684,21 +860,30 @@ where
                     cursor = batch_end;
 
                     // Between batches: observe latency, abandon if a twin
-                    // won, and adaptively split oversized remainders.
+                    // won or the run was aborted, and adaptively split
+                    // oversized remainders.
                     let mut state = shared.lock().unwrap();
+                    check_abort(&mut state, abort, work_ready);
                     state.ewma_batch_secs = if state.ewma_batch_secs == 0.0 {
                         batch_secs
                     } else {
                         0.8 * state.ewma_batch_secs + 0.2 * batch_secs
                     };
-                    if state.completed[item.id] || state.fatal.is_some() {
+                    // Abandon only attempts with work still left: an
+                    // attempt whose final batch just completed settles
+                    // normally (Won/Lost) even under abort/fatal — its
+                    // rows are fully paid for and must reach the
+                    // checkpoint sink, not the floor.
+                    let current_end = state.ranges[item.id].1;
+                    if (state.completed[item.id] || state.fatal.is_some()) && cursor < current_end
+                    {
                         abandoned = true;
                         break;
                     }
                     // The twin may have been launched after this attempt
                     // started; splits are sealed from then on, but the
                     // current range end may have shrunk earlier.
-                    end = state.ranges[item.id].1;
+                    end = current_end;
                     if cursor >= end {
                         continue;
                     }
@@ -739,6 +924,15 @@ where
         }
 
         // ------------------------------------------------ settle the attempt
+        // Encode rows for the checkpoint sink before taking the lock, so
+        // encoding stays out of the critical section (a losing twin wastes
+        // the encode, which is rare).
+        let encoded: Option<Vec<String>> = match (&failure, abandoned, sink) {
+            (None, false, Some(s)) => {
+                Some(out.iter().map(|row| (s.encode)(row).to_string()).collect())
+            }
+            _ => None,
+        };
         let finished_secs = (Instant::now() - t0).as_secs_f64();
         let mut state = shared.lock().unwrap();
         state.inflight.retain(|f| !(f.task_id == item.id && f.executor_id == eid));
@@ -776,10 +970,47 @@ where
             outcome,
         });
         work_ready.notify_all();
+        drop(state);
+
+        // Spill the winning attempt's rows outside the lock. Checkpointing
+        // is best-effort durability: a failed write degrades a future
+        // resume, not this run.
+        if outcome == TaskOutcome::Won {
+            if let (Some(s), Some(lines)) = (sink, encoded) {
+                if let Err(e) =
+                    s.stage.record_task(range_start, range_end, attempt, eid, &lines)
+                {
+                    eprintln!(
+                        "warning: checkpoint write failed for rows \
+                         [{range_start}, {range_end}): {e:#}"
+                    );
+                }
+            }
+        }
     }
 
     work_ready.notify_all();
     Ok(st)
+}
+
+/// Under the lock: fold an externally raised abort flag into the shared
+/// fatal slot (once), so every worker winds down between batches. A flag
+/// raised after the final row completed is ignored — a finished job is a
+/// finished job (relevant for cost budgets tripped by the last batch).
+fn check_abort<T>(state: &mut SchedState<T>, abort: Option<&AtomicBool>, work_ready: &Condvar) {
+    if let Some(flag) = abort {
+        if flag.load(Ordering::Relaxed)
+            && state.fatal.is_none()
+            && state.rows_done < state.total_rows
+        {
+            state.fatal = Some(anyhow::anyhow!(
+                "run aborted with {}/{} rows complete",
+                state.rows_done,
+                state.total_rows
+            ));
+            work_ready.notify_all();
+        }
+    }
 }
 
 /// Under the lock: find something for `eid` to do. Returns `None` when
@@ -805,10 +1036,13 @@ fn claim_task<T>(
     }
 
     // 3. Speculate: duplicate the longest-running unduplicated straggler.
+    // Restored tasks are excluded from the quantile: the trigger reasons
+    // about *this* run's progress, not carried-over checkpoint work.
     if claimed.is_none() && cfg.speculation {
-        let total = state.ranges.len();
+        let total = state.ranges.len() - state.restored_tasks;
+        let fresh_done = state.completed_tasks - state.restored_tasks;
         let threshold = (cfg.speculation_quantile * total as f64).ceil() as usize;
-        if total > 0 && state.completed_tasks >= threshold && state.completed_tasks < total {
+        if total > 0 && fresh_done >= threshold && fresh_done < total {
             let straggler = state
                 .inflight
                 .iter()
@@ -1131,11 +1365,14 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "executor thread panicked")]
     fn udf_panic_propagates_without_hanging() {
+        // A deterministically panicking UDF no longer tears the pool down:
+        // each panic is a retryable task failure, and once attempts are
+        // exhausted the job returns an error (without hanging) whose chain
+        // names the panic.
         let df = frame(40);
         let cfg = SchedulerConfig::default();
-        let _ = run_scheduled(
+        let err = run_scheduled(
             &df,
             3,
             5,
@@ -1148,7 +1385,191 @@ mod tests {
                 }
                 Ok(vec![0u8; slice.len()])
             },
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked"), "{msg}");
+    }
+
+    #[test]
+    fn transient_udf_panic_is_retried_and_job_completes() {
+        // One panic on the first touch of row 10's batch; the retry (on a
+        // different executor) succeeds and the output is still exact.
+        let n = 60;
+        let df = frame(n);
+        let fired = std::sync::atomic::AtomicBool::new(false);
+        let cfg = SchedulerConfig {
+            tasks_per_executor: 3,
+            speculation: false,
+            adaptive_split: false,
+            max_task_attempts: 3,
+            blacklist_after: usize::MAX,
+            ..Default::default()
+        };
+        let out = run_scheduled(
+            &df,
+            3,
+            5,
+            &cfg,
+            None,
+            |_| Ok(()),
+            |_, df, slice: BatchSlice| {
+                if slice.start <= 10 && slice.end > 10 && !fired.swap(true, Ordering::SeqCst) {
+                    panic!("transient panic at row 10");
+                }
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect())
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rows, (0..n).map(|i| i as f64).collect::<Vec<_>>());
+        assert!(out.sched.retries >= 1, "{:?}", out.sched);
+        assert!(out
+            .timeline
+            .iter()
+            .any(|r| r.outcome == TaskOutcome::Failed));
+    }
+
+    #[test]
+    fn init_panic_still_shuts_pool_down() {
+        // Executor-local init panics are not retryable: the pool shuts
+        // down and the panic surfaces through the join, as before.
+        let df = frame(30);
+        let cfg = SchedulerConfig::default();
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _ = run_scheduled(
+                &df,
+                3,
+                5,
+                &cfg,
+                None,
+                |eid| {
+                    if eid == 1 {
+                        panic!("init panic on executor 1");
+                    }
+                    Ok(())
+                },
+                |_, _df, slice: BatchSlice| Ok(vec![0u8; slice.len()]),
+            );
+        }));
+        assert!(r.is_err(), "init panic must propagate");
+    }
+
+    #[test]
+    fn abort_flag_stops_job_midflight() {
+        let n = 200;
+        let df = frame(n);
+        let abort = AtomicBool::new(false);
+        let seen = AtomicUsize::new(0);
+        let cfg = SchedulerConfig {
+            tasks_per_executor: 8,
+            speculation: false,
+            adaptive_split: false,
+            ..Default::default()
+        };
+        let err = run_scheduled_ext(
+            &df,
+            4,
+            5,
+            &cfg,
+            None,
+            None,
+            Some(&abort),
+            |_| Ok(()),
+            |_, df, slice: BatchSlice| {
+                if seen.fetch_add(slice.len(), Ordering::SeqCst) >= n / 2 {
+                    abort.store(true, Ordering::SeqCst);
+                }
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect())
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("aborted"), "{err:#}");
+    }
+
+    #[test]
+    fn restored_ranges_are_never_re_executed() {
+        // Rows [0, 50) come from a checkpoint; only [50, 120) may run.
+        let n = 120;
+        let df = frame(n);
+        let cfg = SchedulerConfig::default();
+        let restored: Vec<(usize, usize, Vec<f64>)> =
+            vec![(0, 50, (0..50).map(|i| i as f64).collect())];
+        let touched = Mutex::new(vec![0usize; n]);
+        let out = run_scheduled_ext(
+            &df,
+            4,
+            7,
+            &cfg,
+            None,
+            Some(TaskCheckpoint { restored, sink: None }),
+            None,
+            |_| Ok(()),
+            |_, df, slice: BatchSlice| {
+                {
+                    let mut touched = touched.lock().unwrap();
+                    for i in slice.indices() {
+                        touched[i] += 1;
+                    }
+                }
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect())
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rows, (0..n).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(out.sched.restored_tasks, 1);
+        assert_eq!(out.sched.restored_rows, 50);
+        let touched = touched.into_inner().unwrap();
+        assert!(
+            touched[..50].iter().all(|&c| c == 0),
+            "restored rows must not re-execute"
         );
+        assert!(touched[50..].iter().all(|&c| c >= 1), "gap rows must run");
+    }
+
+    #[test]
+    fn invalid_restored_ranges_are_rejected() {
+        let df = frame(20);
+        let cfg = SchedulerConfig::default();
+        // Overlapping ranges.
+        let bad: Vec<(usize, usize, Vec<f64>)> = vec![
+            (0, 10, (0..10).map(|i| i as f64).collect()),
+            (5, 15, (5..15).map(|i| i as f64).collect()),
+        ];
+        let r = run_scheduled_ext(
+            &df,
+            2,
+            5,
+            &cfg,
+            None,
+            Some(TaskCheckpoint { restored: bad, sink: None }),
+            None,
+            |_| Ok(()),
+            identity_udf(),
+        );
+        assert!(r.is_err());
+        // Row-count mismatch.
+        let bad: Vec<(usize, usize, Vec<f64>)> = vec![(0, 10, vec![1.0, 2.0])];
+        let r = run_scheduled_ext(
+            &df,
+            2,
+            5,
+            &cfg,
+            None,
+            Some(TaskCheckpoint { restored: bad, sink: None }),
+            None,
+            |_| Ok(()),
+            identity_udf(),
+        );
+        assert!(r.is_err());
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Crash-safe filesystem publication primitives, shared by the deltalite
+//! transaction log and the run-checkpoint store.
+//!
+//! The discipline: content is always written to a hidden temp file in the
+//! destination directory first, then *published* to its final name in one
+//! atomic step, so readers see either nothing or the complete content —
+//! never a partial file.
+//!
+//! Two publication modes:
+//!
+//! - [`write_atomic`] — last writer wins (`rename(2)` semantics). For
+//!   files that are legitimately re-writable, e.g. stage metadata.
+//! - [`publish_exclusive`] — first writer wins. Publication is a
+//!   `link(2)` call, which (unlike `rename(2)` on Linux, which silently
+//!   replaces an existing destination) fails with `EEXIST` when the
+//!   destination already exists. This gives O_EXCL-style exclusivity *and*
+//!   full-content atomicity in one step: a racing loser gets a
+//!   [`Publish::Conflict`], and a crash at any point leaves either no
+//!   destination file or a complete one — never a claimed-but-empty slot.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Outcome of an exclusive publication attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Publish {
+    /// This writer's content is now at the destination.
+    Committed,
+    /// Another writer already published this destination; our content was
+    /// discarded.
+    Conflict,
+}
+
+/// Process-unique discriminator so concurrent writers (threads *and*
+/// processes) never collide on temp-file names.
+pub fn unique_suffix() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    format!("{}-{}", std::process::id(), SEQ.fetch_add(1, Ordering::Relaxed))
+}
+
+fn temp_sibling(final_path: &Path) -> PathBuf {
+    let dir = final_path.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
+    let name = final_path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".to_string());
+    dir.join(format!(".tmp-{}-{}", unique_suffix(), name))
+}
+
+/// Atomically write `bytes` to `final_path` (write temp + rename). An
+/// existing destination is replaced; readers never observe partial content.
+pub fn write_atomic(final_path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = temp_sibling(final_path);
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {tmp:?}"))?;
+    let renamed = std::fs::rename(&tmp, final_path)
+        .with_context(|| format!("publishing {final_path:?}"));
+    if renamed.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    renamed
+}
+
+/// Atomically publish `bytes` at `final_path` iff nothing exists there yet.
+/// Exactly one of any number of racing writers gets [`Publish::Committed`];
+/// the rest get [`Publish::Conflict`] and the committed content is left
+/// untouched. IO failures (as opposed to losing the race) are `Err`.
+pub fn publish_exclusive(final_path: &Path, bytes: &[u8]) -> Result<Publish> {
+    let tmp = temp_sibling(final_path);
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {tmp:?}"))?;
+    let outcome = match std::fs::hard_link(&tmp, final_path) {
+        Ok(()) => Ok(Publish::Committed),
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(Publish::Conflict),
+        Err(e) => Err(e).with_context(|| format!("claiming {final_path:?}")),
+    };
+    let _ = std::fs::remove_file(&tmp);
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("slleval-fsx-test")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn write_atomic_replaces() {
+        let dir = tmp_dir("atomic");
+        let path = dir.join("f.txt");
+        write_atomic(&path, b"one").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"one");
+        write_atomic(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+        // No temp litter.
+        let litter: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().starts_with(".tmp-")
+            })
+            .collect();
+        assert!(litter.is_empty());
+    }
+
+    #[test]
+    fn exclusive_first_writer_wins() {
+        let dir = tmp_dir("excl");
+        let path = dir.join("v0.json");
+        assert_eq!(publish_exclusive(&path, b"winner").unwrap(), Publish::Committed);
+        assert_eq!(publish_exclusive(&path, b"loser").unwrap(), Publish::Conflict);
+        assert_eq!(std::fs::read(&path).unwrap(), b"winner");
+    }
+
+    #[test]
+    fn exclusive_race_exactly_one_commits() {
+        let dir = tmp_dir("race");
+        let path = dir.join("claimed.json");
+        let committed: usize = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let path = path.clone();
+                    scope.spawn(move || {
+                        let body = format!("writer-{i}");
+                        publish_exclusive(&path, body.as_bytes()).unwrap()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .filter(|p| *p == Publish::Committed)
+                .count()
+        });
+        assert_eq!(committed, 1);
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("writer-"), "{content}");
+    }
+}

@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fsx;
 pub mod json;
 pub mod proptest;
 pub mod rng;

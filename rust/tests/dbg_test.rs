@@ -1,4 +1,6 @@
 #[test]
+#[ignore = "seed debug scratch: prints discordant-pair breakdowns and asserts \
+            nothing; kept for manual quality probing (cargo test -- --ignored)"]
 fn dbg_quality() {
     use spark_llm_eval::coordinator::runner::EvalRunner;
     use spark_llm_eval::providers::simulated::SimServiceConfig;

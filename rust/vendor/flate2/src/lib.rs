@@ -1,0 +1,286 @@
+//! Vendored, dependency-free subset of the `flate2` gzip API.
+//!
+//! The offline build has no crates.io registry, so this crate provides the
+//! exact surface deltalite uses: [`write::GzEncoder`], [`read::GzDecoder`],
+//! and [`Compression`]. Streams are RFC 1952 gzip containers whose deflate
+//! payload uses **stored (uncompressed) blocks only** — a valid gzip any
+//! external tool can read (`zcat` works), with CRC-32 and length verified
+//! on decode. The real crate's compression ratios are out of scope; the
+//! cache's storage-overhead numbers therefore measure raw JSONL size.
+//!
+//! The decoder accepts only what this encoder emits (plus standard header
+//! variations: FEXTRA/FNAME/FCOMMENT/FHCRC fields are skipped). Compressed
+//! deflate block types produce an explanatory error instead of garbage.
+
+use std::io::{self, Read, Write};
+
+/// Compression level marker (accepted and ignored: all levels store).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+
+    pub fn none() -> Compression {
+        Compression(0)
+    }
+
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Compression {
+        Compression(6)
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected) lookup table, built at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { 0xEDB8_8320 ^ (crc >> 1) } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &byte in data {
+        crc = CRC_TABLE[((crc ^ byte as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+pub mod write {
+    use super::*;
+
+    /// Gzip encoder: buffers written bytes and emits the full container on
+    /// [`GzEncoder::finish`].
+    pub struct GzEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> GzEncoder<W> {
+        pub fn new(inner: W, _level: Compression) -> GzEncoder<W> {
+            GzEncoder { inner, buf: Vec::new() }
+        }
+
+        /// Write the gzip stream and return the inner writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            // Header: magic, CM=8 (deflate), no flags, MTIME=0, XFL=0,
+            // OS=255 (unknown).
+            self.inner.write_all(&[0x1F, 0x8B, 0x08, 0, 0, 0, 0, 0, 0, 0xFF])?;
+            // Deflate payload: stored blocks of at most 0xFFFF bytes. Each
+            // block starts byte-aligned: BFINAL in bit 0, BTYPE=00, rest
+            // of the byte is padding.
+            let mut chunks = self.buf.chunks(0xFFFF).peekable();
+            if chunks.peek().is_none() {
+                // Empty payload still needs one final stored block.
+                self.inner.write_all(&[0x01, 0, 0, 0xFF, 0xFF])?;
+            }
+            while let Some(chunk) = chunks.next() {
+                let final_block = chunks.peek().is_none();
+                let len = chunk.len() as u16;
+                self.inner.write_all(&[u8::from(final_block)])?;
+                self.inner.write_all(&len.to_le_bytes())?;
+                self.inner.write_all(&(!len).to_le_bytes())?;
+                self.inner.write_all(chunk)?;
+            }
+            // Trailer: CRC-32 and ISIZE, little endian.
+            self.inner.write_all(&crc32(&self.buf).to_le_bytes())?;
+            self.inner.write_all(&(self.buf.len() as u32).to_le_bytes())?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for GzEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+pub mod read {
+    use super::*;
+
+    /// Gzip decoder: reads and validates the whole stream on first read,
+    /// then serves the decoded bytes.
+    pub struct GzDecoder<R: Read> {
+        inner: Option<R>,
+        decoded: Vec<u8>,
+        pos: usize,
+    }
+
+    impl<R: Read> GzDecoder<R> {
+        pub fn new(inner: R) -> GzDecoder<R> {
+            GzDecoder { inner: Some(inner), decoded: Vec::new(), pos: 0 }
+        }
+    }
+
+    fn bad(msg: &str) -> io::Error {
+        io::Error::new(io::ErrorKind::InvalidData, format!("gzip: {msg}"))
+    }
+
+    /// Consume `n` bytes of `raw` at `*pos`.
+    fn take<'a>(raw: &'a [u8], pos: &mut usize, n: usize) -> io::Result<&'a [u8]> {
+        if raw.len() - *pos < n {
+            return Err(bad("truncated stream"));
+        }
+        let s = &raw[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    }
+
+    fn decode_all(raw: &[u8]) -> io::Result<Vec<u8>> {
+        let mut pos = 0usize;
+
+        let header = take(raw, &mut pos, 10)?;
+        if header[0] != 0x1F || header[1] != 0x8B {
+            return Err(bad("bad magic"));
+        }
+        if header[2] != 8 {
+            return Err(bad("unknown compression method"));
+        }
+        let flags = header[3];
+        if flags & 0x04 != 0 {
+            // FEXTRA: two-byte length then payload.
+            let len = take(raw, &mut pos, 2)?;
+            let len = u16::from_le_bytes([len[0], len[1]]) as usize;
+            take(raw, &mut pos, len)?;
+        }
+        for flag in [0x08u8, 0x10] {
+            // FNAME / FCOMMENT: zero-terminated strings.
+            if flags & flag != 0 {
+                while take(raw, &mut pos, 1)?[0] != 0 {}
+            }
+        }
+        if flags & 0x02 != 0 {
+            take(raw, &mut pos, 2)?; // FHCRC
+        }
+
+        let mut out = Vec::new();
+        loop {
+            let first = take(raw, &mut pos, 1)?[0];
+            if (first >> 1) & 0x03 != 0 {
+                return Err(bad(
+                    "compressed deflate blocks are not supported by the vendored \
+                     flate2 shim (stored blocks only)",
+                ));
+            }
+            let len_bytes = take(raw, &mut pos, 2)?;
+            let len = u16::from_le_bytes([len_bytes[0], len_bytes[1]]);
+            let nlen_bytes = take(raw, &mut pos, 2)?;
+            let nlen = u16::from_le_bytes([nlen_bytes[0], nlen_bytes[1]]);
+            if nlen != !len {
+                return Err(bad("stored block length check failed"));
+            }
+            out.extend_from_slice(take(raw, &mut pos, len as usize)?);
+            if first & 1 != 0 {
+                break;
+            }
+        }
+
+        let crc_bytes = take(raw, &mut pos, 4)?;
+        let want_crc = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+        if crc32(&out) != want_crc {
+            return Err(bad("crc mismatch"));
+        }
+        let size_bytes = take(raw, &mut pos, 4)?;
+        let want_size =
+            u32::from_le_bytes([size_bytes[0], size_bytes[1], size_bytes[2], size_bytes[3]]);
+        if out.len() as u32 != want_size {
+            return Err(bad("length mismatch"));
+        }
+        Ok(out)
+    }
+
+    impl<R: Read> Read for GzDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if let Some(mut inner) = self.inner.take() {
+                let mut raw = Vec::new();
+                inner.read_to_end(&mut raw)?;
+                self.decoded = decode_all(&raw)?;
+            }
+            let n = buf.len().min(self.decoded.len() - self.pos);
+            buf[..n].copy_from_slice(&self.decoded[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::read::GzDecoder;
+    use super::write::GzEncoder;
+    use super::*;
+
+    fn round_trip(data: &[u8]) -> Vec<u8> {
+        let mut enc = GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(data).unwrap();
+        let stream = enc.finish().unwrap();
+        let mut out = Vec::new();
+        GzDecoder::new(&stream[..]).read_to_end(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn round_trips() {
+        assert_eq!(round_trip(b""), b"");
+        assert_eq!(round_trip(b"hello gzip\n"), b"hello gzip\n");
+        let big: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        assert_eq!(round_trip(&big), big);
+    }
+
+    #[test]
+    fn crc_corruption_detected() {
+        let mut enc = GzEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(b"payload").unwrap();
+        let mut stream = enc.finish().unwrap();
+        let n = stream.len();
+        stream[n - 6] ^= 0xFF; // flip a CRC byte
+        let mut out = Vec::new();
+        assert!(GzDecoder::new(&stream[..]).read_to_end(&mut out).is_err());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32("123456789") = 0xCBF43926 (IEEE reflected).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn rejects_compressed_blocks() {
+        // Header + a fixed-huffman block marker (BTYPE=01).
+        let stream = [0x1F, 0x8B, 0x08, 0, 0, 0, 0, 0, 0, 0xFF, 0x03];
+        let mut out = Vec::new();
+        assert!(GzDecoder::new(&stream[..]).read_to_end(&mut out).is_err());
+    }
+}
