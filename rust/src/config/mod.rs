@@ -120,12 +120,14 @@ impl Default for InferenceConfig {
     }
 }
 
-/// One metric to compute (paper §4.1).
+/// One metric to compute (paper §4.1). Resolved against the
+/// [`crate::metrics::MetricRegistry`] at load time: the registry is the
+/// single source of truth for names, families, and scales.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricConfig {
     /// Registry name, e.g. "exact_match", "bertscore", "faithfulness".
     pub name: String,
-    /// Family: "lexical" | "semantic" | "llm_judge" | "rag".
+    /// Family: "lexical" | "semantic" | "llm_judge" | "rag" | "custom".
     pub metric_type: String,
     /// Metric-specific parameters (rubric, normalization flags, ...).
     pub params: BTreeMap<String, Json>,
@@ -323,8 +325,21 @@ impl EvalTask {
             bail!("at least one metric is required");
         }
         for m in &self.metrics {
-            if !matches!(m.metric_type.as_str(), "lexical" | "semantic" | "llm_judge" | "rag") {
-                bail!("unknown metric type '{}' for metric '{}'", m.metric_type, m.name);
+            match m.metric_type.as_str() {
+                // Built-in families resolve against the shared registry
+                // right here: a typo'd metric name fails at config load,
+                // not after inference has already been paid for.
+                "lexical" | "semantic" | "llm_judge" | "rag" => {
+                    crate::metrics::builtin_registry().check(m)?;
+                }
+                // Custom metrics resolve against the runner's registry
+                // (which carries user registrations) when a run starts.
+                "custom" => {
+                    if m.name.is_empty() {
+                        bail!("custom metric with empty name");
+                    }
+                }
+                t => bail!("unknown metric type '{t}' for metric '{}'", m.name),
             }
         }
         self.scheduler.validate()?;
@@ -554,6 +569,27 @@ mod tests {
         let mut t = EvalTask::default();
         t.metrics = vec![MetricConfig::new("x", "bogus_type")];
         assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn metric_names_resolve_at_load_time() {
+        // Unknown names in built-in families fail validate() (and thus
+        // from_json), not deep inside a run after inference spend.
+        let mut t = EvalTask::default();
+        t.metrics = vec![MetricConfig::new("exact_matchh", "lexical")];
+        let err = t.validate().unwrap_err();
+        assert!(format!("{err}").contains("unknown metric"), "{err}");
+        assert!(EvalTask::from_json(&t.to_json()).is_err());
+
+        // Any name is a valid pointwise judge; custom names defer to the
+        // runner's registry.
+        let mut t = EvalTask::default();
+        t.metrics = vec![
+            MetricConfig::new("helpfulness", "llm_judge"),
+            MetricConfig::new("my_scorer", "custom"),
+        ];
+        t.validate().unwrap();
+        assert_eq!(EvalTask::from_json(&t.to_json()).unwrap(), t);
     }
 
     #[test]

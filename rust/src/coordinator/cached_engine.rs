@@ -8,22 +8,82 @@
 use crate::cache::ResponseCache;
 use crate::providers::{ApiError, InferenceEngine, InferenceRequest, InferenceResponse};
 use anyhow::Result;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// Aggregated metric-stage call traffic (judge / RAG verification calls):
+/// what actually hit the provider vs. what the cache served. This is what
+/// lets `replay`/`rescore` report judge cache traffic honestly instead of
+/// assuming everything was free.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CallStats {
+    /// Calls that reached the provider (billed).
+    pub api_calls: u64,
+    /// Calls served from the response cache.
+    pub cache_hits: u64,
+    /// Calls that failed (provider error, or a replay-mode cache miss).
+    pub failed: u64,
+    /// Provider spend across the billed calls.
+    pub cost_usd: f64,
+}
+
+impl CallStats {
+    pub fn total(&self) -> u64 {
+        self.api_calls + self.cache_hits + self.failed
+    }
+}
+
+/// Shared call meter: engines built for metric scoring report into one of
+/// these so the run can account for every judge call it triggered.
+#[derive(Debug, Default)]
+pub struct CallMeter(Mutex<CallStats>);
+
+impl CallMeter {
+    pub fn record_hit(&self) {
+        self.0.lock().unwrap().cache_hits += 1;
+    }
+
+    pub fn record_call(&self, cost_usd: f64) {
+        let mut s = self.0.lock().unwrap();
+        s.api_calls += 1;
+        s.cost_usd += cost_usd;
+    }
+
+    pub fn record_failure(&self) {
+        self.0.lock().unwrap().failed += 1;
+    }
+
+    pub fn stats(&self) -> CallStats {
+        *self.0.lock().unwrap()
+    }
+}
 
 pub struct CachedEngine<E: InferenceEngine> {
     inner: E,
     cache: Option<Arc<ResponseCache>>,
     pub hits: u64,
     pub misses: u64,
+    meter: Option<Arc<CallMeter>>,
 }
 
 impl<E: InferenceEngine> CachedEngine<E> {
     pub fn new(inner: E, cache: Option<Arc<ResponseCache>>) -> Self {
-        Self { inner, cache, hits: 0, misses: 0 }
+        Self { inner, cache, hits: 0, misses: 0, meter: None }
+    }
+
+    /// Report every call's outcome (hit / billed / failed) into `meter`.
+    pub fn with_meter(mut self, meter: Arc<CallMeter>) -> Self {
+        self.meter = Some(meter);
+        self
     }
 
     pub fn inner(&self) -> &E {
         &self.inner
+    }
+
+    fn record(&self, f: impl FnOnce(&CallMeter)) {
+        if let Some(m) = &self.meter {
+            f(m);
+        }
     }
 }
 
@@ -39,6 +99,7 @@ impl<E: InferenceEngine> InferenceEngine for CachedEngine<E> {
             {
                 Ok(Some(entry)) => {
                     self.hits += 1;
+                    self.record(|m| m.record_hit());
                     return Ok(InferenceResponse {
                         text: entry.response_text,
                         input_tokens: entry.input_tokens,
@@ -51,10 +112,20 @@ impl<E: InferenceEngine> InferenceEngine for CachedEngine<E> {
                     self.misses += 1;
                 }
                 // Replay-mode miss: surface as a non-recoverable error.
-                Err(e) => return Err(ApiError::InvalidRequest(format!("{e}"))),
+                Err(e) => {
+                    self.record(|m| m.record_failure());
+                    return Err(ApiError::InvalidRequest(format!("{e}")));
+                }
             }
         }
-        let resp = self.inner.infer(request)?;
+        let resp = match self.inner.infer(request) {
+            Ok(resp) => resp,
+            Err(e) => {
+                self.record(|m| m.record_failure());
+                return Err(e);
+            }
+        };
+        self.record(|m| m.record_call(resp.cost_usd));
         if let Some(cache) = &self.cache {
             let _ = cache.put(
                 &request.prompt,
@@ -137,5 +208,32 @@ mod tests {
         let req = InferenceRequest::new("x");
         assert!(e.infer(&req).is_ok());
         assert_eq!(e.hits + e.misses, 0);
+    }
+
+    #[test]
+    fn meter_separates_billed_from_served() {
+        let cache = tmp_cache("meter", CachePolicy::Enabled);
+        let meter = Arc::new(CallMeter::default());
+        let mut e = CachedEngine::new(sim_engine(), Some(cache)).with_meter(meter.clone());
+        let req = InferenceRequest::new("Question: what is the capital of chile?");
+        e.infer(&req).unwrap();
+        e.infer(&req).unwrap();
+        let s = meter.stats();
+        assert_eq!(s.api_calls, 1);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.failed, 0);
+        assert!(s.cost_usd > 0.0);
+        assert_eq!(s.total(), 2);
+    }
+
+    #[test]
+    fn meter_counts_replay_misses_as_failures() {
+        let cache = tmp_cache("meter-replay", CachePolicy::Replay);
+        let meter = Arc::new(CallMeter::default());
+        let mut e = CachedEngine::new(sim_engine(), Some(cache)).with_meter(meter.clone());
+        assert!(e.infer(&InferenceRequest::new("cold")).is_err());
+        let s = meter.stats();
+        assert_eq!((s.api_calls, s.cache_hits, s.failed), (0, 0, 1));
+        assert_eq!(s.cost_usd, 0.0);
     }
 }

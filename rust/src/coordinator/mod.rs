@@ -13,7 +13,7 @@ pub mod result;
 pub mod runner;
 pub mod streaming;
 
-pub use cached_engine::CachedEngine;
+pub use cached_engine::{CachedEngine, CallMeter, CallStats};
 pub use compare::compare_results;
 pub use pairwise::{PairVerdict, PairwiseResult};
 pub use result::{ComparisonResult, EvalResult, InferenceStats, MetricComparison, MetricValue};
@@ -153,6 +153,29 @@ mod tests {
         let j = result.metric("helpfulness").unwrap();
         assert!(j.n > 0);
         assert!((1.0..=5.0).contains(&j.value), "judge mean {}", j.value);
+        // The scale-misclassification fix: a plainly named judge metric
+        // carries Ordinal scale (it used to fall back to Complex and get
+        // the wrong significance machinery).
+        assert_eq!(
+            result.report("helpfulness").unwrap().scale,
+            crate::stats::MetricScale::Ordinal
+        );
+        // Judge traffic is accounted, not assumed: 60 billed calls.
+        assert_eq!(result.metric_calls.api_calls, 60);
+        assert!(result.metric_calls.cost_usd > 0.0);
+        assert_eq!(result.metric_calls.cache_hits, 0);
+    }
+
+    #[test]
+    fn unknown_metric_name_fails_at_load_time() {
+        // Resolution happens before stage 1: no inference is paid for a
+        // typo'd metric. ("custom" family defers to the runner registry,
+        // so an unregistered custom name must fail in evaluate.)
+        let df = synth::generate_default(10, 42);
+        let mut task = EvalTask::default();
+        task.metrics = vec![MetricConfig::new("not_registered", "custom")];
+        let err = fast_runner().evaluate(&df, &task).unwrap_err();
+        assert!(format!("{err}").contains("unknown metric"), "{err}");
     }
 
     #[test]
@@ -320,5 +343,168 @@ mod tests {
         let r = runner.evaluate(&other, &durable_task()).unwrap();
         assert_eq!(r.inference.sched.restored_rows, 0);
         assert_eq!(r.inference.api_calls, 40);
+    }
+
+    // ------------------------------------------------------------- rescore
+
+    #[test]
+    fn rescore_from_cache_is_free_and_bit_identical() {
+        let dir = tmp_dir("rescore-cache");
+        let df = synth::generate_default(80, 61);
+        let mut task = EvalTask::default();
+        task.metrics = vec![
+            MetricConfig::new("exact_match", "lexical"),
+            MetricConfig::new("helpfulness", "llm_judge")
+                .with_param("rubric", crate::util::json::Json::str("Rate helpfulness 1-5")),
+        ];
+
+        // Live run: pays for inference + judge calls, populates the cache.
+        let mut runner = fast_runner();
+        runner.open_cache(&dir, CachePolicy::Enabled).unwrap();
+        let live = runner.evaluate(&df, &task).unwrap();
+        assert!(live.inference.api_calls > 0);
+        // One judge call per example; duplicates may hit the warming cache.
+        assert!(live.metric_calls.api_calls > 0);
+        assert_eq!(live.metric_calls.api_calls + live.metric_calls.cache_hits, 80);
+
+        // Rescore under a strict replay cache: add a new pure metric —
+        // zero API calls anywhere, and the unchanged metrics come back
+        // bit-identical (values AND bootstrap CIs: same seed, same data).
+        let mut task2 = task.clone();
+        task2.metrics.push(MetricConfig::new("rouge_l", "lexical"));
+        let mut runner2 = fast_runner();
+        runner2.open_cache(&dir, CachePolicy::Replay).unwrap();
+        let re = runner2.rescore(&df, &task2, false).unwrap();
+        assert_eq!(re.inference.api_calls, 0);
+        assert_eq!(re.inference.total_cost_usd, 0.0);
+        assert_eq!(re.inference.cache_hits as usize, df.len());
+        assert_eq!(re.metric_calls.api_calls, 0, "judge calls must replay from cache");
+        assert_eq!(re.metric_calls.cache_hits, 80);
+        assert_eq!(re.inference.failed, 0);
+
+        for name in ["exact_match", "helpfulness"] {
+            let (a, b) = (live.report(name).unwrap(), re.report(name).unwrap());
+            assert_eq!(a.values, b.values, "{name} per-row values");
+            assert_eq!(a.scale, b.scale);
+            let (ma, mb) = (live.metric(name).unwrap(), re.metric(name).unwrap());
+            assert_eq!(ma.value, mb.value, "{name} point estimate");
+            assert_eq!((ma.ci.lo, ma.ci.hi), (mb.ci.lo, mb.ci.hi), "{name} CI");
+        }
+        // The new metric scored the full frame without inference.
+        assert_eq!(re.metric("rouge_l").unwrap().n, 80);
+    }
+
+    #[test]
+    fn rescore_from_checkpoint_needs_no_cache() {
+        let n = 60;
+        let dir = tmp_dir("rescore-ckpt");
+        let df = synth::generate_default(n, 62);
+        // Cache disabled: the checkpoint is the only response source.
+        let task = durable_task();
+
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, false).unwrap();
+        let live = runner.evaluate(&df, &task).unwrap();
+        assert_eq!(live.inference.api_calls, n as u64);
+
+        let mut runner2 = fast_runner();
+        runner2.attach_checkpoint(&dir, true).unwrap();
+        let mut task2 = task.clone();
+        task2.metrics.push(MetricConfig::new("token_f1", "lexical"));
+        let re = runner2.rescore(&df, &task2, false).unwrap();
+        assert_eq!(re.inference.api_calls, 0);
+        assert_eq!(re.inference.sched.restored_rows, n);
+        assert_eq!(re.inference.cache_hits, 0, "no cache lookups when restored");
+        assert_eq!(re.reports[0].values, live.reports[0].values);
+        assert_eq!(
+            live.metric("exact_match").unwrap().value,
+            re.metric("exact_match").unwrap().value
+        );
+        assert_eq!(re.metric("token_f1").unwrap().n, n);
+    }
+
+    #[test]
+    fn rescore_without_sources_fails_unless_missing_allowed() {
+        let df = synth::generate_default(12, 63);
+        let task = EvalTask::default();
+        // No cache, no checkpoint: a clear error naming both sources.
+        let err = fast_runner().rescore(&df, &task, false).unwrap_err();
+        assert!(format!("{err:#}").contains("response source"), "{err:#}");
+
+        // Cold cache, strict: per-row miss error.
+        let dir = tmp_dir("rescore-cold");
+        let mut runner = fast_runner();
+        runner.open_cache(&dir, CachePolicy::Enabled).unwrap();
+        let err = runner.rescore(&df, &task, false).unwrap_err();
+        assert!(format!("{err:#}").contains("rescore"), "{err:#}");
+
+        // Cold cache, --allow-missing: every row scores as failed.
+        let re = runner.rescore(&df, &task, true).unwrap();
+        assert_eq!(re.inference.failed, 12);
+        assert_eq!(re.failed_examples.len(), 12);
+        assert_eq!(re.metric("exact_match").unwrap().n, 0);
+    }
+
+    #[test]
+    fn custom_metric_through_evaluate_and_rescore() {
+        use crate::metrics::{Metric, MetricContext, MetricRequirements, ScoreBatch};
+        use crate::stats::MetricScale;
+
+        struct ResponseWords;
+        impl Metric for ResponseWords {
+            fn name(&self) -> &str {
+                "response_words"
+            }
+            fn scale(&self) -> MetricScale {
+                MetricScale::Continuous
+            }
+            fn requirements(&self) -> MetricRequirements {
+                MetricRequirements::Pure
+            }
+            fn score_batch(
+                &self,
+                _ctx: &MetricContext<'_>,
+                examples: &[crate::metrics::Example],
+            ) -> anyhow::Result<ScoreBatch> {
+                Ok(ScoreBatch::scored(
+                    examples
+                        .iter()
+                        .map(|ex| Some(ex.response.split_whitespace().count() as f64))
+                        .collect(),
+                ))
+            }
+        }
+
+        let dir = tmp_dir("rescore-custom");
+        let df = synth::generate_default(50, 64);
+        let mut task = EvalTask::default();
+        task.metrics = vec![
+            MetricConfig::new("exact_match", "lexical"),
+            MetricConfig::new("response_words", "custom"),
+        ];
+
+        let mut runner = fast_runner();
+        runner.registry.register_metric("custom", std::sync::Arc::new(ResponseWords));
+        runner.open_cache(&dir, CachePolicy::Enabled).unwrap();
+        let live = runner.evaluate(&df, &task).unwrap();
+        let lw = live.metric("response_words").unwrap();
+        assert_eq!(lw.n, 50);
+        assert!(lw.value > 0.0);
+
+        // Fresh runner, same registration: rescore from cache produces an
+        // identical custom-metric report (values and CI).
+        let mut runner2 = fast_runner();
+        runner2.registry.register_metric("custom", std::sync::Arc::new(ResponseWords));
+        runner2.open_cache(&dir, CachePolicy::Replay).unwrap();
+        let re = runner2.rescore(&df, &task, false).unwrap();
+        assert_eq!(re.inference.api_calls, 0);
+        assert_eq!(
+            live.report("response_words").unwrap().values,
+            re.report("response_words").unwrap().values
+        );
+        let (ma, mb) =
+            (live.metric("response_words").unwrap(), re.metric("response_words").unwrap());
+        assert_eq!(ma.value, mb.value);
+        assert_eq!((ma.ci.lo, ma.ci.hi), (mb.ci.lo, mb.ci.hi));
     }
 }

@@ -1,5 +1,6 @@
 //! Result types produced by the evaluation runner.
 
+use super::cached_engine::CallStats;
 use crate::metrics::MetricReport;
 use crate::sched::{SchedulerStats, TaskRecord};
 use crate::stats::{ConfidenceInterval, EffectSize, TestChoice, TestResult};
@@ -79,6 +80,10 @@ pub struct EvalResult {
     pub metrics: Vec<MetricValue>,
     pub reports: Vec<MetricReport>,
     pub inference: InferenceStats,
+    /// Metric-stage call traffic (judge / RAG verification calls): billed
+    /// provider calls, cache hits, failures, spend. Inference-stage calls
+    /// are accounted separately in [`InferenceStats`].
+    pub metric_calls: CallStats,
     /// Indices of examples whose inference failed non-recoverably.
     pub failed_examples: Vec<usize>,
     /// Total wall time of all four stages, seconds.
@@ -114,6 +119,15 @@ impl EvalResult {
                     ("latency_p50_ms", Json::num(self.inference.latency_p50_ms)),
                     ("latency_p99_ms", Json::num(self.inference.latency_p99_ms)),
                     ("throughput_per_min", Json::num(self.inference.throughput_per_min)),
+                ]),
+            ),
+            (
+                "metric_calls",
+                Json::obj(vec![
+                    ("api_calls", Json::num(self.metric_calls.api_calls as f64)),
+                    ("cache_hits", Json::num(self.metric_calls.cache_hits as f64)),
+                    ("failed", Json::num(self.metric_calls.failed as f64)),
+                    ("cost_usd", Json::num(self.metric_calls.cost_usd)),
                 ]),
             ),
             ("scheduler", self.inference.sched.to_json()),

@@ -5,16 +5,19 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
-use super::cached_engine::CachedEngine;
+use super::cached_engine::{CachedEngine, CallMeter};
 use super::result::{EvalResult, InferenceStats, MetricValue};
 use crate::cache::ResponseCache;
 use crate::checkpoint::{fingerprint_sha256, RunCheckpoint, StageCheckpoint};
 use crate::config::{CachePolicy, CiMethod, EvalTask, MetricConfig};
 use crate::data::{DataFrame, Value};
 use crate::engine::{BatchSlice, Progress};
-use crate::metrics::{self, Example, MetricReport};
+use crate::metrics::{
+    Example, JudgeBroker, MetricContext, MetricRegistry, MetricReport, MetricRequirements,
+    ResolvedMetric, ScoreBatch,
+};
 use crate::sched::{run_scheduled, run_scheduled_ext, TaskCheckpoint, TaskSink};
 use crate::providers::retry::{infer_with_retry, RetryPolicy};
 use crate::providers::simulated::{SimEngine, SimService, SimServiceConfig};
@@ -76,6 +79,11 @@ pub struct EvalRunner {
     services: Mutex<std::collections::BTreeMap<String, Arc<SimService>>>,
     pub cache: Option<Arc<ResponseCache>>,
     pub runtime: Option<SemanticRuntime>,
+    /// The metric registry every configured metric resolves through —
+    /// starts with all built-ins; register custom metrics here
+    /// ([`MetricRegistry::register_metric`]) before calling
+    /// [`EvalRunner::evaluate`] / [`EvalRunner::rescore`].
+    pub registry: MetricRegistry,
     /// Optional driver-side progress counter: the scheduler advances it as
     /// inference tasks complete, so long/streaming jobs can report real
     /// progress from another thread.
@@ -102,6 +110,7 @@ impl EvalRunner {
             services: Mutex::new(Default::default()),
             cache: None,
             runtime: None,
+            registry: MetricRegistry::with_builtins(),
             progress: None,
             checkpoint: None,
             abort: None,
@@ -534,8 +543,11 @@ impl EvalRunner {
             .collect()
     }
 
-    /// Compute one configured metric over all examples. Examples whose
-    /// inference failed score `None`.
+    /// Compute one configured metric over all examples: resolve through
+    /// the registry, then score. Examples whose inference failed score
+    /// `None`. (Callers computing several metrics should resolve once via
+    /// [`MetricRegistry::resolve_task`] and use
+    /// [`EvalRunner::compute_resolved`] with a shared meter.)
     pub fn compute_metric(
         &self,
         config: &MetricConfig,
@@ -543,30 +555,34 @@ impl EvalRunner {
         task: &EvalTask,
         failed: &[bool],
     ) -> Result<MetricReport> {
-        metrics::validate_metric(config)?;
-        let name = config.name.as_str();
-        let mask = |mut values: Vec<Option<f64>>| -> Vec<Option<f64>> {
-            for (v, &f) in values.iter_mut().zip(failed) {
-                if f {
-                    *v = None;
-                }
-            }
-            values
-        };
+        let metric = self.registry.resolve(config)?;
+        self.compute_resolved(&metric, examples, task, failed, &Arc::new(CallMeter::default()))
+    }
 
-        let (values, scale, unparseable) = match config.metric_type.as_str() {
-            "lexical" => {
-                let norm = if config.param_bool("normalize", true) {
-                    metrics::lexical::Normalize::default()
-                } else {
-                    metrics::lexical::Normalize::none()
-                };
-                // Distributed lexical stage.
+    /// Score one resolved metric. Dispatch is driven by the metric's
+    /// declared requirements, not its name:
+    ///
+    /// - `Pure` metrics run as scheduler tasks across executors (the
+    ///   distributed metric stage — rescoring large frames scales like
+    ///   inference does);
+    /// - `Runtime` metrics batch on the driver through the PJRT runtime;
+    /// - `Judge` metrics get a cache-wrapped, metered judge engine.
+    pub fn compute_resolved(
+        &self,
+        metric: &ResolvedMetric,
+        examples: &[Example],
+        task: &EvalTask,
+        failed: &[bool],
+        meter: &Arc<CallMeter>,
+    ) -> Result<MetricReport> {
+        let out = match metric.requirements() {
+            MetricRequirements::Pure => {
                 let df = DataFrame::from_columns(vec![(
                     "i",
                     (0..examples.len() as i64).map(Value::Int).collect::<Vec<_>>(),
                 )])?;
-                let out = run_scheduled(
+                let m = metric.clone();
+                let sched_out = run_scheduled(
                     &df,
                     task.executors,
                     task.inference.batch_size,
@@ -574,101 +590,70 @@ impl EvalRunner {
                     None,
                     |_| Ok(()),
                     |_, _df, slice| {
-                        Ok(slice
-                            .indices()
-                            .map(|i| {
-                                let ex = &examples[i];
-                                let v = match name {
-                                    "exact_match" => {
-                                        metrics::lexical::exact_match(&ex.response, &ex.reference, norm)
-                                    }
-                                    "contains" => {
-                                        metrics::lexical::contains(&ex.response, &ex.reference, norm)
-                                    }
-                                    "token_f1" => metrics::lexical::token_f1(&ex.response, &ex.reference),
-                                    "bleu" => metrics::lexical::bleu(&ex.response, &ex.reference),
-                                    "rouge_l" => metrics::lexical::rouge_l(&ex.response, &ex.reference),
-                                    _ => unreachable!("validated"),
-                                };
-                                Some(v)
-                            })
-                            .collect())
+                        let batch =
+                            m.score_batch(&MetricContext::detached(), &examples[slice.indices()])?;
+                        anyhow::ensure!(
+                            batch.values.len() == slice.len(),
+                            "metric '{}' returned {} values for a {}-row batch",
+                            m.name(),
+                            batch.values.len(),
+                            slice.len()
+                        );
+                        // `unparseable` counts unparseable *judge*
+                        // responses; a pure metric has none, and a batch
+                        // count could not survive speculative duplicate
+                        // attempts anyway. Unscorable rows are `None`s.
+                        anyhow::ensure!(
+                            batch.unparseable == 0,
+                            "pure metric '{}' reported {} unparseable responses; \
+                             pure metrics must score unscorable rows as None",
+                            m.name(),
+                            batch.unparseable
+                        );
+                        Ok(batch.values)
                     },
                 )?;
-                let scale = metrics::metric_scale(name);
-                (mask(out.rows), scale, 0)
+                ScoreBatch::scored(sched_out.rows)
             }
-            "semantic" => {
-                let runtime = self
-                    .runtime
-                    .as_ref()
-                    .ok_or_else(|| anyhow!("semantic metric '{name}' needs the PJRT runtime (make artifacts)"))?;
-                let values = match name {
-                    "embedding_similarity" => {
-                        metrics::semantic::embedding_similarity_batch(runtime, examples)?
-                    }
-                    "bertscore" => metrics::semantic::bertscore_batch(runtime, examples)?,
-                    _ => unreachable!("validated"),
+            MetricRequirements::Runtime => {
+                let ctx = MetricContext {
+                    runtime: self.runtime.as_ref(),
+                    judge: None,
+                    default_provider: &task.model.provider,
+                    default_model: &task.model.model_name,
                 };
-                (mask(values), MetricScale::Continuous, 0)
+                metric.score_batch(&ctx, examples)?
             }
-            "llm_judge" => {
-                let rubric = config.param_str("rubric").unwrap_or("overall quality").to_string();
-                let provider = config
-                    .param_str("judge_provider")
-                    .unwrap_or(&task.model.provider)
-                    .to_string();
-                let model = config
-                    .param_str("judge_model")
-                    .unwrap_or(&task.model.model_name)
-                    .to_string();
-                let engine = self.make_engine(&provider, &model)?;
-                let mut cached = CachedEngine::new(engine, self.cache.clone());
-                let outcome =
-                    metrics::judge::grade_pointwise(&mut cached, &rubric, examples, 256);
-                (mask(outcome.scores), MetricScale::Ordinal, outcome.unparseable)
-            }
-            "rag" => {
-                let provider = config
-                    .param_str("judge_provider")
-                    .unwrap_or(&task.model.provider)
-                    .to_string();
-                let model = config
-                    .param_str("judge_model")
-                    .unwrap_or(&task.model.model_name)
-                    .to_string();
-                let values: Vec<Option<f64>> = match name {
-                    "context_precision" => {
-                        examples.iter().map(metrics::rag::context_precision).collect()
-                    }
-                    "context_recall" => examples.iter().map(metrics::rag::context_recall).collect(),
-                    "answer_relevance" => {
-                        let runtime = self.runtime.as_ref().ok_or_else(|| {
-                            anyhow!("answer_relevance needs the PJRT runtime")
-                        })?;
-                        metrics::semantic::answer_relevance_batch(runtime, examples)?
-                    }
-                    "faithfulness" => {
-                        let engine = self.make_engine(&provider, &model)?;
-                        let mut cached = CachedEngine::new(engine, self.cache.clone());
-                        examples.iter().map(|ex| metrics::rag::faithfulness(&mut cached, ex)).collect()
-                    }
-                    "context_relevance" => {
-                        let engine = self.make_engine(&provider, &model)?;
-                        let mut cached = CachedEngine::new(engine, self.cache.clone());
-                        examples
-                            .iter()
-                            .map(|ex| metrics::rag::context_relevance(&mut cached, ex))
-                            .collect()
-                    }
-                    _ => unreachable!("validated"),
+            MetricRequirements::Judge => {
+                let broker = RunnerJudgeBroker { runner: self, meter: meter.clone() };
+                let ctx = MetricContext {
+                    runtime: self.runtime.as_ref(),
+                    judge: Some(&broker),
+                    default_provider: &task.model.provider,
+                    default_model: &task.model.model_name,
                 };
-                (mask(values), metrics::metric_scale(name), 0)
+                metric.score_batch(&ctx, examples)?
             }
-            _ => unreachable!("validated"),
         };
-
-        Ok(MetricReport { name: name.to_string(), values, scale, unparseable })
+        let mut values = out.values;
+        anyhow::ensure!(
+            values.len() == examples.len(),
+            "metric '{}' returned {} values for {} examples",
+            metric.name(),
+            values.len(),
+            examples.len()
+        );
+        for (v, &f) in values.iter_mut().zip(failed) {
+            if f {
+                *v = None;
+            }
+        }
+        Ok(MetricReport {
+            name: metric.name().to_string(),
+            values,
+            scale: metric.scale(),
+            unparseable: out.unparseable,
+        })
     }
 
     // ---------------------------------------------------------------- stage 4
@@ -753,6 +738,9 @@ impl EvalRunner {
     /// Full 4-stage evaluation (the paper's `runner.evaluate(df, task)`).
     pub fn evaluate(&self, df: &DataFrame, task: &EvalTask) -> Result<EvalResult> {
         task.validate()?;
+        // Load-time metric resolution: a typo'd or unregistered metric
+        // name fails here, before any inference spend.
+        let resolved = self.registry.resolve_task(task)?;
         let t0 = self.clock.now();
 
         // Stage 1: prompt preparation.
@@ -760,21 +748,39 @@ impl EvalRunner {
 
         // Stage 2: distributed inference.
         let (inference_rows, inf_stats) = self.run_inference(&prompts, task)?;
+
+        self.score_and_aggregate(df, task, &resolved, prompts, inference_rows, inf_stats, t0)
+    }
+
+    /// Stages 3–4 over already-obtained responses, shared by
+    /// [`EvalRunner::evaluate`] and [`EvalRunner::rescore`].
+    #[allow(clippy::too_many_arguments)]
+    fn score_and_aggregate(
+        &self,
+        df: &DataFrame,
+        task: &EvalTask,
+        resolved: &[ResolvedMetric],
+        prompts: Vec<String>,
+        inference_rows: Vec<RowInference>,
+        inf_stats: InferenceStats,
+        t0: f64,
+    ) -> Result<EvalResult> {
         let failed: Vec<bool> = inference_rows.iter().map(|r| r.response.is_none()).collect();
         let failed_examples: Vec<usize> =
             failed.iter().enumerate().filter(|(_, &f)| f).map(|(i, _)| i).collect();
 
-        // Stage 3: metric computation.
+        // Stage 3: metric computation (one shared judge-call meter).
         let examples = self.build_examples(df, task, &prompts, &inference_rows);
-        let mut reports = Vec::with_capacity(task.metrics.len());
-        for mc in &task.metrics {
-            reports.push(self.compute_metric(mc, &examples, task, &failed)?);
+        let meter = Arc::new(CallMeter::default());
+        let mut reports = Vec::with_capacity(resolved.len());
+        for metric in resolved {
+            reports.push(self.compute_resolved(metric, &examples, task, &failed, &meter)?);
         }
 
         // Stage 4: statistical aggregation.
         let metrics: Vec<MetricValue> = reports.iter().map(|r| self.aggregate(r, task)).collect();
 
-        // Flush cache writes so a following replay run sees them.
+        // Flush cache writes so a following replay/rescore run sees them.
         if let Some(cache) = &self.cache {
             cache.flush()?;
         }
@@ -786,9 +792,186 @@ impl EvalRunner {
             metrics,
             reports,
             inference: inf_stats,
+            metric_calls: meter.stats(),
             failed_examples,
             wall_secs: self.clock.now() - t0,
         })
+    }
+
+    // ---------------------------------------------------------------- rescore
+
+    /// Score-from-cache pipeline: recompute any metric set over responses
+    /// rehydrated from the response cache and/or an attached run
+    /// checkpoint — the inference stage is replaced by lookups and
+    /// **never calls a provider**. This is the paper's "iterate on metric
+    /// definitions without re-running inference" claim as a first-class
+    /// stage: pure metrics score as distributed scheduler tasks, judge
+    /// metrics flow through the (metered) cache, and aggregation runs
+    /// fresh bootstrap CIs with the task's seed, so a rescore of an
+    /// unchanged metric is bit-identical to the live run.
+    ///
+    /// `allow_missing`: score rows with no cached/checkpointed response
+    /// as failed examples instead of erroring (useful when the live run
+    /// itself had failed rows, which never reach the cache).
+    pub fn rescore(
+        &self,
+        df: &DataFrame,
+        task: &EvalTask,
+        allow_missing: bool,
+    ) -> Result<EvalResult> {
+        task.validate()?;
+        let resolved = self.registry.resolve_task(task)?;
+        let t0 = self.clock.now();
+
+        let prompts = self.prepare_prompts(df, task)?;
+        let (rows, stats) = self.rehydrate_responses(&prompts, task, allow_missing)?;
+        self.score_and_aggregate(df, task, &resolved, prompts, rows, stats, t0)
+    }
+
+    /// Rehydrate per-row responses without inference: ranges recorded in
+    /// an attached run checkpoint restore directly (same content-addressed
+    /// stage key as [`EvalRunner::run_inference`]); everything else is a
+    /// distributed cache lookup.
+    fn rehydrate_responses(
+        &self,
+        prompts: &[String],
+        task: &EvalTask,
+        allow_missing: bool,
+    ) -> Result<(Vec<RowInference>, InferenceStats)> {
+        let t0 = self.clock.now();
+        let wall0 = std::time::Instant::now();
+        let df = DataFrame::from_columns(vec![(
+            "prompt",
+            prompts.iter().map(|p| Value::Str(p.clone())).collect(),
+        )])?;
+        let cache = self.cache.clone();
+        let model_cfg = task.model.clone();
+
+        // Same stage fingerprint as run_inference, so `--checkpoint` on a
+        // (possibly interrupted) run directory rehydrates its completed
+        // ranges byte-identically.
+        let temperature = format!("{:.6}", model_cfg.temperature);
+        let max_tokens = model_cfg.max_tokens.to_string();
+        let mut parts: Vec<&str> = vec![
+            "inference",
+            &model_cfg.provider,
+            &model_cfg.model_name,
+            &temperature,
+            &max_tokens,
+        ];
+        parts.extend(prompts.iter().map(|p| p.as_str()));
+        let (_stage, restored) =
+            self.open_checkpoint_stage("infer", parts, prompts.len(), &RowInference::from_json)?;
+        let restored_spans: Vec<(usize, usize)> =
+            restored.iter().map(|(s, e, _)| (*s, *e)).collect();
+        // Read-only restore: rescore never writes to the run checkpoint.
+        let checkpoint =
+            (!restored.is_empty()).then_some(TaskCheckpoint { restored, sink: None });
+
+        if cache.is_none() && checkpoint.is_none() {
+            bail!(
+                "rescore has no response source: open a cache (--cache-dir) \
+                 and/or attach a run checkpoint (--checkpoint)"
+            );
+        }
+
+        let out = run_scheduled_ext(
+            &df,
+            task.executors,
+            task.inference.batch_size,
+            &task.scheduler,
+            self.progress.as_deref(),
+            checkpoint,
+            None,
+            |_eid| Ok(()),
+            |_, df, slice| {
+                let mut rows = Vec::with_capacity(slice.len());
+                for i in slice.indices() {
+                    let prompt = df.row(i).str("prompt");
+                    let entry = match &cache {
+                        Some(cache) => match cache.get(
+                            prompt,
+                            &model_cfg.model_name,
+                            &model_cfg.provider,
+                            model_cfg.temperature,
+                            model_cfg.max_tokens,
+                        ) {
+                            Ok(found) => found,
+                            Err(_) if allow_missing => None,
+                            Err(e) => return Err(e),
+                        },
+                        None => None,
+                    };
+                    match entry {
+                        Some(entry) => rows.push(RowInference {
+                            response: Some(entry.response_text),
+                            from_cache: true,
+                            latency_ms: 0.0,
+                            cost_usd: 0.0,
+                            attempts: 0,
+                            error: None,
+                        }),
+                        None if allow_missing => rows.push(RowInference {
+                            response: None,
+                            from_cache: false,
+                            latency_ms: 0.0,
+                            cost_usd: 0.0,
+                            attempts: 0,
+                            error: Some("rescore: no cached response".into()),
+                        }),
+                        None => bail!(
+                            "rescore: no cached/checkpointed response for example {i} \
+                             (run `slleval run` with caching or checkpointing first, \
+                             or pass --allow-missing)"
+                        ),
+                    }
+                }
+                Ok(rows)
+            },
+        )?;
+
+        let wall = (self.clock.now() - t0).max(wall0.elapsed().as_secs_f64()).max(1e-9);
+        let rows = out.rows;
+        let mut stats = InferenceStats {
+            examples: rows.len(),
+            wall_secs: wall,
+            throughput_per_min: rows.len() as f64 / wall * 60.0,
+            sched: out.sched,
+            timeline: out.timeline,
+            ..Default::default()
+        };
+        // Zero API calls by construction; account lookup traffic only.
+        // Checkpoint-restored ranges were not cache lookups this run —
+        // they are reported via `sched.restored_rows` instead. Rows
+        // without a response count as failed wherever they came from
+        // (a checkpointed run's own failures restore as response-less
+        // rows), keeping `failed` consistent with `failed_examples`.
+        let in_restored = |i: usize| restored_spans.iter().any(|&(s, e)| i >= s && i < e);
+        for (i, r) in rows.iter().enumerate() {
+            if r.response.is_none() {
+                stats.failed += 1;
+            } else if r.from_cache && !in_restored(i) {
+                stats.cache_hits += 1;
+            }
+        }
+        Ok((rows, stats))
+    }
+}
+
+/// Builds cache-wrapped, metered judge engines for metric scoring: every
+/// judge/RAG call flows through the runner's provider services and
+/// response cache, and its traffic lands in the run's [`CallMeter`].
+struct RunnerJudgeBroker<'a> {
+    runner: &'a EvalRunner,
+    meter: Arc<CallMeter>,
+}
+
+impl JudgeBroker for RunnerJudgeBroker<'_> {
+    fn engine(&self, provider: &str, model: &str) -> Result<Box<dyn InferenceEngine>> {
+        let engine = self.runner.make_engine(provider, model)?;
+        Ok(Box::new(
+            CachedEngine::new(engine, self.runner.cache.clone()).with_meter(self.meter.clone()),
+        ))
     }
 }
 

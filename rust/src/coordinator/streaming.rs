@@ -9,6 +9,7 @@
 //! large datasets where an early stop ("the CI is already tight enough /
 //! the regression is already significant") saves real money.
 
+use super::cached_engine::{CallMeter, CallStats};
 use super::runner::EvalRunner;
 use crate::config::EvalTask;
 use crate::data::DataFrame;
@@ -31,6 +32,9 @@ pub struct StreamUpdate {
     pub cache_hits: u64,
     pub cost_usd: f64,
     pub failed: u64,
+    /// Cumulative metric-stage call traffic (judge / RAG verification
+    /// calls) over the chunks processed so far.
+    pub judge_calls: CallStats,
     /// Cumulative scheduler telemetry (stealing / speculation / retries)
     /// across the chunks processed so far.
     pub sched: SchedulerStats,
@@ -70,6 +74,10 @@ impl EvalRunner {
         F: FnMut(&StreamUpdate) -> StreamControl,
     {
         task.validate()?;
+        // Load-time metric resolution (names, scales, requirements all
+        // come from the registry — no per-chunk name dispatch).
+        let resolved = self.registry.resolve_task(task)?;
+        let meter = std::sync::Arc::new(CallMeter::default());
         let chunk_size = chunk_size.max(1);
         let total = df.len();
         let prompts = self.prepare_prompts(df, task)?;
@@ -85,6 +93,7 @@ impl EvalRunner {
             cache_hits: 0,
             cost_usd: 0.0,
             failed: 0,
+            judge_calls: CallStats::default(),
             sched: SchedulerStats::default(),
         };
 
@@ -98,8 +107,8 @@ impl EvalRunner {
             let (rows, stats) = self.run_inference(&chunk_prompts, task)?;
             let failed: Vec<bool> = rows.iter().map(|r| r.response.is_none()).collect();
             let examples = self.build_examples(&chunk_df, task, &chunk_prompts, &rows);
-            for (mi, mc) in task.metrics.iter().enumerate() {
-                let report = self.compute_metric(mc, &examples, task, &failed)?;
+            for (mi, metric) in resolved.iter().enumerate() {
+                let report = self.compute_resolved(metric, &examples, task, &failed, &meter)?;
                 unparseable[mi] += report.unparseable;
                 all_values[mi].extend(report.values);
             }
@@ -109,6 +118,9 @@ impl EvalRunner {
             update.cache_hits += stats.cache_hits;
             update.cost_usd += stats.total_cost_usd;
             update.failed += stats.failed;
+            // The meter is shared across chunks, so its stats are already
+            // cumulative.
+            update.judge_calls = meter.stats();
             update.sched.merge(&stats.sched);
             update.running = task
                 .metrics
@@ -116,7 +128,7 @@ impl EvalRunner {
                 .enumerate()
                 .map(|(mi, mc)| {
                     let scored: Vec<f64> = all_values[mi].iter().filter_map(|v| *v).collect();
-                    let scale = crate::metrics::metric_scale(&mc.name);
+                    let scale = resolved[mi].scale();
                     let ci = if scored.is_empty() {
                         ConfidenceInterval {
                             point: f64::NAN,
@@ -146,14 +158,13 @@ impl EvalRunner {
             }
         }
 
-        let reports: Vec<MetricReport> = task
-            .metrics
+        let reports: Vec<MetricReport> = resolved
             .iter()
             .enumerate()
-            .map(|(mi, mc)| MetricReport {
-                name: mc.name.clone(),
+            .map(|(mi, metric)| MetricReport {
+                name: metric.name().to_string(),
                 values: all_values[mi].clone(),
-                scale: crate::metrics::metric_scale(&mc.name),
+                scale: metric.scale(),
                 unparseable: unparseable[mi],
             })
             .collect();
@@ -205,6 +216,26 @@ mod tests {
         let streamed_mean =
             reports[0].scored().iter().sum::<f64>() / reports[0].n_scored() as f64;
         assert!((streamed_mean - batch.metric("exact_match").unwrap().value).abs() < 1e-12);
+    }
+
+    #[test]
+    fn judge_traffic_surfaces_in_updates() {
+        let runner = fast_runner();
+        let df = synth::generate_default(60, 96);
+        let mut task = EvalTask::default();
+        task.metrics = vec![MetricConfig::new("helpfulness", "llm_judge")];
+        let mut seen = Vec::new();
+        let (reports, last) = runner
+            .evaluate_streaming(&df, &task, 20, |u| {
+                seen.push(u.judge_calls.total());
+                StreamControl::Continue
+            })
+            .unwrap();
+        // One judge call per processed example, cumulative across chunks.
+        assert_eq!(seen, vec![20, 40, 60]);
+        assert_eq!(last.judge_calls.api_calls, 60);
+        assert!(last.judge_calls.cost_usd > 0.0);
+        assert_eq!(reports[0].scale, MetricScale::Ordinal);
     }
 
     #[test]

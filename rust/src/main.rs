@@ -8,6 +8,8 @@
 //! slleval compare   --config task.json --model-b gpt-4o-mini [--provider-b openai]
 //!                   [--checkpoint run_dir | --resume run_dir]
 //! slleval replay    --config task.json --cache-dir .slleval-cache
+//! slleval rescore   --config task.json [--cache-dir .slleval-cache]
+//!                   [--checkpoint run_dir] [--allow-missing] [--out result.json]
 //! slleval tables    [--table fig2|tab3|tab4|tab5|tab6|typei|all]
 //! slleval sim       --executors 8 --n 10000 [--rpm 10000]
 //! ```
@@ -16,6 +18,11 @@
 //! `run_dir` crash-safely; after an interruption (crash, Ctrl-C, cost
 //! budget), `--resume <run_dir>` reloads the manifest and re-executes only
 //! the incomplete ranges — completed work is never re-paid.
+//!
+//! `rescore` replaces the inference stage with cache/checkpoint lookups:
+//! it recomputes any metric set over a previous run's responses with zero
+//! inference API calls (the paper's "iterate on metric definitions
+//! without re-running inference").
 
 use std::path::{Path, PathBuf};
 
@@ -50,9 +57,12 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("run") => cmd_run(args),
         Some("compare") => cmd_compare(args),
         Some("replay") => cmd_replay(args),
+        Some("rescore") => cmd_rescore(args),
         Some("tables") => cmd_tables(args),
         Some("sim") => cmd_sim(args),
-        Some(other) => bail!("unknown subcommand '{other}' (try: generate, run, compare, replay, tables, sim)"),
+        Some(other) => bail!(
+            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim)"
+        ),
         None => {
             print_usage();
             Ok(())
@@ -62,7 +72,8 @@ fn dispatch(args: &Args) -> Result<()> {
 
 fn print_usage() {
     println!("slleval — distributed, statistically rigorous LLM evaluation");
-    println!("subcommands: generate | run | compare | replay | tables | sim");
+    println!("subcommands: generate | run | compare | replay | rescore | tables | sim");
+    println!("  rescore: recompute metrics from a cache/checkpoint, zero inference calls");
     println!("see README.md for full usage");
 }
 
@@ -207,10 +218,67 @@ fn cmd_replay(args: &Args) -> Result<()> {
     runner.open_cache(Path::new(cache_dir), CachePolicy::Replay)?;
     let result = runner.evaluate(&df, &task)?;
     println!("{}", report::eval_summary(&result));
+    // Report the run's actual traffic — judge/RAG metrics can miss the
+    // cache under replay (they then score None rather than spending).
+    let judge = &result.metric_calls;
     println!(
-        "replay complete: {} cache hits, 0 API calls, $0.00",
-        result.inference.cache_hits
+        "replay complete: {} inference cache hits, {} judge cache hits, {} API calls, ${:.4}",
+        result.inference.cache_hits,
+        judge.cache_hits,
+        result.inference.api_calls + judge.api_calls,
+        result.inference.total_cost_usd + judge.cost_usd,
     );
+    if judge.failed > 0 {
+        println!(
+            "warning: {} judge/RAG calls missed the replay cache and scored None \
+             (warm them with `slleval run` or `slleval rescore` under an enabled cache)",
+            judge.failed
+        );
+    }
+    Ok(())
+}
+
+fn cmd_rescore(args: &Args) -> Result<()> {
+    let task = load_task(args)?;
+    if args.get("cache-dir").is_none() && task.checkpoint.dir.is_none() {
+        bail!("rescore needs a response source: --cache-dir and/or --checkpoint <run_dir>");
+    }
+    let df = load_or_generate_data(args)?;
+    // Response rehydration never calls a provider regardless of policy;
+    // the policy only governs *metric-stage* judge calls. Keep Replay /
+    // ReadOnly as configured (guaranteed-zero-spend rescoring); upgrade
+    // non-readable policies so the cache can serve responses at all.
+    let policy = match task.inference.cache_policy {
+        CachePolicy::Replay => CachePolicy::Replay,
+        CachePolicy::ReadOnly => CachePolicy::ReadOnly,
+        _ => CachePolicy::Enabled,
+    };
+    let mut runner = build_runner(args, policy)?;
+    // `--checkpoint` here means "read this run directory", so it always
+    // attaches in resume mode (rescore never starts a fresh checkpoint).
+    if let Some(dir) = &task.checkpoint.dir {
+        runner.attach_checkpoint(Path::new(dir), true)?;
+    }
+    let result = runner.rescore(&df, &task, args.has_flag("allow-missing"))?;
+    println!("{}", report::eval_summary(&result));
+    let judge = &result.metric_calls;
+    println!(
+        "rescore complete: {} responses rehydrated ({} from checkpoint, {} from cache), \
+         0 inference API calls",
+        result.inference.examples,
+        result.inference.sched.restored_rows,
+        result.inference.cache_hits,
+    );
+    if judge.total() > 0 {
+        println!(
+            "metric stage: {} judge API calls (${:.4}), {} judge cache hits, {} failed",
+            judge.api_calls, judge.cost_usd, judge.cache_hits, judge.failed
+        );
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, result.to_json().to_pretty())?;
+        println!("result JSON written to {out}");
+    }
     Ok(())
 }
 

@@ -13,11 +13,15 @@ pub mod judge;
 pub mod trajectory;
 pub mod lexical;
 pub mod rag;
+pub mod registry;
 pub mod semantic;
 
-use crate::config::MetricConfig;
+pub use registry::{
+    builtin_registry, JudgeBroker, Metric, MetricContext, MetricFactory, MetricRegistry,
+    MetricRequirements, ResolvedMetric, ScoreBatch,
+};
+
 use crate::stats::MetricScale;
-use anyhow::{bail, Result};
 
 /// Everything a metric may need about one example.
 #[derive(Debug, Clone, Default)]
@@ -58,48 +62,24 @@ impl MetricReport {
     }
 }
 
-/// Declared scale for a registry metric name (drives Table 2 selection).
-pub fn metric_scale(name: &str) -> MetricScale {
-    match name {
-        "exact_match" | "contains" => MetricScale::Binary,
-        "token_f1" | "bleu" | "rouge_l" | "embedding_similarity" | "bertscore"
-        | "answer_relevance" | "context_precision" | "context_recall" | "faithfulness"
-        | "context_relevance" => MetricScale::Continuous,
-        name if name.starts_with("judge:") => MetricScale::Ordinal,
-        _ => MetricScale::Complex,
-    }
-}
-
-/// Validate that a metric config names a known metric for its family.
-pub fn validate_metric(config: &MetricConfig) -> Result<()> {
-    let known_lexical = ["exact_match", "token_f1", "bleu", "rouge_l", "contains"];
-    let known_semantic = ["embedding_similarity", "bertscore"];
-    let known_rag = [
-        "faithfulness",
-        "context_relevance",
-        "answer_relevance",
-        "context_precision",
-        "context_recall",
-    ];
-    match config.metric_type.as_str() {
-        "lexical" if known_lexical.contains(&config.name.as_str()) => Ok(()),
-        "semantic" if known_semantic.contains(&config.name.as_str()) => Ok(()),
-        "llm_judge" => Ok(()), // any name; rubric comes from params
-        "rag" if known_rag.contains(&config.name.as_str()) => Ok(()),
-        t => bail!("unknown metric '{}' for type '{t}'", config.name),
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::MetricConfig;
 
     #[test]
-    fn scales() {
-        assert_eq!(metric_scale("exact_match"), MetricScale::Binary);
-        assert_eq!(metric_scale("bleu"), MetricScale::Continuous);
-        assert_eq!(metric_scale("judge:helpfulness"), MetricScale::Ordinal);
-        assert_eq!(metric_scale("custom_thing"), MetricScale::Complex);
+    fn scales_come_from_the_registry() {
+        // `metric_scale(name)` and its hardcoded name lists are gone: the
+        // registry resolves scale from (name, family), and unknown names
+        // error at load time instead of silently becoming Complex.
+        let reg = builtin_registry();
+        let scale =
+            |n: &str, f: &str| reg.scale_of(&MetricConfig::new(n, f)).unwrap();
+        assert_eq!(scale("exact_match", "lexical"), MetricScale::Binary);
+        assert_eq!(scale("bleu", "lexical"), MetricScale::Continuous);
+        assert_eq!(scale("judge:helpfulness", "llm_judge"), MetricScale::Ordinal);
+        assert_eq!(scale("helpfulness", "llm_judge"), MetricScale::Ordinal);
+        assert!(reg.scale_of(&MetricConfig::new("custom_thing", "lexical")).is_err());
     }
 
     #[test]
@@ -117,11 +97,12 @@ mod tests {
 
     #[test]
     fn validation() {
-        assert!(validate_metric(&MetricConfig::new("exact_match", "lexical")).is_ok());
-        assert!(validate_metric(&MetricConfig::new("bertscore", "semantic")).is_ok());
-        assert!(validate_metric(&MetricConfig::new("helpfulness", "llm_judge")).is_ok());
-        assert!(validate_metric(&MetricConfig::new("faithfulness", "rag")).is_ok());
-        assert!(validate_metric(&MetricConfig::new("bogus", "lexical")).is_err());
-        assert!(validate_metric(&MetricConfig::new("exact_match", "semantic")).is_err());
+        let reg = builtin_registry();
+        assert!(reg.check(&MetricConfig::new("exact_match", "lexical")).is_ok());
+        assert!(reg.check(&MetricConfig::new("bertscore", "semantic")).is_ok());
+        assert!(reg.check(&MetricConfig::new("helpfulness", "llm_judge")).is_ok());
+        assert!(reg.check(&MetricConfig::new("faithfulness", "rag")).is_ok());
+        assert!(reg.check(&MetricConfig::new("bogus", "lexical")).is_err());
+        assert!(reg.check(&MetricConfig::new("exact_match", "semantic")).is_err());
     }
 }

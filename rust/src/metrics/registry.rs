@@ -1,0 +1,680 @@
+//! First-class metric API: the [`Metric`] trait and the [`MetricRegistry`].
+//!
+//! The registry is the **single source of truth** for metric names,
+//! families, scales, and validation. Every built-in metric (lexical,
+//! semantic, LLM-judge, RAG) is a registry entry; custom metrics are
+//! registered objects; and an [`crate::config::EvalTask`]'s
+//! `MetricConfig`s resolve through the registry at *load* time — a typo'd
+//! metric name fails before any inference spend, and a judge metric named
+//! plainly (`helpfulness`, no `judge:` prefix) still gets the `Ordinal`
+//! scale its significance test depends on (Miller 2024: the scale must
+//! drive the CI/test machinery).
+//!
+//! A metric's [`MetricRequirements`] drive how the coordinator dispatches
+//! it:
+//!
+//! - [`MetricRequirements::Pure`] — a pure function of the [`Example`];
+//!   schedulable as distributed executor tasks (lexical metrics,
+//!   rank-based RAG metrics, custom scorers). This is what makes
+//!   `slleval rescore` scale across executors like inference does.
+//! - [`MetricRequirements::Runtime`] — needs the PJRT semantic runtime
+//!   (embeddings / BERTScore); batched on the driver because PJRT handles
+//!   are not `Send`.
+//! - [`MetricRequirements::Judge`] — issues LLM calls through a
+//!   [`JudgeBroker`]-built engine (and therefore through the response
+//!   cache, so replay/rescore cover judge metrics too).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{judge, lexical, rag, semantic, Example};
+use crate::config::{EvalTask, MetricConfig};
+use crate::providers::InferenceEngine;
+use crate::runtime::SemanticRuntime;
+use crate::stats::MetricScale;
+
+/// What a metric needs from the coordinator to score a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricRequirements {
+    /// Pure function of the example — safe to run inside executor threads.
+    Pure,
+    /// Needs the PJRT semantic runtime (driver-side batches).
+    Runtime,
+    /// Needs LLM judge calls through a [`JudgeBroker`] engine.
+    Judge,
+}
+
+/// Scored batch: one value per input example (`None` = unscorable) plus
+/// the number of unparseable judge responses among the `None`s.
+///
+/// `unparseable` is meaningful only for judge-backed metrics; `Pure`
+/// metrics must leave it 0 (the coordinator enforces this — their
+/// batches may be re-executed speculatively, where a side count could
+/// not be attributed) and report unscorable rows as `None` values.
+#[derive(Debug, Clone, Default)]
+pub struct ScoreBatch {
+    pub values: Vec<Option<f64>>,
+    pub unparseable: usize,
+}
+
+impl ScoreBatch {
+    /// A batch where every example scored (the common pure-metric case).
+    pub fn scored(values: Vec<Option<f64>>) -> Self {
+        Self { values, unparseable: 0 }
+    }
+}
+
+/// Builds judge engines on demand. Implemented by the coordinator so
+/// judge calls flow through its provider services, the response cache,
+/// and call metering — metrics never construct engines themselves.
+pub trait JudgeBroker {
+    fn engine(&self, provider: &str, model: &str) -> Result<Box<dyn InferenceEngine>>;
+}
+
+/// Everything a metric may draw on while scoring. Pure metrics receive a
+/// [`MetricContext::detached`] context inside executor threads; runtime
+/// and judge metrics receive the driver's full context.
+pub struct MetricContext<'a> {
+    pub runtime: Option<&'a SemanticRuntime>,
+    pub judge: Option<&'a dyn JudgeBroker>,
+    /// Fallback judge provider/model (the task's main model) when the
+    /// metric config doesn't override them.
+    pub default_provider: &'a str,
+    pub default_model: &'a str,
+}
+
+impl MetricContext<'_> {
+    /// A context with no driver facilities — what pure metrics get when
+    /// dispatched as scheduler tasks.
+    pub fn detached() -> MetricContext<'static> {
+        MetricContext { runtime: None, judge: None, default_provider: "", default_model: "" }
+    }
+}
+
+/// A scoring metric. Implementations must be cheap to construct (the
+/// registry builds one per resolved `MetricConfig`) and thread-safe
+/// (pure metrics are scored inside executor threads).
+pub trait Metric: Send + Sync {
+    /// Registry/report name (e.g. `exact_match`, `helpfulness`).
+    fn name(&self) -> &str;
+    /// Measurement scale — drives CI method and significance-test
+    /// selection (paper Table 2).
+    fn scale(&self) -> MetricScale;
+    /// What the coordinator must provide to score this metric.
+    fn requirements(&self) -> MetricRequirements;
+    /// Score a batch of examples: exactly one value per example, in
+    /// order. Failed-inference masking is the coordinator's job.
+    fn score_batch(&self, ctx: &MetricContext<'_>, examples: &[Example]) -> Result<ScoreBatch>;
+}
+
+/// A metric resolved from config, ready to score.
+pub type ResolvedMetric = Arc<dyn Metric>;
+
+/// Builds a metric instance from its (validated) config — parameters like
+/// normalization flags and judge rubrics bind here, at resolve time.
+pub type MetricFactory = Arc<dyn Fn(&MetricConfig) -> Result<ResolvedMetric> + Send + Sync>;
+
+#[derive(Clone)]
+struct RegistryEntry {
+    family: String,
+    factory: MetricFactory,
+}
+
+/// Name → (family, factory) table with built-ins pre-registered.
+#[derive(Clone, Default)]
+pub struct MetricRegistry {
+    entries: BTreeMap<String, RegistryEntry>,
+}
+
+impl MetricRegistry {
+    /// An empty registry (tests, fully custom setups).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// The standard registry: every built-in metric family.
+    pub fn with_builtins() -> Self {
+        let mut reg = Self::empty();
+        for (name, kind, scale) in [
+            ("exact_match", LexicalKind::ExactMatch, MetricScale::Binary),
+            ("contains", LexicalKind::Contains, MetricScale::Binary),
+            ("token_f1", LexicalKind::TokenF1, MetricScale::Continuous),
+            ("bleu", LexicalKind::Bleu, MetricScale::Continuous),
+            ("rouge_l", LexicalKind::RougeL, MetricScale::Continuous),
+        ] {
+            reg.register(
+                name,
+                "lexical",
+                Arc::new(move |cfg| {
+                    let norm = if cfg.param_bool("normalize", true) {
+                        lexical::Normalize::default()
+                    } else {
+                        lexical::Normalize::none()
+                    };
+                    Ok(Arc::new(LexicalMetric { name, kind, norm, scale }) as ResolvedMetric)
+                }),
+            );
+        }
+        for (name, kind, family) in [
+            ("embedding_similarity", SemanticKind::EmbeddingSimilarity, "semantic"),
+            ("bertscore", SemanticKind::BertScore, "semantic"),
+            // RAG by taxonomy, but embedding-based per the paper §4.1.
+            ("answer_relevance", SemanticKind::AnswerRelevance, "rag"),
+        ] {
+            reg.register(
+                name,
+                family,
+                Arc::new(move |_cfg| Ok(Arc::new(SemanticMetric { name, kind }) as ResolvedMetric)),
+            );
+        }
+        for (name, kind) in [
+            ("context_precision", RagPureKind::Precision),
+            ("context_recall", RagPureKind::Recall),
+        ] {
+            reg.register(
+                name,
+                "rag",
+                Arc::new(move |_cfg| Ok(Arc::new(RagPureMetric { name, kind }) as ResolvedMetric)),
+            );
+        }
+        for (name, kind) in [
+            ("faithfulness", RagJudgeKind::Faithfulness),
+            ("context_relevance", RagJudgeKind::ContextRelevance),
+        ] {
+            reg.register(
+                name,
+                "rag",
+                Arc::new(move |cfg| {
+                    Ok(Arc::new(RagJudgeMetric {
+                        name,
+                        kind,
+                        provider: cfg.param_str("judge_provider").map(String::from),
+                        model: cfg.param_str("judge_model").map(String::from),
+                    }) as ResolvedMetric)
+                }),
+            );
+        }
+        reg
+    }
+
+    /// Register (or replace) a metric factory under `name`/`family`.
+    pub fn register(&mut self, name: &str, family: &str, factory: MetricFactory) {
+        self.entries
+            .insert(name.to_string(), RegistryEntry { family: family.to_string(), factory });
+    }
+
+    /// Register a pre-built metric object (custom metrics): resolution
+    /// returns the object itself, ignoring config params.
+    pub fn register_metric(&mut self, family: &str, metric: ResolvedMetric) {
+        let name = metric.name().to_string();
+        self.register(&name, family, Arc::new(move |_cfg| Ok(metric.clone())));
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// Registered names in a family (sorted; error messages, docs).
+    pub fn names_for_family(&self, family: &str) -> Vec<&str> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.family == family)
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+
+    /// Resolve one metric config into a scorable metric. Unknown names
+    /// and family mismatches are errors — there is no silent fallback.
+    /// Exception by design: *any* name under `llm_judge` resolves to the
+    /// pointwise rubric judge (the rubric names the behaviour; the metric
+    /// name is the user's label), always with `Ordinal` scale.
+    pub fn resolve(&self, config: &MetricConfig) -> Result<ResolvedMetric> {
+        if let Some(entry) = self.entries.get(&config.name) {
+            if entry.family == config.metric_type {
+                return (entry.factory)(config);
+            }
+            // A judge label may collide with a name from another family
+            // ("faithfulness" as a rubric judge): under `llm_judge` the
+            // label is the user's, so fall through to the generic judge
+            // instead of erroring on the collision.
+            if config.metric_type != "llm_judge" {
+                bail!(
+                    "metric '{}' belongs to family '{}', not '{}'",
+                    config.name,
+                    entry.family,
+                    config.metric_type
+                );
+            }
+        }
+        if config.metric_type == "llm_judge" {
+            return Ok(Arc::new(JudgeMetric::from_config(config)));
+        }
+        bail!(
+            "unknown metric '{}' for type '{}' (known: {})",
+            config.name,
+            config.metric_type,
+            self.names_for_family(&config.metric_type).join(", ")
+        )
+    }
+
+    /// Resolve every metric of a task (load-time validation), in order.
+    pub fn resolve_task(&self, task: &EvalTask) -> Result<Vec<ResolvedMetric>> {
+        task.metrics.iter().map(|m| self.resolve(m)).collect()
+    }
+
+    /// Validate a config without keeping the metric.
+    pub fn check(&self, config: &MetricConfig) -> Result<()> {
+        self.resolve(config).map(|_| ())
+    }
+
+    /// Declared scale for a config (via resolution — no name lists).
+    pub fn scale_of(&self, config: &MetricConfig) -> Result<MetricScale> {
+        Ok(self.resolve(config)?.scale())
+    }
+}
+
+/// The shared built-in registry (config-layer load-time validation).
+/// Runners hold their own [`MetricRegistry::with_builtins`] copy so custom
+/// registrations stay scoped to the runner that made them.
+pub fn builtin_registry() -> &'static MetricRegistry {
+    static REG: OnceLock<MetricRegistry> = OnceLock::new();
+    REG.get_or_init(MetricRegistry::with_builtins)
+}
+
+// ------------------------------------------------------------ built-ins
+
+#[derive(Debug, Clone, Copy)]
+enum LexicalKind {
+    ExactMatch,
+    Contains,
+    TokenF1,
+    Bleu,
+    RougeL,
+}
+
+struct LexicalMetric {
+    name: &'static str,
+    kind: LexicalKind,
+    norm: lexical::Normalize,
+    scale: MetricScale,
+}
+
+impl Metric for LexicalMetric {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn scale(&self) -> MetricScale {
+        self.scale
+    }
+
+    fn requirements(&self) -> MetricRequirements {
+        MetricRequirements::Pure
+    }
+
+    fn score_batch(&self, _ctx: &MetricContext<'_>, examples: &[Example]) -> Result<ScoreBatch> {
+        let values = examples
+            .iter()
+            .map(|ex| {
+                Some(match self.kind {
+                    LexicalKind::ExactMatch => {
+                        lexical::exact_match(&ex.response, &ex.reference, self.norm)
+                    }
+                    LexicalKind::Contains => {
+                        lexical::contains(&ex.response, &ex.reference, self.norm)
+                    }
+                    LexicalKind::TokenF1 => lexical::token_f1(&ex.response, &ex.reference),
+                    LexicalKind::Bleu => lexical::bleu(&ex.response, &ex.reference),
+                    LexicalKind::RougeL => lexical::rouge_l(&ex.response, &ex.reference),
+                })
+            })
+            .collect();
+        Ok(ScoreBatch::scored(values))
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum SemanticKind {
+    EmbeddingSimilarity,
+    BertScore,
+    AnswerRelevance,
+}
+
+struct SemanticMetric {
+    name: &'static str,
+    kind: SemanticKind,
+}
+
+impl Metric for SemanticMetric {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn scale(&self) -> MetricScale {
+        MetricScale::Continuous
+    }
+
+    fn requirements(&self) -> MetricRequirements {
+        MetricRequirements::Runtime
+    }
+
+    fn score_batch(&self, ctx: &MetricContext<'_>, examples: &[Example]) -> Result<ScoreBatch> {
+        let runtime = ctx.runtime.ok_or_else(|| {
+            anyhow!("semantic metric '{}' needs the PJRT runtime (make artifacts)", self.name)
+        })?;
+        let values = match self.kind {
+            SemanticKind::EmbeddingSimilarity => {
+                semantic::embedding_similarity_batch(runtime, examples)?
+            }
+            SemanticKind::BertScore => semantic::bertscore_batch(runtime, examples)?,
+            SemanticKind::AnswerRelevance => semantic::answer_relevance_batch(runtime, examples)?,
+        };
+        Ok(ScoreBatch::scored(values))
+    }
+}
+
+/// Pointwise rubric judge — what every `llm_judge` config resolves to.
+struct JudgeMetric {
+    name: String,
+    rubric: String,
+    provider: Option<String>,
+    model: Option<String>,
+    max_tokens: usize,
+}
+
+impl JudgeMetric {
+    fn from_config(cfg: &MetricConfig) -> Self {
+        Self {
+            name: cfg.name.clone(),
+            rubric: cfg.param_str("rubric").unwrap_or("overall quality").to_string(),
+            provider: cfg.param_str("judge_provider").map(String::from),
+            model: cfg.param_str("judge_model").map(String::from),
+            max_tokens: cfg.param_f64("judge_max_tokens", 256.0) as usize,
+        }
+    }
+}
+
+impl Metric for JudgeMetric {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn scale(&self) -> MetricScale {
+        MetricScale::Ordinal
+    }
+
+    fn requirements(&self) -> MetricRequirements {
+        MetricRequirements::Judge
+    }
+
+    fn score_batch(&self, ctx: &MetricContext<'_>, examples: &[Example]) -> Result<ScoreBatch> {
+        let broker = ctx.judge.ok_or_else(|| {
+            anyhow!("judge metric '{}' needs a judge broker (driver-side scoring)", self.name)
+        })?;
+        let mut engine = broker.engine(
+            self.provider.as_deref().unwrap_or(ctx.default_provider),
+            self.model.as_deref().unwrap_or(ctx.default_model),
+        )?;
+        let outcome = judge::grade_pointwise(engine.as_mut(), &self.rubric, examples, self.max_tokens);
+        Ok(ScoreBatch { values: outcome.scores, unparseable: outcome.unparseable })
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum RagPureKind {
+    Precision,
+    Recall,
+}
+
+struct RagPureMetric {
+    name: &'static str,
+    kind: RagPureKind,
+}
+
+impl Metric for RagPureMetric {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn scale(&self) -> MetricScale {
+        MetricScale::Continuous
+    }
+
+    fn requirements(&self) -> MetricRequirements {
+        MetricRequirements::Pure
+    }
+
+    fn score_batch(&self, _ctx: &MetricContext<'_>, examples: &[Example]) -> Result<ScoreBatch> {
+        let values = examples
+            .iter()
+            .map(|ex| match self.kind {
+                RagPureKind::Precision => rag::context_precision(ex),
+                RagPureKind::Recall => rag::context_recall(ex),
+            })
+            .collect();
+        Ok(ScoreBatch::scored(values))
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum RagJudgeKind {
+    Faithfulness,
+    ContextRelevance,
+}
+
+struct RagJudgeMetric {
+    name: &'static str,
+    kind: RagJudgeKind,
+    provider: Option<String>,
+    model: Option<String>,
+}
+
+impl Metric for RagJudgeMetric {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn scale(&self) -> MetricScale {
+        MetricScale::Continuous
+    }
+
+    fn requirements(&self) -> MetricRequirements {
+        MetricRequirements::Judge
+    }
+
+    fn score_batch(&self, ctx: &MetricContext<'_>, examples: &[Example]) -> Result<ScoreBatch> {
+        let broker = ctx.judge.ok_or_else(|| {
+            anyhow!("RAG metric '{}' needs a judge broker (driver-side scoring)", self.name)
+        })?;
+        let mut engine = broker.engine(
+            self.provider.as_deref().unwrap_or(ctx.default_provider),
+            self.model.as_deref().unwrap_or(ctx.default_model),
+        )?;
+        let values = examples
+            .iter()
+            .map(|ex| match self.kind {
+                RagJudgeKind::Faithfulness => rag::faithfulness(engine.as_mut(), ex),
+                RagJudgeKind::ContextRelevance => rag::context_relevance(engine.as_mut(), ex),
+            })
+            .collect();
+        Ok(ScoreBatch::scored(values))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn cfg(name: &str, family: &str) -> MetricConfig {
+        MetricConfig::new(name, family)
+    }
+
+    #[test]
+    fn builtin_scales_resolve_through_registry() {
+        let reg = MetricRegistry::with_builtins();
+        assert_eq!(reg.scale_of(&cfg("exact_match", "lexical")).unwrap(), MetricScale::Binary);
+        assert_eq!(reg.scale_of(&cfg("contains", "lexical")).unwrap(), MetricScale::Binary);
+        assert_eq!(reg.scale_of(&cfg("bleu", "lexical")).unwrap(), MetricScale::Continuous);
+        assert_eq!(
+            reg.scale_of(&cfg("bertscore", "semantic")).unwrap(),
+            MetricScale::Continuous
+        );
+        assert_eq!(
+            reg.scale_of(&cfg("faithfulness", "rag")).unwrap(),
+            MetricScale::Continuous
+        );
+    }
+
+    #[test]
+    fn plain_judge_names_get_ordinal_scale() {
+        // The scale-misclassification fix: a judge metric named without a
+        // `judge:` prefix must still be Ordinal (it used to silently fall
+        // back to Complex and draw the wrong significance test).
+        let reg = MetricRegistry::with_builtins();
+        assert_eq!(
+            reg.scale_of(&cfg("helpfulness", "llm_judge")).unwrap(),
+            MetricScale::Ordinal
+        );
+        assert_eq!(
+            reg.scale_of(&cfg("judge:helpfulness", "llm_judge")).unwrap(),
+            MetricScale::Ordinal
+        );
+    }
+
+    #[test]
+    fn unknown_names_are_load_time_errors_not_complex() {
+        let reg = MetricRegistry::with_builtins();
+        let err = reg.check(&cfg("custom_thing", "lexical")).unwrap_err();
+        assert!(format!("{err}").contains("unknown metric"), "{err}");
+        assert!(reg.check(&cfg("bogus", "rag")).is_err());
+        // Family mismatch is an error too, with the right family named.
+        let err = reg.check(&cfg("exact_match", "semantic")).unwrap_err();
+        assert!(format!("{err}").contains("family 'lexical'"), "{err}");
+    }
+
+    #[test]
+    fn requirements_drive_dispatch() {
+        let reg = MetricRegistry::with_builtins();
+        let req = |n: &str, f: &str| reg.resolve(&cfg(n, f)).unwrap().requirements();
+        assert_eq!(req("exact_match", "lexical"), MetricRequirements::Pure);
+        assert_eq!(req("context_precision", "rag"), MetricRequirements::Pure);
+        assert_eq!(req("context_recall", "rag"), MetricRequirements::Pure);
+        assert_eq!(req("embedding_similarity", "semantic"), MetricRequirements::Runtime);
+        assert_eq!(req("answer_relevance", "rag"), MetricRequirements::Runtime);
+        assert_eq!(req("faithfulness", "rag"), MetricRequirements::Judge);
+        assert_eq!(req("anything_at_all", "llm_judge"), MetricRequirements::Judge);
+    }
+
+    #[test]
+    fn judge_labels_may_collide_with_builtin_names() {
+        // "faithfulness" as an llm_judge label is the user's rubric
+        // judge, not the RAG built-in — the collision must not error.
+        let reg = MetricRegistry::with_builtins();
+        for name in ["faithfulness", "contains", "bleu"] {
+            let metric = reg.resolve(&cfg(name, "llm_judge")).unwrap();
+            assert_eq!(metric.name(), name);
+            assert_eq!(metric.scale(), MetricScale::Ordinal);
+            assert_eq!(metric.requirements(), MetricRequirements::Judge);
+        }
+    }
+
+    #[test]
+    fn judge_params_bind_at_resolve_time() {
+        let reg = MetricRegistry::with_builtins();
+        let config = cfg("clarity", "llm_judge")
+            .with_param("rubric", Json::str("Rate clarity 1-5"))
+            .with_param("judge_model", Json::str("gpt-4o-mini"));
+        let metric = reg.resolve(&config).unwrap();
+        assert_eq!(metric.name(), "clarity");
+        assert_eq!(metric.scale(), MetricScale::Ordinal);
+    }
+
+    #[test]
+    fn pure_metrics_score_detached() {
+        let reg = MetricRegistry::with_builtins();
+        let metric = reg.resolve(&cfg("exact_match", "lexical")).unwrap();
+        let examples = vec![
+            Example { response: "Paris!".into(), reference: "paris".into(), ..Default::default() },
+            Example { response: "london".into(), reference: "paris".into(), ..Default::default() },
+        ];
+        let out = metric.score_batch(&MetricContext::detached(), &examples).unwrap();
+        assert_eq!(out.values, vec![Some(1.0), Some(0.0)]);
+        assert_eq!(out.unparseable, 0);
+    }
+
+    #[test]
+    fn normalize_param_binds_at_resolve_time() {
+        let reg = MetricRegistry::with_builtins();
+        let strict = reg
+            .resolve(&cfg("exact_match", "lexical").with_param("normalize", Json::Bool(false)))
+            .unwrap();
+        let ex = vec![Example {
+            response: "Paris!".into(),
+            reference: "paris".into(),
+            ..Default::default()
+        }];
+        let out = strict.score_batch(&MetricContext::detached(), &ex).unwrap();
+        assert_eq!(out.values, vec![Some(0.0)]);
+    }
+
+    #[test]
+    fn custom_metric_registration_round_trips() {
+        struct ResponseWords;
+        impl Metric for ResponseWords {
+            fn name(&self) -> &str {
+                "response_words"
+            }
+            fn scale(&self) -> MetricScale {
+                MetricScale::Continuous
+            }
+            fn requirements(&self) -> MetricRequirements {
+                MetricRequirements::Pure
+            }
+            fn score_batch(
+                &self,
+                _ctx: &MetricContext<'_>,
+                examples: &[Example],
+            ) -> Result<ScoreBatch> {
+                Ok(ScoreBatch::scored(
+                    examples
+                        .iter()
+                        .map(|ex| Some(ex.response.split_whitespace().count() as f64))
+                        .collect(),
+                ))
+            }
+        }
+        let mut reg = MetricRegistry::with_builtins();
+        assert!(reg.check(&cfg("response_words", "custom")).is_err());
+        reg.register_metric("custom", Arc::new(ResponseWords));
+        assert!(reg.contains("response_words"));
+        let metric = reg.resolve(&cfg("response_words", "custom")).unwrap();
+        let ex = vec![Example { response: "three short words".into(), ..Default::default() }];
+        let out = metric.score_batch(&MetricContext::detached(), &ex).unwrap();
+        assert_eq!(out.values, vec![Some(3.0)]);
+        // Family mismatch still checked for custom entries.
+        assert!(reg.check(&cfg("response_words", "lexical")).is_err());
+    }
+
+    #[test]
+    fn builtin_names_listing() {
+        let reg = MetricRegistry::with_builtins();
+        assert_eq!(
+            reg.names_for_family("lexical"),
+            vec!["bleu", "contains", "exact_match", "rouge_l", "token_f1"]
+        );
+        assert_eq!(reg.names_for_family("semantic"), vec!["bertscore", "embedding_similarity"]);
+        assert_eq!(
+            reg.names_for_family("rag"),
+            vec![
+                "answer_relevance",
+                "context_precision",
+                "context_recall",
+                "context_relevance",
+                "faithfulness"
+            ]
+        );
+    }
+}

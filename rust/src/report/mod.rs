@@ -76,6 +76,14 @@ pub fn eval_summary(result: &EvalResult) -> String {
         "cost: ${:.4}  |  latency p50 {:.0}ms p99 {:.0}ms  |  throughput {:.0}/min  |  wall {:.1}s\n",
         inf.total_cost_usd, inf.latency_p50_ms, inf.latency_p99_ms, inf.throughput_per_min, inf.wall_secs,
     ));
+    let mc = &result.metric_calls;
+    if mc.total() > 0 {
+        // Judge/RAG metric calls are billed separately from inference.
+        out.push_str(&format!(
+            "metric stage: {} judge api calls (${:.4}), {} cache hits, {} failed\n",
+            mc.api_calls, mc.cost_usd, mc.cache_hits, mc.failed,
+        ));
+    }
     let s = &inf.sched;
     out.push_str(&format!(
         "scheduler: {} tasks, {} steals, {} speculative ({} won), {} splits, {} retries, \

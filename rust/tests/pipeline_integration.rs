@@ -265,3 +265,89 @@ fn adaptive_rate_coordinator_with_skewed_partitions() {
     let total: f64 = shares.iter().map(|s| s.rpm).sum();
     assert!((total - 10_000.0).abs() < 1.0);
 }
+
+#[test]
+fn every_builtin_metric_round_trips_config_and_registry() {
+    // MetricConfig → EvalTask JSON serde → registry resolution for every
+    // registered built-in: names, families, and scales survive the trip
+    // and resolve to a metric whose declared name matches the config.
+    use spark_llm_eval::metrics::builtin_registry;
+
+    let reg = builtin_registry();
+    let mut metrics = Vec::new();
+    for family in ["lexical", "semantic", "rag"] {
+        for name in reg.names_for_family(family) {
+            metrics.push(MetricConfig::new(name, family));
+        }
+    }
+    metrics.push(
+        MetricConfig::new("helpfulness", "llm_judge")
+            .with_param("rubric", Json::str("Rate helpfulness 1-5")),
+    );
+    assert!(metrics.len() >= 11, "expected all built-ins, got {}", metrics.len());
+
+    let mut task = EvalTask::default();
+    task.metrics = metrics;
+    let restored = EvalTask::from_json(&task.to_json()).unwrap();
+    assert_eq!(task, restored);
+
+    for mc in &restored.metrics {
+        let metric = reg.resolve(mc).unwrap();
+        assert_eq!(metric.name(), mc.name, "resolution must preserve the name");
+        assert_eq!(metric.scale(), reg.scale_of(mc).unwrap());
+    }
+}
+
+#[test]
+fn rescore_pipeline_matches_live_run_across_families() {
+    // The paper's "iterate on metrics for free" claim end to end: one
+    // cached live run, then a rescore that drops a metric, keeps two, and
+    // adds two — zero inference calls, shared metrics bit-identical.
+    let dir = tmp("rescore-e2e");
+    let df = synth::generate(
+        120,
+        60,
+        synth::DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 },
+    )
+    .unwrap();
+
+    let mut task = EvalTask::default();
+    task.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("token_f1", "lexical"),
+        MetricConfig::new("context_precision", "rag"),
+    ];
+    let mut runner = fast_runner();
+    runner.open_cache(&dir, spark_llm_eval::config::CachePolicy::Enabled).unwrap();
+    let live = runner.evaluate(&df, &task).unwrap();
+    assert!(live.inference.api_calls > 0);
+
+    let mut task2 = task.clone();
+    task2.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("context_precision", "rag"),
+        MetricConfig::new("bleu", "lexical"),
+        MetricConfig::new("context_recall", "rag"),
+    ];
+    let mut runner2 = fast_runner();
+    runner2.open_cache(&dir, spark_llm_eval::config::CachePolicy::Replay).unwrap();
+    let re = runner2.rescore(&df, &task2, false).unwrap();
+
+    assert_eq!(re.inference.api_calls, 0, "rescore must not call the provider");
+    assert_eq!(re.inference.total_cost_usd, 0.0);
+    assert_eq!(re.metric_calls.api_calls, 0, "pure metrics need no judge calls");
+    for name in ["exact_match", "context_precision"] {
+        assert_eq!(
+            live.report(name).unwrap().values,
+            re.report(name).unwrap().values,
+            "{name} must be bit-identical from cache"
+        );
+        let (a, b) = (live.metric(name).unwrap(), re.metric(name).unwrap());
+        assert_eq!(a.value, b.value);
+        assert_eq!((a.ci.lo, a.ci.hi), (b.ci.lo, b.ci.hi), "{name} bootstrap CI");
+    }
+    for name in ["bleu", "context_recall"] {
+        assert!(re.metric(name).unwrap().n > 0, "{name} scored nothing");
+    }
+    assert!(re.metric("token_f1").is_none(), "dropped metric must not reappear");
+}
