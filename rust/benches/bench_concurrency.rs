@@ -1,0 +1,144 @@
+//! In-executor concurrency benchmark (ISSUE 4): simulated live-mode
+//! inference under the virtual clock, sweeping `inference.concurrency`.
+//!
+//! The virtual clock makes provider latency *slept* rather than skipped
+//! (`sleep_latency: true`), so a latency-bound run's virtual wall time is
+//! the quantity the pipelined client exists to shrink: at concurrency 1
+//! each executor pays every round trip sequentially; at concurrency N the
+//! completion-queue client overlaps N in-flight requests, and virtual
+//! wall time drops ~N×. Metric values, CIs, and cost accounting must not
+//! move — the pipeline changes *when* requests are in flight, never what
+//! they return or cost. Results land in `BENCH_concurrency.json` at the
+//! repository root.
+
+use spark_llm_eval::config::{CachePolicy, EvalTask, MetricConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+use spark_llm_eval::util::bench::section;
+use spark_llm_eval::util::json::Json;
+
+const N: usize = 240;
+const SEED: u64 = 11;
+const LEVELS: [usize; 4] = [1, 2, 4, 8];
+
+fn task(concurrency: usize, executors: usize) -> EvalTask {
+    let mut task = EvalTask::default();
+    task.task_id = format!("bench-concurrency-{concurrency}x{executors}");
+    task.executors = executors;
+    task.inference.concurrency = concurrency;
+    task.inference.cache_policy = CachePolicy::Disabled;
+    // Keep the schedule deterministic: no speculation/splitting noise.
+    task.scheduler.speculation = false;
+    task.scheduler.adaptive_split = false;
+    task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+    task
+}
+
+/// One virtual-clock live-mode run; returns (virtual wall secs of the
+/// inference stage, throughput/min, metric value, ci, cost, peak in-flight).
+fn run(concurrency: usize, executors: usize) -> (f64, f64, f64, (f64, f64), f64, usize) {
+    let clock = VirtualClock::new();
+    let mut runner = EvalRunner::with_clock(clock);
+    // Latency is slept on the virtual clock; faults off so every level
+    // sees the identical workload.
+    runner.service_config = SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: true,
+        ..Default::default()
+    };
+    let df = synth::generate_default(N, SEED);
+    let result = runner.evaluate(&df, &task(concurrency, executors)).unwrap();
+    let m = &result.metrics[0];
+    (
+        result.inference.wall_secs,
+        result.inference.throughput_per_min,
+        m.value,
+        (m.ci.lo, m.ci.hi),
+        result.inference.total_cost_usd,
+        result.inference.peak_in_flight,
+    )
+}
+
+fn main() {
+    section(&format!(
+        "in-executor concurrency — {N} examples, virtual clock, latency slept"
+    ));
+
+    let mut rows = Vec::new();
+    let mut by_level = Vec::new();
+    for executors in [1usize, 4] {
+        let mut base_wall = 0.0;
+        for &concurrency in &LEVELS {
+            let (wall, tp, value, ci, cost, peak) = run(concurrency, executors);
+            if concurrency == 1 {
+                base_wall = wall;
+            }
+            let speedup = base_wall / wall;
+            println!(
+                "executors {executors} × concurrency {concurrency}: wall {wall:>8.1}s \
+                 ({speedup:.2}x) | {tp:>7.0}/min | peak in-flight {peak} | \
+                 exact_match {value:.4} | cost ${cost:.2}",
+            );
+            rows.push((executors, concurrency, wall, speedup, tp, value, ci, cost, peak));
+            by_level.push(Json::obj(vec![
+                ("executors", Json::num(executors as f64)),
+                ("concurrency", Json::num(concurrency as f64)),
+                ("virtual_wall_secs", Json::num(wall)),
+                ("speedup_vs_concurrency_1", Json::num(speedup)),
+                ("throughput_per_min", Json::num(tp)),
+                ("peak_in_flight", Json::num(peak as f64)),
+                ("exact_match", Json::num(value)),
+                ("ci_lower", Json::num(ci.0)),
+                ("ci_upper", Json::num(ci.1)),
+                ("cost_usd", Json::num(cost)),
+            ]));
+        }
+    }
+
+    // Invariance gates: concurrency may only change the schedule. Metric
+    // values, CIs, and cost must be identical at every level.
+    for chunk in rows.chunks(LEVELS.len()) {
+        let (_, _, _, _, _, v0, ci0, cost0, _) = chunk[0];
+        for &(executors, concurrency, _, _, _, v, ci, cost, peak) in chunk {
+            assert_eq!(v, v0, "metric moved at executors {executors} concurrency {concurrency}");
+            assert_eq!(ci, ci0, "CI moved at executors {executors} concurrency {concurrency}");
+            assert!(
+                (cost - cost0).abs() < 1e-9,
+                "cost moved at executors {executors} concurrency {concurrency}"
+            );
+            assert!(
+                peak <= concurrency,
+                "peak in-flight {peak} exceeds configured concurrency {concurrency}"
+            );
+        }
+    }
+
+    // Acceptance gate (ISSUE 4): ≥ 4× virtual-wall speedup at
+    // concurrency 8 on a latency-bound run.
+    for chunk in rows.chunks(LEVELS.len()) {
+        let (executors, _, _, _, _, _, _, _, _) = chunk[0];
+        let speedup8 = chunk[LEVELS.len() - 1].3;
+        assert!(
+            speedup8 >= 4.0,
+            "concurrency 8 must cut latency-bound virtual wall time ≥ 4x \
+             (executors {executors}: got {speedup8:.2}x)"
+        );
+    }
+
+    let report = Json::obj(vec![
+        ("benchmark", Json::str("bench_concurrency")),
+        ("examples", Json::num(N as f64)),
+        ("seed", Json::num(SEED as f64)),
+        ("clock", Json::str("virtual (latency slept)")),
+        ("levels", Json::arr(by_level)),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_concurrency.json");
+    std::fs::write(&out_path, report.to_pretty()).expect("writing BENCH_concurrency.json");
+    println!("\nresults written to {}", out_path.display());
+}

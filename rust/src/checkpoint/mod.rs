@@ -131,6 +131,52 @@ impl RunCheckpoint {
         &self.root
     }
 
+    /// Enumerate the stages already present in this run directory (any
+    /// subdirectory with a `meta.json`), with their recorded row counts.
+    pub fn stages(&self) -> Result<Vec<(String, StageCheckpoint)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.root)
+            .with_context(|| format!("listing checkpoint dir {:?}", self.root))?
+        {
+            let path = entry?.path();
+            if !path.is_dir() {
+                continue;
+            }
+            let meta_path = path.join("meta.json");
+            let Ok(text) = std::fs::read_to_string(&meta_path) else { continue };
+            let meta = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("corrupt stage meta {meta_path:?}: {e}"))?;
+            let total_rows = meta.usize_or("total_rows", 0);
+            let name = path
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            out.push((name, StageCheckpoint { dir: path, total_rows }));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+
+    /// Compact every stage in the run directory: adjacent per-task
+    /// manifest records coalesce into one record (+ one data file) per
+    /// contiguous span — a completed stage ends up with a single record.
+    /// Resume reads compacted and uncompacted stages identically.
+    pub fn compact(&self) -> Result<Vec<StageCompaction>> {
+        let mut report = Vec::new();
+        for (name, stage) in self.stages()? {
+            let (records_before, records_after, coalesced_runs) = stage
+                .compact()
+                .with_context(|| format!("compacting checkpoint stage '{name}'"))?;
+            report.push(StageCompaction {
+                stage: name,
+                records_before,
+                records_after,
+                coalesced_runs,
+            });
+        }
+        Ok(report)
+    }
+
     /// Open (creating on first use) one stage's checkpoint store.
     /// `fingerprint` binds the stage to its exact inputs; reopening an
     /// existing stage with a different fingerprint is an error rather than
@@ -164,6 +210,16 @@ impl RunCheckpoint {
         }
         Ok(StageCheckpoint { dir, total_rows })
     }
+}
+
+/// Outcome of compacting one stage.
+#[derive(Debug, Clone)]
+pub struct StageCompaction {
+    pub stage: String,
+    pub records_before: usize,
+    pub records_after: usize,
+    /// Contiguous multi-record spans that were coalesced.
+    pub coalesced_runs: usize,
 }
 
 /// Checkpoint store for one scheduler stage.
@@ -241,8 +297,12 @@ impl StageCheckpoint {
     }
 
     /// Load and validate the manifest: records sorted by range start,
-    /// ranges strictly disjoint and in-bounds. Overlap means the directory
-    /// holds records from incompatible runs — an error, not a guess.
+    /// ranges disjoint and in-bounds. A record **fully contained** in
+    /// another is a benign leftover of an interrupted [`Self::compact`]
+    /// (the coalesced container published before its constituents were
+    /// removed) and is skipped; *partial* overlap still means the
+    /// directory holds records from incompatible runs — an error, not a
+    /// guess.
     pub fn manifest(&self) -> Result<Vec<TaskManifest>> {
         let mut records = Vec::new();
         for entry in std::fs::read_dir(self.dir.join(TASKS_DIR))? {
@@ -258,9 +318,12 @@ impl StageCheckpoint {
                 .map_err(|e| anyhow::anyhow!("corrupt manifest record {path:?}: {e}"))?;
             records.push(TaskManifest::from_json(&v)?);
         }
-        records.sort_by_key(|r| (r.start, r.end));
+        // Widest-first within a start row, so a coalesced container is
+        // kept and its constituents are recognized as contained.
+        records.sort_by_key(|r| (r.start, std::cmp::Reverse(r.end)));
+        let mut kept: Vec<TaskManifest> = Vec::new();
         let mut cursor = 0usize;
-        for r in &records {
+        for r in records {
             if r.end <= r.start || r.end > self.total_rows {
                 bail!(
                     "manifest record [{}, {}) out of bounds for a {}-row stage",
@@ -268,6 +331,9 @@ impl StageCheckpoint {
                     r.end,
                     self.total_rows
                 );
+            }
+            if r.end <= cursor {
+                continue; // fully contained in a kept record (compaction leftover)
             }
             if r.start < cursor {
                 bail!(
@@ -279,8 +345,147 @@ impl StageCheckpoint {
                 );
             }
             cursor = r.end;
+            kept.push(r);
         }
-        Ok(records)
+        Ok(kept)
+    }
+
+    /// Coalesce adjacent manifest records into one record + one data file
+    /// per contiguous span (ROADMAP "checkpoint GC / compaction"): a
+    /// resumed-many-times run accumulates one record per task, and a
+    /// completed stage compacts down to a single record.
+    ///
+    /// Crash-safe at every step, with no re-pay window: the coalesced
+    /// data file is written first, then the coalesced record is published
+    /// — from that instant the constituents are *contained* records,
+    /// which [`Self::manifest`] skips — and only then are the
+    /// constituents and their data files removed. An interruption leaves
+    /// either the original records or a valid container + ignorable
+    /// litter, which the next `compact` sweeps. Spans whose data files
+    /// are missing or unhealthy are left untouched (restore would skip
+    /// them anyway, so compacting them would launder corruption).
+    ///
+    /// Returns `(records_before, records_after, coalesced_runs)`.
+    pub fn compact(&self) -> Result<(usize, usize, usize)> {
+        let records = self.manifest()?;
+        let records_before = records.len();
+        let mut records_after = 0usize;
+        let mut coalesced_runs = 0usize;
+
+        let mut i = 0usize;
+        while i < records.len() {
+            // Extend the contiguous run starting at record i.
+            let mut j = i + 1;
+            while j < records.len() && records[j].start == records[j - 1].end {
+                j += 1;
+            }
+            if j - i >= 2 && self.coalesce_run(&records[i..j])? {
+                coalesced_runs += 1;
+                records_after += 1;
+            } else {
+                // Single record, or a span left untouched because a
+                // constituent's data file was unhealthy.
+                records_after += j - i;
+            }
+            i = j;
+        }
+
+        self.sweep_contained()?;
+        Ok((records_before, records_after, coalesced_runs))
+    }
+
+    /// Coalesce one contiguous run of ≥ 2 records. Returns `false` (and
+    /// leaves the run untouched) when any constituent's data file is
+    /// unhealthy.
+    fn coalesce_run(&self, run: &[TaskManifest]) -> Result<bool> {
+        let (start, end) = (run[0].start, run[run.len() - 1].end);
+        // 1. Gather + validate every constituent's rows.
+        let mut body = String::new();
+        for r in run {
+            let path = self.dir.join(DATA_DIR).join(&r.rows_file);
+            let text = match std::fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!(
+                        "warning: not compacting rows [{start}, {end}): data file {path:?} \
+                         unreadable ({e})"
+                    );
+                    return Ok(false);
+                }
+            };
+            let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+            if lines.len() != r.end - r.start {
+                eprintln!(
+                    "warning: not compacting rows [{start}, {end}): data file {path:?} holds \
+                     {} rows, expected {}",
+                    lines.len(),
+                    r.end - r.start
+                );
+                return Ok(false);
+            }
+            for line in lines {
+                body.push_str(line);
+                body.push('\n');
+            }
+        }
+
+        // 2. Publish the coalesced data file, then its manifest record.
+        //    From here the constituents are contained records — skipped by
+        //    `manifest`, so a crash at any point leaves a valid stage.
+        let rows_file = format!("{start:08}-{end:08}.jsonl");
+        fsx::write_atomic(&self.dir.join(DATA_DIR).join(&rows_file), body.as_bytes())?;
+        let record = TaskManifest {
+            start,
+            end,
+            attempt: 1,
+            executor_id: 0,
+            rows_file,
+            recorded_at: crate::util::unix_ts(),
+        };
+        fsx::write_atomic(
+            &self.dir.join(TASKS_DIR).join(format!("{start:08}-{end:08}.json")),
+            record.to_json().to_pretty().as_bytes(),
+        )?;
+
+        // 3. Remove the constituents (records first, then data files).
+        for r in run {
+            let _ = std::fs::remove_file(
+                self.dir.join(TASKS_DIR).join(format!("{:08}-{:08}.json", r.start, r.end)),
+            );
+        }
+        for r in run {
+            if r.rows_file != format!("{start:08}-{end:08}.jsonl") {
+                let _ = std::fs::remove_file(self.dir.join(DATA_DIR).join(&r.rows_file));
+            }
+        }
+        Ok(true)
+    }
+
+    /// Remove record files fully contained in a kept record (litter from
+    /// an interrupted compaction), along with their data files.
+    fn sweep_contained(&self) -> Result<()> {
+        let kept = self.manifest()?;
+        let kept_spans: Vec<(usize, usize, &str)> =
+            kept.iter().map(|r| (r.start, r.end, r.rows_file.as_str())).collect();
+        for entry in std::fs::read_dir(self.dir.join(TASKS_DIR))? {
+            let path = entry?.path();
+            let name = path.file_name().map(|n| n.to_string_lossy().into_owned());
+            let Some(name) = name else { continue };
+            if name.starts_with('.') || !name.ends_with(".json") {
+                continue;
+            }
+            let Ok(text) = std::fs::read_to_string(&path) else { continue };
+            let Ok(v) = Json::parse(&text) else { continue };
+            let Ok(r) = TaskManifest::from_json(&v) else { continue };
+            let contained = kept_spans.iter().any(|&(s, e, file)| {
+                s <= r.start && r.end <= e && (s, e) != (r.start, r.end) && file != r.rows_file
+            });
+            if contained {
+                let _ = std::fs::remove_file(&path);
+                let _ = std::fs::remove_file(self.dir.join(DATA_DIR).join(&r.rows_file));
+            }
+        }
+        Ok(())
     }
 
     /// Fraction of the stage's rows already covered by the manifest.
@@ -459,6 +664,111 @@ mod tests {
         stage.record_task(0, 5, 1, 0, &(0..5).map(|i| enc(i as f64)).collect::<Vec<_>>()).unwrap();
         stage.record_task(3, 8, 1, 0, &(3..8).map(|i| enc(i as f64)).collect::<Vec<_>>()).unwrap();
         assert!(stage.manifest().is_err());
+    }
+
+    #[test]
+    fn compact_coalesces_adjacent_records_and_restores_identically() {
+        let run = RunCheckpoint::create(&tmp_dir("compact")).unwrap();
+        let stage = run.stage("s", &Json::Null, 12).unwrap();
+        // Three adjacent records [0,6), a gap at [6,7), and a tail [7,12).
+        stage.record_task(0, 2, 1, 0, &[enc(0.0), enc(1.0)]).unwrap();
+        stage.record_task(2, 4, 1, 1, &[enc(2.0), enc(3.0)]).unwrap();
+        stage.record_task(4, 6, 2, 0, &[enc(4.0), enc(5.0)]).unwrap();
+        let tail: Vec<String> = (7..12).map(|i| enc(i as f64)).collect();
+        stage.record_task(7, 12, 1, 2, &tail).unwrap();
+        let before = stage.restore(&dec).unwrap();
+
+        let (records_before, records_after, runs) = stage.compact().unwrap();
+        assert_eq!((records_before, records_after, runs), (4, 2, 1));
+        let manifest = stage.manifest().unwrap();
+        assert_eq!(manifest.len(), 2);
+        assert_eq!((manifest[0].start, manifest[0].end), (0, 6));
+        assert_eq!((manifest[1].start, manifest[1].end), (7, 12));
+
+        // Restore reads the compacted stage identically: same covered
+        // rows, same values, in range order.
+        let after = stage.restore(&dec).unwrap();
+        let rows_of = |r: &[(usize, usize, Vec<f64>)]| {
+            r.iter().flat_map(|(_, _, rows)| rows.clone()).collect::<Vec<f64>>()
+        };
+        assert_eq!(rows_of(&before), rows_of(&after));
+        assert_eq!(stage.coverage().unwrap(), 11.0 / 12.0);
+
+        // Old data files are gone; exactly one file per kept record.
+        let data_files = std::fs::read_dir(stage.dir().join("data")).unwrap().count();
+        assert_eq!(data_files, 2);
+
+        // Compacting again is a no-op.
+        assert_eq!(stage.compact().unwrap(), (2, 2, 0));
+    }
+
+    #[test]
+    fn interrupted_compaction_leftovers_are_skipped_and_swept() {
+        let run = RunCheckpoint::create(&tmp_dir("compact-interrupt")).unwrap();
+        let stage = run.stage("s", &Json::Null, 6).unwrap();
+        stage.record_task(0, 3, 1, 0, &[enc(0.0), enc(1.0), enc(2.0)]).unwrap();
+        stage.record_task(3, 6, 1, 1, &[enc(3.0), enc(4.0), enc(5.0)]).unwrap();
+        // Simulate a compaction that crashed right after publishing the
+        // container: write the coalesced record + data file by hand while
+        // the constituents are still present.
+        let body = (0..6).map(|i| enc(i as f64) + "\n").collect::<String>();
+        std::fs::write(stage.dir().join("data").join("00000000-00000006.jsonl"), body).unwrap();
+        let container = TaskManifest {
+            start: 0,
+            end: 6,
+            attempt: 1,
+            executor_id: 0,
+            rows_file: "00000000-00000006.jsonl".into(),
+            recorded_at: 0.0,
+        };
+        std::fs::write(
+            stage.dir().join("tasks").join("00000000-00000006.json"),
+            container.to_json().to_pretty(),
+        )
+        .unwrap();
+
+        // The contained constituents are benign: manifest keeps only the
+        // container and restore sees every row exactly once.
+        let manifest = stage.manifest().unwrap();
+        assert_eq!(manifest.len(), 1);
+        assert_eq!((manifest[0].start, manifest[0].end), (0, 6));
+        let restored = stage.restore(&dec).unwrap();
+        assert_eq!(restored.len(), 1);
+        assert_eq!(restored[0].2, (0..6).map(|i| i as f64).collect::<Vec<_>>());
+
+        // The next compact sweeps the litter.
+        stage.compact().unwrap();
+        let records = std::fs::read_dir(stage.dir().join("tasks")).unwrap().count();
+        assert_eq!(records, 1, "constituent records must be swept");
+        let data_files = std::fs::read_dir(stage.dir().join("data")).unwrap().count();
+        assert_eq!(data_files, 1, "constituent data files must be swept");
+    }
+
+    #[test]
+    fn run_compact_covers_all_stages() {
+        let dir = tmp_dir("compact-run");
+        {
+            let run = RunCheckpoint::create(&dir).unwrap();
+            let s1 = run.stage("infer-aaaa", &Json::str("a"), 4).unwrap();
+            s1.record_task(0, 2, 1, 0, &[enc(0.0), enc(1.0)]).unwrap();
+            s1.record_task(2, 4, 1, 0, &[enc(2.0), enc(3.0)]).unwrap();
+            let s2 = run.stage("judge-bbbb", &Json::str("b"), 3).unwrap();
+            s2.record_task(0, 3, 1, 0, &[enc(0.0), enc(1.0), enc(2.0)]).unwrap();
+        }
+        let run = RunCheckpoint::resume(&dir).unwrap();
+        let report = run.compact().unwrap();
+        assert_eq!(report.len(), 2);
+        let infer = report.iter().find(|s| s.stage == "infer-aaaa").unwrap();
+        assert_eq!((infer.records_before, infer.records_after), (2, 1));
+        let judge = report.iter().find(|s| s.stage == "judge-bbbb").unwrap();
+        assert_eq!((judge.records_before, judge.records_after), (1, 1));
+        assert_eq!(judge.coalesced_runs, 0);
+
+        // Restore through the normal resume path still works.
+        let stage = run.stage("infer-aaaa", &Json::str("a"), 4).unwrap();
+        let restored = stage.restore(&dec).unwrap();
+        assert_eq!(restored.len(), 1);
+        assert_eq!(restored[0].2, vec![0.0, 1.0, 2.0, 3.0]);
     }
 
     #[test]

@@ -86,6 +86,12 @@ impl Default for ModelConfig {
 pub struct InferenceConfig {
     /// Examples per executor batch (Pandas-UDF batch equivalent).
     pub batch_size: usize,
+    /// In-flight provider requests multiplexed per executor (the paper's
+    /// §3.1 in-executor concurrency): each executor pipelines up to this
+    /// many requests through its slot engines, overlapping round-trip
+    /// latency. `1` (the default) reproduces the pre-pipeline sequential
+    /// hot path bit for bit.
+    pub concurrency: usize,
     /// Global requests-per-minute budget split across executors.
     pub rate_limit_rpm: f64,
     /// Global tokens-per-minute budget split across executors.
@@ -109,6 +115,7 @@ impl Default for InferenceConfig {
     fn default() -> Self {
         Self {
             batch_size: 50,
+            concurrency: 1,
             rate_limit_rpm: 10_000.0,
             rate_limit_tpm: 2_000_000.0,
             cache_policy: CachePolicy::Enabled,
@@ -307,6 +314,9 @@ impl EvalTask {
         if self.inference.batch_size == 0 {
             bail!("batch_size must be >= 1");
         }
+        if self.inference.concurrency == 0 {
+            bail!("inference.concurrency must be >= 1");
+        }
         if self.inference.rate_limit_rpm <= 0.0 || self.inference.rate_limit_tpm <= 0.0 {
             bail!("rate limits must be positive");
         }
@@ -366,6 +376,7 @@ impl EvalTask {
                 "inference",
                 Json::obj(vec![
                     ("batch_size", Json::num(self.inference.batch_size as f64)),
+                    ("concurrency", Json::num(self.inference.concurrency as f64)),
                     ("rate_limit_rpm", Json::num(self.inference.rate_limit_rpm)),
                     ("rate_limit_tpm", Json::num(self.inference.rate_limit_tpm)),
                     ("cache_policy", Json::str(self.inference.cache_policy.as_str())),
@@ -449,6 +460,7 @@ impl EvalTask {
         if let Some(i) = v.opt("inference") {
             task.inference = InferenceConfig {
                 batch_size: i.usize_or("batch_size", 50),
+                concurrency: i.usize_or("concurrency", 1),
                 rate_limit_rpm: i.f64_or("rate_limit_rpm", 10_000.0),
                 rate_limit_tpm: i.f64_or("rate_limit_tpm", 2_000_000.0),
                 cache_policy: CachePolicy::from_str(i.str_or("cache_policy", "enabled"))?,
@@ -624,6 +636,28 @@ mod tests {
 
         let mut bad = EvalTask::default();
         bad.inference.max_cost_usd = Some(0.0);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn concurrency_round_trips_and_validates() {
+        let mut task = EvalTask::default();
+        assert_eq!(task.inference.concurrency, 1, "default must be the sequential path");
+        task.inference.concurrency = 8;
+        let restored = EvalTask::from_json(&task.to_json()).unwrap();
+        assert_eq!(task, restored);
+
+        // A task file that predates the field parses to concurrency 1.
+        let mut json = task.to_json();
+        if let Json::Obj(map) = &mut json {
+            if let Some(Json::Obj(inf)) = map.get_mut("inference") {
+                inf.remove("concurrency");
+            }
+        }
+        assert_eq!(EvalTask::from_json(&json).unwrap().inference.concurrency, 1);
+
+        let mut bad = EvalTask::default();
+        bad.inference.concurrency = 0;
         assert!(bad.validate().is_err());
     }
 

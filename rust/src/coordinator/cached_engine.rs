@@ -85,40 +85,48 @@ impl<E: InferenceEngine> CachedEngine<E> {
             f(m);
         }
     }
-}
 
-impl<E: InferenceEngine> InferenceEngine for CachedEngine<E> {
-    fn initialize(&mut self) -> Result<()> {
-        self.inner.initialize()
-    }
-
-    fn infer(&mut self, request: &InferenceRequest) -> Result<InferenceResponse, ApiError> {
+    /// Cache lookup shared by the blocking and pipelined paths. `Some` is
+    /// a settled outcome (hit, or a replay-mode miss error); `None` means
+    /// the inner engine must be consulted.
+    fn lookup(
+        &mut self,
+        request: &InferenceRequest,
+    ) -> Option<Result<InferenceResponse, ApiError>> {
         let (provider, model) = self.inner.model_id();
-        if let Some(cache) = &self.cache {
-            match cache.get(&request.prompt, &model, &provider, request.temperature, request.max_tokens)
-            {
-                Ok(Some(entry)) => {
-                    self.hits += 1;
-                    self.record(|m| m.record_hit());
-                    return Ok(InferenceResponse {
-                        text: entry.response_text,
-                        input_tokens: entry.input_tokens,
-                        output_tokens: entry.output_tokens,
-                        latency_ms: 0.0, // served locally
-                        cost_usd: 0.0,
-                    });
-                }
-                Ok(None) => {
-                    self.misses += 1;
-                }
-                // Replay-mode miss: surface as a non-recoverable error.
-                Err(e) => {
-                    self.record(|m| m.record_failure());
-                    return Err(ApiError::InvalidRequest(format!("{e}")));
-                }
+        let cache = self.cache.as_ref()?;
+        match cache.get(&request.prompt, &model, &provider, request.temperature, request.max_tokens)
+        {
+            Ok(Some(entry)) => {
+                self.hits += 1;
+                self.record(|m| m.record_hit());
+                Some(Ok(InferenceResponse {
+                    text: entry.response_text,
+                    input_tokens: entry.input_tokens,
+                    output_tokens: entry.output_tokens,
+                    latency_ms: 0.0, // served locally
+                    cost_usd: 0.0,
+                }))
+            }
+            Ok(None) => {
+                self.misses += 1;
+                None
+            }
+            // Replay-mode miss: surface as a non-recoverable error.
+            Err(e) => {
+                self.record(|m| m.record_failure());
+                Some(Err(ApiError::InvalidRequest(format!("{e}"))))
             }
         }
-        let resp = match self.inner.infer(request) {
+    }
+
+    /// Meter and cache-write an inner-engine outcome.
+    fn settle(
+        &mut self,
+        request: &InferenceRequest,
+        result: Result<InferenceResponse, ApiError>,
+    ) -> Result<InferenceResponse, ApiError> {
+        let resp = match result {
             Ok(resp) => resp,
             Err(e) => {
                 self.record(|m| m.record_failure());
@@ -127,6 +135,7 @@ impl<E: InferenceEngine> InferenceEngine for CachedEngine<E> {
         };
         self.record(|m| m.record_call(resp.cost_usd));
         if let Some(cache) = &self.cache {
+            let (provider, model) = self.inner.model_id();
             let _ = cache.put(
                 &request.prompt,
                 &model,
@@ -137,6 +146,40 @@ impl<E: InferenceEngine> InferenceEngine for CachedEngine<E> {
             );
         }
         Ok(resp)
+    }
+}
+
+impl<E: InferenceEngine> InferenceEngine for CachedEngine<E> {
+    fn initialize(&mut self) -> Result<()> {
+        self.inner.initialize()
+    }
+
+    fn infer(&mut self, request: &InferenceRequest) -> Result<InferenceResponse, ApiError> {
+        match self.lookup(request) {
+            Some(served) => served,
+            // Blocking path: the inner `infer` sleeps its own latency.
+            None => {
+                let result = self.inner.infer(request);
+                self.settle(request, result)
+            }
+        }
+    }
+
+    /// Cache middleware for the pipelined path: hits are served locally
+    /// with zero remaining wait; misses defer to the inner engine and
+    /// carry its latency wait through, so in-flight judge slots overlap
+    /// provider latency exactly like main inference.
+    fn infer_deferred(
+        &mut self,
+        request: &InferenceRequest,
+    ) -> (Result<InferenceResponse, ApiError>, f64) {
+        match self.lookup(request) {
+            Some(served) => (served, 0.0),
+            None => {
+                let (result, wait_secs) = self.inner.infer_deferred(request);
+                (self.settle(request, result), wait_secs)
+            }
+        }
     }
 
     fn shutdown(&mut self) {

@@ -8,11 +8,14 @@ use super::runner::EvalRunner;
 use crate::config::EvalTask;
 use crate::data::DataFrame;
 use crate::metrics::judge::{pairwise_prompt, parse_verdict};
+use crate::providers::pipeline::PipelinedClient;
+use crate::providers::retry::RetryPolicy;
 use crate::providers::simulated::SimEngine;
 use crate::providers::{InferenceEngine, InferenceRequest};
 use crate::sched::{run_scheduled_ext, TaskCheckpoint, TaskSink};
 use crate::stats::special::binom_test_half;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 
 /// Verdict for one example pair.
@@ -91,15 +94,17 @@ impl EvalRunner {
     /// (through cache/rate-limit machinery via `evaluate`-style inference),
     /// then judge each response pair in both presentation orders.
     ///
-    /// Judging runs through the task scheduler (`task_a.scheduler`): one
-    /// cached judge engine per executor, contiguous pair blocks as tasks,
-    /// with work stealing / speculation / retry. Verdicts come back in row
-    /// order, and judge response *content* is keyed on prompt text alone,
-    /// so absent transient provider faults the outcome is identical to
-    /// sequential judging. Injected 5xx faults are drawn per engine call
-    /// sequence and the judge path (like the sequential one it replaced)
-    /// does not retry, so under a nonzero `server_error_rate` *which*
-    /// pairs land as `Unscored` can vary with the schedule.
+    /// Judging runs through the task scheduler (`task_a.scheduler`):
+    /// `inference.concurrency`-many cached judge engines per executor
+    /// (both presentation orders of a batch's pairs pipeline in flight
+    /// together), contiguous pair blocks as tasks, with work stealing /
+    /// speculation / retry. Verdicts come back in row order, and judge
+    /// response *content* is keyed on prompt text alone, so absent
+    /// transient provider faults the outcome is identical to sequential
+    /// judging. Injected 5xx faults are drawn per engine call sequence
+    /// and the judge path (like the sequential one it replaced) does not
+    /// retry, so under a nonzero `server_error_rate` *which* pairs land
+    /// as `Unscored` can vary with the schedule and concurrency.
     pub fn evaluate_pairwise(
         &self,
         df: &DataFrame,
@@ -138,6 +143,13 @@ impl EvalRunner {
             sink: Some(TaskSink { stage, encode: &encode_verdict }),
         });
 
+        // Judge calls pipeline like main inference (`inference.concurrency`
+        // from task A): each executor multiplexes its pair-judging calls
+        // over concurrency-many cached judge engines. The judge path has
+        // never retried or rate-limited (parse failures score Unscored),
+        // so the pipeline runs with retries and the bucket disabled.
+        let concurrency = task_a.inference.concurrency.max(1);
+
         let out = run_scheduled_ext(
             df,
             task_a.executors,
@@ -146,35 +158,85 @@ impl EvalRunner {
             None,
             checkpoint,
             self.abort.as_deref(),
-            |_eid| {
-                let mut engine =
-                    SimEngine::new(service.clone(), judge_provider, judge_model, clock.clone())?;
-                engine.initialize()?;
-                Ok(CachedEngine::new(engine, cache.clone()))
+            |eid| {
+                let mut slots: Vec<Box<dyn InferenceEngine>> = Vec::with_capacity(concurrency);
+                for _ in 0..concurrency {
+                    let mut engine = SimEngine::new(
+                        service.clone(),
+                        judge_provider,
+                        judge_model,
+                        clock.clone(),
+                    )?;
+                    engine.initialize()?;
+                    slots.push(Box::new(CachedEngine::new(engine, cache.clone())));
+                }
+                let rngs =
+                    (0..concurrency).map(|s| Rng::with_stream(eid as u64, s as u64)).collect();
+                Ok(PipelinedClient::new(
+                    slots,
+                    rngs,
+                    RetryPolicy { max_retries: 0, ..Default::default() },
+                    None,
+                    clock.clone(),
+                ))
             },
             |judge, df, slice| {
-                let mut verdicts = Vec::with_capacity(slice.len());
-                for i in slice.indices() {
-                    let (Some(resp_a), Some(resp_b)) = (&rows_a[i].response, &rows_b[i].response)
+                if judge.concurrency() == 1 {
+                    // Sequential path, identical to the pre-pipeline one.
+                    let (engine, _rng, _bucket) = judge.sequential_parts();
+                    let mut verdicts = Vec::with_capacity(slice.len());
+                    for i in slice.indices() {
+                        let (Some(resp_a), Some(resp_b)) =
+                            (&rows_a[i].response, &rows_b[i].response)
+                        else {
+                            verdicts.push(PairVerdict::Unscored);
+                            continue;
+                        };
+                        let row = df.row(i);
+                        let question = row.str(&task_a.data.question_column);
+                        let reference = row.str(&task_a.data.reference_column);
+
+                        // Judge both presentation orders.
+                        let fwd =
+                            judge_once(engine, rubric, question, resp_a, resp_b, reference);
+                        let rev =
+                            judge_once(engine, rubric, question, resp_b, resp_a, reference);
+                        verdicts.push(settle_pair(fwd, rev));
+                    }
+                    return Ok(verdicts);
+                }
+
+                // Pipelined path: both presentation orders of every
+                // judgeable pair in the batch go in flight together
+                // (requests 2k / 2k+1 are pair k's forward/reverse).
+                let mut requests: Vec<InferenceRequest> = Vec::new();
+                let mut judged: Vec<usize> = Vec::new();
+                for (k, i) in slice.indices().enumerate() {
+                    let (Some(resp_a), Some(resp_b)) =
+                        (&rows_a[i].response, &rows_b[i].response)
                     else {
-                        verdicts.push(PairVerdict::Unscored);
                         continue;
                     };
                     let row = df.row(i);
                     let question = row.str(&task_a.data.question_column);
                     let reference = row.str(&task_a.data.reference_column);
-
-                    // Judge both presentation orders.
-                    let fwd = judge_once(judge, rubric, question, resp_a, resp_b, reference);
-                    let rev = judge_once(judge, rubric, question, resp_b, resp_a, reference);
-                    verdicts.push(match (fwd, rev) {
-                        // fwd 'A' means A wins; rev 'A' means B wins
-                        // (order swapped).
-                        (Some('A'), Some('B')) => PairVerdict::AWins,
-                        (Some('B'), Some('A')) => PairVerdict::BWins,
-                        (Some(_), Some(_)) => PairVerdict::Inconsistent,
-                        _ => PairVerdict::Unscored,
-                    });
+                    requests.push(InferenceRequest::new(pairwise_prompt(
+                        rubric, question, resp_a, resp_b, reference,
+                    )));
+                    requests.push(InferenceRequest::new(pairwise_prompt(
+                        rubric, question, resp_b, resp_a, reference,
+                    )));
+                    judged.push(k);
+                }
+                let batch = judge.run_batch(&requests, &|_req: &InferenceRequest| 0.0, None)?;
+                let mut verdicts = vec![PairVerdict::Unscored; slice.len()];
+                for (j, &k) in judged.iter().enumerate() {
+                    let parse = |o: &crate::providers::retry::RetryOutcome| {
+                        o.result.as_ref().ok().and_then(|r| parse_verdict(&r.text))
+                    };
+                    let fwd = parse(&batch.outcomes[2 * j]);
+                    let rev = parse(&batch.outcomes[2 * j + 1]);
+                    verdicts[k] = settle_pair(fwd, rev);
                 }
                 Ok(verdicts)
             },
@@ -220,6 +282,17 @@ fn judge_once(
 ) -> Option<char> {
     let req = InferenceRequest::new(pairwise_prompt(rubric, question, first, second, reference));
     judge.infer(&req).ok().and_then(|r| parse_verdict(&r.text))
+}
+
+/// Combine both presentation orders into a verdict: fwd 'A' means A wins;
+/// rev 'A' means B wins (order swapped).
+fn settle_pair(fwd: Option<char>, rev: Option<char>) -> PairVerdict {
+    match (fwd, rev) {
+        (Some('A'), Some('B')) => PairVerdict::AWins,
+        (Some('B'), Some('A')) => PairVerdict::BWins,
+        (Some(_), Some(_)) => PairVerdict::Inconsistent,
+        _ => PairVerdict::Unscored,
+    }
 }
 
 #[cfg(test)]

@@ -1,6 +1,7 @@
 //! Result types produced by the evaluation runner.
 
 use super::cached_engine::CallStats;
+use crate::engine::ExecutorStats;
 use crate::metrics::MetricReport;
 use crate::sched::{SchedulerStats, TaskRecord};
 use crate::stats::{ConfidenceInterval, EffectSize, TestChoice, TestResult};
@@ -69,6 +70,14 @@ pub struct InferenceStats {
     pub sched: SchedulerStats,
     /// Per-task-attempt timeline of the inference stage.
     pub timeline: Vec<TaskRecord>,
+    /// Configured in-executor concurrency (`inference.concurrency`).
+    pub concurrency: usize,
+    /// Peak simultaneously in-flight provider requests observed across
+    /// all executors' pipelines (≤ `concurrency` per executor).
+    pub peak_in_flight: usize,
+    /// Per-executor occupancy telemetry: rows, batches, wall-clock busy
+    /// time (pipeline occupancy, never summed latency), peak in-flight.
+    pub executors: Vec<ExecutorStats>,
 }
 
 /// Complete evaluation outcome.
@@ -119,6 +128,26 @@ impl EvalResult {
                     ("latency_p50_ms", Json::num(self.inference.latency_p50_ms)),
                     ("latency_p99_ms", Json::num(self.inference.latency_p99_ms)),
                     ("throughput_per_min", Json::num(self.inference.throughput_per_min)),
+                    ("concurrency", Json::num(self.inference.concurrency as f64)),
+                    ("peak_in_flight", Json::num(self.inference.peak_in_flight as f64)),
+                    (
+                        "executors",
+                        Json::arr(
+                            self.inference
+                                .executors
+                                .iter()
+                                .map(|e| {
+                                    Json::obj(vec![
+                                        ("executor_id", Json::num(e.executor_id as f64)),
+                                        ("rows_processed", Json::num(e.rows_processed as f64)),
+                                        ("batches", Json::num(e.batches as f64)),
+                                        ("busy_secs", Json::num(e.busy_secs)),
+                                        ("peak_in_flight", Json::num(e.peak_in_flight as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
             (

@@ -2,7 +2,7 @@
 //! prompt preparation → distributed inference → metric computation →
 //! statistical aggregation.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
@@ -19,6 +19,7 @@ use crate::metrics::{
     ResolvedMetric, ScoreBatch,
 };
 use crate::sched::{run_scheduled, run_scheduled_ext, TaskCheckpoint, TaskSink};
+use crate::providers::pipeline::PipelinedClient;
 use crate::providers::retry::{infer_with_retry, RetryPolicy};
 use crate::providers::simulated::{SimEngine, SimService, SimServiceConfig};
 use crate::providers::tokenizer::estimate_request_tokens;
@@ -306,16 +307,121 @@ impl EvalRunner {
         let stage_abort = abort.clone();
 
         struct ExecState {
-            engine: SimEngine,
-            bucket: TokenBucket,
-            rng: Rng,
+            /// Multiplexes up to `inference.concurrency` in-flight
+            /// requests over slot engines sharing one token bucket.
+            client: PipelinedClient,
         }
+
+        let concurrency = inf.concurrency.max(1);
+        // Per-executor peak in-flight occupancy, folded into the stats
+        // after the job (indexed by the executor that ran each batch).
+        let peaks: Vec<AtomicUsize> = (0..executors).map(|_| AtomicUsize::new(0)).collect();
 
         let encode_row = |r: &RowInference| r.to_json();
         let checkpoint = checkpoint_stage.as_ref().map(|stage| TaskCheckpoint {
             restored,
             sink: Some(TaskSink { stage, encode: &encode_row }),
         });
+
+        let estimate =
+            |req: &InferenceRequest| estimate_request_tokens(&req.prompt, req.max_tokens) as f64;
+
+        // Per-completion spend accounting + cost-budget watchdog. Fires
+        // as each request settles — the pipelined path invokes it from
+        // the slot workers while the rest of the batch is still in
+        // flight, so a budget trip raises the abort flag at per-request
+        // granularity on both paths (the scheduler then winds the job
+        // down between batches, keeping completed/checkpointed tasks).
+        let account = |outcome: &crate::providers::retry::RetryOutcome| {
+            let mut s = spend.lock().unwrap();
+            s.0 += outcome.attempts as u64;
+            if let Ok(resp) = &outcome.result {
+                s.1 += (outcome.attempts - 1) as u64;
+                s.2 += resp.cost_usd;
+                if let (Some(budget), Some(flag)) = (inf.max_cost_usd, &stage_abort) {
+                    if s.2 > budget {
+                        flag.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+        };
+
+        // Row assembly for one settled (and already accounted) provider
+        // outcome: cache write + RowInference.
+        let assemble = |outcome: crate::providers::retry::RetryOutcome,
+                        prompt: &str|
+         -> Result<RowInference> {
+            match outcome.result {
+                Ok(resp) => {
+                    if inf.cache_policy.writes() {
+                        if let Some(cache) = &cache {
+                            cache.put(
+                                prompt,
+                                &model_cfg.model_name,
+                                &model_cfg.provider,
+                                model_cfg.temperature,
+                                model_cfg.max_tokens,
+                                &resp,
+                            )?;
+                        }
+                    }
+                    Ok(RowInference {
+                        response: Some(resp.text),
+                        from_cache: false,
+                        latency_ms: resp.latency_ms,
+                        cost_usd: resp.cost_usd,
+                        attempts: outcome.attempts,
+                        error: None,
+                    })
+                }
+                Err(e) => Ok(RowInference {
+                    response: None,
+                    from_cache: false,
+                    latency_ms: 0.0,
+                    cost_usd: 0.0,
+                    attempts: outcome.attempts,
+                    error: Some(e.to_string()),
+                }),
+            }
+        };
+
+        // Cache lookup for one prompt; `Some` short-circuits inference.
+        let cache_lookup = |prompt: &str, i: usize| -> Result<Option<RowInference>> {
+            if inf.cache_policy.reads() {
+                if let Some(cache) = &cache {
+                    match cache.get(
+                        prompt,
+                        &model_cfg.model_name,
+                        &model_cfg.provider,
+                        model_cfg.temperature,
+                        model_cfg.max_tokens,
+                    ) {
+                        Ok(Some(entry)) => {
+                            return Ok(Some(RowInference {
+                                response: Some(entry.response_text),
+                                from_cache: true,
+                                latency_ms: 0.0,
+                                cost_usd: 0.0,
+                                attempts: 0,
+                                error: None,
+                            }));
+                        }
+                        Ok(None) => {}
+                        Err(e) => {
+                            if replay_strict {
+                                return Err(e);
+                            }
+                        }
+                    }
+                } else if replay_strict {
+                    bail!("replay mode requires an open cache");
+                }
+            }
+            if replay_strict {
+                bail!("replay mode: cache miss for example {i}");
+            }
+            Ok(None)
+        };
 
         let out = run_scheduled_ext(
             &df,
@@ -326,140 +432,108 @@ impl EvalRunner {
             checkpoint,
             abort.as_deref(),
             |eid| {
-                let mut engine = SimEngine::new(
-                    service.clone(),
-                    &model_cfg.provider,
-                    &model_cfg.model_name,
-                    clock.clone(),
-                )?;
-                engine.initialize()?;
+                // One engine per concurrency slot (the paper's
+                // `_ENGINE_CACHE`, widened): slot 0 at concurrency 1 is
+                // exactly the old single engine, including its rng stream
+                // and call sequence.
+                let mut slots: Vec<Box<dyn InferenceEngine>> = Vec::with_capacity(concurrency);
+                for _ in 0..concurrency {
+                    let mut engine = SimEngine::new(
+                        service.clone(),
+                        &model_cfg.provider,
+                        &model_cfg.model_name,
+                        clock.clone(),
+                    )?;
+                    engine.initialize()?;
+                    slots.push(Box::new(engine));
+                }
+                let rngs = (0..concurrency)
+                    .map(|s| Rng::with_stream(seed, eid as u64 ^ ((s as u64) << 32)))
+                    .collect();
+                let bucket = TokenBucket::per_executor(
+                    inf.rate_limit_rpm,
+                    inf.rate_limit_tpm,
+                    executors,
+                    clock.as_ref(),
+                );
                 Ok(ExecState {
-                    engine,
-                    bucket: TokenBucket::per_executor(
-                        inf.rate_limit_rpm,
-                        inf.rate_limit_tpm,
-                        executors,
-                        clock.as_ref(),
+                    client: PipelinedClient::new(
+                        slots,
+                        rngs,
+                        policy,
+                        Some(bucket),
+                        clock.clone(),
                     ),
-                    rng: Rng::with_stream(seed, eid as u64),
                 })
             },
             |state, df, slice| {
-                let mut rows = Vec::with_capacity(slice.len());
-                for i in slice.indices() {
-                    // Mirror the caller's abort handle into the stage
-                    // flag (no-op when they are the same flag).
-                    if let (Some(ext), Some(local)) = (&external_abort, &stage_abort) {
-                        if ext.load(Ordering::Relaxed) {
-                            local.store(true, Ordering::Relaxed);
-                        }
-                    }
-                    let prompt = df.row(i).str("prompt");
-                    // Cache lookup first: hits bypass the rate limiter.
-                    if inf.cache_policy.reads() {
-                        if let Some(cache) = &cache {
-                            match cache.get(
-                                prompt,
-                                &model_cfg.model_name,
-                                &model_cfg.provider,
-                                model_cfg.temperature,
-                                model_cfg.max_tokens,
-                            ) {
-                                Ok(Some(entry)) => {
-                                    rows.push(RowInference {
-                                        response: Some(entry.response_text),
-                                        from_cache: true,
-                                        latency_ms: 0.0,
-                                        cost_usd: 0.0,
-                                        attempts: 0,
-                                        error: None,
-                                    });
-                                    continue;
-                                }
-                                Ok(None) => {}
-                                Err(e) => {
-                                    if replay_strict {
-                                        return Err(e);
-                                    }
-                                }
+                if state.client.concurrency() == 1 {
+                    // Sequential path — the exact pre-pipeline per-row
+                    // loop (cache lookup, blocking admission, retry,
+                    // cache write interleaved), bit-identical to the old
+                    // hot path.
+                    let (engine, rng, bucket) = state.client.sequential_parts();
+                    let bucket = bucket.expect("inference client always has a bucket");
+                    let mut rows = Vec::with_capacity(slice.len());
+                    for i in slice.indices() {
+                        // Mirror the caller's abort handle into the stage
+                        // flag (no-op when they are the same flag).
+                        if let (Some(ext), Some(local)) = (&external_abort, &stage_abort) {
+                            if ext.load(Ordering::Relaxed) {
+                                local.store(true, Ordering::Relaxed);
                             }
-                        } else if replay_strict {
-                            bail!("replay mode requires an open cache");
                         }
-                    }
-                    if replay_strict {
-                        bail!("replay mode: cache miss for example {i}");
-                    }
+                        let prompt = df.row(i).str("prompt");
+                        if let Some(hit) = cache_lookup(prompt, i)? {
+                            rows.push(hit);
+                            continue;
+                        }
 
-                    // Algorithm 1: acquire request + token budget.
-                    let est = estimate_request_tokens(prompt, model_cfg.max_tokens) as f64;
-                    state.bucket.acquire(est, clock.as_ref());
+                        // Algorithm 1: acquire request + token budget.
+                        let mut req = InferenceRequest::new(prompt);
+                        req.max_tokens = model_cfg.max_tokens;
+                        req.temperature = model_cfg.temperature;
+                        bucket.acquire(estimate(&req), clock.as_ref());
+                        let outcome =
+                            infer_with_retry(engine, &req, &policy, clock.as_ref(), rng);
+                        peaks[slice.executor_id].fetch_max(1, Ordering::Relaxed);
+                        account(&outcome);
+                        rows.push(assemble(outcome, prompt)?);
+                    }
+                    return Ok(rows);
+                }
 
+                // Pipelined path: resolve the whole batch's cache hits
+                // first (clock-free), then drive every miss through the
+                // slot pipeline so their provider latencies overlap.
+                if let (Some(ext), Some(local)) = (&external_abort, &stage_abort) {
+                    if ext.load(Ordering::Relaxed) {
+                        local.store(true, Ordering::Relaxed);
+                    }
+                }
+                let mut rows: Vec<Option<RowInference>> =
+                    (0..slice.len()).map(|_| None).collect();
+                let mut miss_at: Vec<usize> = Vec::new();
+                let mut miss_reqs: Vec<InferenceRequest> = Vec::new();
+                for (k, i) in slice.indices().enumerate() {
+                    let prompt = df.row(i).str("prompt");
+                    if let Some(hit) = cache_lookup(prompt, i)? {
+                        rows[k] = Some(hit);
+                        continue;
+                    }
                     let mut req = InferenceRequest::new(prompt);
                     req.max_tokens = model_cfg.max_tokens;
                     req.temperature = model_cfg.temperature;
-                    let outcome = infer_with_retry(
-                        &mut state.engine,
-                        &req,
-                        &policy,
-                        clock.as_ref(),
-                        &mut state.rng,
-                    );
-                    match outcome.result {
-                        Ok(resp) => {
-                            if inf.cache_policy.writes() {
-                                if let Some(cache) = &cache {
-                                    cache.put(
-                                        prompt,
-                                        &model_cfg.model_name,
-                                        &model_cfg.provider,
-                                        model_cfg.temperature,
-                                        model_cfg.max_tokens,
-                                        &resp,
-                                    )?;
-                                }
-                            }
-                            {
-                                let mut s = spend.lock().unwrap();
-                                s.0 += outcome.attempts as u64;
-                                s.1 += (outcome.attempts - 1) as u64;
-                                s.2 += resp.cost_usd;
-                                // Cost-budget watchdog: crossing the cap
-                                // raises the shared abort flag; the
-                                // scheduler winds the job down between
-                                // batches, keeping completed (and
-                                // checkpointed) tasks.
-                                if let (Some(budget), Some(flag)) =
-                                    (inf.max_cost_usd, &stage_abort)
-                                {
-                                    if s.2 > budget {
-                                        flag.store(true, Ordering::Relaxed);
-                                    }
-                                }
-                            }
-                            rows.push(RowInference {
-                                response: Some(resp.text),
-                                from_cache: false,
-                                latency_ms: resp.latency_ms,
-                                cost_usd: resp.cost_usd,
-                                attempts: outcome.attempts,
-                                error: None,
-                            });
-                        }
-                        Err(e) => {
-                            spend.lock().unwrap().0 += outcome.attempts as u64;
-                            rows.push(RowInference {
-                                response: None,
-                                from_cache: false,
-                                latency_ms: 0.0,
-                                cost_usd: 0.0,
-                                attempts: outcome.attempts,
-                                error: Some(e.to_string()),
-                            })
-                        }
-                    }
+                    miss_at.push(k);
+                    miss_reqs.push(req);
                 }
-                Ok(rows)
+                let batch = state.client.run_batch(&miss_reqs, &estimate, Some(&account))?;
+                peaks[slice.executor_id]
+                    .fetch_max(batch.stats.peak_in_flight, Ordering::Relaxed);
+                for (j, outcome) in batch.outcomes.into_iter().enumerate() {
+                    rows[miss_at[j]] = Some(assemble(outcome, &miss_reqs[j].prompt)?);
+                }
+                Ok(rows.into_iter().map(|r| r.expect("every row settled")).collect())
             },
         )?;
 
@@ -467,12 +541,20 @@ impl EvalRunner {
         // fall back to real wall time so throughput stays meaningful.
         let wall = (self.clock.now() - t0).max(wall0.elapsed().as_secs_f64()).max(1e-9);
         let rows = out.rows;
+        // Fold per-executor pipeline occupancy into the executor stats.
+        let mut exec_stats = out.executors;
+        for e in &mut exec_stats {
+            e.peak_in_flight = peaks[e.executor_id].load(Ordering::Relaxed);
+        }
         let mut stats = InferenceStats {
             examples: rows.len(),
             wall_secs: wall,
             throughput_per_min: rows.len() as f64 / wall * 60.0,
             sched: out.sched,
             timeline: out.timeline,
+            concurrency,
+            peak_in_flight: exec_stats.iter().map(|e| e.peak_in_flight).max().unwrap_or(0),
+            executors: exec_stats,
             ..Default::default()
         };
         // True provider spend over every attempt (speculative duplicates
@@ -938,6 +1020,8 @@ impl EvalRunner {
             throughput_per_min: rows.len() as f64 / wall * 60.0,
             sched: out.sched,
             timeline: out.timeline,
+            concurrency: task.inference.concurrency,
+            executors: out.executors,
             ..Default::default()
         };
         // Zero API calls by construction; account lookup traffic only.

@@ -22,8 +22,17 @@ pub struct ExecutorStats {
     pub executor_id: usize,
     pub rows_processed: usize,
     pub batches: usize,
-    /// Seconds spent inside the UDF (busy time).
+    /// Wall-clock seconds this executor spent inside the UDF — **pipeline
+    /// occupancy**, not summed per-request latency: a batch that overlaps
+    /// eight in-flight requests accrues its elapsed wall time once, so
+    /// `busy_secs` never exceeds the executor's share of job wall time.
     pub busy_secs: f64,
+    /// Peak number of simultaneously in-flight provider requests observed
+    /// in this executor's pipelined batches (0 for stages that do not
+    /// pipeline; 1 on the sequential path). Populated by pipelined UDFs
+    /// ([`crate::coordinator::EvalRunner::run_inference`]); the scheduler
+    /// itself does not track it.
+    pub peak_in_flight: usize,
 }
 
 /// Job-level outcome: per-row outputs in row order + telemetry.

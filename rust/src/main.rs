@@ -4,7 +4,7 @@
 //! slleval generate  --n 10000 --seed 42 --out data.jsonl
 //! slleval run       --config task.json [--data data.jsonl | --n 1000]
 //!                   [--cache-dir .slleval-cache] [--track runs/] [--fast]
-//!                   [--checkpoint run_dir | --resume run_dir]
+//!                   [--checkpoint run_dir | --resume run_dir] [--concurrency 8]
 //! slleval compare   --config task.json --model-b gpt-4o-mini [--provider-b openai]
 //!                   [--checkpoint run_dir | --resume run_dir]
 //! slleval replay    --config task.json --cache-dir .slleval-cache
@@ -12,7 +12,13 @@
 //!                   [--checkpoint run_dir] [--allow-missing] [--out result.json]
 //! slleval tables    [--table fig2|tab3|tab4|tab5|tab6|typei|all]
 //! slleval sim       --executors 8 --n 10000 [--rpm 10000]
+//! slleval checkpoint compact <run_dir>
 //! ```
+//!
+//! `--concurrency N` (or `inference.concurrency` in the task JSON) makes
+//! each executor multiplex N in-flight provider requests through the
+//! pipelined batch client, overlapping round-trip latency; 1 (default)
+//! is the sequential path.
 //!
 //! `--checkpoint <run_dir>` spills every completed scheduler task to
 //! `run_dir` crash-safely; after an interruption (crash, Ctrl-C, cost
@@ -60,8 +66,9 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("rescore") => cmd_rescore(args),
         Some("tables") => cmd_tables(args),
         Some("sim") => cmd_sim(args),
+        Some("checkpoint") => cmd_checkpoint(args),
         Some(other) => bail!(
-            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim)"
+            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim, checkpoint)"
         ),
         None => {
             print_usage();
@@ -72,8 +79,11 @@ fn dispatch(args: &Args) -> Result<()> {
 
 fn print_usage() {
     println!("slleval — distributed, statistically rigorous LLM evaluation");
-    println!("subcommands: generate | run | compare | replay | rescore | tables | sim");
+    println!(
+        "subcommands: generate | run | compare | replay | rescore | tables | sim | checkpoint"
+    );
     println!("  rescore: recompute metrics from a cache/checkpoint, zero inference calls");
+    println!("  checkpoint compact <run_dir>: coalesce per-task manifest records per stage");
     println!("see README.md for full usage");
 }
 
@@ -111,6 +121,10 @@ fn load_task(args: &Args) -> Result<EvalTask> {
         task.checkpoint.dir = Some(dir.to_string());
         task.checkpoint.resume = false;
     }
+    // In-executor concurrency: how many provider requests each executor
+    // keeps in flight (1 = the sequential pre-pipeline path).
+    task.inference.concurrency = args.get_usize("concurrency", task.inference.concurrency);
+    task.validate()?;
     Ok(task)
 }
 
@@ -307,6 +321,32 @@ fn cmd_tables(args: &Args) -> Result<()> {
         println!("{}", tables::type_i_error(n, 100).1);
     }
     Ok(())
+}
+
+fn cmd_checkpoint(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("compact") => {
+            let dir = args
+                .positional
+                .get(1)
+                .context("usage: slleval checkpoint compact <run_dir>")?;
+            let run = spark_llm_eval::checkpoint::RunCheckpoint::resume(Path::new(dir))?;
+            let report = run.compact()?;
+            if report.is_empty() {
+                println!("no checkpoint stages found in {dir}");
+                return Ok(());
+            }
+            for stage in &report {
+                println!(
+                    "{}: {} -> {} manifest records ({} run(s) coalesced)",
+                    stage.stage, stage.records_before, stage.records_after, stage.coalesced_runs
+                );
+            }
+            println!("compacted {} stage(s) in {dir}", report.len());
+            Ok(())
+        }
+        _ => bail!("usage: slleval checkpoint compact <run_dir>"),
+    }
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {

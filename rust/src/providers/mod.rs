@@ -8,6 +8,7 @@
 //! different models produce measurably different metric scores (see
 //! DESIGN.md §1 for why this preserves the paper's claims).
 
+pub mod pipeline;
 pub mod pricing;
 pub mod retry;
 pub mod simulated;
@@ -89,6 +90,27 @@ impl ApiError {
 pub trait InferenceEngine: Send {
     fn initialize(&mut self) -> Result<()>;
     fn infer(&mut self, request: &InferenceRequest) -> Result<InferenceResponse, ApiError>;
+
+    /// Issue `request` without waiting out its delivery latency: returns
+    /// the provider outcome plus the remaining wait (seconds) before the
+    /// response is actually in hand. Engines that block for the full round
+    /// trip inside `infer` resolve everything inline and return `0.0`;
+    /// latency-simulating engines ([`simulated::SimEngine`]) return the
+    /// simulated latency instead of sleeping it, so a pipelined client
+    /// ([`pipeline::PipelinedClient`]) can overlap waits across in-flight
+    /// slots. Invariant: `infer` ≡ `infer_deferred` followed by sleeping
+    /// the returned wait on the engine's clock.
+    fn infer_deferred(
+        &mut self,
+        request: &InferenceRequest,
+    ) -> (Result<InferenceResponse, ApiError>, f64) {
+        (self.infer(request), 0.0)
+    }
+
+    /// Sequential batch fallback. The throughput-bearing batch path is
+    /// [`pipeline::PipelinedClient::run_batch`], which multiplexes up to
+    /// `inference.concurrency` in-flight requests over slot engines; this
+    /// default exists for engines used outside the pipelined hot path.
     fn infer_batch(
         &mut self,
         requests: &[InferenceRequest],

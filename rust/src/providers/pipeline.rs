@@ -1,0 +1,864 @@
+//! In-executor pipelined inference: a hand-rolled submit/poll completion-
+//! queue client that multiplexes up to `concurrency` in-flight requests
+//! per executor (the paper's §3.1 throughput model, previously only
+//! simulated by [`crate::sim::SimParams::concurrency`]).
+//!
+//! No async runtime: the offline crate set has no tokio, so concurrency is
+//! built from scoped worker threads and a slot-limited completion queue.
+//! One [`PipelinedClient`] lives inside each executor's local state
+//! (Listing 1's `_ENGINE_CACHE`), owning `concurrency` slot engines, a
+//! shared rate-limit token bucket, and the retry policy. A batch is
+//! *submitted* by striding its requests over the slots (request `i` goes
+//! to slot `i % concurrency` — deterministic, so per-slot engine call
+//! sequences replay identically run to run); each slot worker drives its
+//! requests through admission → issue → latency wait → retry, and posts
+//! finished requests to the completion queue, which the driver *polls*
+//! back into request order.
+//!
+//! What makes the overlap real on both clock regimes:
+//!
+//! - engines issue through [`InferenceEngine::infer_deferred`], which
+//!   returns the response together with the **remaining delivery wait**
+//!   instead of sleeping it out internally;
+//! - on a wall clock each slot worker sleeps its own wait — OS threads
+//!   overlap physically, so a batch costs max-completion, not
+//!   sum-of-latencies;
+//! - on a virtual clock ([`Clock::is_virtual`]) independent sleeps would
+//!   *serialize* (each `sleep` advances shared time), so waits go through
+//!   a [`LatencyGate`]: workers park their deadlines and, only once every
+//!   live slot is parked, the gate advances the clock to the **earliest**
+//!   deadline — a miniature discrete-event engine that makes a
+//!   latency-bound batch cost ~1/concurrency of its sequential virtual
+//!   wall time.
+//!
+//! Semantics preserved from the sequential path:
+//!
+//! - **retry/backoff** per request matches
+//!   [`crate::providers::retry::infer_with_retry`]: recoverable errors
+//!   back off exponentially (slept through the gate) and retry on the
+//!   *same slot engine*, so only the failed slot stalls — its siblings
+//!   keep draining their requests;
+//! - **rate limiting**: all slots consume one shared [`TokenBucket`]
+//!   ([`TokenBucket::acquire_at`]), so `concurrency` multiplies in-flight
+//!   latency overlap but never the configured RPM/TPM budget;
+//! - **panics** in a slot are caught per request and surfaced as an error
+//!   from [`PipelinedClient::run_batch`], which the task scheduler then
+//!   treats as a retryable task failure (PR 2 semantics) instead of
+//!   tearing the pool down;
+//! - `concurrency == 1` bypasses the machinery entirely and runs the
+//!   exact sequential admission + [`infer_with_retry`] loop, bit-identical
+//!   to the pre-pipeline path.
+
+use super::retry::{infer_with_retry, RetryOutcome, RetryPolicy};
+use super::{InferenceEngine, InferenceRequest};
+use crate::ratelimit::{Clock, TokenBucket};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Occupancy telemetry for one pipelined batch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineStats {
+    /// Requests driven through the pipeline.
+    pub requests: usize,
+    /// Peak number of simultaneously in-flight requests observed
+    /// (issued, response not yet delivered).
+    pub peak_in_flight: usize,
+}
+
+/// One batch's outcome: per-request results in submission order.
+#[derive(Debug)]
+pub struct BatchOutput {
+    pub outcomes: Vec<RetryOutcome>,
+    pub stats: PipelineStats,
+}
+
+/// Coordinates latency waits for one pipelined batch. On a wall clock
+/// each waiter simply sleeps (threads overlap physically); on a virtual
+/// clock workers park their deadlines and the gate advances shared time
+/// to the earliest deadline only once every live slot is parked, so
+/// concurrent waits overlap instead of serializing.
+struct LatencyGate {
+    clock: Arc<dyn Clock>,
+    state: Mutex<GateState>,
+    woken: Condvar,
+}
+
+struct GateState {
+    /// Slots still running the batch (not yet exited).
+    active: usize,
+    /// Deadline per parked slot (`None` = running or released).
+    parked: Vec<Option<f64>>,
+}
+
+impl GateState {
+    fn parked_count(&self) -> usize {
+        self.parked.iter().flatten().count()
+    }
+}
+
+impl LatencyGate {
+    fn new(clock: Arc<dyn Clock>, slots: usize) -> Self {
+        Self {
+            clock,
+            state: Mutex::new(GateState { active: slots, parked: vec![None; slots] }),
+            woken: Condvar::new(),
+        }
+    }
+
+    /// Under the lock: every live slot is parked — advance the clock to
+    /// the earliest pending deadline and release every slot it satisfies.
+    fn advance_locked(&self, st: &mut GateState) {
+        let min = st.parked.iter().flatten().cloned().fold(f64::INFINITY, f64::min);
+        if !min.is_finite() {
+            return;
+        }
+        let now = self.clock.now();
+        if min > now {
+            self.clock.sleep(min - now);
+        }
+        // Another executor's pipeline may have advanced the shared clock
+        // past several of our deadlines; release everything satisfied.
+        let now = self.clock.now();
+        for slot in st.parked.iter_mut() {
+            if slot.is_some_and(|d| d <= now) {
+                *slot = None;
+            }
+        }
+        self.woken.notify_all();
+    }
+
+    /// Block slot `slot` until the clock reaches `deadline`.
+    fn wait_until(&self, slot: usize, deadline: f64) {
+        if !self.clock.is_virtual() {
+            let delay = deadline - self.clock.now();
+            if delay > 0.0 {
+                self.clock.sleep(delay);
+            }
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if self.clock.now() >= deadline {
+                st.parked[slot] = None;
+                return;
+            }
+            st.parked[slot] = Some(deadline);
+            if st.parked_count() >= st.active {
+                self.advance_locked(&mut st);
+                continue;
+            }
+            st = self.woken.wait(st).unwrap();
+        }
+    }
+
+    /// Slot `slot` finished its requests (or unwound): it no longer
+    /// counts toward the everyone-parked condition. If the survivors are
+    /// all parked, advance on their behalf — without this, a finished
+    /// slot would leave its siblings waiting forever.
+    fn exit(&self, slot: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.parked[slot] = None;
+        st.active -= 1;
+        if st.active > 0 && st.parked_count() >= st.active {
+            self.advance_locked(&mut st);
+        }
+    }
+}
+
+/// Release the gate and the completion queue even when the worker
+/// unwinds, so a dying slot can never strand its parked siblings or leave
+/// the driver polling forever.
+struct WorkerExitGuard<'a> {
+    gate: &'a LatencyGate,
+    queue: &'a CompletionQueue,
+    slot: usize,
+}
+
+impl Drop for WorkerExitGuard<'_> {
+    fn drop(&mut self) {
+        self.gate.exit(self.slot);
+        self.queue.worker_done();
+    }
+}
+
+/// Slot-limited completion queue: workers push finished requests, the
+/// driver polls them back out. Completion order is whatever the schedule
+/// produced; the driver reassembles submission order by index.
+struct CompletionQueue {
+    slots: Mutex<CompletionState>,
+    ready: Condvar,
+}
+
+struct CompletionState {
+    done: Vec<Option<RetryOutcome>>,
+    completed: usize,
+    /// First slot panic observed (message); poisons the whole batch.
+    panic: Option<String>,
+    /// Workers still running (panicked workers count down too, via the
+    /// completion of their poison entry).
+    live_workers: usize,
+}
+
+impl CompletionQueue {
+    fn new(requests: usize, workers: usize) -> Self {
+        Self {
+            slots: Mutex::new(CompletionState {
+                done: (0..requests).map(|_| None).collect(),
+                completed: 0,
+                panic: None,
+                live_workers: workers,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn push(&self, index: usize, outcome: RetryOutcome) {
+        let mut st = self.slots.lock().unwrap();
+        debug_assert!(st.done[index].is_none(), "request {index} completed twice");
+        st.done[index] = Some(outcome);
+        st.completed += 1;
+        self.ready.notify_all();
+    }
+
+    fn push_panic(&self, message: String) {
+        let mut st = self.slots.lock().unwrap();
+        if st.panic.is_none() {
+            st.panic = Some(message);
+        }
+        self.ready.notify_all();
+    }
+
+    fn worker_done(&self) {
+        let mut st = self.slots.lock().unwrap();
+        st.live_workers -= 1;
+        self.ready.notify_all();
+    }
+
+    /// Poll until every request completed or a slot panicked and all
+    /// workers wound down. Returns outcomes in submission order.
+    fn poll_all(&self) -> Result<Vec<RetryOutcome>> {
+        let mut st = self.slots.lock().unwrap();
+        loop {
+            if st.panic.is_some() {
+                // Wait for the surviving workers to drain before failing
+                // the batch: their engines must be quiescent when the
+                // scheduler retries the task attempt.
+                while st.live_workers > 0 {
+                    st = self.ready.wait(st).unwrap();
+                }
+                return Err(anyhow!(
+                    "inference slot panicked: {}",
+                    st.panic.as_deref().unwrap_or("unknown payload")
+                ));
+            }
+            if st.completed == st.done.len() {
+                return Ok(st.done.iter_mut().map(|o| o.take().unwrap()).collect());
+            }
+            if st.live_workers == 0 {
+                // A worker died without completing its requests and
+                // without recording a panic — surface it rather than
+                // polling forever.
+                return Err(anyhow!(
+                    "pipeline worker exited with {}/{} requests complete",
+                    st.completed,
+                    st.done.len()
+                ));
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+}
+
+/// Tracks the peak number of simultaneously in-flight requests.
+#[derive(Default)]
+struct InFlightMeter {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl InFlightMeter {
+    fn enter(&self) {
+        let now = self.current.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn exit(&self) {
+        self.current.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Per-executor pipelined inference client: slot engines + shared rate
+/// limiter + retry policy behind a submit/poll batch interface. See the
+/// module docs for the design.
+pub struct PipelinedClient {
+    slots: Vec<Box<dyn InferenceEngine>>,
+    rngs: Vec<Rng>,
+    policy: RetryPolicy,
+    /// Shared across slots; `None` disables rate limiting (judge stages).
+    bucket: Option<Mutex<TokenBucket>>,
+    clock: Arc<dyn Clock>,
+}
+
+impl PipelinedClient {
+    /// `slots` are the concurrency-many engines this client multiplexes
+    /// over (one in-flight request per slot); `rngs` seed the per-slot
+    /// backoff jitter and must have the same length.
+    pub fn new(
+        slots: Vec<Box<dyn InferenceEngine>>,
+        rngs: Vec<Rng>,
+        policy: RetryPolicy,
+        bucket: Option<TokenBucket>,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
+        assert!(!slots.is_empty(), "pipelined client needs at least one slot");
+        assert_eq!(slots.len(), rngs.len(), "one rng per slot");
+        Self { slots, rngs, policy, bucket: bucket.map(Mutex::new), clock }
+    }
+
+    pub fn concurrency(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Split out slot 0's engine + rng and the shared bucket for the
+    /// sequential compatibility path (concurrency 1), where callers drive
+    /// `infer_with_retry` themselves to stay bit-identical to the
+    /// pre-pipeline hot path.
+    pub fn sequential_parts(
+        &mut self,
+    ) -> (&mut dyn InferenceEngine, &mut Rng, Option<&mut TokenBucket>) {
+        (
+            self.slots[0].as_mut(),
+            &mut self.rngs[0],
+            self.bucket.as_mut().map(|b| b.get_mut().unwrap()),
+        )
+    }
+
+    /// Drive `requests` to completion, overlapping up to `concurrency`
+    /// in-flight latencies. `estimate` prices each request against the
+    /// token bucket (ignored when rate limiting is disabled).
+    /// `on_complete` fires as each request settles — *while the rest of
+    /// the batch is still in flight* — so callers can account spend and
+    /// trip cost budgets at per-request granularity instead of waiting
+    /// for the whole batch to drain. Outcomes come back in request
+    /// order; a slot panic fails the whole batch with an error (the
+    /// scheduler's retryable-task-failure contract).
+    pub fn run_batch(
+        &mut self,
+        requests: &[InferenceRequest],
+        estimate: &(dyn Fn(&InferenceRequest) -> f64 + Sync),
+        on_complete: Option<&(dyn Fn(&RetryOutcome) + Sync)>,
+    ) -> Result<BatchOutput> {
+        let n = requests.len();
+        if n == 0 {
+            return Ok(BatchOutput { outcomes: Vec::new(), stats: PipelineStats::default() });
+        }
+
+        if self.slots.len() == 1 {
+            // Sequential fast path: the exact pre-pipeline loop
+            // (admission via the blocking `acquire`, then
+            // `infer_with_retry`), bit-identical to the old hot path.
+            let clock = self.clock.clone();
+            let mut outcomes = Vec::with_capacity(n);
+            for req in requests {
+                if let Some(bucket) = self.bucket.as_mut() {
+                    bucket.get_mut().unwrap().acquire(estimate(req), clock.as_ref());
+                }
+                let outcome = infer_with_retry(
+                    self.slots[0].as_mut(),
+                    req,
+                    &self.policy,
+                    clock.as_ref(),
+                    &mut self.rngs[0],
+                );
+                if let Some(hook) = on_complete {
+                    hook(&outcome);
+                }
+                outcomes.push(outcome);
+            }
+            return Ok(BatchOutput {
+                outcomes,
+                stats: PipelineStats { requests: n, peak_in_flight: 1 },
+            });
+        }
+
+        let n_slots = self.slots.len().min(n);
+        let gate = LatencyGate::new(self.clock.clone(), n_slots);
+        let queue = CompletionQueue::new(n, n_slots);
+        let meter = InFlightMeter::default();
+        let policy = self.policy;
+        let bucket = &self.bucket;
+        let clock = &self.clock;
+
+        std::thread::scope(|scope| {
+            for (slot, (engine, rng)) in
+                self.slots.iter_mut().zip(self.rngs.iter_mut()).take(n_slots).enumerate()
+            {
+                let gate = &gate;
+                let queue = &queue;
+                let meter = &meter;
+                scope.spawn(move || {
+                    let _exit = WorkerExitGuard { gate, queue, slot };
+                    for index in (slot..n).step_by(n_slots) {
+                        let req = &requests[index];
+                        let est = estimate(req);
+                        match drive_request(
+                            engine.as_mut(),
+                            req,
+                            est,
+                            &policy,
+                            bucket.as_ref(),
+                            gate,
+                            slot,
+                            meter,
+                            clock.as_ref(),
+                            rng,
+                        ) {
+                            Ok(outcome) => {
+                                // Per-completion accounting while the
+                                // batch is still in flight (spend /
+                                // budget watchdogs stay per-request).
+                                if let Some(hook) = on_complete {
+                                    hook(&outcome);
+                                }
+                                queue.push(index, outcome);
+                            }
+                            Err(panic_msg) => {
+                                // Stop issuing from this slot: its engine
+                                // state is suspect after an unwind.
+                                queue.push_panic(panic_msg);
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+            // Driver side of the queue: poll completions back into
+            // submission order (blocks until the batch drains).
+            let outcomes = queue.poll_all()?;
+            Ok(BatchOutput {
+                outcomes,
+                stats: PipelineStats {
+                    requests: n,
+                    peak_in_flight: meter.peak.load(Ordering::Relaxed),
+                },
+            })
+        })
+    }
+}
+
+/// Drive one request through admission → issue → latency wait → retry on
+/// one slot. Mirrors [`infer_with_retry`] exactly, with every wait routed
+/// through the gate so concurrent slots overlap. `Err` carries a panic
+/// payload message (the engine unwound mid-call).
+#[allow(clippy::too_many_arguments)]
+fn drive_request(
+    engine: &mut dyn InferenceEngine,
+    req: &InferenceRequest,
+    estimated_tokens: f64,
+    policy: &RetryPolicy,
+    bucket: Option<&Mutex<TokenBucket>>,
+    gate: &LatencyGate,
+    slot: usize,
+    meter: &InFlightMeter,
+    clock: &dyn Clock,
+    rng: &mut Rng,
+) -> Result<RetryOutcome, String> {
+    // Admission: consume the shared budget at the current instant; the
+    // returned admission time already accounts for every other slot's
+    // consumption, so concurrency never exceeds the configured RPM/TPM.
+    if let Some(bucket) = bucket {
+        let admission = bucket.lock().unwrap().acquire_at(estimated_tokens, clock.now());
+        gate.wait_until(slot, admission);
+    }
+    let mut backoff_secs = 0.0;
+    for attempt in 0..=policy.max_retries {
+        meter.enter();
+        let issued = std::panic::catch_unwind(AssertUnwindSafe(|| engine.infer_deferred(req)));
+        let (result, wait_secs) = match issued {
+            Ok(r) => r,
+            Err(payload) => {
+                meter.exit();
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                return Err(msg);
+            }
+        };
+        match result {
+            Ok(resp) => {
+                if wait_secs > 0.0 {
+                    gate.wait_until(slot, clock.now() + wait_secs);
+                }
+                meter.exit();
+                return Ok(RetryOutcome { result: Ok(resp), attempts: attempt + 1, backoff_secs });
+            }
+            Err(e) if e.recoverable() && attempt < policy.max_retries => {
+                meter.exit();
+                // Only this slot backs off; its siblings keep draining.
+                let delay = policy.delay_for_attempt(attempt, rng);
+                gate.wait_until(slot, clock.now() + delay);
+                backoff_secs += delay;
+            }
+            Err(e) => {
+                meter.exit();
+                return Ok(RetryOutcome { result: Err(e), attempts: attempt + 1, backoff_secs });
+            }
+        }
+    }
+    unreachable!("retry loop always returns");
+}
+
+/// Convenience: did every outcome succeed?
+pub fn all_ok(out: &BatchOutput) -> bool {
+    out.outcomes.iter().all(|o| o.result.is_ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::providers::{ApiError, InferenceResponse};
+    use crate::ratelimit::VirtualClock;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Scripted slot engine: fixed per-call latency, optional one-shot
+    /// failures keyed on prompt text, optional panic trigger. Honors the
+    /// engine contract: blocking `infer` sleeps the latency on its clock,
+    /// `infer_deferred` returns it for the pipeline to overlap.
+    struct Scripted {
+        latency_secs: f64,
+        fail_once: std::collections::BTreeSet<String>,
+        panic_on: Option<String>,
+        calls: u64,
+        clock: Arc<dyn Clock>,
+    }
+
+    impl Scripted {
+        fn new(latency_secs: f64, clock: Arc<dyn Clock>) -> Self {
+            Self {
+                latency_secs,
+                fail_once: Default::default(),
+                panic_on: None,
+                calls: 0,
+                clock,
+            }
+        }
+    }
+
+    impl InferenceEngine for Scripted {
+        fn initialize(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn infer(&mut self, request: &InferenceRequest) -> Result<InferenceResponse, ApiError> {
+            let (r, wait) = self.infer_deferred(request);
+            if wait > 0.0 {
+                self.clock.sleep(wait);
+            }
+            r
+        }
+
+        fn infer_deferred(
+            &mut self,
+            request: &InferenceRequest,
+        ) -> (Result<InferenceResponse, ApiError>, f64) {
+            self.calls += 1;
+            if self.panic_on.as_deref() == Some(request.prompt.as_str()) {
+                panic!("scripted slot panic");
+            }
+            if self.fail_once.remove(&request.prompt) {
+                return (Err(ApiError::RateLimited("scripted".into())), 0.0);
+            }
+            (
+                Ok(InferenceResponse {
+                    text: format!("echo:{}", request.prompt),
+                    input_tokens: 1,
+                    output_tokens: 1,
+                    latency_ms: self.latency_secs * 1000.0,
+                    cost_usd: 0.001,
+                }),
+                self.latency_secs,
+            )
+        }
+
+        fn model_id(&self) -> (String, String) {
+            ("test".into(), "scripted".into())
+        }
+    }
+
+    fn client_with(
+        engines: Vec<Scripted>,
+        clock: Arc<VirtualClock>,
+        policy: RetryPolicy,
+    ) -> PipelinedClient {
+        let n = engines.len();
+        PipelinedClient::new(
+            engines.into_iter().map(|e| Box::new(e) as Box<dyn InferenceEngine>).collect(),
+            (0..n).map(|s| Rng::with_stream(7, s as u64)).collect(),
+            policy,
+            None,
+            clock,
+        )
+    }
+
+    fn reqs(n: usize) -> Vec<InferenceRequest> {
+        (0..n).map(|i| InferenceRequest::new(format!("p{i}"))).collect()
+    }
+
+    #[test]
+    fn overlaps_latency_on_virtual_clock() {
+        // 16 requests × 1s latency: sequential virtual time = 16s; with 4
+        // slots the gate advances per wave → 4s.
+        let clock = VirtualClock::new();
+        let engines = (0..4).map(|_| Scripted::new(1.0, clock.clone())).collect();
+        let mut client =
+            client_with(engines, clock.clone(), RetryPolicy { jitter: 0.0, ..Default::default() });
+        let out = client.run_batch(&reqs(16), &|_| 0.0, None).unwrap();
+        assert_eq!(out.outcomes.len(), 16);
+        assert!(all_ok(&out));
+        assert!(
+            (clock.now() - 4.0).abs() < 1e-9,
+            "4 slots × 4 waves of 1s should take 4 virtual secs, took {}",
+            clock.now()
+        );
+        assert_eq!(out.stats.peak_in_flight, 4);
+        // Submission order preserved.
+        for (i, o) in out.outcomes.iter().enumerate() {
+            assert_eq!(o.result.as_ref().unwrap().text, format!("echo:p{i}"));
+        }
+    }
+
+    #[test]
+    fn single_slot_is_sequential() {
+        let clock = VirtualClock::new();
+        let mut client = client_with(
+            vec![Scripted::new(0.5, clock.clone())],
+            clock.clone(),
+            RetryPolicy { jitter: 0.0, ..Default::default() },
+        );
+        let out = client.run_batch(&reqs(6), &|_| 0.0, None).unwrap();
+        assert!(all_ok(&out));
+        assert!((clock.now() - 3.0).abs() < 1e-9, "6 × 0.5s sequential, got {}", clock.now());
+        assert_eq!(out.stats.peak_in_flight, 1);
+    }
+
+    #[test]
+    fn mid_batch_error_retries_only_the_failed_slot() {
+        // Request p2 (slot 2 of 4) fails once with a recoverable 429; only
+        // that slot backs off (1s), siblings drain undisturbed, and the
+        // retried request succeeds with attempts == 2.
+        let clock = VirtualClock::new();
+        let mut engines: Vec<Scripted> =
+            (0..4).map(|_| Scripted::new(1.0, clock.clone())).collect();
+        engines[2].fail_once.insert("p2".into());
+        let mut client = client_with(
+            engines,
+            clock.clone(),
+            RetryPolicy { base_delay: 1.0, jitter: 0.0, ..Default::default() },
+        );
+        let out = client.run_batch(&reqs(8), &|_| 0.0, None).unwrap();
+        assert!(all_ok(&out));
+        for (i, o) in out.outcomes.iter().enumerate() {
+            let want_attempts = if i == 2 { 2 } else { 1 };
+            assert_eq!(o.attempts, want_attempts, "request {i}");
+            assert_eq!(o.result.as_ref().unwrap().text, format!("echo:p{i}"));
+        }
+        assert!((out.outcomes[2].backoff_secs - 1.0).abs() < 1e-9);
+        // Slot 2's chain: 1s backoff + 2 × 1s latency = 3s; the other
+        // slots finish their two 1s requests inside that window.
+        assert!((clock.now() - 3.0).abs() < 1e-9, "virtual wall {}", clock.now());
+    }
+
+    #[test]
+    fn non_recoverable_error_is_data_not_failure() {
+        struct AlwaysAuth;
+        impl InferenceEngine for AlwaysAuth {
+            fn initialize(&mut self) -> Result<()> {
+                Ok(())
+            }
+            fn infer(
+                &mut self,
+                _r: &InferenceRequest,
+            ) -> Result<InferenceResponse, ApiError> {
+                Err(ApiError::Auth("bad key".into()))
+            }
+            fn model_id(&self) -> (String, String) {
+                ("t".into(), "auth".into())
+            }
+        }
+        let clock = VirtualClock::new();
+        let mut client = PipelinedClient::new(
+            vec![Box::new(AlwaysAuth), Box::new(AlwaysAuth)],
+            vec![Rng::new(0), Rng::new(1)],
+            RetryPolicy::default(),
+            None,
+            clock,
+        );
+        let out = client.run_batch(&reqs(4), &|_| 0.0, None).unwrap();
+        assert_eq!(out.outcomes.len(), 4);
+        for o in &out.outcomes {
+            assert!(matches!(o.result, Err(ApiError::Auth(_))));
+            assert_eq!(o.attempts, 1);
+        }
+    }
+
+    #[test]
+    fn slot_panic_fails_the_batch_without_hanging() {
+        let clock = VirtualClock::new();
+        let mut engines: Vec<Scripted> =
+            (0..3).map(|_| Scripted::new(0.5, clock.clone())).collect();
+        engines[1].panic_on = Some("p1".into());
+        let mut client = client_with(engines, clock, RetryPolicy::default());
+        let err = client.run_batch(&reqs(9), &|_| 0.0, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked"), "{msg}");
+        assert!(msg.contains("scripted slot panic"), "{msg}");
+    }
+
+    #[test]
+    fn shared_bucket_caps_concurrent_admission() {
+        // rpm 60 with a drained burst: after the initial 60-request burst,
+        // admissions pace at 1/s regardless of 8-way concurrency.
+        let clock = VirtualClock::new();
+        let bucket = TokenBucket::new(60.0, 1e12, clock.as_ref());
+        let engines: Vec<Box<dyn InferenceEngine>> =
+            (0..8)
+                .map(|_| {
+                    Box::new(Scripted::new(0.0, clock.clone())) as Box<dyn InferenceEngine>
+                })
+                .collect();
+        let mut client = PipelinedClient::new(
+            engines,
+            (0..8).map(|s| Rng::with_stream(3, s as u64)).collect(),
+            RetryPolicy { jitter: 0.0, ..Default::default() },
+            Some(bucket),
+            clock.clone(),
+        );
+        let out = client.run_batch(&reqs(120), &|_| 1.0, None).unwrap();
+        assert!(all_ok(&out));
+        // 60 admitted from the burst at t=0; the remaining 60 pace out at
+        // 1 per second → the last admission lands near t=60.
+        assert!(
+            clock.now() >= 55.0 && clock.now() <= 65.0,
+            "rate limit must bind across slots, wall {}",
+            clock.now()
+        );
+    }
+
+    #[test]
+    fn more_slots_than_requests() {
+        let clock = VirtualClock::new();
+        let engines = (0..8).map(|_| Scripted::new(1.0, clock.clone())).collect();
+        let mut client =
+            client_with(engines, clock.clone(), RetryPolicy { jitter: 0.0, ..Default::default() });
+        let out = client.run_batch(&reqs(3), &|_| 0.0, None).unwrap();
+        assert!(all_ok(&out));
+        assert!((clock.now() - 1.0).abs() < 1e-9, "3 parallel 1s calls, got {}", clock.now());
+        assert_eq!(out.stats.peak_in_flight, 3);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let clock = VirtualClock::new();
+        let mut client =
+            client_with(vec![Scripted::new(1.0, clock.clone())], clock, RetryPolicy::default());
+        let out = client.run_batch(&[], &|_| 0.0, None).unwrap();
+        assert!(out.outcomes.is_empty());
+        assert_eq!(out.stats.requests, 0);
+    }
+
+    #[test]
+    fn deterministic_slot_assignment_across_runs() {
+        // Two identical clients produce identical per-slot call counts and
+        // identical outcomes: request i always rides slot i % concurrency.
+        let run = || {
+            let clock = VirtualClock::new();
+            let engines = (0..3).map(|_| Scripted::new(0.25, clock.clone())).collect();
+            let mut client = client_with(
+                engines,
+                clock,
+                RetryPolicy { jitter: 0.0, ..Default::default() },
+            );
+            let out = client.run_batch(&reqs(10), &|_| 0.0, None).unwrap();
+            out.outcomes
+                .iter()
+                .map(|o| (o.attempts, o.result.as_ref().unwrap().text.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn gate_releases_waiters_when_a_slot_exits_early() {
+        // Slot 1 has one short request and exits; slots 0 and 2 still
+        // drain their longer chains — the exiting slot must hand the
+        // advance duty over instead of stranding the parked survivors.
+        let clock = VirtualClock::new();
+        let engines = (0..3).map(|_| Scripted::new(1.0, clock.clone())).collect();
+        let mut client =
+            client_with(engines, clock.clone(), RetryPolicy { jitter: 0.0, ..Default::default() });
+        // 7 requests over 3 slots: slot 0 gets 3, slots 1 and 2 get 2.
+        let out = client.run_batch(&reqs(7), &|_| 0.0, None).unwrap();
+        assert!(all_ok(&out));
+        assert!(
+            (clock.now() - 3.0).abs() < 1e-9,
+            "makespan = slot 0's 3 × 1s, got {}",
+            clock.now()
+        );
+    }
+
+    #[test]
+    fn wall_clock_threads_overlap_physically() {
+        // Real clock: 4 × 30ms requests on 4 slots should take ~1 wave of
+        // wall time, far below the 120ms sequential sum.
+        use crate::ratelimit::RealClock;
+        let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+        let engines: Vec<Box<dyn InferenceEngine>> =
+            (0..4)
+                .map(|_| {
+                    Box::new(Scripted::new(0.03, clock.clone())) as Box<dyn InferenceEngine>
+                })
+                .collect();
+        let mut client = PipelinedClient::new(
+            engines,
+            (0..4).map(|s| Rng::with_stream(5, s as u64)).collect(),
+            RetryPolicy { jitter: 0.0, ..Default::default() },
+            None,
+            clock,
+        );
+        let t = std::time::Instant::now();
+        let out = client.run_batch(&reqs(4), &|_| 0.0, None).unwrap();
+        let elapsed = t.elapsed().as_secs_f64();
+        assert!(all_ok(&out));
+        assert!(elapsed < 0.10, "4 overlapped 30ms sleeps took {elapsed}s");
+    }
+
+    #[test]
+    fn completion_queue_counts_match() {
+        static POSTED: AtomicUsize = AtomicUsize::new(0);
+        let q = CompletionQueue::new(5, 1);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                for i in 0..5 {
+                    q.push(
+                        i,
+                        RetryOutcome {
+                            result: Err(ApiError::Auth("x".into())),
+                            attempts: 1,
+                            backoff_secs: 0.0,
+                        },
+                    );
+                    POSTED.fetch_add(1, Ordering::SeqCst);
+                }
+                q.worker_done();
+            });
+            let got = q.poll_all().unwrap();
+            assert_eq!(got.len(), 5);
+        });
+        assert_eq!(POSTED.load(Ordering::SeqCst), 5);
+    }
+}

@@ -267,18 +267,38 @@ impl InferenceEngine for SimEngine {
     }
 
     fn infer(&mut self, request: &InferenceRequest) -> Result<InferenceResponse, ApiError> {
+        let (result, wait_secs) = self.infer_deferred(request);
+        if wait_secs > 0.0 {
+            self.clock.sleep(wait_secs);
+        }
+        result
+    }
+
+    /// Issue the call without sleeping out its latency: the remaining wait
+    /// is returned for the caller to overlap (pipelined client) or sleep
+    /// (the blocking `infer` above). Errors return before any latency is
+    /// incurred, exactly as before.
+    fn infer_deferred(
+        &mut self,
+        request: &InferenceRequest,
+    ) -> (Result<InferenceResponse, ApiError>, f64) {
         assert!(self.initialized, "engine used before initialize()");
         self.call_seq += 1;
         let (text, latency_ms, input_tokens) =
-            self.service.handle(self.profile, request, self.call_seq)?;
-        if self.service.config.sleep_latency {
-            self.clock.sleep(latency_ms / 1000.0);
-        }
+            match self.service.handle(self.profile, request, self.call_seq) {
+                Ok(ok) => ok,
+                Err(e) => return (Err(e), 0.0),
+            };
+        let wait_secs =
+            if self.service.config.sleep_latency { latency_ms / 1000.0 } else { 0.0 };
         let output_tokens = estimate_tokens(&text);
         let cost = self.profile.cost(input_tokens, output_tokens);
         self.total_cost += cost;
         self.total_calls += 1;
-        Ok(InferenceResponse { text, input_tokens, output_tokens, latency_ms, cost_usd: cost })
+        (
+            Ok(InferenceResponse { text, input_tokens, output_tokens, latency_ms, cost_usd: cost }),
+            wait_secs,
+        )
     }
 
     fn shutdown(&mut self) {

@@ -20,6 +20,15 @@ pub trait Clock: Send + Sync {
     fn now(&self) -> f64;
     /// Sleep for `secs`; virtual clocks advance instead of blocking.
     fn sleep(&self, secs: f64);
+    /// True when `sleep` advances simulated time instead of blocking the
+    /// calling thread. Concurrent sleepers on such a clock *serialize*
+    /// their advances (each `sleep` moves shared time forward), so code
+    /// that overlaps latency across threads — the pipelined provider
+    /// client ([`crate::providers::pipeline`]) — must coordinate waits
+    /// instead of sleeping independently.
+    fn is_virtual(&self) -> bool {
+        false
+    }
 }
 
 /// Wall clock backed by `std::time`.
@@ -87,6 +96,10 @@ impl Clock for VirtualClock {
         if secs > 0.0 {
             self.advance(secs);
         }
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
     }
 }
 

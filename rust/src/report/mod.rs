@@ -76,6 +76,14 @@ pub fn eval_summary(result: &EvalResult) -> String {
         "cost: ${:.4}  |  latency p50 {:.0}ms p99 {:.0}ms  |  throughput {:.0}/min  |  wall {:.1}s\n",
         inf.total_cost_usd, inf.latency_p50_ms, inf.latency_p99_ms, inf.throughput_per_min, inf.wall_secs,
     ));
+    // Rescore/replay runs carry the configured concurrency but never
+    // pipeline (no provider calls) — only report a pipeline that ran.
+    if inf.concurrency > 1 && inf.peak_in_flight > 0 {
+        out.push_str(&format!(
+            "pipeline: concurrency {} per executor, peak {} in flight\n",
+            inf.concurrency, inf.peak_in_flight,
+        ));
+    }
     let mc = &result.metric_calls;
     if mc.total() > 0 {
         // Judge/RAG metric calls are billed separately from inference.

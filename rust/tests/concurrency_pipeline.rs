@@ -1,0 +1,308 @@
+//! In-executor concurrency integration tests (ISSUE 4):
+//!
+//! - concurrency 1 is bit-identical to the pre-pipeline sequential hot
+//!   path (same responses, same retry/cost accounting, same virtual
+//!   timeline) — verified against a hand-rolled reference loop that *is*
+//!   the old code;
+//! - concurrency 8 cuts a latency-bound virtual-clock run's wall time
+//!   ~8× while leaving metric values, CIs, and cost untouched;
+//! - kill/resume with `--checkpoint` restores rows identically with
+//!   concurrency > 1;
+//! - occupancy telemetry: per-executor busy time is wall-clock pipeline
+//!   occupancy (≤ stage wall time) and row counts are conserved.
+
+use spark_llm_eval::config::{CachePolicy, EvalTask, MetricConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::retry::{infer_with_retry, RetryPolicy};
+use spark_llm_eval::providers::simulated::{SimEngine, SimService, SimServiceConfig};
+use spark_llm_eval::providers::tokenizer::estimate_request_tokens;
+use spark_llm_eval::providers::InferenceRequest;
+use spark_llm_eval::ratelimit::{Clock, TokenBucket, VirtualClock};
+use spark_llm_eval::util::rng::Rng;
+
+fn service_cfg(server_error_rate: f64, sleep_latency: bool) -> SimServiceConfig {
+    SimServiceConfig {
+        server_error_rate,
+        unparseable_rate: 0.0,
+        sleep_latency,
+        ..Default::default()
+    }
+}
+
+fn base_task(concurrency: usize, executors: usize) -> EvalTask {
+    let mut task = EvalTask::default();
+    task.executors = executors;
+    task.inference.concurrency = concurrency;
+    task.inference.cache_policy = CachePolicy::Disabled;
+    task.scheduler.speculation = false;
+    task.scheduler.adaptive_split = false;
+    task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+    task
+}
+
+#[test]
+fn concurrency_1_bit_identical_to_sequential_reference() {
+    // Faults ON (5% transient 5xx) so retry accounting is exercised; the
+    // reference loop below is the exact pre-pipeline per-row hot path.
+    let cfg = service_cfg(0.05, true);
+    let prompts: Vec<String> =
+        (0..60).map(|i| format!("Question: what is the capital of country {i}?")).collect();
+
+    let mut task = base_task(1, 1);
+    task.inference.batch_size = 7;
+    let clock = VirtualClock::new();
+    let mut runner = EvalRunner::with_clock(clock.clone());
+    runner.service_config = cfg.clone();
+    let (rows, stats) = runner.run_inference(&prompts, &task).unwrap();
+    let pipeline_wall = clock.now();
+
+    // Reference: one engine, one bucket, one rng stream, rows in order.
+    let ref_clock = VirtualClock::new();
+    let svc = SimService::new(&task.model.provider, cfg, ref_clock.clone());
+    let mut engine = SimEngine::new(
+        svc,
+        &task.model.provider,
+        &task.model.model_name,
+        ref_clock.clone(),
+    )
+    .unwrap();
+    use spark_llm_eval::providers::InferenceEngine;
+    engine.initialize().unwrap();
+    let mut bucket = TokenBucket::per_executor(
+        task.inference.rate_limit_rpm,
+        task.inference.rate_limit_tpm,
+        1,
+        ref_clock.as_ref(),
+    );
+    let mut rng = Rng::with_stream(task.statistics.seed, 0);
+    let policy = RetryPolicy {
+        max_retries: task.inference.max_retries,
+        base_delay: task.inference.retry_delay,
+        ..Default::default()
+    };
+    let mut api_calls = 0u64;
+    let mut retries = 0u64;
+    let mut cost = 0.0f64;
+    for (i, prompt) in prompts.iter().enumerate() {
+        let est = estimate_request_tokens(prompt, task.model.max_tokens) as f64;
+        bucket.acquire(est, ref_clock.as_ref());
+        let mut req = InferenceRequest::new(prompt.clone());
+        req.max_tokens = task.model.max_tokens;
+        req.temperature = task.model.temperature;
+        let out = infer_with_retry(&mut engine, &req, &policy, ref_clock.as_ref(), &mut rng);
+        api_calls += out.attempts as u64;
+        match out.result {
+            Ok(resp) => {
+                retries += (out.attempts - 1) as u64;
+                cost += resp.cost_usd;
+                assert_eq!(rows[i].response.as_deref(), Some(resp.text.as_str()), "row {i}");
+                assert_eq!(rows[i].latency_ms.to_bits(), resp.latency_ms.to_bits(), "row {i}");
+                assert_eq!(rows[i].cost_usd.to_bits(), resp.cost_usd.to_bits(), "row {i}");
+                assert_eq!(rows[i].attempts, out.attempts, "row {i}");
+            }
+            Err(e) => {
+                assert!(rows[i].response.is_none(), "row {i}");
+                assert_eq!(rows[i].error.as_deref(), Some(e.to_string().as_str()), "row {i}");
+                assert_eq!(rows[i].attempts, out.attempts, "row {i}");
+            }
+        }
+    }
+    assert_eq!(stats.api_calls, api_calls, "attempt accounting");
+    assert_eq!(stats.retries, retries, "retry accounting");
+    assert_eq!(stats.total_cost_usd.to_bits(), cost.to_bits(), "cost accounting");
+    // Identical virtual timeline: same sleeps in the same order.
+    assert_eq!(pipeline_wall.to_bits(), ref_clock.now().to_bits(), "virtual timeline");
+    assert_eq!(stats.concurrency, 1);
+}
+
+#[test]
+fn concurrency_8_speeds_up_latency_bound_run_with_identical_results() {
+    // Latency is slept on the virtual clock: the run is latency-bound and
+    // its virtual wall time is what the pipeline must cut ~8×.
+    let df = synth::generate_default(96, 17);
+    let run = |concurrency: usize| {
+        let clock = VirtualClock::new();
+        let mut runner = EvalRunner::with_clock(clock);
+        runner.service_config = service_cfg(0.0, true);
+        let mut task = base_task(concurrency, 1);
+        task.inference.batch_size = 16;
+        runner.evaluate(&df, &task).unwrap()
+    };
+    let seq = run(1);
+    let pipe = run(8);
+
+    // Throughput: ≥ 4× less virtual wall time at concurrency 8 (the
+    // expected factor is ~5–8× depending on the latency tail).
+    let speedup = seq.inference.wall_secs / pipe.inference.wall_secs;
+    assert!(
+        speedup >= 4.0,
+        "concurrency 8 must cut latency-bound wall time ≥ 4x, got {speedup:.2}x \
+         ({:.1}s -> {:.1}s)",
+        seq.inference.wall_secs,
+        pipe.inference.wall_secs
+    );
+    assert!(pipe.inference.peak_in_flight > 1, "pipeline must actually overlap requests");
+    assert!(pipe.inference.peak_in_flight <= 8);
+
+    // Identity: metric values, CIs, cost, and row-level responses are
+    // unchanged — concurrency only reschedules the same work.
+    let (ms, mp) = (&seq.metrics[0], &pipe.metrics[0]);
+    assert_eq!(ms.value.to_bits(), mp.value.to_bits(), "metric value moved");
+    assert_eq!(ms.ci.lo.to_bits(), mp.ci.lo.to_bits(), "CI lower moved");
+    assert_eq!(ms.ci.hi.to_bits(), mp.ci.hi.to_bits(), "CI upper moved");
+    assert_eq!(ms.n, mp.n);
+    assert!(
+        (seq.inference.total_cost_usd - pipe.inference.total_cost_usd).abs() < 1e-12,
+        "cost accounting moved"
+    );
+    assert_eq!(seq.reports[0].values, pipe.reports[0].values, "per-row scores moved");
+}
+
+#[test]
+fn kill_resume_restores_rows_identically_under_concurrency() {
+    // A cost budget kills the first run mid-flight; the resume (still at
+    // concurrency 4) restores the paid-for ranges and finishes, matching
+    // an uninterrupted run bit for bit.
+    let n = 120;
+    let df = synth::generate_default(n, 23);
+    let dir = std::env::temp_dir()
+        .join("slleval-concurrency-test")
+        .join(format!("kill-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let fast_runner = || {
+        let mut r = EvalRunner::with_clock(VirtualClock::new());
+        r.service_config = service_cfg(0.0, false);
+        r
+    };
+    let mut task = base_task(4, 2);
+    task.inference.batch_size = 10;
+
+    // Uninterrupted reference (also sizes the abort budget).
+    let reference = fast_runner().evaluate(&df, &task).unwrap();
+    assert!(reference.inference.total_cost_usd > 0.0);
+
+    // Run 1: killed by a spend budget of ~40% of the full cost.
+    {
+        let mut budget_task = task.clone();
+        budget_task.inference.max_cost_usd = Some(0.4 * reference.inference.total_cost_usd);
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, false).unwrap();
+        let err = runner.evaluate(&df, &budget_task).unwrap_err();
+        assert!(format!("{err:#}").contains("aborted"), "{err:#}");
+    }
+
+    // Run 2: resume with the same concurrency; restored ranges are free.
+    let resumed = {
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, true).unwrap();
+        runner.evaluate(&df, &task).unwrap()
+    };
+    assert!(
+        resumed.inference.sched.restored_rows > 0,
+        "the killed run must have checkpointed completed tasks"
+    );
+    assert!(
+        (resumed.inference.api_calls as usize) < n,
+        "restored rows must not be re-paid"
+    );
+
+    assert_eq!(resumed.reports[0].values, reference.reports[0].values);
+    assert_eq!(
+        resumed.metrics[0].value.to_bits(),
+        reference.metrics[0].value.to_bits()
+    );
+    assert_eq!(
+        resumed.metrics[0].ci.lo.to_bits(),
+        reference.metrics[0].ci.lo.to_bits()
+    );
+}
+
+#[test]
+fn busy_secs_is_pipeline_occupancy_not_summed_latency() {
+    // Real clock + real (scaled-down) latency sleeps: with 6-way
+    // concurrency the per-executor busy time must stay within the stage
+    // wall time — summed per-request latency would exceed it ~6×.
+    let df = synth::generate_default(48, 29);
+    let mut runner = EvalRunner::new();
+    runner.service_config = SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: true,
+        latency_scale: 0.05, // p50 ≈ 16ms
+        ..Default::default()
+    };
+    let mut task = base_task(6, 2);
+    task.inference.batch_size = 8;
+    let result = runner.evaluate(&df, &task).unwrap();
+    let inf = &result.inference;
+
+    assert_eq!(inf.executors.len(), 2);
+    let mut total_rows = 0usize;
+    for e in &inf.executors {
+        assert!(
+            e.busy_secs <= inf.wall_secs + 0.05,
+            "executor {} busy {:.3}s exceeds stage wall {:.3}s — busy time is \
+             double-counting per-request latency",
+            e.executor_id,
+            e.busy_secs,
+            inf.wall_secs
+        );
+        total_rows += e.rows_processed;
+    }
+    // No speculation/retries in this config: telemetry sums exactly.
+    assert_eq!(total_rows, 48, "executor row telemetry must conserve rows");
+    assert!(inf.peak_in_flight >= 2, "expected real overlap, got {}", inf.peak_in_flight);
+    assert!(inf.peak_in_flight <= 6);
+}
+
+#[test]
+fn streaming_with_concurrency_matches_sequential_values() {
+    let df = synth::generate_default(90, 31);
+    let run = |concurrency: usize| {
+        let clock = VirtualClock::new();
+        let mut runner = EvalRunner::with_clock(clock);
+        runner.service_config = service_cfg(0.0, false);
+        let mut task = base_task(concurrency, 2);
+        task.inference.batch_size = 15;
+        let (reports, last) = runner
+            .evaluate_streaming(&df, &task, 30, |_| {
+                spark_llm_eval::coordinator::StreamControl::Continue
+            })
+            .unwrap();
+        (reports, last)
+    };
+    let (seq_reports, seq_last) = run(1);
+    let (pipe_reports, pipe_last) = run(6);
+    assert_eq!(seq_reports[0].values, pipe_reports[0].values);
+    assert_eq!(seq_last.api_calls, pipe_last.api_calls);
+    assert!((seq_last.cost_usd - pipe_last.cost_usd).abs() < 1e-12);
+}
+
+#[test]
+fn pairwise_with_concurrency_matches_sequential_verdicts() {
+    let df = synth::generate(
+        60,
+        37,
+        synth::DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 },
+    )
+    .unwrap();
+    let run = |concurrency: usize| {
+        let clock = VirtualClock::new();
+        let mut runner = EvalRunner::with_clock(clock);
+        runner.service_config = service_cfg(0.0, false);
+        let mut task_a = base_task(concurrency, 2);
+        task_a.model.model_name = "gpt-4o".into();
+        let mut task_b = task_a.clone();
+        task_b.model.model_name = "gpt-3.5-turbo".into();
+        runner
+            .evaluate_pairwise(&df, &task_a, &task_b, "accuracy", "openai", "gpt-4o")
+            .unwrap()
+    };
+    let seq = run(1);
+    let pipe = run(8);
+    assert_eq!(seq.verdicts, pipe.verdicts, "verdicts must not depend on concurrency");
+    assert_eq!((seq.a_wins, seq.b_wins), (pipe.a_wins, pipe.b_wins));
+    assert_eq!(seq.p_value.to_bits(), pipe.p_value.to_bits());
+}
