@@ -1,0 +1,148 @@
+//! Wall-clock companion to `bench_concurrency` (ROADMAP "real-clock
+//! pipelined throughput measurement"): the virtual-clock bench proves the
+//! ~N× latency overlap; this one runs *real* sleeps at scaled-down
+//! latencies on the wall clock, which is the only way to see the two
+//! costs the virtual clock hides:
+//!
+//! - **scoped-thread overhead per batch** — the pipelined client spawns
+//!   `concurrency` slot threads per batch via `std::thread::scope`, paid
+//!   in real microseconds;
+//! - **the slot-count crossover** — the concurrency level where adding
+//!   slots stops buying wall time (the remaining per-batch serial work
+//!   dominates the remaining latency overlap).
+//!
+//! Latencies are scaled down ~25× (p50 ≈ 13 ms instead of 320 ms) so the
+//! whole sweep stays under ~10 s while keeping sleeps long enough to
+//! dominate scheduling noise at low concurrency. Results land in
+//! `BENCH_concurrency_wall.json` at the repository root.
+
+use spark_llm_eval::config::{CachePolicy, EvalTask, MetricConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::util::bench::section;
+use spark_llm_eval::util::json::Json;
+
+const N: usize = 96;
+const SEED: u64 = 17;
+const BATCH: usize = 16;
+const LATENCY_SCALE: f64 = 0.04; // 320 ms p50 -> ~12.8 ms
+const LEVELS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+fn task(concurrency: usize) -> EvalTask {
+    let mut task = EvalTask::default();
+    task.task_id = format!("bench-concurrency-wall-{concurrency}");
+    task.executors = 1; // isolate the per-executor pipeline
+    task.inference.batch_size = BATCH;
+    task.inference.concurrency = concurrency;
+    task.inference.cache_policy = CachePolicy::Disabled;
+    task.scheduler.speculation = false;
+    task.scheduler.adaptive_split = false;
+    task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+    task
+}
+
+/// One real-clock run; returns (wall secs of the inference stage,
+/// metric value, cost).
+fn run(concurrency: usize) -> (f64, f64, f64) {
+    // Real clock, real (scaled) sleeps, faults off so every level sees
+    // the identical workload.
+    let mut runner = EvalRunner::new();
+    runner.service_config = SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: true,
+        latency_scale: LATENCY_SCALE,
+        ..Default::default()
+    };
+    let df = synth::generate_default(N, SEED);
+    let result = runner.evaluate(&df, &task(concurrency)).unwrap();
+    (
+        result.inference.wall_secs,
+        result.metrics[0].value,
+        result.inference.total_cost_usd,
+    )
+}
+
+fn main() {
+    section(&format!(
+        "wall-clock in-executor concurrency — {N} examples, 1 executor, \
+         latency ×{LATENCY_SCALE} (real sleeps)"
+    ));
+
+    let batches = N.div_ceil(BATCH) as f64;
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new(); // (level, wall, speedup)
+    let mut by_level = Vec::new();
+    let (mut base_wall, mut base_value, mut base_cost) = (0.0, 0.0, 0.0);
+    for &concurrency in &LEVELS {
+        let (wall, value, cost) = run(concurrency);
+        if concurrency == 1 {
+            (base_wall, base_value, base_cost) = (wall, value, cost);
+        }
+        let speedup = base_wall / wall;
+        // The latency-bound floor at this level is ~wall(1)/c; anything
+        // above it is serial per-batch work + scoped-thread overhead.
+        let ideal = base_wall / concurrency as f64;
+        let overhead_ms_per_batch = ((wall - ideal) / batches * 1e3).max(0.0);
+        println!(
+            "concurrency {concurrency:>2}: wall {wall:>7.3}s ({speedup:>5.2}x) | \
+             overhead ≈ {overhead_ms_per_batch:>6.2} ms/batch | exact_match {value:.4}",
+        );
+        assert_eq!(value, base_value, "metric moved at concurrency {concurrency}");
+        assert!(
+            (cost - base_cost).abs() < 1e-9,
+            "cost moved at concurrency {concurrency}"
+        );
+        rows.push((concurrency, wall, speedup));
+        by_level.push(Json::obj(vec![
+            ("concurrency", Json::num(concurrency as f64)),
+            ("wall_secs", Json::num(wall)),
+            ("speedup_vs_concurrency_1", Json::num(speedup)),
+            ("ideal_wall_secs", Json::num(ideal)),
+            ("overhead_ms_per_batch", Json::num(overhead_ms_per_batch)),
+            ("exact_match", Json::num(value)),
+            ("cost_usd", Json::num(cost)),
+        ]));
+    }
+
+    // Crossover: the first level whose wall time is not at least 10%
+    // better than the previous level's — past it, extra slots no longer
+    // pay for their scheduling overhead at this latency scale.
+    let mut crossover = *LEVELS.last().unwrap();
+    for w in rows.windows(2) {
+        let (_, prev_wall, _) = w[0];
+        let (level, wall, _) = w[1];
+        if wall > prev_wall * 0.90 {
+            crossover = level;
+            break;
+        }
+    }
+    println!("\nslot-count crossover (marginal gain < 10%): concurrency {crossover}");
+
+    // Soft acceptance on real hardware: latency-bound at ~13 ms/request,
+    // 4 slots must cut wall time well past scheduling noise. (The strict
+    // ≥4× @ 8 gate lives in the deterministic virtual-clock bench.)
+    let speedup4 = rows.iter().find(|r| r.0 == 4).unwrap().2;
+    assert!(
+        speedup4 >= 1.5,
+        "concurrency 4 should beat sequential by ≥1.5x on a latency-bound run \
+         (got {speedup4:.2}x)"
+    );
+
+    let report = Json::obj(vec![
+        ("benchmark", Json::str("bench_concurrency_wall")),
+        ("examples", Json::num(N as f64)),
+        ("seed", Json::num(SEED as f64)),
+        ("batch_size", Json::num(BATCH as f64)),
+        ("latency_scale", Json::num(LATENCY_SCALE)),
+        ("clock", Json::str("real (latency slept, scaled down)")),
+        ("crossover_concurrency", Json::num(crossover as f64)),
+        ("levels", Json::arr(by_level)),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_concurrency_wall.json");
+    std::fs::write(&out_path, report.to_pretty()).expect("writing BENCH_concurrency_wall.json");
+    println!("results written to {}", out_path.display());
+}

@@ -62,6 +62,11 @@ impl DeltaTable {
         Ok(DeltaTable { root: root.to_path_buf() })
     }
 
+    /// The table's root directory (cache relocation, worker handoff).
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
     fn log_dir(&self) -> PathBuf {
         self.root.join("_log")
     }

@@ -177,6 +177,13 @@ impl ResponseCache {
         })
     }
 
+    /// The backing table's directory: out-of-process executors open their
+    /// own connection to the same store (deltalite commits are
+    /// multi-writer safe), so the driver ships this path in task plans.
+    pub fn dir(&self) -> &Path {
+        self.table.root()
+    }
+
     pub fn policy(&self) -> CachePolicy {
         self.policy
     }

@@ -233,6 +233,23 @@ impl StageCheckpoint {
         &self.dir
     }
 
+    /// Reopen an existing stage directly by directory — the worker-side
+    /// spill path for out-of-process executors
+    /// ([`crate::sched::backend::ProcessBackend`]): the driver creates the
+    /// stage (fingerprint-bound) and ships its path in the task plan; each
+    /// worker reopens it and records its own completed tasks. Concurrent
+    /// writers are already safe — data files are written atomically and
+    /// manifest records publish with an exclusive first-writer-wins claim.
+    pub fn open(dir: &Path) -> Result<StageCheckpoint> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("opening checkpoint stage {dir:?}"))?;
+        let meta = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("corrupt stage meta {meta_path:?}: {e}"))?;
+        let total_rows = meta.usize_or("total_rows", 0);
+        Ok(StageCheckpoint { dir: dir.to_path_buf(), total_rows })
+    }
+
     /// Crash-safely record one completed task: `lines` are the task's rows
     /// already encoded as single-line JSON. Racing twins of the same range
     /// are benign — the first record published wins and later ones are

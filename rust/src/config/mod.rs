@@ -10,6 +10,7 @@ use crate::util::json::{Json, JsonError};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
+pub use crate::sched::backend::BackendKind;
 pub use crate::sched::SchedulerConfig;
 
 /// Cache behaviour (paper §3.2).
@@ -284,6 +285,12 @@ pub struct EvalTask {
     pub scheduler: SchedulerConfig,
     /// Run durability: task checkpointing and crash resumption.
     pub checkpoint: CheckpointConfig,
+    /// Where executors physically run (`executor.backend` in the JSON):
+    /// `thread` (default, in-process scoped threads — the pre-backend
+    /// scheduler, bit for bit) or `process` (one crash-isolated
+    /// `slleval worker` OS process per executor; see
+    /// [`crate::sched::backend`]).
+    pub backend: BackendKind,
 }
 
 impl Default for EvalTask {
@@ -298,6 +305,7 @@ impl Default for EvalTask {
             executors: 8,
             scheduler: SchedulerConfig::default(),
             checkpoint: CheckpointConfig::default(),
+            backend: BackendKind::default(),
         }
     }
 }
@@ -430,6 +438,10 @@ impl EvalTask {
             ),
             ("scheduler", self.scheduler.to_json()),
             (
+                "executor",
+                Json::obj(vec![("backend", Json::str(self.backend.as_str()))]),
+            ),
+            (
                 "checkpoint",
                 Json::obj(vec![
                     (
@@ -508,6 +520,9 @@ impl EvalTask {
         }
         if let Some(s) = v.opt("scheduler") {
             task.scheduler = SchedulerConfig::from_json(s)?;
+        }
+        if let Some(e) = v.opt("executor") {
+            task.backend = BackendKind::from_str(e.str_or("backend", "thread"))?;
         }
         if let Some(c) = v.opt("checkpoint") {
             task.checkpoint = CheckpointConfig {
@@ -665,6 +680,29 @@ mod tests {
     fn unknown_policy_errors() {
         assert!(CachePolicy::from_str("fuzzy").is_err());
         assert!(CiMethod::from_str("magic").is_err());
+    }
+
+    #[test]
+    fn executor_backend_round_trips_and_defaults_to_thread() {
+        let mut task = EvalTask::default();
+        assert_eq!(task.backend, BackendKind::Thread, "thread must stay the default");
+        task.backend = BackendKind::Process;
+        let restored = EvalTask::from_json(&task.to_json()).unwrap();
+        assert_eq!(task, restored);
+
+        // A task file that predates the field parses to the thread backend.
+        let mut json = task.to_json();
+        if let Json::Obj(map) = &mut json {
+            map.remove("executor");
+        }
+        assert_eq!(EvalTask::from_json(&json).unwrap().backend, BackendKind::Thread);
+
+        // Unknown backend names fail at load time.
+        let mut json = task.to_json();
+        if let Json::Obj(map) = &mut json {
+            map.insert("executor".into(), Json::obj(vec![("backend", Json::str("remote"))]));
+        }
+        assert!(EvalTask::from_json(&json).is_err());
     }
 
     #[test]

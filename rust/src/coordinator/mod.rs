@@ -9,16 +9,20 @@
 pub mod cached_engine;
 pub mod compare;
 pub mod pairwise;
+pub mod plan_exec;
 pub mod result;
 pub mod runner;
 pub mod streaming;
+pub mod worker;
 
 pub use cached_engine::{CachedEngine, CallMeter, CallStats};
 pub use compare::compare_results;
 pub use pairwise::{PairVerdict, PairwiseResult};
+pub use plan_exec::{PlanExecutor, PlanHost};
 pub use result::{ComparisonResult, EvalResult, InferenceStats, MetricComparison, MetricValue};
 pub use runner::{EvalRunner, RowInference};
 pub use streaming::{StreamControl, StreamUpdate};
+pub use worker::worker_main;
 
 #[cfg(test)]
 mod tests {

@@ -5,13 +5,15 @@
 
 use super::cached_engine::CachedEngine;
 use super::runner::EvalRunner;
-use crate::config::EvalTask;
+use crate::config::{BackendKind, EvalTask, ModelConfig};
 use crate::data::DataFrame;
 use crate::metrics::judge::{pairwise_prompt, parse_verdict};
 use crate::providers::pipeline::PipelinedClient;
 use crate::providers::retry::RetryPolicy;
 use crate::providers::simulated::SimEngine;
 use crate::providers::{InferenceEngine, InferenceRequest};
+use crate::sched::backend::{run_plan, ProcessBackend};
+use crate::sched::plan::{PairInput, PairwisePlan, PlanWork, StagePlan, TaskPlan};
 use crate::sched::{run_scheduled_ext, TaskCheckpoint, TaskSink};
 use crate::stats::special::binom_test_half;
 use crate::util::json::Json;
@@ -135,7 +137,83 @@ impl EvalRunner {
             parts.push(rows_a[i].response.as_deref().unwrap_or(""));
             parts.push(rows_b[i].response.as_deref().unwrap_or(""));
         }
-        let (checkpoint_stage, restored) =
+
+        // Process backend: judging runs as a serializable plan on
+        // crash-isolated worker processes (same content-addressed stage,
+        // so thread and process runs restore each other's verdicts).
+        if task_a.backend == BackendKind::Process {
+            let decode_raw = |v: &Json| Ok(v.clone());
+            let (stage, restored, digest) =
+                self.open_checkpoint_stage("judge", parts, df.len(), &decode_raw)?;
+            let pairs: Vec<PairInput> = (0..df.len())
+                .map(|i| {
+                    let row = df.row(i);
+                    PairInput {
+                        question: row.str(&task_a.data.question_column).to_string(),
+                        reference: row.str(&task_a.data.reference_column).to_string(),
+                        response_a: rows_a[i].response.clone(),
+                        response_b: rows_b[i].response.clone(),
+                    }
+                })
+                .collect();
+            let cache_policy = self
+                .cache
+                .as_ref()
+                .map(|c| c.policy())
+                .unwrap_or(crate::config::CachePolicy::Disabled);
+            let plan = TaskPlan {
+                work: PlanWork::PairwiseJudge(PairwisePlan {
+                    judge: ModelConfig {
+                        provider: judge_provider.to_string(),
+                        model_name: judge_model.to_string(),
+                        ..Default::default()
+                    },
+                    rubric: rubric.to_string(),
+                    concurrency: task_a.inference.concurrency.max(1),
+                    pairs,
+                }),
+                env: self.plan_env(cache_policy),
+                stage: stage.as_ref().map(|s| StagePlan {
+                    dir: s.dir().display().to_string(),
+                    fingerprint: digest,
+                }),
+                // Crash injection targets the inference stage only.
+                fault: None,
+            };
+            let mut backend = ProcessBackend::new(
+                &plan,
+                task_a.executors,
+                task_a.inference.batch_size,
+                self.worker_exe.clone(),
+            )?;
+            let out = run_plan(
+                df.len(),
+                task_a.executors,
+                &task_a.scheduler,
+                &mut backend,
+                None,
+                restored,
+                self.abort.as_deref(),
+                None,
+            )?;
+            // The judging stage (like its thread-path counterpart)
+            // reports no scheduler stats; surface recovered deaths.
+            if out.sched.executor_deaths > 0 {
+                eprintln!(
+                    "warning: {} executor death(s) during pairwise judging \
+                     (recovered by retry; not counted in the run's scheduler stats)",
+                    out.sched.executor_deaths,
+                );
+            }
+            let verdicts = out
+                .rows
+                .iter()
+                .map(PairVerdict::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            return Ok(aggregate_pairwise(task_a, task_b, verdicts));
+        }
+
+        let (checkpoint_stage, restored, _) =
             self.open_checkpoint_stage("judge", parts, df.len(), &PairVerdict::from_json)?;
         let encode_verdict = |v: &PairVerdict| v.to_json();
         let checkpoint = checkpoint_stage.as_ref().map(|stage| TaskCheckpoint {
@@ -242,37 +320,49 @@ impl EvalRunner {
             },
         )?;
 
-        let verdicts = out.rows;
-        let (mut a_wins, mut b_wins, mut inconsistent, mut unscored) = (0, 0, 0, 0);
-        for verdict in &verdicts {
-            match verdict {
-                PairVerdict::AWins => a_wins += 1,
-                PairVerdict::BWins => b_wins += 1,
-                PairVerdict::Inconsistent => inconsistent += 1,
-                PairVerdict::Unscored => unscored += 1,
-            }
-        }
-
-        let judged = a_wins + b_wins + inconsistent;
-        Ok(PairwiseResult {
-            model_a: format!("{}/{}", task_a.model.provider, task_a.model.model_name),
-            model_b: format!("{}/{}", task_b.model.provider, task_b.model.model_name),
-            verdicts,
-            a_wins,
-            b_wins,
-            inconsistent,
-            unscored,
-            p_value: binom_test_half(a_wins.min(b_wins) as u64, (a_wins + b_wins) as u64),
-            position_bias_rate: if judged == 0 {
-                0.0
-            } else {
-                inconsistent as f64 / judged as f64
-            },
-        })
+        Ok(aggregate_pairwise(task_a, task_b, out.rows))
     }
 }
 
-fn judge_once(
+/// Fold per-pair verdicts into the aggregate pairwise outcome (shared by
+/// the thread-closure and backend-plan judging paths).
+fn aggregate_pairwise(
+    task_a: &EvalTask,
+    task_b: &EvalTask,
+    verdicts: Vec<PairVerdict>,
+) -> PairwiseResult {
+    let (mut a_wins, mut b_wins, mut inconsistent, mut unscored) = (0, 0, 0, 0);
+    for verdict in &verdicts {
+        match verdict {
+            PairVerdict::AWins => a_wins += 1,
+            PairVerdict::BWins => b_wins += 1,
+            PairVerdict::Inconsistent => inconsistent += 1,
+            PairVerdict::Unscored => unscored += 1,
+        }
+    }
+
+    let judged = a_wins + b_wins + inconsistent;
+    PairwiseResult {
+        model_a: format!("{}/{}", task_a.model.provider, task_a.model.model_name),
+        model_b: format!("{}/{}", task_b.model.provider, task_b.model.model_name),
+        verdicts,
+        a_wins,
+        b_wins,
+        inconsistent,
+        unscored,
+        p_value: binom_test_half(a_wins.min(b_wins) as u64, (a_wins + b_wins) as u64),
+        position_bias_rate: if judged == 0 {
+            0.0
+        } else {
+            inconsistent as f64 / judged as f64
+        },
+    }
+}
+
+/// Issue one pairwise-judge call and parse the verdict letter. Shared
+/// with the plan-executor path (`coordinator::plan_exec`) so both
+/// backends settle pairs through the same code.
+pub(crate) fn judge_once(
     judge: &mut dyn InferenceEngine,
     rubric: &str,
     question: &str,
@@ -286,7 +376,7 @@ fn judge_once(
 
 /// Combine both presentation orders into a verdict: fwd 'A' means A wins;
 /// rev 'A' means B wins (order swapped).
-fn settle_pair(fwd: Option<char>, rev: Option<char>) -> PairVerdict {
+pub(crate) fn settle_pair(fwd: Option<char>, rev: Option<char>) -> PairVerdict {
     match (fwd, rev) {
         (Some('A'), Some('B')) => PairVerdict::AWins,
         (Some('B'), Some('A')) => PairVerdict::BWins,

@@ -1,0 +1,584 @@
+//! Task-side execution of serializable plans: the executor-local state
+//! the scheduler closures used to capture, rebuilt from a
+//! [`TaskPlan`] instead.
+//!
+//! One [`PlanExecutor`] is the moral equivalent of the old
+//! `init(executor_id)` closure result — slot engines, retry policy,
+//! token bucket, cache handle — plus the `process(state, df, slice)`
+//! body for each work kind. It runs identically in two places:
+//!
+//! - **in process** ([`crate::sched::backend::ThreadBackend`]): the
+//!   driver builds a [`PlanHost`] sharing its live clock / provider
+//!   service / cache handles, so thread-backed plan execution hits the
+//!   exact same endpoint state the closure path did;
+//! - **out of process** (`slleval worker`): [`PlanHost::from_plan`]
+//!   reconstructs the environment from the plan — its own clock, its own
+//!   simulated provider endpoint (deterministic content draws make the
+//!   responses identical), its own cache connection (deltalite commits
+//!   are multi-writer safe).
+//!
+//! Completed tasks spill **worker-side** into the plan's checkpoint
+//! stage before the result is reported, so even `kill -9` between
+//! "spilled" and "reported" loses nothing on resume.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::cached_engine::CachedEngine;
+use super::pairwise::{judge_once, settle_pair, PairVerdict};
+use super::runner::RowInference;
+use crate::cache::ResponseCache;
+use crate::checkpoint::StageCheckpoint;
+use crate::config::{CachePolicy, ModelConfig};
+use crate::metrics::judge::{pairwise_prompt, parse_verdict};
+use crate::metrics::{builtin_registry, MetricContext, ResolvedMetric};
+use crate::providers::pipeline::PipelinedClient;
+use crate::providers::retry::{infer_with_retry, RetryOutcome, RetryPolicy};
+use crate::providers::simulated::{SimEngine, SimService};
+use crate::providers::tokenizer::estimate_request_tokens;
+use crate::providers::{InferenceEngine, InferenceRequest};
+use crate::ratelimit::{Clock, RealClock, TokenBucket, VirtualClock};
+use crate::sched::backend::{PlanTaskRunner, RunnerFactory, TaskResultMsg, TaskSpec};
+use crate::sched::plan::{PlanWork, TaskPlan};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Live handles a plan executor runs against. The driver shares its own;
+/// a worker process rebuilds them from the plan environment.
+pub struct PlanHost {
+    pub clock: Arc<dyn Clock>,
+    /// Shared provider endpoint (`None` for pure-metric plans).
+    pub service: Option<Arc<SimService>>,
+    pub cache: Option<Arc<ResponseCache>>,
+}
+
+impl PlanHost {
+    /// Worker-side reconstruction: own clock (virtual in fast mode), own
+    /// simulated endpoint, own cache connection.
+    pub fn from_plan(plan: &TaskPlan) -> Result<PlanHost> {
+        let clock: Arc<dyn Clock> = if plan.env.virtual_clock {
+            VirtualClock::new()
+        } else {
+            Arc::new(RealClock::new())
+        };
+        let service = plan
+            .provider()
+            .map(|p| SimService::new(p, plan.env.service.clone(), clock.clone()));
+        let cache = match &plan.env.cache_dir {
+            Some(dir) if plan.env.cache_policy != CachePolicy::Disabled => Some(Arc::new(
+                ResponseCache::open(Path::new(dir), plan.env.cache_policy)
+                    .with_context(|| format!("opening worker cache at {dir}"))?,
+            )),
+            _ => None,
+        };
+        Ok(PlanHost { clock, service, cache })
+    }
+}
+
+enum ExecState {
+    Inference { client: PipelinedClient, policy: RetryPolicy },
+    Metric { metric: ResolvedMetric },
+    Pairwise { client: PipelinedClient },
+}
+
+/// One executor's plan-built state + the per-batch execution bodies.
+pub struct PlanExecutor {
+    plan: Arc<TaskPlan>,
+    eid: usize,
+    clock: Arc<dyn Clock>,
+    cache: Option<Arc<ResponseCache>>,
+    stage: Option<StageCheckpoint>,
+    state: ExecState,
+}
+
+impl PlanExecutor {
+    pub fn new(plan: Arc<TaskPlan>, eid: usize, host: PlanHost) -> Result<PlanExecutor> {
+        let state = match &plan.work {
+            PlanWork::Inference(p) => {
+                let service =
+                    host.service.clone().context("inference plan needs a provider service")?;
+                let concurrency = p.inference.concurrency.max(1);
+                // One engine per concurrency slot — the same widened
+                // `_ENGINE_CACHE` construction (and rng streams) as the
+                // closure path, so slot 0 at concurrency 1 is exactly
+                // the old single engine.
+                let mut slots: Vec<Box<dyn InferenceEngine>> = Vec::with_capacity(concurrency);
+                for _ in 0..concurrency {
+                    let mut engine = SimEngine::new(
+                        service.clone(),
+                        &p.model.provider,
+                        &p.model.model_name,
+                        host.clock.clone(),
+                    )?;
+                    engine.initialize()?;
+                    slots.push(Box::new(engine));
+                }
+                let rngs = (0..concurrency)
+                    .map(|s| Rng::with_stream(p.seed, eid as u64 ^ ((s as u64) << 32)))
+                    .collect();
+                let bucket = TokenBucket::per_executor(
+                    p.inference.rate_limit_rpm,
+                    p.inference.rate_limit_tpm,
+                    p.executors,
+                    host.clock.as_ref(),
+                );
+                let policy = RetryPolicy {
+                    max_retries: p.inference.max_retries,
+                    base_delay: p.inference.retry_delay,
+                    ..Default::default()
+                };
+                ExecState::Inference {
+                    client: PipelinedClient::new(
+                        slots,
+                        rngs,
+                        policy,
+                        Some(bucket),
+                        host.clock.clone(),
+                    ),
+                    policy,
+                }
+            }
+            PlanWork::MetricScore(p) => {
+                // Only registry built-ins can cross a process boundary;
+                // the driver gates custom metrics onto the thread path.
+                let metric = builtin_registry().resolve(&p.metric)?;
+                ExecState::Metric { metric }
+            }
+            PlanWork::PairwiseJudge(p) => {
+                let service =
+                    host.service.clone().context("pairwise plan needs a provider service")?;
+                let concurrency = p.concurrency.max(1);
+                let mut slots: Vec<Box<dyn InferenceEngine>> = Vec::with_capacity(concurrency);
+                for _ in 0..concurrency {
+                    let mut engine = SimEngine::new(
+                        service.clone(),
+                        &p.judge.provider,
+                        &p.judge.model_name,
+                        host.clock.clone(),
+                    )?;
+                    engine.initialize()?;
+                    slots.push(Box::new(CachedEngine::new(engine, host.cache.clone())));
+                }
+                let rngs =
+                    (0..concurrency).map(|s| Rng::with_stream(eid as u64, s as u64)).collect();
+                ExecState::Pairwise {
+                    client: PipelinedClient::new(
+                        slots,
+                        rngs,
+                        RetryPolicy { max_retries: 0, ..Default::default() },
+                        None,
+                        host.clock.clone(),
+                    ),
+                }
+            }
+        };
+        // The stage was created (and fingerprint-bound) by the driver;
+        // spills are best-effort durability, so a missing/unreadable
+        // stage degrades resume rather than failing the executor.
+        let stage = plan.stage.as_ref().and_then(|s| {
+            match StageCheckpoint::open(Path::new(&s.dir)) {
+                Ok(stage) => Some(stage),
+                Err(e) => {
+                    eprintln!("warning: executor {eid} cannot open checkpoint stage: {e:#}");
+                    None
+                }
+            }
+        });
+        Ok(PlanExecutor { plan, eid, clock: host.clock, cache: host.cache, stage, state })
+    }
+
+    /// Execute one batch of rows `[start, end)`, returning one JSON value
+    /// per row plus the attempt's provider spend.
+    fn run_batch_rows(
+        &mut self,
+        start: usize,
+        end: usize,
+        spend: &mut (u64, u64, f64),
+        peak: &mut usize,
+    ) -> Result<Vec<Json>> {
+        match &mut self.state {
+            ExecState::Inference { client, policy } => {
+                let PlanWork::Inference(p) = &self.plan.work else { unreachable!() };
+                let estimate = |req: &InferenceRequest| {
+                    estimate_request_tokens(&req.prompt, req.max_tokens) as f64
+                };
+                let mut rows: Vec<Option<RowInference>> = (start..end).map(|_| None).collect();
+                if client.concurrency() == 1 {
+                    // Sequential path — the exact pre-pipeline per-row
+                    // loop: cache lookup, blocking admission, retry,
+                    // cache write interleaved.
+                    let (engine, rng, bucket) = client.sequential_parts();
+                    let bucket = bucket.expect("inference client always has a bucket");
+                    for i in start..end {
+                        let prompt = &p.prompts[i];
+                        if let Some(hit) = cache_lookup(
+                            &self.cache,
+                            &p.model,
+                            p.inference.cache_policy,
+                            prompt,
+                            i,
+                        )? {
+                            rows[i - start] = Some(hit);
+                            continue;
+                        }
+                        let mut req = InferenceRequest::new(prompt.as_str());
+                        req.max_tokens = p.model.max_tokens;
+                        req.temperature = p.model.temperature;
+                        bucket.acquire(estimate(&req), self.clock.as_ref());
+                        let outcome =
+                            infer_with_retry(engine, &req, policy, self.clock.as_ref(), rng);
+                        *peak = (*peak).max(1);
+                        spend.0 += outcome.attempts as u64;
+                        if let Ok(resp) = &outcome.result {
+                            spend.1 += (outcome.attempts - 1) as u64;
+                            spend.2 += resp.cost_usd;
+                        }
+                        rows[i - start] = Some(assemble(
+                            &self.cache,
+                            &p.model,
+                            p.inference.cache_policy,
+                            outcome,
+                            prompt,
+                        )?);
+                    }
+                } else {
+                    // Pipelined path: resolve cache hits up front, then
+                    // overlap every miss's latency across the slots.
+                    let mut miss_at: Vec<usize> = Vec::new();
+                    let mut miss_reqs: Vec<InferenceRequest> = Vec::new();
+                    for i in start..end {
+                        let prompt = &p.prompts[i];
+                        if let Some(hit) = cache_lookup(
+                            &self.cache,
+                            &p.model,
+                            p.inference.cache_policy,
+                            prompt,
+                            i,
+                        )? {
+                            rows[i - start] = Some(hit);
+                            continue;
+                        }
+                        let mut req = InferenceRequest::new(prompt.as_str());
+                        req.max_tokens = p.model.max_tokens;
+                        req.temperature = p.model.temperature;
+                        miss_at.push(i - start);
+                        miss_reqs.push(req);
+                    }
+                    let batch_spend = Mutex::new((0u64, 0u64, 0.0f64));
+                    let account = |outcome: &RetryOutcome| {
+                        let mut s = batch_spend.lock().unwrap();
+                        s.0 += outcome.attempts as u64;
+                        if let Ok(resp) = &outcome.result {
+                            s.1 += (outcome.attempts - 1) as u64;
+                            s.2 += resp.cost_usd;
+                        }
+                    };
+                    let batch = client.run_batch(&miss_reqs, &estimate, Some(&account))?;
+                    *peak = (*peak).max(batch.stats.peak_in_flight);
+                    let s = batch_spend.into_inner().unwrap();
+                    spend.0 += s.0;
+                    spend.1 += s.1;
+                    spend.2 += s.2;
+                    for (j, outcome) in batch.outcomes.into_iter().enumerate() {
+                        rows[miss_at[j]] = Some(assemble(
+                            &self.cache,
+                            &p.model,
+                            p.inference.cache_policy,
+                            outcome,
+                            &miss_reqs[j].prompt,
+                        )?);
+                    }
+                }
+                Ok(rows
+                    .into_iter()
+                    .map(|r| r.expect("every row settled").to_json())
+                    .collect())
+            }
+            ExecState::Metric { metric } => {
+                let PlanWork::MetricScore(p) = &self.plan.work else { unreachable!() };
+                let batch =
+                    metric.score_batch(&MetricContext::detached(), &p.examples[start..end])?;
+                validate_pure_batch(metric.name(), &batch, end - start)?;
+                Ok(batch
+                    .values
+                    .into_iter()
+                    .map(|v| v.map(Json::num).unwrap_or(Json::Null))
+                    .collect())
+            }
+            ExecState::Pairwise { client } => {
+                let PlanWork::PairwiseJudge(p) = &self.plan.work else { unreachable!() };
+                let mut verdicts = vec![PairVerdict::Unscored; end - start];
+                if client.concurrency() == 1 {
+                    let (engine, _rng, _bucket) = client.sequential_parts();
+                    for i in start..end {
+                        let pair = &p.pairs[i];
+                        let (Some(resp_a), Some(resp_b)) = (&pair.response_a, &pair.response_b)
+                        else {
+                            continue;
+                        };
+                        let fwd = judge_once(
+                            engine,
+                            &p.rubric,
+                            &pair.question,
+                            resp_a,
+                            resp_b,
+                            &pair.reference,
+                        );
+                        let rev = judge_once(
+                            engine,
+                            &p.rubric,
+                            &pair.question,
+                            resp_b,
+                            resp_a,
+                            &pair.reference,
+                        );
+                        *peak = (*peak).max(1);
+                        verdicts[i - start] = settle_pair(fwd, rev);
+                    }
+                } else {
+                    // Both presentation orders of every judgeable pair go
+                    // in flight together (2k / 2k+1 = pair k fwd/rev).
+                    let mut requests: Vec<InferenceRequest> = Vec::new();
+                    let mut judged: Vec<usize> = Vec::new();
+                    for i in start..end {
+                        let pair = &p.pairs[i];
+                        let (Some(resp_a), Some(resp_b)) = (&pair.response_a, &pair.response_b)
+                        else {
+                            continue;
+                        };
+                        requests.push(InferenceRequest::new(pairwise_prompt(
+                            &p.rubric,
+                            &pair.question,
+                            resp_a,
+                            resp_b,
+                            &pair.reference,
+                        )));
+                        requests.push(InferenceRequest::new(pairwise_prompt(
+                            &p.rubric,
+                            &pair.question,
+                            resp_b,
+                            resp_a,
+                            &pair.reference,
+                        )));
+                        judged.push(i - start);
+                    }
+                    let batch =
+                        client.run_batch(&requests, &|_req: &InferenceRequest| 0.0, None)?;
+                    *peak = (*peak).max(batch.stats.peak_in_flight);
+                    for (j, &k) in judged.iter().enumerate() {
+                        let parse = |o: &RetryOutcome| {
+                            o.result.as_ref().ok().and_then(|r| parse_verdict(&r.text))
+                        };
+                        let fwd = parse(&batch.outcomes[2 * j]);
+                        let rev = parse(&batch.outcomes[2 * j + 1]);
+                        verdicts[k] = settle_pair(fwd, rev);
+                    }
+                }
+                Ok(verdicts.into_iter().map(|v| v.to_json()).collect())
+            }
+        }
+    }
+}
+
+impl PlanTaskRunner for PlanExecutor {
+    fn run(&mut self, spec: &TaskSpec, batch_size: usize) -> Result<TaskResultMsg> {
+        let batch_size = batch_size.max(1);
+        let total = self.plan.total_rows();
+        anyhow::ensure!(
+            spec.start < spec.end && spec.end <= total,
+            "task range [{}, {}) out of bounds for a {total}-row plan",
+            spec.start,
+            spec.end
+        );
+        let mut rows: Vec<Json> = Vec::with_capacity(spec.end - spec.start);
+        let mut spend = (0u64, 0u64, 0.0f64);
+        let mut peak = 0usize;
+        let mut busy_secs = 0.0;
+        let mut batches = 0usize;
+        let mut cursor = spec.start;
+        while cursor < spec.end {
+            let batch_end = (cursor + batch_size).min(spec.end);
+            let bt0 = Instant::now();
+            let batch_rows = self.run_batch_rows(cursor, batch_end, &mut spend, &mut peak)?;
+            busy_secs += bt0.elapsed().as_secs_f64();
+            batches += 1;
+            rows.extend(batch_rows);
+            cursor = batch_end;
+        }
+
+        // Worker-side checkpoint spill, *before* reporting: a crash
+        // between spill and report costs nothing on resume, and racing
+        // twins of the same range are first-writer-wins.
+        if let Some(stage) = &self.stage {
+            let lines: Vec<String> = rows.iter().map(|r| r.to_string()).collect();
+            if let Err(e) =
+                stage.record_task(spec.start, spec.end, spec.attempt, self.eid, &lines)
+            {
+                eprintln!(
+                    "warning: checkpoint write failed for rows [{}, {}): {e:#}",
+                    spec.start, spec.end
+                );
+            }
+        }
+
+        Ok(TaskResultMsg {
+            task_id: spec.task_id,
+            start: spec.start,
+            end: spec.end,
+            attempt: spec.attempt,
+            speculative: spec.speculative,
+            rows_processed: rows.len(),
+            rows,
+            batches,
+            busy_secs,
+            peak_in_flight: peak,
+            api_calls: spend.0,
+            retries: spend.1,
+            cost_usd: spend.2,
+        })
+    }
+
+    fn finish(&mut self) {
+        if let Some(cache) = &self.cache {
+            if let Err(e) = cache.flush() {
+                eprintln!("warning: executor {} cache flush failed: {e:#}", self.eid);
+            }
+        }
+    }
+}
+
+/// Build a [`RunnerFactory`] for an in-process thread backend: each
+/// executor thread constructs its own [`PlanExecutor`] against the
+/// driver's shared clock / endpoint / cache handles.
+pub fn thread_runner_factory(
+    plan: Arc<TaskPlan>,
+    clock: Arc<dyn Clock>,
+    service: Option<Arc<SimService>>,
+    cache: Option<Arc<ResponseCache>>,
+) -> RunnerFactory {
+    Arc::new(move |eid| {
+        let host =
+            PlanHost { clock: clock.clone(), service: service.clone(), cache: cache.clone() };
+        Ok(Box::new(PlanExecutor::new(plan.clone(), eid, host)?) as Box<dyn PlanTaskRunner>)
+    })
+}
+
+/// Shared pure-metric batch contract: exactly one value per row, and no
+/// `unparseable` count (that field tracks unparseable *judge* responses;
+/// a pure metric has none, and a batch count could not survive
+/// speculative duplicate attempts anyway — unscorable rows are `None`s).
+/// Used by both the closure-scheduler and plan-executor scoring paths.
+pub(crate) fn validate_pure_batch(
+    name: &str,
+    batch: &crate::metrics::ScoreBatch,
+    expected: usize,
+) -> Result<()> {
+    anyhow::ensure!(
+        batch.values.len() == expected,
+        "metric '{name}' returned {} values for a {expected}-row batch",
+        batch.values.len()
+    );
+    anyhow::ensure!(
+        batch.unparseable == 0,
+        "pure metric '{name}' reported {} unparseable responses; \
+         pure metrics must score unscorable rows as None",
+        batch.unparseable
+    );
+    Ok(())
+}
+
+/// Cache lookup for one prompt; `Some` short-circuits inference — the
+/// single implementation of the inference-stage cache policy semantics
+/// (including strict replay), shared by the closure scheduler's UDF and
+/// the plan executor.
+pub(crate) fn cache_lookup(
+    cache: &Option<Arc<ResponseCache>>,
+    model: &ModelConfig,
+    policy: CachePolicy,
+    prompt: &str,
+    i: usize,
+) -> Result<Option<RowInference>> {
+    let replay_strict = policy == CachePolicy::Replay;
+    if policy.reads() {
+        if let Some(cache) = cache {
+            match cache.get(
+                prompt,
+                &model.model_name,
+                &model.provider,
+                model.temperature,
+                model.max_tokens,
+            ) {
+                Ok(Some(entry)) => {
+                    return Ok(Some(RowInference {
+                        response: Some(entry.response_text),
+                        from_cache: true,
+                        latency_ms: 0.0,
+                        cost_usd: 0.0,
+                        attempts: 0,
+                        error: None,
+                    }));
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    if replay_strict {
+                        return Err(e);
+                    }
+                }
+            }
+        } else if replay_strict {
+            bail!("replay mode requires an open cache");
+        }
+    }
+    if replay_strict {
+        bail!("replay mode: cache miss for example {i}");
+    }
+    Ok(None)
+}
+
+/// Row assembly for one settled provider outcome: cache write +
+/// [`RowInference`] — the single implementation shared by the closure
+/// scheduler's UDF and the plan executor.
+pub(crate) fn assemble(
+    cache: &Option<Arc<ResponseCache>>,
+    model: &ModelConfig,
+    policy: CachePolicy,
+    outcome: RetryOutcome,
+    prompt: &str,
+) -> Result<RowInference> {
+    match outcome.result {
+        Ok(resp) => {
+            if policy.writes() {
+                if let Some(cache) = cache {
+                    cache.put(
+                        prompt,
+                        &model.model_name,
+                        &model.provider,
+                        model.temperature,
+                        model.max_tokens,
+                        &resp,
+                    )?;
+                }
+            }
+            Ok(RowInference {
+                response: Some(resp.text),
+                from_cache: false,
+                latency_ms: resp.latency_ms,
+                cost_usd: resp.cost_usd,
+                attempts: outcome.attempts,
+                error: None,
+            })
+        }
+        Err(e) => Ok(RowInference {
+            response: None,
+            from_cache: false,
+            latency_ms: 0.0,
+            cost_usd: 0.0,
+            attempts: outcome.attempts,
+            error: Some(e.to_string()),
+        }),
+    }
+}
+

@@ -8,15 +8,20 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use super::cached_engine::{CachedEngine, CallMeter};
+use super::plan_exec;
 use super::result::{EvalResult, InferenceStats, MetricValue};
 use crate::cache::ResponseCache;
 use crate::checkpoint::{fingerprint_sha256, RunCheckpoint, StageCheckpoint};
-use crate::config::{CachePolicy, CiMethod, EvalTask, MetricConfig};
+use crate::config::{BackendKind, CachePolicy, CiMethod, EvalTask, MetricConfig};
 use crate::data::{DataFrame, Value};
 use crate::engine::{BatchSlice, Progress};
 use crate::metrics::{
     Example, JudgeBroker, MetricContext, MetricRegistry, MetricReport, MetricRequirements,
     ResolvedMetric, ScoreBatch,
+};
+use crate::sched::backend::{run_plan, ProcessBackend};
+use crate::sched::plan::{
+    InferencePlan, MetricPlan, PlanEnv, PlanWork, StagePlan, TaskPlan, WorkerFault,
 };
 use crate::sched::{run_scheduled, run_scheduled_ext, TaskCheckpoint, TaskSink};
 use crate::providers::pipeline::PipelinedClient;
@@ -97,6 +102,13 @@ pub struct EvalRunner {
     /// handler, UI, cost watchdog) to stop in-flight scheduled stages
     /// between batches. Checkpointed work survives the abort.
     pub abort: Option<Arc<AtomicBool>>,
+    /// Path of the `slleval` binary used to spawn `--backend process`
+    /// workers. `None` resolves via `SLLEVAL_WORKER_EXE`, then the
+    /// current executable (correct when the driver *is* `slleval`).
+    pub worker_exe: Option<std::path::PathBuf>,
+    /// Deterministic executor-death injection for backend crash tests:
+    /// the targeted executor dies hard while running its N-th task.
+    pub worker_fault: Option<WorkerFault>,
 }
 
 impl EvalRunner {
@@ -115,6 +127,8 @@ impl EvalRunner {
             progress: None,
             checkpoint: None,
             abort: None,
+            worker_exe: None,
+            worker_fault: None,
         }
     }
 
@@ -156,23 +170,25 @@ impl EvalRunner {
     /// directory is attached) and restore its completed ranges (when
     /// resuming). `parts` are the stage's exact inputs: their hash names
     /// the stage, so distinct inputs can never mix and a resume restores
-    /// only byte-identical work.
+    /// only byte-identical work. The returned digest is the stage's
+    /// content address (empty when checkpointing is disabled — the
+    /// corpus is hashed at most once, here).
     pub(crate) fn open_checkpoint_stage<T>(
         &self,
         kind: &str,
         parts: Vec<&str>,
         total_rows: usize,
         decode: &dyn Fn(&Json) -> Result<T>,
-    ) -> Result<(Option<StageCheckpoint>, Vec<(usize, usize, Vec<T>)>)> {
+    ) -> Result<(Option<StageCheckpoint>, Vec<(usize, usize, Vec<T>)>, String)> {
         let Some(run) = &self.checkpoint else {
-            return Ok((None, Vec::new()));
+            return Ok((None, Vec::new(), String::new()));
         };
         let digest = fingerprint_sha256(parts);
         let fingerprint =
             Json::obj(vec![("kind", Json::str(kind)), ("sha256", Json::str(&digest))]);
         let stage = run.stage(&format!("{kind}-{}", &digest[..16]), &fingerprint, total_rows)?;
         let restored = if run.is_resume() { stage.restore(decode)? } else { Vec::new() };
-        Ok((Some(stage), restored))
+        Ok((Some(stage), restored, digest))
     }
 
     /// Open (or reuse) the cache directory with the task's policy.
@@ -242,6 +258,9 @@ impl EvalRunner {
         prompts: &[String],
         task: &EvalTask,
     ) -> Result<(Vec<RowInference>, InferenceStats)> {
+        if task.backend == BackendKind::Process {
+            return self.run_inference_backend(prompts, task);
+        }
         let t0 = self.clock.now();
         let wall0 = std::time::Instant::now();
         let df = DataFrame::from_columns(vec![(
@@ -259,7 +278,6 @@ impl EvalRunner {
         let inf = task.inference.clone();
         let model_cfg = task.model.clone();
         let executors = task.executors;
-        let replay_strict = inf.cache_policy == CachePolicy::Replay;
         // Pre-resolve the shared provider service: the executor closures
         // must not capture `self` (the runner holds the non-Sync PJRT
         // runtime).
@@ -287,7 +305,7 @@ impl EvalRunner {
             &max_tokens,
         ];
         parts.extend(prompts.iter().map(|p| p.as_str()));
-        let (checkpoint_stage, restored) =
+        let (checkpoint_stage, restored, _) =
             self.open_checkpoint_stage("infer", parts, prompts.len(), &RowInference::from_json)?;
         let restored_spans: Vec<(usize, usize)> =
             restored.iter().map(|(s, e, _)| (*s, *e)).collect();
@@ -346,81 +364,16 @@ impl EvalRunner {
             }
         };
 
-        // Row assembly for one settled (and already accounted) provider
-        // outcome: cache write + RowInference.
+        // Cache lookup / row assembly: the shared single implementations
+        // ([`plan_exec::cache_lookup`] / [`plan_exec::assemble`]), so the
+        // closure scheduler and the plan-executor backends cannot drift.
         let assemble = |outcome: crate::providers::retry::RetryOutcome,
                         prompt: &str|
          -> Result<RowInference> {
-            match outcome.result {
-                Ok(resp) => {
-                    if inf.cache_policy.writes() {
-                        if let Some(cache) = &cache {
-                            cache.put(
-                                prompt,
-                                &model_cfg.model_name,
-                                &model_cfg.provider,
-                                model_cfg.temperature,
-                                model_cfg.max_tokens,
-                                &resp,
-                            )?;
-                        }
-                    }
-                    Ok(RowInference {
-                        response: Some(resp.text),
-                        from_cache: false,
-                        latency_ms: resp.latency_ms,
-                        cost_usd: resp.cost_usd,
-                        attempts: outcome.attempts,
-                        error: None,
-                    })
-                }
-                Err(e) => Ok(RowInference {
-                    response: None,
-                    from_cache: false,
-                    latency_ms: 0.0,
-                    cost_usd: 0.0,
-                    attempts: outcome.attempts,
-                    error: Some(e.to_string()),
-                }),
-            }
+            plan_exec::assemble(&cache, &model_cfg, inf.cache_policy, outcome, prompt)
         };
-
-        // Cache lookup for one prompt; `Some` short-circuits inference.
         let cache_lookup = |prompt: &str, i: usize| -> Result<Option<RowInference>> {
-            if inf.cache_policy.reads() {
-                if let Some(cache) = &cache {
-                    match cache.get(
-                        prompt,
-                        &model_cfg.model_name,
-                        &model_cfg.provider,
-                        model_cfg.temperature,
-                        model_cfg.max_tokens,
-                    ) {
-                        Ok(Some(entry)) => {
-                            return Ok(Some(RowInference {
-                                response: Some(entry.response_text),
-                                from_cache: true,
-                                latency_ms: 0.0,
-                                cost_usd: 0.0,
-                                attempts: 0,
-                                error: None,
-                            }));
-                        }
-                        Ok(None) => {}
-                        Err(e) => {
-                            if replay_strict {
-                                return Err(e);
-                            }
-                        }
-                    }
-                } else if replay_strict {
-                    bail!("replay mode requires an open cache");
-                }
-            }
-            if replay_strict {
-                bail!("replay mode: cache miss for example {i}");
-            }
-            Ok(None)
+            plan_exec::cache_lookup(&cache, &model_cfg, inf.cache_policy, prompt, i)
         };
 
         let out = run_scheduled_ext(
@@ -592,6 +545,186 @@ impl EvalRunner {
         Ok((rows, stats))
     }
 
+    // ----------------------------------------------------- executor backends
+
+    /// Execution environment shipped inside serializable task plans so an
+    /// out-of-process worker can rebuild this runner's engines.
+    pub(crate) fn plan_env(&self, cache_policy: CachePolicy) -> PlanEnv {
+        PlanEnv {
+            service: self.service_config.clone(),
+            virtual_clock: self.clock.is_virtual(),
+            cache_dir: self.cache.as_ref().map(|c| c.dir().display().to_string()),
+            cache_policy,
+        }
+    }
+
+    /// `--backend process` inference: the same stage, expressed as a
+    /// serializable [`TaskPlan`] and executed by crash-isolated
+    /// `slleval worker` processes through the generic backend scheduler.
+    /// The checkpoint stage is content-addressed identically to the
+    /// thread path, so thread and process runs restore each other's
+    /// spilled work.
+    fn run_inference_backend(
+        &self,
+        prompts: &[String],
+        task: &EvalTask,
+    ) -> Result<(Vec<RowInference>, InferenceStats)> {
+        let t0 = self.clock.now();
+        let wall0 = std::time::Instant::now();
+        let inf = task.inference.clone();
+        let model_cfg = task.model.clone();
+
+        let temperature = format!("{:.6}", model_cfg.temperature);
+        let max_tokens = model_cfg.max_tokens.to_string();
+        let mut parts: Vec<&str> = vec![
+            "inference",
+            &model_cfg.provider,
+            &model_cfg.model_name,
+            &temperature,
+            &max_tokens,
+        ];
+        parts.extend(prompts.iter().map(|p| p.as_str()));
+        let decode_raw = |v: &Json| Ok(v.clone());
+        let (stage, restored, digest) =
+            self.open_checkpoint_stage("infer", parts, prompts.len(), &decode_raw)?;
+        let restored_spans: Vec<(usize, usize)> =
+            restored.iter().map(|(s, e, _)| (*s, *e)).collect();
+
+        let plan = TaskPlan {
+            work: PlanWork::Inference(InferencePlan {
+                model: model_cfg,
+                inference: inf.clone(),
+                executors: task.executors,
+                seed: task.statistics.seed,
+                prompts: prompts.to_vec(),
+            }),
+            env: self.plan_env(inf.cache_policy),
+            stage: stage.as_ref().map(|s| StagePlan {
+                dir: s.dir().display().to_string(),
+                fingerprint: digest,
+            }),
+            fault: self.worker_fault,
+        };
+        let mut backend =
+            ProcessBackend::new(&plan, task.executors, inf.batch_size, self.worker_exe.clone())?;
+        let out = run_plan(
+            prompts.len(),
+            task.executors,
+            &task.scheduler,
+            &mut backend,
+            self.progress.as_deref(),
+            restored,
+            self.abort.as_deref(),
+            inf.max_cost_usd,
+        )?;
+        self.backend_inference_stats(out, &restored_spans, t0, wall0, inf.concurrency)
+    }
+
+    /// Decode a backend job's raw rows into [`RowInference`]s and build
+    /// the same [`InferenceStats`] the thread path reports (spend comes
+    /// from the executors' own per-task accounting).
+    fn backend_inference_stats(
+        &self,
+        out: crate::sched::backend::PlanOutput,
+        restored_spans: &[(usize, usize)],
+        t0: f64,
+        wall0: std::time::Instant,
+        concurrency: usize,
+    ) -> Result<(Vec<RowInference>, InferenceStats)> {
+        let rows =
+            out.rows.iter().map(RowInference::from_json).collect::<Result<Vec<_>>>()?;
+        // Worker processes sleep latency on their own clocks, so the
+        // driver's (possibly virtual) clock may not advance: fall back to
+        // real wall time.
+        let wall = (self.clock.now() - t0).max(wall0.elapsed().as_secs_f64()).max(1e-9);
+        let mut stats = InferenceStats {
+            examples: rows.len(),
+            wall_secs: wall,
+            throughput_per_min: rows.len() as f64 / wall * 60.0,
+            sched: out.sched,
+            timeline: out.timeline,
+            concurrency,
+            peak_in_flight: out.peak_in_flight,
+            executors: out.executors,
+            api_calls: out.api_calls,
+            retries: out.retries,
+            total_cost_usd: out.cost_usd,
+            ..Default::default()
+        };
+        let in_restored = |i: usize| restored_spans.iter().any(|&(s, e)| i >= s && i < e);
+        let mut latencies: Vec<f64> = Vec::new();
+        for (i, r) in rows.iter().enumerate() {
+            if in_restored(i) {
+                continue;
+            }
+            if r.from_cache {
+                stats.cache_hits += 1;
+            } else if r.response.is_some() {
+                stats.cache_misses += 1;
+                latencies.push(r.latency_ms);
+            } else {
+                stats.cache_misses += 1;
+                stats.failed += 1;
+            }
+        }
+        if !latencies.is_empty() {
+            latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            stats.latency_p50_ms = stats::describe::quantile_sorted(&latencies, 0.5);
+            stats.latency_p99_ms = stats::describe::quantile_sorted(&latencies, 0.99);
+        }
+        Ok((rows, stats))
+    }
+
+    /// Pure-metric scoring as a serializable plan on worker processes.
+    /// Only registry built-ins are eligible (a custom metric object
+    /// cannot cross a process boundary).
+    fn score_pure_backend(
+        &self,
+        cfg: &MetricConfig,
+        examples: &[Example],
+        task: &EvalTask,
+    ) -> Result<ScoreBatch> {
+        let plan = TaskPlan {
+            work: PlanWork::MetricScore(MetricPlan {
+                metric: cfg.clone(),
+                examples: examples.to_vec(),
+            }),
+            env: self.plan_env(CachePolicy::Disabled),
+            stage: None,
+            // Crash injection targets the inference stage only; metric
+            // scoring reuses executor ids and would otherwise re-fire.
+            fault: None,
+        };
+        let mut backend = ProcessBackend::new(
+            &plan,
+            task.executors,
+            task.inference.batch_size,
+            self.worker_exe.clone(),
+        )?;
+        let out = run_plan(
+            examples.len(),
+            task.executors,
+            &task.scheduler,
+            &mut backend,
+            None,
+            Vec::new(),
+            self.abort.as_deref(),
+            None,
+        )?;
+        // The metric stage (like its thread-path counterpart) reports no
+        // scheduler stats in the result; don't let a recovered worker
+        // death pass entirely silently.
+        if out.sched.executor_deaths > 0 {
+            eprintln!(
+                "warning: {} executor death(s) while scoring metric '{}' \
+                 (recovered by retry; not counted in the run's scheduler stats)",
+                out.sched.executor_deaths,
+                cfg.name
+            );
+        }
+        Ok(ScoreBatch::scored(out.rows.into_iter().map(|v| v.as_f64().ok()).collect()))
+    }
+
     // ---------------------------------------------------------------- stage 3
 
     /// Assemble per-example contexts from the source frame + responses.
@@ -659,43 +792,43 @@ impl EvalRunner {
     ) -> Result<MetricReport> {
         let out = match metric.requirements() {
             MetricRequirements::Pure => {
-                let df = DataFrame::from_columns(vec![(
-                    "i",
-                    (0..examples.len() as i64).map(Value::Int).collect::<Vec<_>>(),
-                )])?;
-                let m = metric.clone();
-                let sched_out = run_scheduled(
-                    &df,
-                    task.executors,
-                    task.inference.batch_size,
-                    &task.scheduler,
-                    None,
-                    |_| Ok(()),
-                    |_, _df, slice| {
-                        let batch =
-                            m.score_batch(&MetricContext::detached(), &examples[slice.indices()])?;
-                        anyhow::ensure!(
-                            batch.values.len() == slice.len(),
-                            "metric '{}' returned {} values for a {}-row batch",
-                            m.name(),
-                            batch.values.len(),
-                            slice.len()
-                        );
-                        // `unparseable` counts unparseable *judge*
-                        // responses; a pure metric has none, and a batch
-                        // count could not survive speculative duplicate
-                        // attempts anyway. Unscorable rows are `None`s.
-                        anyhow::ensure!(
-                            batch.unparseable == 0,
-                            "pure metric '{}' reported {} unparseable responses; \
-                             pure metrics must score unscorable rows as None",
-                            m.name(),
-                            batch.unparseable
-                        );
-                        Ok(batch.values)
-                    },
-                )?;
-                ScoreBatch::scored(sched_out.rows)
+                // Process backend: registry built-ins score as a
+                // serializable plan on worker processes; custom metric
+                // objects cannot cross a process boundary, so they fall
+                // back to the in-process distributed path.
+                let backend_cfg = (task.backend == BackendKind::Process)
+                    .then(|| {
+                        task.metrics
+                            .iter()
+                            .find(|m| m.name == metric.name() && m.metric_type != "custom")
+                    })
+                    .flatten();
+                if let Some(cfg) = backend_cfg {
+                    self.score_pure_backend(cfg, examples, task)?
+                } else {
+                    let df = DataFrame::from_columns(vec![(
+                        "i",
+                        (0..examples.len() as i64).map(Value::Int).collect::<Vec<_>>(),
+                    )])?;
+                    let m = metric.clone();
+                    let sched_out = run_scheduled(
+                        &df,
+                        task.executors,
+                        task.inference.batch_size,
+                        &task.scheduler,
+                        None,
+                        |_| Ok(()),
+                        |_, _df, slice| {
+                            let batch = m.score_batch(
+                                &MetricContext::detached(),
+                                &examples[slice.indices()],
+                            )?;
+                            plan_exec::validate_pure_batch(m.name(), &batch, slice.len())?;
+                            Ok(batch.values)
+                        },
+                    )?;
+                    ScoreBatch::scored(sched_out.rows)
+                }
             }
             MetricRequirements::Runtime => {
                 let ctx = MetricContext {
@@ -942,7 +1075,7 @@ impl EvalRunner {
             &max_tokens,
         ];
         parts.extend(prompts.iter().map(|p| p.as_str()));
-        let (_stage, restored) =
+        let (_stage, restored, _) =
             self.open_checkpoint_stage("infer", parts, prompts.len(), &RowInference::from_json)?;
         let restored_spans: Vec<(usize, usize)> =
             restored.iter().map(|(s, e, _)| (*s, *e)).collect();

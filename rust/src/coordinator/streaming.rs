@@ -8,6 +8,12 @@
 //! [`StreamUpdate`] with the cumulative metric estimate. Useful for very
 //! large datasets where an early stop ("the CI is already tight enough /
 //! the regression is already significant") saves real money.
+//!
+//! Executor backends compose transparently: each chunk's inference goes
+//! through [`EvalRunner::run_inference`], so `executor.backend =
+//! "process"` streams over crash-isolated worker processes, and any
+//! executor deaths accumulate in the update's merged
+//! [`SchedulerStats::executor_deaths`].
 
 use super::cached_engine::{CallMeter, CallStats};
 use super::runner::EvalRunner;

@@ -1,0 +1,109 @@
+//! The `slleval worker` entry point: one out-of-process executor.
+//!
+//! Spawned by [`crate::sched::backend::ProcessBackend`] with stdin/stdout
+//! pipes. Protocol (length-prefixed JSON frames, see
+//! [`crate::sched::backend`]): a `hello` frame carries the serialized
+//! [`TaskPlan`](crate::sched::plan::TaskPlan) + this worker's executor
+//! id; the worker rebuilds its executor-local state from the plan
+//! ([`PlanHost::from_plan`]), answers `ready` (or `init_error`), then
+//! executes `task` frames one at a time until `shutdown` or EOF.
+//!
+//! All diagnostics go to stderr — stdout carries protocol frames only.
+//!
+//! The plan's [`WorkerFault`](crate::sched::plan::WorkerFault) hook makes
+//! crash tests deterministic offline: the targeted executor
+//! `std::process::abort()`s while executing its N-th task — a genuine
+//! hard death (no unwinding, no cleanup, result never sent), exactly
+//! what a `kill -9` or OOM kill looks like to the driver.
+
+use std::io::Write;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::plan_exec::{PlanExecutor, PlanHost};
+use crate::sched::backend::{read_frame, write_frame, PlanTaskRunner, TaskSpec};
+use crate::sched::plan::TaskPlan;
+use crate::util::json::Json;
+
+/// Run the worker protocol over this process's stdin/stdout. Returns when
+/// the driver shuts the pipe down; protocol violations are fatal (the
+/// driver sees EOF and treats this executor as dead).
+pub fn worker_main() -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut input = stdin.lock();
+    let mut output = stdout.lock();
+
+    let hello = read_frame(&mut input)?.context("expected hello frame on stdin")?;
+    anyhow::ensure!(
+        hello.str_or("type", "") == "hello",
+        "protocol error: first frame must be hello, got '{}'",
+        hello.str_or("type", "?")
+    );
+    let eid = hello.get("executor_id")?.as_usize()?;
+    let batch_size = hello.usize_or("batch_size", 1).max(1);
+    let plan = TaskPlan::from_json(hello.get("plan")?)
+        .context("parsing task plan from hello frame")?;
+    let fault = plan.fault.filter(|f| f.executor_id == eid);
+
+    let mut executor = match PlanHost::from_plan(&plan)
+        .and_then(|host| PlanExecutor::new(Arc::new(plan), eid, host))
+    {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = Json::obj(vec![
+                ("type", Json::str("init_error")),
+                ("error", Json::str(&format!("{e:#}"))),
+            ]);
+            write_frame(&mut output, &msg)?;
+            return Ok(());
+        }
+    };
+    write_frame(&mut output, &Json::obj(vec![("type", Json::str("ready"))]))?;
+
+    let mut received = 0usize;
+    while let Some(frame) = read_frame(&mut input)? {
+        match frame.str_or("type", "") {
+            "task" => {
+                let spec = TaskSpec::from_json(&frame).context("parsing task frame")?;
+                received += 1;
+                let result = executor.run(&spec, batch_size);
+                // Deterministic hard death: computed but never reported —
+                // the driver pays for exactly this in-flight task.
+                if let Some(f) = fault {
+                    if received == f.kill_after_tasks {
+                        let _ = std::io::stderr().write_all(
+                            format!(
+                                "worker {eid}: fault injection — aborting on task {} \
+                                 [{}, {})\n",
+                                spec.task_id, spec.start, spec.end
+                            )
+                            .as_bytes(),
+                        );
+                        std::process::abort();
+                    }
+                }
+                match result {
+                    Ok(msg) => write_frame(&mut output, &msg.to_json())?,
+                    Err(e) => {
+                        let msg = Json::obj(vec![
+                            ("type", Json::str("task_error")),
+                            ("task_id", Json::num(spec.task_id as f64)),
+                            ("error", Json::str(&format!("{e:#}"))),
+                        ]);
+                        write_frame(&mut output, &msg)?;
+                    }
+                }
+            }
+            "shutdown" => break,
+            other => {
+                eprintln!("worker {eid}: ignoring unknown frame type '{other}'");
+            }
+        }
+    }
+    // Clean exit: flush buffered cache writes so later runs/rescore see
+    // what this worker paid for.
+    executor.finish();
+    Ok(())
+}

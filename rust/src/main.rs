@@ -5,6 +5,7 @@
 //! slleval run       --config task.json [--data data.jsonl | --n 1000]
 //!                   [--cache-dir .slleval-cache] [--track runs/] [--fast]
 //!                   [--checkpoint run_dir | --resume run_dir] [--concurrency 8]
+//!                   [--backend thread|process]
 //! slleval compare   --config task.json --model-b gpt-4o-mini [--provider-b openai]
 //!                   [--checkpoint run_dir | --resume run_dir]
 //! slleval replay    --config task.json --cache-dir .slleval-cache
@@ -19,6 +20,13 @@
 //! each executor multiplex N in-flight provider requests through the
 //! pipelined batch client, overlapping round-trip latency; 1 (default)
 //! is the sequential path.
+//!
+//! `--backend process` (or `executor.backend` in the task JSON) runs
+//! each executor as a crash-isolated `slleval worker` child process over
+//! a length-prefixed JSON pipe protocol: a killed executor (OOM,
+//! segfault, `kill -9`) costs only its in-flight tasks — the driver
+//! retries them on the survivors — instead of the whole run. The default
+//! `thread` backend is the in-process scheduler, bit for bit.
 //!
 //! `--checkpoint <run_dir>` spills every completed scheduler task to
 //! `run_dir` crash-safely; after an interruption (crash, Ctrl-C, cost
@@ -67,6 +75,9 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("tables") => cmd_tables(args),
         Some("sim") => cmd_sim(args),
         Some("checkpoint") => cmd_checkpoint(args),
+        // Hidden: the process-backend executor entry point. Spawned by
+        // the driver with stdin/stdout pipes — never invoked by hand.
+        Some("worker") => spark_llm_eval::coordinator::worker_main(),
         Some(other) => bail!(
             "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim, checkpoint)"
         ),
@@ -124,6 +135,11 @@ fn load_task(args: &Args) -> Result<EvalTask> {
     // In-executor concurrency: how many provider requests each executor
     // keeps in flight (1 = the sequential pre-pipeline path).
     task.inference.concurrency = args.get_usize("concurrency", task.inference.concurrency);
+    // Executor backend: in-process threads (default) or crash-isolated
+    // `slleval worker` processes.
+    if let Some(backend) = args.get("backend") {
+        task.backend = spark_llm_eval::config::BackendKind::from_str(backend)?;
+    }
     task.validate()?;
     Ok(task)
 }

@@ -22,9 +22,10 @@ pub use registry::{
 };
 
 use crate::stats::MetricScale;
+use crate::util::json::Json;
 
 /// Everything a metric may need about one example.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Example {
     pub prompt: String,
     pub response: String,
@@ -33,6 +34,40 @@ pub struct Example {
     pub context: Vec<String>,
     /// Rank of the gold context chunk (-1 = no context / unknown).
     pub gold_position: i64,
+}
+
+impl Example {
+    /// Wire encoding for serializable task plans
+    /// ([`crate::sched::plan::MetricPlan`]): out-of-process metric
+    /// scoring ships examples to the worker as JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prompt", Json::str(&self.prompt)),
+            ("response", Json::str(&self.response)),
+            ("reference", Json::str(&self.reference)),
+            ("question", Json::str(&self.question)),
+            ("context", Json::arr(self.context.iter().map(|c| Json::str(c)).collect())),
+            ("gold_position", Json::num(self.gold_position as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Example> {
+        Ok(Example {
+            prompt: v.str_or("prompt", "").to_string(),
+            response: v.str_or("response", "").to_string(),
+            reference: v.str_or("reference", "").to_string(),
+            question: v.str_or("question", "").to_string(),
+            context: match v.opt("context") {
+                Some(c) => c
+                    .as_arr()?
+                    .iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                None => Vec::new(),
+            },
+            gold_position: v.f64_or("gold_position", -1.0) as i64,
+        })
+    }
 }
 
 /// Per-metric result over a set of examples. `None` marks an example the

@@ -27,7 +27,7 @@ use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 
 /// Provider-endpoint behaviour knobs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimServiceConfig {
     /// Server-side global request budget per minute.
     pub global_rpm: f64,
@@ -66,6 +66,42 @@ impl Default for SimServiceConfig {
             tail_latency_mult: 10.0,
             seed: 0,
         }
+    }
+}
+
+impl SimServiceConfig {
+    /// Wire encoding for serializable task plans: an out-of-process
+    /// executor rebuilds its provider endpoint from these knobs, so the
+    /// simulated responses (content-seeded, not call-seeded) are
+    /// identical to the driver's.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("global_rpm", Json::num(self.global_rpm)),
+            ("global_tpm", Json::num(self.global_tpm)),
+            ("server_error_rate", Json::num(self.server_error_rate)),
+            ("unparseable_rate", Json::num(self.unparseable_rate)),
+            ("latency_scale", Json::num(self.latency_scale)),
+            ("sleep_latency", Json::Bool(self.sleep_latency)),
+            ("tail_latency_rate", Json::num(self.tail_latency_rate)),
+            ("tail_latency_mult", Json::num(self.tail_latency_mult)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::json::Json) -> Result<SimServiceConfig> {
+        let d = SimServiceConfig::default();
+        Ok(SimServiceConfig {
+            global_rpm: v.f64_or("global_rpm", d.global_rpm),
+            global_tpm: v.f64_or("global_tpm", d.global_tpm),
+            server_error_rate: v.f64_or("server_error_rate", d.server_error_rate),
+            unparseable_rate: v.f64_or("unparseable_rate", d.unparseable_rate),
+            latency_scale: v.f64_or("latency_scale", d.latency_scale),
+            sleep_latency: v.bool_or("sleep_latency", d.sleep_latency),
+            tail_latency_rate: v.f64_or("tail_latency_rate", d.tail_latency_rate),
+            tail_latency_mult: v.f64_or("tail_latency_mult", d.tail_latency_mult),
+            seed: v.f64_or("seed", 0.0) as u64,
+        })
     }
 }
 

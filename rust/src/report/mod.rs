@@ -105,6 +105,14 @@ pub fn eval_summary(result: &EvalResult) -> String {
         s.blacklisted_executors.len(),
         s.skew_ratio,
     ));
+    if s.executor_deaths > 0 {
+        // Deaths are distinct from task failures: a whole executor
+        // (process) was lost and its in-flight work retried elsewhere.
+        out.push_str(&format!(
+            "executor deaths: {} (in-flight tasks retried on surviving executors)\n",
+            s.executor_deaths,
+        ));
+    }
     if s.restored_rows > 0 {
         // Distinguish carried-over (restored) work from re-executed work:
         // api_calls/cost above cover only this run's fresh executions.

@@ -1,0 +1,1431 @@
+//! Executor backends: where scheduled tasks physically run.
+//!
+//! [`run_scheduled`](crate::sched::run_scheduled) executes closures on
+//! scoped threads inside the driver process — fast, but a single executor
+//! *crash* (abort, OOM kill, segfault — not a catchable panic) takes the
+//! whole run down, and multi-host scale-out is structurally impossible.
+//! This module inverts the scheduler into a driver loop over an
+//! [`ExecutorBackend`]:
+//!
+//! - the driver owns the scheduling state (queues, stealing, speculation,
+//!   retries, blacklisting) and pushes [`TaskSpec`]s to executors;
+//! - executors run a serializable [`TaskPlan`](super::plan::TaskPlan)
+//!   and report [`TaskResultMsg`]s;
+//! - [`ThreadBackend`] runs executors on in-process threads (one
+//!   plan-built executor per thread) — the in-process reference
+//!   implementation of the protocol;
+//! - [`ProcessBackend`] spawns `slleval worker` child processes and
+//!   speaks a length-prefixed JSON protocol over stdin/stdout pipes.
+//!   Child death (pipe EOF / wait status) becomes an
+//!   [`ExecutorEvent::Died`], which the driver folds into the existing
+//!   retry + blacklist machinery: a `kill -9`'d executor costs only its
+//!   in-flight task, and everything already spilled to the run
+//!   checkpoint survives for `--resume`.
+//!
+//! Wire protocol (each frame is a 4-byte big-endian length + UTF-8 JSON):
+//!
+//! ```text
+//! driver -> worker   {"type":"hello","executor_id":E,"batch_size":B,"plan":{...}}
+//!                    {"type":"task","task_id":T,"start":S,"end":E,"attempt":A,"speculative":false}
+//!                    {"type":"shutdown"}
+//! worker -> driver   {"type":"ready"} | {"type":"init_error","error":"..."}
+//!                    {"type":"result", ...TaskResultMsg}
+//!                    {"type":"task_error","task_id":T,"error":"..."}
+//! ```
+//!
+//! The driver loop does not support adaptive task splitting (a worker
+//! reports nothing mid-task), and aborts (cost budget, Ctrl-C) take
+//! effect at task rather than batch granularity. Everything else —
+//! stealing, speculation, retry, blacklisting, checkpoint restore/spill,
+//! row-exact reassembly — matches [`run_scheduled`]'s semantics.
+//!
+//! [`run_scheduled`]: crate::sched::run_scheduled
+
+use super::plan::TaskPlan;
+use super::{SchedulerConfig, SchedulerStats, TaskOutcome, TaskRecord};
+use crate::engine::{ExecutorStats, Progress};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Which backend executes scheduler tasks (`executor.backend` in the
+/// task JSON, `--backend` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// In-process scoped threads (the default; bit-identical to the
+    /// pre-backend scheduler).
+    #[default]
+    Thread,
+    /// One `slleval worker` OS process per executor (crash isolation).
+    Process,
+}
+
+impl BackendKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Thread => "thread",
+            BackendKind::Process => "process",
+        }
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "thread" => BackendKind::Thread,
+            "process" => BackendKind::Process,
+            other => bail!("unknown executor backend '{other}' (thread | process)"),
+        })
+    }
+}
+
+/// One task assignment pushed to an executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskSpec {
+    pub task_id: usize,
+    pub start: usize,
+    pub end: usize,
+    /// 1-based attempt number.
+    pub attempt: usize,
+    pub speculative: bool,
+}
+
+impl TaskSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::str("task")),
+            ("task_id", Json::num(self.task_id as f64)),
+            ("start", Json::num(self.start as f64)),
+            ("end", Json::num(self.end as f64)),
+            ("attempt", Json::num(self.attempt as f64)),
+            ("speculative", Json::Bool(self.speculative)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TaskSpec> {
+        Ok(TaskSpec {
+            task_id: v.get("task_id")?.as_usize()?,
+            start: v.get("start")?.as_usize()?,
+            end: v.get("end")?.as_usize()?,
+            attempt: v.usize_or("attempt", 1),
+            speculative: v.bool_or("speculative", false),
+        })
+    }
+}
+
+/// One completed task attempt: the rows plus the per-task accounting the
+/// in-process scheduler used to accumulate through shared memory.
+#[derive(Debug, Clone)]
+pub struct TaskResultMsg {
+    pub task_id: usize,
+    pub start: usize,
+    pub end: usize,
+    pub attempt: usize,
+    pub speculative: bool,
+    /// One JSON value per row in `[start, end)` (kind-specific codec).
+    pub rows: Vec<Json>,
+    pub rows_processed: usize,
+    pub batches: usize,
+    pub busy_secs: f64,
+    pub peak_in_flight: usize,
+    /// Provider spend of this attempt (every API call, retries included).
+    pub api_calls: u64,
+    pub retries: u64,
+    pub cost_usd: f64,
+}
+
+impl TaskResultMsg {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::str("result")),
+            ("task_id", Json::num(self.task_id as f64)),
+            ("start", Json::num(self.start as f64)),
+            ("end", Json::num(self.end as f64)),
+            ("attempt", Json::num(self.attempt as f64)),
+            ("speculative", Json::Bool(self.speculative)),
+            ("rows", Json::arr(self.rows.clone())),
+            ("rows_processed", Json::num(self.rows_processed as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("busy_secs", Json::num(self.busy_secs)),
+            ("peak_in_flight", Json::num(self.peak_in_flight as f64)),
+            ("api_calls", Json::num(self.api_calls as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("cost_usd", Json::num(self.cost_usd)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TaskResultMsg> {
+        Ok(TaskResultMsg {
+            task_id: v.get("task_id")?.as_usize()?,
+            start: v.get("start")?.as_usize()?,
+            end: v.get("end")?.as_usize()?,
+            attempt: v.usize_or("attempt", 1),
+            speculative: v.bool_or("speculative", false),
+            rows: v.get("rows")?.as_arr()?.to_vec(),
+            rows_processed: v.usize_or("rows_processed", 0),
+            batches: v.usize_or("batches", 0),
+            busy_secs: v.f64_or("busy_secs", 0.0),
+            peak_in_flight: v.usize_or("peak_in_flight", 0),
+            api_calls: v.f64_or("api_calls", 0.0) as u64,
+            retries: v.f64_or("retries", 0.0) as u64,
+            cost_usd: v.f64_or("cost_usd", 0.0),
+        })
+    }
+}
+
+/// What a backend reports back to the driver loop.
+#[derive(Debug)]
+pub enum ExecutorEvent {
+    /// Executor-local state built; the executor accepts tasks.
+    Ready { executor_id: usize },
+    /// Executor-local construction failed (fatal, like the thread
+    /// scheduler's init-failure semantics).
+    InitError { executor_id: usize, error: String },
+    TaskDone { executor_id: usize, result: TaskResultMsg },
+    /// The task's UDF-equivalent failed or panicked (retryable).
+    TaskFailed { executor_id: usize, task_id: usize, error: String },
+    /// The executor itself is gone (process exit / pipe EOF / fault
+    /// injection). Its in-flight task is lost and it takes no more work.
+    Died { executor_id: usize, detail: String },
+}
+
+/// The execution substrate the driver schedules onto. One backend
+/// instance drives one job; executors are spawned up front, fed one task
+/// at a time, and shut down when the job settles.
+pub trait ExecutorBackend {
+    /// Human tag for logs and stats (`"thread"` / `"process"`).
+    fn name(&self) -> &'static str;
+    /// Start executor `executor_id` (builds executor-local state
+    /// asynchronously; completion is signalled by [`ExecutorEvent::Ready`]).
+    fn spawn_executor(&mut self, executor_id: usize) -> Result<()>;
+    /// Push one task to an executor. An error means the executor is
+    /// unreachable — the driver settles it as dead.
+    fn submit(&mut self, executor_id: usize, spec: &TaskSpec) -> Result<()>;
+    /// Wait up to `timeout` for the next event.
+    fn poll(&mut self, timeout: Duration) -> Option<ExecutorEvent>;
+    /// Liveness probe (process: `try_wait`; thread: join-handle state).
+    fn alive(&self, executor_id: usize) -> bool;
+    /// Stop every executor (best-effort, idempotent).
+    fn shutdown(&mut self);
+}
+
+// --------------------------------------------------------------- framing
+
+/// Frames larger than this are a protocol error, not an allocation.
+const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Write one length-prefixed frame from already-serialized JSON text.
+/// Oversized frames fail here with a clear error instead of being
+/// rejected (or, past u32, silently desynchronized) reader-side.
+fn write_frame_bytes<W: Write>(w: &mut W, bytes: &[u8]) -> std::io::Result<()> {
+    if bytes.len() > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!(
+                "frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte protocol limit \
+                 (plan payload too large for one executor handshake)",
+                bytes.len()
+            ),
+        ));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Write one length-prefixed JSON frame.
+pub fn write_frame<W: Write>(w: &mut W, v: &Json) -> std::io::Result<()> {
+    write_frame_bytes(w, v.to_string().as_bytes())
+}
+
+/// Read one length-prefixed JSON frame. `Ok(None)` is a clean EOF at a
+/// frame boundary; a torn frame or oversized length is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    let mut filled = 0usize;
+    while filled < 4 {
+        match r.read(&mut len_buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => bail!("connection closed mid-frame (length prefix truncated)"),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame length"),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte protocol limit");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading frame body")?;
+    let text = String::from_utf8(body).context("frame is not UTF-8")?;
+    Ok(Some(Json::parse(&text).map_err(anyhow::Error::msg)?))
+}
+
+// --------------------------------------------------------- thread backend
+
+/// Executes one plan-built task range; implemented by
+/// `coordinator::plan_exec::PlanExecutor`. The factory indirection keeps
+/// `sched` free of coordinator types while letting [`ThreadBackend`] run
+/// the exact same task-side code a worker process runs.
+pub trait PlanTaskRunner {
+    fn run(&mut self, spec: &TaskSpec, batch_size: usize) -> Result<TaskResultMsg>;
+    /// Flush buffered side effects (cache writes) at shutdown.
+    fn finish(&mut self) {}
+}
+
+/// Builds one executor's [`PlanTaskRunner`] inside its executor thread.
+pub type RunnerFactory = Arc<dyn Fn(usize) -> Result<Box<dyn PlanTaskRunner>> + Send + Sync>;
+
+enum ThreadCmd {
+    Task(TaskSpec),
+    Shutdown,
+}
+
+/// In-process backend: one thread per executor, each owning a plan-built
+/// executor state, speaking the same submit/poll protocol as the process
+/// backend (minus serialization). Honors the plan's
+/// [`WorkerFault`](super::plan::WorkerFault) by dying silently — an
+/// in-process stand-in for `kill -9` that exercises the driver's death
+/// machinery deterministically in unit tests.
+pub struct ThreadBackend {
+    factory: RunnerFactory,
+    batch_size: usize,
+    fault: Option<super::plan::WorkerFault>,
+    inputs: Vec<Option<mpsc::Sender<ThreadCmd>>>,
+    handles: Vec<Option<std::thread::JoinHandle<()>>>,
+    events_tx: mpsc::Sender<ExecutorEvent>,
+    events_rx: mpsc::Receiver<ExecutorEvent>,
+}
+
+impl ThreadBackend {
+    pub fn new(
+        executors: usize,
+        batch_size: usize,
+        fault: Option<super::plan::WorkerFault>,
+        factory: RunnerFactory,
+    ) -> Self {
+        let (events_tx, events_rx) = mpsc::channel();
+        Self {
+            factory,
+            batch_size,
+            fault,
+            inputs: (0..executors).map(|_| None).collect(),
+            handles: (0..executors).map(|_| None).collect(),
+            events_tx,
+            events_rx,
+        }
+    }
+}
+
+impl ExecutorBackend for ThreadBackend {
+    fn name(&self) -> &'static str {
+        "thread"
+    }
+
+    fn spawn_executor(&mut self, eid: usize) -> Result<()> {
+        let (tx, rx) = mpsc::channel::<ThreadCmd>();
+        let events = self.events_tx.clone();
+        let factory = self.factory.clone();
+        let batch_size = self.batch_size;
+        let fault = self.fault;
+        let handle = std::thread::Builder::new()
+            .name(format!("slleval-exec-{eid}"))
+            .spawn(move || {
+                let mut runner = match factory(eid) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let _ = events.send(ExecutorEvent::InitError {
+                            executor_id: eid,
+                            error: format!("{e:#}"),
+                        });
+                        return;
+                    }
+                };
+                let _ = events.send(ExecutorEvent::Ready { executor_id: eid });
+                let mut received = 0usize;
+                while let Ok(cmd) = rx.recv() {
+                    let spec = match cmd {
+                        ThreadCmd::Task(spec) => spec,
+                        ThreadCmd::Shutdown => break,
+                    };
+                    received += 1;
+                    if let Some(f) = fault {
+                        if f.executor_id == eid && received == f.kill_after_tasks {
+                            // Simulated hard death with the same timing as
+                            // the process worker's fault hook: the task is
+                            // executed (including any worker-side
+                            // checkpoint spill) but never reported, then
+                            // the executor dies. The driver learns via
+                            // Died, exactly like a pipe EOF.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| runner.run(&spec, batch_size)),
+                            );
+                            let _ = events.send(ExecutorEvent::Died {
+                                executor_id: eid,
+                                detail: "fault injection: executor killed mid-task".into(),
+                            });
+                            return;
+                        }
+                    }
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        runner.run(&spec, batch_size)
+                    }));
+                    let event = match run {
+                        Ok(Ok(result)) => ExecutorEvent::TaskDone { executor_id: eid, result },
+                        Ok(Err(e)) => ExecutorEvent::TaskFailed {
+                            executor_id: eid,
+                            task_id: spec.task_id,
+                            error: format!("{e:#}"),
+                        },
+                        Err(payload) => {
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| payload.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "non-string panic payload".to_string());
+                            ExecutorEvent::TaskFailed {
+                                executor_id: eid,
+                                task_id: spec.task_id,
+                                error: format!("executor task panicked: {msg}"),
+                            }
+                        }
+                    };
+                    if events.send(event).is_err() {
+                        break;
+                    }
+                }
+                runner.finish();
+            })
+            .context("spawning executor thread")?;
+        self.inputs[eid] = Some(tx);
+        self.handles[eid] = Some(handle);
+        Ok(())
+    }
+
+    fn submit(&mut self, eid: usize, spec: &TaskSpec) -> Result<()> {
+        let tx = self.inputs[eid].as_ref().context("executor not spawned")?;
+        tx.send(ThreadCmd::Task(*spec)).map_err(|_| anyhow::anyhow!("executor {eid} is gone"))
+    }
+
+    fn poll(&mut self, timeout: Duration) -> Option<ExecutorEvent> {
+        self.events_rx.recv_timeout(timeout).ok()
+    }
+
+    fn alive(&self, eid: usize) -> bool {
+        self.handles[eid].as_ref().map(|h| !h.is_finished()).unwrap_or(false)
+    }
+
+    fn shutdown(&mut self) {
+        for tx in self.inputs.iter_mut() {
+            if let Some(tx) = tx.take() {
+                let _ = tx.send(ThreadCmd::Shutdown);
+            }
+        }
+        for handle in self.handles.iter_mut() {
+            if let Some(h) = handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for ThreadBackend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// -------------------------------------------------------- process backend
+
+/// Environment variable naming the worker executable (`slleval`). Used
+/// when the driver binary itself has no `worker` subcommand (examples,
+/// test harnesses); defaults to `current_exe`.
+pub const WORKER_EXE_ENV: &str = "SLLEVAL_WORKER_EXE";
+
+/// Out-of-process backend: one `slleval worker` child per executor,
+/// length-prefixed JSON over stdin/stdout. A dedicated reader thread per
+/// child converts its stdout frames into [`ExecutorEvent`]s; pipe EOF
+/// (the child exited, cleanly or not) becomes [`ExecutorEvent::Died`]
+/// unless the driver initiated shutdown.
+pub struct ProcessBackend {
+    /// The plan, serialized once — a hello frame per worker splices it in
+    /// verbatim instead of deep-cloning and re-stringifying the (possibly
+    /// corpus-sized) JSON tree per executor.
+    plan_text: String,
+    batch_size: usize,
+    worker_exe: std::path::PathBuf,
+    children: Vec<Option<std::process::Child>>,
+    stdins: Vec<Option<std::process::ChildStdin>>,
+    readers: Vec<Option<std::thread::JoinHandle<()>>>,
+    events_tx: mpsc::Sender<ExecutorEvent>,
+    events_rx: mpsc::Receiver<ExecutorEvent>,
+    /// Set before tearing pipes down so clean-shutdown EOFs are not
+    /// reported as deaths.
+    closing: Arc<AtomicBool>,
+}
+
+impl ProcessBackend {
+    /// `worker_exe`: explicit path to the `slleval` binary; falls back to
+    /// [`WORKER_EXE_ENV`], then to the current executable.
+    pub fn new(
+        plan: &TaskPlan,
+        executors: usize,
+        batch_size: usize,
+        worker_exe: Option<std::path::PathBuf>,
+    ) -> Result<Self> {
+        let worker_exe = match worker_exe {
+            Some(p) => p,
+            None => match std::env::var_os(WORKER_EXE_ENV) {
+                Some(p) => std::path::PathBuf::from(p),
+                None => std::env::current_exe().context("locating worker executable")?,
+            },
+        };
+        let (events_tx, events_rx) = mpsc::channel();
+        Ok(Self {
+            plan_text: plan.to_json().to_string(),
+            batch_size,
+            worker_exe,
+            children: (0..executors).map(|_| None).collect(),
+            stdins: (0..executors).map(|_| None).collect(),
+            readers: (0..executors).map(|_| None).collect(),
+            events_tx,
+            events_rx,
+            closing: Arc::new(AtomicBool::new(false)),
+        })
+    }
+}
+
+/// Parse one worker frame into an event (`None` for unknown types, which
+/// are ignored for forward compatibility).
+fn worker_frame_to_event(eid: usize, frame: &Json) -> Option<ExecutorEvent> {
+    match frame.str_or("type", "") {
+        "ready" => Some(ExecutorEvent::Ready { executor_id: eid }),
+        "init_error" => Some(ExecutorEvent::InitError {
+            executor_id: eid,
+            error: frame.str_or("error", "unknown init error").to_string(),
+        }),
+        "result" => match TaskResultMsg::from_json(frame) {
+            Ok(result) => Some(ExecutorEvent::TaskDone { executor_id: eid, result }),
+            Err(e) => Some(ExecutorEvent::Died {
+                executor_id: eid,
+                detail: format!("malformed result frame: {e:#}"),
+            }),
+        },
+        "task_error" => Some(ExecutorEvent::TaskFailed {
+            executor_id: eid,
+            task_id: frame.usize_or("task_id", usize::MAX),
+            error: frame.str_or("error", "unknown task error").to_string(),
+        }),
+        _ => None,
+    }
+}
+
+impl ExecutorBackend for ProcessBackend {
+    fn name(&self) -> &'static str {
+        "process"
+    }
+
+    fn spawn_executor(&mut self, eid: usize) -> Result<()> {
+        let mut child = std::process::Command::new(&self.worker_exe)
+            .arg("worker")
+            .stdin(std::process::Stdio::piped())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning worker process {:?}", self.worker_exe))?;
+        let mut stdin = child.stdin.take().context("worker stdin")?;
+        let mut stdout = child.stdout.take().context("worker stdout")?;
+
+        // Handshake: ship the plan once; tasks reference ranges into it.
+        // The pre-serialized plan text is spliced in verbatim.
+        let hello = format!(
+            "{{\"type\":\"hello\",\"executor_id\":{eid},\"batch_size\":{},\"plan\":{}}}",
+            self.batch_size, self.plan_text
+        );
+        write_frame_bytes(&mut stdin, hello.as_bytes()).context("writing hello frame")?;
+
+        let events = self.events_tx.clone();
+        let closing = self.closing.clone();
+        let reader = std::thread::Builder::new()
+            .name(format!("slleval-worker-rx-{eid}"))
+            .spawn(move || loop {
+                match read_frame(&mut stdout) {
+                    Ok(Some(frame)) => {
+                        if let Some(event) = worker_frame_to_event(eid, &frame) {
+                            if events.send(event).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                    Ok(None) => {
+                        if !closing.load(Ordering::Relaxed) {
+                            let _ = events.send(ExecutorEvent::Died {
+                                executor_id: eid,
+                                detail: "worker process exited (pipe EOF)".into(),
+                            });
+                        }
+                        return;
+                    }
+                    Err(e) => {
+                        if !closing.load(Ordering::Relaxed) {
+                            let _ = events.send(ExecutorEvent::Died {
+                                executor_id: eid,
+                                detail: format!("worker pipe error: {e:#}"),
+                            });
+                        }
+                        return;
+                    }
+                }
+            })
+            .context("spawning worker reader thread")?;
+
+        self.children[eid] = Some(child);
+        self.stdins[eid] = Some(stdin);
+        self.readers[eid] = Some(reader);
+        Ok(())
+    }
+
+    fn submit(&mut self, eid: usize, spec: &TaskSpec) -> Result<()> {
+        let stdin = self.stdins[eid].as_mut().context("executor not spawned")?;
+        write_frame(stdin, &spec.to_json())
+            .with_context(|| format!("submitting task to worker {eid}"))
+    }
+
+    fn poll(&mut self, timeout: Duration) -> Option<ExecutorEvent> {
+        self.events_rx.recv_timeout(timeout).ok()
+    }
+
+    fn alive(&self, eid: usize) -> bool {
+        match &self.children[eid] {
+            // `alive` takes &self; without try_wait treat a spawned child
+            // as live — real deaths surface through the reader's EOF.
+            Some(_) => self.readers[eid].as_ref().map(|r| !r.is_finished()).unwrap_or(false),
+            None => false,
+        }
+    }
+
+    fn shutdown(&mut self) {
+        self.closing.store(true, Ordering::Relaxed);
+        let shutdown_msg = Json::obj(vec![("type", Json::str("shutdown"))]);
+        for stdin in self.stdins.iter_mut() {
+            if let Some(mut s) = stdin.take() {
+                let _ = write_frame(&mut s, &shutdown_msg);
+                // Dropping stdin closes the pipe: a worker blocked on
+                // read sees EOF even if it missed the frame.
+            }
+        }
+        // One *collective* grace period: every child got the shutdown at
+        // the same instant, so they wind down (cache flushes included)
+        // concurrently — the deadline is shared, not per-child, and only
+        // stragglers past it are killed.
+        let deadline = Instant::now() + Duration::from_secs(15);
+        loop {
+            let all_done = self
+                .children
+                .iter_mut()
+                .all(|c| c.as_mut().map(|c| matches!(c.try_wait(), Ok(Some(_)))).unwrap_or(true));
+            if all_done || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for child in self.children.iter_mut() {
+            if let Some(mut c) = child.take() {
+                if !matches!(c.try_wait(), Ok(Some(_))) {
+                    eprintln!("warning: killing worker that ignored shutdown for 15s");
+                    let _ = c.kill();
+                }
+                let _ = c.wait();
+            }
+        }
+        for reader in self.readers.iter_mut() {
+            if let Some(r) = reader.take() {
+                let _ = r.join();
+            }
+        }
+    }
+}
+
+impl Drop for ProcessBackend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ------------------------------------------------------------ driver loop
+
+/// Backend-scheduled job outcome: raw JSON rows (kind-specific codec) in
+/// row order, plus the telemetry the in-process scheduler reports.
+#[derive(Debug)]
+pub struct PlanOutput {
+    pub rows: Vec<Json>,
+    pub executors: Vec<ExecutorStats>,
+    pub sched: SchedulerStats,
+    pub timeline: Vec<TaskRecord>,
+    /// Provider spend summed over every attempt (losing speculative twins
+    /// included), reported by the executors themselves.
+    pub api_calls: u64,
+    pub retries: u64,
+    pub cost_usd: f64,
+    pub peak_in_flight: usize,
+}
+
+struct DriverTask {
+    start: usize,
+    end: usize,
+    completed: bool,
+    attempts_failed: usize,
+    speculated: bool,
+    restored: bool,
+    rows: Option<Vec<Json>>,
+}
+
+struct InFlightAttempt {
+    task_id: usize,
+    executor_id: usize,
+    attempt: usize,
+    speculative: bool,
+    started_secs: f64,
+}
+
+/// Driver state for one backend-scheduled job.
+struct Driver<'a> {
+    cfg: &'a SchedulerConfig,
+    executors: usize,
+    tasks: Vec<DriverTask>,
+    queues: Vec<std::collections::VecDeque<usize>>,
+    inflight: Vec<InFlightAttempt>,
+    ready: Vec<bool>,
+    dead: Vec<bool>,
+    blacklisted: Vec<bool>,
+    failures_per_executor: Vec<usize>,
+    exec_stats: Vec<ExecutorStats>,
+    rows_done: usize,
+    total_rows: usize,
+    restored_tasks: usize,
+    restored_rows: usize,
+    timeline: Vec<TaskRecord>,
+    steals: usize,
+    speculative_launched: usize,
+    speculative_wins: usize,
+    retries: usize,
+    executor_deaths: usize,
+    api_calls: u64,
+    api_retries: u64,
+    cost_usd: f64,
+    fatal: Option<anyhow::Error>,
+    t0: Instant,
+}
+
+impl Driver<'_> {
+    fn live(&self, eid: usize) -> bool {
+        self.ready[eid] && !self.dead[eid] && !self.blacklisted[eid]
+    }
+
+    /// May still be handed queued work: not dead, not blacklisted —
+    /// including executors whose `Ready` has not arrived yet. Queue
+    /// placement must not require readiness, or an early death (a worker
+    /// OOM-killed during init, before any peer's Ready lands) would find
+    /// "no heirs" and fail the whole run instead of costing one executor.
+    fn assignable(&self, eid: usize) -> bool {
+        !self.dead[eid] && !self.blacklisted[eid]
+    }
+
+    fn busy(&self, eid: usize) -> bool {
+        self.inflight.iter().any(|f| f.executor_id == eid)
+    }
+
+    fn now_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Claim the next task for an idle executor: own queue front, then
+    /// steal from the back of the longest other queue, then speculate on
+    /// the longest-running unduplicated straggler (same policy as the
+    /// in-process scheduler).
+    fn claim(&mut self, eid: usize) -> Option<TaskSpec> {
+        let mut claimed: Option<(usize, bool)> = self.queues[eid].pop_front().map(|t| (t, false));
+
+        if claimed.is_none() && self.cfg.work_stealing {
+            let victim = (0..self.queues.len())
+                .filter(|&v| v != eid && !self.queues[v].is_empty())
+                .max_by_key(|&v| self.queues[v].len());
+            if let Some(v) = victim {
+                claimed = self.queues[v].pop_back().map(|t| (t, false));
+                self.steals += 1;
+            }
+        }
+
+        if claimed.is_none() && self.cfg.speculation {
+            let total = self.tasks.len() - self.restored_tasks;
+            let fresh_done =
+                self.tasks.iter().filter(|t| t.completed && !t.restored).count();
+            let threshold = (self.cfg.speculation_quantile * total as f64).ceil() as usize;
+            if total > 0 && fresh_done >= threshold && fresh_done < total {
+                let straggler = self
+                    .inflight
+                    .iter()
+                    .filter(|f| {
+                        !f.speculative
+                            && !self.tasks[f.task_id].completed
+                            && !self.tasks[f.task_id].speculated
+                    })
+                    .min_by(|a, b| a.started_secs.total_cmp(&b.started_secs))
+                    .map(|f| f.task_id);
+                if let Some(task_id) = straggler {
+                    self.tasks[task_id].speculated = true;
+                    self.speculative_launched += 1;
+                    claimed = Some((task_id, true));
+                }
+            }
+        }
+
+        let (task_id, speculative) = claimed?;
+        let task = &self.tasks[task_id];
+        let spec = TaskSpec {
+            task_id,
+            start: task.start,
+            end: task.end,
+            attempt: task.attempts_failed + 1,
+            speculative,
+        };
+        self.inflight.push(InFlightAttempt {
+            task_id,
+            executor_id: eid,
+            attempt: spec.attempt,
+            speculative,
+            started_secs: self.now_secs(),
+        });
+        Some(spec)
+    }
+
+    fn record(&mut self, f: &InFlightAttempt, outcome: TaskOutcome) {
+        let task = &self.tasks[f.task_id];
+        self.timeline.push(TaskRecord {
+            task_id: f.task_id,
+            start: task.start,
+            end: task.end,
+            executor_id: f.executor_id,
+            attempt: f.attempt,
+            speculative: f.speculative,
+            started_at: f.started_secs,
+            finished_at: self.now_secs(),
+            outcome,
+        });
+    }
+
+    fn take_inflight(&mut self, eid: usize, task_id: usize) -> Option<InFlightAttempt> {
+        let pos = self
+            .inflight
+            .iter()
+            .position(|f| f.executor_id == eid && f.task_id == task_id)?;
+        Some(self.inflight.remove(pos))
+    }
+
+    /// Enqueue a retry for a failed/lost-to-death task; fatal when the
+    /// attempt budget is exhausted or nobody is left to run it.
+    fn schedule_retry(&mut self, task_id: usize, not_on: usize, err: anyhow::Error) {
+        if self.tasks[task_id].completed {
+            return; // a twin already won; the failure costs nothing
+        }
+        self.tasks[task_id].attempts_failed += 1;
+        if self.inflight.iter().any(|f| f.task_id == task_id) {
+            return; // a twin attempt is still running; it is the retry
+        }
+        if self.tasks[task_id].attempts_failed >= self.cfg.max_task_attempts {
+            if self.fatal.is_none() {
+                let (start, end) = (self.tasks[task_id].start, self.tasks[task_id].end);
+                self.fatal = Some(err.context(format!(
+                    "task {task_id} [rows {start}..{end}) failed after {} attempts",
+                    self.tasks[task_id].attempts_failed
+                )));
+            }
+            return;
+        }
+        self.retries += 1;
+        let n = self.executors;
+        let target = (1..=n)
+            .map(|d| (not_on + d) % n)
+            .find(|&e| self.assignable(e))
+            .unwrap_or(not_on);
+        self.queues[target].push_back(task_id);
+    }
+
+    /// Redistribute a gone executor's queued tasks to the survivors
+    /// (including not-yet-ready ones, which take work once initialized).
+    fn redistribute_queue(&mut self, eid: usize, err_context: &str) {
+        let orphans: Vec<usize> = self.queues[eid].drain(..).collect();
+        let heirs: Vec<usize> =
+            (0..self.executors).filter(|&e| self.assignable(e)).collect();
+        if heirs.is_empty() {
+            if !orphans.is_empty() && self.fatal.is_none() {
+                self.fatal = Some(anyhow::anyhow!(
+                    "no live executors left to take over queued tasks ({err_context})"
+                ));
+            }
+            // Re-queue so a later fatal error message stays accurate.
+            self.queues[eid] = orphans.into();
+            return;
+        }
+        for (i, task_id) in orphans.into_iter().enumerate() {
+            self.queues[heirs[i % heirs.len()]].push_back(task_id);
+        }
+    }
+}
+
+/// Run a serializable plan's row space through an executor backend under
+/// the scheduler policy `cfg`. The driver owns claiming (queues /
+/// stealing / speculation), retry + blacklist fault tolerance, executor
+/// deaths, restored-range injection, and row-exact reassembly; the
+/// backend owns execution. Checkpoint spills are **worker-side**: each
+/// executor records its completed tasks into the plan's stage before
+/// reporting, so spilled work survives even the driver dying.
+///
+/// `abort` is an external, read-only stop flag (checked between events);
+/// `max_cost_usd` aborts the job once the executors' reported spend
+/// crosses the budget (task-granular — a worker does not observe the
+/// budget mid-task).
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan(
+    total_rows: usize,
+    executors: usize,
+    cfg: &SchedulerConfig,
+    backend: &mut dyn ExecutorBackend,
+    progress: Option<&Progress>,
+    restored: Vec<(usize, usize, Vec<Json>)>,
+    abort: Option<&AtomicBool>,
+    max_cost_usd: Option<f64>,
+) -> Result<PlanOutput> {
+    cfg.validate()?;
+    let executors = executors.max(1);
+
+    let mut driver = Driver {
+        cfg,
+        executors,
+        tasks: Vec::new(),
+        queues: (0..executors).map(|_| Default::default()).collect(),
+        inflight: Vec::new(),
+        ready: vec![false; executors],
+        dead: vec![false; executors],
+        blacklisted: vec![false; executors],
+        failures_per_executor: vec![0; executors],
+        exec_stats: (0..executors)
+            .map(|eid| ExecutorStats { executor_id: eid, ..Default::default() })
+            .collect(),
+        rows_done: 0,
+        total_rows,
+        restored_tasks: 0,
+        restored_rows: 0,
+        timeline: Vec::new(),
+        steals: 0,
+        speculative_launched: 0,
+        speculative_wins: 0,
+        retries: 0,
+        executor_deaths: 0,
+        api_calls: 0,
+        api_retries: 0,
+        cost_usd: 0.0,
+        fatal: None,
+        t0: Instant::now(),
+    };
+
+    // Validate + inject restored ranges as pre-completed tasks (identical
+    // contract to `run_scheduled_ext`).
+    let mut restored = restored;
+    restored.sort_by_key(|(start, _, _)| *start);
+    {
+        let mut cursor = 0usize;
+        for (start, end, rows) in &restored {
+            anyhow::ensure!(
+                start < end && *end <= total_rows,
+                "restored range [{start}, {end}) out of bounds for {total_rows} rows"
+            );
+            anyhow::ensure!(*start >= cursor, "restored ranges overlap at row {start}");
+            anyhow::ensure!(
+                rows.len() == end - start,
+                "restored range [{start}, {end}) carries {} rows",
+                rows.len()
+            );
+            cursor = *end;
+        }
+    }
+    let restored_spans: Vec<(usize, usize)> =
+        restored.iter().map(|(s, e, _)| (*s, *e)).collect();
+    for (start, end, rows) in restored {
+        driver.tasks.push(DriverTask {
+            start,
+            end,
+            completed: true,
+            attempts_failed: 0,
+            speculated: false,
+            restored: true,
+            rows: Some(rows),
+        });
+        driver.restored_tasks += 1;
+        driver.restored_rows += end - start;
+        driver.rows_done += end - start;
+        if let Some(p) = progress {
+            p.add(end - start);
+        }
+    }
+
+    // Carve fresh tasks over the uncovered gaps (same layout math as the
+    // in-process scheduler: near-equal contiguous ranges over
+    // `executors * tasks_per_executor` slots, assigned contiguously).
+    let n_slots = executors * cfg.tasks_per_executor;
+    let mut gaps: Vec<(usize, usize)> = Vec::new();
+    {
+        let mut cursor = 0usize;
+        for &(start, end) in &restored_spans {
+            if start > cursor {
+                gaps.push((cursor, start));
+            }
+            cursor = end;
+        }
+        if cursor < total_rows {
+            gaps.push((cursor, total_rows));
+        }
+    }
+    if restored_spans.is_empty() {
+        // Uniform carve matching `DataFrame::partition_ranges`.
+        let base = total_rows / n_slots;
+        let extra = total_rows % n_slots;
+        let mut start = 0usize;
+        for slot in 0..n_slots {
+            let size = base + usize::from(slot < extra);
+            if size > 0 {
+                let id = driver.tasks.len();
+                driver.tasks.push(DriverTask {
+                    start,
+                    end: start + size,
+                    completed: false,
+                    attempts_failed: 0,
+                    speculated: false,
+                    restored: false,
+                    rows: None,
+                });
+                let home = slot * executors / n_slots;
+                driver.queues[home].push_back(id);
+            }
+            start += size;
+        }
+    } else {
+        let total_gap: usize = gaps.iter().map(|(s, e)| e - s).sum();
+        let mut slot = 0usize;
+        for &(gap_start, gap_end) in &gaps {
+            let len = gap_end - gap_start;
+            let parts = (len * n_slots).div_ceil(total_gap.max(1)).clamp(1, len.max(1));
+            if len == 0 {
+                continue;
+            }
+            let base = len / parts;
+            let rem = len % parts;
+            let mut start = gap_start;
+            for i in 0..parts {
+                let end = start + base + usize::from(i < rem);
+                let id = driver.tasks.len();
+                driver.tasks.push(DriverTask {
+                    start,
+                    end,
+                    completed: false,
+                    attempts_failed: 0,
+                    speculated: false,
+                    restored: false,
+                    rows: None,
+                });
+                let home = (slot * executors / n_slots).min(executors - 1);
+                driver.queues[home].push_back(id);
+                slot += 1;
+                start = end;
+            }
+        }
+    }
+
+    // Fully restored (or empty) job: nothing to spawn.
+    if driver.rows_done == total_rows {
+        return finish(driver, backend, false);
+    }
+
+    for eid in 0..executors {
+        backend.spawn_executor(eid)?;
+    }
+    // Handshake deadline: a spawned executor that stays alive but never
+    // answers the protocol (a misconfigured worker binary eating stdin)
+    // must fail the job with a diagnosis, not hang the driver forever.
+    let ready_deadline = Instant::now() + Duration::from_secs(60);
+
+    // ---------------------------------------------------------- event loop
+    while driver.fatal.is_none() && driver.rows_done < driver.total_rows {
+        if Instant::now() > ready_deadline {
+            if let Some(eid) =
+                (0..executors).find(|&e| !driver.ready[e] && !driver.dead[e] && backend.alive(e))
+            {
+                driver.fatal = Some(anyhow::anyhow!(
+                    "executor {eid} never completed the {} handshake within 60s \
+                     (is the worker executable actually `slleval`?)",
+                    backend.name()
+                ));
+                break;
+            }
+        }
+        // External abort (budget watchdogs, Ctrl-C).
+        if let Some(flag) = abort {
+            if flag.load(Ordering::Relaxed) && driver.rows_done < driver.total_rows {
+                driver.fatal = Some(anyhow::anyhow!(
+                    "run aborted with {}/{} rows complete",
+                    driver.rows_done,
+                    driver.total_rows
+                ));
+                break;
+            }
+        }
+
+        // Dispatch to every idle live executor.
+        for eid in 0..executors {
+            if !driver.live(eid) || driver.busy(eid) || !backend.alive(eid) {
+                continue;
+            }
+            if let Some(spec) = driver.claim(eid) {
+                if let Err(e) = backend.submit(eid, &spec) {
+                    // Unreachable executor: roll the claim back and let
+                    // the death settle through the event (or directly).
+                    if let Some(f) = driver.take_inflight(eid, spec.task_id) {
+                        if spec.speculative {
+                            driver.tasks[spec.task_id].speculated = false;
+                            driver.speculative_launched -= 1;
+                        } else {
+                            driver.queues[eid].push_front(spec.task_id);
+                        }
+                        driver.record(&f, TaskOutcome::Abandoned);
+                    }
+                    settle_death(&mut driver, eid, &format!("submit failed: {e:#}"));
+                }
+            }
+        }
+
+        // Stall check: nothing running, nothing claimable.
+        if driver.inflight.is_empty() {
+            let queued: usize = driver.queues.iter().map(|q| q.len()).sum();
+            let any_live = (0..executors).any(|e| driver.live(e) && backend.alive(e));
+            let any_pending_ready =
+                (0..executors).any(|e| !driver.ready[e] && !driver.dead[e] && backend.alive(e));
+            if !any_live && !any_pending_ready {
+                driver.fatal = Some(anyhow::anyhow!(
+                    "no live executors left ({} dead, {} blacklisted) with {}/{} rows done",
+                    driver.executor_deaths,
+                    driver.blacklisted.iter().filter(|&&b| b).count(),
+                    driver.rows_done,
+                    driver.total_rows
+                ));
+                break;
+            }
+            if queued == 0 && any_live && !any_pending_ready {
+                driver.fatal = Some(anyhow::anyhow!(
+                    "scheduler stalled with {}/{} rows done",
+                    driver.rows_done,
+                    driver.total_rows
+                ));
+                break;
+            }
+        }
+
+        let Some(event) = backend.poll(Duration::from_millis(20)) else { continue };
+        match event {
+            ExecutorEvent::Ready { executor_id } => {
+                driver.ready[executor_id] = true;
+            }
+            ExecutorEvent::InitError { executor_id, error } => {
+                driver.fatal =
+                    Some(anyhow::anyhow!("executor {executor_id} failed to initialize: {error}"));
+            }
+            ExecutorEvent::TaskDone { executor_id, result } => {
+                // Spend covers every attempt, winners and losers alike.
+                driver.api_calls += result.api_calls;
+                driver.api_retries += result.retries;
+                driver.cost_usd += result.cost_usd;
+                let st = &mut driver.exec_stats[executor_id];
+                st.rows_processed += result.rows_processed;
+                st.batches += result.batches;
+                st.busy_secs += result.busy_secs;
+                st.peak_in_flight = st.peak_in_flight.max(result.peak_in_flight);
+
+                let Some(f) = driver.take_inflight(executor_id, result.task_id) else {
+                    continue; // stale frame from a settled executor
+                };
+                let task_id = result.task_id;
+                let (t_start, t_end, completed) = {
+                    let t = &driver.tasks[task_id];
+                    (t.start, t.end, t.completed)
+                };
+                if completed {
+                    driver.record(&f, TaskOutcome::Lost);
+                } else if result.rows.len() != t_end - t_start
+                    || (result.start, result.end) != (t_start, t_end)
+                {
+                    driver.record(&f, TaskOutcome::Failed);
+                    driver.failures_per_executor[executor_id] += 1;
+                    maybe_blacklist(&mut driver, executor_id);
+                    driver.schedule_retry(
+                        task_id,
+                        executor_id,
+                        anyhow::anyhow!(
+                            "executor {executor_id} returned {} rows for task \
+                             [{t_start}, {t_end})",
+                            result.rows.len(),
+                        ),
+                    );
+                } else {
+                    driver.tasks[task_id].completed = true;
+                    driver.tasks[task_id].rows = Some(result.rows);
+                    let n = t_end - t_start;
+                    driver.rows_done += n;
+                    if let Some(p) = progress {
+                        p.add(n);
+                    }
+                    if f.speculative {
+                        driver.speculative_wins += 1;
+                    }
+                    driver.record(&f, TaskOutcome::Won);
+                    if let Some(budget) = max_cost_usd {
+                        if driver.cost_usd > budget && driver.rows_done < driver.total_rows {
+                            driver.fatal = Some(anyhow::anyhow!(
+                                "run aborted: cost ${:.4} exceeded budget ${budget:.4} \
+                                 with {}/{} rows complete",
+                                driver.cost_usd,
+                                driver.rows_done,
+                                driver.total_rows
+                            ));
+                        }
+                    }
+                }
+            }
+            ExecutorEvent::TaskFailed { executor_id, task_id, error } => {
+                if let Some(f) = driver.take_inflight(executor_id, task_id) {
+                    driver.record(&f, TaskOutcome::Failed);
+                }
+                driver.failures_per_executor[executor_id] += 1;
+                maybe_blacklist(&mut driver, executor_id);
+                if task_id < driver.tasks.len() {
+                    driver.schedule_retry(task_id, executor_id, anyhow::anyhow!("{error}"));
+                }
+            }
+            ExecutorEvent::Died { executor_id, detail } => {
+                settle_death(&mut driver, executor_id, &detail);
+            }
+        }
+    }
+
+    let had_fatal = driver.fatal.is_some();
+    finish(driver, backend, had_fatal)
+}
+
+/// Blacklist an executor whose failure count crossed the threshold.
+fn maybe_blacklist(driver: &mut Driver<'_>, eid: usize) {
+    if driver.failures_per_executor[eid] >= driver.cfg.blacklist_after
+        && !driver.blacklisted[eid]
+    {
+        driver.blacklisted[eid] = true;
+        driver.redistribute_queue(eid, "executor blacklisted after repeated failures");
+    }
+}
+
+/// Fold an executor death into the fault-tolerance machinery: count it,
+/// stop scheduling onto it, retry its in-flight task elsewhere, and hand
+/// its queue to the survivors.
+fn settle_death(driver: &mut Driver<'_>, eid: usize, detail: &str) {
+    if driver.dead[eid] {
+        return;
+    }
+    driver.dead[eid] = true;
+    driver.executor_deaths += 1;
+    driver.blacklisted[eid] = true;
+    eprintln!("warning: executor {eid} died ({detail}); redistributing its work");
+    let mut lost: Vec<InFlightAttempt> = Vec::new();
+    while let Some(pos) = driver.inflight.iter().position(|f| f.executor_id == eid) {
+        lost.push(driver.inflight.remove(pos));
+    }
+    for f in lost {
+        driver.record(&f, TaskOutcome::Failed);
+        driver.schedule_retry(
+            f.task_id,
+            eid,
+            anyhow::anyhow!("executor {eid} died mid-task: {detail}"),
+        );
+    }
+    driver.redistribute_queue(eid, detail);
+}
+
+/// Assemble the final output (or surface the fatal error) and shut the
+/// backend down.
+fn finish(
+    mut driver: Driver<'_>,
+    backend: &mut dyn ExecutorBackend,
+    had_fatal: bool,
+) -> Result<PlanOutput> {
+    // Attempts still in flight when the job settled (a won twin's
+    // straggler, or any attempt at abort time) are abandoned: their rows
+    // never arrive, but the duplicated work is accounted as wasted.
+    while let Some(f) = driver.inflight.pop() {
+        driver.record(&f, TaskOutcome::Abandoned);
+    }
+    backend.shutdown();
+    if had_fatal {
+        if let Some(e) = driver.fatal.take() {
+            return Err(e);
+        }
+    }
+
+    let mut parts: Vec<(usize, usize, Vec<Json>)> = Vec::with_capacity(driver.tasks.len());
+    for (id, task) in driver.tasks.iter_mut().enumerate() {
+        if task.start == task.end {
+            continue;
+        }
+        let Some(rows) = task.rows.take() else {
+            bail!(
+                "scheduler invariant violated: task {id} [{}, {}) never completed",
+                task.start,
+                task.end
+            );
+        };
+        parts.push((task.start, task.end, rows));
+    }
+    parts.sort_by_key(|(start, _, _)| *start);
+    let mut rows = Vec::with_capacity(driver.total_rows);
+    let mut cursor = 0usize;
+    for (start, end, part) in parts {
+        anyhow::ensure!(
+            start == cursor && part.len() == end - start,
+            "scheduler invariant violated: task range [{start}, {end}) does not tile the \
+             frame at row {cursor}"
+        );
+        rows.extend(part);
+        cursor = end;
+    }
+    anyhow::ensure!(
+        cursor == driver.total_rows,
+        "scheduler invariant violated: covered {cursor} of {} rows",
+        driver.total_rows
+    );
+
+    let mut sched = SchedulerStats {
+        tasks: driver.tasks.iter().filter(|t| t.start != t.end).count(),
+        steals: driver.steals,
+        speculative_launched: driver.speculative_launched,
+        speculative_wins: driver.speculative_wins,
+        splits: 0,
+        retries: driver.retries,
+        restored_tasks: driver.restored_tasks,
+        restored_rows: driver.restored_rows,
+        executor_deaths: driver.executor_deaths,
+        blacklisted_executors: (0..driver.executors)
+            .filter(|&e| driver.blacklisted[e])
+            .collect(),
+        wasted_rows: driver
+            .timeline
+            .iter()
+            .filter(|r| matches!(r.outcome, TaskOutcome::Lost | TaskOutcome::Abandoned))
+            .map(|r| r.end - r.start)
+            .sum(),
+        ..Default::default()
+    };
+    let wins: Vec<f64> = driver
+        .timeline
+        .iter()
+        .filter(|r| r.outcome == TaskOutcome::Won)
+        .map(|r| r.finished_at - r.started_at)
+        .collect();
+    if !wins.is_empty() {
+        sched.longest_task_secs = wins.iter().cloned().fold(0.0, f64::max);
+        sched.mean_task_secs = wins.iter().sum::<f64>() / wins.len() as f64;
+        sched.skew_ratio = if sched.mean_task_secs > 0.0 {
+            sched.longest_task_secs / sched.mean_task_secs
+        } else {
+            1.0
+        };
+    }
+    let peak_in_flight =
+        driver.exec_stats.iter().map(|e| e.peak_in_flight).max().unwrap_or(0);
+    Ok(PlanOutput {
+        rows,
+        executors: driver.exec_stats,
+        sched,
+        timeline: driver.timeline,
+        api_calls: driver.api_calls,
+        retries: driver.api_retries,
+        cost_usd: driver.cost_usd,
+        peak_in_flight,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_round_trips() {
+        for kind in [BackendKind::Thread, BackendKind::Process] {
+            assert_eq!(BackendKind::from_str(kind.as_str()).unwrap(), kind);
+        }
+        assert!(BackendKind::from_str("remote").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Thread);
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let v = Json::obj(vec![
+            ("type", Json::str("task")),
+            ("payload", Json::arr(vec![Json::num(1.0), Json::str("two")])),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).unwrap();
+        write_frame(&mut buf, &Json::str("second")).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), v);
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), Json::str("second"));
+        assert!(read_frame(&mut cursor).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn torn_frame_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::str("x")).unwrap();
+        buf.truncate(buf.len() - 1);
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+        // Truncated length prefix.
+        let mut cursor = std::io::Cursor::new(vec![0u8, 0, 0]);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn task_spec_and_result_round_trip() {
+        let spec =
+            TaskSpec { task_id: 3, start: 10, end: 20, attempt: 2, speculative: true };
+        assert_eq!(TaskSpec::from_json(&spec.to_json()).unwrap(), spec);
+
+        let msg = TaskResultMsg {
+            task_id: 3,
+            start: 10,
+            end: 12,
+            attempt: 2,
+            speculative: false,
+            rows: vec![Json::num(1.0), Json::Null],
+            rows_processed: 2,
+            batches: 1,
+            busy_secs: 0.5,
+            peak_in_flight: 4,
+            api_calls: 7,
+            retries: 1,
+            cost_usd: 0.25,
+        };
+        let restored = TaskResultMsg::from_json(&msg.to_json()).unwrap();
+        assert_eq!(restored.task_id, 3);
+        assert_eq!(restored.rows, msg.rows);
+        assert_eq!(restored.api_calls, 7);
+        assert_eq!(restored.cost_usd, 0.25);
+    }
+}

@@ -40,6 +40,9 @@
 //! executor, no stealing/speculation/retry), preserving the original
 //! semantics bit for bit.
 
+pub mod backend;
+pub mod plan;
+
 use crate::checkpoint::StageCheckpoint;
 use crate::data::DataFrame;
 use crate::engine::{BatchSlice, ExecutorStats, Progress};
@@ -243,6 +246,12 @@ pub struct SchedulerStats {
     pub splits: usize,
     /// Task attempts beyond each task's first.
     pub retries: usize,
+    /// Executors that *died* (process exit, pipe EOF, injected kill) as
+    /// opposed to failing tasks: only backend-scheduled jobs
+    /// ([`backend::run_plan`]) can observe these — the in-process
+    /// scheduler cannot outlive an executor crash. Dead executors also
+    /// appear in `blacklisted_executors` (they take no further work).
+    pub executor_deaths: usize,
     pub blacklisted_executors: Vec<usize>,
     /// Tasks/rows restored from a run checkpoint instead of re-executed
     /// (paid-for work carried over by `--resume`).
@@ -268,6 +277,7 @@ impl SchedulerStats {
         self.speculative_wins += other.speculative_wins;
         self.splits += other.splits;
         self.retries += other.retries;
+        self.executor_deaths += other.executor_deaths;
         for &e in &other.blacklisted_executors {
             if !self.blacklisted_executors.contains(&e) {
                 self.blacklisted_executors.push(e);
@@ -299,6 +309,7 @@ impl SchedulerStats {
             ("speculative_wins", Json::num(self.speculative_wins as f64)),
             ("splits", Json::num(self.splits as f64)),
             ("retries", Json::num(self.retries as f64)),
+            ("executor_deaths", Json::num(self.executor_deaths as f64)),
             (
                 "blacklisted_executors",
                 Json::arr(

@@ -1,0 +1,489 @@
+//! Serializable task plans — the unit of work an executor backend runs.
+//!
+//! [`crate::sched::run_scheduled`] accepts opaque closures, which can
+//! never cross a process boundary. A [`TaskPlan`] is the closed,
+//! JSON-round-trippable description of the work kinds the coordinator
+//! actually schedules — inference rows, pure-metric scoring, pairwise
+//! judging — plus the execution environment an out-of-process worker
+//! needs to rebuild the executor-local state the closures used to
+//! capture (provider service config, clock mode, cache location) and the
+//! content-addressed checkpoint stage it spills completed tasks into.
+//!
+//! The plan is shipped once per executor (the [`ExecutorBackend`]
+//! handshake); individual tasks then reference row ranges into the
+//! plan's payload, so the per-task messages stay small.
+//!
+//! [`ExecutorBackend`]: crate::sched::backend::ExecutorBackend
+
+use crate::config::{CachePolicy, InferenceConfig, MetricConfig, ModelConfig};
+use crate::metrics::Example;
+use crate::providers::simulated::SimServiceConfig;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// One complete executor work specification: the work kind payload, the
+/// environment to rebuild engines from, the checkpoint spill target, and
+/// (tests only) a deterministic crash-injection hook.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskPlan {
+    pub work: PlanWork,
+    pub env: PlanEnv,
+    /// Worker-side checkpoint spill target (content-addressed stage).
+    pub stage: Option<StagePlan>,
+    /// Deterministic executor-death injection for offline crash tests.
+    pub fault: Option<WorkerFault>,
+}
+
+/// The closed set of work kinds the coordinator schedules.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanWork {
+    /// Stage-2 distributed inference over a prompt column.
+    Inference(InferencePlan),
+    /// Stage-3 pure-metric scoring over assembled examples.
+    MetricScore(MetricPlan),
+    /// Pairwise LLM-judge comparison over response pairs (both orders).
+    PairwiseJudge(PairwisePlan),
+}
+
+/// Inference-stage plan: per-row prompts plus everything the old
+/// `run_inference` executor closure captured by reference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferencePlan {
+    pub model: ModelConfig,
+    pub inference: InferenceConfig,
+    /// Total executor count (token buckets split the global budget).
+    pub executors: usize,
+    /// Statistics seed (per-slot retry-jitter rng streams).
+    pub seed: u64,
+    pub prompts: Vec<String>,
+}
+
+/// Pure-metric scoring plan. Only registry built-ins are eligible: a
+/// custom metric object cannot cross a process boundary, so custom
+/// metrics always score in-process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricPlan {
+    pub metric: MetricConfig,
+    pub examples: Vec<Example>,
+}
+
+/// Pairwise judging plan: one entry per example pair; rows with a missing
+/// response score `unscored` without a judge call, like the closure path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PairwisePlan {
+    pub judge: ModelConfig,
+    pub rubric: String,
+    /// In-flight judge calls multiplexed per executor.
+    pub concurrency: usize,
+    pub pairs: Vec<PairInput>,
+}
+
+/// One pairwise-judging row.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PairInput {
+    pub question: String,
+    pub reference: String,
+    pub response_a: Option<String>,
+    pub response_b: Option<String>,
+}
+
+/// Execution environment an out-of-process worker rebuilds: the provider
+/// endpoint simulation knobs, the clock mode, and the response cache.
+/// In-process (thread) executors share the driver's live handles instead;
+/// see `coordinator::plan_exec::PlanHost`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanEnv {
+    pub service: SimServiceConfig,
+    /// Rebuild a virtual clock (fast/simulation mode) instead of wall
+    /// clock. Each worker process owns its own clock; latency is slept
+    /// (or skipped) locally, never coordinated across processes.
+    pub virtual_clock: bool,
+    pub cache_dir: Option<String>,
+    pub cache_policy: CachePolicy,
+}
+
+impl Default for PlanEnv {
+    fn default() -> Self {
+        Self {
+            service: SimServiceConfig::default(),
+            virtual_clock: false,
+            cache_dir: None,
+            cache_policy: CachePolicy::Disabled,
+        }
+    }
+}
+
+/// Checkpoint spill target: the stage directory (already created and
+/// fingerprint-bound by the driver) workers record completed tasks into.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlan {
+    pub dir: String,
+    /// Content-address of the stage inputs (diagnostics; the directory
+    /// name embeds it too).
+    pub fingerprint: String,
+}
+
+/// Deterministic executor-death injection (offline crash testing): the
+/// targeted executor dies hard — `std::process::abort` for a process
+/// worker, an unannounced thread exit for a thread worker — while
+/// executing its `kill_after_tasks`-th task, losing exactly that
+/// in-flight task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerFault {
+    pub executor_id: usize,
+    /// 1-based index of the task the executor dies on.
+    pub kill_after_tasks: usize,
+}
+
+impl WorkerFault {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("executor_id", Json::num(self.executor_id as f64)),
+            ("kill_after_tasks", Json::num(self.kill_after_tasks as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<WorkerFault> {
+        Ok(WorkerFault {
+            executor_id: v.get("executor_id")?.as_usize()?,
+            kill_after_tasks: v.get("kill_after_tasks")?.as_usize()?,
+        })
+    }
+}
+
+fn model_to_json(m: &ModelConfig) -> Json {
+    Json::obj(vec![
+        ("provider", Json::str(&m.provider)),
+        ("model_name", Json::str(&m.model_name)),
+        ("temperature", Json::num(m.temperature)),
+        ("max_tokens", Json::num(m.max_tokens as f64)),
+    ])
+}
+
+fn model_from_json(v: &Json) -> Result<ModelConfig> {
+    Ok(ModelConfig {
+        provider: v.get("provider")?.as_str()?.to_string(),
+        model_name: v.get("model_name")?.as_str()?.to_string(),
+        temperature: v.f64_or("temperature", 0.0),
+        max_tokens: v.usize_or("max_tokens", 1024),
+    })
+}
+
+fn inference_cfg_to_json(i: &InferenceConfig) -> Json {
+    Json::obj(vec![
+        ("batch_size", Json::num(i.batch_size as f64)),
+        ("concurrency", Json::num(i.concurrency as f64)),
+        ("rate_limit_rpm", Json::num(i.rate_limit_rpm)),
+        ("rate_limit_tpm", Json::num(i.rate_limit_tpm)),
+        ("cache_policy", Json::str(i.cache_policy.as_str())),
+        ("max_retries", Json::num(i.max_retries as f64)),
+        ("retry_delay", Json::num(i.retry_delay)),
+        ("adaptive_rate_limits", Json::Bool(i.adaptive_rate_limits)),
+        ("max_cost_usd", i.max_cost_usd.map(Json::num).unwrap_or(Json::Null)),
+    ])
+}
+
+fn inference_cfg_from_json(v: &Json) -> Result<InferenceConfig> {
+    let d = InferenceConfig::default();
+    Ok(InferenceConfig {
+        batch_size: v.usize_or("batch_size", d.batch_size),
+        concurrency: v.usize_or("concurrency", d.concurrency),
+        rate_limit_rpm: v.f64_or("rate_limit_rpm", d.rate_limit_rpm),
+        rate_limit_tpm: v.f64_or("rate_limit_tpm", d.rate_limit_tpm),
+        cache_policy: CachePolicy::from_str(v.str_or("cache_policy", "enabled"))?,
+        max_retries: v.usize_or("max_retries", d.max_retries),
+        retry_delay: v.f64_or("retry_delay", d.retry_delay),
+        adaptive_rate_limits: v.bool_or("adaptive_rate_limits", false),
+        max_cost_usd: v.opt("max_cost_usd").and_then(|b| b.as_f64().ok()),
+    })
+}
+
+fn metric_cfg_to_json(m: &MetricConfig) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&m.name)),
+        ("type", Json::str(&m.metric_type)),
+        ("params", Json::Obj(m.params.clone())),
+    ])
+}
+
+fn metric_cfg_from_json(v: &Json) -> Result<MetricConfig> {
+    Ok(MetricConfig {
+        name: v.get("name")?.as_str()?.to_string(),
+        metric_type: v.str_or("type", "lexical").to_string(),
+        params: v.opt("params").map(|p| p.as_obj().cloned()).transpose()?.unwrap_or_default(),
+    })
+}
+
+fn opt_str(v: &Json, key: &str) -> Option<String> {
+    v.opt(key).and_then(|s| s.as_str().ok()).map(String::from)
+}
+
+impl TaskPlan {
+    /// Rows this plan covers (the scheduler tiles `[0, total_rows)`).
+    pub fn total_rows(&self) -> usize {
+        match &self.work {
+            PlanWork::Inference(p) => p.prompts.len(),
+            PlanWork::MetricScore(p) => p.examples.len(),
+            PlanWork::PairwiseJudge(p) => p.pairs.len(),
+        }
+    }
+
+    /// Provider whose endpoint the executor talks to (`None` for pure
+    /// metric scoring, which makes no provider calls).
+    pub fn provider(&self) -> Option<&str> {
+        match &self.work {
+            PlanWork::Inference(p) => Some(&p.model.provider),
+            PlanWork::MetricScore(_) => None,
+            PlanWork::PairwiseJudge(p) => Some(&p.judge.provider),
+        }
+    }
+
+    /// Short work-kind tag (wire format, diagnostics).
+    pub fn kind(&self) -> &'static str {
+        match &self.work {
+            PlanWork::Inference(_) => "inference",
+            PlanWork::MetricScore(_) => "metric_score",
+            PlanWork::PairwiseJudge(_) => "pairwise_judge",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let work = match &self.work {
+            PlanWork::Inference(p) => Json::obj(vec![
+                ("model", model_to_json(&p.model)),
+                ("inference", inference_cfg_to_json(&p.inference)),
+                ("executors", Json::num(p.executors as f64)),
+                ("seed", Json::num(p.seed as f64)),
+                ("prompts", Json::arr(p.prompts.iter().map(|s| Json::str(s)).collect())),
+            ]),
+            PlanWork::MetricScore(p) => Json::obj(vec![
+                ("metric", metric_cfg_to_json(&p.metric)),
+                ("examples", Json::arr(p.examples.iter().map(|e| e.to_json()).collect())),
+            ]),
+            PlanWork::PairwiseJudge(p) => Json::obj(vec![
+                ("judge", model_to_json(&p.judge)),
+                ("rubric", Json::str(&p.rubric)),
+                ("concurrency", Json::num(p.concurrency as f64)),
+                (
+                    "pairs",
+                    Json::arr(
+                        p.pairs
+                            .iter()
+                            .map(|pair| {
+                                Json::obj(vec![
+                                    ("question", Json::str(&pair.question)),
+                                    ("reference", Json::str(&pair.reference)),
+                                    (
+                                        "response_a",
+                                        pair.response_a
+                                            .as_deref()
+                                            .map(Json::str)
+                                            .unwrap_or(Json::Null),
+                                    ),
+                                    (
+                                        "response_b",
+                                        pair.response_b
+                                            .as_deref()
+                                            .map(Json::str)
+                                            .unwrap_or(Json::Null),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        Json::obj(vec![
+            ("kind", Json::str(self.kind())),
+            ("work", work),
+            (
+                "env",
+                Json::obj(vec![
+                    ("service", self.env.service.to_json()),
+                    ("virtual_clock", Json::Bool(self.env.virtual_clock)),
+                    (
+                        "cache_dir",
+                        self.env.cache_dir.as_deref().map(Json::str).unwrap_or(Json::Null),
+                    ),
+                    ("cache_policy", Json::str(self.env.cache_policy.as_str())),
+                ]),
+            ),
+            (
+                "stage",
+                self.stage
+                    .as_ref()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("dir", Json::str(&s.dir)),
+                            ("fingerprint", Json::str(&s.fingerprint)),
+                        ])
+                    })
+                    .unwrap_or(Json::Null),
+            ),
+            ("fault", self.fault.as_ref().map(|f| f.to_json()).unwrap_or(Json::Null)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TaskPlan> {
+        let kind = v.get("kind")?.as_str()?;
+        let w = v.get("work")?;
+        let work = match kind {
+            "inference" => PlanWork::Inference(InferencePlan {
+                model: model_from_json(w.get("model")?)?,
+                inference: inference_cfg_from_json(w.get("inference")?)?,
+                executors: w.usize_or("executors", 1),
+                seed: w.f64_or("seed", 42.0) as u64,
+                prompts: w
+                    .get("prompts")?
+                    .as_arr()?
+                    .iter()
+                    .map(|p| Ok(p.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+            }),
+            "metric_score" => PlanWork::MetricScore(MetricPlan {
+                metric: metric_cfg_from_json(w.get("metric")?)?,
+                examples: w
+                    .get("examples")?
+                    .as_arr()?
+                    .iter()
+                    .map(Example::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            }),
+            "pairwise_judge" => PlanWork::PairwiseJudge(PairwisePlan {
+                judge: model_from_json(w.get("judge")?)?,
+                rubric: w.get("rubric")?.as_str()?.to_string(),
+                concurrency: w.usize_or("concurrency", 1),
+                pairs: w
+                    .get("pairs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|p| {
+                        Ok(PairInput {
+                            question: p.str_or("question", "").to_string(),
+                            reference: p.str_or("reference", "").to_string(),
+                            response_a: opt_str(p, "response_a"),
+                            response_b: opt_str(p, "response_b"),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            }),
+            other => bail!("unknown task plan kind '{other}'"),
+        };
+        let env = match v.opt("env") {
+            Some(e) => PlanEnv {
+                service: SimServiceConfig::from_json(e.get("service")?)?,
+                virtual_clock: e.bool_or("virtual_clock", false),
+                cache_dir: opt_str(e, "cache_dir"),
+                cache_policy: CachePolicy::from_str(e.str_or("cache_policy", "disabled"))?,
+            },
+            None => PlanEnv::default(),
+        };
+        let stage = match v.opt("stage") {
+            Some(Json::Null) | None => None,
+            Some(s) => Some(StagePlan {
+                dir: s.get("dir")?.as_str()?.to_string(),
+                fingerprint: s.str_or("fingerprint", "").to_string(),
+            }),
+        };
+        let fault = match v.opt("fault") {
+            Some(Json::Null) | None => None,
+            Some(f) => Some(WorkerFault::from_json(f)?),
+        };
+        Ok(TaskPlan { work, env, stage, fault })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn env() -> PlanEnv {
+        PlanEnv {
+            service: SimServiceConfig { server_error_rate: 0.0, seed: 9, ..Default::default() },
+            virtual_clock: true,
+            cache_dir: Some("/tmp/cache".into()),
+            cache_policy: CachePolicy::Enabled,
+        }
+    }
+
+    #[test]
+    fn inference_plan_round_trips() {
+        let plan = TaskPlan {
+            work: PlanWork::Inference(InferencePlan {
+                model: ModelConfig { temperature: 0.5, ..Default::default() },
+                inference: InferenceConfig {
+                    concurrency: 4,
+                    max_cost_usd: Some(2.5),
+                    ..Default::default()
+                },
+                executors: 3,
+                seed: 7,
+                prompts: vec!["a".into(), "b".into(), "c".into()],
+            }),
+            env: env(),
+            stage: Some(StagePlan { dir: "/tmp/run/infer-abc".into(), fingerprint: "abc".into() }),
+            fault: Some(WorkerFault { executor_id: 1, kill_after_tasks: 2 }),
+        };
+        let restored = TaskPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, restored);
+        assert_eq!(restored.total_rows(), 3);
+        assert_eq!(restored.provider(), Some("openai"));
+        // The wire format survives a text round trip too (IPC framing
+        // ships the serialized text, not the in-memory value).
+        let text = plan.to_json().to_string();
+        assert_eq!(TaskPlan::from_json(&Json::parse(&text).unwrap()).unwrap(), plan);
+    }
+
+    #[test]
+    fn metric_plan_round_trips() {
+        let plan = TaskPlan {
+            work: PlanWork::MetricScore(MetricPlan {
+                metric: MetricConfig::new("exact_match", "lexical"),
+                examples: vec![
+                    Example {
+                        prompt: "p".into(),
+                        response: "r".into(),
+                        reference: "r".into(),
+                        question: "q".into(),
+                        context: vec!["c1".into(), "c2".into()],
+                        gold_position: 1,
+                    },
+                    Example::default(),
+                ],
+            }),
+            env: PlanEnv::default(),
+            stage: None,
+            fault: None,
+        };
+        let restored = TaskPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, restored);
+        assert_eq!(restored.provider(), None);
+        assert_eq!(restored.kind(), "metric_score");
+    }
+
+    #[test]
+    fn pairwise_plan_round_trips() {
+        let plan = TaskPlan {
+            work: PlanWork::PairwiseJudge(PairwisePlan {
+                judge: ModelConfig::default(),
+                rubric: "accuracy".into(),
+                concurrency: 2,
+                pairs: vec![
+                    PairInput {
+                        question: "q".into(),
+                        reference: "ref".into(),
+                        response_a: Some("a".into()),
+                        response_b: Some("b".into()),
+                    },
+                    PairInput { response_a: None, response_b: Some("b".into()), ..Default::default() },
+                ],
+            }),
+            env: env(),
+            stage: None,
+            fault: None,
+        };
+        assert_eq!(TaskPlan::from_json(&plan.to_json()).unwrap(), plan);
+    }
+}

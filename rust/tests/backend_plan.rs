@@ -1,0 +1,397 @@
+//! Backend scheduler (driver loop) + thread-backend plan execution.
+//!
+//! Everything here runs in process: the driver's claim / steal /
+//! speculate / retry / blacklist / death machinery is exercised with a
+//! test-local `PlanTaskRunner` (no provider engines), and the
+//! plan-built inference executor is pinned bit-for-bit against the
+//! legacy closure scheduler — the PR-4-style compatibility gate for the
+//! `ThreadBackend`.
+
+use std::sync::Arc;
+
+use spark_llm_eval::config::{CachePolicy, EvalTask, MetricConfig, SchedulerConfig};
+use spark_llm_eval::coordinator::{EvalRunner, PlanExecutor, PlanHost, RowInference};
+use spark_llm_eval::metrics::Example;
+use spark_llm_eval::providers::simulated::{SimService, SimServiceConfig};
+use spark_llm_eval::ratelimit::{Clock, VirtualClock};
+use spark_llm_eval::sched::backend::{
+    run_plan, PlanTaskRunner, RunnerFactory, TaskResultMsg, TaskSpec, ThreadBackend,
+};
+use spark_llm_eval::sched::plan::{
+    InferencePlan, MetricPlan, PlanEnv, PlanWork, TaskPlan, WorkerFault,
+};
+use spark_llm_eval::sched::SchedulerStats;
+use spark_llm_eval::util::json::Json;
+
+/// Trivial runner: row i maps to Json::num(i); optionally errors on a
+/// chosen executor, optionally sleeps per task (so every executor gets
+/// to participate before the queues drain — fault-injection tests need
+/// the targeted executor to actually receive work).
+struct IdentityRunner {
+    eid: usize,
+    fail_on: Option<usize>,
+    delay_ms: u64,
+}
+
+impl PlanTaskRunner for IdentityRunner {
+    fn run(&mut self, spec: &TaskSpec, batch_size: usize) -> anyhow::Result<TaskResultMsg> {
+        if self.delay_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(self.delay_ms));
+        }
+        if self.fail_on == Some(self.eid) {
+            anyhow::bail!("executor {} always fails", self.eid);
+        }
+        let rows: Vec<Json> = (spec.start..spec.end).map(|i| Json::num(i as f64)).collect();
+        Ok(TaskResultMsg {
+            task_id: spec.task_id,
+            start: spec.start,
+            end: spec.end,
+            attempt: spec.attempt,
+            speculative: spec.speculative,
+            rows_processed: rows.len(),
+            batches: (spec.end - spec.start).div_ceil(batch_size.max(1)),
+            rows,
+            busy_secs: 0.0,
+            peak_in_flight: 1,
+            api_calls: (spec.end - spec.start) as u64,
+            retries: 0,
+            cost_usd: 0.0,
+        })
+    }
+}
+
+fn identity_factory(fail_on: Option<usize>, delay_ms: u64) -> RunnerFactory {
+    Arc::new(move |eid| {
+        Ok(Box::new(IdentityRunner { eid, fail_on, delay_ms }) as Box<dyn PlanTaskRunner>)
+    })
+}
+
+fn expect_rows(rows: &[Json], n: usize) {
+    assert_eq!(rows.len(), n);
+    for (i, v) in rows.iter().enumerate() {
+        assert_eq!(v.as_f64().unwrap(), i as f64, "row {i}");
+    }
+}
+
+#[test]
+fn driver_loop_is_row_exact_across_configs() {
+    for (n, executors, tasks_per_executor) in
+        [(0usize, 3usize, 2usize), (1, 4, 3), (37, 3, 1), (120, 4, 4), (200, 6, 2)]
+    {
+        let cfg = SchedulerConfig {
+            tasks_per_executor,
+            speculation: false,
+            ..Default::default()
+        };
+        let mut backend = ThreadBackend::new(executors, 10, None, identity_factory(None, 0));
+        let out =
+            run_plan(n, executors, &cfg, &mut backend, None, Vec::new(), None, None).unwrap();
+        expect_rows(&out.rows, n);
+        assert_eq!(out.api_calls, n as u64, "per-task spend accumulates");
+        assert_eq!(out.sched.executor_deaths, 0);
+    }
+}
+
+#[test]
+fn thread_backend_death_is_retried_counted_and_survived() {
+    // Executor 1 dies on its first task; the survivors absorb its queue
+    // and retry the lost in-flight task. Output stays row-exact.
+    let n = 90;
+    let cfg = SchedulerConfig {
+        tasks_per_executor: 3,
+        speculation: false,
+        ..Default::default()
+    };
+    let fault = WorkerFault { executor_id: 1, kill_after_tasks: 1 };
+    let mut backend = ThreadBackend::new(3, 10, Some(fault), identity_factory(None, 5));
+    let out = run_plan(n, 3, &cfg, &mut backend, None, Vec::new(), None, None).unwrap();
+    expect_rows(&out.rows, n);
+    assert_eq!(out.sched.executor_deaths, 1, "{:?}", out.sched);
+    assert!(out.sched.retries >= 1, "the lost in-flight task must be retried");
+    assert!(
+        out.sched.blacklisted_executors.contains(&1),
+        "a dead executor takes no more work: {:?}",
+        out.sched
+    );
+}
+
+#[test]
+fn all_executors_dead_fails_with_clear_error() {
+    let cfg = SchedulerConfig { tasks_per_executor: 4, ..Default::default() };
+    let fault = WorkerFault { executor_id: 0, kill_after_tasks: 2 };
+    let mut backend = ThreadBackend::new(1, 10, Some(fault), identity_factory(None, 0));
+    let err =
+        run_plan(80, 1, &cfg, &mut backend, None, Vec::new(), None, None).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no live executors"), "{msg}");
+}
+
+#[test]
+fn failing_executor_is_blacklisted_and_job_completes() {
+    let n = 60;
+    let cfg = SchedulerConfig {
+        tasks_per_executor: 3,
+        speculation: false,
+        max_task_attempts: 4,
+        blacklist_after: 2,
+        ..Default::default()
+    };
+    let mut backend = ThreadBackend::new(3, 10, None, identity_factory(Some(1), 2));
+    let out = run_plan(n, 3, &cfg, &mut backend, None, Vec::new(), None, None).unwrap();
+    expect_rows(&out.rows, n);
+    assert!(out.sched.blacklisted_executors.contains(&1), "{:?}", out.sched);
+    assert_eq!(out.sched.executor_deaths, 0, "failures are not deaths");
+    assert!(out.sched.retries >= 1);
+}
+
+#[test]
+fn restored_ranges_are_injected_not_reexecuted() {
+    // Rows [0, 50) come pre-completed with sentinel values: the driver
+    // must keep them verbatim and only execute the gap.
+    let n = 120;
+    let cfg = SchedulerConfig { speculation: false, ..Default::default() };
+    let restored: Vec<(usize, usize, Vec<Json>)> =
+        vec![(0, 50, (0..50).map(|i| Json::num(10_000.0 + i as f64)).collect())];
+    let mut backend = ThreadBackend::new(4, 10, None, identity_factory(None, 0));
+    let out = run_plan(n, 4, &cfg, &mut backend, None, restored, None, None).unwrap();
+    assert_eq!(out.rows.len(), n);
+    for i in 0..50 {
+        assert_eq!(out.rows[i].as_f64().unwrap(), 10_000.0 + i as f64, "restored row {i}");
+    }
+    for i in 50..n {
+        assert_eq!(out.rows[i].as_f64().unwrap(), i as f64, "fresh row {i}");
+    }
+    assert_eq!(out.sched.restored_tasks, 1);
+    assert_eq!(out.sched.restored_rows, 50);
+    assert_eq!(out.api_calls, (n - 50) as u64, "restored rows cost nothing");
+}
+
+#[test]
+fn invalid_restored_ranges_are_rejected() {
+    let cfg = SchedulerConfig::default();
+    let bad: Vec<(usize, usize, Vec<Json>)> = vec![
+        (0, 10, (0..10).map(|i| Json::num(i as f64)).collect()),
+        (5, 15, (5..15).map(|i| Json::num(i as f64)).collect()),
+    ];
+    let mut backend = ThreadBackend::new(2, 5, None, identity_factory(None, 0));
+    assert!(run_plan(20, 2, &cfg, &mut backend, None, bad, None, None).is_err());
+
+    let bad: Vec<(usize, usize, Vec<Json>)> = vec![(0, 10, vec![Json::num(1.0)])];
+    let mut backend = ThreadBackend::new(2, 5, None, identity_factory(None, 0));
+    assert!(run_plan(20, 2, &cfg, &mut backend, None, bad, None, None).is_err());
+}
+
+#[test]
+fn scheduler_stats_merge_accumulates_deaths() {
+    let mut a = SchedulerStats { executor_deaths: 1, ..Default::default() };
+    let b = SchedulerStats { executor_deaths: 2, ..Default::default() };
+    a.merge(&b);
+    assert_eq!(a.executor_deaths, 3);
+    let j = a.to_json();
+    assert_eq!(j.get("executor_deaths").unwrap().as_f64().unwrap(), 3.0);
+}
+
+// ------------------------------------------------------------------------
+// Plan-built inference executors on the thread backend, pinned against
+// the legacy closure scheduler.
+
+fn fast_service_config() -> SimServiceConfig {
+    SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: false,
+        ..Default::default()
+    }
+}
+
+fn fast_runner() -> EvalRunner {
+    let mut r = EvalRunner::with_clock(VirtualClock::new());
+    r.service_config = fast_service_config();
+    r
+}
+
+fn prompts(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("Question: what is the capital of country {i}?")).collect()
+}
+
+/// Build the inference plan + a thread backend sharing one simulated
+/// endpoint, mirroring what the runner's process path ships to workers.
+fn inference_plan(task: &EvalTask, prompts: &[String]) -> (Arc<TaskPlan>, ThreadBackend) {
+    let plan = Arc::new(TaskPlan {
+        work: PlanWork::Inference(InferencePlan {
+            model: task.model.clone(),
+            inference: task.inference.clone(),
+            executors: task.executors,
+            seed: task.statistics.seed,
+            prompts: prompts.to_vec(),
+        }),
+        env: PlanEnv {
+            service: fast_service_config(),
+            virtual_clock: true,
+            cache_dir: None,
+            cache_policy: CachePolicy::Disabled,
+        },
+        stage: None,
+        fault: None,
+    });
+    let clock: Arc<dyn Clock> = VirtualClock::new();
+    let service = SimService::new(&task.model.provider, fast_service_config(), clock.clone());
+    let factory = spark_llm_eval::coordinator::plan_exec::thread_runner_factory(
+        plan.clone(),
+        clock,
+        Some(service),
+        None,
+    );
+    let backend =
+        ThreadBackend::new(task.executors, task.inference.batch_size, None, factory);
+    (plan, backend)
+}
+
+#[test]
+fn thread_backend_inference_is_bit_identical_to_legacy_scheduler() {
+    // Pinned schedule (one task per executor, no stealing/speculation):
+    // every engine sees the same call sequence as the legacy closure
+    // path, so the full RowInference encoding — response, cost, latency
+    // draw, attempts — must round-trip identically.
+    let n = 60;
+    let mut task = EvalTask::default();
+    task.executors = 4;
+    task.inference.batch_size = 7;
+    task.inference.cache_policy = CachePolicy::Disabled;
+    task.scheduler = SchedulerConfig {
+        tasks_per_executor: 1,
+        work_stealing: false,
+        speculation: false,
+        adaptive_split: false,
+        ..Default::default()
+    };
+    let prompts = prompts(n);
+
+    let runner = fast_runner();
+    let (legacy_rows, legacy_stats) = runner.run_inference(&prompts, &task).unwrap();
+
+    let (_plan, mut backend) = inference_plan(&task, &prompts);
+    let out = run_plan(
+        n,
+        task.executors,
+        &task.scheduler,
+        &mut backend,
+        None,
+        Vec::new(),
+        None,
+        None,
+    )
+    .unwrap();
+    assert_eq!(out.rows.len(), n);
+    for (i, (json, legacy)) in out.rows.iter().zip(&legacy_rows).enumerate() {
+        assert_eq!(json, &legacy.to_json(), "row {i} must be bit-identical");
+    }
+    assert_eq!(out.api_calls, legacy_stats.api_calls, "same provider call count");
+    assert!(
+        (out.cost_usd - legacy_stats.total_cost_usd).abs() < 1e-12,
+        "same spend: {} vs {}",
+        out.cost_usd,
+        legacy_stats.total_cost_usd
+    );
+}
+
+#[test]
+fn thread_backend_inference_values_match_legacy_under_dynamic_scheduling() {
+    // With stealing on, schedules (and so per-call latency draws) differ,
+    // but responses, costs, and attempt counts are content-deterministic.
+    let n = 90;
+    let mut task = EvalTask::default();
+    task.executors = 3;
+    task.inference.batch_size = 8;
+    task.inference.cache_policy = CachePolicy::Disabled;
+    task.scheduler.speculation = false;
+    task.scheduler.adaptive_split = false;
+    let prompts = prompts(n);
+
+    let runner = fast_runner();
+    let (legacy_rows, legacy_stats) = runner.run_inference(&prompts, &task).unwrap();
+
+    let (_plan, mut backend) = inference_plan(&task, &prompts);
+    let out = run_plan(
+        n,
+        task.executors,
+        &task.scheduler,
+        &mut backend,
+        None,
+        Vec::new(),
+        None,
+        None,
+    )
+    .unwrap();
+    let rows: Vec<RowInference> =
+        out.rows.iter().map(|v| RowInference::from_json(v).unwrap()).collect();
+    for (i, (a, b)) in rows.iter().zip(&legacy_rows).enumerate() {
+        assert_eq!(a.response, b.response, "row {i} response");
+        assert_eq!(a.attempts, b.attempts, "row {i} attempts");
+        assert!((a.cost_usd - b.cost_usd).abs() < 1e-12, "row {i} cost");
+    }
+    assert_eq!(out.api_calls, legacy_stats.api_calls);
+    assert!((out.cost_usd - legacy_stats.total_cost_usd).abs() < 1e-12);
+}
+
+#[test]
+fn metric_plan_scores_like_direct_scoring() {
+    let examples: Vec<Example> = (0..40)
+        .map(|i| Example {
+            response: if i % 3 == 0 { "paris".into() } else { "rome".into() },
+            reference: "paris".into(),
+            ..Default::default()
+        })
+        .collect();
+    let plan = Arc::new(TaskPlan {
+        work: PlanWork::MetricScore(MetricPlan {
+            metric: MetricConfig::new("exact_match", "lexical"),
+            examples: examples.clone(),
+        }),
+        env: PlanEnv::default(),
+        stage: None,
+        fault: None,
+    });
+    let clock: Arc<dyn Clock> = VirtualClock::new();
+    let factory = spark_llm_eval::coordinator::plan_exec::thread_runner_factory(
+        plan.clone(),
+        clock,
+        None,
+        None,
+    );
+    let mut backend = ThreadBackend::new(2, 10, None, factory);
+    let out = run_plan(
+        examples.len(),
+        2,
+        &SchedulerConfig::default(),
+        &mut backend,
+        None,
+        Vec::new(),
+        None,
+        None,
+    )
+    .unwrap();
+    assert_eq!(out.rows.len(), 40);
+    for (i, v) in out.rows.iter().enumerate() {
+        let expected = if i % 3 == 0 { 1.0 } else { 0.0 };
+        assert_eq!(v.as_f64().unwrap(), expected, "row {i}");
+    }
+}
+
+#[test]
+fn plan_executor_rejects_out_of_bounds_tasks() {
+    let plan = Arc::new(TaskPlan {
+        work: PlanWork::MetricScore(MetricPlan {
+            metric: MetricConfig::new("exact_match", "lexical"),
+            examples: vec![Example::default(); 5],
+        }),
+        env: PlanEnv::default(),
+        stage: None,
+        fault: None,
+    });
+    let clock: Arc<dyn Clock> = VirtualClock::new();
+    let host = PlanHost { clock, service: None, cache: None };
+    let mut exec = PlanExecutor::new(plan, 0, host).unwrap();
+    let spec = TaskSpec { task_id: 0, start: 2, end: 9, attempt: 1, speculative: false };
+    assert!(exec.run(&spec, 10).is_err());
+}

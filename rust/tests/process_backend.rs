@@ -1,0 +1,247 @@
+//! Process-backend integration: real `slleval worker` child processes
+//! (via `CARGO_BIN_EXE_slleval`), hard kills, and checkpoint resume.
+//!
+//! These are the acceptance tests for the executor-backend redesign:
+//!
+//! - thread and process backends produce identical metric values, CIs,
+//!   and cost accounting on the same task;
+//! - a `kill -9`-equivalent executor death (deterministic, via the
+//!   plan's fault hook → `std::process::abort`) costs only the dead
+//!   executor's in-flight task: the run completes through retry +
+//!   blacklist on the survivors;
+//! - when *every* executor dies, the run fails — but a checkpoint-backed
+//!   resume completes with row-identical results, re-executing only the
+//!   work that was never spilled.
+
+use spark_llm_eval::config::{BackendKind, CachePolicy, EvalTask, MetricConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+use spark_llm_eval::sched::plan::WorkerFault;
+
+fn worker_exe() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_slleval"))
+}
+
+fn fast_runner() -> EvalRunner {
+    let mut r = EvalRunner::with_clock(VirtualClock::new());
+    r.service_config = SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: false,
+        ..Default::default()
+    };
+    r.worker_exe = Some(worker_exe());
+    r
+}
+
+/// Deterministic-count task: cache disabled (1 provider call per row),
+/// no speculation (no duplicated work), small batches.
+fn task(executors: usize, backend: BackendKind) -> EvalTask {
+    let mut task = EvalTask::default();
+    task.executors = executors;
+    task.backend = backend;
+    task.inference.batch_size = 5;
+    task.inference.cache_policy = CachePolicy::Disabled;
+    task.scheduler.speculation = false;
+    task.scheduler.adaptive_split = false;
+    task.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("token_f1", "lexical"),
+    ];
+    task
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("slleval-procbackend-test")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn process_backend_matches_thread_backend_exactly() {
+    let n = 60;
+    let df = synth::generate_default(n, 71);
+
+    let thread = fast_runner().evaluate(&df, &task(3, BackendKind::Thread)).unwrap();
+    let process = fast_runner().evaluate(&df, &task(3, BackendKind::Process)).unwrap();
+
+    // Metric identity: values, CIs, per-row scores, n.
+    for name in ["exact_match", "token_f1"] {
+        let (a, b) = (thread.metric(name).unwrap(), process.metric(name).unwrap());
+        assert_eq!(a.value, b.value, "{name} value");
+        assert_eq!((a.ci.lo, a.ci.hi), (b.ci.lo, b.ci.hi), "{name} CI");
+        assert_eq!(a.n, b.n, "{name} n");
+        assert_eq!(
+            thread.report(name).unwrap().values,
+            process.report(name).unwrap().values,
+            "{name} per-row values"
+        );
+    }
+    // Cost accounting identity: one deterministic call per row on both
+    // backends, same per-call pricing.
+    assert_eq!(process.inference.api_calls, n as u64);
+    assert_eq!(thread.inference.api_calls, process.inference.api_calls);
+    assert!(
+        (thread.inference.total_cost_usd - process.inference.total_cost_usd).abs() < 1e-9,
+        "cost: thread {} vs process {}",
+        thread.inference.total_cost_usd,
+        process.inference.total_cost_usd
+    );
+    assert_eq!(process.inference.sched.executor_deaths, 0);
+    assert_eq!(process.failed_examples, thread.failed_examples);
+}
+
+#[test]
+fn hard_worker_kill_is_survived_via_retry_and_blacklist() {
+    let n = 75;
+    let df = synth::generate_default(n, 72);
+
+    // Reference values from the thread backend.
+    let reference = fast_runner().evaluate(&df, &task(3, BackendKind::Thread)).unwrap();
+
+    // Executor 1's worker process aborts while executing its first task.
+    let mut runner = fast_runner();
+    runner.worker_fault = Some(WorkerFault { executor_id: 1, kill_after_tasks: 1 });
+    let mut t = task(3, BackendKind::Process);
+    t.scheduler.tasks_per_executor = 3;
+    let result = runner.evaluate(&df, &t).unwrap();
+
+    assert_eq!(result.inference.sched.executor_deaths, 1, "{:?}", result.inference.sched);
+    assert!(
+        result.inference.sched.blacklisted_executors.contains(&1),
+        "dead executor must take no more work: {:?}",
+        result.inference.sched
+    );
+    assert!(result.inference.sched.retries >= 1, "in-flight task must be retried");
+    // The kill changes *where* rows ran, never what they evaluate to.
+    assert_eq!(
+        result.report("exact_match").unwrap().values,
+        reference.report("exact_match").unwrap().values
+    );
+    assert_eq!(
+        result.metric("exact_match").unwrap().value,
+        reference.metric("exact_match").unwrap().value
+    );
+}
+
+#[test]
+fn killed_run_resumes_from_checkpoint_with_zero_reinference_of_spilled_rows() {
+    let n = 80;
+    let df = synth::generate_default(n, 73);
+
+    // Reference: uninterrupted thread-backend run (row-identity oracle).
+    let reference = fast_runner().evaluate(&df, &task(1, BackendKind::Thread)).unwrap();
+    assert_eq!(reference.inference.api_calls, n as u64);
+
+    // Crashing run: a single process executor, 4 tasks, killed while
+    // executing task 2 — with every executor dead the run must fail.
+    let dir = tmp_dir("kill-resume");
+    let mut t = task(1, BackendKind::Process);
+    t.scheduler.tasks_per_executor = 4;
+    let mut runner = fast_runner();
+    runner.worker_fault = Some(WorkerFault { executor_id: 0, kill_after_tasks: 2 });
+    runner.attach_checkpoint(&dir, false).unwrap();
+    let err = runner.evaluate(&df, &t).unwrap_err();
+    assert!(format!("{err:#}").contains("no live executors"), "{err:#}");
+
+    // Resume (no fault): completed tasks restore from the worker-side
+    // spills; only the never-spilled rows are re-inferred.
+    let mut runner = fast_runner();
+    runner.attach_checkpoint(&dir, true).unwrap();
+    let resumed = runner.evaluate(&df, &t).unwrap();
+
+    let restored = resumed.inference.sched.restored_rows;
+    assert!(restored > 0, "the killed run must have spilled completed tasks");
+    assert!(restored < n, "the killed run must not have finished");
+    assert_eq!(
+        resumed.inference.api_calls,
+        (n - restored) as u64,
+        "zero re-inference of checkpointed rows"
+    );
+    assert_eq!(resumed.inference.examples, n);
+
+    // Row-identical results versus the uninterrupted reference.
+    assert_eq!(
+        resumed.report("exact_match").unwrap().values,
+        reference.report("exact_match").unwrap().values
+    );
+    let (a, b) =
+        (reference.metric("exact_match").unwrap(), resumed.metric("exact_match").unwrap());
+    assert_eq!(a.value, b.value);
+    assert_eq!((a.ci.lo, a.ci.hi), (b.ci.lo, b.ci.hi));
+}
+
+#[test]
+fn pairwise_judging_matches_across_backends() {
+    let df = synth::generate(
+        50,
+        74,
+        synth::DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 },
+    )
+    .unwrap();
+    let mk = |backend: BackendKind| {
+        let mut a = task(2, backend);
+        a.model.model_name = "gpt-4o".into();
+        let mut b = a.clone();
+        b.model.model_name = "gpt-3.5-turbo".into();
+        (a, b)
+    };
+
+    let (ta, tb) = mk(BackendKind::Thread);
+    let thread = fast_runner()
+        .evaluate_pairwise(&df, &ta, &tb, "accuracy", "openai", "gpt-4o")
+        .unwrap();
+    let (ta, tb) = mk(BackendKind::Process);
+    let process = fast_runner()
+        .evaluate_pairwise(&df, &ta, &tb, "accuracy", "openai", "gpt-4o")
+        .unwrap();
+
+    // Judge responses are content-keyed, so verdicts are identical.
+    assert_eq!(thread.verdicts, process.verdicts);
+    assert_eq!((thread.a_wins, thread.b_wins), (process.a_wins, process.b_wins));
+    assert_eq!(thread.p_value, process.p_value);
+}
+
+#[test]
+fn cli_backend_flag_runs_end_to_end() {
+    // The `--backend process` CLI path: spawn the real binary as the
+    // driver (its workers resolve via current_exe) and check it reports
+    // a healthy run.
+    let out_path = tmp_dir("cli-run").join("result.json");
+    std::fs::create_dir_all(out_path.parent().unwrap()).unwrap();
+    let output = std::process::Command::new(worker_exe())
+        .args([
+            "run",
+            "--fast",
+            "--n",
+            "40",
+            "--seed",
+            "75",
+            "--executors",
+            "2",
+            "--backend",
+            "process",
+            "--out",
+        ])
+        .arg(&out_path)
+        .output()
+        .expect("running slleval");
+    assert!(
+        output.status.success(),
+        "slleval run --backend process failed:\n{}\n{}",
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let result = std::fs::read_to_string(&out_path).unwrap();
+    let json = spark_llm_eval::util::json::Json::parse(&result).unwrap();
+    assert_eq!(json.get("inference").unwrap().usize_or("examples", 0), 40);
+    assert_eq!(
+        json.get("scheduler").unwrap().usize_or("executor_deaths", 99),
+        0,
+        "healthy run reports zero deaths"
+    );
+}
