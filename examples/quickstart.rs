@@ -29,7 +29,9 @@ fn main() -> anyhow::Result<()> {
     // Optional second argument: the executor backend ("thread" default,
     // "process" = crash-isolated `slleval worker` children; point
     // SLLEVAL_WORKER_EXE at the slleval binary when running the example
-    // directly, since the example executable has no worker mode).
+    // directly, since the example executable has no worker mode;
+    // "remote" = TCP executors on the `slleval serve-worker` daemons
+    // listed in SLLEVAL_REMOTE_HOSTS, comma-separated host:port).
     let backend = match std::env::args().nth(2).as_deref() {
         Some(b) => spark_llm_eval::config::BackendKind::from_str(b)?,
         None => spark_llm_eval::config::BackendKind::Thread,
@@ -55,6 +57,18 @@ fn main() -> anyhow::Result<()> {
     task.statistics.ci_method = spark_llm_eval::config::CiMethod::Bca;
     task.statistics.bootstrap_iterations = 1000;
     task.backend = backend;
+    if backend == spark_llm_eval::config::BackendKind::Remote {
+        task.hosts = std::env::var("SLLEVAL_REMOTE_HOSTS")
+            .map(|hosts| {
+                hosts
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|h| !h.is_empty())
+                    .map(String::from)
+                    .collect()
+            })
+            .unwrap_or_default();
+    }
 
     println!(
         "== Spark-LLM-Eval quickstart: {} examples, {} backend ==\n",

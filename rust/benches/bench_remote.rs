@@ -1,0 +1,171 @@
+//! Remote-transport benchmark: the TCP executor backend on loopback
+//! against the in-process thread backend, isolating what the wire
+//! (frames, sockets, heartbeats, spill upload) costs per row.
+//!
+//! The serve loop runs *in-process* ([`serve_connection`] on an
+//! accept-loop thread) so the numbers measure the transport, not child
+//! process spawning. Three questions, three scenario groups:
+//!
+//! 1. pure transport overhead per row (no provider latency, batch 10);
+//! 2. how frame-heavy small batches (batch 2 — 5x the task round-trips)
+//!    degrade that overhead;
+//! 3. whether the overhead disappears behind a realistic injected
+//!    provider-latency profile (sleep_latency with a scaled-down
+//!    Table 3 profile), which is the regime real runs live in.
+//!
+//! Results are recorded in `BENCH_remote.json` at the repository root.
+//! Identity (same metric values as the thread backend) is asserted on
+//! every remote run — a fast transport that changes answers is wrong.
+
+use std::time::Instant;
+
+use spark_llm_eval::config::{BackendKind, CachePolicy, EvalTask, MetricConfig};
+use spark_llm_eval::coordinator::{serve_connection, EvalRunner};
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+use spark_llm_eval::util::bench::section;
+use spark_llm_eval::util::json::Json;
+
+const EXECUTORS: usize = 4;
+const ROWS: usize = 600;
+const LATENCY_ROWS: usize = 200;
+const REPS: usize = 3;
+
+/// An in-process `serve-worker`: accept loop on a loopback listener,
+/// one [`serve_connection`] session thread per accepted executor
+/// socket. The thread is leaked — it lives for the whole bench run.
+fn spawn_loopback_host() -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("binding loopback host");
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { continue };
+            std::thread::spawn(move || {
+                let _ = serve_connection(stream);
+            });
+        }
+    });
+    addr
+}
+
+fn runner(latency: bool) -> EvalRunner {
+    // With latency injection the driver must ride a real clock (the
+    // serve sessions sleep on theirs); otherwise virtual + no sleeps.
+    let mut r =
+        if latency { EvalRunner::new() } else { EvalRunner::with_clock(VirtualClock::new()) };
+    r.service_config = SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        // 5% of the Table 3-calibrated profile keeps the bench short
+        // while still dwarfing per-frame transport costs.
+        latency_scale: if latency { 0.05 } else { 1.0 },
+        sleep_latency: latency,
+        ..Default::default()
+    };
+    r
+}
+
+fn task(backend: BackendKind, hosts: Vec<String>, batch_size: usize) -> EvalTask {
+    let mut task = EvalTask::default();
+    task.executors = EXECUTORS;
+    task.backend = backend;
+    task.hosts = hosts;
+    task.inference.batch_size = batch_size;
+    task.inference.cache_policy = CachePolicy::Disabled;
+    task.scheduler.speculation = false;
+    task.scheduler.adaptive_split = false;
+    task.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+    task
+}
+
+/// Best-of-REPS wall time for one configuration; returns the last run's
+/// exact_match value for the identity check.
+fn measure(
+    df: &spark_llm_eval::data::DataFrame,
+    t: &EvalTask,
+    latency: bool,
+    reps: usize,
+) -> (f64, f64) {
+    let mut best = f64::INFINITY;
+    let mut value = f64::NAN;
+    for _ in 0..reps {
+        let clock = Instant::now();
+        let result = runner(latency).evaluate(df, t).expect("bench run");
+        best = best.min(clock.elapsed().as_secs_f64());
+        value = result.metric("exact_match").unwrap().value;
+        assert_eq!(result.inference.sched.executor_deaths, 0, "healthy loopback run");
+    }
+    (best, value)
+}
+
+fn main() {
+    let parallelism = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    section(&format!(
+        "remote transport benchmark — {ROWS} rows, {EXECUTORS} executors (loopback), \
+         {parallelism} cores"
+    ));
+    let host = spawn_loopback_host();
+    let df = synth::generate_default(ROWS, 91);
+
+    // 1 + 2: pure transport overhead, normal and frame-heavy batches.
+    let (t_thread, v_thread) =
+        measure(&df, &task(BackendKind::Thread, Vec::new(), 10), false, REPS);
+    let (t_remote, v_remote) =
+        measure(&df, &task(BackendKind::Remote, vec![host.clone()], 10), false, REPS);
+    let (t_remote_small, v_small) =
+        measure(&df, &task(BackendKind::Remote, vec![host.clone()], 2), false, REPS);
+    assert_eq!(v_remote, v_thread, "remote must be answer-identical to thread");
+    assert_eq!(v_small, v_thread, "batch size must not change answers");
+
+    let overhead_us = (t_remote - t_thread).max(0.0) / ROWS as f64 * 1e6;
+    let overhead_small_us = (t_remote_small - t_thread).max(0.0) / ROWS as f64 * 1e6;
+    println!(
+        "no-latency: thread {:>7.1}ms | remote {:>7.1}ms ({overhead_us:.0}µs/row) | \
+         remote batch=2 {:>7.1}ms ({overhead_small_us:.0}µs/row)",
+        t_thread * 1e3,
+        t_remote * 1e3,
+        t_remote_small * 1e3,
+    );
+
+    // 3: the same comparison under an injected provider-latency profile.
+    section(&format!(
+        "injected latency profile — {LATENCY_ROWS} rows, latency_scale 0.05, sleeps on"
+    ));
+    let df_lat = synth::generate_default(LATENCY_ROWS, 92);
+    let (t_thread_lat, v_thread_lat) =
+        measure(&df_lat, &task(BackendKind::Thread, Vec::new(), 10), true, 1);
+    let (t_remote_lat, v_remote_lat) =
+        measure(&df_lat, &task(BackendKind::Remote, vec![host.clone()], 10), true, 1);
+    assert_eq!(v_remote_lat, v_thread_lat, "identity must hold under latency too");
+    let lat_overhead_frac = (t_remote_lat - t_thread_lat).max(0.0) / t_thread_lat;
+    println!(
+        "with latency: thread {:>7.1}ms | remote {:>7.1}ms (+{:.1}%)",
+        t_thread_lat * 1e3,
+        t_remote_lat * 1e3,
+        lat_overhead_frac * 100.0,
+    );
+
+    let report = Json::obj(vec![
+        ("benchmark", Json::str("bench_remote")),
+        ("rows", Json::num(ROWS as f64)),
+        ("executors", Json::num(EXECUTORS as f64)),
+        ("reps", Json::num(REPS as f64)),
+        ("host_parallelism", Json::num(parallelism as f64)),
+        ("thread_secs", Json::num(t_thread)),
+        ("remote_secs", Json::num(t_remote)),
+        ("remote_small_batch_secs", Json::num(t_remote_small)),
+        ("transport_overhead_us_per_row", Json::num(overhead_us)),
+        ("transport_overhead_us_per_row_batch2", Json::num(overhead_small_us)),
+        ("latency_rows", Json::num(LATENCY_ROWS as f64)),
+        ("latency_thread_secs", Json::num(t_thread_lat)),
+        ("latency_remote_secs", Json::num(t_remote_lat)),
+        ("latency_overhead_frac", Json::num(lat_overhead_frac)),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_remote.json");
+    std::fs::write(&out_path, report.to_pretty()).expect("writing BENCH_remote.json");
+    println!("\nresults written to {}", out_path.display());
+}

@@ -287,10 +287,16 @@ pub struct EvalTask {
     pub checkpoint: CheckpointConfig,
     /// Where executors physically run (`executor.backend` in the JSON):
     /// `thread` (default, in-process scoped threads — the pre-backend
-    /// scheduler, bit for bit) or `process` (one crash-isolated
+    /// scheduler, bit for bit), `process` (one crash-isolated
     /// `slleval worker` OS process per executor; see
-    /// [`crate::sched::backend`]).
+    /// [`crate::sched::backend`]), or `remote` (executors on
+    /// `slleval serve-worker` hosts over TCP; see
+    /// [`crate::sched::remote`]).
     pub backend: BackendKind,
+    /// `slleval serve-worker` daemon addresses (`host:port`) for the
+    /// remote backend (`executor.hosts` in the JSON, `--hosts` on the
+    /// CLI). Executors are placed round-robin over this list.
+    pub hosts: Vec<String>,
 }
 
 impl Default for EvalTask {
@@ -306,6 +312,7 @@ impl Default for EvalTask {
             scheduler: SchedulerConfig::default(),
             checkpoint: CheckpointConfig::default(),
             backend: BackendKind::default(),
+            hosts: Vec::new(),
         }
     }
 }
@@ -362,6 +369,12 @@ impl EvalTask {
         }
         self.scheduler.validate()?;
         self.checkpoint.validate()?;
+        if self.backend == BackendKind::Remote && self.hosts.is_empty() {
+            bail!(
+                "the remote backend requires executor.hosts (or --hosts): \
+                 addresses of running `slleval serve-worker` daemons"
+            );
+        }
         Ok(())
     }
 
@@ -439,7 +452,13 @@ impl EvalTask {
             ("scheduler", self.scheduler.to_json()),
             (
                 "executor",
-                Json::obj(vec![("backend", Json::str(self.backend.as_str()))]),
+                Json::obj(vec![
+                    ("backend", Json::str(self.backend.as_str())),
+                    (
+                        "hosts",
+                        Json::arr(self.hosts.iter().map(|h| Json::str(h.as_str())).collect()),
+                    ),
+                ]),
             ),
             (
                 "checkpoint",
@@ -523,6 +542,13 @@ impl EvalTask {
         }
         if let Some(e) = v.opt("executor") {
             task.backend = BackendKind::from_str(e.str_or("backend", "thread"))?;
+            if let Some(hosts) = e.opt("hosts") {
+                task.hosts = hosts
+                    .as_arr()?
+                    .iter()
+                    .map(|h| -> Result<String, JsonError> { Ok(h.as_str()?.to_string()) })
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
         }
         if let Some(c) = v.opt("checkpoint") {
             task.checkpoint = CheckpointConfig {
@@ -700,9 +726,25 @@ mod tests {
         // Unknown backend names fail at load time.
         let mut json = task.to_json();
         if let Json::Obj(map) = &mut json {
-            map.insert("executor".into(), Json::obj(vec![("backend", Json::str("remote"))]));
+            map.insert("executor".into(), Json::obj(vec![("backend", Json::str("bogus"))]));
         }
         assert!(EvalTask::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn remote_backend_requires_and_round_trips_hosts() {
+        // Remote without hosts is rejected at validation.
+        let mut task = EvalTask::default();
+        task.backend = BackendKind::Remote;
+        let err = task.validate().unwrap_err();
+        assert!(format!("{err}").contains("hosts"), "{err}");
+
+        // With hosts, the executor section round-trips through JSON.
+        task.hosts = vec!["10.0.0.1:7077".into(), "10.0.0.2:7077".into()];
+        task.validate().unwrap();
+        let restored = EvalTask::from_json(&task.to_json()).unwrap();
+        assert_eq!(task, restored);
+        assert_eq!(restored.hosts.len(), 2);
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub use plan_exec::{PlanExecutor, PlanHost};
 pub use result::{ComparisonResult, EvalResult, InferenceStats, MetricComparison, MetricValue};
 pub use runner::{EvalRunner, RowInference};
 pub use streaming::{StreamControl, StreamUpdate};
-pub use worker::worker_main;
+pub use worker::{serve_connection, serve_worker_main, worker_main};
 
 #[cfg(test)]
 mod tests {

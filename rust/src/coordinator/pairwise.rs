@@ -12,7 +12,6 @@ use crate::providers::pipeline::PipelinedClient;
 use crate::providers::retry::RetryPolicy;
 use crate::providers::simulated::SimEngine;
 use crate::providers::{InferenceEngine, InferenceRequest};
-use crate::sched::backend::{run_plan, ProcessBackend};
 use crate::sched::plan::{PairInput, PairwisePlan, PlanWork, StagePlan, TaskPlan};
 use crate::sched::{run_scheduled_ext, TaskCheckpoint, TaskSink};
 use crate::stats::special::binom_test_half;
@@ -138,13 +137,15 @@ impl EvalRunner {
             parts.push(rows_b[i].response.as_deref().unwrap_or(""));
         }
 
-        // Process backend: judging runs as a serializable plan on
-        // crash-isolated worker processes (same content-addressed stage,
-        // so thread and process runs restore each other's verdicts).
-        if task_a.backend == BackendKind::Process {
+        // Process/remote backends: judging runs as a serializable plan
+        // on crash-isolated worker processes or remote serve-worker
+        // hosts (same content-addressed stage, so all backends restore
+        // each other's verdicts).
+        if task_a.backend != BackendKind::Thread {
             let decode_raw = |v: &Json| Ok(v.clone());
             let (stage, restored, digest) =
                 self.open_checkpoint_stage("judge", parts, df.len(), &decode_raw)?;
+            let stage = stage.map(std::sync::Arc::new);
             let pairs: Vec<PairInput> = (0..df.len())
                 .map(|i| {
                     let row = df.row(i);
@@ -180,21 +181,15 @@ impl EvalRunner {
                 // Crash injection targets the inference stage only.
                 fault: None,
             };
-            let mut backend = ProcessBackend::new(
+            let out = self.run_plan_on_backend(
+                task_a,
                 &plan,
-                task_a.executors,
-                task_a.inference.batch_size,
-                self.worker_exe.clone(),
-            )?;
-            let out = run_plan(
                 df.len(),
-                task_a.executors,
-                &task_a.scheduler,
-                &mut backend,
-                None,
+                task_a.inference.batch_size,
                 restored,
-                self.abort.as_deref(),
                 None,
+                None,
+                stage,
             )?;
             // The judging stage (like its thread-path counterpart)
             // reports no scheduler stats; surface recovered deaths.

@@ -43,6 +43,7 @@ use crate::providers::{InferenceEngine, InferenceRequest};
 use crate::ratelimit::{Clock, RealClock, TokenBucket, VirtualClock};
 use crate::sched::backend::{PlanTaskRunner, RunnerFactory, TaskResultMsg, TaskSpec};
 use crate::sched::plan::{PlanWork, TaskPlan};
+use crate::sched::wire::{write_frame_shared, SharedWriter};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -91,6 +92,11 @@ pub struct PlanExecutor {
     clock: Arc<dyn Clock>,
     cache: Option<Arc<ResponseCache>>,
     stage: Option<StageCheckpoint>,
+    /// When set (serve-worker mode), completed-task spills are uploaded
+    /// to the driver as `{"type":"spill",...}` frames instead of written
+    /// to a local stage directory — remote workers share no filesystem
+    /// with the driver.
+    spill_frames: Option<SharedWriter>,
     state: ExecState,
 }
 
@@ -187,7 +193,24 @@ impl PlanExecutor {
                 }
             }
         });
-        Ok(PlanExecutor { plan, eid, clock: host.clock, cache: host.cache, stage, state })
+        Ok(PlanExecutor {
+            plan,
+            eid,
+            clock: host.clock,
+            cache: host.cache,
+            stage,
+            spill_frames: None,
+            state,
+        })
+    }
+
+    /// Redirect completed-task spills to frame upload over `sink`
+    /// (serve-worker mode). Disables the local stage: a remote worker's
+    /// filesystem is not the driver's, so a local spill would be both
+    /// useless for `--resume` and misleading on loopback test setups.
+    pub fn spill_to_frames(&mut self, sink: SharedWriter) {
+        self.stage = None;
+        self.spill_frames = Some(sink);
     }
 
     /// Execute one batch of rows `[start, end)`, returning one JSON value
@@ -411,8 +434,24 @@ impl PlanTaskRunner for PlanExecutor {
 
         // Worker-side checkpoint spill, *before* reporting: a crash
         // between spill and report costs nothing on resume, and racing
-        // twins of the same range are first-writer-wins.
-        if let Some(stage) = &self.stage {
+        // twins of the same range are first-writer-wins. Serve-mode
+        // workers upload the spill as a frame (the driver records it);
+        // local workers write the shared stage directory directly.
+        if let Some(sink) = &self.spill_frames {
+            let frame = Json::obj(vec![
+                ("type", Json::str("spill")),
+                ("start", Json::num(spec.start as f64)),
+                ("end", Json::num(spec.end as f64)),
+                ("attempt", Json::num(spec.attempt as f64)),
+                ("rows", Json::arr(rows.clone())),
+            ]);
+            if let Err(e) = write_frame_shared(sink, &frame) {
+                eprintln!(
+                    "warning: spill upload failed for rows [{}, {}): {e:#}",
+                    spec.start, spec.end
+                );
+            }
+        } else if let Some(stage) = &self.stage {
             let lines: Vec<String> = rows.iter().map(|r| r.to_string()).collect();
             if let Err(e) =
                 stage.record_task(spec.start, spec.end, spec.attempt, self.eid, &lines)

@@ -23,6 +23,7 @@ use crate::sched::backend::{run_plan, ProcessBackend};
 use crate::sched::plan::{
     InferencePlan, MetricPlan, PlanEnv, PlanWork, StagePlan, TaskPlan, WorkerFault,
 };
+use crate::sched::remote::{heartbeat_timeout_from_env, RemoteBackend};
 use crate::sched::{run_scheduled, run_scheduled_ext, TaskCheckpoint, TaskSink};
 use crate::providers::pipeline::PipelinedClient;
 use crate::providers::retry::{infer_with_retry, RetryPolicy};
@@ -109,6 +110,11 @@ pub struct EvalRunner {
     /// Deterministic executor-death injection for backend crash tests:
     /// the targeted executor dies hard while running its N-th task.
     pub worker_fault: Option<WorkerFault>,
+    /// Persistent `--backend process` worker fleet: spawned by the first
+    /// backend stage and kept alive across the run's later stages, which
+    /// re-arm the live workers with a `plan` frame instead of respawning
+    /// processes and re-shipping identical payloads.
+    fleet: Mutex<Option<ProcessBackend>>,
 }
 
 impl EvalRunner {
@@ -129,6 +135,7 @@ impl EvalRunner {
             abort: None,
             worker_exe: None,
             worker_fault: None,
+            fleet: Mutex::new(None),
         }
     }
 
@@ -258,7 +265,7 @@ impl EvalRunner {
         prompts: &[String],
         task: &EvalTask,
     ) -> Result<(Vec<RowInference>, InferenceStats)> {
-        if task.backend == BackendKind::Process {
+        if task.backend != BackendKind::Thread {
             return self.run_inference_backend(prompts, task);
         }
         let t0 = self.clock.now();
@@ -558,12 +565,91 @@ impl EvalRunner {
         }
     }
 
-    /// `--backend process` inference: the same stage, expressed as a
-    /// serializable [`TaskPlan`] and executed by crash-isolated
-    /// `slleval worker` processes through the generic backend scheduler.
+    /// Run one serializable plan on the task's configured non-thread
+    /// backend. `--backend process` reuses the run's persistent worker
+    /// fleet: live workers are re-armed over their existing pipes, and
+    /// the fleet survives `run_plan`'s shutdown call for the next stage.
+    /// `--backend remote` connects to the task's `serve-worker` hosts
+    /// for the duration of the stage; `stage` is the driver-side
+    /// checkpoint that uploaded spill frames are recorded into (remote
+    /// workers share no filesystem with the driver).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_plan_on_backend(
+        &self,
+        task: &EvalTask,
+        plan: &TaskPlan,
+        total_rows: usize,
+        batch_size: usize,
+        restored: Vec<(usize, usize, Vec<Json>)>,
+        progress: Option<&Progress>,
+        max_cost_usd: Option<f64>,
+        stage: Option<Arc<StageCheckpoint>>,
+    ) -> Result<crate::sched::backend::PlanOutput> {
+        match task.backend {
+            BackendKind::Process => {
+                let mut fleet = self.fleet.lock().unwrap();
+                match fleet.as_mut() {
+                    Some(backend) if backend.executors() == task.executors => {
+                        backend.reset_plan(plan, batch_size);
+                    }
+                    _ => {
+                        // First backend stage of the run (or the executor
+                        // count changed): spawn a fresh persistent fleet.
+                        let mut backend = ProcessBackend::new(
+                            plan,
+                            task.executors,
+                            batch_size,
+                            self.worker_exe.clone(),
+                        )?;
+                        backend.set_keep_alive(true);
+                        *fleet = Some(backend);
+                    }
+                }
+                let backend = fleet.as_mut().expect("fleet populated above");
+                run_plan(
+                    total_rows,
+                    task.executors,
+                    &task.scheduler,
+                    backend,
+                    progress,
+                    restored,
+                    self.abort.as_deref(),
+                    max_cost_usd,
+                )
+            }
+            BackendKind::Remote => {
+                let mut backend = RemoteBackend::new(
+                    plan,
+                    task.executors,
+                    batch_size,
+                    task.hosts.clone(),
+                    heartbeat_timeout_from_env(),
+                    stage,
+                )?;
+                run_plan(
+                    total_rows,
+                    task.executors,
+                    &task.scheduler,
+                    &mut backend,
+                    progress,
+                    restored,
+                    self.abort.as_deref(),
+                    max_cost_usd,
+                )
+            }
+            BackendKind::Thread => {
+                bail!("run_plan_on_backend called with the thread backend")
+            }
+        }
+    }
+
+    /// `--backend process` / `--backend remote` inference: the same
+    /// stage, expressed as a serializable [`TaskPlan`] and executed by
+    /// crash-isolated `slleval worker` processes (or remote
+    /// `serve-worker` hosts) through the generic backend scheduler.
     /// The checkpoint stage is content-addressed identically to the
-    /// thread path, so thread and process runs restore each other's
-    /// spilled work.
+    /// thread path, so thread, process, and remote runs restore each
+    /// other's spilled work.
     fn run_inference_backend(
         &self,
         prompts: &[String],
@@ -587,6 +673,9 @@ impl EvalRunner {
         let decode_raw = |v: &Json| Ok(v.clone());
         let (stage, restored, digest) =
             self.open_checkpoint_stage("infer", parts, prompts.len(), &decode_raw)?;
+        // Arc so the remote backend's reader threads can record uploaded
+        // spill frames into the same driver-side stage.
+        let stage = stage.map(Arc::new);
         let restored_spans: Vec<(usize, usize)> =
             restored.iter().map(|(s, e, _)| (*s, *e)).collect();
 
@@ -605,17 +694,15 @@ impl EvalRunner {
             }),
             fault: self.worker_fault,
         };
-        let mut backend =
-            ProcessBackend::new(&plan, task.executors, inf.batch_size, self.worker_exe.clone())?;
-        let out = run_plan(
+        let out = self.run_plan_on_backend(
+            task,
+            &plan,
             prompts.len(),
-            task.executors,
-            &task.scheduler,
-            &mut backend,
-            self.progress.as_deref(),
+            inf.batch_size,
             restored,
-            self.abort.as_deref(),
+            self.progress.as_deref(),
             inf.max_cost_usd,
+            stage,
         )?;
         self.backend_inference_stats(out, &restored_spans, t0, wall0, inf.concurrency)
     }
@@ -675,9 +762,9 @@ impl EvalRunner {
         Ok((rows, stats))
     }
 
-    /// Pure-metric scoring as a serializable plan on worker processes.
-    /// Only registry built-ins are eligible (a custom metric object
-    /// cannot cross a process boundary).
+    /// Pure-metric scoring as a serializable plan on the configured
+    /// executor backend. Only registry built-ins are eligible (a custom
+    /// metric object cannot cross a process boundary).
     fn score_pure_backend(
         &self,
         cfg: &MetricConfig,
@@ -695,20 +782,14 @@ impl EvalRunner {
             // scoring reuses executor ids and would otherwise re-fire.
             fault: None,
         };
-        let mut backend = ProcessBackend::new(
+        let out = self.run_plan_on_backend(
+            task,
             &plan,
-            task.executors,
-            task.inference.batch_size,
-            self.worker_exe.clone(),
-        )?;
-        let out = run_plan(
             examples.len(),
-            task.executors,
-            &task.scheduler,
-            &mut backend,
-            None,
+            task.inference.batch_size,
             Vec::new(),
-            self.abort.as_deref(),
+            None,
+            None,
             None,
         )?;
         // The metric stage (like its thread-path counterpart) reports no
@@ -792,11 +873,11 @@ impl EvalRunner {
     ) -> Result<MetricReport> {
         let out = match metric.requirements() {
             MetricRequirements::Pure => {
-                // Process backend: registry built-ins score as a
-                // serializable plan on worker processes; custom metric
-                // objects cannot cross a process boundary, so they fall
-                // back to the in-process distributed path.
-                let backend_cfg = (task.backend == BackendKind::Process)
+                // Process/remote backends: registry built-ins score as a
+                // serializable plan on the executor backend; custom
+                // metric objects cannot cross a process boundary, so they
+                // fall back to the in-process distributed path.
+                let backend_cfg = (task.backend != BackendKind::Thread)
                     .then(|| {
                         task.metrics
                             .iter()

@@ -1,29 +1,52 @@
-//! The `slleval worker` entry point: one out-of-process executor.
+//! The `slleval worker` / `slleval serve-worker` entry points: one
+//! out-of-process executor, over pipes or TCP.
 //!
-//! Spawned by [`crate::sched::backend::ProcessBackend`] with stdin/stdout
-//! pipes. Protocol (length-prefixed JSON frames, see
-//! [`crate::sched::backend`]): a `hello` frame carries the serialized
+//! **Pipe mode** ([`worker_main`]): spawned by
+//! [`crate::sched::backend::ProcessBackend`] with stdin/stdout pipes.
+//! Protocol (length-prefixed JSON frames, see [`crate::sched::backend`]):
+//! a `hello` frame carries the serialized
 //! [`TaskPlan`](crate::sched::plan::TaskPlan) + this worker's executor
 //! id; the worker rebuilds its executor-local state from the plan
 //! ([`PlanHost::from_plan`]), answers `ready` (or `init_error`), then
-//! executes `task` frames one at a time until `shutdown` or EOF.
+//! executes `task` frames one at a time. A `plan` frame *re-arms* the
+//! worker for the next stage of the same run (persistent fleets): the
+//! current executor is finished (cache flush), a new one is built from
+//! the shipped plan, and a fresh `ready` is sent. `shutdown` or EOF ends
+//! the session.
 //!
-//! All diagnostics go to stderr — stdout carries protocol frames only.
+//! **Serve mode** ([`serve_worker_main`]): a per-host daemon
+//! (`slleval serve-worker --listen <addr>`) accepting TCP connections
+//! from [`crate::sched::remote::RemoteBackend`] — one connection per
+//! granted executor slot, each served by its own thread running the
+//! identical session protocol, plus two TCP-specific behaviours: a
+//! heartbeat frame every second (so the driver's read timeout
+//! distinguishes a long-running task from a dead host) and
+//! checkpoint-spill *upload* — completed-task rows go back to the driver
+//! as `spill` frames instead of a local stage directory the driver could
+//! never read.
+//!
+//! All diagnostics go to stderr — stdout carries protocol frames (pipe
+//! mode) or the `listening on <addr>` line (serve mode) only.
 //!
 //! The plan's [`WorkerFault`](crate::sched::plan::WorkerFault) hook makes
 //! crash tests deterministic offline: the targeted executor
 //! `std::process::abort()`s while executing its N-th task — a genuine
 //! hard death (no unwinding, no cleanup, result never sent), exactly
-//! what a `kill -9` or OOM kill looks like to the driver.
+//! what a `kill -9` or OOM kill looks like to the driver. In serve mode
+//! the abort takes the whole daemon down — every executor on the host at
+//! once, which is precisely what host-death handling is for.
 
 use std::io::Write;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use super::plan_exec::{PlanExecutor, PlanHost};
-use crate::sched::backend::{read_frame, write_frame, PlanTaskRunner, TaskSpec};
+use crate::sched::backend::{PlanTaskRunner, TaskSpec};
 use crate::sched::plan::TaskPlan;
+use crate::sched::wire::{read_frame, write_frame_shared, SharedWriter};
 use crate::util::json::Json;
 
 /// Run the worker protocol over this process's stdin/stdout. Returns when
@@ -31,79 +54,194 @@ use crate::util::json::Json;
 /// driver sees EOF and treats this executor as dead).
 pub fn worker_main() -> Result<()> {
     let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
     let mut input = stdin.lock();
-    let mut output = stdout.lock();
+    let output: SharedWriter = Arc::new(Mutex::new(Box::new(std::io::stdout())));
+    serve_session(&mut input, &output, false)
+}
 
-    let hello = read_frame(&mut input)?.context("expected hello frame on stdin")?;
-    anyhow::ensure!(
-        hello.str_or("type", "") == "hello",
-        "protocol error: first frame must be hello, got '{}'",
-        hello.str_or("type", "?")
-    );
-    let eid = hello.get("executor_id")?.as_usize()?;
-    let batch_size = hello.usize_or("batch_size", 1).max(1);
-    let plan = TaskPlan::from_json(hello.get("plan")?)
-        .context("parsing task plan from hello frame")?;
-    let fault = plan.fault.filter(|f| f.executor_id == eid);
-
-    let mut executor = match PlanHost::from_plan(&plan)
-        .and_then(|host| PlanExecutor::new(Arc::new(plan), eid, host))
-    {
-        Ok(e) => e,
-        Err(e) => {
-            let msg = Json::obj(vec![
-                ("type", Json::str("init_error")),
-                ("error", Json::str(&format!("{e:#}"))),
-            ]);
-            write_frame(&mut output, &msg)?;
-            return Ok(());
-        }
+/// One worker session over any frame transport: handshake (`hello`),
+/// task execution, mid-session re-arms (`plan`), shutdown. With
+/// `spill_frames`, completed-task spills are uploaded as frames instead
+/// of written to a local stage (serve mode — no shared filesystem).
+fn serve_session(
+    input: &mut dyn std::io::Read,
+    output: &SharedWriter,
+    spill_frames: bool,
+) -> Result<()> {
+    let Some(mut pending) = read_frame(input)? else {
+        return Ok(()); // connection closed before the handshake
     };
-    write_frame(&mut output, &Json::obj(vec![("type", Json::str("ready"))]))?;
+    loop {
+        let ty = pending.str_or("type", "");
+        anyhow::ensure!(
+            ty == "hello" || ty == "plan",
+            "protocol error: expected hello/plan frame, got '{ty}'"
+        );
+        let eid = pending.get("executor_id")?.as_usize()?;
+        let batch_size = pending.usize_or("batch_size", 1).max(1);
+        let plan =
+            TaskPlan::from_json(pending.get("plan")?).context("parsing shipped task plan")?;
+        let fault = plan.fault.filter(|f| f.executor_id == eid);
 
-    let mut received = 0usize;
-    while let Some(frame) = read_frame(&mut input)? {
-        match frame.str_or("type", "") {
-            "task" => {
-                let spec = TaskSpec::from_json(&frame).context("parsing task frame")?;
-                received += 1;
-                let result = executor.run(&spec, batch_size);
-                // Deterministic hard death: computed but never reported —
-                // the driver pays for exactly this in-flight task.
-                if let Some(f) = fault {
-                    if received == f.kill_after_tasks {
-                        let _ = std::io::stderr().write_all(
-                            format!(
-                                "worker {eid}: fault injection — aborting on task {} \
-                                 [{}, {})\n",
-                                spec.task_id, spec.start, spec.end
-                            )
-                            .as_bytes(),
-                        );
-                        std::process::abort();
+        let mut executor = match PlanHost::from_plan(&plan)
+            .and_then(|host| PlanExecutor::new(Arc::new(plan), eid, host))
+        {
+            Ok(mut e) => {
+                if spill_frames {
+                    e.spill_to_frames(output.clone());
+                }
+                e
+            }
+            Err(e) => {
+                let msg = Json::obj(vec![
+                    ("type", Json::str("init_error")),
+                    ("error", Json::str(&format!("{e:#}"))),
+                ]);
+                write_frame_shared(output, &msg)?;
+                return Ok(());
+            }
+        };
+        write_frame_shared(output, &Json::obj(vec![("type", Json::str("ready"))]))?;
+
+        let mut received = 0usize;
+        let next = loop {
+            let Some(frame) = read_frame(input)? else { break None };
+            match frame.str_or("type", "") {
+                "task" => {
+                    let spec = TaskSpec::from_json(&frame).context("parsing task frame")?;
+                    received += 1;
+                    let result = executor.run(&spec, batch_size);
+                    // Deterministic hard death: computed but never
+                    // reported — the driver pays for exactly this
+                    // in-flight task.
+                    if let Some(f) = fault {
+                        if received == f.kill_after_tasks {
+                            let _ = std::io::stderr().write_all(
+                                format!(
+                                    "worker {eid}: fault injection — aborting on task {} \
+                                     [{}, {})\n",
+                                    spec.task_id, spec.start, spec.end
+                                )
+                                .as_bytes(),
+                            );
+                            std::process::abort();
+                        }
+                    }
+                    match result {
+                        Ok(msg) => write_frame_shared(output, &msg.to_json())?,
+                        Err(e) => {
+                            let msg = Json::obj(vec![
+                                ("type", Json::str("task_error")),
+                                ("task_id", Json::num(spec.task_id as f64)),
+                                ("error", Json::str(&format!("{e:#}"))),
+                            ]);
+                            write_frame_shared(output, &msg)?;
+                        }
                     }
                 }
-                match result {
-                    Ok(msg) => write_frame(&mut output, &msg.to_json())?,
-                    Err(e) => {
-                        let msg = Json::obj(vec![
-                            ("type", Json::str("task_error")),
-                            ("task_id", Json::num(spec.task_id as f64)),
-                            ("error", Json::str(&format!("{e:#}"))),
-                        ]);
-                        write_frame(&mut output, &msg)?;
-                    }
+                // Re-arm: the driver's next stage ships a new plan over
+                // the live session instead of respawning the worker.
+                "plan" => break Some(frame),
+                "shutdown" => break None,
+                other => {
+                    eprintln!("worker {eid}: ignoring unknown frame type '{other}'");
                 }
             }
-            "shutdown" => break,
-            other => {
-                eprintln!("worker {eid}: ignoring unknown frame type '{other}'");
-            }
+        };
+        // Flush buffered cache writes before the session ends (or the
+        // next plan's executor takes over) so later runs/rescore see
+        // what this worker paid for.
+        executor.finish();
+        match next {
+            Some(frame) => pending = frame,
+            None => return Ok(()),
         }
     }
-    // Clean exit: flush buffered cache writes so later runs/rescore see
-    // what this worker paid for.
-    executor.finish();
+}
+
+/// Serve one accepted TCP connection: heartbeats + the worker session
+/// with spill upload. Public so loopback benches/tests can run the serve
+/// loop in-process without a child daemon.
+pub fn serve_connection(stream: std::net::TcpStream) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    let mut input = stream.try_clone().context("cloning connection for reads")?;
+    let output: SharedWriter = Arc::new(Mutex::new(Box::new(
+        stream.try_clone().context("cloning connection for writes")?,
+    )));
+
+    // One whole heartbeat frame per second: the driver's read timeout
+    // then distinguishes "busy with a long task" from "host is gone".
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb_stop = stop.clone();
+    let hb_out = output.clone();
+    let heartbeat = std::thread::Builder::new()
+        .name("slleval-heartbeat".into())
+        .spawn(move || {
+            let frame = Json::obj(vec![("type", Json::str("heartbeat"))]);
+            while !hb_stop.load(Ordering::Relaxed) {
+                if write_frame_shared(&hb_out, &frame).is_err() {
+                    return; // connection gone; the session loop sees it too
+                }
+                std::thread::sleep(Duration::from_secs(1));
+            }
+        })
+        .context("spawning heartbeat thread")?;
+
+    let result = serve_session(&mut input, &output, true);
+    stop.store(true, Ordering::Relaxed);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    let _ = heartbeat.join();
+    result
+}
+
+/// The `slleval serve-worker --listen <addr>` daemon: accept loop for a
+/// per-host worker pool. Each accepted connection is one executor slot,
+/// served on its own thread; `max_workers` (0 = unlimited) bounds the
+/// pool — refused connections get a polite `init_error` frame instead of
+/// a hang. Prints `listening on <addr>` to stdout once bound (with
+/// `--listen host:0` the OS-assigned port is discoverable there).
+pub fn serve_worker_main(listen: &str, max_workers: usize) -> Result<()> {
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding serve-worker listener on {listen}"))?;
+    let addr = listener.local_addr().context("reading listener address")?;
+    println!("listening on {addr}");
+    std::io::stdout().flush().ok();
+    eprintln!("slleval serve-worker: accepting executor connections on {addr}");
+
+    let active = Arc::new(AtomicUsize::new(0));
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("warning: serve-worker accept failed: {e}");
+                continue;
+            }
+        };
+        if max_workers > 0 && active.load(Ordering::Relaxed) >= max_workers {
+            let out: SharedWriter = Arc::new(Mutex::new(Box::new(stream)));
+            let msg = Json::obj(vec![
+                ("type", Json::str("init_error")),
+                (
+                    "error",
+                    Json::str(&format!("host at capacity ({max_workers} workers)")),
+                ),
+            ]);
+            let _ = write_frame_shared(&out, &msg);
+            continue;
+        }
+        active.fetch_add(1, Ordering::Relaxed);
+        let active = active.clone();
+        let peer =
+            stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "unknown".into());
+        std::thread::Builder::new()
+            .name("slleval-serve-conn".into())
+            .spawn(move || {
+                if let Err(e) = serve_connection(stream) {
+                    eprintln!("serve-worker: session from {peer} ended with error: {e:#}");
+                }
+                active.fetch_sub(1, Ordering::Relaxed);
+            })
+            .context("spawning serve-worker connection thread")?;
+    }
     Ok(())
 }

@@ -5,7 +5,7 @@
 //! slleval run       --config task.json [--data data.jsonl | --n 1000]
 //!                   [--cache-dir .slleval-cache] [--track runs/] [--fast]
 //!                   [--checkpoint run_dir | --resume run_dir] [--concurrency 8]
-//!                   [--backend thread|process]
+//!                   [--backend thread|process|remote] [--hosts host1:7433,host2:7433]
 //! slleval compare   --config task.json --model-b gpt-4o-mini [--provider-b openai]
 //!                   [--checkpoint run_dir | --resume run_dir]
 //! slleval replay    --config task.json --cache-dir .slleval-cache
@@ -14,6 +14,7 @@
 //! slleval tables    [--table fig2|tab3|tab4|tab5|tab6|typei|all]
 //! slleval sim       --executors 8 --n 10000 [--rpm 10000]
 //! slleval checkpoint compact <run_dir>
+//! slleval serve-worker --listen 0.0.0.0:7433 [--max-workers 8]
 //! ```
 //!
 //! `--concurrency N` (or `inference.concurrency` in the task JSON) makes
@@ -27,6 +28,13 @@
 //! segfault, `kill -9`) costs only its in-flight tasks — the driver
 //! retries them on the survivors — instead of the whole run. The default
 //! `thread` backend is the in-process scheduler, bit for bit.
+//!
+//! `--backend remote --hosts host1:7433,host2:7433` places executors
+//! round-robin on `slleval serve-worker` daemons over TCP (the same
+//! frame protocol). A dead host costs only its in-flight tasks: every
+//! executor on it is settled at once and the work retried on surviving
+//! hosts. Remote workers upload checkpoint spills to the driver, so
+//! `--resume` needs no shared filesystem.
 //!
 //! `--checkpoint <run_dir>` spills every completed scheduler task to
 //! `run_dir` crash-safely; after an interruption (crash, Ctrl-C, cost
@@ -78,8 +86,11 @@ fn dispatch(args: &Args) -> Result<()> {
         // Hidden: the process-backend executor entry point. Spawned by
         // the driver with stdin/stdout pipes — never invoked by hand.
         Some("worker") => spark_llm_eval::coordinator::worker_main(),
+        // The remote-backend host daemon: accepts executor connections
+        // from `--backend remote` drivers.
+        Some("serve-worker") => cmd_serve_worker(args),
         Some(other) => bail!(
-            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim, checkpoint)"
+            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim, checkpoint, serve-worker)"
         ),
         None => {
             print_usage();
@@ -91,10 +102,14 @@ fn dispatch(args: &Args) -> Result<()> {
 fn print_usage() {
     println!("slleval — distributed, statistically rigorous LLM evaluation");
     println!(
-        "subcommands: generate | run | compare | replay | rescore | tables | sim | checkpoint"
+        "subcommands: generate | run | compare | replay | rescore | tables | sim | checkpoint \
+         | serve-worker"
     );
     println!("  rescore: recompute metrics from a cache/checkpoint, zero inference calls");
     println!("  checkpoint compact <run_dir>: coalesce per-task manifest records per stage");
+    println!(
+        "  serve-worker --listen <addr> [--max-workers N]: host daemon for --backend remote"
+    );
     println!("see README.md for full usage");
 }
 
@@ -135,10 +150,20 @@ fn load_task(args: &Args) -> Result<EvalTask> {
     // In-executor concurrency: how many provider requests each executor
     // keeps in flight (1 = the sequential pre-pipeline path).
     task.inference.concurrency = args.get_usize("concurrency", task.inference.concurrency);
-    // Executor backend: in-process threads (default) or crash-isolated
-    // `slleval worker` processes.
+    // Executor backend: in-process threads (default), crash-isolated
+    // `slleval worker` processes, or remote serve-worker hosts.
     if let Some(backend) = args.get("backend") {
         task.backend = spark_llm_eval::config::BackendKind::from_str(backend)?;
+    }
+    // Remote host list: comma-separated `host:port` serve-worker
+    // addresses; executors are placed on them round-robin.
+    if let Some(hosts) = args.get("hosts") {
+        task.hosts = hosts
+            .split(',')
+            .map(str::trim)
+            .filter(|h| !h.is_empty())
+            .map(String::from)
+            .collect();
     }
     task.validate()?;
     Ok(task)
@@ -363,6 +388,16 @@ fn cmd_checkpoint(args: &Args) -> Result<()> {
         }
         _ => bail!("usage: slleval checkpoint compact <run_dir>"),
     }
+}
+
+fn cmd_serve_worker(args: &Args) -> Result<()> {
+    let listen = args
+        .get("listen")
+        .context("--listen <host:port> is required for serve-worker (port 0 picks a free port)")?;
+    // 0 = unbounded; otherwise surplus connections are refused with an
+    // init_error frame and the driver's spawn fails fast.
+    let max_workers = args.get_usize("max-workers", 0);
+    spark_llm_eval::coordinator::serve_worker_main(listen, max_workers)
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {

@@ -112,6 +112,14 @@ pub fn eval_summary(result: &EvalResult) -> String {
             "executor deaths: {} (in-flight tasks retried on surviving executors)\n",
             s.executor_deaths,
         ));
+        if s.host_deaths > 0 {
+            // Remote backend: whole serve-worker hosts lost, each taking
+            // all of its executor connections down at once.
+            out.push_str(&format!(
+                "host deaths: {} (every executor on a lost host settled together)\n",
+                s.host_deaths,
+            ));
+        }
     }
     if s.restored_rows > 0 {
         // Distinguish carried-over (restored) work from re-executed work:

@@ -27,11 +27,18 @@
 //! ```text
 //! driver -> worker   {"type":"hello","executor_id":E,"batch_size":B,"plan":{...}}
 //!                    {"type":"task","task_id":T,"start":S,"end":E,"attempt":A,"speculative":false}
+//!                    {"type":"plan","executor_id":E,"batch_size":B,"plan":{...}}   (re-arm a persistent worker)
 //!                    {"type":"shutdown"}
 //! worker -> driver   {"type":"ready"} | {"type":"init_error","error":"..."}
 //!                    {"type":"result", ...TaskResultMsg}
 //!                    {"type":"task_error","task_id":T,"error":"..."}
+//!                    {"type":"heartbeat"}                         (serve-worker liveness)
+//!                    {"type":"spill","start":S,"end":E,"attempt":A,"rows":[...]}  (remote spill upload)
 //! ```
+//!
+//! The same frames ride TCP sockets for [`RemoteBackend`]
+//! (`super::remote`); unknown frame types are ignored on both sides for
+//! forward compatibility.
 //!
 //! The driver loop does not support adaptive task splitting (a worker
 //! reports nothing mid-task), and aborts (cost budget, Ctrl-C) take
@@ -46,7 +53,6 @@ use super::{SchedulerConfig, SchedulerStats, TaskOutcome, TaskRecord};
 use crate::engine::{ExecutorStats, Progress};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -62,6 +68,9 @@ pub enum BackendKind {
     Thread,
     /// One `slleval worker` OS process per executor (crash isolation).
     Process,
+    /// Executors on remote `slleval serve-worker` hosts over TCP
+    /// (requires `executor.hosts` / `--hosts`).
+    Remote,
 }
 
 impl BackendKind {
@@ -69,6 +78,7 @@ impl BackendKind {
         match self {
             BackendKind::Thread => "thread",
             BackendKind::Process => "process",
+            BackendKind::Remote => "remote",
         }
     }
 
@@ -77,7 +87,8 @@ impl BackendKind {
         Ok(match s {
             "thread" => BackendKind::Thread,
             "process" => BackendKind::Process,
-            other => bail!("unknown executor backend '{other}' (thread | process)"),
+            "remote" => BackendKind::Remote,
+            other => bail!("unknown executor backend '{other}' (thread | process | remote)"),
         })
     }
 }
@@ -210,60 +221,22 @@ pub trait ExecutorBackend {
     fn alive(&self, executor_id: usize) -> bool;
     /// Stop every executor (best-effort, idempotent).
     fn shutdown(&mut self);
+    /// Which physical host an executor runs on, when the backend places
+    /// multiple executors per failure domain (remote: index into the
+    /// host list). `None` means each executor is its own failure domain,
+    /// and executor death stays executor-scoped.
+    fn host_of(&self, _executor_id: usize) -> Option<usize> {
+        None
+    }
 }
 
 // --------------------------------------------------------------- framing
 
-/// Frames larger than this are a protocol error, not an allocation.
-const MAX_FRAME_BYTES: usize = 1 << 30;
-
-/// Write one length-prefixed frame from already-serialized JSON text.
-/// Oversized frames fail here with a clear error instead of being
-/// rejected (or, past u32, silently desynchronized) reader-side.
-fn write_frame_bytes<W: Write>(w: &mut W, bytes: &[u8]) -> std::io::Result<()> {
-    if bytes.len() > MAX_FRAME_BYTES {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!(
-                "frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte protocol limit \
-                 (plan payload too large for one executor handshake)",
-                bytes.len()
-            ),
-        ));
-    }
-    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
-    w.write_all(bytes)?;
-    w.flush()
-}
-
-/// Write one length-prefixed JSON frame.
-pub fn write_frame<W: Write>(w: &mut W, v: &Json) -> std::io::Result<()> {
-    write_frame_bytes(w, v.to_string().as_bytes())
-}
-
-/// Read one length-prefixed JSON frame. `Ok(None)` is a clean EOF at a
-/// frame boundary; a torn frame or oversized length is an error.
-pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
-    let mut len_buf = [0u8; 4];
-    let mut filled = 0usize;
-    while filled < 4 {
-        match r.read(&mut len_buf[filled..]) {
-            Ok(0) if filled == 0 => return Ok(None),
-            Ok(0) => bail!("connection closed mid-frame (length prefix truncated)"),
-            Ok(n) => filled += n,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e).context("reading frame length"),
-        }
-    }
-    let len = u32::from_be_bytes(len_buf) as usize;
-    if len > MAX_FRAME_BYTES {
-        bail!("frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte protocol limit");
-    }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body).context("reading frame body")?;
-    let text = String::from_utf8(body).context("frame is not UTF-8")?;
-    Ok(Some(Json::parse(&text).map_err(anyhow::Error::msg)?))
-}
+// The 4-byte-BE + JSON frame codec lives in [`super::wire`], shared by
+// every transport (pipes here, TCP in [`super::remote`], and both worker
+// serve modes). Re-exported so existing `backend::read_frame` imports
+// keep working.
+pub use super::wire::{read_frame, write_frame, write_frame_bytes};
 
 // --------------------------------------------------------- thread backend
 
@@ -466,6 +439,16 @@ pub struct ProcessBackend {
     /// Set before tearing pipes down so clean-shutdown EOFs are not
     /// reported as deaths.
     closing: Arc<AtomicBool>,
+    /// When set, [`ExecutorBackend::shutdown`] is a no-op: the fleet
+    /// outlives the job so the next stage of the same run can re-arm the
+    /// workers with a `plan` frame instead of respawning processes and
+    /// re-shipping a corpus-sized payload.
+    keep_alive: bool,
+    /// Per-executor "awaiting re-arm ready" flags. While set, the reader
+    /// drops everything except the re-arm response — stale frames from a
+    /// previous job (an abandoned speculative attempt finishing late)
+    /// must not pollute the next job's spend or retry accounting.
+    gates: Vec<Arc<AtomicBool>>,
 }
 
 impl ProcessBackend {
@@ -495,13 +478,40 @@ impl ProcessBackend {
             events_tx,
             events_rx,
             closing: Arc::new(AtomicBool::new(false)),
+            keep_alive: false,
+            gates: (0..executors).map(|_| Arc::new(AtomicBool::new(false))).collect(),
         })
+    }
+
+    /// Keep the worker fleet alive across jobs: `shutdown` becomes a
+    /// no-op (teardown happens on drop) and `spawn_executor` re-arms a
+    /// still-live worker with a `plan` frame instead of respawning it.
+    pub fn set_keep_alive(&mut self, keep: bool) {
+        self.keep_alive = keep;
+    }
+
+    pub fn executors(&self) -> usize {
+        self.children.len()
+    }
+
+    /// Point a persistent fleet at the next job's plan. Must be called
+    /// before the next `run_plan`; closes the stale-frame window by
+    /// gating every live reader *before* draining leftover events.
+    pub fn reset_plan(&mut self, plan: &TaskPlan, batch_size: usize) {
+        for gate in &self.gates {
+            gate.store(true, Ordering::Relaxed);
+        }
+        while self.events_rx.try_recv().is_ok() {}
+        self.plan_text = plan.to_json().to_string();
+        self.batch_size = batch_size;
     }
 }
 
 /// Parse one worker frame into an event (`None` for unknown types, which
-/// are ignored for forward compatibility).
-fn worker_frame_to_event(eid: usize, frame: &Json) -> Option<ExecutorEvent> {
+/// are ignored for forward compatibility). Shared with the remote
+/// transport ([`super::remote`]), whose readers additionally intercept
+/// `heartbeat` and `spill` frames before delegating here.
+pub(crate) fn worker_frame_to_event(eid: usize, frame: &Json) -> Option<ExecutorEvent> {
     match frame.str_or("type", "") {
         "ready" => Some(ExecutorEvent::Ready { executor_id: eid }),
         "init_error" => Some(ExecutorEvent::InitError {
@@ -530,6 +540,38 @@ impl ExecutorBackend for ProcessBackend {
     }
 
     fn spawn_executor(&mut self, eid: usize) -> Result<()> {
+        // Persistent-fleet re-arm: a worker left alive by a previous job
+        // (keep_alive shutdown) takes the next plan over its existing
+        // pipes and answers with a fresh `ready`.
+        if self.stdins[eid].is_some()
+            && self.readers[eid].as_ref().map(|r| !r.is_finished()).unwrap_or(false)
+        {
+            self.gates[eid].store(true, Ordering::Relaxed);
+            let plan_msg = format!(
+                "{{\"type\":\"plan\",\"executor_id\":{eid},\"batch_size\":{},\"plan\":{}}}",
+                self.batch_size, self.plan_text
+            );
+            let stdin = self.stdins[eid].as_mut().expect("checked above");
+            match write_frame_bytes(stdin, plan_msg.as_bytes()) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    // The worker died between jobs; fall through to a
+                    // fresh spawn (its EOF event was drained or gated).
+                    eprintln!("warning: re-arming worker {eid} failed ({e}); respawning");
+                }
+            }
+        }
+        // Clear dead remnants before a fresh spawn.
+        if let Some(mut c) = self.children[eid].take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        self.stdins[eid] = None;
+        if let Some(r) = self.readers[eid].take() {
+            let _ = r.join();
+        }
+        self.gates[eid].store(false, Ordering::Relaxed);
+
         let mut child = std::process::Command::new(&self.worker_exe)
             .arg("worker")
             .stdin(std::process::Stdio::piped())
@@ -550,11 +592,18 @@ impl ExecutorBackend for ProcessBackend {
 
         let events = self.events_tx.clone();
         let closing = self.closing.clone();
+        let gate = self.gates[eid].clone();
         let reader = std::thread::Builder::new()
             .name(format!("slleval-worker-rx-{eid}"))
             .spawn(move || loop {
                 match read_frame(&mut stdout) {
                     Ok(Some(frame)) => {
+                        if gate.load(Ordering::Relaxed) {
+                            match frame.str_or("type", "") {
+                                "ready" | "init_error" => gate.store(false, Ordering::Relaxed),
+                                _ => continue, // stale frame from the previous job
+                            }
+                        }
                         if let Some(event) = worker_frame_to_event(eid, &frame) {
                             if events.send(event).is_err() {
                                 return;
@@ -609,6 +658,11 @@ impl ExecutorBackend for ProcessBackend {
     }
 
     fn shutdown(&mut self) {
+        if self.keep_alive {
+            // Persistent fleet: the run keeps the workers for its next
+            // stage; real teardown happens on drop.
+            return;
+        }
         self.closing.store(true, Ordering::Relaxed);
         let shutdown_msg = Json::obj(vec![("type", Json::str("shutdown"))]);
         for stdin in self.stdins.iter_mut() {
@@ -652,6 +706,7 @@ impl ExecutorBackend for ProcessBackend {
 
 impl Drop for ProcessBackend {
     fn drop(&mut self) {
+        self.keep_alive = false;
         self.shutdown();
     }
 }
@@ -714,6 +769,9 @@ struct Driver<'a> {
     speculative_wins: usize,
     retries: usize,
     executor_deaths: usize,
+    host_deaths: usize,
+    /// Hosts already settled as dead (index per [`ExecutorBackend::host_of`]).
+    dead_hosts: std::collections::BTreeSet<usize>,
     api_calls: u64,
     api_retries: u64,
     cost_usd: f64,
@@ -926,6 +984,8 @@ pub fn run_plan(
         speculative_wins: 0,
         retries: 0,
         executor_deaths: 0,
+        host_deaths: 0,
+        dead_hosts: Default::default(),
         api_calls: 0,
         api_retries: 0,
         cost_usd: 0.0,
@@ -1102,7 +1162,8 @@ pub fn run_plan(
                         }
                         driver.record(&f, TaskOutcome::Abandoned);
                     }
-                    settle_death(&mut driver, eid, &format!("submit failed: {e:#}"));
+                    let detail = format!("submit failed: {e:#}");
+                    settle_death_and_host(&mut driver, &*backend, eid, &detail);
                 }
             }
         }
@@ -1214,7 +1275,7 @@ pub fn run_plan(
                 }
             }
             ExecutorEvent::Died { executor_id, detail } => {
-                settle_death(&mut driver, executor_id, &detail);
+                settle_death_and_host(&mut driver, &*backend, executor_id, &detail);
             }
         }
     }
@@ -1230,6 +1291,29 @@ fn maybe_blacklist(driver: &mut Driver<'_>, eid: usize) {
     {
         driver.blacklisted[eid] = true;
         driver.redistribute_queue(eid, "executor blacklisted after repeated failures");
+    }
+}
+
+/// Settle an executor death *and* its failure domain: when the backend
+/// places multiple executors per host ([`ExecutorBackend::host_of`]),
+/// one lost connection means the whole host is gone — its peers' sockets
+/// would each have to ride out a heartbeat timeout individually, so the
+/// driver settles them all at once and counts one `host_death`.
+fn settle_death_and_host(
+    driver: &mut Driver<'_>,
+    backend: &dyn ExecutorBackend,
+    eid: usize,
+    detail: &str,
+) {
+    settle_death(driver, eid, detail);
+    let Some(host) = backend.host_of(eid) else { return };
+    if driver.dead_hosts.insert(host) {
+        driver.host_deaths += 1;
+        for peer in 0..driver.executors {
+            if peer != eid && backend.host_of(peer) == Some(host) && !driver.dead[peer] {
+                settle_death(driver, peer, &format!("host {host} died: {detail}"));
+            }
+        }
     }
 }
 
@@ -1321,6 +1405,7 @@ fn finish(
         restored_tasks: driver.restored_tasks,
         restored_rows: driver.restored_rows,
         executor_deaths: driver.executor_deaths,
+        host_deaths: driver.host_deaths,
         blacklisted_executors: (0..driver.executors)
             .filter(|&e| driver.blacklisted[e])
             .collect(),
@@ -1367,39 +1452,15 @@ mod tests {
 
     #[test]
     fn backend_kind_round_trips() {
-        for kind in [BackendKind::Thread, BackendKind::Process] {
+        for kind in [BackendKind::Thread, BackendKind::Process, BackendKind::Remote] {
             assert_eq!(BackendKind::from_str(kind.as_str()).unwrap(), kind);
         }
-        assert!(BackendKind::from_str("remote").is_err());
+        assert!(BackendKind::from_str("bogus").is_err());
         assert_eq!(BackendKind::default(), BackendKind::Thread);
     }
 
-    #[test]
-    fn frames_round_trip() {
-        let v = Json::obj(vec![
-            ("type", Json::str("task")),
-            ("payload", Json::arr(vec![Json::num(1.0), Json::str("two")])),
-        ]);
-        let mut buf = Vec::new();
-        write_frame(&mut buf, &v).unwrap();
-        write_frame(&mut buf, &Json::str("second")).unwrap();
-        let mut cursor = std::io::Cursor::new(buf);
-        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), v);
-        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), Json::str("second"));
-        assert!(read_frame(&mut cursor).unwrap().is_none(), "clean EOF");
-    }
-
-    #[test]
-    fn torn_frame_is_an_error() {
-        let mut buf = Vec::new();
-        write_frame(&mut buf, &Json::str("x")).unwrap();
-        buf.truncate(buf.len() - 1);
-        let mut cursor = std::io::Cursor::new(buf);
-        assert!(read_frame(&mut cursor).is_err());
-        // Truncated length prefix.
-        let mut cursor = std::io::Cursor::new(vec![0u8, 0, 0]);
-        assert!(read_frame(&mut cursor).is_err());
-    }
+    // The frame codec round-trip / torn-frame tests live with the codec
+    // in `sched::wire`.
 
     #[test]
     fn task_spec_and_result_round_trip() {

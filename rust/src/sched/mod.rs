@@ -42,6 +42,8 @@
 
 pub mod backend;
 pub mod plan;
+pub mod remote;
+pub mod wire;
 
 use crate::checkpoint::StageCheckpoint;
 use crate::data::DataFrame;
@@ -252,6 +254,10 @@ pub struct SchedulerStats {
     /// scheduler cannot outlive an executor crash. Dead executors also
     /// appear in `blacklisted_executors` (they take no further work).
     pub executor_deaths: usize,
+    /// Whole failure domains lost (remote backend: a `serve-worker` host
+    /// whose connections dropped — each of its executors also counts one
+    /// `executor_death`). Always 0 for single-host backends.
+    pub host_deaths: usize,
     pub blacklisted_executors: Vec<usize>,
     /// Tasks/rows restored from a run checkpoint instead of re-executed
     /// (paid-for work carried over by `--resume`).
@@ -278,6 +284,7 @@ impl SchedulerStats {
         self.splits += other.splits;
         self.retries += other.retries;
         self.executor_deaths += other.executor_deaths;
+        self.host_deaths += other.host_deaths;
         for &e in &other.blacklisted_executors {
             if !self.blacklisted_executors.contains(&e) {
                 self.blacklisted_executors.push(e);
@@ -310,6 +317,7 @@ impl SchedulerStats {
             ("splits", Json::num(self.splits as f64)),
             ("retries", Json::num(self.retries as f64)),
             ("executor_deaths", Json::num(self.executor_deaths as f64)),
+            ("host_deaths", Json::num(self.host_deaths as f64)),
             (
                 "blacklisted_executors",
                 Json::arr(

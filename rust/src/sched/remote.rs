@@ -1,0 +1,331 @@
+//! [`RemoteBackend`]: executors on remote hosts over TCP.
+//!
+//! The driver side of the remote transport. Each executor slot is one
+//! TCP connection to a `slleval serve-worker` daemon from the configured
+//! host list (`executor.hosts` / `--hosts`), assigned round-robin:
+//! executor `e` lives on `hosts[e % hosts.len()]`. The connection speaks
+//! the exact worker protocol the [`ProcessBackend`] speaks over pipes
+//! (see [`super::wire`] and the frame table in [`super::backend`]), so a
+//! remote run is bit-identical to a thread or process run of the same
+//! plan — the serve daemon rebuilds the same deterministic `PlanHost`
+//! from the shipped plan.
+//!
+//! What TCP adds over pipes is *partial* failure, and the backend turns
+//! every flavor of it into the driver's existing death machinery:
+//!
+//! - **hung socket** → the reader's `read_timeout` (the heartbeat
+//!   window; serve workers emit `{"type":"heartbeat"}` every second)
+//!   expires and the executor becomes [`ExecutorEvent::Died`] instead of
+//!   wedging the poll loop;
+//! - **connection loss / torn frame** → `Died` with the transport error;
+//! - **host failure domains** → [`ExecutorBackend::host_of`] reports the
+//!   host index, so the driver settles *all* of a dead host's executors
+//!   at once and counts a `host_death`.
+//!
+//! Checkpoint spills cannot be written worker-side (no shared
+//! filesystem), so serve workers upload each completed task's rows as a
+//! `{"type":"spill",...}` frame *before* the result frame; the reader
+//! thread records them into the driver-side stage, preserving
+//! `--resume`'s zero-re-inference guarantee across host kills.
+//!
+//! [`ProcessBackend`]: super::backend::ProcessBackend
+
+use super::backend::{worker_frame_to_event, ExecutorBackend, ExecutorEvent, TaskSpec};
+use super::plan::TaskPlan;
+use super::wire::{is_timeout, read_frame, write_frame, write_frame_bytes};
+use crate::checkpoint::StageCheckpoint;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Default heartbeat window: a connection that produces no frame (not
+/// even a heartbeat) for this long is settled as dead.
+pub const DEFAULT_HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Environment override for the heartbeat window, in (possibly
+/// fractional) seconds.
+pub const REMOTE_HEARTBEAT_ENV: &str = "SLLEVAL_REMOTE_HEARTBEAT_SECS";
+
+/// The heartbeat window: [`REMOTE_HEARTBEAT_ENV`] when set and positive,
+/// else [`DEFAULT_HEARTBEAT_TIMEOUT`].
+pub fn heartbeat_timeout_from_env() -> Duration {
+    parse_heartbeat_timeout(std::env::var(REMOTE_HEARTBEAT_ENV).ok().as_deref())
+}
+
+fn parse_heartbeat_timeout(value: Option<&str>) -> Duration {
+    value
+        .and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|&secs| secs > 0.0)
+        .map(Duration::from_secs_f64)
+        .unwrap_or(DEFAULT_HEARTBEAT_TIMEOUT)
+}
+
+/// TCP backend: one socket per executor to a `slleval serve-worker`
+/// host, round-robin over the host list.
+pub struct RemoteBackend {
+    /// The plan, serialized once; spliced verbatim into hello frames.
+    plan_text: String,
+    batch_size: usize,
+    hosts: Vec<String>,
+    heartbeat_timeout: Duration,
+    /// Driver-side stage for uploaded spill frames (`--resume` support);
+    /// shared with every reader thread.
+    stage: Option<Arc<StageCheckpoint>>,
+    streams: Vec<Option<TcpStream>>,
+    readers: Vec<Option<std::thread::JoinHandle<()>>>,
+    events_tx: mpsc::Sender<ExecutorEvent>,
+    events_rx: mpsc::Receiver<ExecutorEvent>,
+    /// Set before tearing sockets down so clean-shutdown EOFs are not
+    /// reported as deaths.
+    closing: Arc<AtomicBool>,
+}
+
+impl RemoteBackend {
+    pub fn new(
+        plan: &TaskPlan,
+        executors: usize,
+        batch_size: usize,
+        hosts: Vec<String>,
+        heartbeat_timeout: Duration,
+        stage: Option<Arc<StageCheckpoint>>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            !hosts.is_empty(),
+            "the remote backend requires at least one serve-worker host \
+             (executor.hosts / --hosts)"
+        );
+        let (events_tx, events_rx) = mpsc::channel();
+        Ok(Self {
+            plan_text: plan.to_json().to_string(),
+            batch_size,
+            hosts,
+            heartbeat_timeout,
+            stage,
+            streams: (0..executors).map(|_| None).collect(),
+            readers: (0..executors).map(|_| None).collect(),
+            events_tx,
+            events_rx,
+            closing: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The host (index into the configured list) executor `eid` is
+    /// placed on.
+    fn host_index(&self, eid: usize) -> usize {
+        eid % self.hosts.len()
+    }
+}
+
+/// Record one uploaded spill frame into the driver-side stage.
+/// Best-effort durability: a malformed frame or a failed write degrades
+/// `--resume` coverage, never the run itself.
+fn record_spill_frame(stage: &StageCheckpoint, eid: usize, frame: &Json) {
+    let (Ok(start), Ok(end)) = (
+        frame.get("start").and_then(|v| v.as_usize()),
+        frame.get("end").and_then(|v| v.as_usize()),
+    ) else {
+        eprintln!("warning: dropping malformed spill frame from executor {eid}");
+        return;
+    };
+    let attempt = frame.usize_or("attempt", 1);
+    let lines: Vec<String> = match frame.get("rows") {
+        Ok(Json::Arr(rows)) => rows.iter().map(|r| r.to_string()).collect(),
+        _ => {
+            eprintln!("warning: dropping spill frame without rows from executor {eid}");
+            return;
+        }
+    };
+    if let Err(e) = stage.record_task(start, end, attempt, eid, &lines) {
+        eprintln!("warning: recording uploaded spill [{start}, {end}) failed: {e:#}");
+    }
+}
+
+impl ExecutorBackend for RemoteBackend {
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn spawn_executor(&mut self, eid: usize) -> Result<()> {
+        let host = self.hosts[self.host_index(eid)].clone();
+        let stream = TcpStream::connect(&host)
+            .with_context(|| format!("connecting to serve-worker host {host}"))?;
+        let _ = stream.set_nodelay(true);
+        let mut reader_stream =
+            stream.try_clone().context("cloning worker socket for the reader")?;
+        // The read timeout *is* the heartbeat check: serve workers emit a
+        // heartbeat frame every second, so a full window with no frame at
+        // all means the connection (or the host) is gone.
+        reader_stream
+            .set_read_timeout(Some(self.heartbeat_timeout))
+            .context("setting heartbeat read timeout")?;
+
+        // Handshake: ship the plan once, spliced verbatim.
+        let hello = format!(
+            "{{\"type\":\"hello\",\"executor_id\":{eid},\"batch_size\":{},\"plan\":{}}}",
+            self.batch_size, self.plan_text
+        );
+        write_frame_bytes(&mut &stream, hello.as_bytes())
+            .with_context(|| format!("writing hello frame to {host}"))?;
+
+        let events = self.events_tx.clone();
+        let closing = self.closing.clone();
+        let stage = self.stage.clone();
+        let timeout = self.heartbeat_timeout;
+        let reader = std::thread::Builder::new()
+            .name(format!("slleval-remote-rx-{eid}"))
+            .spawn(move || loop {
+                match read_frame(&mut reader_stream) {
+                    Ok(Some(frame)) => match frame.str_or("type", "") {
+                        "heartbeat" => continue,
+                        "spill" => {
+                            if let Some(stage) = stage.as_deref() {
+                                record_spill_frame(stage, eid, &frame);
+                            }
+                        }
+                        _ => {
+                            if let Some(event) = worker_frame_to_event(eid, &frame) {
+                                if events.send(event).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                    },
+                    Ok(None) => {
+                        if !closing.load(Ordering::Relaxed) {
+                            let _ = events.send(ExecutorEvent::Died {
+                                executor_id: eid,
+                                detail: format!("{host} closed the connection"),
+                            });
+                        }
+                        return;
+                    }
+                    Err(e) => {
+                        if !closing.load(Ordering::Relaxed) {
+                            let detail = if is_timeout(&e) {
+                                format!(
+                                    "heartbeat timeout: no frame from {host} in {timeout:?}"
+                                )
+                            } else {
+                                format!("connection to {host} failed: {e:#}")
+                            };
+                            let _ = events
+                                .send(ExecutorEvent::Died { executor_id: eid, detail });
+                        }
+                        return;
+                    }
+                }
+            })
+            .context("spawning remote reader thread")?;
+
+        self.streams[eid] = Some(stream);
+        self.readers[eid] = Some(reader);
+        Ok(())
+    }
+
+    fn submit(&mut self, eid: usize, spec: &TaskSpec) -> Result<()> {
+        let stream = self.streams[eid].as_ref().context("executor not connected")?;
+        write_frame(&mut &*stream, &spec.to_json())
+            .with_context(|| format!("submitting task to remote executor {eid}"))
+    }
+
+    fn poll(&mut self, timeout: Duration) -> Option<ExecutorEvent> {
+        self.events_rx.recv_timeout(timeout).ok()
+    }
+
+    fn alive(&self, eid: usize) -> bool {
+        self.streams[eid].is_some()
+            && self.readers[eid].as_ref().map(|r| !r.is_finished()).unwrap_or(false)
+    }
+
+    fn shutdown(&mut self) {
+        self.closing.store(true, Ordering::Relaxed);
+        let shutdown_msg = Json::obj(vec![("type", Json::str("shutdown"))]);
+        for stream in self.streams.iter_mut() {
+            if let Some(s) = stream.take() {
+                let _ = write_frame(&mut &s, &shutdown_msg);
+                // Closing the write half unblocks a worker mid-read even
+                // if it missed the frame; the reader thread sees EOF (or
+                // its read timeout) and exits.
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        for reader in self.readers.iter_mut() {
+            if let Some(r) = reader.take() {
+                let _ = r.join();
+            }
+        }
+    }
+
+    fn host_of(&self, eid: usize) -> Option<usize> {
+        Some(self.host_index(eid))
+    }
+}
+
+impl Drop for RemoteBackend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::plan::{MetricPlan, PlanEnv, PlanWork};
+
+    fn trivial_plan() -> TaskPlan {
+        TaskPlan {
+            work: PlanWork::MetricScore(MetricPlan {
+                metric: crate::config::MetricConfig::new("exact_match", "lexical"),
+                examples: Vec::new(),
+            }),
+            env: PlanEnv::default(),
+            stage: None,
+            fault: None,
+        }
+    }
+
+    #[test]
+    fn executors_round_robin_over_hosts() {
+        let hosts = vec!["a:1".to_string(), "b:2".to_string(), "c:3".to_string()];
+        let b = RemoteBackend::new(
+            &trivial_plan(),
+            7,
+            5,
+            hosts,
+            DEFAULT_HEARTBEAT_TIMEOUT,
+            None,
+        )
+        .unwrap();
+        assert_eq!(b.host_of(0), Some(0));
+        assert_eq!(b.host_of(1), Some(1));
+        assert_eq!(b.host_of(2), Some(2));
+        assert_eq!(b.host_of(3), Some(0));
+        assert_eq!(b.host_of(6), Some(0));
+    }
+
+    #[test]
+    fn empty_host_list_is_rejected() {
+        let err = RemoteBackend::new(
+            &trivial_plan(),
+            2,
+            5,
+            Vec::new(),
+            DEFAULT_HEARTBEAT_TIMEOUT,
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("hosts"), "{err}");
+    }
+
+    #[test]
+    fn heartbeat_timeout_parses_fractional_seconds() {
+        assert_eq!(parse_heartbeat_timeout(Some("0.25")), Duration::from_secs_f64(0.25));
+        assert_eq!(parse_heartbeat_timeout(Some(" 2 ")), Duration::from_secs(2));
+        assert_eq!(parse_heartbeat_timeout(Some("nonsense")), DEFAULT_HEARTBEAT_TIMEOUT);
+        assert_eq!(parse_heartbeat_timeout(Some("-1")), DEFAULT_HEARTBEAT_TIMEOUT);
+        assert_eq!(parse_heartbeat_timeout(None), DEFAULT_HEARTBEAT_TIMEOUT);
+    }
+}

@@ -1,0 +1,164 @@
+//! The executor wire codec: 4-byte big-endian length + UTF-8 JSON frames.
+//!
+//! One implementation shared by every transport that speaks the worker
+//! protocol — the [`ProcessBackend`](super::backend::ProcessBackend)
+//! stdin/stdout pipes, the [`RemoteBackend`](super::remote::RemoteBackend)
+//! TCP sockets, and the `slleval worker` / `slleval serve-worker` sides
+//! of both. The codec is deliberately strict: a frame larger than
+//! [`MAX_FRAME_BYTES`] or a stream that ends mid-frame is an *error*, not
+//! a hang or a panic — the reading side surfaces it and the driver folds
+//! it into the executor-death machinery.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::sync::{Arc, Mutex};
+
+/// Frames larger than this are a protocol error, not an allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Write one length-prefixed frame from already-serialized JSON text.
+/// Oversized frames fail here with a clear error instead of being
+/// rejected (or, past u32, silently desynchronized) reader-side.
+pub fn write_frame_bytes<W: Write>(w: &mut W, bytes: &[u8]) -> std::io::Result<()> {
+    if bytes.len() > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!(
+                "frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte protocol limit \
+                 (plan payload too large for one executor handshake)",
+                bytes.len()
+            ),
+        ));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Write one length-prefixed JSON frame.
+pub fn write_frame<W: Write>(w: &mut W, v: &Json) -> std::io::Result<()> {
+    write_frame_bytes(w, v.to_string().as_bytes())
+}
+
+/// Read one length-prefixed JSON frame. `Ok(None)` is a clean EOF at a
+/// frame boundary; a torn frame or oversized length is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    let mut filled = 0usize;
+    while filled < 4 {
+        match r.read(&mut len_buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => bail!("connection closed mid-frame (length prefix truncated)"),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame length"),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte protocol limit");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading frame body")?;
+    let text = String::from_utf8(body).context("frame is not UTF-8")?;
+    Ok(Some(Json::parse(&text).map_err(anyhow::Error::msg)?))
+}
+
+/// A shared, lockable frame destination. Several producers interleave
+/// *whole* frames onto one stream — a worker's result loop, its
+/// heartbeat thread, and the spill-upload path inside a running task —
+/// so every write takes the lock for one complete frame.
+pub type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
+
+/// Write one frame through a [`SharedWriter`], atomically with respect
+/// to the other producers on the same stream.
+pub fn write_frame_shared(w: &SharedWriter, v: &Json) -> std::io::Result<()> {
+    let mut guard = w.lock().unwrap_or_else(|poison| poison.into_inner());
+    write_frame(&mut *guard, v)
+}
+
+/// Whether an error from [`read_frame`] is a read *timeout* (the socket's
+/// `read_timeout` elapsed with no frame — a missed heartbeat) rather than
+/// a closed or broken connection.
+pub fn is_timeout(e: &anyhow::Error) -> bool {
+    e.root_cause()
+        .downcast_ref::<std::io::Error>()
+        .map(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        })
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip() {
+        let v = Json::obj(vec![
+            ("type", Json::str("task")),
+            ("payload", Json::arr(vec![Json::num(1.0), Json::str("two")])),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).unwrap();
+        write_frame(&mut buf, &Json::str("second")).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), v);
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), Json::str("second"));
+        assert!(read_frame(&mut cursor).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn torn_frame_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::str("x")).unwrap();
+        buf.truncate(buf.len() - 1);
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+        // Truncated length prefix.
+        let mut cursor = std::io::Cursor::new(vec![0u8, 0, 0]);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_an_error_not_an_allocation() {
+        // A length prefix past the cap must be rejected before the body
+        // buffer is allocated (a malicious/corrupt peer cannot OOM the
+        // driver with 4 bytes).
+        let mut buf = ((MAX_FRAME_BYTES + 1) as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(b"junk");
+        let mut cursor = std::io::Cursor::new(buf);
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert!(format!("{err}").contains("protocol limit"), "{err}");
+    }
+
+    /// A `Write` that mirrors everything into a shared buffer the test
+    /// can read back out after the boxed trait object swallows it.
+    struct Probe(Arc<Mutex<Vec<u8>>>);
+    impl Write for Probe {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn shared_writer_produces_a_parseable_frame_stream() {
+        let bytes = Arc::new(Mutex::new(Vec::new()));
+        let sink: SharedWriter = Arc::new(Mutex::new(Box::new(Probe(bytes.clone()))));
+        write_frame_shared(&sink, &Json::str("a")).unwrap();
+        write_frame_shared(&sink, &Json::str("b")).unwrap();
+        let captured = bytes.lock().unwrap().clone();
+        let mut cursor = std::io::Cursor::new(captured);
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), Json::str("a"));
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), Json::str("b"));
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+}

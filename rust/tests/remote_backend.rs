@@ -1,0 +1,347 @@
+//! Remote-backend integration: real `slleval serve-worker` daemons over
+//! loopback TCP (via `CARGO_BIN_EXE_slleval`), hard host kills, hung
+//! connections, and checkpoint resume through spill upload.
+//!
+//! These are the acceptance tests for the remote executor transport:
+//!
+//! - thread and remote backends produce identical metric values, CIs,
+//!   and cost accounting on the same task;
+//! - a hard-killed host (deterministic, via the plan's fault hook →
+//!   `std::process::abort`, which in serve mode takes the whole daemon
+//!   down) costs only its in-flight tasks: *every* executor on the host
+//!   is settled at once (one `host_death`), and the run completes
+//!   through retry + blacklist on the surviving host;
+//! - a connection that stalls without dying (accepts, then never sends
+//!   another frame) hits the heartbeat read timeout instead of wedging
+//!   the poll loop;
+//! - when the only host dies, the run fails — but because remote workers
+//!   upload completed-task spills to the driver as frames, a resume
+//!   against a fresh daemon re-infers only the never-spilled rows (no
+//!   shared filesystem required).
+
+use std::io::BufRead;
+
+use spark_llm_eval::config::{BackendKind, CachePolicy, EvalTask, MetricConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+use spark_llm_eval::sched::plan::WorkerFault;
+
+fn worker_exe() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_slleval"))
+}
+
+fn fast_runner() -> EvalRunner {
+    let mut r = EvalRunner::with_clock(VirtualClock::new());
+    r.service_config = SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: false,
+        ..Default::default()
+    };
+    r.worker_exe = Some(worker_exe());
+    r
+}
+
+/// Deterministic-count task: cache disabled (1 provider call per row),
+/// no speculation (no duplicated work), small batches.
+fn task(executors: usize, backend: BackendKind, hosts: Vec<String>) -> EvalTask {
+    let mut task = EvalTask::default();
+    task.executors = executors;
+    task.backend = backend;
+    task.hosts = hosts;
+    task.inference.batch_size = 5;
+    task.inference.cache_policy = CachePolicy::Disabled;
+    task.scheduler.speculation = false;
+    task.scheduler.adaptive_split = false;
+    task.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("token_f1", "lexical"),
+    ];
+    task
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("slleval-remotebackend-test")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One `slleval serve-worker` daemon on an OS-assigned loopback port.
+/// The address is parsed from the daemon's `listening on <addr>` banner,
+/// so by the time `spawn` returns the listener is accepting.
+struct WorkerDaemon {
+    child: std::process::Child,
+    addr: String,
+}
+
+impl WorkerDaemon {
+    fn spawn() -> WorkerDaemon {
+        let mut child = std::process::Command::new(worker_exe())
+            .args(["serve-worker", "--listen", "127.0.0.1:0"])
+            .stdout(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawning serve-worker daemon");
+        let stdout = child.stdout.take().expect("daemon stdout is piped");
+        let mut line = String::new();
+        std::io::BufReader::new(stdout).read_line(&mut line).expect("reading daemon banner");
+        let addr = line
+            .trim()
+            .strip_prefix("listening on ")
+            .unwrap_or_else(|| panic!("unexpected serve-worker banner: {line:?}"))
+            .to_string();
+        WorkerDaemon { child, addr }
+    }
+}
+
+impl Drop for WorkerDaemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn remote_backend_matches_thread_backend_exactly() {
+    let n = 60;
+    let df = synth::generate_default(n, 81);
+    let (d0, d1) = (WorkerDaemon::spawn(), WorkerDaemon::spawn());
+
+    let thread =
+        fast_runner().evaluate(&df, &task(3, BackendKind::Thread, Vec::new())).unwrap();
+    let remote = fast_runner()
+        .evaluate(&df, &task(3, BackendKind::Remote, vec![d0.addr.clone(), d1.addr.clone()]))
+        .unwrap();
+
+    // Metric identity: values, CIs, per-row scores, n.
+    for name in ["exact_match", "token_f1"] {
+        let (a, b) = (thread.metric(name).unwrap(), remote.metric(name).unwrap());
+        assert_eq!(a.value, b.value, "{name} value");
+        assert_eq!((a.ci.lo, a.ci.hi), (b.ci.lo, b.ci.hi), "{name} CI");
+        assert_eq!(a.n, b.n, "{name} n");
+        assert_eq!(
+            thread.report(name).unwrap().values,
+            remote.report(name).unwrap().values,
+            "{name} per-row values"
+        );
+    }
+    // Cost accounting identity: one deterministic call per row on both
+    // backends, same per-call pricing.
+    assert_eq!(remote.inference.api_calls, n as u64);
+    assert_eq!(thread.inference.api_calls, remote.inference.api_calls);
+    assert!(
+        (thread.inference.total_cost_usd - remote.inference.total_cost_usd).abs() < 1e-9,
+        "cost: thread {} vs remote {}",
+        thread.inference.total_cost_usd,
+        remote.inference.total_cost_usd
+    );
+    assert_eq!(remote.inference.sched.executor_deaths, 0);
+    assert_eq!(remote.inference.sched.host_deaths, 0);
+    assert_eq!(remote.failed_examples, thread.failed_examples);
+}
+
+#[test]
+fn dead_host_settles_all_its_executors_at_once() {
+    let n = 75;
+    let df = synth::generate_default(n, 82);
+
+    // Reference values from the thread backend.
+    let reference =
+        fast_runner().evaluate(&df, &task(4, BackendKind::Thread, Vec::new())).unwrap();
+
+    // 4 executors round-robin over 2 daemons: executors {0, 2} on d0,
+    // {1, 3} on d1. The fault aborts d1's whole process while executor 1
+    // runs its first task, so executor 3's connection dies with it.
+    let (d0, d1) = (WorkerDaemon::spawn(), WorkerDaemon::spawn());
+    let mut runner = fast_runner();
+    runner.worker_fault = Some(WorkerFault { executor_id: 1, kill_after_tasks: 1 });
+    let mut t = task(4, BackendKind::Remote, vec![d0.addr.clone(), d1.addr.clone()]);
+    t.scheduler.tasks_per_executor = 3;
+    let result = runner.evaluate(&df, &t).unwrap();
+
+    let sched = &result.inference.sched;
+    assert_eq!(sched.executor_deaths, 2, "both of the dead host's executors: {sched:?}");
+    assert_eq!(sched.host_deaths, 1, "{sched:?}");
+    for eid in [1, 3] {
+        assert!(
+            sched.blacklisted_executors.contains(&eid),
+            "executor {eid} on the dead host must take no more work: {sched:?}"
+        );
+    }
+    assert!(sched.retries >= 1, "in-flight work must be retried on survivors");
+    // The host kill changes *where* rows ran, never what they evaluate to.
+    assert_eq!(
+        result.report("exact_match").unwrap().values,
+        reference.report("exact_match").unwrap().values
+    );
+    assert_eq!(
+        result.metric("exact_match").unwrap().value,
+        reference.metric("exact_match").unwrap().value
+    );
+}
+
+#[test]
+fn stalled_connection_hits_the_heartbeat_timeout() {
+    use spark_llm_eval::sched::backend::run_plan;
+    use spark_llm_eval::sched::plan::{MetricPlan, PlanEnv, PlanWork, TaskPlan};
+    use spark_llm_eval::sched::remote::RemoteBackend;
+    use spark_llm_eval::sched::wire::{read_frame, write_frame};
+    use spark_llm_eval::sched::SchedulerConfig;
+    use spark_llm_eval::util::json::Json;
+
+    // A host that accepts, handshakes, then goes silent — alive at the
+    // TCP level (no EOF) but sending neither heartbeats nor results.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let silent_host = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().expect("accepting driver connection");
+        let hello = read_frame(&mut stream).expect("reading hello").expect("hello frame");
+        assert_eq!(hello.str_or("type", ""), "hello");
+        write_frame(&mut stream, &Json::obj(vec![("type", Json::str("ready"))])).unwrap();
+        // Swallow whatever the driver sends (task frames, the eventual
+        // shutdown) without ever answering; exit on EOF.
+        let mut buf = [0u8; 1024];
+        use std::io::Read;
+        while let Ok(nread) = stream.read(&mut buf) {
+            if nread == 0 {
+                break;
+            }
+        }
+    });
+
+    let plan = TaskPlan {
+        work: PlanWork::MetricScore(MetricPlan {
+            metric: MetricConfig::new("exact_match", "lexical"),
+            examples: Vec::new(),
+        }),
+        env: PlanEnv::default(),
+        stage: None,
+        fault: None,
+    };
+    let mut backend = RemoteBackend::new(
+        &plan,
+        1,
+        5,
+        vec![addr],
+        std::time::Duration::from_millis(300),
+        None,
+    )
+    .unwrap();
+    let err = run_plan(
+        10,
+        1,
+        &SchedulerConfig::default(),
+        &mut backend,
+        None,
+        Vec::new(),
+        None,
+        None,
+    )
+    .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no live executors"),
+        "a hung socket must become a death, not a wedge: {err:#}"
+    );
+    drop(backend); // shuts the socket down, unblocking the fake host
+    silent_host.join().unwrap();
+}
+
+#[test]
+fn killed_host_resumes_from_uploaded_spills_with_zero_reinference() {
+    let n = 80;
+    let df = synth::generate_default(n, 83);
+
+    // Reference: uninterrupted thread-backend run (row-identity oracle).
+    let reference =
+        fast_runner().evaluate(&df, &task(1, BackendKind::Thread, Vec::new())).unwrap();
+    assert_eq!(reference.inference.api_calls, n as u64);
+
+    // Crashing run: a single remote executor on a single daemon, 4
+    // tasks, the daemon hard-killed during task 2 — with every executor
+    // (and every host) dead, the run must fail.
+    let dir = tmp_dir("kill-resume");
+    let daemon = WorkerDaemon::spawn();
+    let mut t = task(1, BackendKind::Remote, vec![daemon.addr.clone()]);
+    t.scheduler.tasks_per_executor = 4;
+    let mut runner = fast_runner();
+    runner.worker_fault = Some(WorkerFault { executor_id: 0, kill_after_tasks: 2 });
+    runner.attach_checkpoint(&dir, false).unwrap();
+    let err = runner.evaluate(&df, &t).unwrap_err();
+    assert!(format!("{err:#}").contains("no live executors"), "{err:#}");
+    drop(daemon);
+
+    // Resume against a *fresh* daemon (the old one is gone — nothing of
+    // the crashed run survives on the worker side): completed tasks
+    // restore from the spills the worker uploaded to the driver before
+    // dying; only the never-spilled rows are re-inferred.
+    let daemon = WorkerDaemon::spawn();
+    t.hosts = vec![daemon.addr.clone()];
+    let mut runner = fast_runner();
+    runner.attach_checkpoint(&dir, true).unwrap();
+    let resumed = runner.evaluate(&df, &t).unwrap();
+
+    let restored = resumed.inference.sched.restored_rows;
+    assert!(restored > 0, "the killed run must have uploaded completed-task spills");
+    assert!(restored < n, "the killed run must not have finished");
+    assert_eq!(
+        resumed.inference.api_calls,
+        (n - restored) as u64,
+        "zero re-inference of spill-uploaded rows"
+    );
+    assert_eq!(resumed.inference.examples, n);
+
+    // Row-identical results versus the uninterrupted reference.
+    assert_eq!(
+        resumed.report("exact_match").unwrap().values,
+        reference.report("exact_match").unwrap().values
+    );
+    let (a, b) =
+        (reference.metric("exact_match").unwrap(), resumed.metric("exact_match").unwrap());
+    assert_eq!(a.value, b.value);
+    assert_eq!((a.ci.lo, a.ci.hi), (b.ci.lo, b.ci.hi));
+}
+
+#[test]
+fn cli_remote_flags_run_end_to_end() {
+    // The `--backend remote --hosts` CLI path: a real daemon, the real
+    // binary as the driver, and a healthy run reported over loopback.
+    let daemon = WorkerDaemon::spawn();
+    let out_path = tmp_dir("cli-run").join("result.json");
+    std::fs::create_dir_all(out_path.parent().unwrap()).unwrap();
+    let output = std::process::Command::new(worker_exe())
+        .args([
+            "run",
+            "--fast",
+            "--n",
+            "40",
+            "--seed",
+            "84",
+            "--executors",
+            "2",
+            "--backend",
+            "remote",
+            "--hosts",
+            &daemon.addr,
+            "--out",
+        ])
+        .arg(&out_path)
+        .output()
+        .expect("running slleval");
+    assert!(
+        output.status.success(),
+        "slleval run --backend remote failed:\n{}\n{}",
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let result = std::fs::read_to_string(&out_path).unwrap();
+    let json = spark_llm_eval::util::json::Json::parse(&result).unwrap();
+    assert_eq!(json.get("inference").unwrap().usize_or("examples", 0), 40);
+    assert_eq!(
+        json.get("scheduler").unwrap().usize_or("executor_deaths", 99),
+        0,
+        "healthy run reports zero deaths"
+    );
+}
