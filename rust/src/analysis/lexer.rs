@@ -1,0 +1,527 @@
+//! A minimal Rust lexer for the `slleval lint` pass.
+//!
+//! Hand-rolled like everything else in this crate — no syn, no
+//! proc-macro2. It understands exactly as much Rust as the lints need so
+//! that rule patterns match *code* and never text inside strings or
+//! comments: line comments, nested block comments, string literals with
+//! escapes, raw/byte strings with arbitrary `#` fences, raw identifiers,
+//! and the char-literal-vs-lifetime ambiguity. It does not parse;
+//! downstream rules pattern-match on the token stream.
+//!
+//! The lexer also locates `#[cfg(test)]` item spans by brace matching, so
+//! rules can exempt test code without any notion of scopes.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (raw identifiers lose their `r#` prefix).
+    Ident,
+    /// `'a`-style lifetime or loop label (without the quote).
+    Lifetime,
+    /// String or byte-string literal; `text` holds the *decoded* contents.
+    Str,
+    /// Raw (byte) string literal; `text` holds the verbatim contents.
+    RawStr,
+    /// Char or byte literal; `text` holds the raw contents between quotes.
+    Char,
+    /// Numeric literal.
+    Num,
+    /// Punctuation, longest-match (`::`, `=>`, `==`, ... else one char).
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line where the comment starts.
+    pub line: u32,
+    /// Contents after `//` (line) or between `/*` and `*/` (block); a
+    /// `//!` module doc keeps its leading `!`, a `///` doc its third `/`.
+    pub text: String,
+}
+
+#[derive(Debug, Default)]
+pub struct LexedFile {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    /// Inclusive line spans of `#[cfg(test)]` items.
+    test_spans: Vec<(u32, u32)>,
+}
+
+impl LexedFile {
+    /// Whether `line` falls inside a `#[cfg(test)]` item.
+    pub fn in_test_code(&self, line: u32) -> bool {
+        self.test_spans.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+
+    /// The token stream with every `#[cfg(test)]` region removed.
+    pub fn code_tokens(&self) -> Vec<&Tok> {
+        self.tokens.iter().filter(|t| !self.in_test_code(t.line)).collect()
+    }
+}
+
+pub fn lex(src: &str) -> LexedFile {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut tokens: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments (before punctuation so `//` never lexes as two slashes).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment { line, text: chars[start..j].iter().collect() });
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut text = String::new();
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    text.push('\n');
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    text.push_str("/*");
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    if depth > 0 {
+                        text.push_str("*/");
+                    }
+                    j += 2;
+                } else {
+                    text.push(chars[j]);
+                    j += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text });
+            i = j;
+            continue;
+        }
+        if c == '"' {
+            let start_line = line;
+            let (decoded, end, nl) = scan_string(&chars, i + 1);
+            tokens.push(Tok { kind: TokKind::Str, text: decoded, line: start_line });
+            line += nl;
+            i = end;
+            continue;
+        }
+        if c == '\'' {
+            // Lifetime/label: a quote followed by an identifier char that
+            // is not immediately closed (`'a` yes, `'a'` no).
+            if i + 1 < n
+                && (chars[i + 1] == '_' || chars[i + 1].is_ascii_alphabetic())
+                && !(i + 2 < n && chars[i + 2] == '\'')
+            {
+                let start = i + 1;
+                let mut j = start;
+                while j < n && (chars[j] == '_' || chars[j].is_ascii_alphanumeric()) {
+                    j += 1;
+                }
+                tokens.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: chars[start..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            let (text, end) = scan_char(&chars, i + 1);
+            tokens.push(Tok { kind: TokKind::Char, text, line });
+            i = end;
+            continue;
+        }
+        if c == '_' || c.is_ascii_alphabetic() {
+            let start = i;
+            let mut j = i;
+            while j < n && (chars[j] == '_' || chars[j].is_ascii_alphanumeric()) {
+                j += 1;
+            }
+            let word: String = chars[start..j].iter().collect();
+            // Raw / byte string prefixes: r"…", r#"…"#, br"…", b"…".
+            if (word == "r" || word == "br") && j < n && (chars[j] == '"' || chars[j] == '#') {
+                let mut hashes = 0usize;
+                let mut k = j;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    let start_line = line;
+                    let (text, end, nl) = scan_raw_string(&chars, k + 1, hashes);
+                    tokens.push(Tok { kind: TokKind::RawStr, text, line: start_line });
+                    line += nl;
+                    i = end;
+                    continue;
+                }
+                if word == "r"
+                    && hashes == 1
+                    && k < n
+                    && (chars[k] == '_' || chars[k].is_ascii_alphabetic())
+                {
+                    // Raw identifier: r#type — lex as the bare identifier.
+                    let mut m = k;
+                    while m < n && (chars[m] == '_' || chars[m].is_ascii_alphanumeric()) {
+                        m += 1;
+                    }
+                    tokens.push(Tok {
+                        kind: TokKind::Ident,
+                        text: chars[k..m].iter().collect(),
+                        line,
+                    });
+                    i = m;
+                    continue;
+                }
+                // Plain `r`/`br` identifier followed by `#`: fall through.
+            }
+            if word == "b" && j < n && chars[j] == '"' {
+                let start_line = line;
+                let (decoded, end, nl) = scan_string(&chars, j + 1);
+                tokens.push(Tok { kind: TokKind::Str, text: decoded, line: start_line });
+                line += nl;
+                i = end;
+                continue;
+            }
+            if word == "b" && j < n && chars[j] == '\'' {
+                let (text, end) = scan_char(&chars, j + 1);
+                tokens.push(Tok { kind: TokKind::Char, text, line });
+                i = end;
+                continue;
+            }
+            tokens.push(Tok { kind: TokKind::Ident, text: word, line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < n {
+                let d = chars[j];
+                if d == '_' || d.is_ascii_alphanumeric() {
+                    j += 1;
+                } else if d == '.'
+                    && j + 1 < n
+                    && chars[j + 1].is_ascii_digit()
+                    && !(j > start && chars[j - 1] == '.')
+                {
+                    j += 1; // fractional part: 1.25 but not 1..5
+                } else if (d == '+' || d == '-')
+                    && j > start
+                    && (chars[j - 1] == 'e' || chars[j - 1] == 'E')
+                    && j + 1 < n
+                    && chars[j + 1].is_ascii_digit()
+                {
+                    j += 1; // signed exponent: 1e-9
+                } else {
+                    break;
+                }
+            }
+            tokens.push(Tok { kind: TokKind::Num, text: chars[start..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        // Punctuation, longest match first; the multi-char set is only
+        // what rule patterns rely on plus the operators that would
+        // otherwise mis-split (`/=` must not look like a comment start).
+        let two: String = chars[i..(i + 2).min(n)].iter().collect();
+        const PUNCT2: [&str; 21] = [
+            "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "..", "+=", "-=", "*=", "/=",
+            "%=", "^=", "&=", "|=", "<<", ">>", "##",
+        ];
+        if two.chars().count() == 2 && PUNCT2.contains(&two.as_str()) {
+            // ..= and shift-assigns extend to three chars.
+            let three: String = chars[i..(i + 3).min(n)].iter().collect();
+            if three == "..=" || three == "<<=" || three == ">>=" {
+                tokens.push(Tok { kind: TokKind::Punct, text: three, line });
+                i += 3;
+                continue;
+            }
+            tokens.push(Tok { kind: TokKind::Punct, text: two, line });
+            i += 2;
+            continue;
+        }
+        tokens.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+
+    let test_spans = test_spans(&tokens);
+    LexedFile { tokens, comments, test_spans }
+}
+
+/// Scan a (byte) string body starting after the opening quote. Returns
+/// the decoded contents, the index after the closing quote, and the
+/// number of newlines consumed.
+fn scan_string(chars: &[char], mut i: usize) -> (String, usize, u32) {
+    let n = chars.len();
+    let mut out = String::new();
+    let mut nl = 0u32;
+    while i < n {
+        let c = chars[i];
+        if c == '\\' && i + 1 < n {
+            let e = chars[i + 1];
+            match e {
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                'r' => out.push('\r'),
+                '0' => out.push('\0'),
+                '\\' => out.push('\\'),
+                '"' => out.push('"'),
+                '\'' => out.push('\''),
+                'u' => {
+                    if i + 2 < n && chars[i + 2] == '{' {
+                        let mut j = i + 3;
+                        let mut hex = String::new();
+                        while j < n && chars[j] != '}' {
+                            hex.push(chars[j]);
+                            j += 1;
+                        }
+                        if let Some(ch) =
+                            u32::from_str_radix(&hex, 16).ok().and_then(char::from_u32)
+                        {
+                            out.push(ch);
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                '\n' => nl += 1, // line continuation: swallow the newline
+                _ => {
+                    out.push('\\');
+                    out.push(e);
+                }
+            }
+            i += 2;
+            continue;
+        }
+        if c == '"' {
+            return (out, i + 1, nl);
+        }
+        if c == '\n' {
+            nl += 1;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, n, nl) // unterminated: tolerate at EOF
+}
+
+/// Scan a raw string body (after the opening quote) fenced by `hashes`
+/// `#` characters. Contents are verbatim — no escapes.
+fn scan_raw_string(chars: &[char], mut i: usize, hashes: usize) -> (String, usize, u32) {
+    let n = chars.len();
+    let mut out = String::new();
+    let mut nl = 0u32;
+    while i < n {
+        if chars[i] == '"' {
+            let mut k = 0usize;
+            while k < hashes && i + 1 + k < n && chars[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return (out, i + 1 + hashes, nl);
+            }
+        }
+        if chars[i] == '\n' {
+            nl += 1;
+        }
+        out.push(chars[i]);
+        i += 1;
+    }
+    (out, n, nl)
+}
+
+/// Scan a char/byte literal body starting after the opening quote.
+fn scan_char(chars: &[char], mut i: usize) -> (String, usize) {
+    let n = chars.len();
+    let mut out = String::new();
+    while i < n {
+        let c = chars[i];
+        if c == '\\' && i + 1 < n {
+            out.push(c);
+            out.push(chars[i + 1]);
+            i += 2;
+            continue;
+        }
+        if c == '\'' {
+            return (out, i + 1);
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, n)
+}
+
+fn is_p(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+fn is_id(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+/// Find the inclusive line span of every `#[cfg(test)]` item: the
+/// attribute, any further attributes, then either a `;`-terminated item
+/// or a brace-matched body.
+fn test_spans(tokens: &[Tok]) -> Vec<(u32, u32)> {
+    let n = tokens.len();
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let attr = i + 6 < n
+            && is_p(&tokens[i], "#")
+            && is_p(&tokens[i + 1], "[")
+            && is_id(&tokens[i + 2], "cfg")
+            && is_p(&tokens[i + 3], "(")
+            && is_id(&tokens[i + 4], "test")
+            && is_p(&tokens[i + 5], ")")
+            && is_p(&tokens[i + 6], "]");
+        if !attr {
+            i += 1;
+            continue;
+        }
+        let attr_line = tokens[i].line;
+        let mut j = i + 7;
+        // Skip any further attributes on the same item.
+        while j + 1 < n && is_p(&tokens[j], "#") && is_p(&tokens[j + 1], "[") {
+            let mut depth = 0usize;
+            let mut k = j + 1;
+            while k < n {
+                if is_p(&tokens[k], "[") {
+                    depth += 1;
+                } else if is_p(&tokens[k], "]") {
+                    depth -= 1;
+                    if depth == 0 {
+                        k += 1;
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            j = k;
+        }
+        // The item: everything up to a top-level `;` or a matched body.
+        let mut end_line = attr_line;
+        while j < n {
+            if is_p(&tokens[j], ";") {
+                end_line = tokens[j].line;
+                j += 1;
+                break;
+            }
+            if is_p(&tokens[j], "{") {
+                let mut depth = 0usize;
+                while j < n {
+                    if is_p(&tokens[j], "{") {
+                        depth += 1;
+                    } else if is_p(&tokens[j], "}") {
+                        depth -= 1;
+                        if depth == 0 {
+                            end_line = tokens[j].line;
+                            j += 1;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                break;
+            }
+            j += 1;
+        }
+        spans.push((attr_line, end_line.max(attr_line)));
+        i = j.max(i + 1);
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_not_tokens() {
+        let src = r##"
+// Instant::now in a line comment
+/* Instant::now in /* a nested */ block comment */
+let s = "Instant::now() in a string";
+let r = r#"Instant::now() in a raw string"#;
+let x = real_ident;
+"##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"Instant".to_string()), "{ids:?}");
+        assert!(ids.contains(&"real_ident".to_string()));
+        let f = lex(src);
+        assert_eq!(f.comments.len(), 2);
+        assert!(f.comments[1].text.contains("/* a nested */"));
+    }
+
+    #[test]
+    fn decoded_strings_and_raw_fences() {
+        let f = lex("let s = \"a\\\"b\\n\"; let r = r##\"x\"#y\"##;");
+        let strs: Vec<&Tok> =
+            f.tokens.iter().filter(|t| matches!(t.kind, TokKind::Str | TokKind::RawStr)).collect();
+        assert_eq!(strs[0].text, "a\"b\n");
+        assert_eq!(strs[1].text, "x\"#y");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let f = lex("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        let lifetimes: Vec<&Tok> = f.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        let chars: Vec<&Tok> = f.tokens.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(chars.len(), 2);
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_the_mod_body() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn live2() {}\n";
+        let f = lex(src);
+        assert!(!f.in_test_code(1));
+        assert!(f.in_test_code(2));
+        assert!(f.in_test_code(4));
+        assert!(!f.in_test_code(6));
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_numbers_aligned() {
+        let src = "let a = \"one\ntwo\nthree\";\nlet after = 1;\n";
+        let f = lex(src);
+        let after = f.tokens.iter().find(|t| is_id(t, "after")).expect("after");
+        assert_eq!(after.line, 4);
+    }
+}

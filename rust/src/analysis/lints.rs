@@ -1,0 +1,453 @@
+//! The lint rules: project invariants checked over the lexed token
+//! streams. Each rule is a pure function from source files to
+//! diagnostics; suppression (inline `lint:allow`, baseline) is applied by
+//! the driver in [`super`], never here.
+
+use super::lexer::{Tok, TokKind};
+use super::{Diagnostic, SourceFile};
+use std::collections::BTreeMap;
+
+/// Rule names, also the only values `lint:allow(...)` accepts.
+pub const RULES: [&str; 4] = ["determinism", "panic-safety", "wire-protocol", "config-doc"];
+
+fn diag(rule: &str, file: &str, line: u32, subject: &str, message: &str) -> Diagnostic {
+    Diagnostic {
+        rule: rule.to_string(),
+        file: file.to_string(),
+        line,
+        subject: subject.to_string(),
+        message: message.to_string(),
+    }
+}
+
+fn p_at(toks: &[&Tok], i: usize, s: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == s)
+}
+
+fn id_at(toks: &[&Tok], i: usize, s: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Ident && t.text == s)
+}
+
+fn str_at(toks: &[&Tok], i: usize, s: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Str && t.text == s)
+}
+
+// ---------------------------------------------------------------------------
+// Rule: determinism
+// ---------------------------------------------------------------------------
+
+/// Files that *are* the wall-clock abstraction (or deliberately measure
+/// wall time) and are exempt from the `Instant::now`/`SystemTime::now`
+/// check.
+const CLOCK_EXEMPT: [&str; 2] = ["rust/src/ratelimit/mod.rs", "rust/src/util/bench.rs"];
+
+/// Modules where hash-iteration order can reach fingerprints, task
+/// ordering, or serialized output; `HashMap`/`HashSet` are banned here in
+/// favour of `BTreeMap`/`BTreeSet` (or an explicit sort).
+const HASH_SCOPED_PREFIXES: [&str; 8] = [
+    "rust/src/sched/",
+    "rust/src/coordinator/",
+    "rust/src/checkpoint/",
+    "rust/src/cache/",
+    "rust/src/config/",
+    "rust/src/report/",
+    "rust/src/tracking/",
+    "rust/src/analysis/",
+];
+
+pub fn determinism(file: &SourceFile) -> Vec<Diagnostic> {
+    let rel = file.rel.as_str();
+    if !rel.starts_with("rust/src/") {
+        return Vec::new();
+    }
+    let clock_exempt = CLOCK_EXEMPT.contains(&rel);
+    let hash_scoped = HASH_SCOPED_PREFIXES.iter().any(|p| rel.starts_with(p))
+        || rel == "rust/src/util/json.rs";
+    let rng_exempt = rel == "rust/src/util/rng.rs";
+    let toks = file.lexed.code_tokens();
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let name = t.text.as_str();
+        if !clock_exempt
+            && (name == "Instant" || name == "SystemTime")
+            && p_at(&toks, i + 1, "::")
+            && id_at(&toks, i + 2, "now")
+        {
+            out.push(diag(
+                "determinism",
+                rel,
+                t.line,
+                &format!("{name}::now"),
+                "wall-clock read outside the Clock abstraction; thread a `ratelimit::Clock`, or lint:allow where wall time is intended (telemetry, I/O deadlines)",
+            ));
+        }
+        if hash_scoped && (name == "HashMap" || name == "HashSet") {
+            out.push(diag(
+                "determinism",
+                rel,
+                t.line,
+                name,
+                "hash iteration order is nondeterministic in a determinism-critical module; use BTreeMap/BTreeSet or sort before anything ordered reaches fingerprints, task order, or serialized output",
+            ));
+        }
+        if !rng_exempt && matches!(name, "thread_rng" | "from_entropy" | "OsRng") {
+            out.push(diag(
+                "determinism",
+                rel,
+                t.line,
+                name,
+                "unseeded randomness outside util/rng; derive every Rng from the task seed so runs replay bit-identically",
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: panic-safety
+// ---------------------------------------------------------------------------
+
+/// Executor-side task code: a panic here aborts a pool (or a worker
+/// process mid-task) instead of surfacing as a retryable task failure.
+const PANIC_SCOPED: [&str; 4] = [
+    "rust/src/coordinator/plan_exec.rs",
+    "rust/src/coordinator/worker.rs",
+    "rust/src/providers/pipeline.rs",
+    "rust/src/sched/backend.rs",
+];
+
+pub fn panic_safety(file: &SourceFile) -> Vec<Diagnostic> {
+    let rel = file.rel.as_str();
+    if !PANIC_SCOPED.contains(&rel) {
+        return Vec::new();
+    }
+    let toks = file.lexed.code_tokens();
+    let mut out = Vec::new();
+    const MSG: &str = "executor-side task code must surface failures as retryable task errors, not abort the pool; return an Err (recover poisoned locks with `.unwrap_or_else(|p| p.into_inner())`)";
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Punct
+            && t.text == "."
+            && (id_at(&toks, i + 1, "unwrap") || id_at(&toks, i + 1, "expect"))
+            && p_at(&toks, i + 2, "(")
+        {
+            let callee = &toks[i + 1];
+            out.push(diag("panic-safety", rel, callee.line, &format!(".{}()", callee.text), MSG));
+        }
+        if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+            && p_at(&toks, i + 1, "!")
+        {
+            out.push(diag("panic-safety", rel, t.line, &format!("{}!", t.text), MSG));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: wire-protocol
+// ---------------------------------------------------------------------------
+
+/// Every file that emits or dispatches executor protocol frames.
+const WIRE_FILES: [&str; 5] = [
+    "rust/src/sched/wire.rs",
+    "rust/src/sched/backend.rs",
+    "rust/src/sched/remote.rs",
+    "rust/src/coordinator/worker.rs",
+    "rust/src/coordinator/plan_exec.rs",
+];
+
+/// The file whose module doc comment is the protocol's documentation of
+/// record.
+const WIRE_DOC_FILE: &str = "rust/src/sched/backend.rs";
+
+/// Pull every `"type":"<name>"` frame-type mention out of a flat string
+/// (a format-spliced frame literal, or one protocol doc line).
+fn splice_frame_types(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let needle = "\"type\":\"";
+    let mut rest = s;
+    while let Some(pos) = rest.find(needle) {
+        let tail = &rest[pos + needle.len()..];
+        let name: String = tail
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !name.is_empty() {
+            out.push(name);
+        }
+        rest = tail;
+    }
+    out
+}
+
+/// Frame types this file emits (as `("type", Json::str("…"))` pairs or
+/// format-spliced string literals) and the ones it handles (as match arms
+/// or equality tests on `.str_or("type", …)`).
+fn wire_sets(file: &SourceFile) -> (BTreeMap<String, u32>, BTreeMap<String, u32>) {
+    let toks = file.lexed.code_tokens();
+    let mut emitted: BTreeMap<String, u32> = BTreeMap::new();
+    let mut handled: BTreeMap<String, u32> = BTreeMap::new();
+    for (i, t) in toks.iter().enumerate() {
+        // Emission, structured: ("type", Json::str("task"))
+        if t.kind == TokKind::Str
+            && t.text == "type"
+            && p_at(&toks, i + 1, ",")
+            && id_at(&toks, i + 2, "Json")
+            && p_at(&toks, i + 3, "::")
+            && id_at(&toks, i + 4, "str")
+            && p_at(&toks, i + 5, "(")
+        {
+            // A non-literal argument (e.g. a metric type field) is not a
+            // frame type; only a string literal counts.
+            if let Some(f) = toks.get(i + 6).filter(|f| f.kind == TokKind::Str) {
+                emitted.entry(f.text.clone()).or_insert(f.line);
+            }
+        }
+        // Emission, spliced: any string literal containing "type":"…"
+        if matches!(t.kind, TokKind::Str | TokKind::RawStr) {
+            for name in splice_frame_types(&t.text) {
+                emitted.entry(name).or_insert(t.line);
+            }
+        }
+        // Dispatch: .str_or("type", …)
+        if t.kind == TokKind::Punct
+            && t.text == "."
+            && id_at(&toks, i + 1, "str_or")
+            && p_at(&toks, i + 2, "(")
+            && str_at(&toks, i + 3, "type")
+        {
+            let back = i.saturating_sub(12);
+            // match <expr>.str_or("type", …) { "a" | "b" => …, … }
+            if toks[back..i].iter().any(|t| t.kind == TokKind::Ident && t.text == "match") {
+                let mut j = i + 4;
+                while j < toks.len() && !p_at(&toks, j, "{") {
+                    j += 1;
+                }
+                let mut depth = 0usize;
+                while j < toks.len() {
+                    if p_at(&toks, j, "{") {
+                        depth += 1;
+                    } else if p_at(&toks, j, "}") {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    } else if depth == 1
+                        && toks[j].kind == TokKind::Str
+                        && (p_at(&toks, j + 1, "=>") || p_at(&toks, j + 1, "|"))
+                    {
+                        handled.entry(toks[j].text.clone()).or_insert(toks[j].line);
+                    }
+                    j += 1;
+                }
+            }
+            // let ty = <expr>.str_or("type", …); … ty == "hello" …
+            let mut k = back;
+            while k + 2 < i {
+                if id_at(&toks, k, "let")
+                    && toks[k + 1].kind == TokKind::Ident
+                    && p_at(&toks, k + 2, "=")
+                {
+                    let bind = toks[k + 1].text.clone();
+                    for (m, tm) in toks.iter().enumerate() {
+                        if tm.kind == TokKind::Ident && tm.text == bind && p_at(&toks, m + 1, "==")
+                        {
+                            if let Some(s) = toks.get(m + 2).filter(|s| s.kind == TokKind::Str) {
+                                handled.entry(s.text.clone()).or_insert(s.line);
+                            }
+                        }
+                        if tm.kind == TokKind::Str
+                            && p_at(&toks, m + 1, "==")
+                            && id_at(&toks, m + 2, &bind)
+                        {
+                            handled.entry(tm.text.clone()).or_insert(tm.line);
+                        }
+                    }
+                    break;
+                }
+                k += 1;
+            }
+        }
+    }
+    (emitted, handled)
+}
+
+pub fn wire_protocol(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut emitted: BTreeMap<String, (String, u32)> = BTreeMap::new();
+    let mut handled: BTreeMap<String, (String, u32)> = BTreeMap::new();
+    let mut doc: BTreeMap<String, u32> = BTreeMap::new();
+    let mut doc_file_seen = false;
+    for f in files {
+        if !WIRE_FILES.contains(&f.rel.as_str()) {
+            continue;
+        }
+        let (e, h) = wire_sets(f);
+        for (name, line) in e {
+            emitted.entry(name).or_insert((f.rel.clone(), line));
+        }
+        for (name, line) in h {
+            handled.entry(name).or_insert((f.rel.clone(), line));
+        }
+        if f.rel == WIRE_DOC_FILE {
+            doc_file_seen = true;
+            // The protocol documentation of record: `//!` doc lines that
+            // mention `{"type":"…"}` frames.
+            for c in &f.lexed.comments {
+                if !c.text.starts_with('!') {
+                    continue;
+                }
+                for (off, line_text) in c.text.split('\n').enumerate() {
+                    for name in splice_frame_types(line_text) {
+                        doc.entry(name).or_insert(c.line + off as u32);
+                    }
+                }
+            }
+        }
+    }
+    // Without the doc file in the set (e.g. a fixture run) there is no
+    // documentation of record; emitted-vs-handled is still validated.
+    let mut out = Vec::new();
+    for (name, (file, line)) in &emitted {
+        if !handled.contains_key(name) {
+            out.push(diag(
+                "wire-protocol",
+                file,
+                *line,
+                name,
+                "frame type is emitted but no peer dispatches on it; add a handler arm or remove the emission",
+            ));
+        }
+        if doc_file_seen && !doc.contains_key(name) {
+            out.push(diag(
+                "wire-protocol",
+                file,
+                *line,
+                name,
+                "frame type is missing from the protocol doc comment in rust/src/sched/backend.rs",
+            ));
+        }
+    }
+    for (name, (file, line)) in &handled {
+        if !emitted.contains_key(name) {
+            out.push(diag(
+                "wire-protocol",
+                file,
+                *line,
+                name,
+                "frame type is handled but nothing emits it; dead protocol arm or a missing emitter",
+            ));
+            if doc_file_seen && !doc.contains_key(name) {
+                out.push(diag(
+                    "wire-protocol",
+                    file,
+                    *line,
+                    name,
+                    "frame type is missing from the protocol doc comment in rust/src/sched/backend.rs",
+                ));
+            }
+        }
+    }
+    for (name, line) in &doc {
+        if !emitted.contains_key(name) && !handled.contains_key(name) {
+            out.push(diag(
+                "wire-protocol",
+                WIRE_DOC_FILE,
+                *line,
+                name,
+                "documented frame type never appears in code; prune the doc comment or restore the frame",
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: config-doc
+// ---------------------------------------------------------------------------
+
+const CONFIG_FILE: &str = "rust/src/config/mod.rs";
+
+/// JSON accessor methods whose string argument names an EvalTask field.
+const ACCESSORS: [&str; 6] = ["str_or", "f64_or", "usize_or", "bool_or", "get", "opt"];
+
+/// Does `word` appear in `docs` delimited by non-identifier characters?
+fn word_in(docs: &str, word: &str) -> bool {
+    let bytes = docs.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = docs[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || {
+            let b = bytes[at - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || {
+            let b = bytes[end];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+pub fn config_doc(files: &[SourceFile], docs: &str) -> Vec<Diagnostic> {
+    let Some(cfg) = files.iter().find(|f| f.rel == CONFIG_FILE) else {
+        return Vec::new();
+    };
+    let toks = cfg.lexed.code_tokens();
+    let mut seen: BTreeMap<String, u32> = BTreeMap::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Punct
+            && t.text == "."
+            && toks
+                .get(i + 1)
+                .is_some_and(|a| a.kind == TokKind::Ident && ACCESSORS.contains(&a.text.as_str()))
+            && p_at(&toks, i + 2, "(")
+        {
+            if let Some(field) =
+                toks.get(i + 3).filter(|f| f.kind == TokKind::Str && !f.text.is_empty())
+            {
+                seen.entry(field.text.clone()).or_insert(field.line);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (field, line) in &seen {
+        if !word_in(docs, field) {
+            out.push(diag(
+                "config-doc",
+                CONFIG_FILE,
+                *line,
+                field,
+                "EvalTask JSON field is parsed here but never mentioned in DESIGN.md or README.md; document it (the field reference table in DESIGN.md is the usual home)",
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splice_extraction_finds_every_frame_in_a_line() {
+        let got = splice_frame_types(r#"{"type":"ready"} | {"type":"init_error","error":"..."}"#);
+        assert_eq!(got, vec!["ready".to_string(), "init_error".to_string()]);
+        assert!(splice_frame_types("no frames here").is_empty());
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        assert!(word_in("the `seed` field", "seed"));
+        assert!(word_in("alpha|beta", "alpha"));
+        assert!(!word_in("reseeded", "seed"));
+        assert!(!word_in("seed_value only", "seed"));
+    }
+}

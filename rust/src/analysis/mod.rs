@@ -1,0 +1,445 @@
+//! `slleval lint` — a dependency-free static analysis pass over this
+//! repository's own sources, enforcing the project invariants that make
+//! the statistical claims trustworthy: determinism of scheduled paths,
+//! panic-safety of executor-side code, agreement of the executor wire
+//! protocol (doc ⇔ emitters ⇔ handlers), and EvalTask-config/doc sync.
+//!
+//! The pass runs in three places with identical results: the
+//! `slleval lint` subcommand, the `cargo test -q` tier-1 gate
+//! (`rust/tests/lint_gate.rs`), and CI. Rules live in [`lints`], the
+//! hand-rolled token stream they match over in [`lexer`].
+//!
+//! Suppression is deliberate and always justified:
+//! - inline: `// lint:allow(<rule>): <reason>` on the offending line or
+//!   the line above — a missing reason is itself a violation. The allow
+//!   must be the comment's own content (a dedicated comment); prose that
+//!   merely *mentions* `lint:allow(...)` mid-sentence is ignored;
+//! - baseline: a checked-in JSON array of `{rule, file, subject, reason}`
+//!   entries (default `rust/lint-baseline.json`) for triaged legacy debt.
+//!   Entries that no longer match any violation are *stale* and fail the
+//!   lint, so the tree only ever ratchets cleaner.
+
+pub mod lexer;
+pub mod lints;
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub use lints::RULES;
+
+/// One lint finding, before suppression.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rule: String,
+    /// Repo-relative path with forward slashes (`rust/src/...`).
+    pub file: String,
+    pub line: u32,
+    /// The offending identifier / frame type / config field — also the
+    /// key baseline entries match on.
+    pub subject: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}: {}", self.file, self.line, self.rule, self.subject, self.message)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rule", Json::str(&self.rule)),
+            ("file", Json::str(&self.file)),
+            ("line", Json::num(self.line as f64)),
+            ("subject", Json::str(&self.subject)),
+            ("message", Json::str(&self.message)),
+        ])
+    }
+}
+
+/// One lexed input file plus its repo-relative path; rules scope
+/// themselves by `rel`.
+pub struct SourceFile {
+    pub rel: String,
+    pub lexed: lexer::LexedFile,
+}
+
+/// A checked-in suppression with a written justification.
+#[derive(Debug, Clone)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub file: String,
+    pub subject: String,
+    pub reason: String,
+}
+
+/// The result of one lint pass.
+pub struct LintOutcome {
+    /// Unsuppressed findings — non-empty means the gate fails.
+    pub violations: Vec<Diagnostic>,
+    /// Findings silenced by an inline allow or a baseline entry, paired
+    /// with the written justification.
+    pub suppressed: Vec<(Diagnostic, String)>,
+    pub files_scanned: usize,
+}
+
+impl LintOutcome {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("clean", Json::Bool(self.clean())),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("violations", Json::arr(self.violations.iter().map(|d| d.to_json()).collect())),
+            (
+                "suppressed",
+                Json::arr(
+                    self.suppressed
+                        .iter()
+                        .map(|(d, reason)| {
+                            let mut j = d.to_json();
+                            if let Json::Obj(m) = &mut j {
+                                m.insert("reason".to_string(), Json::str(reason));
+                            }
+                            j
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// An inline `// lint:allow(rule): reason` comment.
+struct InlineAllow {
+    file: String,
+    line: u32,
+    rule: String,
+    reason: String,
+    used: bool,
+}
+
+/// Parse every inline allow out of a file's comments. Malformed allows
+/// (unknown rule, missing reason) are reported as violations directly.
+fn collect_allows(file: &SourceFile, diags: &mut Vec<Diagnostic>) -> Vec<InlineAllow> {
+    const MARK: &str = "lint:allow(";
+    let mut out = Vec::new();
+    for c in &file.lexed.comments {
+        for (off, line_text) in c.text.split('\n').enumerate() {
+            let line = c.line + off as u32;
+            // Only dedicated allow comments count: after stripping the
+            // doc-marker/whitespace prefix, the line must *be* the
+            // suppression. Prose that merely mentions `lint:allow(...)`
+            // (like this module's own docs) stays prose.
+            let lt = line_text.trim_start_matches(|c: char| {
+                c == '/' || c == '!' || c == '*' || c.is_whitespace()
+            });
+            if !lt.starts_with(MARK) {
+                continue;
+            }
+            let tail = &lt[MARK.len()..];
+            let Some(close) = tail.find(')') else {
+                diags.push(Diagnostic {
+                    rule: "lint-allow".to_string(),
+                    file: file.rel.clone(),
+                    line,
+                    subject: "lint:allow".to_string(),
+                    message: "malformed suppression; expected `lint:allow(<rule>): <reason>`"
+                        .to_string(),
+                });
+                continue;
+            };
+            let rule = tail[..close].trim().to_string();
+            let rest = tail[close + 1..].trim_start();
+            let reason = rest.strip_prefix(':').map(|r| r.trim().to_string()).unwrap_or_default();
+            if !RULES.contains(&rule.as_str()) {
+                diags.push(Diagnostic {
+                    rule: "lint-allow".to_string(),
+                    file: file.rel.clone(),
+                    line,
+                    subject: rule.clone(),
+                    message: format!("unknown lint rule in suppression (known: {})", RULES.join(", ")),
+                });
+                continue;
+            }
+            if reason.is_empty() {
+                diags.push(Diagnostic {
+                    rule: "lint-allow".to_string(),
+                    file: file.rel.clone(),
+                    line,
+                    subject: rule.clone(),
+                    message: "suppression without a justification; write `lint:allow(rule): <why this is fine>`".to_string(),
+                });
+                continue;
+            }
+            out.push(InlineAllow { file: file.rel.clone(), line, rule, reason, used: false });
+        }
+    }
+    out
+}
+
+/// Run every rule over already-lexed sources and apply suppression.
+/// `docs` is the concatenated DESIGN.md + README.md text (for the
+/// config-doc rule); `baseline` the parsed baseline entries.
+pub fn lint_sources(
+    files: &[SourceFile],
+    docs: &str,
+    baseline: &[BaselineEntry],
+) -> LintOutcome {
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    let mut violations: Vec<Diagnostic> = Vec::new();
+    let mut allows: Vec<InlineAllow> = Vec::new();
+    for f in files {
+        allows.extend(collect_allows(f, &mut violations));
+        raw.extend(lints::determinism(f));
+        raw.extend(lints::panic_safety(f));
+    }
+    raw.extend(lints::wire_protocol(files));
+    raw.extend(lints::config_doc(files, docs));
+
+    let mut suppressed: Vec<(Diagnostic, String)> = Vec::new();
+    let mut baseline_used = vec![false; baseline.len()];
+    'next: for d in raw {
+        for a in allows.iter_mut() {
+            if a.rule == d.rule && a.file == d.file && (a.line == d.line || a.line + 1 == d.line) {
+                a.used = true;
+                suppressed.push((d, a.reason.clone()));
+                continue 'next;
+            }
+        }
+        for (k, b) in baseline.iter().enumerate() {
+            if b.rule == d.rule && b.file == d.file && b.subject == d.subject {
+                baseline_used[k] = true;
+                if b.reason.trim().is_empty() {
+                    violations.push(Diagnostic {
+                        rule: "baseline".to_string(),
+                        file: d.file.clone(),
+                        line: d.line,
+                        subject: d.subject.clone(),
+                        message: "baseline entry matches this violation but carries no justification; add a `reason`".to_string(),
+                    });
+                } else {
+                    suppressed.push((d, b.reason.clone()));
+                }
+                continue 'next;
+            }
+        }
+        violations.push(d);
+    }
+    for a in &allows {
+        if !a.used {
+            violations.push(Diagnostic {
+                rule: "unused-allow".to_string(),
+                file: a.file.clone(),
+                line: a.line,
+                subject: a.rule.clone(),
+                message: "lint:allow matches no violation on this or the next line; remove the stale suppression".to_string(),
+            });
+        }
+    }
+    for (k, b) in baseline.iter().enumerate() {
+        if !baseline_used[k] {
+            violations.push(Diagnostic {
+                rule: "baseline".to_string(),
+                file: b.file.clone(),
+                line: 0,
+                subject: b.subject.clone(),
+                message: format!(
+                    "stale baseline entry (rule {}): it matches no current violation; delete it so the tree ratchets",
+                    b.rule
+                ),
+            });
+        }
+    }
+    violations.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule, &a.subject).cmp(&(&b.file, b.line, &b.rule, &b.subject))
+    });
+    LintOutcome { violations, suppressed, files_scanned: files.len() }
+}
+
+/// Parse a baseline file: a JSON array of
+/// `{"rule": "...", "file": "...", "subject": "...", "reason": "..."}`.
+pub fn parse_baseline(text: &str) -> Result<Vec<BaselineEntry>> {
+    let v = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let arr = v.as_arr().map_err(|e| anyhow::anyhow!("baseline must be a JSON array: {e}"))?;
+    let mut out = Vec::new();
+    for (i, entry) in arr.iter().enumerate() {
+        let rule = entry.str_or("rule", "");
+        let file = entry.str_or("file", "");
+        let subject = entry.str_or("subject", "");
+        if rule.is_empty() || file.is_empty() || subject.is_empty() {
+            bail!("baseline entry {i} needs non-empty rule, file, and subject");
+        }
+        out.push(BaselineEntry {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            subject: subject.to_string(),
+            reason: entry.str_or("reason", "").to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// Default baseline location, relative to the repo root.
+pub const DEFAULT_BASELINE: &str = "rust/lint-baseline.json";
+
+/// Walk `rust/src`, `rust/tests`, and `rust/benches` under `root`, lex
+/// every `.rs` file, and run the full pass. `baseline_path` overrides the
+/// default `rust/lint-baseline.json` (which is optional; an explicit path
+/// must exist).
+pub fn run(root: &Path, baseline_path: Option<&Path>) -> Result<LintOutcome> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        collect_rs(&root.join("rust").join(sub), &mut paths)?;
+    }
+    paths.sort();
+    let mut files = Vec::new();
+    for p in &paths {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(SourceFile { rel, lexed: lexer::lex(&text) });
+    }
+    let mut docs = String::new();
+    for d in ["DESIGN.md", "README.md"] {
+        if let Ok(t) = std::fs::read_to_string(root.join(d)) {
+            docs.push_str(&t);
+            docs.push('\n');
+        }
+    }
+    let baseline = match baseline_path {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading baseline {}", p.display()))?;
+            parse_baseline(&text).with_context(|| format!("parsing baseline {}", p.display()))?
+        }
+        None => {
+            let p = root.join(DEFAULT_BASELINE);
+            match std::fs::read_to_string(&p) {
+                Ok(text) => parse_baseline(&text)
+                    .with_context(|| format!("parsing baseline {}", p.display()))?,
+                Err(_) => Vec::new(),
+            }
+        }
+    };
+    Ok(lint_sources(&files, &docs, &baseline))
+}
+
+/// Recursively collect `.rs` files, skipping `fixtures` (lint test data
+/// is deliberately violating), `vendor`, and `target` directories.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()), // optional dir (e.g. no benches/)
+    };
+    for entry in entries {
+        let entry = entry.with_context(|| format!("listing {}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if matches!(name.as_ref(), "fixtures" | "vendor" | "target") {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Locate the repo root (the directory containing `rust/src/lib.rs`) by
+/// walking up from the current directory, so the subcommand works from
+/// the repo root, from `rust/`, or anywhere below.
+pub fn find_repo_root() -> Result<PathBuf> {
+    let mut dir = std::env::current_dir().context("resolving current directory")?;
+    loop {
+        if dir.join("rust").join("src").join("lib.rs").is_file() {
+            return Ok(dir);
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => bail!("could not find the repo root (a directory containing rust/src/lib.rs) above the current directory"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src_file(rel: &str, text: &str) -> SourceFile {
+        SourceFile { rel: rel.to_string(), lexed: lexer::lex(text) }
+    }
+
+    #[test]
+    fn inline_allow_suppresses_same_line_and_next_line() {
+        let text = "\
+fn f() {
+    // lint:allow(determinism): telemetry is wall-clock by design
+    let t = Instant::now();
+    let u = Instant::now(); // lint:allow(determinism): also telemetry
+    let v = Instant::now();
+}
+";
+        let out = lint_sources(&[src_file("rust/src/sched/x.rs", text)], "", &[]);
+        assert_eq!(out.suppressed.len(), 2, "{:?}", out.violations);
+        assert_eq!(out.violations.len(), 1);
+        assert_eq!(out.violations[0].line, 5);
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_violation() {
+        let text = "let t = Instant::now(); // lint:allow(determinism)\n";
+        let out = lint_sources(&[src_file("rust/src/sched/x.rs", text)], "", &[]);
+        assert!(out.violations.iter().any(|d| d.rule == "lint-allow"), "{:?}", out.violations);
+        // The underlying violation is NOT suppressed by a reasonless allow.
+        assert!(out.violations.iter().any(|d| d.rule == "determinism"));
+    }
+
+    #[test]
+    fn unused_allow_is_flagged() {
+        let text = "// lint:allow(determinism): nothing here actually violates\nfn f() {}\n";
+        let out = lint_sources(&[src_file("rust/src/sched/x.rs", text)], "", &[]);
+        assert_eq!(out.violations.len(), 1);
+        assert_eq!(out.violations[0].rule, "unused-allow");
+    }
+
+    #[test]
+    fn baseline_suppresses_and_goes_stale() {
+        let text = "let t = Instant::now();\n";
+        let entry = |subject: &str| BaselineEntry {
+            rule: "determinism".to_string(),
+            file: "rust/src/sched/x.rs".to_string(),
+            subject: subject.to_string(),
+            reason: "triaged legacy debt".to_string(),
+        };
+        let files = [src_file("rust/src/sched/x.rs", text)];
+        let out = lint_sources(&files, "", &[entry("Instant::now")]);
+        assert!(out.clean(), "{:?}", out.violations);
+        assert_eq!(out.suppressed.len(), 1);
+        let out = lint_sources(&files, "", &[entry("Instant::now"), entry("SystemTime::now")]);
+        assert!(!out.clean());
+        assert!(out.violations.iter().any(|d| d.rule == "baseline"
+            && d.subject == "SystemTime::now"
+            && d.message.contains("stale")));
+    }
+
+    #[test]
+    fn baseline_parses_and_rejects_incomplete_entries() {
+        let parsed = parse_baseline(
+            r#"[{"rule":"determinism","file":"rust/src/a.rs","subject":"HashMap","reason":"r"}]"#,
+        )
+        .expect("valid baseline");
+        assert_eq!(parsed.len(), 1);
+        assert!(parse_baseline(r#"[{"rule":"determinism"}]"#).is_err());
+        assert!(parse_baseline("{}").is_err());
+    }
+}

@@ -224,7 +224,9 @@ impl PlanExecutor {
     ) -> Result<Vec<Json>> {
         match &mut self.state {
             ExecState::Inference { client, policy } => {
-                let PlanWork::Inference(p) = &self.plan.work else { unreachable!() };
+                let PlanWork::Inference(p) = &self.plan.work else {
+                    bail!("plan/executor state mismatch: inference executor got non-inference work")
+                };
                 let estimate = |req: &InferenceRequest| {
                     estimate_request_tokens(&req.prompt, req.max_tokens) as f64
                 };
@@ -234,7 +236,9 @@ impl PlanExecutor {
                     // loop: cache lookup, blocking admission, retry,
                     // cache write interleaved.
                     let (engine, rng, bucket) = client.sequential_parts();
-                    let bucket = bucket.expect("inference client always has a bucket");
+                    let Some(bucket) = bucket else {
+                        bail!("inference client built without a rate-limit bucket")
+                    };
                     for i in start..end {
                         let prompt = &p.prompts[i];
                         if let Some(hit) = cache_lookup(
@@ -292,7 +296,7 @@ impl PlanExecutor {
                     }
                     let batch_spend = Mutex::new((0u64, 0u64, 0.0f64));
                     let account = |outcome: &RetryOutcome| {
-                        let mut s = batch_spend.lock().unwrap();
+                        let mut s = batch_spend.lock().unwrap_or_else(|p| p.into_inner());
                         s.0 += outcome.attempts as u64;
                         if let Ok(resp) = &outcome.result {
                             s.1 += (outcome.attempts - 1) as u64;
@@ -301,7 +305,7 @@ impl PlanExecutor {
                     };
                     let batch = client.run_batch(&miss_reqs, &estimate, Some(&account))?;
                     *peak = (*peak).max(batch.stats.peak_in_flight);
-                    let s = batch_spend.into_inner().unwrap();
+                    let s = batch_spend.into_inner().unwrap_or_else(|p| p.into_inner());
                     spend.0 += s.0;
                     spend.1 += s.1;
                     spend.2 += s.2;
@@ -315,13 +319,19 @@ impl PlanExecutor {
                         )?);
                     }
                 }
-                Ok(rows
-                    .into_iter()
-                    .map(|r| r.expect("every row settled").to_json())
-                    .collect())
+                let mut out = Vec::with_capacity(rows.len());
+                for (off, r) in rows.into_iter().enumerate() {
+                    match r {
+                        Some(v) => out.push(v.to_json()),
+                        None => bail!("row {} never settled in batch [{start}, {end})", start + off),
+                    }
+                }
+                Ok(out)
             }
             ExecState::Metric { metric } => {
-                let PlanWork::MetricScore(p) = &self.plan.work else { unreachable!() };
+                let PlanWork::MetricScore(p) = &self.plan.work else {
+                    bail!("plan/executor state mismatch: metric executor got non-metric work")
+                };
                 let batch =
                     metric.score_batch(&MetricContext::detached(), &p.examples[start..end])?;
                 validate_pure_batch(metric.name(), &batch, end - start)?;
@@ -332,7 +342,9 @@ impl PlanExecutor {
                     .collect())
             }
             ExecState::Pairwise { client } => {
-                let PlanWork::PairwiseJudge(p) = &self.plan.work else { unreachable!() };
+                let PlanWork::PairwiseJudge(p) = &self.plan.work else {
+                    bail!("plan/executor state mismatch: pairwise executor got non-pairwise work")
+                };
                 let mut verdicts = vec![PairVerdict::Unscored; end - start];
                 if client.concurrency() == 1 {
                     let (engine, _rng, _bucket) = client.sequential_parts();
@@ -424,6 +436,7 @@ impl PlanTaskRunner for PlanExecutor {
         let mut cursor = spec.start;
         while cursor < spec.end {
             let batch_end = (cursor + batch_size).min(spec.end);
+            // lint:allow(determinism): busy_secs is wall-clock telemetry by design
             let bt0 = Instant::now();
             let batch_rows = self.run_batch_rows(cursor, batch_end, &mut spend, &mut peak)?;
             busy_secs += bt0.elapsed().as_secs_f64();

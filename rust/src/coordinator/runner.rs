@@ -269,6 +269,7 @@ impl EvalRunner {
             return self.run_inference_backend(prompts, task);
         }
         let t0 = self.clock.now();
+        // lint:allow(determinism): reported wall_secs is wall-clock telemetry
         let wall0 = std::time::Instant::now();
         let df = DataFrame::from_columns(vec![(
             "prompt",
@@ -656,6 +657,7 @@ impl EvalRunner {
         task: &EvalTask,
     ) -> Result<(Vec<RowInference>, InferenceStats)> {
         let t0 = self.clock.now();
+        // lint:allow(determinism): reported wall_secs is wall-clock telemetry
         let wall0 = std::time::Instant::now();
         let inf = task.inference.clone();
         let model_cfg = task.model.clone();
@@ -1135,6 +1137,7 @@ impl EvalRunner {
         allow_missing: bool,
     ) -> Result<(Vec<RowInference>, InferenceStats)> {
         let t0 = self.clock.now();
+        // lint:allow(determinism): reported wall_secs is wall-clock telemetry
         let wall0 = std::time::Instant::now();
         let df = DataFrame::from_columns(vec![(
             "prompt",

@@ -20,6 +20,7 @@
 //! The [`runtime`] module loads the AOT artifacts via PJRT and is the only
 //! bridge between layers at run time.
 
+pub mod analysis;
 pub mod cache;
 pub mod checkpoint;
 pub mod config;

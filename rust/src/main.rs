@@ -14,6 +14,7 @@
 //! slleval tables    [--table fig2|tab3|tab4|tab5|tab6|typei|all]
 //! slleval sim       --executors 8 --n 10000 [--rpm 10000]
 //! slleval checkpoint compact <run_dir>
+//! slleval lint      [--baseline lint-baseline.json] [--json]
 //! slleval serve-worker --listen 0.0.0.0:7433 [--max-workers 8]
 //! ```
 //!
@@ -83,6 +84,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("tables") => cmd_tables(args),
         Some("sim") => cmd_sim(args),
         Some("checkpoint") => cmd_checkpoint(args),
+        Some("lint") => cmd_lint(args),
         // Hidden: the process-backend executor entry point. Spawned by
         // the driver with stdin/stdout pipes — never invoked by hand.
         Some("worker") => spark_llm_eval::coordinator::worker_main(),
@@ -90,7 +92,7 @@ fn dispatch(args: &Args) -> Result<()> {
         // from `--backend remote` drivers.
         Some("serve-worker") => cmd_serve_worker(args),
         Some(other) => bail!(
-            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim, checkpoint, serve-worker)"
+            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim, checkpoint, lint, serve-worker)"
         ),
         None => {
             print_usage();
@@ -103,14 +105,44 @@ fn print_usage() {
     println!("slleval — distributed, statistically rigorous LLM evaluation");
     println!(
         "subcommands: generate | run | compare | replay | rescore | tables | sim | checkpoint \
-         | serve-worker"
+         | lint | serve-worker"
     );
     println!("  rescore: recompute metrics from a cache/checkpoint, zero inference calls");
     println!("  checkpoint compact <run_dir>: coalesce per-task manifest records per stage");
+    println!("  lint [--baseline <file>] [--json]: static analysis of this repo's invariants");
     println!(
         "  serve-worker --listen <addr> [--max-workers N]: host daemon for --backend remote"
     );
     println!("see README.md for full usage");
+}
+
+/// `slleval lint` — run the project-invariant static analysis pass
+/// (determinism, panic-safety, wire-protocol drift, config/doc drift)
+/// over this repository's own sources. Exits non-zero on any
+/// unsuppressed violation; the same pass gates `cargo test -q` via
+/// `tests/lint_gate.rs`.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use spark_llm_eval::analysis;
+    let root = analysis::find_repo_root()?;
+    let baseline = args.get("baseline").map(PathBuf::from);
+    let out = analysis::run(&root, baseline.as_deref())?;
+    if args.has_flag("json") {
+        println!("{}", out.to_json().to_pretty());
+    } else {
+        for d in &out.violations {
+            println!("{}", d.render());
+        }
+        println!(
+            "lint: {} violation(s), {} suppressed, {} files scanned",
+            out.violations.len(),
+            out.suppressed.len(),
+            out.files_scanned
+        );
+    }
+    if !out.clean() {
+        bail!("lint found {} violation(s)", out.violations.len());
+    }
+    Ok(())
 }
 
 fn load_or_generate_data(args: &Args) -> Result<DataFrame> {

@@ -139,7 +139,7 @@ impl LatencyGate {
             }
             return;
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             if self.clock.now() >= deadline {
                 st.parked[slot] = None;
@@ -150,7 +150,7 @@ impl LatencyGate {
                 self.advance_locked(&mut st);
                 continue;
             }
-            st = self.woken.wait(st).unwrap();
+            st = self.woken.wait(st).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -159,7 +159,7 @@ impl LatencyGate {
     /// all parked, advance on their behalf — without this, a finished
     /// slot would leave its siblings waiting forever.
     fn exit(&self, slot: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
         st.parked[slot] = None;
         st.active -= 1;
         if st.active > 0 && st.parked_count() >= st.active {
@@ -216,7 +216,7 @@ impl CompletionQueue {
     }
 
     fn push(&self, index: usize, outcome: RetryOutcome) {
-        let mut st = self.slots.lock().unwrap();
+        let mut st = self.slots.lock().unwrap_or_else(|p| p.into_inner());
         debug_assert!(st.done[index].is_none(), "request {index} completed twice");
         st.done[index] = Some(outcome);
         st.completed += 1;
@@ -224,7 +224,7 @@ impl CompletionQueue {
     }
 
     fn push_panic(&self, message: String) {
-        let mut st = self.slots.lock().unwrap();
+        let mut st = self.slots.lock().unwrap_or_else(|p| p.into_inner());
         if st.panic.is_none() {
             st.panic = Some(message);
         }
@@ -232,7 +232,7 @@ impl CompletionQueue {
     }
 
     fn worker_done(&self) {
-        let mut st = self.slots.lock().unwrap();
+        let mut st = self.slots.lock().unwrap_or_else(|p| p.into_inner());
         st.live_workers -= 1;
         self.ready.notify_all();
     }
@@ -240,14 +240,14 @@ impl CompletionQueue {
     /// Poll until every request completed or a slot panicked and all
     /// workers wound down. Returns outcomes in submission order.
     fn poll_all(&self) -> Result<Vec<RetryOutcome>> {
-        let mut st = self.slots.lock().unwrap();
+        let mut st = self.slots.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             if st.panic.is_some() {
                 // Wait for the surviving workers to drain before failing
                 // the batch: their engines must be quiescent when the
                 // scheduler retries the task attempt.
                 while st.live_workers > 0 {
-                    st = self.ready.wait(st).unwrap();
+                    st = self.ready.wait(st).unwrap_or_else(|p| p.into_inner());
                 }
                 return Err(anyhow!(
                     "inference slot panicked: {}",
@@ -255,7 +255,18 @@ impl CompletionQueue {
                 ));
             }
             if st.completed == st.done.len() {
-                return Ok(st.done.iter_mut().map(|o| o.take().unwrap()).collect());
+                let mut out = Vec::with_capacity(st.done.len());
+                for (i, slot) in st.done.iter_mut().enumerate() {
+                    match slot.take() {
+                        Some(o) => out.push(o),
+                        None => {
+                            return Err(anyhow!(
+                                "completion queue corrupt: request {i} counted complete but never settled"
+                            ))
+                        }
+                    }
+                }
+                return Ok(out);
             }
             if st.live_workers == 0 {
                 // A worker died without completing its requests and
@@ -267,7 +278,7 @@ impl CompletionQueue {
                     st.done.len()
                 ));
             }
-            st = self.ready.wait(st).unwrap();
+            st = self.ready.wait(st).unwrap_or_else(|p| p.into_inner());
         }
     }
 }
@@ -332,7 +343,7 @@ impl PipelinedClient {
         (
             self.slots[0].as_mut(),
             &mut self.rngs[0],
-            self.bucket.as_mut().map(|b| b.get_mut().unwrap()),
+            self.bucket.as_mut().map(|b| b.get_mut().unwrap_or_else(|p| p.into_inner())),
         )
     }
 
@@ -364,7 +375,10 @@ impl PipelinedClient {
             let mut outcomes = Vec::with_capacity(n);
             for req in requests {
                 if let Some(bucket) = self.bucket.as_mut() {
-                    bucket.get_mut().unwrap().acquire(estimate(req), clock.as_ref());
+                    bucket
+                        .get_mut()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .acquire(estimate(req), clock.as_ref());
                 }
                 let outcome = infer_with_retry(
                     self.slots[0].as_mut(),
@@ -470,7 +484,10 @@ fn drive_request(
     // returned admission time already accounts for every other slot's
     // consumption, so concurrency never exceeds the configured RPM/TPM.
     if let Some(bucket) = bucket {
-        let admission = bucket.lock().unwrap().acquire_at(estimated_tokens, clock.now());
+        let admission = bucket
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .acquire_at(estimated_tokens, clock.now());
         gate.wait_until(slot, admission);
     }
     let mut backoff_secs = 0.0;
@@ -510,7 +527,7 @@ fn drive_request(
             }
         }
     }
-    unreachable!("retry loop always returns");
+    Err("retry loop exhausted without settling the request".to_string())
 }
 
 /// Convenience: did every outcome succeed?

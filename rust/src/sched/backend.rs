@@ -543,21 +543,20 @@ impl ExecutorBackend for ProcessBackend {
         // Persistent-fleet re-arm: a worker left alive by a previous job
         // (keep_alive shutdown) takes the next plan over its existing
         // pipes and answers with a fresh `ready`.
-        if self.stdins[eid].is_some()
-            && self.readers[eid].as_ref().map(|r| !r.is_finished()).unwrap_or(false)
-        {
-            self.gates[eid].store(true, Ordering::Relaxed);
-            let plan_msg = format!(
-                "{{\"type\":\"plan\",\"executor_id\":{eid},\"batch_size\":{},\"plan\":{}}}",
-                self.batch_size, self.plan_text
-            );
-            let stdin = self.stdins[eid].as_mut().expect("checked above");
-            match write_frame_bytes(stdin, plan_msg.as_bytes()) {
-                Ok(()) => return Ok(()),
-                Err(e) => {
-                    // The worker died between jobs; fall through to a
-                    // fresh spawn (its EOF event was drained or gated).
-                    eprintln!("warning: re-arming worker {eid} failed ({e}); respawning");
+        if self.readers[eid].as_ref().map(|r| !r.is_finished()).unwrap_or(false) {
+            if let Some(stdin) = self.stdins[eid].as_mut() {
+                self.gates[eid].store(true, Ordering::Relaxed);
+                let plan_msg = format!(
+                    "{{\"type\":\"plan\",\"executor_id\":{eid},\"batch_size\":{},\"plan\":{}}}",
+                    self.batch_size, self.plan_text
+                );
+                match write_frame_bytes(stdin, plan_msg.as_bytes()) {
+                    Ok(()) => return Ok(()),
+                    Err(e) => {
+                        // The worker died between jobs; fall through to a
+                        // fresh spawn (its EOF event was drained or gated).
+                        eprintln!("warning: re-arming worker {eid} failed ({e}); respawning");
+                    }
                 }
             }
         }
@@ -676,12 +675,14 @@ impl ExecutorBackend for ProcessBackend {
         // the same instant, so they wind down (cache flushes included)
         // concurrently — the deadline is shared, not per-child, and only
         // stragglers past it are killed.
+        // lint:allow(determinism): OS-process grace period is wall-clock by nature
         let deadline = Instant::now() + Duration::from_secs(15);
         loop {
             let all_done = self
                 .children
                 .iter_mut()
                 .all(|c| c.as_mut().map(|c| matches!(c.try_wait(), Ok(Some(_)))).unwrap_or(true));
+            // lint:allow(determinism): comparing against the wall-clock grace deadline
             if all_done || Instant::now() >= deadline {
                 break;
             }
@@ -990,7 +991,7 @@ pub fn run_plan(
         api_retries: 0,
         cost_usd: 0.0,
         fatal: None,
-        t0: Instant::now(),
+        t0: Instant::now(), // lint:allow(determinism): wall-clock anchor for timeline telemetry
     };
 
     // Validate + inject restored ranges as pre-completed tasks (identical
@@ -1116,10 +1117,12 @@ pub fn run_plan(
     // Handshake deadline: a spawned executor that stays alive but never
     // answers the protocol (a misconfigured worker binary eating stdin)
     // must fail the job with a diagnosis, not hang the driver forever.
+    // lint:allow(determinism): handshake timeout guards real I/O, wall-clock by design
     let ready_deadline = Instant::now() + Duration::from_secs(60);
 
     // ---------------------------------------------------------- event loop
     while driver.fatal.is_none() && driver.rows_done < driver.total_rows {
+        // lint:allow(determinism): comparing against the wall-clock handshake deadline
         if Instant::now() > ready_deadline {
             if let Some(eid) =
                 (0..executors).find(|&e| !driver.ready[e] && !driver.dead[e] && backend.alive(e))

@@ -524,6 +524,7 @@ where
     let executors = executors.max(1);
     let batch_size = batch_size.max(1);
     let total_rows = df.len();
+    // lint:allow(determinism): t0 anchors wall-clock task-timeline telemetry
     let t0 = Instant::now();
 
     let (mut restored, sink) = match checkpoint {
@@ -843,6 +844,7 @@ where
         while cursor < end {
             let batch_end = (cursor + batch_size).min(end);
             let slice = BatchSlice { executor_id: eid, start: cursor, end: batch_end };
+            // lint:allow(determinism): busy_secs is wall-clock telemetry by design
             let bt0 = Instant::now();
             // A panicking UDF is handled exactly like an erroring one: the
             // attempt fails and the task becomes eligible for retry /
@@ -913,6 +915,7 @@ where
                         && state.idle > 0
                         && end - cursor > batch_size
                     {
+                        // lint:allow(determinism): adaptive splitting reacts to real latency
                         let elapsed = (Instant::now() - t0).as_secs_f64() - started_secs;
                         let own_row_secs = elapsed / (cursor - start).max(1) as f64;
                         let est_remaining = (end - cursor) as f64 * own_row_secs;
@@ -952,6 +955,7 @@ where
             }
             _ => None,
         };
+        // lint:allow(determinism): TaskRecord timeline is wall-clock telemetry
         let finished_secs = (Instant::now() - t0).as_secs_f64();
         let mut state = shared.lock().unwrap();
         state.inflight.retain(|f| !(f.task_id == item.id && f.executor_id == eid));
@@ -1085,6 +1089,7 @@ fn claim_task<T>(
     // so every claim is runnable.
     debug_assert!(item.speculative || !state.completed[item.id]);
     let (start, end) = state.ranges[item.id];
+    // lint:allow(determinism): TaskRecord timeline is wall-clock telemetry
     let started_secs = (Instant::now() - t0).as_secs_f64();
     state.inflight.push(InFlight {
         task_id: item.id,

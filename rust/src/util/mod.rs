@@ -22,11 +22,13 @@ pub fn now_ms() -> f64 {
     use std::time::Instant;
     use std::sync::OnceLock;
     static START: OnceLock<Instant> = OnceLock::new();
+    // lint:allow(determinism): this IS the wall-clock telemetry helper
     START.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e3
 }
 
 /// Wall-clock unix timestamp in seconds.
 pub fn unix_ts() -> f64 {
+    // lint:allow(determinism): this IS the wall-clock timestamp helper
     std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs_f64())

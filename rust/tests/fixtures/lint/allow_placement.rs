@@ -1,0 +1,25 @@
+// Fixture for suppression placement. Cases:
+//   a: a suppression on the offending line works
+//   b: a suppression on the line above works
+//   c: two lines above does NOT suppress (and the suppression goes stale)
+//   d: a suppression for a different rule does not silence determinism
+
+fn a() -> std::time::Instant {
+    std::time::Instant::now() // lint:allow(determinism): fixture case a
+}
+
+fn b() -> std::time::Instant {
+    // lint:allow(determinism): fixture case b
+    std::time::Instant::now()
+}
+
+fn c() -> std::time::Instant {
+    // lint:allow(determinism): fixture case c — too far away
+    let _pad = ();
+    std::time::Instant::now()
+}
+
+fn d() -> std::time::Instant {
+    // lint:allow(panic-safety): fixture case d — wrong rule
+    std::time::Instant::now()
+}

@@ -1,0 +1,7 @@
+// Fixture for the config-doc rule: `seed` is documented in the docs
+// text the driver test supplies; `frobnication_level` is not.
+fn parse(v: &Json) -> (f64, f64) {
+    let seed = v.f64_or("seed", 0.0);
+    let frob = v.f64_or("frobnication_level", 1.0);
+    (seed, frob)
+}

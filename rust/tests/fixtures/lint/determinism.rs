@@ -1,0 +1,39 @@
+// Fixture for the determinism rule; the driver test maps it to a
+// sched/ path so the HashMap ban applies.
+use std::collections::HashMap;
+use std::time::{Instant, SystemTime};
+
+fn clocks() -> f64 {
+    let t0 = Instant::now();
+    let _ts = SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}
+
+fn hashes() -> HashMap<String, u32> {
+    HashMap::new()
+}
+
+fn rng() -> u64 {
+    thread_rng()
+}
+
+fn allowed() -> f64 {
+    // lint:allow(determinism): fixture — this wall-clock read is intended
+    let t = Instant::now();
+    t.elapsed().as_secs_f64()
+}
+
+fn negatives() {
+    let _s = "Instant::now() inside a string literal";
+    // Instant::now() inside a comment
+    let _b = std::collections::BTreeMap::<String, u32>::new();
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wall_clock_and_hash_in_test_code_are_fine() {
+        let _t = std::time::Instant::now();
+        let _m: std::collections::HashMap<u8, u8> = std::collections::HashMap::new();
+    }
+}

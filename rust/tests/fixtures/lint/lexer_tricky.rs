@@ -1,0 +1,18 @@
+// Fixture for lexer trickiness: everything below is inert except the
+// single real call at the bottom.
+
+/* Instant::now() in a block comment
+   /* SystemTime::now() in a nested block comment */
+   thread_rng() still inside the outer comment
+*/
+
+fn strings() {
+    let _a = "Instant::now() in a plain string";
+    let _b = r##"raw string with a "# fence tease and SystemTime::now()"##;
+    let _c = "escaped quote \" then Instant::now()";
+    let _d = 'x'; // a char literal, not a lifetime
+}
+
+fn real() -> std::time::Instant {
+    std::time::Instant::now()
+}

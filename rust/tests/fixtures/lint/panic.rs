@@ -1,0 +1,24 @@
+// Fixture for the panic-safety rule; the driver test maps it to an
+// executor-side path.
+use std::sync::Mutex;
+
+fn positives(m: &Mutex<u32>) -> u32 {
+    let v = *m.lock().unwrap();
+    let w: u32 = "7".parse().expect("fixture");
+    if v > w {
+        panic!("boom");
+    }
+    unreachable!()
+}
+
+fn negatives(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_test_code_is_fine() {
+        let _: u32 = "3".parse().unwrap();
+    }
+}

@@ -1,0 +1,12 @@
+//! Fixture protocol doc of record:
+//!
+//! driver -> worker   {"type":"hello"}
+//! worker -> driver   {"type":"retired"}   (documented but long gone)
+
+fn emit_hello() -> Json {
+    Json::obj(vec![("type", Json::str("hello"))])
+}
+
+fn emit_cancel() -> Json {
+    Json::obj(vec![("type", Json::str("cancel"))])
+}

@@ -1,0 +1,8 @@
+// Fixture dispatcher: handles hello and ack; cancel never arrives.
+fn dispatch(frame: &Json) {
+    match frame.str_or("type", "") {
+        "hello" => {}
+        "ack" => {}
+        _ => {}
+    }
+}

@@ -1,0 +1,161 @@
+//! Self-tests for the lint rules over known-bad fixtures in
+//! `tests/fixtures/lint/`. Fixture files are excluded from the real repo
+//! walk (any `fixtures` directory is skipped), so the deliberate
+//! violations here never trip the tier-1 gate; each test lexes a fixture
+//! and maps it to the repo-relative path that puts it in the right
+//! rule's scope.
+
+use spark_llm_eval::analysis::{lexer, lint_sources, LintOutcome, SourceFile};
+use spark_llm_eval::util::json::Json;
+use std::path::Path;
+
+fn fixture(rel_as: &str, name: &str) -> SourceFile {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/lint").join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading fixture {}: {e}", path.display()));
+    SourceFile { rel: rel_as.to_string(), lexed: lexer::lex(&text) }
+}
+
+fn run_one(rel_as: &str, name: &str, docs: &str) -> LintOutcome {
+    lint_sources(&[fixture(rel_as, name)], docs, &[])
+}
+
+/// `(subject, line)` of every violation of `rule`, in reported order.
+fn subjects(out: &LintOutcome, rule: &str) -> Vec<(String, u32)> {
+    out.violations
+        .iter()
+        .filter(|d| d.rule == rule)
+        .map(|d| (d.subject.clone(), d.line))
+        .collect()
+}
+
+fn pairs(list: &[(&str, u32)]) -> Vec<(String, u32)> {
+    list.iter().map(|(s, l)| (s.to_string(), *l)).collect()
+}
+
+#[test]
+fn determinism_flags_clock_hash_and_rng() {
+    let out = run_one("rust/src/sched/fixture_determinism.rs", "determinism.rs", "");
+    assert_eq!(
+        subjects(&out, "determinism"),
+        pairs(&[
+            ("HashMap", 3),
+            ("Instant::now", 7),
+            ("SystemTime::now", 8),
+            ("HashMap", 12),
+            ("HashMap", 13),
+            ("thread_rng", 17),
+        ]),
+        "{:?}",
+        out.violations
+    );
+    assert_eq!(out.violations.len(), 6, "{:?}", out.violations);
+    // The justified allow on line 21 silences exactly the line-22 read.
+    assert_eq!(out.suppressed.len(), 1);
+    assert_eq!(out.suppressed[0].0.line, 22);
+}
+
+#[test]
+fn determinism_only_applies_under_src() {
+    // The same bad code under rust/tests/ is out of scope for the rule.
+    let out = run_one("rust/tests/fixture_determinism.rs", "determinism.rs", "");
+    assert!(subjects(&out, "determinism").is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn lexer_sees_through_comments_strings_and_raw_fences() {
+    let out = run_one("rust/src/sched/fixture_lexer.rs", "lexer_tricky.rs", "");
+    assert_eq!(
+        subjects(&out, "determinism"),
+        pairs(&[("Instant::now", 17)]),
+        "{:?}",
+        out.violations
+    );
+    assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+}
+
+#[test]
+fn panic_safety_flags_executor_side_aborts() {
+    let out = run_one("rust/src/providers/pipeline.rs", "panic.rs", "");
+    assert_eq!(
+        subjects(&out, "panic-safety"),
+        pairs(&[(".unwrap()", 6), (".expect()", 7), ("panic!", 9), ("unreachable!", 11)]),
+        "{:?}",
+        out.violations
+    );
+    assert_eq!(out.violations.len(), 4, "{:?}", out.violations);
+}
+
+#[test]
+fn panic_safety_only_applies_to_executor_side_files() {
+    let out = run_one("rust/src/report/fixture_panic.rs", "panic.rs", "");
+    assert!(subjects(&out, "panic-safety").is_empty(), "{:?}", out.violations);
+}
+
+#[test]
+fn wire_drift_reports_all_three_disagreements() {
+    let files = [
+        fixture("rust/src/sched/backend.rs", "wire_backend.rs"),
+        fixture("rust/src/coordinator/worker.rs", "wire_worker.rs"),
+    ];
+    let out = lint_sources(&files, "", &[]);
+    let wire = subjects(&out, "wire-protocol");
+    // cancel: emitted but never handled + missing from the doc;
+    // ack: handled but never emitted + missing from the doc;
+    // retired: documented but gone from code. hello is clean.
+    assert_eq!(out.violations.len(), 5, "{:?}", out.violations);
+    assert_eq!(wire.iter().filter(|(s, _)| s == "cancel").count(), 2, "{wire:?}");
+    assert_eq!(wire.iter().filter(|(s, _)| s == "ack").count(), 2, "{wire:?}");
+    assert_eq!(wire.iter().filter(|(s, _)| s == "retired").count(), 1, "{wire:?}");
+    assert!(!wire.iter().any(|(s, _)| s == "hello"), "{wire:?}");
+    let has = |subject: &str, needle: &str| {
+        out.violations.iter().any(|d| d.subject == subject && d.message.contains(needle))
+    };
+    assert!(has("cancel", "no peer dispatches"), "{:?}", out.violations);
+    assert!(has("cancel", "missing from the protocol doc"), "{:?}", out.violations);
+    assert!(has("ack", "nothing emits it"), "{:?}", out.violations);
+    assert!(has("retired", "never appears in code"), "{:?}", out.violations);
+}
+
+#[test]
+fn config_doc_flags_undocumented_fields_only() {
+    let docs = "DESIGN: the `seed` field seeds every sampler.";
+    let out = run_one("rust/src/config/mod.rs", "config_drift.rs", docs);
+    assert_eq!(
+        subjects(&out, "config-doc"),
+        pairs(&[("frobnication_level", 5)]),
+        "{:?}",
+        out.violations
+    );
+    assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+}
+
+#[test]
+fn allow_placement_covers_same_line_and_line_above_only() {
+    let out = run_one("rust/src/sched/fixture_allow.rs", "allow_placement.rs", "");
+    // Cases a and b suppress; c (two lines above) and d (wrong rule) do
+    // not — and their allows are flagged as stale.
+    assert_eq!(out.suppressed.len(), 2, "{:?}", out.violations);
+    assert_eq!(
+        subjects(&out, "determinism"),
+        pairs(&[("Instant::now", 19), ("Instant::now", 24)]),
+        "{:?}",
+        out.violations
+    );
+    assert_eq!(
+        subjects(&out, "unused-allow"),
+        pairs(&[("determinism", 17), ("panic-safety", 23)]),
+        "{:?}",
+        out.violations
+    );
+    assert_eq!(out.violations.len(), 4, "{:?}", out.violations);
+}
+
+#[test]
+fn outcome_json_round_trips() {
+    let out = run_one("rust/src/sched/fixture_allow.rs", "allow_placement.rs", "");
+    let v = Json::parse(&out.to_json().to_string()).expect("lint JSON parses back");
+    assert_eq!(v.get("violations").unwrap().as_arr().unwrap().len(), 4);
+    assert_eq!(v.get("suppressed").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(v.get("files_scanned").unwrap().as_usize().unwrap(), 1);
+}

@@ -1,0 +1,71 @@
+//! Tier-1 gate: `slleval lint` must pass on this repository itself.
+//!
+//! This is the same pass the CLI subcommand and the CI step run — a
+//! violation introduced anywhere in `rust/{src,tests,benches}` fails
+//! `cargo test -q` with the rendered `file:line` diagnostics in the
+//! assertion message. Suppression policy and the rule catalog live in
+//! DESIGN.md ("Static analysis").
+
+use spark_llm_eval::analysis;
+use std::path::Path;
+
+/// The repo root: the crate lives at `<root>/rust`.
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("crate dir has a parent")
+}
+
+#[test]
+fn repository_lints_clean() {
+    let out = analysis::run(repo_root(), None).expect("lint pass runs");
+    assert!(out.files_scanned > 20, "lint walked only {} files — wrong root?", out.files_scanned);
+    let rendered: Vec<String> = out.violations.iter().map(|d| d.render()).collect();
+    assert!(
+        out.clean(),
+        "`slleval lint` found {} violation(s); fix them or add a justified \
+         `lint:allow` / baseline entry (see DESIGN.md):\n{}",
+        rendered.len(),
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn suppressions_all_carry_justifications() {
+    let out = analysis::run(repo_root(), None).expect("lint pass runs");
+    // The tree dogfoods its own lint: the deliberate wall-clock telemetry
+    // sites are suppressed inline, so an empty list means the rule (or
+    // the allow parser) silently stopped matching.
+    assert!(!out.suppressed.is_empty(), "expected the dogfooded inline allows to show up");
+    for (d, reason) in &out.suppressed {
+        assert!(!reason.trim().is_empty(), "suppressed without a written reason: {}", d.render());
+    }
+}
+
+#[test]
+fn shipped_baseline_is_not_stale() {
+    // Stale entries already fail `repository_lints_clean` (they surface
+    // as `baseline` violations); this meta-test pins that contract and
+    // additionally validates the shipped file parses and every entry is
+    // justified.
+    let path = repo_root().join(analysis::DEFAULT_BASELINE);
+    let entries = match std::fs::read_to_string(&path) {
+        Ok(text) => analysis::parse_baseline(&text).expect("shipped baseline parses"),
+        Err(_) => Vec::new(), // no baseline checked in — nothing to go stale
+    };
+    for e in &entries {
+        assert!(
+            !e.reason.trim().is_empty(),
+            "baseline entry for {} ({}, rule {}) has no justification",
+            e.file,
+            e.subject,
+            e.rule
+        );
+    }
+    let out = analysis::run(repo_root(), None).expect("lint pass runs");
+    let stale: Vec<String> = out
+        .violations
+        .iter()
+        .filter(|d| d.rule == "baseline")
+        .map(|d| d.render())
+        .collect();
+    assert!(stale.is_empty(), "stale or unjustified baseline entries:\n{}", stale.join("\n"));
+}
