@@ -110,13 +110,21 @@ pub fn determinism(file: &SourceFile) -> Vec<Diagnostic> {
 // Rule: panic-safety
 // ---------------------------------------------------------------------------
 
-/// Executor-side task code: a panic here aborts a pool (or a worker
-/// process mid-task) instead of surfacing as a retryable task failure.
-const PANIC_SCOPED: [&str; 4] = [
+/// Executor-side task code — a panic here aborts a pool (or a worker
+/// process mid-task) instead of surfacing as a retryable task failure —
+/// plus the eval-service daemon (`serve/`), where a panic on a
+/// malformed request or inside a run must become a 400/500 response or
+/// a failed-run state, never a daemon abort.
+const PANIC_SCOPED: [&str; 9] = [
     "rust/src/coordinator/plan_exec.rs",
     "rust/src/coordinator/worker.rs",
     "rust/src/providers/pipeline.rs",
     "rust/src/sched/backend.rs",
+    "rust/src/serve/api.rs",
+    "rust/src/serve/http.rs",
+    "rust/src/serve/mod.rs",
+    "rust/src/serve/registry.rs",
+    "rust/src/serve/runloop.rs",
 ];
 
 pub fn panic_safety(file: &SourceFile) -> Vec<Diagnostic> {

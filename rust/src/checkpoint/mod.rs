@@ -233,6 +233,25 @@ impl StageCheckpoint {
         &self.dir
     }
 
+    /// The stage's declared row count (from `meta.json`).
+    pub fn total_rows(&self) -> usize {
+        self.total_rows
+    }
+
+    /// The stage's recorded fingerprint object (the `"fingerprint"` key
+    /// of `meta.json`: content kind + sha256 of the stage's exact
+    /// inputs) — introspection for `slleval checkpoint ls` and the eval
+    /// service's registry. `Json::Null` if the meta predates
+    /// fingerprinting.
+    pub fn fingerprint(&self) -> Result<Json> {
+        let meta_path = self.dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading checkpoint stage meta {meta_path:?}"))?;
+        let meta = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("corrupt stage meta {meta_path:?}: {e}"))?;
+        Ok(meta.opt("fingerprint").cloned().unwrap_or(Json::Null))
+    }
+
     /// Reopen an existing stage directly by directory — the worker-side
     /// spill path for out-of-process executors
     /// ([`crate::sched::backend::ProcessBackend`]): the driver creates the
@@ -623,6 +642,31 @@ mod tests {
         assert_eq!(restored.len(), 2);
         assert_eq!(restored[0].2, vec![0.0, 1.0, 2.0, 3.0]);
         assert_eq!(restored[1].2, vec![7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn stage_introspection_surfaces_fingerprint_and_rows() {
+        let dir = tmp_dir("introspect");
+        let run = RunCheckpoint::create(&dir).unwrap();
+        let fp = Json::obj(vec![("kind", Json::str("infer")), ("sha256", Json::str("feedbeef"))]);
+        let stage = run.stage("infer-feedbeef", &fp, 8).unwrap();
+        stage.record_task(0, 5, 1, 0, &[enc(0.0), enc(1.0), enc(2.0), enc(3.0), enc(4.0)])
+            .unwrap();
+
+        // Reopen via the run-level listing, as `slleval checkpoint ls`
+        // does, and check every printed field is reachable.
+        let reopened = RunCheckpoint::resume(&dir).unwrap();
+        let stages = reopened.stages().unwrap();
+        assert_eq!(stages.len(), 1);
+        let (name, stage) = &stages[0];
+        assert_eq!(name, "infer-feedbeef");
+        assert_eq!(stage.total_rows(), 8);
+        let fingerprint = stage.fingerprint().unwrap();
+        assert_eq!(fingerprint.str_or("kind", "?"), "infer");
+        assert_eq!(fingerprint.str_or("sha256", "?"), "feedbeef");
+        let manifest = stage.manifest().unwrap();
+        let spilled: usize = manifest.iter().map(|r| r.end - r.start).sum();
+        assert_eq!(spilled, 5);
     }
 
     #[test]

@@ -571,6 +571,92 @@ impl EvalTask {
     }
 }
 
+/// `slleval serve` daemon configuration (see [`crate::serve`] and
+/// DESIGN.md "Eval service"). Loaded from `--config serve.json`, with
+/// individual CLI flags overriding fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Listen address, `host:port` (port 0 binds a free port; the
+    /// daemon prints the resolved address on startup).
+    pub listen: String,
+    /// Response-cache directory shared by every run over the daemon's
+    /// lifetime — the multi-tenant "resubmit pays zero inference"
+    /// guarantee. `None` runs without a shared cache.
+    pub cache_dir: Option<String>,
+    /// Policy the shared cache is opened with. Each run's own
+    /// `inference.cache_policy` still governs its lookups and writes.
+    pub cache_policy: CachePolicy,
+    /// Maximum accepted HTTP request body, bytes (task submissions are
+    /// small; this bounds hostile or accidental floods).
+    pub max_body_bytes: usize,
+    /// Fast mode: virtual clock, simulated latency accounted but not
+    /// slept — the CI/test configuration.
+    pub fast: bool,
+    /// Multiplier on simulated provider latency when running live
+    /// (ignored in fast mode).
+    pub latency_scale: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:7464".into(),
+            cache_dir: None,
+            cache_policy: CachePolicy::Enabled,
+            max_body_bytes: 8 * 1024 * 1024,
+            fast: false,
+            latency_scale: 1.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("listen", Json::str(&self.listen)),
+            ("cache_dir", self.cache_dir.as_deref().map(Json::str).unwrap_or(Json::Null)),
+            ("cache_policy", Json::str(self.cache_policy.as_str())),
+            ("max_body_bytes", Json::num(self.max_body_bytes as f64)),
+            ("fast", Json::Bool(self.fast)),
+            ("latency_scale", Json::num(self.latency_scale)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ServeConfig> {
+        let default = ServeConfig::default();
+        let cfg = ServeConfig {
+            listen: v.str_or("listen", &default.listen).to_string(),
+            cache_dir: v.opt("cache_dir").and_then(|d| d.as_str().ok()).map(String::from),
+            cache_policy: CachePolicy::from_str(
+                v.str_or("cache_policy", default.cache_policy.as_str()),
+            )?,
+            max_body_bytes: v.usize_or("max_body_bytes", default.max_body_bytes),
+            fast: v.bool_or("fast", default.fast),
+            latency_scale: v.f64_or("latency_scale", default.latency_scale),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)?;
+        ServeConfig::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.listen.contains(':') {
+            bail!("serve listen address must be host:port, got {:?}", self.listen);
+        }
+        if self.max_body_bytes < 1024 {
+            bail!("serve max_body_bytes must be >= 1024, got {}", self.max_body_bytes);
+        }
+        if self.latency_scale <= 0.0 || !self.latency_scale.is_finite() {
+            bail!("serve latency_scale must be a positive number, got {}", self.latency_scale);
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -594,6 +680,36 @@ mod tests {
         task.statistics.ci_method = CiMethod::Percentile;
         let restored = EvalTask::from_json(&task.to_json()).unwrap();
         assert_eq!(task, restored);
+    }
+
+    #[test]
+    fn serve_config_round_trip_and_defaults() {
+        let mut cfg = ServeConfig::default();
+        cfg.listen = "0.0.0.0:9000".into();
+        cfg.cache_dir = Some("/tmp/serve-cache".into());
+        cfg.cache_policy = CachePolicy::ReadOnly;
+        cfg.fast = true;
+        cfg.latency_scale = 0.25;
+        let restored = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, restored);
+        // An empty object parses to the defaults.
+        let parsed = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(parsed, ServeConfig::default());
+        assert!(parsed.cache_dir.is_none());
+    }
+
+    #[test]
+    fn serve_config_validation_rejects_bad_fields() {
+        let mut cfg = ServeConfig::default();
+        cfg.listen = "no-port".into();
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.max_body_bytes = 10;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.latency_scale = 0.0;
+        assert!(cfg.validate().is_err());
+        assert!(ServeConfig::from_json(&Json::parse("{\"latency_scale\": -1}").unwrap()).is_err());
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub use compare::compare_results;
 pub use pairwise::{PairVerdict, PairwiseResult};
 pub use plan_exec::{PlanExecutor, PlanHost};
 pub use result::{ComparisonResult, EvalResult, InferenceStats, MetricComparison, MetricValue};
-pub use runner::{EvalRunner, RowInference};
+pub use runner::{EvalRunner, RowInference, RunObserver};
 pub use streaming::{StreamControl, StreamUpdate};
 pub use worker::{serve_connection, serve_worker_main, worker_main};
 

@@ -80,6 +80,47 @@ pub struct InferenceStats {
     pub executors: Vec<ExecutorStats>,
 }
 
+impl InferenceStats {
+    /// The `"inference"` object of the result JSON, also served on its
+    /// own by the eval service as the stage-2 snapshot in
+    /// `GET /runs/{id}` (scheduler telemetry is a sibling key there and
+    /// in [`EvalResult::to_json`], so it is not nested here).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("examples", Json::num(self.examples as f64)),
+            ("api_calls", Json::num(self.api_calls as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("total_cost_usd", Json::num(self.total_cost_usd)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("latency_p50_ms", Json::num(self.latency_p50_ms)),
+            ("latency_p99_ms", Json::num(self.latency_p99_ms)),
+            ("throughput_per_min", Json::num(self.throughput_per_min)),
+            ("concurrency", Json::num(self.concurrency as f64)),
+            ("peak_in_flight", Json::num(self.peak_in_flight as f64)),
+            (
+                "executors",
+                Json::arr(
+                    self.executors
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("executor_id", Json::num(e.executor_id as f64)),
+                                ("rows_processed", Json::num(e.rows_processed as f64)),
+                                ("batches", Json::num(e.batches as f64)),
+                                ("busy_secs", Json::num(e.busy_secs)),
+                                ("peak_in_flight", Json::num(e.peak_in_flight as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// Complete evaluation outcome.
 #[derive(Debug)]
 pub struct EvalResult {
@@ -114,42 +155,7 @@ impl EvalResult {
             ("provider", Json::str(&self.provider)),
             ("model", Json::str(&self.model)),
             ("metrics", Json::arr(self.metrics.iter().map(|m| m.to_json()).collect())),
-            (
-                "inference",
-                Json::obj(vec![
-                    ("examples", Json::num(self.inference.examples as f64)),
-                    ("api_calls", Json::num(self.inference.api_calls as f64)),
-                    ("cache_hits", Json::num(self.inference.cache_hits as f64)),
-                    ("cache_misses", Json::num(self.inference.cache_misses as f64)),
-                    ("retries", Json::num(self.inference.retries as f64)),
-                    ("failed", Json::num(self.inference.failed as f64)),
-                    ("total_cost_usd", Json::num(self.inference.total_cost_usd)),
-                    ("wall_secs", Json::num(self.inference.wall_secs)),
-                    ("latency_p50_ms", Json::num(self.inference.latency_p50_ms)),
-                    ("latency_p99_ms", Json::num(self.inference.latency_p99_ms)),
-                    ("throughput_per_min", Json::num(self.inference.throughput_per_min)),
-                    ("concurrency", Json::num(self.inference.concurrency as f64)),
-                    ("peak_in_flight", Json::num(self.inference.peak_in_flight as f64)),
-                    (
-                        "executors",
-                        Json::arr(
-                            self.inference
-                                .executors
-                                .iter()
-                                .map(|e| {
-                                    Json::obj(vec![
-                                        ("executor_id", Json::num(e.executor_id as f64)),
-                                        ("rows_processed", Json::num(e.rows_processed as f64)),
-                                        ("batches", Json::num(e.batches as f64)),
-                                        ("busy_secs", Json::num(e.busy_secs)),
-                                        ("peak_in_flight", Json::num(e.peak_in_flight as f64)),
-                                    ])
-                                })
-                                .collect(),
-                        ),
-                    ),
-                ]),
-            ),
+            ("inference", self.inference.to_json()),
             (
                 "metric_calls",
                 Json::obj(vec![

@@ -77,6 +77,17 @@ impl RowInference {
     }
 }
 
+/// Driver-side run lifecycle hooks — the `slleval serve` daemon's live
+/// progress feed (see `crate::serve`). Called synchronously from the
+/// run's driving thread: `inference_done` once stage 2 settles, then
+/// `metric_done` after each metric's stage-3 scoring *and* stage-4
+/// aggregation, so every partial estimate already carries its bootstrap
+/// CI (never a bare point value). Default bodies make any hook opt-in.
+pub trait RunObserver: Send + Sync {
+    fn inference_done(&self, _stats: &InferenceStats) {}
+    fn metric_done(&self, _index: usize, _total: usize, _value: &MetricValue) {}
+}
+
 /// The evaluation coordinator. Owns the clock, provider services, cache,
 /// and (optionally) the PJRT semantic runtime.
 pub struct EvalRunner {
@@ -110,6 +121,10 @@ pub struct EvalRunner {
     /// Deterministic executor-death injection for backend crash tests:
     /// the targeted executor dies hard while running its N-th task.
     pub worker_fault: Option<WorkerFault>,
+    /// Run lifecycle observer (see [`RunObserver`]): the `slleval serve`
+    /// daemon's live-progress feed. Called synchronously from the run's
+    /// driving thread; `None` (the CLI one-shot path) costs nothing.
+    pub observer: Option<Arc<dyn RunObserver>>,
     /// Persistent `--backend process` worker fleet: spawned by the first
     /// backend stage and kept alive across the run's later stages, which
     /// re-arm the live workers with a `plan` frame instead of respawning
@@ -135,6 +150,7 @@ impl EvalRunner {
             abort: None,
             worker_exe: None,
             worker_fault: None,
+            observer: None,
             fleet: Mutex::new(None),
         }
     }
@@ -1067,16 +1083,39 @@ impl EvalRunner {
         let failed_examples: Vec<usize> =
             failed.iter().enumerate().filter(|(_, &f)| f).map(|(i, _)| i).collect();
 
-        // Stage 3: metric computation (one shared judge-call meter).
+        // Stages 3+4, interleaved per metric (one shared judge-call
+        // meter): compute a metric's report, aggregate it immediately —
+        // `aggregate` seeds a fresh bootstrap rng per call, so this is
+        // bit-identical to the former compute-all-then-aggregate-all
+        // split — and surface it through the observer, so a partial
+        // estimate with its CI exists as soon as each metric settles.
+        // A cooperative abort lands between metrics: already-settled
+        // estimates (and cached/checkpointed work) survive.
         let examples = self.build_examples(df, task, &prompts, &inference_rows);
         let meter = Arc::new(CallMeter::default());
-        let mut reports = Vec::with_capacity(resolved.len());
-        for metric in resolved {
-            reports.push(self.compute_resolved(metric, &examples, task, &failed, &meter)?);
+        if let Some(observer) = &self.observer {
+            observer.inference_done(&inf_stats);
         }
-
-        // Stage 4: statistical aggregation.
-        let metrics: Vec<MetricValue> = reports.iter().map(|r| self.aggregate(r, task)).collect();
+        let mut reports = Vec::with_capacity(resolved.len());
+        let mut metrics = Vec::with_capacity(resolved.len());
+        for (index, metric) in resolved.iter().enumerate() {
+            if let Some(flag) = &self.abort {
+                if flag.load(std::sync::atomic::Ordering::Relaxed) {
+                    anyhow::bail!(
+                        "run aborted before metric '{}' ({index}/{} metrics complete)",
+                        metric.name(),
+                        resolved.len()
+                    );
+                }
+            }
+            let report = self.compute_resolved(metric, &examples, task, &failed, &meter)?;
+            let value = self.aggregate(&report, task);
+            if let Some(observer) = &self.observer {
+                observer.metric_done(index, resolved.len(), &value);
+            }
+            reports.push(report);
+            metrics.push(value);
+        }
 
         // Flush cache writes so a following replay/rescore run sees them.
         if let Some(cache) = &self.cache {

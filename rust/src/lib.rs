@@ -33,6 +33,7 @@ pub mod ratelimit;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod stats;
 pub mod template;

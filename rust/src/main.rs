@@ -14,9 +14,19 @@
 //! slleval tables    [--table fig2|tab3|tab4|tab5|tab6|typei|all]
 //! slleval sim       --executors 8 --n 10000 [--rpm 10000]
 //! slleval checkpoint compact <run_dir>
+//! slleval checkpoint ls <run_dir>
 //! slleval lint      [--baseline lint-baseline.json] [--json]
+//! slleval serve     --listen 127.0.0.1:7464 [--config serve.json]
+//!                   [--cache-dir .slleval-cache] [--fast]
+//!                   [--max-body-bytes N] [--latency-scale F]
 //! slleval serve-worker --listen 0.0.0.0:7433 [--max-workers 8]
 //! ```
+//!
+//! `serve` starts the resident eval service (see `crate::serve` and
+//! DESIGN.md "Eval service"): submit EvalTask JSON with
+//! `POST /runs`, watch `GET /runs/{id}` / `GET /runs/{id}/partial`,
+//! fetch `GET /runs/{id}/result`, cancel with `POST /runs/{id}/cancel`.
+//! All runs share the daemon's response cache and warm executor fleets.
 //!
 //! `--concurrency N` (or `inference.concurrency` in the task JSON) makes
 //! each executor multiplex N in-flight provider requests through the
@@ -50,7 +60,7 @@
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
-use spark_llm_eval::config::{CachePolicy, EvalTask};
+use spark_llm_eval::config::{CachePolicy, EvalTask, ServeConfig};
 use spark_llm_eval::coordinator::{compare_results, EvalRunner};
 use spark_llm_eval::data::{io as dio, synth, DataFrame};
 use spark_llm_eval::providers::simulated::SimServiceConfig;
@@ -91,8 +101,10 @@ fn dispatch(args: &Args) -> Result<()> {
         // The remote-backend host daemon: accepts executor connections
         // from `--backend remote` drivers.
         Some("serve-worker") => cmd_serve_worker(args),
+        // Eval-as-a-service: the resident HTTP driver daemon.
+        Some("serve") => cmd_serve(args),
         Some(other) => bail!(
-            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim, checkpoint, lint, serve-worker)"
+            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim, checkpoint, lint, serve, serve-worker)"
         ),
         None => {
             print_usage();
@@ -105,11 +117,16 @@ fn print_usage() {
     println!("slleval — distributed, statistically rigorous LLM evaluation");
     println!(
         "subcommands: generate | run | compare | replay | rescore | tables | sim | checkpoint \
-         | lint | serve-worker"
+         | lint | serve | serve-worker"
     );
     println!("  rescore: recompute metrics from a cache/checkpoint, zero inference calls");
     println!("  checkpoint compact <run_dir>: coalesce per-task manifest records per stage");
+    println!("  checkpoint ls <run_dir>: list each stage's fingerprint and spilled coverage");
     println!("  lint [--baseline <file>] [--json]: static analysis of this repo's invariants");
+    println!(
+        "  serve --listen <addr> [--cache-dir d] [--fast]: resident HTTP eval driver \
+         (POST /runs, GET /runs/{{id}}, /partial, /result, /cancel)"
+    );
     println!(
         "  serve-worker --listen <addr> [--max-workers N]: host daemon for --backend remote"
     );
@@ -418,7 +435,33 @@ fn cmd_checkpoint(args: &Args) -> Result<()> {
             println!("compacted {} stage(s) in {dir}", report.len());
             Ok(())
         }
-        _ => bail!("usage: slleval checkpoint compact <run_dir>"),
+        Some("ls") => {
+            let dir =
+                args.positional.get(1).context("usage: slleval checkpoint ls <run_dir>")?;
+            let run = spark_llm_eval::checkpoint::RunCheckpoint::resume(Path::new(dir))?;
+            let stages = run.stages()?;
+            if stages.is_empty() {
+                println!("no checkpoint stages found in {dir}");
+                return Ok(());
+            }
+            for (name, stage) in &stages {
+                let fingerprint = stage.fingerprint()?;
+                let kind = fingerprint.str_or("kind", "?").to_string();
+                let sha = fingerprint.str_or("sha256", "-").to_string();
+                let sha_short = &sha[..sha.len().min(16)];
+                let manifest = stage.manifest()?;
+                let spilled: usize = manifest.iter().map(|r| r.end - r.start).sum();
+                println!(
+                    "{name}: kind {kind} fingerprint {sha_short} | {} manifest record(s), \
+                     {spilled}/{} rows spilled ({:.1}% coverage)",
+                    manifest.len(),
+                    stage.total_rows(),
+                    stage.coverage()? * 100.0
+                );
+            }
+            Ok(())
+        }
+        _ => bail!("usage: slleval checkpoint <compact|ls> <run_dir>"),
     }
 }
 
@@ -430,6 +473,32 @@ fn cmd_serve_worker(args: &Args) -> Result<()> {
     // init_error frame and the driver's spawn fails fast.
     let max_workers = args.get_usize("max-workers", 0);
     spark_llm_eval::coordinator::serve_worker_main(listen, max_workers)
+}
+
+/// `slleval serve` — the resident eval-service daemon (`crate::serve`).
+/// Config comes from `--config serve.json` (a [`ServeConfig`] object),
+/// with every field individually overridable on the command line.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ServeConfig::from_file(Path::new(path))?,
+        None => ServeConfig::default(),
+    };
+    if let Some(listen) = args.get("listen") {
+        cfg.listen = listen.to_string();
+    }
+    if let Some(dir) = args.get("cache-dir") {
+        cfg.cache_dir = Some(dir.to_string());
+    }
+    if let Some(policy) = args.get("cache-policy") {
+        cfg.cache_policy = CachePolicy::from_str(policy)?;
+    }
+    if args.has_flag("fast") {
+        cfg.fast = true;
+    }
+    cfg.max_body_bytes = args.get_usize("max-body-bytes", cfg.max_body_bytes);
+    cfg.latency_scale = args.get_f64("latency-scale", cfg.latency_scale);
+    cfg.validate()?;
+    spark_llm_eval::serve::serve_main(&cfg)
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {

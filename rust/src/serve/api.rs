@@ -1,0 +1,222 @@
+//! HTTP API routing for the eval service.
+//!
+//! Pure function from a parsed [`Request`] to `(status, body)` so every
+//! route — including error paths — is unit-testable without a socket.
+//! Invalid submissions are client errors (400), never daemon errors:
+//! body parsing and task validation all happen here, behind the
+//! connection handler's panic barrier.
+//!
+//! | method | path                 | effect                                   |
+//! |--------|----------------------|------------------------------------------|
+//! | GET    | `/healthz`           | liveness probe                           |
+//! | POST   | `/runs`              | submit `{"task":…, "data":…}` → 201 + id |
+//! | GET    | `/runs`              | list all runs (submission order)         |
+//! | GET    | `/runs/{id}`         | state + progress + scheduler snapshot    |
+//! | GET    | `/runs/{id}/partial` | settled metric estimates with CIs        |
+//! | GET    | `/runs/{id}/result`  | final result (409 until `done`)          |
+//! | POST   | `/runs/{id}/cancel`  | cooperative abort                        |
+
+use super::http::Request;
+use super::registry::{DataSpec, RunRegistry, RunState};
+use crate::config::EvalTask;
+use crate::util::json::Json;
+
+/// Route one request against the registry.
+pub fn handle(registry: &RunRegistry, req: &Request) -> (u16, Json) {
+    let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => (200, Json::obj(vec![("status", Json::str("ok"))])),
+        ("POST", ["runs"]) => submit(registry, &req.body),
+        ("GET", ["runs"]) => (200, registry.list_json()),
+        ("GET", ["runs", id]) => match registry.status_json(id) {
+            Some(status) => (200, status),
+            None => unknown_run(id),
+        },
+        ("GET", ["runs", id, "partial"]) => match registry.partial_json(id) {
+            Some(partial) => (200, partial),
+            None => unknown_run(id),
+        },
+        ("GET", ["runs", id, "result"]) => result(registry, id),
+        ("POST", ["runs", id, "cancel"]) => match registry.cancel(id) {
+            Some(state) => (
+                200,
+                Json::obj(vec![("id", Json::str(*id)), ("state", Json::str(state.as_str()))]),
+            ),
+            None => unknown_run(id),
+        },
+        // Known path shapes with the wrong verb are 405; everything
+        // else (including unknown sub-resources of a run) is 404.
+        (_, ["healthz"] | ["runs"] | ["runs", _] | ["runs", _, "partial" | "result" | "cancel"]) => {
+            (405, error_json("method not allowed"))
+        }
+        _ => (404, error_json(&format!("no such route: {}", req.path))),
+    }
+}
+
+/// `POST /runs`: the body is either `{"task": <EvalTask>, "data":
+/// {"n":…, "seed":…} | {"path":…}}` or a bare EvalTask object (then
+/// the default synthetic corpus is evaluated).
+fn submit(registry: &RunRegistry, body: &[u8]) -> (u16, Json) {
+    let text = match std::str::from_utf8(body) {
+        Ok(text) => text,
+        Err(_) => return (400, error_json("request body is not utf-8")),
+    };
+    let value = match Json::parse(text) {
+        Ok(value) => value,
+        Err(e) => return (400, error_json(&format!("invalid JSON body: {e}"))),
+    };
+    let (task_value, data_value) = match value.opt("task") {
+        Some(task) => (task, value.opt("data")),
+        None => (&value, None),
+    };
+    let task = match EvalTask::from_json(task_value) {
+        Ok(task) => task,
+        Err(e) => return (400, error_json(&format!("invalid task: {e:#}"))),
+    };
+    let data = match parse_data(data_value) {
+        Ok(data) => data,
+        Err(message) => return (400, error_json(&message)),
+    };
+    let id = registry.submit(task, data);
+    (201, Json::obj(vec![("id", Json::str(id)), ("state", Json::str("queued"))]))
+}
+
+fn parse_data(value: Option<&Json>) -> Result<DataSpec, String> {
+    let mut spec = DataSpec::default();
+    let Some(value) = value else { return Ok(spec) };
+    spec.n = value.usize_or("n", spec.n);
+    spec.seed = value.f64_or("seed", spec.seed as f64) as u64;
+    spec.path = value.opt("path").and_then(|p| p.as_str().ok()).map(String::from);
+    if spec.n == 0 && spec.path.is_none() {
+        return Err("data.n must be >= 1 (or set data.path)".into());
+    }
+    Ok(spec)
+}
+
+fn result(registry: &RunRegistry, id: &str) -> (u16, Json) {
+    match registry.result_json(id) {
+        None => unknown_run(id),
+        Some((RunState::Done, Some(result))) => (200, result),
+        Some((state, _)) => (
+            409,
+            Json::obj(vec![
+                (
+                    "error",
+                    Json::str(format!("run is {}, result not available", state.as_str())),
+                ),
+                ("state", Json::str(state.as_str())),
+            ]),
+        ),
+    }
+}
+
+fn unknown_run(id: &str) -> (u16, Json) {
+    (404, error_json(&format!("no such run: {id}")))
+}
+
+fn error_json(message: &str) -> Json {
+    Json::obj(vec![("error", Json::str(message))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            headers: BTreeMap::new(),
+            body: body.as_bytes().to_vec(),
+            close: false,
+        }
+    }
+
+    fn submit_body() -> String {
+        let task = EvalTask::default().to_json().to_string();
+        format!("{{\"task\": {task}, \"data\": {{\"n\": 50, \"seed\": 3}}}}")
+    }
+
+    #[test]
+    fn healthz_and_unknown_routes() {
+        let reg = RunRegistry::new();
+        let (status, body) = handle(&reg, &req("GET", "/healthz", ""));
+        assert_eq!(status, 200);
+        assert_eq!(body.get("status").unwrap().as_str().unwrap(), "ok");
+        let (status, _) = handle(&reg, &req("GET", "/nope", ""));
+        assert_eq!(status, 404);
+        let (status, _) = handle(&reg, &req("DELETE", "/runs", ""));
+        assert_eq!(status, 405);
+    }
+
+    #[test]
+    fn submit_then_status_then_cancel() {
+        let reg = RunRegistry::new();
+        let (status, body) = handle(&reg, &req("POST", "/runs", &submit_body()));
+        assert_eq!(status, 201, "{body:?}");
+        let id = body.get("id").unwrap().as_str().unwrap().to_string();
+        let (status, body) = handle(&reg, &req("GET", &format!("/runs/{id}"), ""));
+        assert_eq!(status, 200);
+        assert_eq!(body.get("state").unwrap().as_str().unwrap(), "queued");
+        let (status, body) = handle(&reg, &req("POST", &format!("/runs/{id}/cancel"), ""));
+        assert_eq!(status, 200);
+        assert_eq!(body.get("state").unwrap().as_str().unwrap(), "cancelled");
+    }
+
+    #[test]
+    fn bare_task_body_uses_default_data() {
+        let reg = RunRegistry::new();
+        let body = EvalTask::default().to_json().to_string();
+        let (status, _) = handle(&reg, &req("POST", "/runs", &body));
+        assert_eq!(status, 201);
+    }
+
+    #[test]
+    fn malformed_bodies_are_client_errors() {
+        let reg = RunRegistry::new();
+        for body in ["{not json", "{\"task\": {\"no_task_id\": 1}}", "\u{1}\u{2}"] {
+            let (status, resp) = handle(&reg, &req("POST", "/runs", body));
+            assert_eq!(status, 400, "{body:?} → {resp:?}");
+            assert!(resp.get("error").is_ok());
+        }
+        let zero_rows = format!(
+            "{{\"task\": {}, \"data\": {{\"n\": 0}}}}",
+            EvalTask::default().to_json()
+        );
+        let (status, _) = handle(&reg, &req("POST", "/runs", &zero_rows));
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn result_is_conflict_until_done() {
+        let reg = RunRegistry::new();
+        let (_, body) = handle(&reg, &req("POST", "/runs", &submit_body()));
+        let id = body.get("id").unwrap().as_str().unwrap().to_string();
+        let (status, body) = handle(&reg, &req("GET", &format!("/runs/{id}/result"), ""));
+        assert_eq!(status, 409);
+        assert_eq!(body.get("state").unwrap().as_str().unwrap(), "queued");
+        // finish() only settles claimed (running) entries.
+        reg.finish(&id, Json::obj(vec![("task_id", Json::str("t"))]));
+        let (status, _) = handle(&reg, &req("GET", &format!("/runs/{id}/result"), ""));
+        assert_eq!(status, 409);
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        assert!(reg.claim_next(&stop).is_some());
+        reg.finish(&id, Json::obj(vec![("task_id", Json::str("t"))]));
+        let (status, _) = handle(&reg, &req("GET", &format!("/runs/{id}/result"), ""));
+        assert_eq!(status, 200);
+    }
+
+    #[test]
+    fn unknown_run_paths_are_404() {
+        let reg = RunRegistry::new();
+        for path in
+            ["/runs/run-000009", "/runs/run-000009/partial", "/runs/run-000009/result"]
+        {
+            let (status, _) = handle(&reg, &req("GET", path, ""));
+            assert_eq!(status, 404, "{path}");
+        }
+        let (status, _) = handle(&reg, &req("POST", "/runs/run-000009/cancel", ""));
+        assert_eq!(status, 404);
+    }
+}

@@ -1,0 +1,300 @@
+//! Minimal HTTP/1.1 support for the eval-service daemon: a strict
+//! request reader and a response writer over plain `Read`/`Write`
+//! halves of a socket.
+//!
+//! Hand-rolled for the same reason `sched/wire.rs` is: the crate is
+//! no-async and dependency-free by design, and the service only needs
+//! the subset curl and stock HTTP clients actually speak — request
+//! line + headers + `Content-Length` bodies, sequential keep-alive,
+//! and `Expect: 100-continue` (curl sends it for bodies over ~1 KiB).
+//! The parser follows wire.rs discipline: malformed or oversized input
+//! becomes an error value, never a panic or an unbounded buffer —
+//! chunked transfer encoding is rejected outright, and both the header
+//! section and the body are capped.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read, Write};
+
+use crate::util::json::Json;
+
+/// Upper bound on the request line + header section, bytes.
+pub const MAX_HEAD_BYTES: usize = 64 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    /// Method verbatim (routing rejects unknown ones with 405).
+    pub method: String,
+    /// Request path with any query string stripped.
+    pub path: String,
+    /// Header names lowercased; the last occurrence of a name wins.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+    /// Peer asked for `Connection: close` (HTTP/1.1 defaults to
+    /// keep-alive, so this is opt-out).
+    pub close: bool,
+}
+
+/// Why a request could not be read off the connection.
+#[derive(Debug)]
+pub enum RequestError {
+    /// Peer closed the connection cleanly between requests.
+    Closed,
+    /// Syntactically invalid request; answer 400 and close (the frame
+    /// boundary is unknown, so the connection cannot be reused).
+    Malformed(String),
+    /// Declared body exceeds the configured cap; answer 413 and close.
+    TooLarge(usize),
+    /// Socket error or read timeout.
+    Io(std::io::Error),
+}
+
+/// Read one request. `r` and `w` are the two halves of the same
+/// connection — the writer is needed mid-parse to honor
+/// `Expect: 100-continue` before the peer will send its body.
+pub fn read_request(
+    r: &mut dyn BufRead,
+    w: &mut dyn Write,
+    max_body: usize,
+) -> Result<Request, RequestError> {
+    let mut head_budget = MAX_HEAD_BYTES;
+    let line = match read_line(r, &mut head_budget)? {
+        Some(line) => line,
+        None => return Err(RequestError::Closed),
+    };
+    let mut parts = line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m.to_string(), t.to_string(), v),
+        _ => return Err(RequestError::Malformed(format!("bad request line: {line:?}"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(RequestError::Malformed(format!("unsupported version: {version}")));
+    }
+    let path = match target.split_once('?') {
+        Some((p, _query)) => p.to_string(),
+        None => target,
+    };
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let line = match read_line(r, &mut head_budget)? {
+            Some(line) => line,
+            None => return Err(RequestError::Malformed("eof inside header section".into())),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = match line.split_once(':') {
+            Some((n, v)) => (n.trim().to_ascii_lowercase(), v.trim().to_string()),
+            None => return Err(RequestError::Malformed(format!("bad header line: {line:?}"))),
+        };
+        headers.insert(name, value);
+    }
+
+    if let Some(te) = headers.get("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("identity") {
+            return Err(RequestError::Malformed(format!(
+                "transfer-encoding {te:?} not supported (use content-length)"
+            )));
+        }
+    }
+
+    let content_length = match headers.get("content-length") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| RequestError::Malformed(format!("bad content-length: {v:?}")))?,
+        None => 0,
+    };
+    if content_length > max_body {
+        return Err(RequestError::TooLarge(max_body));
+    }
+
+    // curl (and others) withhold bodies over ~1 KiB until the server
+    // acknowledges the Expect header with an interim 100 response.
+    if let Some(expect) = headers.get("expect") {
+        if expect.to_ascii_lowercase().contains("100-continue") {
+            w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").map_err(RequestError::Io)?;
+            w.flush().map_err(RequestError::Io)?;
+        }
+    }
+
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        r.read_exact(&mut body).map_err(RequestError::Io)?;
+    }
+
+    let close = headers.get("connection").is_some_and(|c| c.eq_ignore_ascii_case("close"));
+    Ok(Request { method, path, headers, body, close })
+}
+
+/// Read one CRLF- (or LF-) terminated line, charging its bytes against
+/// the shared head budget. `Ok(None)` is clean EOF before any byte.
+fn read_line(r: &mut dyn BufRead, budget: &mut usize) -> Result<Option<String>, RequestError> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = r.fill_buf().map_err(RequestError::Io)?;
+        if chunk.is_empty() {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            return Err(RequestError::Malformed("eof mid-line in header section".into()));
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if pos > *budget {
+                    return Err(RequestError::Malformed("header section too large".into()));
+                }
+                *budget -= pos;
+                buf.extend_from_slice(&chunk[..pos]);
+                r.consume(pos + 1);
+                if buf.last() == Some(&b'\r') {
+                    buf.pop();
+                }
+                let line = String::from_utf8(buf)
+                    .map_err(|_| RequestError::Malformed("non-utf8 bytes in header".into()))?;
+                return Ok(Some(line));
+            }
+            None => {
+                let len = chunk.len();
+                if len > *budget {
+                    return Err(RequestError::Malformed("header section too large".into()));
+                }
+                buf.extend_from_slice(chunk);
+                r.consume(len);
+                *budget -= len;
+            }
+        }
+    }
+}
+
+/// Write a JSON response (pretty-printed: the primary client is a
+/// human behind curl).
+pub fn write_response(w: &mut dyn Write, status: u16, body: &Json) -> std::io::Result<()> {
+    let mut text = body.to_pretty();
+    text.push('\n');
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        status,
+        reason(status),
+        text.len()
+    )?;
+    w.write_all(text.as_bytes())?;
+    w.flush()
+}
+
+/// Canonical reason phrase for the handful of statuses the API uses.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Request, RequestError> {
+        let mut r = Cursor::new(raw.as_bytes().to_vec());
+        let mut w = Vec::new();
+        read_request(&mut r, &mut w, 1024 * 1024)
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse("GET /runs/run-000001?verbose=1 HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/runs/run-000001");
+        assert!(req.body.is_empty());
+        assert!(!req.close);
+    }
+
+    #[test]
+    fn parses_post_with_content_length_body() {
+        let req = parse(
+            "POST /runs HTTP/1.1\r\nContent-Length: 9\r\nConnection: close\r\n\r\n{\"a\": 1}x",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{\"a\": 1}x");
+        assert!(req.close);
+    }
+
+    #[test]
+    fn expect_100_continue_gets_interim_response() {
+        let raw = "POST /runs HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\nhi";
+        let mut r = Cursor::new(raw.as_bytes().to_vec());
+        let mut w = Vec::new();
+        let req = read_request(&mut r, &mut w, 1024).unwrap();
+        assert_eq!(req.body, b"hi");
+        assert_eq!(String::from_utf8(w).unwrap(), "HTTP/1.1 100 Continue\r\n\r\n");
+    }
+
+    #[test]
+    fn clean_eof_is_closed() {
+        assert!(matches!(parse(""), Err(RequestError::Closed)));
+    }
+
+    #[test]
+    fn garbage_request_line_is_malformed() {
+        assert!(matches!(parse("this is not http\r\n\r\n"), Err(RequestError::Malformed(_))));
+        assert!(matches!(parse("GET /x SPDY/9\r\n\r\n"), Err(RequestError::Malformed(_))));
+    }
+
+    #[test]
+    fn chunked_encoding_is_rejected() {
+        let err = parse("POST /runs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n");
+        assert!(matches!(err, Err(RequestError::Malformed(_))));
+    }
+
+    #[test]
+    fn oversized_body_is_too_large() {
+        let mut r = Cursor::new(b"POST /runs HTTP/1.1\r\nContent-Length: 99\r\n\r\n".to_vec());
+        let mut w = Vec::new();
+        assert!(matches!(read_request(&mut r, &mut w, 10), Err(RequestError::TooLarge(10))));
+    }
+
+    #[test]
+    fn oversized_header_section_is_malformed() {
+        let raw = format!("GET / HTTP/1.1\r\nX-Big: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES));
+        assert!(matches!(parse(&raw), Err(RequestError::Malformed(_))));
+    }
+
+    #[test]
+    fn keep_alive_reads_sequential_requests() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\nGET /runs HTTP/1.1\r\n\r\n";
+        let mut r = Cursor::new(raw.as_bytes().to_vec());
+        let mut w = Vec::new();
+        let a = read_request(&mut r, &mut w, 1024).unwrap();
+        let b = read_request(&mut r, &mut w, 1024).unwrap();
+        assert_eq!((a.path.as_str(), b.path.as_str()), ("/healthz", "/runs"));
+        assert!(matches!(read_request(&mut r, &mut w, 1024), Err(RequestError::Closed)));
+    }
+
+    #[test]
+    fn response_writer_emits_framed_json() {
+        let mut w = Vec::new();
+        write_response(&mut w, 201, &Json::obj(vec![("id", Json::str("run-000001"))])).unwrap();
+        let text = String::from_utf8(w).unwrap();
+        assert!(text.starts_with("HTTP/1.1 201 Created\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        let len: usize = text
+            .lines()
+            .find(|l| l.starts_with("Content-Length:"))
+            .and_then(|l| l.split(':').nth(1))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap();
+        assert_eq!(body.len(), len);
+        assert!(body.contains("run-000001"));
+    }
+}

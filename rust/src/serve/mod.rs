@@ -1,0 +1,228 @@
+//! `slleval serve` — eval-as-a-service (DESIGN.md "Eval service").
+//!
+//! A resident HTTP/1.1 driver over `std::net::TcpListener` that
+//! accepts EvalTask submissions, executes them sequentially on a
+//! background run loop through one daemon-lifetime [`EvalRunner`]
+//! (shared response cache, persistent executor fleets), and exposes
+//! the run lifecycle plus live partial results as a small JSON API:
+//!
+//! | endpoint                  | effect                                  |
+//! |---------------------------|-----------------------------------------|
+//! | `POST /runs`              | submit `{"task": …, "data": …}` → id    |
+//! | `GET  /runs`              | list runs                               |
+//! | `GET  /runs/{id}`         | state machine + progress + sched stats  |
+//! | `GET  /runs/{id}/partial` | per-metric estimates with bootstrap CIs |
+//! | `GET  /runs/{id}/result`  | final result (409 until done)           |
+//! | `POST /runs/{id}/cancel`  | cooperative abort                       |
+//! | `GET  /healthz`           | liveness                                |
+//!
+//! Threading model (no async, same discipline as `sched/remote.rs`):
+//! one accept thread, one handler thread per connection (sequential
+//! keep-alive per connection), one run-loop thread owning the runner.
+//! A panic in a handler answers 500 and closes that connection; a
+//! panic inside a run settles it `failed`; the daemon keeps serving
+//! either way.
+
+pub mod api;
+pub mod http;
+pub mod registry;
+mod runloop;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+pub use registry::{DataSpec, RunRegistry, RunState};
+
+use crate::config::ServeConfig;
+use crate::coordinator::EvalRunner;
+use crate::providers::simulated::SimServiceConfig;
+use crate::ratelimit::VirtualClock;
+use crate::util::json::Json;
+
+/// Per-connection socket read timeout: an idle keep-alive connection
+/// is reaped after this long so handler threads cannot pile up.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A running eval-service daemon.
+pub struct ServeDaemon {
+    registry: Arc<RunRegistry>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    runloop: Option<JoinHandle<()>>,
+}
+
+impl ServeDaemon {
+    /// Build the daemon's runner from config and start serving.
+    pub fn start(cfg: &ServeConfig) -> Result<ServeDaemon> {
+        Self::start_with_runner(cfg, build_runner(cfg)?)
+    }
+
+    /// Start with a caller-built runner (tests inject fault-free fast
+    /// runners this way). Binding port 0 picks a free port; the real
+    /// address is [`ServeDaemon::addr`].
+    pub fn start_with_runner(cfg: &ServeConfig, runner: EvalRunner) -> Result<ServeDaemon> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding serve listener on {}", cfg.listen))?;
+        let addr = listener.local_addr().context("resolving serve listener address")?;
+        let registry = Arc::new(RunRegistry::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let runloop = runloop::spawn(Arc::clone(&registry), runner, Arc::clone(&stop))?;
+        let accept = {
+            let registry = Arc::clone(&registry);
+            let stop = Arc::clone(&stop);
+            let max_body = cfg.max_body_bytes;
+            std::thread::Builder::new()
+                .name("slleval-serve-accept".into())
+                .spawn(move || accept_loop(&listener, &registry, &stop, max_body))
+                .context("spawning serve accept loop")?
+        };
+        Ok(ServeDaemon { registry, addr, stop, accept: Some(accept), runloop: Some(runloop) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn registry(&self) -> &Arc<RunRegistry> {
+        &self.registry
+    }
+
+    /// Serve until the process exits (the CLI path).
+    pub fn join(mut self) {
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        if let Some(handle) = self.runloop.take() {
+            let _ = handle.join();
+        }
+    }
+
+    /// Cooperative shutdown (tests): cancel every non-terminal run,
+    /// stop accepting, and join both daemon threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for id in self.registry.ids() {
+            self.registry.cancel(&id);
+        }
+        // Unblock the accept loop: it only re-checks `stop` when a
+        // connection arrives, so hand it one.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        if let Some(handle) = self.runloop.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Build the daemon's single long-lived runner: fast mode runs under
+/// the virtual clock with latency accounted but not slept (CI and
+/// tests); live mode sleeps simulated latencies scaled by
+/// `latency_scale`. Either way the shared response cache is opened
+/// once, here, for the daemon's lifetime.
+fn build_runner(cfg: &ServeConfig) -> Result<EvalRunner> {
+    let mut runner = if cfg.fast {
+        let mut r = EvalRunner::with_clock(VirtualClock::new());
+        r.service_config = SimServiceConfig { sleep_latency: false, ..Default::default() };
+        r
+    } else {
+        let mut r = EvalRunner::new();
+        r.service_config =
+            SimServiceConfig { latency_scale: cfg.latency_scale, ..Default::default() };
+        r
+    };
+    if let Some(dir) = &cfg.cache_dir {
+        runner
+            .open_cache(Path::new(dir), cfg.cache_policy)
+            .with_context(|| format!("opening shared response cache at {dir}"))?;
+    }
+    Ok(runner)
+}
+
+/// CLI entry: start the daemon and serve until killed. The "serving
+/// on" line is the startup handshake scripts poll for (same idiom as
+/// `serve-worker`'s "listening on").
+pub fn serve_main(cfg: &ServeConfig) -> Result<()> {
+    let daemon = ServeDaemon::start(cfg)?;
+    println!("serving on {}", daemon.addr());
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    daemon.join();
+    Ok(())
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    registry: &Arc<RunRegistry>,
+    stop: &Arc<AtomicBool>,
+    max_body: usize,
+) {
+    let mut conn_seq = 0u64;
+    for stream in listener.incoming() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        conn_seq += 1;
+        let registry = Arc::clone(registry);
+        let spawned = std::thread::Builder::new()
+            .name(format!("slleval-serve-conn-{conn_seq}"))
+            .spawn(move || handle_connection(stream, &registry, max_body));
+        // Thread exhaustion drops the connection, never the daemon.
+        drop(spawned);
+    }
+}
+
+/// Serve one connection: sequential keep-alive requests until the peer
+/// closes, asks to close, times out, or sends an unframeable request.
+fn handle_connection(stream: TcpStream, registry: &Arc<RunRegistry>, max_body: usize) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = std::io::BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let req = match http::read_request(&mut reader, &mut writer, max_body) {
+            Ok(req) => req,
+            Err(http::RequestError::Closed) | Err(http::RequestError::Io(_)) => return,
+            Err(http::RequestError::Malformed(message)) => {
+                // The frame boundary is unknown: answer 400, close.
+                let body = Json::obj(vec![("error", Json::str(message))]);
+                let _ = http::write_response(&mut writer, 400, &body);
+                return;
+            }
+            Err(http::RequestError::TooLarge(cap)) => {
+                let body = Json::obj(vec![(
+                    "error",
+                    Json::str(format!("request body exceeds {cap} byte cap")),
+                )]);
+                let _ = http::write_response(&mut writer, 413, &body);
+                return;
+            }
+        };
+        let close = req.close;
+        // Panic barrier: a handler panic becomes a 500 on this
+        // connection; the daemon and every other connection live on.
+        let (status, body) = match catch_unwind(AssertUnwindSafe(|| api::handle(registry, &req))) {
+            Ok(response) => response,
+            Err(_) => {
+                (500, Json::obj(vec![("error", Json::str("internal error: handler panicked"))]))
+            }
+        };
+        if http::write_response(&mut writer, status, &body).is_err() {
+            return;
+        }
+        if close {
+            return;
+        }
+    }
+}

@@ -1,0 +1,436 @@
+//! Run lifecycle registry for the eval service.
+//!
+//! Every submitted EvalTask becomes a [`RunEntry`] that moves through
+//! the state machine `queued → running → done | failed | cancelled`.
+//! HTTP connection threads write submissions and cancellations; the
+//! single run-loop thread claims queued runs and reports progress,
+//! per-metric partial estimates (each carrying its bootstrap CI), and
+//! the final result JSON. All shared state lives behind one mutex, and
+//! every lock recovers from poisoning — a panicking request handler
+//! must never take the registry (and with it the daemon) down.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::config::EvalTask;
+use crate::engine::Progress;
+use crate::util::json::Json;
+
+/// Run lifecycle states. `Done`, `Failed`, and `Cancelled` are
+/// terminal; `Cancelled` covers both a queued run cancelled before it
+/// started and a running run settled by the scheduler's abort flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl RunState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RunState::Queued => "queued",
+            RunState::Running => "running",
+            RunState::Done => "done",
+            RunState::Failed => "failed",
+            RunState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, RunState::Done | RunState::Failed | RunState::Cancelled)
+    }
+}
+
+/// Where a run's input frame comes from. The service is a driver, so
+/// data is resolved driver-side when the run is claimed, not at
+/// submission time.
+#[derive(Debug, Clone)]
+pub struct DataSpec {
+    /// Synthetic corpus size (ignored when `path` is set).
+    pub n: usize,
+    /// Synthetic corpus seed.
+    pub seed: u64,
+    /// Driver-local JSONL file to evaluate instead of synthetic data.
+    pub path: Option<String>,
+}
+
+impl Default for DataSpec {
+    fn default() -> Self {
+        Self { n: 1000, seed: 42, path: None }
+    }
+}
+
+struct RunEntry {
+    task: EvalTask,
+    data: DataSpec,
+    state: RunState,
+    error: Option<String>,
+    /// The scheduler-facing cooperative abort flag; `cancel` on a
+    /// running entry sets it and the run loop settles the state.
+    abort: Arc<AtomicBool>,
+    /// Stage-2 row progress, installed by the run loop once the input
+    /// frame is built (total row count is only known then).
+    progress: Option<Arc<Progress>>,
+    metrics_total: usize,
+    /// Settled metric estimates in task order, each a full MetricValue
+    /// JSON (point value + bootstrap CI) — the `/partial` payload.
+    partial: Vec<Json>,
+    /// Stage-2 snapshot: inference accounting + scheduler stats.
+    inference: Option<Json>,
+    result: Option<Json>,
+}
+
+/// Everything the run loop needs to execute a claimed run.
+pub struct ClaimedRun {
+    pub id: String,
+    pub task: EvalTask,
+    pub data: DataSpec,
+    pub abort: Arc<AtomicBool>,
+}
+
+struct Inner {
+    runs: BTreeMap<String, RunEntry>,
+    queue: VecDeque<String>,
+    next_id: u64,
+}
+
+/// Shared run registry: one per daemon.
+pub struct RunRegistry {
+    inner: Mutex<Inner>,
+    wake: Condvar,
+}
+
+impl Default for RunRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunRegistry {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner { runs: BTreeMap::new(), queue: VecDeque::new(), next_id: 0 }),
+            wake: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Register a new run as `queued` and return its id. Ids are a
+    /// zero-padded submission counter, so `GET /runs` (a BTreeMap walk)
+    /// lists runs in submission order.
+    pub fn submit(&self, task: EvalTask, data: DataSpec) -> String {
+        let mut g = self.lock();
+        g.next_id += 1;
+        let id = format!("run-{:06}", g.next_id);
+        let metrics_total = task.metrics.len();
+        g.runs.insert(
+            id.clone(),
+            RunEntry {
+                task,
+                data,
+                state: RunState::Queued,
+                error: None,
+                abort: Arc::new(AtomicBool::new(false)),
+                progress: None,
+                metrics_total,
+                partial: Vec::new(),
+                inference: None,
+                result: None,
+            },
+        );
+        g.queue.push_back(id.clone());
+        self.wake.notify_all();
+        id
+    }
+
+    /// Block until a queued run is available, claim it, and mark it
+    /// `running`. Returns `None` once `stop` is set (daemon shutdown).
+    /// Runs cancelled while still queued are skipped, satisfying
+    /// "cancel stops new work" without the run loop ever seeing them.
+    pub fn claim_next(&self, stop: &AtomicBool) -> Option<ClaimedRun> {
+        let mut g = self.lock();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return None;
+            }
+            while let Some(id) = g.queue.pop_front() {
+                let Some(entry) = g.runs.get_mut(&id) else { continue };
+                if entry.state != RunState::Queued {
+                    continue;
+                }
+                entry.state = RunState::Running;
+                return Some(ClaimedRun {
+                    id,
+                    task: entry.task.clone(),
+                    data: entry.data.clone(),
+                    abort: entry.abort.clone(),
+                });
+            }
+            // Timed wait so shutdown is noticed even without a notify.
+            let (g2, _timeout) = self
+                .wake
+                .wait_timeout(g, Duration::from_millis(100))
+                .unwrap_or_else(|p| p.into_inner());
+            g = g2;
+        }
+    }
+
+    /// Install the row-progress handle once the run's frame is built.
+    pub fn set_progress(&self, id: &str, progress: Arc<Progress>) {
+        if let Some(entry) = self.lock().runs.get_mut(id) {
+            entry.progress = Some(progress);
+        }
+    }
+
+    /// Record the stage-2 snapshot (inference + scheduler accounting).
+    pub fn record_inference(&self, id: &str, snapshot: Json) {
+        if let Some(entry) = self.lock().runs.get_mut(id) {
+            entry.inference = Some(snapshot);
+        }
+    }
+
+    /// Record one settled metric estimate (stage 3+4 for that metric).
+    pub fn record_metric(&self, id: &str, index: usize, total: usize, value: Json) {
+        if let Some(entry) = self.lock().runs.get_mut(id) {
+            entry.metrics_total = total;
+            entry.partial.truncate(index);
+            entry.partial.push(value);
+        }
+    }
+
+    /// Settle a running run as `done` with its final result JSON.
+    /// Only claimed (`running`) entries settle — a run cancelled while
+    /// still queued can never be finished by a stale caller.
+    pub fn finish(&self, id: &str, result: Json) {
+        if let Some(entry) = self.lock().runs.get_mut(id) {
+            if entry.state == RunState::Running {
+                entry.state = RunState::Done;
+                entry.result = Some(result);
+            }
+        }
+    }
+
+    /// Settle a running run that returned an error: `cancelled` when
+    /// its abort flag was raised (the error is the scheduler's abort
+    /// report), `failed` otherwise.
+    pub fn fail(&self, id: &str, error: &str) {
+        if let Some(entry) = self.lock().runs.get_mut(id) {
+            if entry.state == RunState::Running {
+                entry.state = if entry.abort.load(Ordering::Relaxed) {
+                    RunState::Cancelled
+                } else {
+                    RunState::Failed
+                };
+                entry.error = Some(error.to_string());
+            }
+        }
+    }
+
+    /// Cooperative cancel. Queued runs settle immediately; running runs
+    /// get their abort flag raised and settle when the scheduler or the
+    /// between-metrics check observes it; terminal runs are untouched.
+    /// Returns the state after the call, or `None` for an unknown id.
+    pub fn cancel(&self, id: &str) -> Option<RunState> {
+        let mut g = self.lock();
+        let entry = g.runs.get_mut(id)?;
+        match entry.state {
+            RunState::Queued => {
+                entry.state = RunState::Cancelled;
+                entry.error = Some("cancelled before start".into());
+            }
+            RunState::Running => {
+                entry.abort.store(true, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+        Some(entry.state)
+    }
+
+    /// All run ids, submission order.
+    pub fn ids(&self) -> Vec<String> {
+        self.lock().runs.keys().cloned().collect()
+    }
+
+    /// `GET /runs`: one summary line per run, submission order.
+    pub fn list_json(&self) -> Json {
+        let g = self.lock();
+        let runs = g
+            .runs
+            .iter()
+            .map(|(id, e)| {
+                Json::obj(vec![
+                    ("id", Json::str(id.clone())),
+                    ("task_id", Json::str(e.task.task_id.clone())),
+                    ("state", Json::str(e.state.as_str())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("runs", Json::arr(runs))])
+    }
+
+    /// `GET /runs/{id}`: state machine position, row/metric progress,
+    /// and the stage-2 scheduler snapshot once inference settled.
+    pub fn status_json(&self, id: &str) -> Option<Json> {
+        let g = self.lock();
+        let e = g.runs.get(id)?;
+        let rows = e.progress.as_ref().map(|p| p.fraction()).unwrap_or(0.0);
+        Some(Json::obj(vec![
+            ("id", Json::str(id)),
+            ("task_id", Json::str(e.task.task_id.clone())),
+            ("state", Json::str(e.state.as_str())),
+            ("error", e.error.clone().map(Json::str).unwrap_or(Json::Null)),
+            (
+                "progress",
+                Json::obj(vec![
+                    ("rows_fraction", Json::num(rows)),
+                    ("metrics_done", Json::num(e.partial.len() as f64)),
+                    ("metrics_total", Json::num(e.metrics_total as f64)),
+                ]),
+            ),
+            ("inference", e.inference.clone().unwrap_or(Json::Null)),
+        ]))
+    }
+
+    /// `GET /runs/{id}/partial`: the metric estimates settled so far.
+    pub fn partial_json(&self, id: &str) -> Option<Json> {
+        let g = self.lock();
+        let e = g.runs.get(id)?;
+        Some(Json::obj(vec![
+            ("id", Json::str(id)),
+            ("state", Json::str(e.state.as_str())),
+            ("metrics_done", Json::num(e.partial.len() as f64)),
+            ("metrics_total", Json::num(e.metrics_total as f64)),
+            ("metrics", Json::arr(e.partial.clone())),
+        ]))
+    }
+
+    /// `GET /runs/{id}/result`: the final result once `done`.
+    pub fn result_json(&self, id: &str) -> Option<(RunState, Option<Json>)> {
+        let g = self.lock();
+        let e = g.runs.get(id)?;
+        Some((e.state, e.result.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EvalTask;
+
+    fn registry_with_one() -> (RunRegistry, String) {
+        let reg = RunRegistry::new();
+        let id = reg.submit(EvalTask::default(), DataSpec::default());
+        (reg, id)
+    }
+
+    #[test]
+    fn ids_are_sequential_and_listed_in_order() {
+        let reg = RunRegistry::new();
+        let a = reg.submit(EvalTask::default(), DataSpec::default());
+        let b = reg.submit(EvalTask::default(), DataSpec::default());
+        assert_eq!((a.as_str(), b.as_str()), ("run-000001", "run-000002"));
+        let list = reg.list_json();
+        let runs = match list.get("runs").unwrap() {
+            Json::Arr(items) => items.clone(),
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("id").unwrap().as_str().unwrap(), "run-000001");
+        assert_eq!(runs[0].get("state").unwrap().as_str().unwrap(), "queued");
+    }
+
+    #[test]
+    fn claim_marks_running_and_finish_marks_done() {
+        let (reg, id) = registry_with_one();
+        let stop = AtomicBool::new(false);
+        let claim = reg.claim_next(&stop).unwrap();
+        assert_eq!(claim.id, id);
+        let status = reg.status_json(&id).unwrap();
+        assert_eq!(status.get("state").unwrap().as_str().unwrap(), "running");
+        reg.finish(&id, Json::obj(vec![("ok", Json::Bool(true))]));
+        let (state, result) = reg.result_json(&id).unwrap();
+        assert_eq!(state, RunState::Done);
+        assert!(result.is_some());
+    }
+
+    #[test]
+    fn claim_next_returns_none_on_stop() {
+        let reg = RunRegistry::new();
+        let stop = AtomicBool::new(true);
+        assert!(reg.claim_next(&stop).is_none());
+    }
+
+    #[test]
+    fn cancel_while_queued_is_immediate_and_skipped_by_claim() {
+        let (reg, id) = registry_with_one();
+        assert_eq!(reg.cancel(&id), Some(RunState::Cancelled));
+        let stop = AtomicBool::new(true);
+        // The cancelled entry must not be claimable.
+        assert!(reg.claim_next(&stop).is_none());
+        let status = reg.status_json(&id).unwrap();
+        assert_eq!(status.get("state").unwrap().as_str().unwrap(), "cancelled");
+    }
+
+    #[test]
+    fn cancel_while_running_raises_abort_then_fail_settles_cancelled() {
+        let (reg, id) = registry_with_one();
+        let stop = AtomicBool::new(false);
+        let claim = reg.claim_next(&stop).unwrap();
+        assert!(!claim.abort.load(Ordering::Relaxed));
+        assert_eq!(reg.cancel(&id), Some(RunState::Running));
+        assert!(claim.abort.load(Ordering::Relaxed));
+        reg.fail(&id, "run aborted with 12/100 rows complete");
+        let (state, result) = reg.result_json(&id).unwrap();
+        assert_eq!(state, RunState::Cancelled);
+        assert!(result.is_none());
+    }
+
+    #[test]
+    fn fail_without_abort_is_failed_and_terminal_states_stick() {
+        let (reg, id) = registry_with_one();
+        let stop = AtomicBool::new(false);
+        reg.claim_next(&stop).unwrap();
+        reg.fail(&id, "boom");
+        assert_eq!(reg.cancel(&id), Some(RunState::Failed));
+        reg.finish(&id, Json::Null);
+        let (state, result) = reg.result_json(&id).unwrap();
+        assert_eq!(state, RunState::Failed);
+        assert!(result.is_none());
+        let status = reg.status_json(&id).unwrap();
+        assert_eq!(status.get("error").unwrap().as_str().unwrap(), "boom");
+    }
+
+    #[test]
+    fn partial_metrics_accumulate_in_order() {
+        let (reg, id) = registry_with_one();
+        reg.record_metric(&id, 0, 2, Json::obj(vec![("name", Json::str("exact_match"))]));
+        let p = reg.partial_json(&id).unwrap();
+        assert_eq!(p.get("metrics_done").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(p.get("metrics_total").unwrap().as_f64().unwrap(), 2.0);
+        reg.record_metric(&id, 1, 2, Json::obj(vec![("name", Json::str("token_f1"))]));
+        let p = reg.partial_json(&id).unwrap();
+        let metrics = match p.get("metrics").unwrap() {
+            Json::Arr(items) => items.clone(),
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(metrics.len(), 2);
+        assert_eq!(metrics[1].get("name").unwrap().as_str().unwrap(), "token_f1");
+    }
+
+    #[test]
+    fn unknown_ids_are_none() {
+        let reg = RunRegistry::new();
+        assert!(reg.status_json("run-000009").is_none());
+        assert!(reg.partial_json("run-000009").is_none());
+        assert!(reg.result_json("run-000009").is_none());
+        assert!(reg.cancel("run-000009").is_none());
+    }
+}

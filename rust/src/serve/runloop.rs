@@ -1,0 +1,120 @@
+//! The daemon's single run-loop thread.
+//!
+//! One thread claims queued runs and drives them through one
+//! daemon-lifetime [`EvalRunner`] — which is exactly what makes fleets
+//! and the response cache shared resources: the runner's persistent
+//! process fleet survives between `evaluate` calls (re-armed with
+//! `plan` frames per stage, see `sched/backend.rs`), and its cache
+//! handle is opened once at daemon start, so a tenant resubmitting a
+//! task pays zero inference and near-zero setup.
+//!
+//! Runs execute strictly sequentially: the scheduler already fans each
+//! run out across executors, and serial execution is what keeps every
+//! run bit-identical to its one-shot `slleval run` counterpart (no
+//! cross-run contention on executor seeds or rate-limit state).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::registry::{ClaimedRun, DataSpec, RunRegistry};
+use crate::coordinator::{EvalRunner, InferenceStats, MetricValue, RunObserver};
+use crate::data::{synth, DataFrame};
+use crate::engine::Progress;
+use crate::util::json::Json;
+
+/// Spawn the run-loop thread. It exits once `stop` is set (claiming
+/// wakes at least every 100ms to check).
+pub fn spawn(
+    registry: Arc<RunRegistry>,
+    runner: EvalRunner,
+    stop: Arc<AtomicBool>,
+) -> Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name("slleval-serve-runloop".into())
+        .spawn(move || run_loop(&registry, runner, &stop))
+        .context("spawning serve run loop")
+}
+
+fn run_loop(registry: &Arc<RunRegistry>, mut runner: EvalRunner, stop: &AtomicBool) {
+    while let Some(claim) = registry.claim_next(stop) {
+        execute(registry, &mut runner, claim);
+    }
+}
+
+/// Drive one claimed run to a terminal state. A panic anywhere in the
+/// pipeline settles the run as `failed` and leaves the daemon serving —
+/// the run loop is the serve-side analogue of the executor-side "UDF
+/// panics become task errors" rule.
+fn execute(registry: &Arc<RunRegistry>, runner: &mut EvalRunner, claim: ClaimedRun) {
+    let id = claim.id.clone();
+    let outcome = catch_unwind(AssertUnwindSafe(|| drive(registry, runner, &claim)));
+    // Detach per-run plumbing whatever happened, so a stale abort flag
+    // or observer can never leak into the next tenant's run.
+    runner.abort = None;
+    runner.progress = None;
+    runner.observer = None;
+    match outcome {
+        Ok(Ok(result)) => registry.finish(&id, result),
+        Ok(Err(e)) => registry.fail(&id, &format!("{e:#}")),
+        Err(payload) => registry.fail(&id, &format!("run panicked: {}", panic_text(&payload))),
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn drive(registry: &Arc<RunRegistry>, runner: &mut EvalRunner, claim: &ClaimedRun) -> Result<Json> {
+    let df = load_frame(&claim.data)?;
+    let progress = Arc::new(Progress::new(df.len()));
+    registry.set_progress(&claim.id, Arc::clone(&progress));
+    runner.progress = Some(progress);
+    runner.abort = Some(Arc::clone(&claim.abort));
+    runner.observer = Some(Arc::new(RegistryObserver {
+        registry: Arc::clone(registry),
+        id: claim.id.clone(),
+    }));
+    let result = runner.evaluate(&df, &claim.task)?;
+    Ok(result.to_json())
+}
+
+fn load_frame(data: &DataSpec) -> Result<DataFrame> {
+    match &data.path {
+        Some(path) => crate::data::io::read_jsonl(Path::new(path))
+            .with_context(|| format!("loading data file {path}")),
+        None => Ok(synth::generate_default(data.n, data.seed)),
+    }
+}
+
+/// Bridges [`RunObserver`] callbacks (fired synchronously from the
+/// run's driving thread) into registry snapshots that the HTTP threads
+/// serve from `/runs/{id}` and `/runs/{id}/partial`.
+struct RegistryObserver {
+    registry: Arc<RunRegistry>,
+    id: String,
+}
+
+impl RunObserver for RegistryObserver {
+    fn inference_done(&self, stats: &InferenceStats) {
+        let snapshot = Json::obj(vec![
+            ("inference", stats.to_json()),
+            ("scheduler", stats.sched.to_json()),
+        ]);
+        self.registry.record_inference(&self.id, snapshot);
+    }
+
+    fn metric_done(&self, index: usize, total: usize, value: &MetricValue) {
+        self.registry.record_metric(&self.id, index, total, value.to_json());
+    }
+}

@@ -1,0 +1,354 @@
+//! Eval-service integration: real loopback sockets against an
+//! in-process [`ServeDaemon`] (`slleval serve` minus the process
+//! wrapper — CI's serve smoke step covers the binary path).
+//!
+//! Acceptance coverage:
+//!
+//! - full HTTP lifecycle: submit → observe `running` with at least one
+//!   `/partial` snapshot carrying a bootstrap CI → `done` with a result
+//!   bit-identical to a one-shot `EvalRunner::evaluate` of the same
+//!   task against the same cache directory;
+//! - `POST /runs/{id}/cancel` mid-inference stops issuing new tasks
+//!   and settles the run as `cancelled` (result stays 409);
+//! - malformed submissions answer 400 and the daemon keeps serving;
+//! - multi-tenant cache sharing: a resubmitted task reports
+//!   `api_calls == 0` with bit-identical metric values and CIs.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use spark_llm_eval::config::{CachePolicy, EvalTask, MetricConfig, ServeConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+use spark_llm_eval::serve::ServeDaemon;
+use spark_llm_eval::util::json::Json;
+
+// ---------------------------------------------------------------- helpers
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("slleval-serve-test")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn serve_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::default();
+    cfg.listen = "127.0.0.1:0".into();
+    cfg
+}
+
+fn fast_config() -> SimServiceConfig {
+    SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: false,
+        ..Default::default()
+    }
+}
+
+fn fast_runner() -> EvalRunner {
+    let mut r = EvalRunner::with_clock(VirtualClock::new());
+    r.service_config = fast_config();
+    r
+}
+
+/// Real-clock runner with fault-free, latency-scaled sleeps — slow
+/// enough that a polling client reliably observes intermediate states.
+fn live_config(latency_scale: f64) -> SimServiceConfig {
+    SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        latency_scale,
+        ..Default::default()
+    }
+}
+
+fn live_runner(latency_scale: f64) -> EvalRunner {
+    let mut r = EvalRunner::new();
+    r.service_config = live_config(latency_scale);
+    r
+}
+
+/// One raw HTTP/1.1 exchange over a fresh connection.
+fn request(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let raw = raw_request(
+        addr,
+        &format!(
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.map(str::len).unwrap_or(0),
+            body.unwrap_or("")
+        ),
+    );
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in response: {raw:?}"));
+    let body_text = raw.split("\r\n\r\n").nth(1).unwrap_or("");
+    let body = Json::parse(body_text).unwrap_or(Json::Null);
+    (status, body)
+}
+
+/// Ship raw bytes, read to server-side close.
+fn raw_request(addr: SocketAddr, payload: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect to daemon");
+    stream.write_all(payload.as_bytes()).unwrap();
+    let mut out = String::new();
+    let _ = stream.read_to_string(&mut out);
+    out
+}
+
+fn submit_body(task: &EvalTask, n: usize, seed: u64) -> String {
+    format!("{{\"task\": {}, \"data\": {{\"n\": {n}, \"seed\": {seed}}}}}", task.to_json())
+}
+
+fn submit(addr: SocketAddr, task: &EvalTask, n: usize, seed: u64) -> String {
+    let (status, body) = request(addr, "POST", "/runs", Some(&submit_body(task, n, seed)));
+    assert_eq!(status, 201, "submit failed: {body:?}");
+    body.get("id").unwrap().as_str().unwrap().to_string()
+}
+
+fn state_of(addr: SocketAddr, id: &str) -> (String, Json) {
+    let (status, body) = request(addr, "GET", &format!("/runs/{id}"), None);
+    assert_eq!(status, 200, "{body:?}");
+    (body.get("state").unwrap().as_str().unwrap().to_string(), body)
+}
+
+fn wait_terminal(addr: SocketAddr, id: &str, timeout: Duration) -> (String, Json) {
+    let t0 = Instant::now();
+    loop {
+        let (state, body) = state_of(addr, id);
+        if matches!(state.as_str(), "done" | "failed" | "cancelled") {
+            return (state, body);
+        }
+        assert!(t0.elapsed() < timeout, "run {id} stuck in state {state}: {body:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ---------------------------------------------------------------- lifecycle
+
+/// The tentpole acceptance path: submit over a real socket, observe the
+/// run `running` with a partial snapshot whose first settled metric
+/// already carries a bootstrap CI, then fetch the `done` result and pin
+/// it bit-for-bit against a one-shot `evaluate` of the same task on the
+/// same shared cache.
+#[test]
+fn lifecycle_running_partial_ci_then_done_bit_identical_to_oneshot() {
+    let cache_dir = tmp_dir("lifecycle-cache");
+    // exact_match settles quickly; the llm_judge metric then runs ~80
+    // sequential driver-side judge calls (~10ms median at scale 0.03),
+    // holding the run observably `running` with a partial available.
+    let mut task = EvalTask::default();
+    task.task_id = "serve-lifecycle".into();
+    task.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("helpfulness", "llm_judge"),
+    ];
+    task.executors = 4;
+    let (n, seed) = (80, 11);
+
+    let mut runner = live_runner(0.03);
+    runner.open_cache(&cache_dir, CachePolicy::Enabled).unwrap();
+    let daemon = ServeDaemon::start_with_runner(&serve_cfg(), runner).unwrap();
+    let addr = daemon.addr();
+
+    let (status, health) = request(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200, "{health:?}");
+
+    let id = submit(addr, &task, n, seed);
+    let mut saw_running_partial_with_ci = false;
+    let t0 = Instant::now();
+    let (final_state, final_status) = loop {
+        let (state, status_body) = state_of(addr, &id);
+        if state == "running" && !saw_running_partial_with_ci {
+            let (code, partial) = request(addr, "GET", &format!("/runs/{id}/partial"), None);
+            assert_eq!(code, 200, "{partial:?}");
+            if partial.get("metrics_done").unwrap().as_f64().unwrap() >= 1.0 {
+                let metrics = match partial.get("metrics").unwrap() {
+                    Json::Arr(items) => items.clone(),
+                    other => panic!("partial metrics not an array: {other:?}"),
+                };
+                let first = &metrics[0];
+                assert_eq!(first.get("name").unwrap().as_str().unwrap(), "exact_match");
+                // The incremental estimate must carry its bootstrap CI,
+                // not a bare point value.
+                let lo = first.get("ci_lower").unwrap().as_f64().unwrap();
+                let hi = first.get("ci_upper").unwrap().as_f64().unwrap();
+                let value = first.get("value").unwrap().as_f64().unwrap();
+                assert!(lo <= value && value <= hi, "CI {lo}..{hi} vs {value}");
+                saw_running_partial_with_ci = true;
+            }
+        }
+        if matches!(state.as_str(), "done" | "failed" | "cancelled") {
+            break (state, status_body);
+        }
+        assert!(t0.elapsed() < Duration::from_secs(60), "run stuck: {status_body:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(final_state, "done", "{final_status:?}");
+    assert!(
+        saw_running_partial_with_ci,
+        "never observed a running-state partial snapshot with a CI"
+    );
+    // The stage-2 snapshot is live on the status endpoint.
+    let inference = final_status.get("inference").unwrap();
+    assert!(inference.get("scheduler").is_ok(), "{inference:?}");
+
+    let (status, served) = request(addr, "GET", &format!("/runs/{id}/result"), None);
+    assert_eq!(status, 200, "{served:?}");
+    daemon.shutdown();
+
+    // One-shot path: same task, same data, same shared cache directory.
+    let mut oneshot = live_runner(0.03);
+    oneshot.open_cache(&cache_dir, CachePolicy::Enabled).unwrap();
+    let df = synth::generate_default(n, seed);
+    let direct = oneshot.evaluate(&df, &task).unwrap().to_json();
+
+    // Bit-identical metrics: full JSON equality, values and CIs alike.
+    assert_eq!(served.get("metrics").unwrap(), direct.get("metrics").unwrap());
+    assert_eq!(served.get("task_id").unwrap(), direct.get("task_id").unwrap());
+}
+
+// ---------------------------------------------------------------- cancel
+
+#[test]
+fn cancel_mid_inference_settles_cancelled_and_result_stays_409() {
+    // Slow enough to cancel mid-inference: ~100ms median latency,
+    // small batches so the scheduler checks the abort flag often.
+    let mut task = EvalTask::default();
+    task.task_id = "serve-cancel".into();
+    task.executors = 2;
+    task.inference.batch_size = 5;
+    task.scheduler.speculation = false;
+
+    let daemon = ServeDaemon::start_with_runner(&serve_cfg(), live_runner(0.3)).unwrap();
+    let addr = daemon.addr();
+    let id = submit(addr, &task, 300, 7);
+
+    // Wait until it is actually running, let some inference happen.
+    let t0 = Instant::now();
+    loop {
+        let (state, body) = state_of(addr, &id);
+        if state == "running" {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "never started: {body:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    std::thread::sleep(Duration::from_millis(150));
+
+    let (status, body) = request(addr, "POST", &format!("/runs/{id}/cancel"), None);
+    assert_eq!(status, 200, "{body:?}");
+
+    let (state, body) = wait_terminal(addr, &id, Duration::from_secs(30));
+    assert_eq!(state, "cancelled", "{body:?}");
+    assert!(body.get("error").unwrap().as_str().is_ok(), "{body:?}");
+
+    let (status, body) = request(addr, "GET", &format!("/runs/{id}/result"), None);
+    assert_eq!(status, 409, "{body:?}");
+    assert_eq!(body.get("state").unwrap().as_str().unwrap(), "cancelled");
+
+    // Cancelling a terminal run is a no-op, not an error.
+    let (status, body) = request(addr, "POST", &format!("/runs/{id}/cancel"), None);
+    assert_eq!(status, 200);
+    assert_eq!(body.get("state").unwrap().as_str().unwrap(), "cancelled");
+    daemon.shutdown();
+}
+
+// ---------------------------------------------------------------- malformed
+
+#[test]
+fn malformed_requests_are_client_errors_and_daemon_keeps_serving() {
+    let daemon = ServeDaemon::start_with_runner(&serve_cfg(), fast_runner()).unwrap();
+    let addr = daemon.addr();
+
+    // Broken JSON body → 400.
+    let (status, body) = request(addr, "POST", "/runs", Some("{not json"));
+    assert_eq!(status, 400, "{body:?}");
+    assert!(body.get("error").is_ok());
+
+    // Valid JSON, invalid task → 400.
+    let (status, _) = request(addr, "POST", "/runs", Some("{\"task\": {\"executors\": 0}}"));
+    assert_eq!(status, 400);
+
+    // Not even HTTP → 400 on the raw connection.
+    let raw = raw_request(addr, "EHLO not-http\r\n\r\n");
+    assert!(raw.starts_with("HTTP/1.1 400 "), "{raw:?}");
+
+    // Unknown routes and wrong verbs.
+    let (status, _) = request(addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    let (status, _) = request(addr, "DELETE", "/runs", None);
+    assert_eq!(status, 405);
+    let (status, _) = request(addr, "GET", "/runs/run-000099", None);
+    assert_eq!(status, 404);
+
+    // After all of the above, the daemon still serves real work.
+    let (status, body) = request(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200, "{body:?}");
+    let id = submit(addr, &EvalTask::default(), 40, 3);
+    let (state, body) = wait_terminal(addr, &id, Duration::from_secs(60));
+    assert_eq!(state, "done", "{body:?}");
+
+    // The registry lists the (only) successful run.
+    let (status, listing) = request(addr, "GET", "/runs", None);
+    assert_eq!(status, 200);
+    let runs = match listing.get("runs").unwrap() {
+        Json::Arr(items) => items.clone(),
+        other => panic!("runs not an array: {other:?}"),
+    };
+    assert_eq!(runs.len(), 1, "{listing:?}");
+    assert_eq!(runs[0].get("id").unwrap().as_str().unwrap(), id);
+    daemon.shutdown();
+}
+
+// ---------------------------------------------------------------- cache
+
+/// The multi-tenant guarantee: two sequential submissions of the same
+/// EvalTask through one daemon share its response cache — the second
+/// reports zero provider calls and bit-identical metric values/CIs.
+#[test]
+fn resubmission_pays_zero_inference_and_is_bit_identical() {
+    let cache_dir = tmp_dir("tenant-cache");
+    let mut runner = fast_runner();
+    runner.open_cache(&cache_dir, CachePolicy::Enabled).unwrap();
+    let daemon = ServeDaemon::start_with_runner(&serve_cfg(), runner).unwrap();
+    let addr = daemon.addr();
+
+    let mut task = EvalTask::default();
+    task.task_id = "serve-tenant".into();
+    task.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("token_f1", "lexical"),
+    ];
+
+    let first = submit(addr, &task, 150, 21);
+    let (state, body) = wait_terminal(addr, &first, Duration::from_secs(60));
+    assert_eq!(state, "done", "{body:?}");
+    let second = submit(addr, &task, 150, 21);
+    let (state, body) = wait_terminal(addr, &second, Duration::from_secs(60));
+    assert_eq!(state, "done", "{body:?}");
+
+    let (_, result_a) = request(addr, "GET", &format!("/runs/{first}/result"), None);
+    let (_, result_b) = request(addr, "GET", &format!("/runs/{second}/result"), None);
+    daemon.shutdown();
+
+    let inference_a = result_a.get("inference").unwrap();
+    let inference_b = result_b.get("inference").unwrap();
+    assert!(inference_a.get("api_calls").unwrap().as_f64().unwrap() > 0.0, "{inference_a:?}");
+    assert_eq!(inference_b.get("api_calls").unwrap().as_f64().unwrap(), 0.0, "{inference_b:?}");
+    assert!(inference_b.get("cache_hits").unwrap().as_f64().unwrap() >= 150.0, "{inference_b:?}");
+    assert_eq!(
+        inference_b.get("total_cost_usd").unwrap().as_f64().unwrap(),
+        0.0,
+        "{inference_b:?}"
+    );
+    // Bit-identical metric values and CIs, run to run.
+    assert_eq!(result_a.get("metrics").unwrap(), result_b.get("metrics").unwrap());
+}
