@@ -1,0 +1,115 @@
+//! Adaptive early stopping — wave-based evaluation with certifiable CIs
+//! (ISSUE 9 / Cer-Eval-style certified evaluation).
+//!
+//! Adds a `stopping` block to an otherwise ordinary task: the runner
+//! issues inference in waves, recomputes each metric's CI after every
+//! wave under a geometric alpha-spending correction, and stops spending
+//! inference the moment every metric's half-width certifies at the
+//! target. The saved suffix is accounted (`rows_saved`), never billed.
+//!
+//! Run with `cargo run --release --example stopping [n] [backend]`
+//! (backend: "thread" default, "process", or "remote" — same contract
+//! as the quickstart example).
+
+use spark_llm_eval::config::{CachePolicy, CiMethod, EvalTask, MetricConfig, StoppingConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+use spark_llm_eval::report;
+
+fn main() -> anyhow::Result<()> {
+    let n = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(3_000usize);
+    let backend = match std::env::args().nth(2).as_deref() {
+        Some(b) => spark_llm_eval::config::BackendKind::from_str(b)?,
+        None => spark_llm_eval::config::BackendKind::Thread,
+    };
+
+    let mut task = EvalTask::default();
+    task.task_id = "adaptive-stopping-eval".into();
+    // Cache off so api_calls counts exactly the inference that stopping
+    // is there to save.
+    task.inference.cache_policy = CachePolicy::Disabled;
+    task.inference.batch_size = 25;
+    task.scheduler.speculation = false;
+    task.scheduler.adaptive_split = false;
+    task.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("token_f1", "lexical"),
+    ];
+    task.statistics.ci_method = CiMethod::Analytic;
+    // Certify every metric to ±0.075 with a total error budget of 5%
+    // spent geometrically over looks of 200 rows.
+    task.stopping = Some(StoppingConfig {
+        ci_half_width: 0.075,
+        alpha: 0.05,
+        wave_size: 200,
+        min_rows: 200,
+        spend_alpha: true,
+    });
+    task.backend = backend;
+    if backend == spark_llm_eval::config::BackendKind::Remote {
+        task.hosts = std::env::var("SLLEVAL_REMOTE_HOSTS")
+            .map(|hosts| {
+                hosts
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|h| !h.is_empty())
+                    .map(String::from)
+                    .collect()
+            })
+            .unwrap_or_default();
+    }
+
+    println!(
+        "== Spark-LLM-Eval adaptive stopping: {} examples, {} backend ==\n",
+        n,
+        backend.as_str()
+    );
+    let df = synth::generate_default(n, 42);
+
+    let mut runner = EvalRunner::with_clock(VirtualClock::new());
+    runner.service_config = SimServiceConfig { sleep_latency: false, ..Default::default() };
+
+    let result = runner.evaluate(&df, &task)?;
+    println!("{}", report::eval_summary(&result));
+
+    let s = &result.inference.sched;
+    println!(
+        "certified with {} of {} rows — {} rows ({:.1}%) of inference never issued",
+        s.rows_evaluated,
+        n,
+        s.rows_saved,
+        100.0 * s.rows_saved as f64 / n as f64,
+    );
+
+    // Contract checks (CI smoke runs this example across backends).
+    assert_eq!(s.rows_evaluated + s.rows_saved, n, "every row evaluated or saved");
+    assert!(s.rows_saved > 0, "the loose target must stop before the frame ends");
+    assert_eq!(result.inference.api_calls, s.rows_evaluated as u64);
+    let target = task.stopping.as_ref().unwrap().ci_half_width;
+    for m in &result.metrics {
+        assert_eq!(m.certified, Some(true), "{} must certify", m.name);
+        let half_width = (m.ci.hi - m.ci.lo) / 2.0;
+        assert!(
+            half_width <= target,
+            "{}: half-width {half_width:.4} exceeds the certified target ±{target}",
+            m.name
+        );
+        println!(
+            "{}: {:.4} ±{:.4} (certified at wave {:?})",
+            m.name, m.value, half_width, m.stopped_at_wave
+        );
+    }
+
+    // Machine-readable result for cross-backend checks (CI).
+    if let Ok(out) = std::env::var("STOPPING_OUT") {
+        std::fs::write(&out, result.to_json().to_pretty())?;
+        println!("result JSON written to {out}");
+    }
+    println!("\nstopping OK");
+    Ok(())
+}

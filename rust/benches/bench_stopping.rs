@@ -1,0 +1,166 @@
+//! Adaptive-stopping benchmark: a full evaluation vs a wave-gated run
+//! with a loose certification target on a large simulated dataset.
+//!
+//! This is ISSUE 9's acceptance gate: with `stopping` configured the run
+//! must (a) save at least half of the inference calls at a loose ±0.075
+//! target, (b) account every row as evaluated-or-saved, (c) certify
+//! every metric at the target half-width, and (d) land its point
+//! estimates inside the full run's confidence intervals — the saved
+//! inference must not have bought a different answer. Results are
+//! recorded in `BENCH_stopping.json` at the repository root.
+
+use spark_llm_eval::config::{CachePolicy, CiMethod, EvalTask, MetricConfig, StoppingConfig};
+use spark_llm_eval::coordinator::{EvalResult, EvalRunner};
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+use spark_llm_eval::util::bench::section;
+use spark_llm_eval::util::json::Json;
+use std::time::Instant;
+
+const ROWS: usize = 4000;
+const SEED: u64 = 0x5709;
+const TARGET_HALF_WIDTH: f64 = 0.075;
+
+fn runner() -> EvalRunner {
+    let mut r = EvalRunner::with_clock(VirtualClock::new());
+    r.service_config = SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: false,
+        ..Default::default()
+    };
+    r
+}
+
+fn task() -> EvalTask {
+    let mut task = EvalTask::default();
+    // Cache off and speculation/splitting off so api_calls counts exactly
+    // one provider call per evaluated row — the quantity stopping saves.
+    task.inference.cache_policy = CachePolicy::Disabled;
+    task.scheduler.speculation = false;
+    task.scheduler.adaptive_split = false;
+    task.statistics.ci_method = CiMethod::Analytic;
+    task.metrics = vec![
+        MetricConfig::new("exact_match", "lexical"),
+        MetricConfig::new("token_f1", "lexical"),
+    ];
+    task
+}
+
+fn run(task: &EvalTask) -> (f64, EvalResult) {
+    let df = synth::generate_default(ROWS, SEED);
+    let t = Instant::now();
+    let result = runner().evaluate(&df, task).expect("bench run");
+    (t.elapsed().as_secs_f64(), result)
+}
+
+fn main() {
+    section(&format!(
+        "adaptive stopping benchmark — {ROWS} rows, target ±{TARGET_HALF_WIDTH}"
+    ));
+
+    let full_task = task();
+    let (t_full, full) = run(&full_task);
+    assert_eq!(full.inference.api_calls, ROWS as u64, "full run pays for every row");
+
+    let mut stopped_task = task();
+    stopped_task.stopping = Some(StoppingConfig {
+        ci_half_width: TARGET_HALF_WIDTH,
+        alpha: 0.05,
+        wave_size: 200,
+        min_rows: 200,
+        spend_alpha: true,
+    });
+    let (t_stopped, stopped) = run(&stopped_task);
+
+    let s = &stopped.inference.sched;
+    println!(
+        "full {:>7.1}ms ({} calls) | stopped {:>7.1}ms ({} calls) | \
+         {} waves, {} rows evaluated, {} rows saved",
+        t_full * 1e3,
+        full.inference.api_calls,
+        t_stopped * 1e3,
+        stopped.inference.api_calls,
+        s.waves,
+        s.rows_evaluated,
+        s.rows_saved,
+    );
+
+    // Accounting gate: every row is evaluated or deliberately saved, and
+    // the loose target saves at least half of the inference calls.
+    assert_eq!(s.rows_evaluated + s.rows_saved, ROWS);
+    assert_eq!(stopped.inference.api_calls, s.rows_evaluated as u64);
+    assert!(
+        2 * stopped.inference.api_calls <= full.inference.api_calls,
+        "loose target must save ≥50% of inference calls \
+         (full {}, stopped {})",
+        full.inference.api_calls,
+        stopped.inference.api_calls,
+    );
+
+    let mut metric_jsons = Vec::new();
+    for m in &stopped.metrics {
+        let f = full.metric(&m.name).expect("metric present in full run");
+        let half_width = (m.ci.hi - m.ci.lo) / 2.0;
+        println!(
+            "{:<12} full {:.4} ({:.4}, {:.4}) | stopped {:.4} ±{:.4} \
+             certified={:?} wave={:?}",
+            m.name, f.value, f.ci.lo, f.ci.hi, m.value, half_width, m.certified, m.stopped_at_wave,
+        );
+        // Certification gate: every metric met the target half-width.
+        assert_eq!(m.certified, Some(true), "{} must certify", m.name);
+        assert!(
+            half_width <= TARGET_HALF_WIDTH,
+            "{}: final half-width {half_width:.4} exceeds the certified target",
+            m.name
+        );
+        // Answer-preservation gate: the stopped estimate lies inside the
+        // full run's CI — less inference, same statistical answer.
+        assert!(
+            f.ci.lo <= m.value && m.value <= f.ci.hi,
+            "{}: stopped estimate {:.4} outside full-run CI ({:.4}, {:.4})",
+            m.name,
+            m.value,
+            f.ci.lo,
+            f.ci.hi,
+        );
+        metric_jsons.push(Json::obj(vec![
+            ("name", Json::str(&m.name)),
+            ("value_full", Json::num(f.value)),
+            ("ci_full_lower", Json::num(f.ci.lo)),
+            ("ci_full_upper", Json::num(f.ci.hi)),
+            ("value_stopped", Json::num(m.value)),
+            ("half_width_stopped", Json::num(half_width)),
+            ("certified", Json::Bool(m.certified == Some(true))),
+            (
+                "stopped_at_wave",
+                m.stopped_at_wave.map(|w| Json::num(w as f64)).unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("benchmark", Json::str("bench_stopping")),
+        ("rows", Json::num(ROWS as f64)),
+        ("target_half_width", Json::num(TARGET_HALF_WIDTH)),
+        ("full_api_calls", Json::num(full.inference.api_calls as f64)),
+        ("stopped_api_calls", Json::num(stopped.inference.api_calls as f64)),
+        (
+            "saved_fraction",
+            Json::num(s.rows_saved as f64 / ROWS as f64),
+        ),
+        ("rows_evaluated", Json::num(s.rows_evaluated as f64)),
+        ("rows_saved", Json::num(s.rows_saved as f64)),
+        ("waves", Json::num(s.waves as f64)),
+        ("full_secs", Json::num(t_full)),
+        ("stopped_secs", Json::num(t_stopped)),
+        ("metrics", Json::arr(metric_jsons)),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_stopping.json");
+    std::fs::write(&out_path, report.to_pretty()).expect("writing BENCH_stopping.json");
+    println!("\nresults written to {}", out_path.display());
+}

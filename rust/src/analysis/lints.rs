@@ -452,6 +452,29 @@ mod tests {
     }
 
     #[test]
+    fn wave_loop_modules_are_determinism_scoped() {
+        // The adaptive-stopping wave loop spans these modules; a HashMap
+        // (or an unmarked Instant::now) in any of them can change wave
+        // decisions between replays, so all must sit inside the
+        // determinism scope.
+        for rel in [
+            "rust/src/coordinator/stopping.rs",
+            "rust/src/coordinator/runner.rs",
+            "rust/src/sched/mod.rs",
+            "rust/src/sched/backend.rs",
+        ] {
+            let file = SourceFile {
+                rel: rel.to_string(),
+                lexed: super::super::lexer::lex("fn f() { let m = HashMap::new(); }"),
+            };
+            assert!(
+                determinism(&file).iter().any(|d| d.subject == "HashMap"),
+                "{rel} must be determinism-scoped"
+            );
+        }
+    }
+
+    #[test]
     fn word_boundaries_respected() {
         assert!(word_in("the `seed` field", "seed"));
         assert!(word_in("alpha|beta", "alpha"));

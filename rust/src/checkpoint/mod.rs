@@ -524,6 +524,52 @@ impl StageCheckpoint {
         Ok(())
     }
 
+    /// Record the row ranges deliberately skipped by adaptive early
+    /// stopping (the run's `rows_saved`), so `--resume` and `rescore`
+    /// can tell "saved on purpose" from "missing". Overwrites atomically
+    /// — the settled boundary is a deterministic function of the config
+    /// and the evaluated prefix, so a resumed run rewrites identical
+    /// content.
+    pub fn record_skipped(&self, ranges: &[(usize, usize)]) -> Result<()> {
+        for &(start, end) in ranges {
+            if start >= end || end > self.total_rows {
+                bail!(
+                    "skipped range [{start}, {end}) out of bounds for a {}-row stage",
+                    self.total_rows
+                );
+            }
+        }
+        let items: Vec<Json> = ranges
+            .iter()
+            .map(|&(s, e)| Json::arr(vec![Json::num(s as f64), Json::num(e as f64)]))
+            .collect();
+        let doc = Json::obj(vec![("skipped", Json::arr(items))]);
+        fsx::write_atomic(&self.dir.join("skipped.json"), doc.to_pretty().as_bytes())
+    }
+
+    /// The deliberately-skipped ranges recorded by
+    /// [`Self::record_skipped`]; empty when the stage ran (or is still
+    /// running) to completion.
+    pub fn skipped(&self) -> Result<Vec<(usize, usize)>> {
+        let path = self.dir.join("skipped.json");
+        if !path.exists() {
+            return Ok(Vec::new());
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading skipped manifest {path:?}"))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("corrupt skipped manifest {path:?}: {e}"))?;
+        let mut out = Vec::new();
+        for item in doc.get("skipped")?.as_arr()? {
+            let pair = item.as_arr()?;
+            if pair.len() != 2 {
+                bail!("corrupt skipped manifest {path:?}: range is not a [start, end] pair");
+            }
+            out.push((pair[0].as_usize()?, pair[1].as_usize()?));
+        }
+        Ok(out)
+    }
+
     /// Fraction of the stage's rows already covered by the manifest.
     pub fn coverage(&self) -> Result<f64> {
         if self.total_rows == 0 {
@@ -830,6 +876,21 @@ mod tests {
         let restored = stage.restore(&dec).unwrap();
         assert_eq!(restored.len(), 1);
         assert_eq!(restored[0].2, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn skipped_ranges_round_trip_and_default_empty() {
+        let run = RunCheckpoint::create(&tmp_dir("skipped")).unwrap();
+        let stage = run.stage("s", &Json::Null, 100).unwrap();
+        assert!(stage.skipped().unwrap().is_empty(), "no manifest means nothing skipped");
+        stage.record_skipped(&[(40, 100)]).unwrap();
+        assert_eq!(stage.skipped().unwrap(), vec![(40, 100)]);
+        // A resumed run replays the same deterministic stop decision and
+        // rewrites identical content — benign.
+        stage.record_skipped(&[(40, 100)]).unwrap();
+        assert_eq!(stage.skipped().unwrap(), vec![(40, 100)]);
+        assert!(stage.record_skipped(&[(90, 101)]).is_err(), "out of bounds");
+        assert!(stage.record_skipped(&[(50, 50)]).is_err(), "empty range");
     }
 
     #[test]

@@ -222,6 +222,76 @@ impl Default for StatisticsConfig {
     }
 }
 
+/// Adaptive early-stopping configuration (Cer-Eval-style certifiable
+/// cost-efficient evaluation): the runner issues inference and
+/// pure-metric work in waves and stops once every metric's CI half-width
+/// meets `ci_half_width` at level `alpha` under the sequential
+/// correction. Absent from the task JSON = disabled = the classic
+/// all-at-once run, bit for bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoppingConfig {
+    /// Target CI half-width ("± margin"): a metric is certified once its
+    /// bootstrap/analytic CI half-width is at or below this.
+    pub ci_half_width: f64,
+    /// Total Type-I error budget for the certification across all waves.
+    pub alpha: f64,
+    /// Rows added per wave after the first look.
+    pub wave_size: usize,
+    /// Rows the first wave must cover before any stopping decision
+    /// (guards against certifying on tiny-n degenerate CIs).
+    pub min_rows: usize,
+    /// Sequential correction: `true` (default) spends the alpha budget
+    /// geometrically over looks (look k tests at alpha·2^-(k+1), union
+    /// bound keeps the total ≤ alpha); `false` naively tests each look
+    /// at full alpha (anytime validity is then NOT guaranteed).
+    pub spend_alpha: bool,
+}
+
+impl Default for StoppingConfig {
+    fn default() -> Self {
+        Self {
+            ci_half_width: 0.05,
+            alpha: 0.05,
+            wave_size: 200,
+            min_rows: 50,
+            spend_alpha: true,
+        }
+    }
+}
+
+impl StoppingConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.ci_half_width > 0.0) || !self.ci_half_width.is_finite() {
+            bail!("stopping.ci_half_width must be a positive number");
+        }
+        if !(self.alpha > 0.0 && self.alpha < 1.0) {
+            bail!("stopping.alpha must be in (0, 1)");
+        }
+        if self.wave_size == 0 {
+            bail!("stopping.wave_size must be >= 1");
+        }
+        if self.min_rows < 2 {
+            bail!("stopping.min_rows must be >= 2 (a CI needs n >= 2)");
+        }
+        Ok(())
+    }
+
+    /// The per-look significance level: look `k` (0-based) tests at
+    /// `alpha · 2^-(k+1)` when spending, so the union bound over every
+    /// look stays within the total `alpha` budget. Certifying at a
+    /// stricter level implies certification at level `alpha`, so the
+    /// scheme is conservative, never anti-conservative.
+    pub fn look_alpha(&self, look: usize) -> f64 {
+        if self.spend_alpha {
+            // Floor keeps very deep looks from underflowing to a level
+            // no CI method can meaningfully produce.
+            (self.alpha * 0.5f64.powi(look.min(50) as i32 + 1)).max(1e-12)
+        } else {
+            self.alpha
+        }
+    }
+}
+
 /// Run-durability configuration: where (and whether) to checkpoint
 /// completed scheduler tasks, and whether this run resumes an interrupted
 /// one (see [`crate::checkpoint`]).
@@ -285,6 +355,12 @@ pub struct EvalTask {
     pub scheduler: SchedulerConfig,
     /// Run durability: task checkpointing and crash resumption.
     pub checkpoint: CheckpointConfig,
+    /// Adaptive early stopping (`stopping` in the JSON): evaluate in
+    /// waves and stop once every metric's CI half-width is certified at
+    /// the target. `None` (the default) = the classic all-at-once run,
+    /// bit for bit. See [`StoppingConfig`] and DESIGN.md
+    /// "Adaptive stopping".
+    pub stopping: Option<StoppingConfig>,
     /// Where executors physically run (`executor.backend` in the JSON):
     /// `thread` (default, in-process scoped threads — the pre-backend
     /// scheduler, bit for bit), `process` (one crash-isolated
@@ -311,6 +387,7 @@ impl Default for EvalTask {
             executors: 8,
             scheduler: SchedulerConfig::default(),
             checkpoint: CheckpointConfig::default(),
+            stopping: None,
             backend: BackendKind::default(),
             hosts: Vec::new(),
         }
@@ -369,6 +446,9 @@ impl EvalTask {
         }
         self.scheduler.validate()?;
         self.checkpoint.validate()?;
+        if let Some(stopping) = &self.stopping {
+            stopping.validate()?;
+        }
         if self.backend == BackendKind::Remote && self.hosts.is_empty() {
             bail!(
                 "the remote backend requires executor.hosts (or --hosts): \
@@ -470,6 +550,21 @@ impl EvalTask {
                     ("resume", Json::Bool(self.checkpoint.resume)),
                 ]),
             ),
+            (
+                "stopping",
+                self.stopping
+                    .as_ref()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("ci_half_width", Json::num(s.ci_half_width)),
+                            ("alpha", Json::num(s.alpha)),
+                            ("wave_size", Json::num(s.wave_size as f64)),
+                            ("min_rows", Json::num(s.min_rows as f64)),
+                            ("spend_alpha", Json::Bool(s.spend_alpha)),
+                        ])
+                    })
+                    .unwrap_or(Json::Null),
+            ),
         ])
     }
 
@@ -555,6 +650,16 @@ impl EvalTask {
                 dir: c.opt("dir").and_then(|d| d.as_str().ok()).map(String::from),
                 resume: c.bool_or("resume", false),
             };
+        }
+        if let Some(s) = v.opt("stopping") {
+            let default = StoppingConfig::default();
+            task.stopping = Some(StoppingConfig {
+                ci_half_width: s.f64_or("ci_half_width", default.ci_half_width),
+                alpha: s.f64_or("alpha", default.alpha),
+                wave_size: s.usize_or("wave_size", default.wave_size),
+                min_rows: s.usize_or("min_rows", default.min_rows),
+                spend_alpha: s.bool_or("spend_alpha", default.spend_alpha),
+            });
         }
         task.validate()?;
         Ok(task)
@@ -816,6 +921,65 @@ mod tests {
         let mut bad = EvalTask::default();
         bad.inference.concurrency = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn stopping_round_trips_and_defaults_to_none() {
+        // No `stopping` block = disabled, and the default task
+        // round-trips with it still disabled (the bit-identity contract).
+        let plain = EvalTask::default();
+        assert!(plain.stopping.is_none());
+        let restored = EvalTask::from_json(&plain.to_json()).unwrap();
+        assert!(restored.stopping.is_none());
+        assert_eq!(plain, restored);
+
+        let mut task = EvalTask::default();
+        task.stopping = Some(StoppingConfig {
+            ci_half_width: 0.02,
+            alpha: 0.1,
+            wave_size: 150,
+            min_rows: 60,
+            spend_alpha: false,
+        });
+        let restored = EvalTask::from_json(&task.to_json()).unwrap();
+        assert_eq!(task, restored);
+
+        // An empty `{"stopping": {}}` block enables stopping with the
+        // documented defaults.
+        let mut json = EvalTask::default().to_json();
+        if let Json::Obj(map) = &mut json {
+            map.insert("stopping".into(), Json::obj(vec![]));
+        }
+        let parsed = EvalTask::from_json(&json).unwrap();
+        assert_eq!(parsed.stopping, Some(StoppingConfig::default()));
+    }
+
+    #[test]
+    fn stopping_validation_rejects_bad_fields() {
+        let mut t = EvalTask::default();
+        t.stopping = Some(StoppingConfig { ci_half_width: 0.0, ..Default::default() });
+        assert!(t.validate().is_err());
+        t.stopping = Some(StoppingConfig { alpha: 1.0, ..Default::default() });
+        assert!(t.validate().is_err());
+        t.stopping = Some(StoppingConfig { wave_size: 0, ..Default::default() });
+        assert!(t.validate().is_err());
+        t.stopping = Some(StoppingConfig { min_rows: 1, ..Default::default() });
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn alpha_spending_schedule_is_geometric_and_bounded() {
+        let s = StoppingConfig::default();
+        assert!((s.look_alpha(0) - 0.025).abs() < 1e-15);
+        assert!((s.look_alpha(1) - 0.0125).abs() < 1e-15);
+        // The union bound over all looks stays within alpha.
+        let total: f64 = (0..40).map(|k| s.look_alpha(k)).sum();
+        assert!(total <= s.alpha + 1e-12, "spent {total} > alpha {}", s.alpha);
+        // Deep looks never underflow to zero.
+        assert!(s.look_alpha(500) > 0.0);
+        // spend_alpha = false tests every look at full alpha.
+        let naive = StoppingConfig { spend_alpha: false, ..Default::default() };
+        assert_eq!(naive.look_alpha(7), naive.alpha);
     }
 
     #[test]

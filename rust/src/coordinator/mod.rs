@@ -12,6 +12,7 @@ pub mod pairwise;
 pub mod plan_exec;
 pub mod result;
 pub mod runner;
+pub mod stopping;
 pub mod streaming;
 pub mod worker;
 
@@ -21,13 +22,14 @@ pub use pairwise::{PairVerdict, PairwiseResult};
 pub use plan_exec::{PlanExecutor, PlanHost};
 pub use result::{ComparisonResult, EvalResult, InferenceStats, MetricComparison, MetricValue};
 pub use runner::{EvalRunner, RowInference, RunObserver};
+pub use stopping::{MetricStopState, StoppingDriver};
 pub use streaming::{StreamControl, StreamUpdate};
 pub use worker::{serve_connection, serve_worker_main, worker_main};
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{CachePolicy, EvalTask, MetricConfig};
+    use crate::config::{CachePolicy, CiMethod, EvalTask, MetricConfig, StoppingConfig};
     use crate::data::synth;
     use crate::providers::simulated::SimServiceConfig;
     use crate::ratelimit::VirtualClock;
@@ -347,6 +349,170 @@ mod tests {
         let r = runner.evaluate(&other, &durable_task()).unwrap();
         assert_eq!(r.inference.sched.restored_rows, 0);
         assert_eq!(r.inference.api_calls, 40);
+    }
+
+    // ---------------------------------------------------- adaptive stopping
+
+    /// Stopping setup sized so the simulated model certifies within a
+    /// wave or two at a loose ±0.15 target: even at the worst-case
+    /// observed rate (p̂ = 0.5) the wave geometry stays well clear of the
+    /// alpha-spending asymptote, so the test can never hang on an
+    /// unreachable target. Analytic CIs keep the certification check
+    /// closed-form (Wilson for the binary default metric).
+    fn stopping_task() -> EvalTask {
+        let mut task = durable_task();
+        task.statistics.ci_method = CiMethod::Analytic;
+        task.stopping = Some(StoppingConfig {
+            ci_half_width: 0.15,
+            alpha: 0.05,
+            wave_size: 60,
+            min_rows: 60,
+            spend_alpha: true,
+        });
+        task
+    }
+
+    #[test]
+    fn stopping_disabled_stays_bit_identical_and_unmarked() {
+        use crate::util::json::Json;
+        let df = synth::generate_default(120, 71);
+        let task = durable_task();
+        assert!(task.stopping.is_none());
+        let r1 = fast_runner().evaluate(&df, &task).unwrap();
+        let r2 = fast_runner().evaluate(&df, &task).unwrap();
+        // Metrics, CIs, and cost are pinned bit-identical: the
+        // wave-capable scheduler path with no gate must not perturb
+        // anything about an ordinary run.
+        let m1 = Json::arr(r1.metrics.iter().map(|m| m.to_json()).collect()).to_string();
+        let m2 = Json::arr(r2.metrics.iter().map(|m| m.to_json()).collect()).to_string();
+        assert_eq!(m1, m2);
+        assert_eq!(r1.inference.api_calls, r2.inference.api_calls);
+        assert_eq!(r1.inference.total_cost_usd, r2.inference.total_cost_usd);
+        // No stopping vocabulary leaks into a disabled run's result JSON.
+        let j = r1.to_json().to_string();
+        for key in ["stopped_at_wave", "certified"] {
+            assert!(!j.contains(key), "{key} must not appear in a disabled run");
+        }
+        let s = &r1.inference.sched;
+        assert_eq!((s.waves, s.rows_saved, s.rows_evaluated), (0, 0, 120));
+    }
+
+    #[test]
+    fn stopping_certifies_early_and_accounts_every_row() {
+        let n = 600;
+        let df = synth::generate_default(n, 72);
+        let task = stopping_task();
+        let r = fast_runner().evaluate(&df, &task).unwrap();
+        let s = &r.inference.sched;
+        assert!(s.rows_saved > 0, "loose target must settle before the frame ends");
+        assert_eq!(s.rows_evaluated + s.rows_saved, n, "every row is evaluated or saved");
+        assert!(2 * s.rows_saved >= n, "a ±0.15 target should save at least half");
+        assert!(s.waves >= 1);
+        // Inference only ever ran on the evaluated prefix: 1 call per row
+        // in the durable setup, and examples counts evaluated rows.
+        assert_eq!(r.inference.api_calls, s.rows_evaluated as u64);
+        assert_eq!(r.inference.examples, s.rows_evaluated);
+        let em = r.metric("exact_match").unwrap();
+        assert_eq!(em.certified, Some(true));
+        assert!(em.stopped_at_wave.is_some());
+        assert_eq!(em.n + em.n_failed, s.rows_evaluated);
+        // The final (full-level) CI meets the certified target too.
+        assert!((em.ci.hi - em.ci.lo) / 2.0 <= 0.15, "certified half-width holds");
+    }
+
+    #[test]
+    fn unreachable_target_evaluates_the_whole_frame_uncertified() {
+        let n = 120;
+        let df = synth::generate_default(n, 73);
+        let mut base = durable_task();
+        base.statistics.ci_method = CiMethod::Analytic;
+        let disabled = fast_runner().evaluate(&df, &base).unwrap();
+
+        let mut task = stopping_task();
+        task.stopping.as_mut().unwrap().ci_half_width = 1e-6;
+        let r = fast_runner().evaluate(&df, &task).unwrap();
+        let s = &r.inference.sched;
+        assert_eq!((s.rows_evaluated, s.rows_saved), (n, 0));
+        assert!(s.waves >= 1, "the gate looked at least once");
+        let em = r.metric("exact_match").unwrap();
+        assert_eq!(em.certified, Some(false));
+        assert_eq!(em.stopped_at_wave, None);
+        // The wave loop only changes *when* inference stops, never what a
+        // row contributes: exhausting the frame matches the disabled run.
+        let d = disabled.metric("exact_match").unwrap();
+        assert_eq!(em.value, d.value);
+        assert_eq!((em.ci.lo, em.ci.hi), (d.ci.lo, d.ci.hi));
+        assert_eq!(em.n, d.n);
+    }
+
+    #[test]
+    fn stopping_run_killed_mid_wave_resumes_without_reinference_and_same_certification() {
+        let n = 600;
+        let df = synth::generate_default(n, 74);
+        let task = stopping_task();
+
+        // Reference: one uninterrupted stopping run.
+        let full = fast_runner().evaluate(&df, &task).unwrap();
+        let evaluated = full.inference.sched.rows_evaluated;
+        assert!(evaluated < n, "reference run must stop early");
+
+        // Kill mid-wave: a provider-spend budget aborts the job with part
+        // of the first wave complete and spilled to the checkpoint.
+        let dir = tmp_dir("stopping-resume");
+        let mut aborted = task.clone();
+        aborted.inference.max_cost_usd = Some(0.4 * full.inference.total_cost_usd);
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, false).unwrap();
+        let err = runner.evaluate(&df, &aborted).unwrap_err();
+        assert!(format!("{err:#}").contains("aborted"), "{err:#}");
+
+        // Resume: restored rows are never re-inferred, and the wave loop
+        // replays to the identical certification decision.
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, true).unwrap();
+        let resumed = runner.evaluate(&df, &task).unwrap();
+        let restored = resumed.inference.sched.restored_rows;
+        assert!(restored > 0, "the killed run must have banked some rows");
+        assert_eq!(resumed.inference.api_calls, (evaluated - restored) as u64);
+        assert_eq!(resumed.inference.sched.rows_evaluated, evaluated);
+        assert_eq!(resumed.inference.sched.rows_saved, n - evaluated);
+        let (a, b) = (
+            full.metric("exact_match").unwrap(),
+            resumed.metric("exact_match").unwrap(),
+        );
+        assert_eq!(a.value, b.value);
+        assert_eq!((a.ci.lo, a.ci.hi), (b.ci.lo, b.ci.hi));
+        assert_eq!(a.stopped_at_wave, b.stopped_at_wave);
+        assert_eq!(a.certified, b.certified);
+    }
+
+    #[test]
+    fn rescore_on_a_stopped_run_scores_only_evaluated_rows() {
+        let n = 600;
+        let dir = tmp_dir("stopping-rescore");
+        let df = synth::generate_default(n, 75);
+        let task = stopping_task();
+
+        let mut runner = fast_runner();
+        runner.attach_checkpoint(&dir, false).unwrap();
+        let live = runner.evaluate(&df, &task).unwrap();
+        let evaluated = live.inference.sched.rows_evaluated;
+        assert!(evaluated < n);
+
+        // Rescore with an extra pure metric: the deliberately-saved
+        // suffix is not missing work — no per-row errors, no provider
+        // calls, and every metric scores exactly the evaluated prefix.
+        let mut task2 = task.clone();
+        task2.metrics.push(MetricConfig::new("token_f1", "lexical"));
+        let mut runner2 = fast_runner();
+        runner2.attach_checkpoint(&dir, true).unwrap();
+        let re = runner2.rescore(&df, &task2, false).unwrap();
+        assert_eq!(re.inference.api_calls, 0);
+        assert_eq!(re.inference.sched.restored_rows, evaluated);
+        let em = re.metric("exact_match").unwrap();
+        assert_eq!(em.n + em.n_failed, evaluated);
+        assert_eq!(live.metric("exact_match").unwrap().value, em.value);
+        assert_eq!(re.metric("token_f1").unwrap().n, evaluated);
     }
 
     // ------------------------------------------------------------- rescore

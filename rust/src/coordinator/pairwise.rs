@@ -3,9 +3,11 @@
 //! preferring responses presented first"), addressed here by judging each
 //! pair in both orders and keeping only consistent verdicts.
 
+use std::sync::Mutex;
+
 use super::cached_engine::CachedEngine;
 use super::runner::EvalRunner;
-use crate::config::{BackendKind, EvalTask, ModelConfig};
+use crate::config::{BackendKind, EvalTask, ModelConfig, StoppingConfig};
 use crate::data::DataFrame;
 use crate::metrics::judge::{pairwise_prompt, parse_verdict};
 use crate::providers::pipeline::PipelinedClient;
@@ -13,8 +15,11 @@ use crate::providers::retry::RetryPolicy;
 use crate::providers::simulated::SimEngine;
 use crate::providers::{InferenceEngine, InferenceRequest};
 use crate::sched::plan::{PairInput, PairwisePlan, PlanWork, StagePlan, TaskPlan};
-use crate::sched::{run_scheduled_ext, TaskCheckpoint, TaskSink};
+use crate::sched::{
+    run_scheduled_wave, TaskCheckpoint, TaskSink, WaveDecision, WaveGate,
+};
 use crate::stats::special::binom_test_half;
+use crate::stats::tests::mcnemar_test;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
@@ -77,6 +82,13 @@ pub struct PairwiseResult {
     /// Fraction of judged pairs where order flipped the verdict — the
     /// measured position-bias rate.
     pub position_bias_rate: f64,
+    /// Adaptive stopping: the 0-based wave at which the sequential
+    /// McNemar test decided significance and judging settled early
+    /// (`None` = stopping disabled, or significance never decided).
+    pub stopped_at_wave: Option<usize>,
+    /// Pairs deliberately never judged because the comparison settled
+    /// early (`verdicts.len() + pairs_saved` = the frame size).
+    pub pairs_saved: usize,
 }
 
 impl PairwiseResult {
@@ -118,6 +130,16 @@ impl EvalRunner {
         let prompts = self.prepare_prompts(df, task_a)?;
         let (rows_a, _) = self.run_inference(&prompts, task_a)?;
         let (rows_b, _) = self.run_inference(&prompts, task_b)?;
+
+        // Adaptive stopping (task A's `stopping` block): judge pairs in
+        // waves and settle the comparison once the sequential McNemar
+        // test decides significance — the judging stage is the pairwise
+        // run's provider spend, so that is where rows are saved. Both
+        // inference stages run in full (every pair must be *judgeable*
+        // before the wave order is known), keeping the judge stage's
+        // content address independent of where judging stops.
+        let stopping = task_a.stopping.as_ref();
+        let stopped_wave: Mutex<Option<usize>> = Mutex::new(None);
 
         // Pre-resolve shared handles: the executor closures must not
         // capture `self` (the runner holds the non-Sync PJRT runtime).
@@ -181,6 +203,19 @@ impl EvalRunner {
                 // Crash injection targets the inference stage only.
                 fault: None,
             };
+            let decide = |wave: usize, prefix: &[&Json]| -> Result<WaveDecision> {
+                let Some(cfg) = stopping else { return Ok(WaveDecision::Continue) };
+                let verdicts = prefix
+                    .iter()
+                    .map(|v| PairVerdict::from_json(v))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(pairwise_wave_decision(cfg, &stopped_wave, wave, &verdicts))
+            };
+            let gate = stopping.map(|cfg| WaveGate {
+                first: cfg.wave_size.max(cfg.min_rows),
+                step: cfg.wave_size,
+                decide: &decide,
+            });
             let out = self.run_plan_on_backend(
                 task_a,
                 &plan,
@@ -189,8 +224,14 @@ impl EvalRunner {
                 restored,
                 None,
                 None,
-                stage,
+                stage.clone(),
+                gate.as_ref(),
             )?;
+            if out.rows.len() < df.len() {
+                if let Some(stage) = &stage {
+                    stage.record_skipped(&[(out.rows.len(), df.len())])?;
+                }
+            }
             // The judging stage (like its thread-path counterpart)
             // reports no scheduler stats; surface recovered deaths.
             if out.sched.executor_deaths > 0 {
@@ -205,7 +246,9 @@ impl EvalRunner {
                 .iter()
                 .map(PairVerdict::from_json)
                 .collect::<Result<Vec<_>>>()?;
-            return Ok(aggregate_pairwise(task_a, task_b, verdicts));
+            let pairs_saved = df.len() - verdicts.len();
+            let stopped_at = *stopped_wave.lock().unwrap();
+            return Ok(aggregate_pairwise(task_a, task_b, verdicts, stopped_at, pairs_saved));
         }
 
         let (checkpoint_stage, restored, _) =
@@ -223,7 +266,18 @@ impl EvalRunner {
         // so the pipeline runs with retries and the bucket disabled.
         let concurrency = task_a.inference.concurrency.max(1);
 
-        let out = run_scheduled_ext(
+        let decide = |wave: usize, prefix: &[&PairVerdict]| -> Result<WaveDecision> {
+            let Some(cfg) = stopping else { return Ok(WaveDecision::Continue) };
+            let verdicts: Vec<PairVerdict> = prefix.iter().map(|v| **v).collect();
+            Ok(pairwise_wave_decision(cfg, &stopped_wave, wave, &verdicts))
+        };
+        let gate = stopping.map(|cfg| WaveGate {
+            first: cfg.wave_size.max(cfg.min_rows),
+            step: cfg.wave_size,
+            decide: &decide,
+        });
+
+        let out = run_scheduled_wave(
             df,
             task_a.executors,
             task_a.inference.batch_size,
@@ -231,6 +285,7 @@ impl EvalRunner {
             None,
             checkpoint,
             self.abort.as_deref(),
+            gate,
             |eid| {
                 let mut slots: Vec<Box<dyn InferenceEngine>> = Vec::with_capacity(concurrency);
                 for _ in 0..concurrency {
@@ -315,7 +370,49 @@ impl EvalRunner {
             },
         )?;
 
-        Ok(aggregate_pairwise(task_a, task_b, out.rows))
+        if out.rows.len() < df.len() {
+            if let Some(stage) = &checkpoint_stage {
+                stage.record_skipped(&[(out.rows.len(), df.len())])?;
+            }
+        }
+        let pairs_saved = df.len() - out.rows.len();
+        let stopped_at = *stopped_wave.lock().unwrap();
+        Ok(aggregate_pairwise(task_a, task_b, out.rows, stopped_at, pairs_saved))
+    }
+}
+
+/// The pairwise stopping rule, shared by the thread and backend judging
+/// paths: over the judged `[0, b)` prefix, run McNemar's test on the
+/// paired per-example outcomes (a decisive verdict is exactly a
+/// discordant pair, so this is the sequential sign test) at the
+/// alpha-spending level for this look, and settle once significance is
+/// decided. `min_rows` guards the first look against tiny-n decisions.
+fn pairwise_wave_decision(
+    cfg: &StoppingConfig,
+    stopped: &Mutex<Option<usize>>,
+    wave: usize,
+    verdicts: &[PairVerdict],
+) -> WaveDecision {
+    if verdicts.len() < cfg.min_rows {
+        return WaveDecision::Continue;
+    }
+    let a: Vec<f64> = verdicts
+        .iter()
+        .map(|v| if *v == PairVerdict::AWins { 1.0 } else { 0.0 })
+        .collect();
+    let b: Vec<f64> = verdicts
+        .iter()
+        .map(|v| if *v == PairVerdict::BWins { 1.0 } else { 0.0 })
+        .collect();
+    let test = mcnemar_test(&a, &b);
+    if test.significant(cfg.look_alpha(wave)) {
+        let mut s = stopped.lock().unwrap();
+        if s.is_none() {
+            *s = Some(wave);
+        }
+        WaveDecision::Stop
+    } else {
+        WaveDecision::Continue
     }
 }
 
@@ -325,6 +422,8 @@ fn aggregate_pairwise(
     task_a: &EvalTask,
     task_b: &EvalTask,
     verdicts: Vec<PairVerdict>,
+    stopped_at_wave: Option<usize>,
+    pairs_saved: usize,
 ) -> PairwiseResult {
     let (mut a_wins, mut b_wins, mut inconsistent, mut unscored) = (0, 0, 0, 0);
     for verdict in &verdicts {
@@ -351,6 +450,8 @@ fn aggregate_pairwise(
         } else {
             inconsistent as f64 / judged as f64
         },
+        stopped_at_wave,
+        pairs_saved,
     }
 }
 
@@ -486,6 +587,62 @@ mod tests {
         assert_eq!(r1.verdicts, r2.verdicts);
         assert_eq!((r1.a_wins, r1.b_wins), (r2.a_wins, r2.b_wins));
         assert_eq!(r1.p_value, r2.p_value);
+    }
+
+    #[test]
+    fn pairwise_stopping_settles_once_significance_is_decided() {
+        // A strong-vs-weak pair separates fast: the sequential McNemar
+        // test decides significance within the first waves, the judging
+        // stage settles early, and the saved pairs are accounted.
+        let runner = fast_runner();
+        let df = synth::generate(
+            300,
+            95,
+            synth::DomainMix { qa: 1.0, summarization: 0.0, instruction: 0.0 },
+        )
+        .unwrap();
+        let mut task_a = EvalTask::default();
+        task_a.model.model_name = "gpt-4o".into();
+        task_a.stopping = Some(StoppingConfig {
+            ci_half_width: 0.05,
+            alpha: 0.05,
+            wave_size: 60,
+            min_rows: 40,
+            spend_alpha: true,
+        });
+        let mut task_b = task_a.clone();
+        task_b.model.model_name = "gpt-3.5-turbo".into();
+
+        let r = runner
+            .evaluate_pairwise(&df, &task_a, &task_b, "accuracy", "openai", "gpt-4o")
+            .unwrap();
+        assert!(r.stopped_at_wave.is_some(), "{r:?}");
+        assert!(r.pairs_saved > 0, "{r:?}");
+        assert_eq!(r.verdicts.len() + r.pairs_saved, 300, "pair accounting");
+        assert!(r.p_value < 0.05, "p {}", r.p_value);
+        assert!(r.a_wins > r.b_wins);
+    }
+
+    #[test]
+    fn pairwise_stopping_never_decides_on_identical_models() {
+        // Identical models: no significance to find — the gated run
+        // judges the whole frame and saves nothing.
+        let runner = fast_runner();
+        let df = synth::generate_default(80, 96);
+        let mut task = EvalTask::default();
+        task.stopping = Some(StoppingConfig {
+            ci_half_width: 0.05,
+            alpha: 0.05,
+            wave_size: 30,
+            min_rows: 20,
+            spend_alpha: true,
+        });
+        let r = runner
+            .evaluate_pairwise(&df, &task, &task, "accuracy", "openai", "gpt-4o")
+            .unwrap();
+        assert_eq!(r.stopped_at_wave, None, "{r:?}");
+        assert_eq!(r.pairs_saved, 0);
+        assert_eq!(r.verdicts.len(), 80);
     }
 
     #[test]

@@ -20,11 +20,17 @@ pub struct MetricValue {
     pub n_failed: usize,
     /// Unparseable judge responses among the failures.
     pub unparseable: usize,
+    /// Adaptive stopping: the 0-based wave at which this metric's CI
+    /// certified (`None` = stopping disabled, or never certified).
+    pub stopped_at_wave: Option<usize>,
+    /// Adaptive stopping: whether the CI half-width met the target under
+    /// the sequential correction (`None` = stopping disabled).
+    pub certified: Option<bool>,
 }
 
 impl MetricValue {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(&self.name)),
             ("value", Json::num(self.value)),
             ("ci_lower", Json::num(self.ci.lo)),
@@ -34,7 +40,17 @@ impl MetricValue {
             ("n", Json::num(self.n as f64)),
             ("n_failed", Json::num(self.n_failed as f64)),
             ("unparseable", Json::num(self.unparseable as f64)),
-        ])
+        ];
+        // Emitted only on stopping-enabled runs, so disabled result JSON
+        // stays byte-identical to the pre-stopping format.
+        if self.certified.is_some() || self.stopped_at_wave.is_some() {
+            fields.push((
+                "stopped_at_wave",
+                self.stopped_at_wave.map(|w| Json::num(w as f64)).unwrap_or(Json::Null),
+            ));
+            fields.push(("certified", Json::Bool(self.certified.unwrap_or(false))));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -240,6 +256,8 @@ mod tests {
             n: 10_000,
             n_failed: 0,
             unparseable: 0,
+            stopped_at_wave: None,
+            certified: None,
         };
         assert_eq!(mv.to_string(), "MetricValue(value=0.234, ci=(0.218, 0.251), n=10000)");
     }
@@ -253,9 +271,38 @@ mod tests {
             n: 100,
             n_failed: 2,
             unparseable: 1,
+            stopped_at_wave: None,
+            certified: None,
         };
         let j = mv.to_json();
         assert_eq!(j.get("ci_lower").unwrap().as_f64().unwrap(), 0.4);
         assert_eq!(j.get("unparseable").unwrap().as_f64().unwrap(), 1.0);
+        // Stopping fields only exist on stopping-enabled runs.
+        assert!(j.get("certified").is_none());
+        assert!(j.get("stopped_at_wave").is_none());
+    }
+
+    #[test]
+    fn json_stopping_fields_appear_when_certified() {
+        let mut mv = MetricValue {
+            name: "m".into(),
+            value: 0.5,
+            ci: ConfidenceInterval { point: 0.5, lo: 0.4, hi: 0.6, level: 0.95, method: "wilson" },
+            n: 100,
+            n_failed: 0,
+            unparseable: 0,
+            stopped_at_wave: Some(3),
+            certified: Some(true),
+        };
+        let j = mv.to_json();
+        assert_eq!(j.get("stopped_at_wave").unwrap().as_f64().unwrap(), 3.0);
+        assert!(matches!(j.get("certified"), Some(Json::Bool(true))));
+        // A stopping-enabled run that exhausted the frame uncertified
+        // still reports the state (wave is null).
+        mv.stopped_at_wave = None;
+        mv.certified = Some(false);
+        let j = mv.to_json();
+        assert!(matches!(j.get("certified"), Some(Json::Bool(false))));
+        assert!(matches!(j.get("stopped_at_wave"), Some(Json::Null)));
     }
 }

@@ -10,6 +10,7 @@ use anyhow::{bail, Context, Result};
 use super::cached_engine::{CachedEngine, CallMeter};
 use super::plan_exec;
 use super::result::{EvalResult, InferenceStats, MetricValue};
+use super::stopping::{MetricStopState, StoppingDriver};
 use crate::cache::ResponseCache;
 use crate::checkpoint::{fingerprint_sha256, RunCheckpoint, StageCheckpoint};
 use crate::config::{BackendKind, CachePolicy, CiMethod, EvalTask, MetricConfig};
@@ -19,12 +20,15 @@ use crate::metrics::{
     Example, JudgeBroker, MetricContext, MetricRegistry, MetricReport, MetricRequirements,
     ResolvedMetric, ScoreBatch,
 };
-use crate::sched::backend::{run_plan, ProcessBackend};
+use crate::sched::backend::{run_plan_wave, ProcessBackend};
 use crate::sched::plan::{
     InferencePlan, MetricPlan, PlanEnv, PlanWork, StagePlan, TaskPlan, WorkerFault,
 };
 use crate::sched::remote::{heartbeat_timeout_from_env, RemoteBackend};
-use crate::sched::{run_scheduled, run_scheduled_ext, TaskCheckpoint, TaskSink};
+use crate::sched::{
+    run_scheduled, run_scheduled_ext, run_scheduled_wave, TaskCheckpoint, TaskSink, WaveDecision,
+    WaveGate,
+};
 use crate::providers::pipeline::PipelinedClient;
 use crate::providers::retry::{infer_with_retry, RetryPolicy};
 use crate::providers::simulated::{SimEngine, SimService, SimServiceConfig};
@@ -86,6 +90,11 @@ impl RowInference {
 pub trait RunObserver: Send + Sync {
     fn inference_done(&self, _stats: &InferenceStats) {}
     fn metric_done(&self, _index: usize, _total: usize, _value: &MetricValue) {}
+    /// Adaptive stopping only: called after every wave look with the
+    /// completed-prefix row count and each metric's certification state
+    /// (mid-inference, from the scheduler's consulting thread — before
+    /// `inference_done`).
+    fn wave_done(&self, _wave: usize, _rows: usize, _stopping: &[MetricStopState]) {}
 }
 
 /// The evaluation coordinator. Owns the clock, provider services, cache,
@@ -281,8 +290,23 @@ impl EvalRunner {
         prompts: &[String],
         task: &EvalTask,
     ) -> Result<(Vec<RowInference>, InferenceStats)> {
+        self.run_inference_gated(prompts, task, None)
+    }
+
+    /// [`EvalRunner::run_inference`] plus an optional adaptive-stopping
+    /// gate: with a [`StoppingDriver`], rows are issued in waves and the
+    /// stage may settle early with an exact `[0, b)` prefix — the rows
+    /// past `b` are recorded as deliberately skipped on the checkpoint
+    /// stage so `--resume` and `rescore` never treat them as missing.
+    /// `stopping: None` is byte-for-byte the classic all-at-once stage.
+    pub(crate) fn run_inference_gated(
+        &self,
+        prompts: &[String],
+        task: &EvalTask,
+        stopping: Option<&StoppingDriver>,
+    ) -> Result<(Vec<RowInference>, InferenceStats)> {
         if task.backend != BackendKind::Thread {
-            return self.run_inference_backend(prompts, task);
+            return self.run_inference_backend(prompts, task, stopping);
         }
         let t0 = self.clock.now();
         // lint:allow(determinism): reported wall_secs is wall-clock telemetry
@@ -400,7 +424,22 @@ impl EvalRunner {
             plan_exec::cache_lookup(&cache, &model_cfg, inf.cache_policy, prompt, i)
         };
 
-        let out = run_scheduled_ext(
+        // Wave gate (adaptive stopping): the decide closure only ever
+        // runs when a driver is present — `gate` is `None` otherwise,
+        // which is the ungated scheduler, byte for byte.
+        let decide = |wave: usize, prefix: &[&RowInference]| -> Result<WaveDecision> {
+            match stopping {
+                Some(d) => d.decide_rows(wave, prefix),
+                None => Ok(WaveDecision::Continue),
+            }
+        };
+        let gate = stopping.map(|d| WaveGate {
+            first: d.first_wave_rows(),
+            step: d.wave_step(),
+            decide: &decide,
+        });
+
+        let out = run_scheduled_wave(
             &df,
             executors,
             inf.batch_size,
@@ -408,6 +447,7 @@ impl EvalRunner {
             progress,
             checkpoint,
             abort.as_deref(),
+            gate,
             |eid| {
                 // One engine per concurrency slot (the paper's
                 // `_ENGINE_CACHE`, widened): slot 0 at concurrency 1 is
@@ -518,6 +558,14 @@ impl EvalRunner {
         // fall back to real wall time so throughput stays meaningful.
         let wall = (self.clock.now() - t0).max(wall0.elapsed().as_secs_f64()).max(1e-9);
         let rows = out.rows;
+        // A gate-settled stage covered only `[0, rows.len())`: record the
+        // untouched suffix as deliberately skipped so a later `--resume`
+        // or `rescore` of this stage never treats saved rows as missing.
+        if rows.len() < prompts.len() {
+            if let Some(stage) = &checkpoint_stage {
+                stage.record_skipped(&[(rows.len(), prompts.len())])?;
+            }
+        }
         // Fold per-executor pipeline occupancy into the executor stats.
         let mut exec_stats = out.executors;
         for e in &mut exec_stats {
@@ -589,7 +637,10 @@ impl EvalRunner {
     /// `--backend remote` connects to the task's `serve-worker` hosts
     /// for the duration of the stage; `stage` is the driver-side
     /// checkpoint that uploaded spill frames are recorded into (remote
-    /// workers share no filesystem with the driver).
+    /// workers share no filesystem with the driver). `gate` plugs the
+    /// adaptive-stopping wave rule into the backend driver loop — the
+    /// gating is entirely driver-side, so thread, process, and remote
+    /// backends share one stopping implementation.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn run_plan_on_backend(
         &self,
@@ -601,6 +652,7 @@ impl EvalRunner {
         progress: Option<&Progress>,
         max_cost_usd: Option<f64>,
         stage: Option<Arc<StageCheckpoint>>,
+        gate: Option<&WaveGate<'_, Json>>,
     ) -> Result<crate::sched::backend::PlanOutput> {
         match task.backend {
             BackendKind::Process => {
@@ -623,7 +675,7 @@ impl EvalRunner {
                     }
                 }
                 let backend = fleet.as_mut().expect("fleet populated above");
-                run_plan(
+                run_plan_wave(
                     total_rows,
                     task.executors,
                     &task.scheduler,
@@ -632,6 +684,7 @@ impl EvalRunner {
                     restored,
                     self.abort.as_deref(),
                     max_cost_usd,
+                    gate,
                 )
             }
             BackendKind::Remote => {
@@ -643,7 +696,7 @@ impl EvalRunner {
                     heartbeat_timeout_from_env(),
                     stage,
                 )?;
-                run_plan(
+                run_plan_wave(
                     total_rows,
                     task.executors,
                     &task.scheduler,
@@ -652,6 +705,7 @@ impl EvalRunner {
                     restored,
                     self.abort.as_deref(),
                     max_cost_usd,
+                    gate,
                 )
             }
             BackendKind::Thread => {
@@ -671,6 +725,7 @@ impl EvalRunner {
         &self,
         prompts: &[String],
         task: &EvalTask,
+        stopping: Option<&StoppingDriver>,
     ) -> Result<(Vec<RowInference>, InferenceStats)> {
         let t0 = self.clock.now();
         // lint:allow(determinism): reported wall_secs is wall-clock telemetry
@@ -712,6 +767,19 @@ impl EvalRunner {
             }),
             fault: self.worker_fault,
         };
+        // Backend rows cross the driver loop as raw checkpoint-encoded
+        // JSON; the gate decodes the prefix before consulting the rule.
+        let decide = |wave: usize, prefix: &[&Json]| -> Result<WaveDecision> {
+            match stopping {
+                Some(d) => d.decide_json(wave, prefix),
+                None => Ok(WaveDecision::Continue),
+            }
+        };
+        let gate = stopping.map(|d| WaveGate {
+            first: d.first_wave_rows(),
+            step: d.wave_step(),
+            decide: &decide,
+        });
         let out = self.run_plan_on_backend(
             task,
             &plan,
@@ -720,8 +788,14 @@ impl EvalRunner {
             restored,
             self.progress.as_deref(),
             inf.max_cost_usd,
-            stage,
+            stage.clone(),
+            gate.as_ref(),
         )?;
+        if out.rows.len() < prompts.len() {
+            if let Some(stage) = &stage {
+                stage.record_skipped(&[(out.rows.len(), prompts.len())])?;
+            }
+        }
         self.backend_inference_stats(out, &restored_spans, t0, wall0, inf.concurrency)
     }
 
@@ -806,6 +880,7 @@ impl EvalRunner {
             examples.len(),
             task.inference.batch_size,
             Vec::new(),
+            None,
             None,
             None,
             None,
@@ -1027,6 +1102,10 @@ impl EvalRunner {
             n: report.n_scored(),
             n_failed: report.n_failed(),
             unparseable: report.unparseable,
+            // Stamped afterwards by the adaptive-stopping driver (None =
+            // stopping disabled, keeping result JSON byte-identical).
+            stopped_at_wave: None,
+            certified: None,
         }
     }
 
@@ -1060,10 +1139,79 @@ impl EvalRunner {
         // Stage 1: prompt preparation.
         let prompts = self.prepare_prompts(df, task)?;
 
+        // Adaptive stopping: the wave loop replaces the all-at-once
+        // stage-2 dispatch (absent `stopping` block = this classic path,
+        // bit for bit).
+        if task.stopping.is_some() {
+            return self.evaluate_stopping(df, task, &resolved, prompts, t0);
+        }
+
         // Stage 2: distributed inference.
         let (inference_rows, inf_stats) = self.run_inference(&prompts, task)?;
 
         self.score_and_aggregate(df, task, &resolved, prompts, inference_rows, inf_stats, t0)
+    }
+
+    /// The adaptive-stopping evaluation path: inference runs in waves
+    /// through a [`StoppingDriver`] gate, may settle early with an exact
+    /// `[0, n_eval)` prefix, and stages 3–4 then score/aggregate that
+    /// prefix only. Every metric's final [`MetricValue`] is stamped with
+    /// its certification state. Note the stage fingerprints still cover
+    /// the FULL prompt list — where a run stops never changes its
+    /// content address, so resumes and rescores line up exactly.
+    fn evaluate_stopping(
+        &self,
+        df: &DataFrame,
+        task: &EvalTask,
+        resolved: &[ResolvedMetric],
+        prompts: Vec<String>,
+        t0: f64,
+    ) -> Result<EvalResult> {
+        // Response-less skeleton: the driver fills responses per wave, so
+        // prompt/reference assembly happens once, not once per look.
+        let blank: Vec<RowInference> = (0..df.len())
+            .map(|_| RowInference {
+                response: None,
+                from_cache: false,
+                latency_ms: 0.0,
+                cost_usd: 0.0,
+                attempts: 0,
+                error: None,
+            })
+            .collect();
+        let skeleton = self.build_examples(df, task, &prompts, &blank);
+        let driver =
+            StoppingDriver::new(task, resolved, skeleton, self.observer.clone())?;
+
+        let (inference_rows, inf_stats) =
+            self.run_inference_gated(&prompts, task, Some(&driver))?;
+
+        // An early-settled stage returns the exact certified prefix:
+        // stages 3–4 run over that prefix of the frame.
+        let n_eval = inference_rows.len();
+        let prefix_df;
+        let (df_eval, prompts_eval) = if n_eval < df.len() {
+            prefix_df = df.take(&(0..n_eval).collect::<Vec<_>>())?;
+            (&prefix_df, prompts[..n_eval].to_vec())
+        } else {
+            (df, prompts)
+        };
+        let mut result = self.score_and_aggregate(
+            df_eval,
+            task,
+            resolved,
+            prompts_eval,
+            inference_rows,
+            inf_stats,
+            t0,
+        )?;
+        // Stamp each metric's certification state (driver order is
+        // resolution order, which is `result.metrics` order).
+        for (value, state) in result.metrics.iter_mut().zip(driver.states()) {
+            value.stopped_at_wave = state.stopped_at_wave;
+            value.certified = Some(state.certified);
+        }
+        Ok(result)
     }
 
     /// Stages 3–4 over already-obtained responses, shared by
@@ -1162,6 +1310,17 @@ impl EvalRunner {
 
         let prompts = self.prepare_prompts(df, task)?;
         let (rows, stats) = self.rehydrate_responses(&prompts, task, allow_missing)?;
+        // A checkpoint from a stopping-settled run rehydrates only its
+        // evaluated prefix (the saved suffix was deliberately never run):
+        // rescore scores exactly those rows, with no missing-row errors
+        // for the rest.
+        if rows.len() < df.len() {
+            let prefix_df = df.take(&(0..rows.len()).collect::<Vec<_>>())?;
+            let prompts_eval = prompts[..rows.len()].to_vec();
+            return self.score_and_aggregate(
+                &prefix_df, task, &resolved, prompts_eval, rows, stats, t0,
+            );
+        }
         self.score_and_aggregate(df, task, &resolved, prompts, rows, stats, t0)
     }
 
@@ -1178,16 +1337,13 @@ impl EvalRunner {
         let t0 = self.clock.now();
         // lint:allow(determinism): reported wall_secs is wall-clock telemetry
         let wall0 = std::time::Instant::now();
-        let df = DataFrame::from_columns(vec![(
-            "prompt",
-            prompts.iter().map(|p| Value::Str(p.clone())).collect(),
-        )])?;
         let cache = self.cache.clone();
         let model_cfg = task.model.clone();
 
-        // Same stage fingerprint as run_inference, so `--checkpoint` on a
-        // (possibly interrupted) run directory rehydrates its completed
-        // ranges byte-identically.
+        // Same stage fingerprint as run_inference — over the FULL prompt
+        // list even when a stopped run only evaluated a prefix — so
+        // `--checkpoint` on a (possibly interrupted) run directory
+        // rehydrates its completed ranges byte-identically.
         let temperature = format!("{:.6}", model_cfg.temperature);
         let max_tokens = model_cfg.max_tokens.to_string();
         let mut parts: Vec<&str> = vec![
@@ -1198,10 +1354,31 @@ impl EvalRunner {
             &max_tokens,
         ];
         parts.extend(prompts.iter().map(|p| p.as_str()));
-        let (_stage, restored, _) =
+        let (stage, mut restored, _) =
             self.open_checkpoint_stage("infer", parts, prompts.len(), &RowInference::from_json)?;
+        // Rows a stopping-settled run deliberately never evaluated:
+        // rehydrate the evaluated prefix only — the saved suffix is not
+        // missing work, so no lookups (and no errors) happen for it.
+        let skipped = match &stage {
+            Some(stage) => stage.skipped()?,
+            None => Vec::new(),
+        };
+        let n_eval = evaluated_prefix_rows(prompts.len(), &skipped)?;
+        if n_eval < prompts.len() {
+            restored.retain(|(s, _, _)| *s < n_eval);
+            for (s, e, rows) in &mut restored {
+                if *e > n_eval {
+                    *e = n_eval;
+                    rows.truncate(n_eval - *s);
+                }
+            }
+        }
         let restored_spans: Vec<(usize, usize)> =
             restored.iter().map(|(s, e, _)| (*s, *e)).collect();
+        let df = DataFrame::from_columns(vec![(
+            "prompt",
+            prompts[..n_eval].iter().map(|p| Value::Str(p.clone())).collect(),
+        )])?;
         // Read-only restore: rescore never writes to the run checkpoint.
         let checkpoint =
             (!restored.is_empty()).then_some(TaskCheckpoint { restored, sink: None });
@@ -1319,6 +1496,27 @@ impl Default for EvalRunner {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// Validate that a stage's deliberately-skipped ranges form one clean
+/// suffix `[b, total)` and return `b` (`total` when nothing was skipped).
+/// The runner only ever skips a single settled-boundary suffix, so any
+/// other shape means the checkpoint was hand-edited or corrupt.
+fn evaluated_prefix_rows(total: usize, skipped: &[(usize, usize)]) -> Result<usize> {
+    if skipped.is_empty() {
+        return Ok(total);
+    }
+    let mut ranges = skipped.to_vec();
+    ranges.sort_by_key(|r| r.0);
+    let mut end = total;
+    for &(start, stop) in ranges.iter().rev() {
+        anyhow::ensure!(
+            start < stop && stop == end,
+            "skipped ranges {skipped:?} do not form a clean suffix of a {total}-row stage"
+        );
+        end = start;
+    }
+    Ok(end)
 }
 
 fn percentile_from_boots(point: f64, mut boots: Vec<f64>, level: f64) -> stats::ConfidenceInterval {

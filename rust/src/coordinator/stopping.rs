@@ -1,0 +1,467 @@
+//! Adaptive early stopping (Cer-Eval-style certifiable cost-efficient
+//! evaluation): the wave-gate decision logic the runner plugs into the
+//! scheduler's [`crate::sched::WaveGate`].
+//!
+//! The [`StoppingDriver`] holds the task's pure metrics plus a
+//! response-less "skeleton" of every example. At each wave boundary the
+//! scheduler hands it the completed in-order row prefix; the driver fills
+//! the skeleton's responses, rescores every not-yet-certified metric over
+//! the prefix, and computes each metric's CI at the sequential-correction
+//! level `1 - look_alpha(wave)` (geometric alpha spending, so the union
+//! bound over every look stays within the total `alpha` budget). A metric
+//! is *certified* once its CI half-width meets `stopping.ci_half_width`
+//! with at least `min_rows` rows covered; certified metrics are never
+//! rescored at later looks ("stop a metric"). Once every metric is
+//! certified the driver returns [`WaveDecision::Stop`] and the scheduler
+//! settles the job — rows past the boundary are never issued.
+//!
+//! Determinism: each (wave, metric) look seeds its own bootstrap rng
+//! stream from the task seed, so a `--resume` replaying decisions over
+//! restored rows reproduces the live run's certifications bit for bit.
+//! Only the software CI paths are used here (never the device bootstrap):
+//! the driver is consulted from scheduler threads and must stay `Sync`,
+//! which the PJRT runtime is not.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::runner::{RowInference, RunObserver};
+use crate::config::{CiMethod, EvalTask, StoppingConfig};
+use crate::metrics::{Example, MetricContext, MetricRequirements, ResolvedMetric};
+use crate::sched::WaveDecision;
+use crate::stats::{self, MetricScale};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One metric's certification state, updated at every wave look and
+/// surfaced in results, the human summary, and `GET /runs/{id}/partial`.
+#[derive(Debug, Clone)]
+pub struct MetricStopState {
+    pub name: String,
+    /// The 0-based wave at which the metric certified (`None` = still
+    /// open, or the run finished the whole frame first).
+    pub stopped_at_wave: Option<usize>,
+    /// Whether the CI half-width met the target under the sequential
+    /// correction.
+    pub certified: bool,
+    /// The half-width at the metric's most recent look (NaN before the
+    /// first look).
+    pub half_width: f64,
+    /// The target half-width (`stopping.ci_half_width`).
+    pub target: f64,
+}
+
+impl MetricStopState {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            (
+                "stopped_at_wave",
+                self.stopped_at_wave.map(|w| Json::num(w as f64)).unwrap_or(Json::Null),
+            ),
+            ("certified", Json::Bool(self.certified)),
+            ("half_width", Json::num(self.half_width)),
+            ("target", Json::num(self.target)),
+        ])
+    }
+}
+
+/// The stopping rule behind the runner's wave loop (see module docs).
+/// Built once per gated run; shared by reference with the scheduler's
+/// gate closure, so it must be (and is) `Sync`.
+pub struct StoppingDriver {
+    cfg: StoppingConfig,
+    seed: u64,
+    ci_method: CiMethod,
+    bootstrap_iterations: usize,
+    metrics: Vec<ResolvedMetric>,
+    /// Full-length example skeleton with empty responses: wave looks
+    /// clone the prefix and fill responses in, so prompt/reference
+    /// assembly happens exactly once.
+    skeleton: Vec<Example>,
+    state: Mutex<Vec<MetricStopState>>,
+    observer: Option<Arc<dyn RunObserver>>,
+}
+
+impl StoppingDriver {
+    /// Build the driver for a gated run. Fails when the task has no
+    /// `stopping` block or any metric is not [`MetricRequirements::Pure`]
+    /// — runtime/judge metrics score on the driver *after* inference, so
+    /// a wave-time CI for them would require the very calls stopping is
+    /// meant to save.
+    pub fn new(
+        task: &EvalTask,
+        resolved: &[ResolvedMetric],
+        skeleton: Vec<Example>,
+        observer: Option<Arc<dyn RunObserver>>,
+    ) -> Result<StoppingDriver> {
+        let Some(cfg) = task.stopping.clone() else {
+            bail!("stopping driver built for a task without a `stopping` block");
+        };
+        cfg.validate()?;
+        for m in resolved {
+            if m.requirements() != MetricRequirements::Pure {
+                bail!(
+                    "adaptive stopping supports pure metrics only, but '{}' needs {:?} \
+                     scoring; remove the `stopping` block or drop the metric",
+                    m.name(),
+                    m.requirements()
+                );
+            }
+        }
+        let state = resolved
+            .iter()
+            .map(|m| MetricStopState {
+                name: m.name().to_string(),
+                stopped_at_wave: None,
+                certified: false,
+                half_width: f64::NAN,
+                target: cfg.ci_half_width,
+            })
+            .collect();
+        Ok(StoppingDriver {
+            seed: task.statistics.seed,
+            ci_method: task.statistics.ci_method,
+            bootstrap_iterations: task.statistics.bootstrap_iterations,
+            cfg,
+            metrics: resolved.to_vec(),
+            skeleton,
+            state: Mutex::new(state),
+            observer,
+        })
+    }
+
+    /// First wave boundary: at least `min_rows`, so the first look never
+    /// certifies on a degenerate tiny-n CI.
+    pub fn first_wave_rows(&self) -> usize {
+        self.cfg.wave_size.max(self.cfg.min_rows)
+    }
+
+    /// Rows released per wave after the first.
+    pub fn wave_step(&self) -> usize {
+        self.cfg.wave_size
+    }
+
+    /// Snapshot of every metric's certification state (result stamping,
+    /// the serve daemon's partial feed).
+    pub fn states(&self) -> Vec<MetricStopState> {
+        self.state.lock().unwrap().clone()
+    }
+
+    /// The wave decision over the completed `[0, b)` row prefix — the
+    /// thread backend's gate closure (`T = RowInference`).
+    pub fn decide_rows(&self, wave: usize, prefix: &[&RowInference]) -> Result<WaveDecision> {
+        let b = prefix.len();
+        let level = 1.0 - self.cfg.look_alpha(wave);
+        let mut examples: Vec<Example> = self.skeleton[..b.min(self.skeleton.len())].to_vec();
+        anyhow::ensure!(
+            examples.len() == b,
+            "wave {wave}: {b}-row prefix exceeds the {}-example skeleton",
+            self.skeleton.len()
+        );
+        let mut failed = vec![false; b];
+        for (i, row) in prefix.iter().enumerate() {
+            match &row.response {
+                Some(r) => examples[i].response = r.clone(),
+                None => failed[i] = true,
+            }
+        }
+
+        let mut state = self.state.lock().unwrap();
+        let mut all_certified = true;
+        for (mi, metric) in self.metrics.iter().enumerate() {
+            if state[mi].certified {
+                continue;
+            }
+            let batch = metric
+                .score_batch(&MetricContext::detached(), &examples)
+                .with_context(|| {
+                    format!("wave {wave}: scoring metric '{}' over {b} rows", metric.name())
+                })?;
+            anyhow::ensure!(
+                batch.values.len() == b,
+                "wave {wave}: metric '{}' returned {} values for {b} rows",
+                metric.name(),
+                batch.values.len()
+            );
+            let scored: Vec<f64> = batch
+                .values
+                .iter()
+                .zip(&failed)
+                .filter_map(|(v, &f)| if f { None } else { *v })
+                .collect();
+            // One deterministic rng stream per (wave, metric) look:
+            // resume replays reproduce the live decisions exactly.
+            let mut rng = Rng::with_stream(
+                self.seed,
+                0x5AEE ^ ((wave as u64) << 16) ^ mi as u64,
+            );
+            let ci = wave_ci(
+                &scored,
+                metric.scale(),
+                self.ci_method,
+                level,
+                self.bootstrap_iterations,
+                &mut rng,
+            );
+            let hw = ci.half_width();
+            state[mi].half_width = hw;
+            if scored.len() >= 2
+                && b >= self.cfg.min_rows
+                && hw.is_finite()
+                && hw <= self.cfg.ci_half_width
+            {
+                state[mi].certified = true;
+                state[mi].stopped_at_wave = Some(wave);
+            } else {
+                all_certified = false;
+            }
+        }
+        if let Some(obs) = &self.observer {
+            obs.wave_done(wave, b, &state);
+        }
+        Ok(if all_certified { WaveDecision::Stop } else { WaveDecision::Continue })
+    }
+
+    /// [`StoppingDriver::decide_rows`] for the process/remote backends,
+    /// whose scheduler rows are raw checkpoint-encoded JSON
+    /// (`T = Json`).
+    pub fn decide_json(&self, wave: usize, prefix: &[&Json]) -> Result<WaveDecision> {
+        let rows = prefix
+            .iter()
+            .map(|v| RowInference::from_json(v))
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("wave {wave}: decoding backend rows"))?;
+        self.decide_rows(wave, &rows.iter().collect::<Vec<_>>())
+    }
+}
+
+/// Wave-time CI: the same method dispatch as the runner's final
+/// `aggregate` (Wilson for binary analytic, t otherwise, software
+/// percentile/BCa bootstrap), minus the device-bootstrap offload — see
+/// module docs for why.
+fn wave_ci(
+    scored: &[f64],
+    scale: MetricScale,
+    method: CiMethod,
+    level: f64,
+    iterations: usize,
+    rng: &mut Rng,
+) -> stats::ConfidenceInterval {
+    if scored.is_empty() {
+        return stats::ConfidenceInterval {
+            point: f64::NAN,
+            lo: f64::NAN,
+            hi: f64::NAN,
+            level,
+            method: "none",
+        };
+    }
+    match method {
+        CiMethod::Analytic => {
+            if scale == MetricScale::Binary {
+                let successes = scored.iter().filter(|&&v| v >= 0.5).count() as u64;
+                stats::wilson_interval(successes, scored.len() as u64, level)
+            } else {
+                stats::t_interval(scored, level)
+            }
+        }
+        CiMethod::Percentile => stats::percentile_bootstrap(
+            scored,
+            stats::describe::mean,
+            level,
+            iterations,
+            rng,
+        ),
+        CiMethod::Bca => {
+            stats::bca_bootstrap(scored, stats::describe::mean, level, iterations, rng)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MetricConfig;
+    use crate::metrics::MetricRegistry;
+
+    fn task_with_stopping(metrics: Vec<(&str, &str)>) -> EvalTask {
+        let mut task = EvalTask::default();
+        task.metrics =
+            metrics.into_iter().map(|(name, family)| MetricConfig::new(name, family)).collect();
+        task.stopping = Some(StoppingConfig {
+            ci_half_width: 0.1,
+            alpha: 0.05,
+            wave_size: 20,
+            min_rows: 20,
+            spend_alpha: true,
+        });
+        task.statistics.ci_method = CiMethod::Analytic;
+        task
+    }
+
+    fn skeleton(n: usize, reference: &str) -> Vec<Example> {
+        (0..n)
+            .map(|i| Example {
+                prompt: format!("p{i}"),
+                response: String::new(),
+                reference: reference.to_string(),
+                question: String::new(),
+                context: Vec::new(),
+                gold_position: -1,
+            })
+            .collect()
+    }
+
+    fn rows(responses: Vec<Option<&str>>) -> Vec<RowInference> {
+        responses
+            .into_iter()
+            .map(|r| RowInference {
+                response: r.map(String::from),
+                from_cache: false,
+                latency_ms: 0.0,
+                cost_usd: 0.0,
+                attempts: 1,
+                error: None,
+            })
+            .collect()
+    }
+
+    fn driver(task: &EvalTask, n: usize) -> StoppingDriver {
+        let resolved = MetricRegistry::with_builtins().resolve_task(task).unwrap();
+        StoppingDriver::new(task, &resolved, skeleton(n, "yes"), None).unwrap()
+    }
+
+    #[test]
+    fn certifies_a_degenerate_binary_metric_and_stops() {
+        // All responses match the reference: the Wilson half-width at
+        // n=40 is well under the 0.1 target, so the first look certifies
+        // and the whole run stops.
+        let task = task_with_stopping(vec![("exact_match", "lexical")]);
+        let d = driver(&task, 200);
+        let prefix = rows(vec![Some("yes"); 40]);
+        let refs: Vec<&RowInference> = prefix.iter().collect();
+        assert!(matches!(d.decide_rows(0, &refs).unwrap(), WaveDecision::Stop));
+        let states = d.states();
+        assert_eq!(states.len(), 1);
+        assert!(states[0].certified);
+        assert_eq!(states[0].stopped_at_wave, Some(0));
+        assert!(states[0].half_width < 0.1, "hw {}", states[0].half_width);
+        assert_eq!(states[0].target, 0.1);
+    }
+
+    #[test]
+    fn continues_while_uncertain_then_certifies_later_wave() {
+        // A 50/50 split at n=20 has Wilson half-width ~0.21 (worse at
+        // the spent level) — far above 0.05 — so wave 0 continues; a
+        // much larger all-match prefix certifies at wave 1.
+        let mut task = task_with_stopping(vec![("exact_match", "lexical")]);
+        task.stopping.as_mut().unwrap().ci_half_width = 0.05;
+        let d = driver(&task, 2000);
+        let mixed: Vec<Option<&str>> =
+            (0..20).map(|i| if i % 2 == 0 { Some("yes") } else { Some("no") }).collect();
+        let w0 = rows(mixed);
+        let refs: Vec<&RowInference> = w0.iter().collect();
+        assert!(matches!(d.decide_rows(0, &refs).unwrap(), WaveDecision::Continue));
+        assert!(!d.states()[0].certified);
+        assert!(d.states()[0].half_width > 0.05);
+
+        let w1 = rows(vec![Some("yes"); 1500]);
+        let refs: Vec<&RowInference> = w1.iter().collect();
+        assert!(matches!(d.decide_rows(1, &refs).unwrap(), WaveDecision::Stop));
+        assert_eq!(d.states()[0].stopped_at_wave, Some(1));
+    }
+
+    #[test]
+    fn failed_rows_are_masked_not_scored() {
+        // Half the prefix failed inference: the CI runs over the scored
+        // half only (20 matches → certifies), never over empty responses.
+        let task = task_with_stopping(vec![("exact_match", "lexical")]);
+        let d = driver(&task, 200);
+        let mut resp: Vec<Option<&str>> = vec![Some("yes"); 20];
+        resp.extend(vec![None; 20]);
+        let prefix = rows(resp);
+        let refs: Vec<&RowInference> = prefix.iter().collect();
+        assert!(matches!(d.decide_rows(0, &refs).unwrap(), WaveDecision::Stop));
+        assert!(d.states()[0].certified);
+    }
+
+    #[test]
+    fn min_rows_gate_blocks_early_certification() {
+        // A perfect 10-row prefix would certify on half-width alone, but
+        // min_rows = 20 holds the decision open.
+        let task = task_with_stopping(vec![("exact_match", "lexical")]);
+        let d = driver(&task, 200);
+        let prefix = rows(vec![Some("yes"); 10]);
+        let refs: Vec<&RowInference> = prefix.iter().collect();
+        assert!(matches!(d.decide_rows(0, &refs).unwrap(), WaveDecision::Continue));
+        assert!(!d.states()[0].certified);
+    }
+
+    #[test]
+    fn non_pure_metric_is_rejected_at_construction() {
+        let task = task_with_stopping(vec![("exact_match", "lexical"), ("faithfulness", "rag")]);
+        let resolved = MetricRegistry::with_builtins().resolve_task(&task).unwrap();
+        let err = StoppingDriver::new(&task, &resolved, skeleton(10, "yes"), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("faithfulness"), "{err}");
+        assert!(err.contains("pure metrics only"), "{err}");
+    }
+
+    #[test]
+    fn decisions_replay_deterministically() {
+        // Bootstrap CIs draw from a per-(wave, metric) stream of the task
+        // seed: two drivers fed the same prefixes agree exactly (this is
+        // what makes --resume's decision replay bit-identical).
+        let mut task = task_with_stopping(vec![("token_f1", "lexical")]);
+        task.statistics.ci_method = CiMethod::Percentile;
+        let a = driver(&task, 200);
+        let b = driver(&task, 200);
+        let prefix = rows(
+            (0..30).map(|i| if i % 3 == 0 { Some("yes") } else { Some("yes no") }).collect(),
+        );
+        let refs: Vec<&RowInference> = prefix.iter().collect();
+        let da = a.decide_rows(0, &refs).unwrap();
+        let db = b.decide_rows(0, &refs).unwrap();
+        assert_eq!(format!("{da:?}"), format!("{db:?}"));
+        let (sa, sb) = (a.states(), b.states());
+        assert_eq!(sa[0].half_width.to_bits(), sb[0].half_width.to_bits());
+        assert_eq!(sa[0].certified, sb[0].certified);
+    }
+
+    #[test]
+    fn json_rows_decode_to_the_same_decision() {
+        let task = task_with_stopping(vec![("exact_match", "lexical")]);
+        let d = driver(&task, 200);
+        let prefix = rows(vec![Some("yes"); 40]);
+        let encoded: Vec<Json> = prefix.iter().map(|r| r.to_json()).collect();
+        let refs: Vec<&Json> = encoded.iter().collect();
+        assert!(matches!(d.decide_json(0, &refs).unwrap(), WaveDecision::Stop));
+        assert!(d.states()[0].certified);
+    }
+
+    #[test]
+    fn stop_state_json_shape() {
+        let s = MetricStopState {
+            name: "exact_match".into(),
+            stopped_at_wave: Some(2),
+            certified: true,
+            half_width: 0.04,
+            target: 0.05,
+        };
+        let j = s.to_json();
+        assert_eq!(j.opt("name").unwrap().as_str().unwrap(), "exact_match");
+        assert_eq!(j.opt("stopped_at_wave").unwrap().as_usize().unwrap(), 2);
+        assert!(j.bool_or("certified", false));
+        let open = MetricStopState {
+            name: "x".into(),
+            stopped_at_wave: None,
+            certified: false,
+            half_width: f64::NAN,
+            target: 0.05,
+        };
+        assert!(open.to_json().opt("stopped_at_wave").is_none());
+    }
+}

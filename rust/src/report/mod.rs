@@ -132,6 +132,26 @@ pub fn eval_summary(result: &EvalResult) -> String {
             inf.examples.saturating_sub(s.restored_rows),
         ));
     }
+    if s.rows_saved > 0 || s.waves > 0 {
+        // Adaptive stopping ran: account every row as evaluated or saved,
+        // and name the certified metrics with their stop wave.
+        let certified: Vec<String> = result
+            .metrics
+            .iter()
+            .filter(|m| m.certified == Some(true))
+            .map(|m| match m.stopped_at_wave {
+                Some(w) => format!("{} (wave {})", m.name, w),
+                None => m.name.clone(),
+            })
+            .collect();
+        out.push_str(&format!(
+            "stopping: {} waves, {} rows evaluated, {} rows saved  |  certified: {}\n",
+            s.waves,
+            s.rows_evaluated,
+            s.rows_saved,
+            if certified.is_empty() { "none".to_string() } else { certified.join(", ") },
+        ));
+    }
     out
 }
 

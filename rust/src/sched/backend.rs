@@ -44,12 +44,14 @@
 //! reports nothing mid-task), and aborts (cost budget, Ctrl-C) take
 //! effect at task rather than batch granularity. Everything else —
 //! stealing, speculation, retry, blacklisting, checkpoint restore/spill,
-//! row-exact reassembly — matches [`run_scheduled`]'s semantics.
+//! row-exact reassembly, and wave gating (adaptive early stopping via
+//! [`run_plan_wave`], entirely driver-side: workers never see the gate,
+//! so no new protocol frames) — matches [`run_scheduled`]'s semantics.
 //!
 //! [`run_scheduled`]: crate::sched::run_scheduled
 
 use super::plan::TaskPlan;
-use super::{SchedulerConfig, SchedulerStats, TaskOutcome, TaskRecord};
+use super::{SchedulerConfig, SchedulerStats, TaskOutcome, TaskRecord, WaveDecision, WaveGate};
 use crate::engine::{ExecutorStats, Progress};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -776,6 +778,17 @@ struct Driver<'a> {
     api_calls: u64,
     api_retries: u64,
     cost_usd: f64,
+    /// Wave gating (adaptive early stopping). `boundary` is the next
+    /// row index where the gate is consulted (`total_rows` when ungated
+    /// or past the last consult); `deferred` holds `(home executor,
+    /// task id)` pairs carved beyond the boundary, ascending by start,
+    /// never issued until their wave opens; `settled` is the certified
+    /// prefix length once the gate decides `Stop`; `waves` counts
+    /// consults taken.
+    boundary: usize,
+    deferred: std::collections::VecDeque<(usize, usize)>,
+    settled: Option<usize>,
+    waves: usize,
     fatal: Option<anyhow::Error>,
     t0: Instant,
 }
@@ -959,6 +972,41 @@ pub fn run_plan(
     abort: Option<&AtomicBool>,
     max_cost_usd: Option<f64>,
 ) -> Result<PlanOutput> {
+    run_plan_wave(
+        total_rows,
+        executors,
+        cfg,
+        backend,
+        progress,
+        restored,
+        abort,
+        max_cost_usd,
+        None,
+    )
+}
+
+/// [`run_plan`] with an optional wave gate (`stopping` in the task
+/// JSON). Tasks are carved so none spans a wave boundary; work beyond
+/// the next boundary is held back until the gate decides `Continue`; a
+/// `Stop` decision settles the job at the boundary — not-yet-issued
+/// tasks are cancelled (their rows become `rows_saved`), in-flight
+/// attempts wind down through the normal Lost/Abandoned machinery, and
+/// the output is the exact row prefix `[0, boundary)`. Restored
+/// coverage replays the gate's decisions before any executor spawns,
+/// so a resumed run that already satisfies the stopping rule issues
+/// zero work.
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan_wave(
+    total_rows: usize,
+    executors: usize,
+    cfg: &SchedulerConfig,
+    backend: &mut dyn ExecutorBackend,
+    progress: Option<&Progress>,
+    restored: Vec<(usize, usize, Vec<Json>)>,
+    abort: Option<&AtomicBool>,
+    max_cost_usd: Option<f64>,
+    gate: Option<&WaveGate<'_, Json>>,
+) -> Result<PlanOutput> {
     cfg.validate()?;
     let executors = executors.max(1);
 
@@ -990,6 +1038,10 @@ pub fn run_plan(
         api_calls: 0,
         api_retries: 0,
         cost_usd: 0.0,
+        boundary: total_rows,
+        deferred: Default::default(),
+        settled: None,
+        waves: 0,
         fatal: None,
         t0: Instant::now(), // lint:allow(determinism): wall-clock anchor for timeline telemetry
     };
@@ -1106,8 +1158,66 @@ pub fn run_plan(
         }
     }
 
-    // Fully restored (or empty) job: nothing to spawn.
-    if driver.rows_done == total_rows {
+    // Wave-align the carve: split every fresh task at each wave boundary
+    // (pure config arithmetic — identical on resume) so completed
+    // coverage below a boundary is exactly the row prefix the gate
+    // decides over, then park everything beyond the first boundary.
+    if let Some(g) = gate {
+        driver.boundary = g.first.max(1).min(total_rows);
+        let first = driver.boundary;
+        let step = g.step.max(1);
+        let mut parked: Vec<(usize, usize)> = Vec::new();
+        for home in 0..executors {
+            let queued: Vec<usize> = driver.queues[home].drain(..).collect();
+            for id in queued {
+                let mut pieces = vec![id];
+                loop {
+                    let last = pieces[pieces.len() - 1];
+                    let (start, end) = (driver.tasks[last].start, driver.tasks[last].end);
+                    let next_b = if start < first {
+                        first
+                    } else {
+                        first + (start - first) / step * step + step
+                    };
+                    if end <= next_b {
+                        break;
+                    }
+                    let child = driver.tasks.len();
+                    driver.tasks.push(DriverTask {
+                        start: next_b,
+                        end,
+                        completed: false,
+                        attempts_failed: 0,
+                        speculated: false,
+                        restored: false,
+                        rows: None,
+                    });
+                    driver.tasks[last].end = next_b;
+                    pieces.push(child);
+                }
+                for id in pieces {
+                    if driver.tasks[id].start < first {
+                        driver.queues[home].push_back(id);
+                    } else {
+                        parked.push((home, id));
+                    }
+                }
+            }
+        }
+        parked.sort_by_key(|&(_, id)| driver.tasks[id].start);
+        driver.deferred = parked.into();
+        // Replay the gate over restored coverage before spawning
+        // anything: a resumed run whose prefix already satisfies the
+        // stopping rule must decide Stop here and issue zero work.
+        consult_gate(&mut driver, g);
+        if driver.fatal.is_some() {
+            return finish(driver, backend, true);
+        }
+    }
+
+    // Fully restored (or empty, or settled by restored replay) job:
+    // nothing to spawn.
+    if driver.settled.is_some() || driver.rows_done == total_rows {
         return finish(driver, backend, false);
     }
 
@@ -1121,7 +1231,10 @@ pub fn run_plan(
     let ready_deadline = Instant::now() + Duration::from_secs(60);
 
     // ---------------------------------------------------------- event loop
-    while driver.fatal.is_none() && driver.rows_done < driver.total_rows {
+    while driver.fatal.is_none()
+        && driver.settled.is_none()
+        && driver.rows_done < driver.total_rows
+    {
         // lint:allow(determinism): comparing against the wall-clock handshake deadline
         if Instant::now() > ready_deadline {
             if let Some(eid) =
@@ -1254,8 +1367,14 @@ pub fn run_plan(
                         driver.speculative_wins += 1;
                     }
                     driver.record(&f, TaskOutcome::Won);
+                    if let Some(g) = gate {
+                        consult_gate(&mut driver, g);
+                    }
                     if let Some(budget) = max_cost_usd {
-                        if driver.cost_usd > budget && driver.rows_done < driver.total_rows {
+                        if driver.cost_usd > budget
+                            && driver.settled.is_none()
+                            && driver.rows_done < driver.total_rows
+                        {
                             driver.fatal = Some(anyhow::anyhow!(
                                 "run aborted: cost ${:.4} exceeded budget ${budget:.4} \
                                  with {}/{} rows complete",
@@ -1285,6 +1404,94 @@ pub fn run_plan(
 
     let had_fatal = driver.fatal.is_some();
     finish(driver, backend, had_fatal)
+}
+
+/// Rows of completed coverage below `b` (a restored range overhanging
+/// `b` counts only its below-`b` part). Tasks tile disjoint ranges, so
+/// this equals `b` exactly when the whole prefix `[0, b)` is complete.
+fn covered_prefix_rows(driver: &Driver<'_>, b: usize) -> usize {
+    driver
+        .tasks
+        .iter()
+        .filter(|t| t.completed)
+        .map(|t| t.end.min(b).saturating_sub(t.start.min(b)))
+        .sum()
+}
+
+/// Consult the wave gate: once completed coverage reaches the current
+/// boundary, assemble the exact in-order row prefix and ask `decide`.
+/// `Continue` releases the next wave's deferred tasks into their home
+/// queues; `Stop` settles the job at the boundary and cancels every
+/// not-yet-issued task (in-flight attempts wind down through the normal
+/// Lost/Abandoned machinery). Loops because restored coverage can span
+/// several waves at once.
+fn consult_gate(driver: &mut Driver<'_>, gate: &WaveGate<'_, Json>) {
+    loop {
+        if driver.settled.is_some() || driver.fatal.is_some() {
+            return;
+        }
+        let b = driver.boundary;
+        if b >= driver.total_rows {
+            return; // the final wave finishes by exhausting rows, not by consult
+        }
+        if covered_prefix_rows(driver, b) < b {
+            return;
+        }
+        let wave = driver.waves;
+        driver.waves += 1;
+        let mut parts: Vec<(usize, &Vec<Json>)> = driver
+            .tasks
+            .iter()
+            .filter(|t| t.completed && t.start < b)
+            .filter_map(|t| t.rows.as_ref().map(|rows| (t.start, rows)))
+            .collect();
+        parts.sort_by_key(|&(start, _)| start);
+        let mut prefix: Vec<&Json> = Vec::with_capacity(b);
+        for (start, rows) in parts {
+            prefix.extend(rows.iter().take(b - start));
+        }
+        debug_assert_eq!(prefix.len(), b);
+        match (gate.decide)(wave, &prefix) {
+            Ok(WaveDecision::Continue) => {
+                driver.boundary = (b + gate.step.max(1)).min(driver.total_rows);
+                while let Some(&(home, id)) = driver.deferred.front() {
+                    if driver.tasks[id].start >= driver.boundary {
+                        break;
+                    }
+                    let _ = driver.deferred.pop_front();
+                    // A home lost to death/blacklist after the carve:
+                    // hand its wave work to the next assignable peer.
+                    let target = if driver.assignable(home) {
+                        home
+                    } else {
+                        (0..driver.executors)
+                            .map(|d| (home + d) % driver.executors)
+                            .find(|&e| driver.assignable(e))
+                            .unwrap_or(home)
+                    };
+                    driver.queues[target].push_back(id);
+                }
+            }
+            Ok(WaveDecision::Stop) => {
+                driver.settled = Some(b);
+                while let Some((_, id)) = driver.deferred.pop_front() {
+                    // Cancelled before issue: empty the range so
+                    // reassembly skips it — these rows are the run's
+                    // `rows_saved`.
+                    let start = driver.tasks[id].start;
+                    driver.tasks[id].end = start;
+                }
+                return;
+            }
+            Err(e) => {
+                if driver.fatal.is_none() {
+                    driver.fatal =
+                        Some(e.context(format!("wave gate failed at wave {wave}")));
+                }
+                return;
+            }
+        }
+    }
 }
 
 /// Blacklist an executor whose failure count crossed the threshold.
@@ -1366,9 +1573,13 @@ fn finish(
         }
     }
 
+    // A gate-settled job certifies exactly the prefix [0, settled_end);
+    // cancelled tasks carry empty ranges, and restored coverage past the
+    // stop boundary is clipped so resume never widens the output.
+    let settled_end = driver.settled.unwrap_or(driver.total_rows);
     let mut parts: Vec<(usize, usize, Vec<Json>)> = Vec::with_capacity(driver.tasks.len());
     for (id, task) in driver.tasks.iter_mut().enumerate() {
-        if task.start == task.end {
+        if task.start == task.end || task.start >= settled_end {
             continue;
         }
         let Some(rows) = task.rows.take() else {
@@ -1381,21 +1592,23 @@ fn finish(
         parts.push((task.start, task.end, rows));
     }
     parts.sort_by_key(|(start, _, _)| *start);
-    let mut rows = Vec::with_capacity(driver.total_rows);
+    let mut rows = Vec::with_capacity(settled_end);
     let mut cursor = 0usize;
-    for (start, end, part) in parts {
+    for (start, end, mut part) in parts {
         anyhow::ensure!(
             start == cursor && part.len() == end - start,
             "scheduler invariant violated: task range [{start}, {end}) does not tile the \
              frame at row {cursor}"
         );
+        if end > settled_end {
+            part.truncate(settled_end - start);
+        }
         rows.extend(part);
-        cursor = end;
+        cursor = end.min(settled_end);
     }
     anyhow::ensure!(
-        cursor == driver.total_rows,
-        "scheduler invariant violated: covered {cursor} of {} rows",
-        driver.total_rows
+        cursor == settled_end,
+        "scheduler invariant violated: covered {cursor} of {settled_end} certified rows"
     );
 
     let mut sched = SchedulerStats {
@@ -1418,6 +1631,9 @@ fn finish(
             .filter(|r| matches!(r.outcome, TaskOutcome::Lost | TaskOutcome::Abandoned))
             .map(|r| r.end - r.start)
             .sum(),
+        rows_evaluated: settled_end,
+        rows_saved: driver.total_rows - settled_end,
+        waves: driver.waves,
         ..Default::default()
     };
     let wins: Vec<f64> = driver
@@ -1491,5 +1707,171 @@ mod tests {
         assert_eq!(restored.rows, msg.rows);
         assert_eq!(restored.api_calls, 7);
         assert_eq!(restored.cost_usd, 0.25);
+    }
+
+    // ------------------------------------------------- wave-gate driver
+
+    use std::sync::atomic::AtomicUsize;
+
+    /// Echoes each row's index back as its result; counts executions so
+    /// replay tests can assert zero re-inference.
+    struct RowEcho(Arc<AtomicUsize>);
+
+    impl PlanTaskRunner for RowEcho {
+        fn run(&mut self, spec: &TaskSpec, _batch_size: usize) -> Result<TaskResultMsg> {
+            self.0.fetch_add(spec.end - spec.start, Ordering::SeqCst);
+            Ok(TaskResultMsg {
+                task_id: spec.task_id,
+                start: spec.start,
+                end: spec.end,
+                attempt: spec.attempt,
+                speculative: spec.speculative,
+                rows: (spec.start..spec.end).map(|i| Json::num(i as f64)).collect(),
+                rows_processed: spec.end - spec.start,
+                batches: 1,
+                busy_secs: 0.0,
+                peak_in_flight: 1,
+                api_calls: (spec.end - spec.start) as u64,
+                retries: 0,
+                cost_usd: 0.0,
+            })
+        }
+    }
+
+    fn echo_factory(rows_run: Arc<AtomicUsize>) -> RunnerFactory {
+        Arc::new(move |_eid| Ok(Box::new(RowEcho(rows_run.clone())) as Box<dyn PlanTaskRunner>))
+    }
+
+    fn assert_index_rows(rows: &[Json], n: usize) {
+        assert_eq!(rows.len(), n);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.as_f64().unwrap() as usize, i, "row {i} out of order");
+        }
+    }
+
+    #[test]
+    fn backend_wave_gate_stops_with_exact_prefix_and_accounting() {
+        let rows_run = Arc::new(AtomicUsize::new(0));
+        let decide = |_wave: usize, prefix: &[&Json]| -> Result<WaveDecision> {
+            // The gate must always see the exact in-order prefix.
+            for (i, row) in prefix.iter().enumerate() {
+                assert_eq!(row.as_f64().unwrap() as usize, i);
+            }
+            Ok(if prefix.len() >= 100 { WaveDecision::Stop } else { WaveDecision::Continue })
+        };
+        let gate = WaveGate { first: 50, step: 50, decide: &decide };
+        let mut backend = ThreadBackend::new(2, 8, None, echo_factory(rows_run.clone()));
+        let cfg = SchedulerConfig::default();
+        let out = run_plan_wave(
+            200,
+            2,
+            &cfg,
+            &mut backend,
+            None,
+            Vec::new(),
+            None,
+            None,
+            Some(&gate),
+        )
+        .unwrap();
+        assert_index_rows(&out.rows, 100);
+        assert_eq!(out.sched.rows_evaluated, 100);
+        assert_eq!(out.sched.rows_saved, 100);
+        assert_eq!(out.sched.rows_evaluated + out.sched.rows_saved, 200);
+        assert_eq!(out.sched.waves, 2);
+        // No executor ever ran a task beyond the settled boundary.
+        assert_eq!(rows_run.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn backend_wave_gate_replays_restored_prefix_without_running_anything() {
+        let rows_run = Arc::new(AtomicUsize::new(0));
+        let decide = |_wave: usize, prefix: &[&Json]| -> Result<WaveDecision> {
+            Ok(if prefix.len() >= 100 { WaveDecision::Stop } else { WaveDecision::Continue })
+        };
+        let gate = WaveGate { first: 50, step: 50, decide: &decide };
+        // Restored coverage overhangs the stop boundary: the replay must
+        // decide Stop at 100 and clip the overhang, issuing zero work.
+        let restored: Vec<(usize, usize, Vec<Json>)> =
+            vec![(0, 120, (0..120).map(|i| Json::num(i as f64)).collect())];
+        let mut backend = ThreadBackend::new(2, 8, None, echo_factory(rows_run.clone()));
+        let cfg = SchedulerConfig::default();
+        let out = run_plan_wave(
+            200,
+            2,
+            &cfg,
+            &mut backend,
+            None,
+            restored,
+            None,
+            None,
+            Some(&gate),
+        )
+        .unwrap();
+        assert_index_rows(&out.rows, 100);
+        assert_eq!(out.sched.waves, 2);
+        assert_eq!(out.sched.rows_evaluated, 100);
+        assert_eq!(out.sched.rows_saved, 100);
+        assert_eq!(rows_run.load(Ordering::SeqCst), 0, "resume must re-infer nothing");
+    }
+
+    #[test]
+    fn backend_wave_gate_that_never_stops_matches_ungated_run() {
+        let decide =
+            |_wave: usize, _prefix: &[&Json]| -> Result<WaveDecision> { Ok(WaveDecision::Continue) };
+        let gate = WaveGate { first: 40, step: 40, decide: &decide };
+        let cfg = SchedulerConfig::default();
+        let mut backend = ThreadBackend::new(2, 8, None, echo_factory(Arc::default()));
+        let gated = run_plan_wave(
+            130,
+            2,
+            &cfg,
+            &mut backend,
+            None,
+            Vec::new(),
+            None,
+            None,
+            Some(&gate),
+        )
+        .unwrap();
+        assert_index_rows(&gated.rows, 130);
+        // Boundaries 40, 80, 120 each consult; 160 clamps to 130 and the
+        // final wave finishes by exhausting rows.
+        assert_eq!(gated.sched.waves, 3);
+        assert_eq!(gated.sched.rows_evaluated, 130);
+        assert_eq!(gated.sched.rows_saved, 0);
+
+        let mut backend = ThreadBackend::new(2, 8, None, echo_factory(Arc::default()));
+        let plain =
+            run_plan(130, 2, &cfg, &mut backend, None, Vec::new(), None, None).unwrap();
+        assert_eq!(plain.rows, gated.rows);
+        assert_eq!(plain.sched.rows_evaluated, 130);
+        assert_eq!(plain.sched.rows_saved, 0);
+        assert_eq!(plain.sched.waves, 0);
+    }
+
+    #[test]
+    fn backend_wave_gate_error_fails_the_job() {
+        let decide = |_wave: usize, _prefix: &[&Json]| -> Result<WaveDecision> {
+            anyhow::bail!("ci recompute exploded")
+        };
+        let gate = WaveGate { first: 30, step: 30, decide: &decide };
+        let cfg = SchedulerConfig::default();
+        let mut backend = ThreadBackend::new(2, 8, None, echo_factory(Arc::default()));
+        let err = run_plan_wave(
+            90,
+            2,
+            &cfg,
+            &mut backend,
+            None,
+            Vec::new(),
+            None,
+            None,
+            Some(&gate),
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("wave gate failed at wave 0"), "{msg}");
+        assert!(msg.contains("ci recompute exploded"), "{msg}");
     }
 }

@@ -265,6 +265,15 @@ pub struct SchedulerStats {
     pub restored_rows: usize,
     /// Rows processed by losing or abandoned attempts (duplicated work).
     pub wasted_rows: usize,
+    /// Rows this job actually evaluated (= all rows, unless a wave gate
+    /// settled the job early — then the certified prefix length).
+    pub rows_evaluated: usize,
+    /// Rows deliberately never issued because a wave gate stopped the job
+    /// early (`rows_evaluated + rows_saved` = the frame size). 0 unless
+    /// adaptive stopping is enabled.
+    pub rows_saved: usize,
+    /// Wave-gate consults performed (0 = ungated classic run).
+    pub waves: usize,
     /// Wall-time statistics over winning task attempts.
     pub longest_task_secs: f64,
     pub mean_task_secs: f64,
@@ -294,6 +303,9 @@ impl SchedulerStats {
         self.restored_tasks += other.restored_tasks;
         self.restored_rows += other.restored_rows;
         self.wasted_rows += other.wasted_rows;
+        self.rows_evaluated += other.rows_evaluated;
+        self.rows_saved += other.rows_saved;
+        self.waves += other.waves;
         self.longest_task_secs = self.longest_task_secs.max(other.longest_task_secs);
         // Task-count-weighted mean of winning task wall times.
         if self.tasks > 0 {
@@ -327,6 +339,9 @@ impl SchedulerStats {
             ("restored_tasks", Json::num(self.restored_tasks as f64)),
             ("restored_rows", Json::num(self.restored_rows as f64)),
             ("wasted_rows", Json::num(self.wasted_rows as f64)),
+            ("rows_evaluated", Json::num(self.rows_evaluated as f64)),
+            ("rows_saved", Json::num(self.rows_saved as f64)),
+            ("waves", Json::num(self.waves as f64)),
             ("longest_task_secs", Json::num(self.longest_task_secs)),
             ("mean_task_secs", Json::num(self.mean_task_secs)),
             ("skew_ratio", Json::num(self.skew_ratio)),
@@ -362,6 +377,38 @@ pub struct TaskCheckpoint<'a, T> {
     pub restored: Vec<(usize, usize, Vec<T>)>,
     /// Sink persisting freshly completed tasks (`None` = restore-only).
     pub sink: Option<TaskSink<'a, T>>,
+}
+
+/// A wave gate's verdict after inspecting a completed row prefix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaveDecision {
+    /// Keep going: release the next wave of tasks.
+    Continue,
+    /// The answer is certified — settle the job at the current boundary.
+    /// Not-yet-issued tasks are cancelled (their rows count as
+    /// `rows_saved`); in-flight attempts wind down undisturbed.
+    Stop,
+}
+
+/// Adaptive-stopping hook for scheduled jobs (see DESIGN.md "Adaptive
+/// stopping"): rows are issued in waves, and after each wave completes
+/// the gate inspects the exact in-order row prefix and decides whether
+/// the job keeps going or settles early.
+///
+/// Wave boundaries are `first, first + step, first + 2·step, …` — pure
+/// config, never wall clock — and tasks are carved so none spans a
+/// boundary. `decide(wave, prefix)` runs once per boundary (single
+/// flight, under the scheduler lock — at that moment every row below the
+/// boundary is complete and no other work is runnable, so the lock is
+/// not contended), with `prefix.len()` equal to the boundary. A
+/// `decide` error fails the job like a fatal scheduler error.
+pub struct WaveGate<'a, T> {
+    /// First consult boundary (clamped to `[1, total_rows]`).
+    pub first: usize,
+    /// Rows released per wave after the first (min 1).
+    pub step: usize,
+    /// The stopping rule. `wave` is 0-based consult index.
+    pub decide: &'a (dyn Fn(usize, &[&T]) -> Result<WaveDecision> + Sync),
 }
 
 /// A queued task attempt. Row ranges live in `SchedState::ranges` so
@@ -402,6 +449,16 @@ struct SchedState<T> {
     inflight: Vec<InFlight>,
     rows_done: usize,
     total_rows: usize,
+    /// Wave gating: tasks at or past `boundary` wait here (with their
+    /// home deque) until the gate releases the next wave. Ascending by
+    /// range start. Empty and inert for ungated jobs.
+    deferred: VecDeque<(usize, TaskItem)>,
+    /// Rows `[0, boundary)` are issuable; `total_rows` when ungated.
+    boundary: usize,
+    /// Early-settle row boundary once the gate said [`WaveDecision::Stop`].
+    settled: Option<usize>,
+    /// Gate consults performed so far.
+    waves: usize,
     failures_per_executor: Vec<usize>,
     blacklisted: Vec<bool>,
     /// Executors currently parked waiting for work.
@@ -419,7 +476,7 @@ struct SchedState<T> {
 
 impl<T> SchedState<T> {
     fn done(&self) -> bool {
-        self.fatal.is_some() || self.rows_done == self.total_rows
+        self.fatal.is_some() || self.settled.is_some() || self.rows_done == self.total_rows
     }
 
     fn new_task(&mut self, start: usize, end: usize) -> usize {
@@ -520,6 +577,38 @@ where
     FI: Fn(usize) -> Result<S> + Sync,
     FP: Fn(&mut S, &DataFrame, BatchSlice) -> Result<Vec<T>> + Sync,
 {
+    run_scheduled_wave(
+        df, executors, batch_size, cfg, progress, checkpoint, abort, None, init, process,
+    )
+}
+
+/// [`run_scheduled_ext`] plus adaptive stopping: with a [`WaveGate`],
+/// tasks are carved so none spans a wave boundary and only the first
+/// wave is issuable; each time the completed in-order prefix reaches the
+/// boundary the gate decides whether to release the next wave or settle
+/// the job early. An early-settled job returns the exact `[0, boundary)`
+/// prefix, cancels every not-yet-issued task (accounted as
+/// `rows_saved`), and lets in-flight attempts wind down undisturbed.
+/// `gate: None` is byte-for-byte the ungated scheduler.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheduled_wave<T, S, FI, FP>(
+    df: &DataFrame,
+    executors: usize,
+    batch_size: usize,
+    cfg: &SchedulerConfig,
+    progress: Option<&Progress>,
+    checkpoint: Option<TaskCheckpoint<'_, T>>,
+    abort: Option<&AtomicBool>,
+    gate: Option<WaveGate<'_, T>>,
+    init: FI,
+    process: FP,
+) -> Result<SchedOutput<T>>
+where
+    T: Send,
+    S: Send,
+    FI: Fn(usize) -> Result<S> + Sync,
+    FP: Fn(&mut S, &DataFrame, BatchSlice) -> Result<Vec<T>> + Sync,
+{
     cfg.validate()?;
     let executors = executors.max(1);
     let batch_size = batch_size.max(1);
@@ -565,6 +654,13 @@ where
         inflight: Vec::new(),
         rows_done: 0,
         total_rows,
+        deferred: VecDeque::new(),
+        boundary: match &gate {
+            Some(g) => g.first.max(1).min(total_rows),
+            None => total_rows,
+        },
+        settled: None,
+        waves: 0,
         failures_per_executor: vec![0; executors],
         blacklisted: vec![false; executors],
         idle: 0,
@@ -641,12 +737,65 @@ where
         }
     }
 
+    if let Some(g) = &gate {
+        // Wave alignment: split every queued task at each wave boundary
+        // it spans (boundaries come from config only — `first`, then
+        // `step` apart — never wall clock), then park the pieces at or
+        // past the first boundary until the gate releases their wave.
+        let step = g.step.max(1);
+        let mut parked: Vec<(usize, TaskItem)> = Vec::new();
+        let first = state.boundary;
+        for home in 0..executors {
+            let items: Vec<TaskItem> = state.deques[home].drain(..).collect();
+            for item in items {
+                let end = state.ranges[item.id].1;
+                // Shrink the original task to its first aligned piece and
+                // spawn children for the rest.
+                let mut ids = vec![item.id];
+                let mut cursor = state.ranges[item.id].0;
+                loop {
+                    let next_b = if cursor < first {
+                        first
+                    } else {
+                        first + (cursor - first) / step * step + step
+                    };
+                    if next_b >= end {
+                        break;
+                    }
+                    state.ranges[*ids.last().unwrap()].1 = next_b;
+                    let child = state.new_task(next_b, end);
+                    ids.push(child);
+                    cursor = next_b;
+                }
+                for id in ids {
+                    let piece = TaskItem { id, speculative: false };
+                    if state.ranges[id].0 < first {
+                        state.deques[home].push_back(piece);
+                    } else {
+                        parked.push((home, piece));
+                    }
+                }
+            }
+        }
+        parked.sort_by_key(|(_, item)| state.ranges[item.id].0);
+        state.deferred = parked.into();
+        // A resumed run may already cover the first boundary (or more)
+        // from restored ranges alone: replay the gate's decisions now,
+        // before any worker claims work — this is what makes `--resume`
+        // after an early stop re-issue nothing.
+        consult_gate(&mut state, g, None);
+        if let Some(e) = state.fatal.take() {
+            return Err(e);
+        }
+    }
+
     let shared = Mutex::new(state);
     let work_ready = Condvar::new();
     let mut exec_stats: Vec<ExecutorStats> = (0..executors)
         .map(|eid| ExecutorStats { executor_id: eid, ..Default::default() })
         .collect();
 
+    let gate = gate.as_ref();
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::with_capacity(executors);
         for eid in 0..executors {
@@ -658,7 +807,7 @@ where
             handles.push(scope.spawn(move || -> Result<ExecutorStats> {
                 worker(
                     eid, df, batch_size, &cfg, progress, t0, shared, work_ready, sink, abort,
-                    init, process,
+                    gate, init, process,
                 )
             }));
         }
@@ -675,11 +824,14 @@ where
     }
 
     // Reassemble in row order and verify coverage: completed task ranges
-    // must partition [0, total_rows) exactly (no duplicated/dropped rows).
+    // must partition [0, settled_end) exactly (no duplicated/dropped
+    // rows). An early-settled job returns the certified prefix only;
+    // restored ranges overhanging the stop boundary are clipped.
+    let settled_end = state.settled.unwrap_or(total_rows);
     let mut parts: Vec<(usize, usize, Vec<T>)> = Vec::with_capacity(state.ranges.len());
     for (id, result) in state.results.into_iter().enumerate() {
         let (start, end) = state.ranges[id];
-        if start == end {
+        if start == end || start >= settled_end {
             continue;
         }
         let Some(rows) = result else {
@@ -688,20 +840,23 @@ where
         parts.push((start, end, rows));
     }
     parts.sort_by_key(|(start, _, _)| *start);
-    let mut rows = Vec::with_capacity(total_rows);
+    let mut rows = Vec::with_capacity(settled_end);
     let mut cursor = 0;
-    for (start, end, part) in parts {
+    for (start, end, mut part) in parts {
         anyhow::ensure!(
             start == cursor && part.len() == end - start,
             "scheduler invariant violated: task range [{start}, {end}) does not tile the frame \
              at row {cursor}"
         );
+        if end > settled_end {
+            part.truncate(settled_end - start);
+        }
         rows.extend(part);
-        cursor = end;
+        cursor = end.min(settled_end);
     }
     anyhow::ensure!(
-        cursor == total_rows,
-        "scheduler invariant violated: covered {cursor} of {total_rows} rows"
+        cursor == settled_end,
+        "scheduler invariant violated: covered {cursor} of {settled_end} rows"
     );
 
     // Aggregate telemetry.
@@ -714,6 +869,9 @@ where
         retries: state.retries,
         restored_tasks: state.restored_tasks,
         restored_rows,
+        rows_evaluated: settled_end,
+        rows_saved: total_rows - settled_end,
+        waves: state.waves,
         blacklisted_executors: (0..executors).filter(|&e| state.blacklisted[e]).collect(),
         wasted_rows: state
             .timeline
@@ -755,6 +913,7 @@ fn worker<T, S, FI, FP>(
     work_ready: &Condvar,
     sink: Option<&TaskSink<'_, T>>,
     abort: Option<&AtomicBool>,
+    gate: Option<&WaveGate<'_, T>>,
     init: &FI,
     process: &FP,
 ) -> Result<ExecutorStats>
@@ -979,6 +1138,12 @@ where
             if item.speculative {
                 state.speculative_wins += 1;
             }
+            // The win may complete the current wave's prefix: consult
+            // the gate while the lock is held (single flight — no other
+            // attempt can extend coverage concurrently).
+            if let Some(g) = gate {
+                consult_gate(&mut state, g, Some(work_ready));
+            }
             TaskOutcome::Won
         };
         state.timeline.push(TaskRecord {
@@ -1014,6 +1179,113 @@ where
 
     work_ready.notify_all();
     Ok(st)
+}
+
+/// Rows in `[0, b)` covered by completed task ranges (ranges are
+/// disjoint, so this equals `b` exactly when the prefix is complete).
+fn covered_prefix_rows<T>(state: &SchedState<T>, b: usize) -> usize {
+    let mut covered = 0usize;
+    for (id, &done) in state.completed.iter().enumerate() {
+        if !done {
+            continue;
+        }
+        let (s, e) = state.ranges[id];
+        covered += e.min(b).saturating_sub(s.min(b));
+    }
+    covered
+}
+
+/// Under the lock (or pre-spawn, on the driver thread): while the
+/// completed in-order prefix reaches the wave boundary, consult the gate
+/// once per boundary — releasing the next wave on `Continue`, settling
+/// the job early on `Stop`, failing it on a gate error. Loops because a
+/// resumed run's restored ranges can cover several waves at once; the
+/// decisions replay deterministically off the same prefixes.
+fn consult_gate<T>(
+    state: &mut SchedState<T>,
+    gate: &WaveGate<'_, T>,
+    work_ready: Option<&Condvar>,
+) {
+    loop {
+        if state.settled.is_some() || state.fatal.is_some() {
+            return;
+        }
+        let b = state.boundary;
+        if b >= state.total_rows {
+            // Final wave: the job finishes by exhausting its rows.
+            return;
+        }
+        if covered_prefix_rows(state, b) < b {
+            return;
+        }
+        let wave = state.waves;
+        state.waves += 1;
+        let decision = {
+            // Assemble the exact in-order `[0, b)` prefix by reference
+            // (restored ranges may overhang the boundary; clip them).
+            let mut parts: Vec<(usize, &Vec<T>)> = Vec::new();
+            for (id, result) in state.results.iter().enumerate() {
+                let (s, e) = state.ranges[id];
+                if s >= b || s == e || !state.completed[id] {
+                    continue;
+                }
+                if let Some(rows) = result {
+                    parts.push((s, rows));
+                }
+            }
+            parts.sort_by_key(|(s, _)| *s);
+            let mut prefix: Vec<&T> = Vec::with_capacity(b);
+            for (s, rows) in parts {
+                prefix.extend(rows.iter().take(b - s));
+            }
+            debug_assert_eq!(prefix.len(), b, "wave consult on an incomplete prefix");
+            (gate.decide)(wave, &prefix)
+        };
+        match decision {
+            Ok(WaveDecision::Continue) => {
+                let nb = (b + gate.step.max(1)).min(state.total_rows);
+                state.boundary = nb;
+                while let Some(&(home, item)) = state.deferred.front() {
+                    if state.ranges[item.id].0 >= nb {
+                        break;
+                    }
+                    state.deferred.pop_front();
+                    state.deques[home].push_back(item);
+                }
+                if let Some(w) = work_ready {
+                    w.notify_all();
+                }
+                // Loop: restored coverage may already reach the new
+                // boundary, in which case the next consult is due now.
+            }
+            Ok(WaveDecision::Stop) => {
+                state.settled = Some(b);
+                // Cancel every never-issued task: its range empties (so
+                // reassembly skips it) and its rows become `rows_saved`.
+                // In-flight attempts are left alone — they settle
+                // normally and exit on `done()`.
+                let deferred: Vec<(usize, TaskItem)> = state.deferred.drain(..).collect();
+                for (_home, item) in deferred {
+                    let s = state.ranges[item.id].0;
+                    state.ranges[item.id] = (s, s);
+                }
+                // A complete prefix leaves no queued sub-boundary tasks;
+                // anything still queued would be a scheduler bug.
+                debug_assert!(state.deques.iter().all(|d| d.is_empty()));
+                if let Some(w) = work_ready {
+                    w.notify_all();
+                }
+                return;
+            }
+            Err(e) => {
+                state.fatal = Some(e.context(format!("wave gate failed at wave {wave}")));
+                if let Some(w) = work_ready {
+                    w.notify_all();
+                }
+                return;
+            }
+        }
+    }
 }
 
 /// Under the lock: fold an externally raised abort flag into the shared
@@ -1761,6 +2033,168 @@ mod tests {
         let mut bad = SchedulerConfig::default();
         bad.max_task_attempts = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn wave_gate_stops_early_with_exact_prefix_and_accounting() {
+        let n = 200;
+        let df = frame(n);
+        let cfg = SchedulerConfig::default();
+        let max_start = AtomicUsize::new(0);
+        let decide = |_wave: usize, prefix: &[&f64]| -> Result<WaveDecision> {
+            // Certify once 100 rows are in; the prefix must be exact and
+            // in order at every consult.
+            for (i, v) in prefix.iter().enumerate() {
+                assert_eq!(**v, i as f64, "prefix out of order at {i}");
+            }
+            Ok(if prefix.len() >= 100 { WaveDecision::Stop } else { WaveDecision::Continue })
+        };
+        let out = run_scheduled_wave(
+            &df,
+            4,
+            10,
+            &cfg,
+            None,
+            None,
+            None,
+            Some(WaveGate { first: 50, step: 50, decide: &decide }),
+            |_| Ok(()),
+            |_, df, slice: BatchSlice| {
+                max_start.fetch_max(slice.start, Ordering::SeqCst);
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect::<Vec<_>>())
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rows, (0..100).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(out.sched.rows_evaluated, 100);
+        assert_eq!(out.sched.rows_saved, 100);
+        assert_eq!(out.sched.rows_evaluated + out.sched.rows_saved, n);
+        assert_eq!(out.sched.waves, 2);
+        // Rows past the stop boundary were never issued, let alone run.
+        assert!(max_start.load(Ordering::SeqCst) < 100, "{}", max_start.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn wave_gate_that_never_stops_matches_ungated_run() {
+        let n = 130;
+        let df = frame(n);
+        let cfg = SchedulerConfig::default();
+        let looks = Mutex::new(Vec::new());
+        let decide = |wave: usize, prefix: &[&f64]| -> Result<WaveDecision> {
+            looks.lock().unwrap().push((wave, prefix.len()));
+            Ok(WaveDecision::Continue)
+        };
+        let out = run_scheduled_wave(
+            &df,
+            3,
+            10,
+            &cfg,
+            None,
+            None,
+            None,
+            Some(WaveGate { first: 40, step: 40, decide: &decide }),
+            |_| Ok(()),
+            identity_udf(),
+        )
+        .unwrap();
+        let plain = run_scheduled(&df, 3, 10, &cfg, None, |_| Ok(()), identity_udf()).unwrap();
+        assert_eq!(out.rows, plain.rows);
+        assert_eq!(out.sched.rows_evaluated, n);
+        assert_eq!(out.sched.rows_saved, 0);
+        // Boundaries are pure config: consults at exactly 40, 80, 120
+        // (the final partial wave completes the job with no consult).
+        assert_eq!(*looks.lock().unwrap(), vec![(0, 40), (1, 80), (2, 120)]);
+        assert_eq!(out.sched.waves, 3);
+        // Ungated jobs report classic accounting.
+        assert_eq!(plain.sched.rows_evaluated, n);
+        assert_eq!(plain.sched.rows_saved, 0);
+        assert_eq!(plain.sched.waves, 0);
+    }
+
+    #[test]
+    fn wave_gate_error_fails_the_job() {
+        let df = frame(60);
+        let cfg = SchedulerConfig::default();
+        let decide = |_wave: usize, _prefix: &[&f64]| -> Result<WaveDecision> {
+            anyhow::bail!("stopping rule exploded")
+        };
+        let err = run_scheduled_wave(
+            &df,
+            2,
+            10,
+            &cfg,
+            None,
+            None,
+            None,
+            Some(WaveGate { first: 20, step: 20, decide: &decide }),
+            |_| Ok(()),
+            identity_udf(),
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("wave gate failed at wave 0"), "{msg}");
+        assert!(msg.contains("stopping rule exploded"), "{msg}");
+    }
+
+    #[test]
+    fn wave_gate_replays_decisions_over_restored_prefix_without_running() {
+        // A resumed run whose restored ranges already cover the stop
+        // boundary must settle before issuing ANY work — this is what
+        // makes `--resume` after an early stop re-inference-free.
+        let n = 200;
+        let df = frame(n);
+        let cfg = SchedulerConfig::default();
+        let ran = AtomicUsize::new(0);
+        let decide = |_wave: usize, prefix: &[&f64]| -> Result<WaveDecision> {
+            Ok(if prefix.len() >= 100 { WaveDecision::Stop } else { WaveDecision::Continue })
+        };
+        // Restored coverage overhangs the stop boundary (rows 0..120):
+        // the output must clip to the certified 100-row prefix.
+        let restored = vec![(0usize, 120usize, (0..120).map(|i| i as f64).collect::<Vec<_>>())];
+        let out = run_scheduled_wave(
+            &df,
+            4,
+            10,
+            &cfg,
+            None,
+            Some(TaskCheckpoint { restored, sink: None }),
+            None,
+            Some(WaveGate { first: 50, step: 50, decide: &decide }),
+            |_| Ok(()),
+            |_, df, slice: BatchSlice| {
+                ran.fetch_add(slice.len(), Ordering::SeqCst);
+                Ok(slice
+                    .indices()
+                    .map(|i| df.row(i).get("x").unwrap().as_f64().unwrap())
+                    .collect::<Vec<_>>())
+            },
+        )
+        .unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "restored prefix must replay, not re-run");
+        assert_eq!(out.rows, (0..100).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(out.sched.rows_evaluated, 100);
+        assert_eq!(out.sched.rows_saved, 100);
+        assert_eq!(out.sched.waves, 2);
+    }
+
+    #[test]
+    fn wave_stats_merge_accumulates_saved_rows() {
+        let mut a = SchedulerStats {
+            rows_evaluated: 100,
+            rows_saved: 50,
+            waves: 2,
+            ..Default::default()
+        };
+        let b =
+            SchedulerStats { rows_evaluated: 70, rows_saved: 0, waves: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!((a.rows_evaluated, a.rows_saved, a.waves), (170, 50, 3));
+        let j = a.to_json();
+        assert_eq!(j.get("rows_saved").unwrap().as_f64().unwrap(), 50.0);
+        assert_eq!(j.get("waves").unwrap().as_f64().unwrap(), 3.0);
     }
 
     #[test]

@@ -80,6 +80,10 @@ struct RunEntry {
     /// Settled metric estimates in task order, each a full MetricValue
     /// JSON (point value + bootstrap CI) — the `/partial` payload.
     partial: Vec<Json>,
+    /// Latest adaptive-stopping look: wave number, rows seen, and the
+    /// per-metric stopped/certified state. Absent on runs without a
+    /// `stopping` block, so their `/partial` payload is unchanged.
+    stopping: Option<Json>,
     /// Stage-2 snapshot: inference accounting + scheduler stats.
     inference: Option<Json>,
     result: Option<Json>,
@@ -142,6 +146,7 @@ impl RunRegistry {
                 progress: None,
                 metrics_total,
                 partial: Vec::new(),
+                stopping: None,
                 inference: None,
                 result: None,
             },
@@ -194,6 +199,14 @@ impl RunRegistry {
     pub fn record_inference(&self, id: &str, snapshot: Json) {
         if let Some(entry) = self.lock().runs.get_mut(id) {
             entry.inference = Some(snapshot);
+        }
+    }
+
+    /// Record the latest adaptive-stopping look (replaces the previous
+    /// one — `/partial` serves live state, not the look history).
+    pub fn record_stopping(&self, id: &str, snapshot: Json) {
+        if let Some(entry) = self.lock().runs.get_mut(id) {
+            entry.stopping = Some(snapshot);
         }
     }
 
@@ -299,17 +312,23 @@ impl RunRegistry {
         ]))
     }
 
-    /// `GET /runs/{id}/partial`: the metric estimates settled so far.
+    /// `GET /runs/{id}/partial`: the metric estimates settled so far,
+    /// plus (stopping-enabled runs only) the latest wave's per-metric
+    /// stopped/certified state.
     pub fn partial_json(&self, id: &str) -> Option<Json> {
         let g = self.lock();
         let e = g.runs.get(id)?;
-        Some(Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::str(id)),
             ("state", Json::str(e.state.as_str())),
             ("metrics_done", Json::num(e.partial.len() as f64)),
             ("metrics_total", Json::num(e.metrics_total as f64)),
             ("metrics", Json::arr(e.partial.clone())),
-        ]))
+        ];
+        if let Some(stopping) = &e.stopping {
+            fields.push(("stopping", stopping.clone()));
+        }
+        Some(Json::obj(fields))
     }
 
     /// `GET /runs/{id}/result`: the final result once `done`.
@@ -423,6 +442,20 @@ mod tests {
         };
         assert_eq!(metrics.len(), 2);
         assert_eq!(metrics[1].get("name").unwrap().as_str().unwrap(), "token_f1");
+    }
+
+    #[test]
+    fn stopping_snapshot_replaces_and_only_appears_when_recorded() {
+        let (reg, id) = registry_with_one();
+        // No stopping recorded → payload has no "stopping" key at all.
+        let p = reg.partial_json(&id).unwrap();
+        assert!(p.get("stopping").is_none());
+        reg.record_stopping(&id, Json::obj(vec![("wave", Json::num(0.0))]));
+        reg.record_stopping(&id, Json::obj(vec![("wave", Json::num(2.0))]));
+        let p = reg.partial_json(&id).unwrap();
+        let s = p.get("stopping").unwrap();
+        // Latest look wins — /partial is live state, not a history.
+        assert_eq!(s.get("wave").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]

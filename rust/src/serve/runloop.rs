@@ -22,7 +22,7 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use super::registry::{ClaimedRun, DataSpec, RunRegistry};
-use crate::coordinator::{EvalRunner, InferenceStats, MetricValue, RunObserver};
+use crate::coordinator::{EvalRunner, InferenceStats, MetricStopState, MetricValue, RunObserver};
 use crate::data::{synth, DataFrame};
 use crate::engine::Progress;
 use crate::util::json::Json;
@@ -116,5 +116,17 @@ impl RunObserver for RegistryObserver {
 
     fn metric_done(&self, index: usize, total: usize, value: &MetricValue) {
         self.registry.record_metric(&self.id, index, total, value.to_json());
+    }
+
+    fn wave_done(&self, wave: usize, rows: usize, stopping: &[MetricStopState]) {
+        // Fired from inside the inference stage (the scheduler's gate
+        // consult), so /partial shows live stopped/certified state while
+        // waves are still running.
+        let snapshot = Json::obj(vec![
+            ("wave", Json::num(wave as f64)),
+            ("rows", Json::num(rows as f64)),
+            ("metrics", Json::arr(stopping.iter().map(|s| s.to_json()).collect())),
+        ]);
+        self.registry.record_stopping(&self.id, snapshot);
     }
 }

@@ -24,6 +24,14 @@ impl ConfidenceInterval {
     pub fn width(&self) -> f64 {
         self.hi - self.lo
     }
+
+    /// Half of [`ConfidenceInterval::width`] — the "± margin" the adaptive
+    /// stopping rule certifies against (`stopping.ci_half_width`). For
+    /// asymmetric intervals (percentile/BCa) this is the conservative
+    /// symmetric margin, not the distance from the point estimate.
+    pub fn half_width(&self) -> f64 {
+        self.width() / 2.0
+    }
 }
 
 /// Percentile bootstrap CI of the mean-like statistic `stat` (paper §4.2).
@@ -203,6 +211,36 @@ mod tests {
         let c90 = t_interval(&xs, 0.90);
         let c99 = t_interval(&xs, 0.99);
         assert!(c99.width() > c90.width());
+    }
+
+    #[test]
+    fn half_width_degenerate_inputs() {
+        // n < 2: the t interval collapses to the point — zero half-width,
+        // never NaN (the stopping rule must not certify on it by accident
+        // of a NaN comparison, so callers gate on n >= 2 themselves).
+        let ci = t_interval(&[3.0], 0.95);
+        assert_eq!(ci.width(), 0.0);
+        assert_eq!(ci.half_width(), 0.0);
+        let ci = t_interval(&[], 0.95);
+        assert!(ci.point.is_nan());
+        // All-equal values: zero variance collapses the t interval too.
+        let ci = t_interval(&[2.5; 40], 0.95);
+        assert_eq!(ci.half_width(), 0.0);
+        assert_eq!(ci.point, 2.5);
+        // Wilson n=0: the [0,1] fallback has half-width 0.5.
+        let ci = wilson_interval(0, 0, 0.95);
+        assert!((ci.half_width() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn half_width_is_half_of_width() {
+        let xs = normal_sample(80, 1.0, 2.0, 17);
+        let ci = t_interval(&xs, 0.95);
+        assert!(ci.half_width() > 0.0);
+        assert!((ci.half_width() * 2.0 - ci.width()).abs() < 1e-15);
+        let mut rng = Rng::new(19);
+        let pct = percentile_bootstrap(&xs, mean, 0.95, 300, &mut rng);
+        assert!((pct.half_width() * 2.0 - pct.width()).abs() < 1e-12);
     }
 
     #[test]
