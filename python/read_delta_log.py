@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Stdlib-only Delta transaction-log reader (interop check for CI).
+
+Replays a table written by the Rust storage subsystem (``rust/src/storage``)
+using nothing but the Delta protocol: ``_delta_log/<version>.json`` commits
+of single-action JSON lines, optional ``<start>.<end>.compacted.json``
+shortcut files, and gzip-JSONL data files. Prints a summary JSON whose
+fields match ``slleval cache ls --json --keys``, so CI can diff the two
+documents and prove an external reader sees exactly the live-row set the
+Rust writer reports.
+
+Usage:
+    python3 python/read_delta_log.py <table_dir> [--key-col COL]
+
+Output (compact JSON, sorted keys):
+    {"bytes": ..., "files": ..., "keys": [...], "rows": ...,
+     "tombstones": ..., "version": ...}
+"""
+
+import argparse
+import gzip
+import json
+import os
+import sys
+
+SUPPORTED_READER_VERSION = 1
+
+
+def list_log(log_dir):
+    """Committed versions (sorted) and compacted (start, end) ranges."""
+    commits, compacted = [], []
+    for name in os.listdir(log_dir):
+        if not name.endswith(".json"):
+            continue
+        stem = name[: -len(".json")]
+        if stem.endswith(".compacted"):
+            parts = stem[: -len(".compacted")].split(".")
+            if len(parts) == 2 and all(p.isdigit() for p in parts):
+                compacted.append((int(parts[0]), int(parts[1])))
+        elif stem.isdigit():
+            commits.append(int(stem))
+    commits.sort()
+    return commits, compacted
+
+
+def read_actions(path):
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                yield json.loads(line)
+
+
+def replay(table_dir):
+    """Fold the log into (version, metadata, live files, tombstones)."""
+    log_dir = os.path.join(table_dir, "_delta_log")
+    commits, compacted = list_log(log_dir)
+    if not commits:
+        return None
+    latest = commits[-1]
+    start = 0
+    sources = []
+    full = [(s, e) for (s, e) in compacted if s == 0 and e <= latest]
+    if full:
+        s, e = max(full, key=lambda r: r[1])
+        sources.append(os.path.join(log_dir, "%020d.%020d.compacted.json" % (s, e)))
+        start = e + 1
+    for v in range(start, latest + 1):
+        sources.append(os.path.join(log_dir, "%020d.json" % v))
+
+    metadata = None
+    files = {}
+    tombstones = {}
+    for path in sources:
+        for action in read_actions(path):
+            if "protocol" in action:
+                reader = action["protocol"].get("minReaderVersion", 1)
+                if reader > SUPPORTED_READER_VERSION:
+                    raise SystemExit(
+                        "table requires reader protocol %d (supported: %d)"
+                        % (reader, SUPPORTED_READER_VERSION)
+                    )
+            elif "metaData" in action:
+                metadata = action["metaData"]
+            elif "add" in action:
+                add = action["add"]
+                tombstones.pop(add["path"], None)
+                files[add["path"]] = add
+            elif "remove" in action:
+                remove = action["remove"]
+                files.pop(remove["path"], None)
+                tombstones[remove["path"]] = remove
+            # commitInfo / txn / cdc etc.: informational, skipped.
+    return latest, metadata, files, tombstones
+
+
+def key_column(metadata, override):
+    if override:
+        return override
+    if metadata:
+        cols = metadata.get("configuration", {}).get("slleval.statsColumns", "")
+        cols = [c for c in cols.split(",") if c]
+        if cols:
+            return cols[0]
+    return "prompt_hash"
+
+
+def read_rows(table_dir, rel_path):
+    with gzip.open(os.path.join(table_dir, rel_path), "rt", encoding="utf-8") as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("table_dir")
+    parser.add_argument("--key-col", default=None)
+    args = parser.parse_args()
+
+    state = replay(args.table_dir)
+    if state is None:
+        print(json.dumps({"version": None}, sort_keys=True, separators=(",", ":")))
+        return
+    version, metadata, files, tombstones = state
+
+    key_col = key_column(metadata, args.key_col)
+    rows = 0
+    keys = set()
+    for rel_path in sorted(files):
+        for row in read_rows(args.table_dir, rel_path):
+            rows += 1
+            key = row.get(key_col)
+            if isinstance(key, str):
+                keys.add(key)
+
+    summary = {
+        "version": version,
+        "files": len(files),
+        "bytes": sum(int(f.get("size", 0)) for f in files.values()),
+        "rows": rows,
+        "tombstones": len(tombstones),
+        "keys": sorted(keys),
+    }
+    print(json.dumps(summary, sort_keys=True, separators=(",", ":")))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

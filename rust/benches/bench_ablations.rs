@@ -6,7 +6,7 @@
 //! 3. **adaptive vs static rate shares under partition skew** — the §6.1
 //!    limitation the adaptive extension addresses;
 //! 4. **token-bucket initial fill** — burst behaviour at job start;
-//! 5. **cache flush threshold** — write batching vs deltalite version
+//! 5. **cache flush threshold** — write batching vs Delta version
 //!    count.
 
 use spark_llm_eval::cache::ResponseCache;
@@ -111,6 +111,6 @@ fn main() {
     }
     println!(
         "{}",
-        table(&["flush_every", "2k puts wall time", "deltalite versions"], &rows)
+        table(&["flush_every", "2k puts wall time", "table versions"], &rows)
     );
 }

@@ -1,0 +1,127 @@
+//! Stats-based data-skipping benchmark: how many data files a point
+//! lookup decompresses with per-file min/max stats on vs off, on a cache
+//! that `optimize` has range-clustered (paper §3.2: Delta data skipping).
+//!
+//! Freshly flushed files each span nearly the whole SHA-256 key space, so
+//! stats alone prune nothing; after `slleval cache optimize` the file
+//! ranges are narrow and disjoint and a probe touches one file. The
+//! headline assertion: over a sparse probe set (hits + guaranteed
+//! misses) against 64+ clustered files, skipping decompresses at least
+//! 5x fewer files. Results land in `BENCH_cache.json` at the repository
+//! root.
+
+use spark_llm_eval::cache::ResponseCache;
+use spark_llm_eval::config::CachePolicy;
+use spark_llm_eval::providers::InferenceResponse;
+use spark_llm_eval::util::bench::section;
+use spark_llm_eval::util::json::Json;
+use std::time::Instant;
+
+const N_ENTRIES: usize = 2048;
+const FLUSH_EVERY: usize = 16;
+
+fn resp(i: usize) -> InferenceResponse {
+    InferenceResponse {
+        text: format!("response body for probe {i} — lorem ipsum dolor sit amet"),
+        input_tokens: 40,
+        output_tokens: 12,
+        latency_ms: 120.0,
+        cost_usd: 0.001,
+    }
+}
+
+fn probe_all(cache: &ResponseCache, prompts: &[String]) -> (u64, u64, f64, usize) {
+    let start = Instant::now();
+    let mut hits = 0usize;
+    for p in prompts {
+        if cache.get(p, "gpt-4o", "openai", 0.0, 256).unwrap().is_some() {
+            hits += 1;
+        }
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let s = cache.stats();
+    (s.files_opened, s.files_skipped, secs, hits)
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("slleval-bench-skipping-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    section("build: 2048 entries across 128 flush commits");
+    {
+        let mut cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+        cache.flush_every = FLUSH_EVERY;
+        for i in 0..N_ENTRIES {
+            cache.put(&format!("prompt-{i:04}"), "gpt-4o", "openai", 0.0, 256, &resp(i)).unwrap();
+        }
+        cache.flush().unwrap();
+        let files_before = cache.table().state(None).unwrap().unwrap().files.len();
+        println!("{files_before} flush files, every one a candidate for any probe");
+
+        section("optimize: range-cluster on prompt_hash");
+        let target = cache.storage_bytes().unwrap() / 100;
+        let outcome = cache.optimize(target).unwrap();
+        assert!(outcome.version.is_some(), "optimize must rewrite the flush files");
+        let vacuumed = cache.vacuum(0, false).unwrap();
+        let files_after = cache.table().state(None).unwrap().unwrap().files.len();
+        assert!(
+            files_after >= 64,
+            "benchmark needs 64+ clustered files, got {files_after}"
+        );
+        println!(
+            "{} -> {files_after} files ({} batches), vacuum reclaimed {} superseded files",
+            files_before, outcome.metrics.num_batches, vacuumed.deleted_files
+        );
+    }
+
+    // Sparse probe set: 12 known keys spread across the range plus 4
+    // guaranteed misses (misses are skipping's best case — with stats off
+    // they force a scan of every live file).
+    let mut prompts: Vec<String> =
+        (0..N_ENTRIES).step_by(N_ENTRIES / 12).map(|i| format!("prompt-{i:04}")).collect();
+    for i in 0..4 {
+        prompts.push(format!("never-cached-{i}"));
+    }
+
+    section("probe: stats-based skipping ON vs OFF (fresh handles)");
+    let with = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+    with.set_skipping(true);
+    let (opened_on, skipped_on, secs_on, hits_on) = probe_all(&with, &prompts);
+    let without = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+    without.set_skipping(false);
+    let (opened_off, _, secs_off, hits_off) = probe_all(&without, &prompts);
+
+    assert_eq!(hits_on, hits_off, "skipping must not change lookup results");
+    assert_eq!(hits_on, prompts.len() - 4);
+    let ratio = opened_off as f64 / opened_on.max(1) as f64;
+    println!(
+        "skipping ON : {opened_on} files opened, {skipped_on} skipped, {:.1} ms",
+        secs_on * 1e3
+    );
+    println!("skipping OFF: {opened_off} files opened, {:.1} ms", secs_off * 1e3);
+    println!("file-read reduction: {ratio:.1}x");
+    assert!(
+        opened_off >= 5 * opened_on.max(1),
+        "expected >=5x fewer file reads with skipping: {opened_off} vs {opened_on}"
+    );
+
+    let report = Json::obj(vec![
+        ("benchmark", Json::str("bench_cache_skipping")),
+        ("entries", Json::num(N_ENTRIES as f64)),
+        ("flush_every", Json::num(FLUSH_EVERY as f64)),
+        ("probes", Json::num(prompts.len() as f64)),
+        ("files_opened_skipping_on", Json::num(opened_on as f64)),
+        ("files_skipped_by_stats", Json::num(skipped_on as f64)),
+        ("files_opened_skipping_off", Json::num(opened_off as f64)),
+        ("read_reduction", Json::num(ratio)),
+        ("probe_secs_skipping_on", Json::num(secs_on)),
+        ("probe_secs_skipping_off", Json::num(secs_off)),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_cache.json");
+    std::fs::write(&out_path, report.to_pretty()).expect("writing BENCH_cache.json");
+    println!("\nresults written to {}", out_path.display());
+    let _ = std::fs::remove_dir_all(&dir);
+}

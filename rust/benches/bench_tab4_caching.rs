@@ -16,7 +16,7 @@ fn main() {
     assert_eq!(rows[1].api_calls, 0, "replay must make zero API calls");
     assert!(rows[1].secs < rows[0].secs / 3.0, "replay must be much faster");
 
-    section("§5.3 — cache storage overhead (live deltalite table)");
+    section("§5.3 — cache storage overhead (live Delta table)");
     // Insert entries shaped like the paper's workload (≈500-token prompts,
     // ≈200-token responses) and measure on-disk size, then extrapolate.
     let dir = std::env::temp_dir().join(format!("slleval-bench-cache-{}", std::process::id()));

@@ -44,7 +44,7 @@ const CLOCK_EXEMPT: [&str; 2] = ["rust/src/ratelimit/mod.rs", "rust/src/util/ben
 /// Modules where hash-iteration order can reach fingerprints, task
 /// ordering, or serialized output; `HashMap`/`HashSet` are banned here in
 /// favour of `BTreeMap`/`BTreeSet` (or an explicit sort).
-const HASH_SCOPED_PREFIXES: [&str; 8] = [
+const HASH_SCOPED_PREFIXES: [&str; 9] = [
     "rust/src/sched/",
     "rust/src/coordinator/",
     "rust/src/checkpoint/",
@@ -53,6 +53,7 @@ const HASH_SCOPED_PREFIXES: [&str; 8] = [
     "rust/src/report/",
     "rust/src/tracking/",
     "rust/src/analysis/",
+    "rust/src/storage/",
 ];
 
 pub fn determinism(file: &SourceFile) -> Vec<Diagnostic> {
@@ -114,8 +115,11 @@ pub fn determinism(file: &SourceFile) -> Vec<Diagnostic> {
 /// process mid-task) instead of surfacing as a retryable task failure —
 /// plus the eval-service daemon (`serve/`), where a panic on a
 /// malformed request or inside a run must become a 400/500 response or
-/// a failed-run state, never a daemon abort.
-const PANIC_SCOPED: [&str; 9] = [
+/// a failed-run state, never a daemon abort, plus the whole storage
+/// subsystem (`storage/`): a panic mid-commit can strand claimed log
+/// versions and half-published tables, so every failure must unwind as
+/// an `Err` the caller can retry or surface.
+const PANIC_SCOPED: [&str; 14] = [
     "rust/src/coordinator/plan_exec.rs",
     "rust/src/coordinator/worker.rs",
     "rust/src/providers/pipeline.rs",
@@ -125,6 +129,11 @@ const PANIC_SCOPED: [&str; 9] = [
     "rust/src/serve/mod.rs",
     "rust/src/serve/registry.rs",
     "rust/src/serve/runloop.rs",
+    "rust/src/storage/actions.rs",
+    "rust/src/storage/delta.rs",
+    "rust/src/storage/maintain.rs",
+    "rust/src/storage/migrate.rs",
+    "rust/src/storage/mod.rs",
 ];
 
 pub fn panic_safety(file: &SourceFile) -> Vec<Diagnostic> {
@@ -470,6 +479,42 @@ mod tests {
             assert!(
                 determinism(&file).iter().any(|d| d.subject == "HashMap"),
                 "{rel} must be determinism-scoped"
+            );
+        }
+    }
+
+    #[test]
+    fn skipping_path_modules_are_determinism_and_panic_scoped() {
+        // The data-skipping read path (stats computation → log replay →
+        // candidate pruning → lazy file loads) must stay deterministic:
+        // a HashMap in any of these modules could reorder candidate
+        // files or stats keys between runs, breaking the bit-identity
+        // contract between skipping on and off. The same modules are
+        // panic-scoped: a panic mid-commit strands claimed log versions.
+        for rel in [
+            "rust/src/storage/actions.rs",
+            "rust/src/storage/delta.rs",
+            "rust/src/storage/maintain.rs",
+            "rust/src/storage/migrate.rs",
+            "rust/src/cache/mod.rs",
+        ] {
+            let file = SourceFile {
+                rel: rel.to_string(),
+                lexed: super::super::lexer::lex("fn f() { let m = HashMap::new(); }"),
+            };
+            assert!(
+                determinism(&file).iter().any(|d| d.subject == "HashMap"),
+                "{rel} must be determinism-scoped"
+            );
+        }
+        for rel in PANIC_SCOPED.iter().filter(|r| r.starts_with("rust/src/storage/")) {
+            let file = SourceFile {
+                rel: rel.to_string(),
+                lexed: super::super::lexer::lex("fn f() { x.unwrap(); }"),
+            };
+            assert!(
+                panic_safety(&file).iter().any(|d| d.subject == ".unwrap()"),
+                "{rel} must be panic-scoped"
             );
         }
     }

@@ -1,22 +1,32 @@
-//! Content-addressable response caching backed by deltalite (paper §3.2).
+//! Content-addressable response caching backed by the Delta-protocol
+//! storage subsystem (paper §3.2).
 //!
 //! Cache key: `SHA256(prompt || model || provider || temperature ||
 //! max_tokens)` — exact-match on the full inference configuration. Entries
 //! follow the Table 1 schema. Policies: Enabled / ReadOnly / WriteOnly /
 //! Replay / Disabled.
+//!
+//! Lookups are lazy with stats-based data skipping: instead of replaying
+//! the whole table into memory at open (O(files) decompressions before
+//! the first hit), a probe consults the per-file min/max `stats` on
+//! `prompt_hash` from the `_delta_log` and decompresses only files whose
+//! range can contain the key — O(candidate files), with each decompressed
+//! file memoized for later probes. `slleval cache optimize` range-clusters
+//! data files on `prompt_hash`, which is what makes those ranges narrow.
 
-pub mod deltalite;
 pub mod semantic;
 
 use crate::config::CachePolicy;
 use crate::providers::InferenceResponse;
+use crate::storage::delta::{DeltaTable, TableState};
+use crate::storage::{is_commit_conflict, maintain};
 use crate::util::json::Json;
 use anyhow::{bail, Result};
-use deltalite::DeltaTable;
 use sha2::{Digest, Sha256};
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Deterministic cache key (paper §3.2).
 pub fn cache_key(
@@ -97,13 +107,20 @@ impl CacheEntry {
     }
 }
 
-/// Hit/miss accounting.
+/// Hit/miss accounting, plus the data-skipping ledger: how many live data
+/// files lookups decompressed vs proved skippable from stats alone.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub writes: u64,
     pub expired: u64,
+    /// Data files actually decompressed (each file counted once; repeat
+    /// probes hit the in-memory memo).
+    pub files_opened: u64,
+    /// File probes answered from per-file min/max stats without
+    /// decompression.
+    pub files_skipped: u64,
 }
 
 impl CacheStats {
@@ -117,17 +134,31 @@ impl CacheStats {
     }
 }
 
-/// The response cache: deltalite table + in-memory index + policy.
+/// The response cache: Delta table + lazy skipping reader + policy.
 ///
-/// The in-memory index mirrors the live snapshot for O(1) lookups; writes
-/// buffer and flush to the table in batches (one deltalite version per
-/// flush, like the paper's per-partition cache population).
+/// Reads go overlay (this process's writes) → memoized files → stats-
+/// filtered candidate files, newest file first. Writes buffer and flush
+/// to the table in batches (one table version per flush, like the paper's
+/// per-partition cache population).
 pub struct ResponseCache {
     table: DeltaTable,
     policy: CachePolicy,
-    index: Mutex<BTreeMap<String, CacheEntry>>,
+    /// Entries written by this process (freshest values; also serves
+    /// read-your-writes before a flush).
+    overlay: Mutex<BTreeMap<String, CacheEntry>>,
+    /// Decompressed data files, keyed by table-relative path.
+    loaded: Mutex<BTreeMap<String, Arc<BTreeMap<String, CacheEntry>>>>,
+    /// Cached log replay; invalidated after our own commits. External
+    /// commits made after open are picked up then too — same visibility
+    /// the old open-time snapshot gave.
+    state_cache: Mutex<Option<Arc<TableState>>>,
+    /// Read the table at this pinned version (time travel); None = latest.
+    version_pin: Option<u64>,
+    /// Consult per-file stats before decompressing (`inference.
+    /// cache_skipping`). Off = probe every live file, newest first.
+    skipping: AtomicBool,
     pending: Mutex<Vec<CacheEntry>>,
-    /// Serializes deltalite commits from this process; see [`Self::flush`].
+    /// Serializes table commits from this process; see [`Self::flush`].
     commit_lock: Mutex<()>,
     stats: Mutex<CacheStats>,
     /// Default TTL for new entries.
@@ -138,17 +169,14 @@ pub struct ResponseCache {
 
 impl ResponseCache {
     pub fn open(dir: &Path, policy: CachePolicy) -> Result<ResponseCache> {
-        let table = DeltaTable::open(dir)?;
-        let mut index = BTreeMap::new();
-        if policy.reads() {
-            for (k, v) in table.snapshot_by_key("prompt_hash", None)? {
-                index.insert(k, CacheEntry::from_json(&v)?);
-            }
-        }
         Ok(ResponseCache {
-            table,
+            table: DeltaTable::open(dir)?,
             policy,
-            index: Mutex::new(index),
+            overlay: Mutex::new(BTreeMap::new()),
+            loaded: Mutex::new(BTreeMap::new()),
+            state_cache: Mutex::new(None),
+            version_pin: None,
+            skipping: AtomicBool::new(true),
             pending: Mutex::new(Vec::new()),
             commit_lock: Mutex::new(()),
             stats: Mutex::new(CacheStats::default()),
@@ -160,28 +188,23 @@ impl ResponseCache {
     /// Open at a historical version (time-travel reproduction of a past
     /// evaluation). Always read-only.
     pub fn open_at_version(dir: &Path, version: u64) -> Result<ResponseCache> {
-        let table = DeltaTable::open(dir)?;
-        let mut index = BTreeMap::new();
-        for (k, v) in table.snapshot_by_key("prompt_hash", Some(version))? {
-            index.insert(k, CacheEntry::from_json(&v)?);
-        }
-        Ok(ResponseCache {
-            table,
-            policy: CachePolicy::ReadOnly,
-            index: Mutex::new(index),
-            pending: Mutex::new(Vec::new()),
-            commit_lock: Mutex::new(()),
-            stats: Mutex::new(CacheStats::default()),
-            ttl_days: None,
-            flush_every: 1000,
-        })
+        let mut cache = ResponseCache::open(dir, CachePolicy::ReadOnly)?;
+        cache.version_pin = Some(version);
+        // Surface a bad version at open, not on the first lookup.
+        cache.table.state(Some(version))?;
+        Ok(cache)
     }
 
     /// The backing table's directory: out-of-process executors open their
-    /// own connection to the same store (deltalite commits are
-    /// multi-writer safe), so the driver ships this path in task plans.
+    /// own connection to the same store (commits are multi-writer safe),
+    /// so the driver ships this path in task plans.
     pub fn dir(&self) -> &Path {
         self.table.root()
+    }
+
+    /// The backing Delta table (maintenance commands, diagnostics).
+    pub fn table(&self) -> &DeltaTable {
+        &self.table
     }
 
     pub fn policy(&self) -> CachePolicy {
@@ -192,12 +215,133 @@ impl ResponseCache {
         *self.stats.lock().unwrap()
     }
 
-    pub fn len(&self) -> usize {
-        self.index.lock().unwrap().len()
+    /// Toggle stats-based data skipping (`inference.cache_skipping`).
+    /// Lookup results are bit-identical either way; only the number of
+    /// files decompressed changes.
+    pub fn set_skipping(&self, enabled: bool) {
+        self.skipping.store(enabled, Ordering::Relaxed);
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
+    pub fn skipping(&self) -> bool {
+        self.skipping.load(Ordering::Relaxed)
+    }
+
+    /// Live distinct keys. Computed from per-file `numRecords` stats when
+    /// every live file carries them (the upsert path keeps one live file
+    /// per key, so rows == keys); falls back to a full scan otherwise.
+    /// Flushes pending writes first so the log is the source of truth.
+    pub fn len(&self) -> Result<usize> {
+        if self.policy.writes() {
+            self.flush()?;
+        }
+        let Some(state) = self.table_state()? else {
+            return Ok(self.overlay.lock().unwrap().len());
+        };
+        if let Some(n) = state.num_records() {
+            return Ok(n as usize);
+        }
+        let mut keys = std::collections::BTreeSet::new();
+        for meta in &state.files {
+            keys.extend(self.load_file(&meta.path)?.keys().cloned());
+        }
+        Ok(keys.len())
+    }
+
+    pub fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    /// Replay the log once and memoize; prune file memos that fell out of
+    /// the live set (superseded by upserts/optimize).
+    fn table_state(&self) -> Result<Option<Arc<TableState>>> {
+        let mut guard = self.state_cache.lock().unwrap();
+        if guard.is_none() {
+            let state = self.table.state(self.version_pin)?.map(Arc::new);
+            if let Some(state) = &state {
+                let live: std::collections::BTreeSet<&String> =
+                    state.files.iter().map(|f| &f.path).collect();
+                self.loaded.lock().unwrap().retain(|path, _| live.contains(path));
+            }
+            *guard = state;
+        }
+        Ok(guard.clone())
+    }
+
+    /// Decompress a data file into a key → entry map, memoized. Rows that
+    /// are not valid cache entries are ignored (foreign writers).
+    fn load_file(&self, path: &str) -> Result<Arc<BTreeMap<String, CacheEntry>>> {
+        if let Some(cached) = self.loaded.lock().unwrap().get(path) {
+            return Ok(cached.clone());
+        }
+        let mut map = BTreeMap::new();
+        for row in self.table.read_file(path)? {
+            if let Ok(entry) = CacheEntry::from_json(&row) {
+                map.insert(entry.prompt_hash.clone(), entry);
+            }
+        }
+        let map = Arc::new(map);
+        let mut loaded = self.loaded.lock().unwrap();
+        if loaded.insert(path.to_string(), map.clone()).is_none() {
+            self.stats.lock().unwrap().files_opened += 1;
+        }
+        Ok(map)
+    }
+
+    /// Find `key`: overlay, then live files newest-first, consulting
+    /// per-file stats when skipping is on. Newest-first matches the old
+    /// replay-everything semantics (last write wins) for any table where
+    /// a key somehow lives in two files.
+    fn lookup_key(&self, key: &str) -> Result<Option<CacheEntry>> {
+        if let Some(entry) = self.overlay.lock().unwrap().get(key) {
+            return Ok(Some(entry.clone()));
+        }
+        let Some(state) = self.table_state()? else {
+            return Ok(None);
+        };
+        let skipping = self.skipping();
+        let mut skipped = 0u64;
+        let mut found = None;
+        for meta in state.files.iter().rev() {
+            if skipping && !meta.may_contain_str("prompt_hash", key) {
+                skipped += 1;
+                continue;
+            }
+            if let Some(entry) = self.load_file(&meta.path)?.get(key) {
+                found = Some(entry.clone());
+                break;
+            }
+        }
+        self.stats.lock().unwrap().files_skipped += skipped;
+        Ok(found)
+    }
+
+    /// All live entries for one model: the semantic cache's rebuild scan.
+    /// Skipping prunes on the `model_name` stats column, so a multi-model
+    /// table only decompresses the requested model's files.
+    pub fn entries_for_model(&self, model: &str, provider: &str) -> Result<Vec<CacheEntry>> {
+        let mut by_key: BTreeMap<String, CacheEntry> = BTreeMap::new();
+        if let Some(state) = self.table_state()? {
+            let skipping = self.skipping();
+            let mut skipped = 0u64;
+            for meta in &state.files {
+                if skipping && !meta.may_contain_str("model_name", model) {
+                    skipped += 1;
+                    continue;
+                }
+                for entry in self.load_file(&meta.path)?.values() {
+                    if entry.model_name == model && entry.provider == provider {
+                        by_key.insert(entry.prompt_hash.clone(), entry.clone());
+                    }
+                }
+            }
+            self.stats.lock().unwrap().files_skipped += skipped;
+        }
+        for entry in self.overlay.lock().unwrap().values() {
+            if entry.model_name == model && entry.provider == provider {
+                by_key.insert(entry.prompt_hash.clone(), entry.clone());
+            }
+        }
+        Ok(by_key.into_values().collect())
     }
 
     /// Lookup under the policy. `Replay` turns a miss into an error.
@@ -214,10 +358,7 @@ impl ResponseCache {
         }
         let key = cache_key(prompt, model, provider, temperature, max_tokens);
         let now = crate::util::unix_ts();
-        let found = {
-            let index = self.index.lock().unwrap();
-            index.get(&key).cloned()
-        };
+        let found = self.lookup_key(&key)?;
         let mut stats = self.stats.lock().unwrap();
         match found {
             Some(e) if e.expired(now) => {
@@ -271,7 +412,7 @@ impl ResponseCache {
             created_at: crate::util::unix_ts(),
             ttl_days: self.ttl_days,
         };
-        self.index.lock().unwrap().insert(key, entry.clone());
+        self.overlay.lock().unwrap().insert(key, entry.clone());
         let should_flush = {
             let mut pending = self.pending.lock().unwrap();
             pending.push(entry);
@@ -284,13 +425,13 @@ impl ResponseCache {
         Ok(())
     }
 
-    /// Persist buffered writes as one deltalite upsert.
+    /// Persist buffered writes as one table upsert.
     ///
     /// Commits are serialized through `commit_lock` so concurrent executor
     /// flushes from this process never race each other on a version, and
-    /// commit conflicts from *other* processes sharing the table (deltalite
-    /// now fails those hard instead of clobbering the log) are retried
-    /// with a freshly recomputed version a few times before giving up.
+    /// commit conflicts from *other* processes sharing the table are
+    /// retried with a freshly recomputed version a few times before
+    /// giving up.
     pub fn flush(&self) -> Result<()> {
         let _commit_guard = self.commit_lock.lock().unwrap();
         let pending: Vec<CacheEntry> = {
@@ -310,8 +451,11 @@ impl ResponseCache {
         let mut last_err = None;
         for _ in 0..4 {
             match self.table.upsert(&rows, "prompt_hash") {
-                Ok(_) => return Ok(()),
-                Err(e) if deltalite::is_commit_conflict(&e) => last_err = Some(e),
+                Ok(_) => {
+                    *self.state_cache.lock().unwrap() = None;
+                    return Ok(());
+                }
+                Err(e) if is_commit_conflict(&e) => last_err = Some(e),
                 Err(e) => return Err(e),
             }
         }
@@ -327,11 +471,30 @@ impl ResponseCache {
         self.table.current_version()
     }
 
-    /// Compact the underlying table.
+    /// Compact the underlying table into a single file (legacy surface;
+    /// `optimize` with an unbounded target).
     pub fn compact(&self) -> Result<()> {
         self.flush()?;
         self.table.compact()?;
+        *self.state_cache.lock().unwrap() = None;
         Ok(())
+    }
+
+    /// Range-cluster small live files into `target_bytes` files (the
+    /// `slleval cache optimize` entry point for an open cache).
+    pub fn optimize(&self, target_bytes: u64) -> Result<maintain::OptimizeOutcome> {
+        self.flush()?;
+        let outcome = maintain::optimize(&self.table, target_bytes)?;
+        *self.state_cache.lock().unwrap() = None;
+        Ok(outcome)
+    }
+
+    /// Reclaim dead data files past `retain_ms` (the `slleval cache
+    /// vacuum` entry point for an open cache).
+    pub fn vacuum(&self, retain_ms: u64, dry_run: bool) -> Result<maintain::VacuumOutcome> {
+        let outcome = maintain::vacuum(&self.table, retain_ms, dry_run)?;
+        *self.state_cache.lock().unwrap() = None;
+        Ok(outcome)
     }
 }
 
@@ -395,7 +558,7 @@ mod tests {
             cache.flush().unwrap();
         }
         let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
-        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.len().unwrap(), 1);
         let hit = cache.get("p", "m", "prov", 0.0, 100).unwrap().unwrap();
         assert_eq!(hit.response_text, "persisted");
     }
@@ -440,10 +603,10 @@ mod tests {
         let mut cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
         cache.ttl_days = Some(1.0);
         cache.put("p", "m", "prov", 0.0, 100, &resp("x")).unwrap();
-        // Manually age the entry in the index.
+        // Manually age the entry in the overlay.
         {
-            let mut idx = cache.index.lock().unwrap();
-            for e in idx.values_mut() {
+            let mut overlay = cache.overlay.lock().unwrap();
+            for e in overlay.values_mut() {
                 e.created_at -= 2.0 * 86_400.0;
             }
         }
@@ -503,6 +666,118 @@ mod tests {
         assert!(cache.current_version().unwrap() >= Some(1));
         cache.flush().unwrap();
         let reopened = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
-        assert_eq!(reopened.len(), 25);
+        assert_eq!(reopened.len().unwrap(), 25);
+    }
+
+    #[test]
+    fn skipping_is_bit_identical_and_opens_fewer_files() {
+        let dir = tmp_dir("skipping");
+        let prompts: Vec<String> = (0..96).map(|i| format!("prompt-{i}")).collect();
+        {
+            let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+            for chunk in prompts.chunks(8) {
+                for p in chunk {
+                    cache.put(p, "m", "prov", 0.0, 100, &resp(&format!("resp:{p}"))).unwrap();
+                }
+                cache.flush().unwrap();
+            }
+            // Range-cluster into several files so hash ranges are narrow
+            // (fresh flush files each span ~the whole hash space).
+            let total = cache.storage_bytes().unwrap();
+            cache.optimize(total / 8).unwrap();
+        }
+
+        // Bit identity over every key plus a guaranteed miss.
+        let with = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+        with.set_skipping(true);
+        let without = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+        without.set_skipping(false);
+        let miss = "never-cached".to_string();
+        for p in prompts.iter().chain([&miss]) {
+            let a = with.get(p, "m", "prov", 0.0, 100).unwrap();
+            let b = without.get(p, "m", "prov", 0.0, 100).unwrap();
+            assert_eq!(a, b, "skipping must not change results for {p}");
+        }
+        assert_eq!(with.stats().hits, without.stats().hits);
+
+        // A sparse probe set on fresh handles: skipping decompresses
+        // strictly fewer files. (Probing every key would touch every file
+        // in both modes — the memo hides the difference.)
+        let sparse: Vec<&String> = prompts.iter().step_by(16).collect();
+        let with = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+        with.set_skipping(true);
+        let without = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+        without.set_skipping(false);
+        for p in sparse.iter().chain([&&miss]) {
+            let a = with.get(p, "m", "prov", 0.0, 100).unwrap();
+            let b = without.get(p, "m", "prov", 0.0, 100).unwrap();
+            assert_eq!(a, b);
+        }
+        let s_with = with.stats();
+        let s_without = without.stats();
+        assert!(s_with.files_skipped > 0, "stats must prune clustered files");
+        assert!(
+            s_with.files_opened < s_without.files_opened,
+            "skipping opened {} files, disabled opened {}",
+            s_with.files_opened,
+            s_without.files_opened
+        );
+    }
+
+    #[test]
+    fn optimize_then_vacuum_preserves_every_lookup() {
+        let dir = tmp_dir("maintenance");
+        let prompts: Vec<String> = (0..40).map(|i| format!("m-prompt-{i}")).collect();
+        let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+        for chunk in prompts.chunks(5) {
+            for p in chunk {
+                cache.put(p, "m", "prov", 0.0, 100, &resp(&format!("resp:{p}"))).unwrap();
+            }
+            cache.flush().unwrap();
+        }
+        let before: Vec<_> = prompts
+            .iter()
+            .map(|p| cache.get(p, "m", "prov", 0.0, 100).unwrap().unwrap())
+            .collect();
+
+        let optimized = cache.optimize(u64::MAX).unwrap();
+        assert!(optimized.version.is_some());
+        assert_eq!(optimized.metrics.removed_sizes.len(), 8);
+        let vacuumed = cache.vacuum(0, false).unwrap();
+        assert_eq!(vacuumed.deleted_files as usize, 8, "superseded files reclaimed");
+
+        // Same handle and a fresh handle both still answer identically.
+        let reopened = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+        for (p, old) in prompts.iter().zip(&before) {
+            let again = cache.get(p, "m", "prov", 0.0, 100).unwrap().unwrap();
+            assert_eq!(&again, old);
+            let fresh = reopened.get(p, "m", "prov", 0.0, 100).unwrap().unwrap();
+            assert_eq!(&fresh, old);
+        }
+        assert_eq!(reopened.len().unwrap(), prompts.len());
+    }
+
+    #[test]
+    fn entries_for_model_scopes_by_stats() {
+        let dir = tmp_dir("permodel");
+        let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+        for i in 0..6 {
+            cache.put(&format!("a{i}"), "model-a", "prov", 0.0, 100, &resp("a")).unwrap();
+        }
+        cache.flush().unwrap();
+        for i in 0..4 {
+            cache.put(&format!("b{i}"), "model-b", "prov", 0.0, 100, &resp("b")).unwrap();
+        }
+        cache.flush().unwrap();
+        let fresh = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+        let a = fresh.entries_for_model("model-a", "prov").unwrap();
+        assert_eq!(a.len(), 6);
+        assert!(a.iter().all(|e| e.model_name == "model-a"));
+        let s = fresh.stats();
+        assert!(
+            s.files_skipped >= 1,
+            "model-b-only file should be pruned by model_name stats, stats: {s:?}"
+        );
+        assert_eq!(fresh.entries_for_model("model-b", "prov").unwrap().len(), 4);
     }
 }

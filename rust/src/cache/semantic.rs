@@ -21,7 +21,8 @@ struct SemEntry {
 }
 
 /// In-memory semantic index over cache entries. Persistence rides on the
-/// exact-match deltalite cache; this index rebuilds from it at open.
+/// exact-match Delta-backed cache; [`SemanticCache::rebuild_from`]
+/// repopulates the index from it at open.
 pub struct SemanticCache<'rt> {
     runtime: &'rt SemanticRuntime,
     threshold: f32,
@@ -58,6 +59,24 @@ impl<'rt> SemanticCache<'rt> {
             entry,
         });
         Ok(())
+    }
+
+    /// Rebuild the index for one (model, provider) scope from the
+    /// exact-match cache. The scan consults the cache's per-file
+    /// `model_name` stats, so a multi-model table only decompresses the
+    /// requested model's data files.
+    pub fn rebuild_from(
+        &mut self,
+        cache: &crate::cache::ResponseCache,
+        model: &str,
+        provider: &str,
+    ) -> Result<usize> {
+        let entries = cache.entries_for_model(model, provider)?;
+        let n = entries.len();
+        for entry in entries {
+            self.insert(entry)?;
+        }
+        Ok(n)
     }
 
     /// Fuzzy lookup: nearest stored prompt in the same scope with cosine
@@ -179,6 +198,47 @@ mod tests {
         sc.insert(entry("what is the capital of france", "paris", "gpt-4o")).unwrap();
         let hit = sc.get("what is the capital of france", "gpt-4o-mini", "openai").unwrap();
         assert!(hit.is_none(), "different model must not share fuzzy entries");
+    }
+
+    #[test]
+    fn rebuild_from_exact_cache_scopes_by_model() {
+        let Some(rt) = runtime() else { return };
+        let dir = std::env::temp_dir()
+            .join("slleval-semantic-test")
+            .join(format!("rebuild-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = crate::cache::ResponseCache::open(
+            &dir,
+            crate::config::CachePolicy::Enabled,
+        )
+        .unwrap();
+        let resp = |text: &str| crate::providers::InferenceResponse {
+            text: text.into(),
+            input_tokens: 10,
+            output_tokens: 5,
+            latency_ms: 100.0,
+            cost_usd: 0.001,
+        };
+        cache
+            .put("what is the capital of france", "gpt-4o", "openai", 0.0, 1024, &resp("paris"))
+            .unwrap();
+        cache
+            .put("what is the capital of norway", "gpt-4o", "openai", 0.0, 1024, &resp("oslo"))
+            .unwrap();
+        let madrid = resp("madrid");
+        cache
+            .put("what is the capital of spain", "other-model", "openai", 0.0, 1024, &madrid)
+            .unwrap();
+        cache.flush().unwrap();
+
+        let mut sc = SemanticCache::new(&rt, 0.8);
+        let n = sc.rebuild_from(&cache, "gpt-4o", "openai").unwrap();
+        assert_eq!(n, 2, "only the requested model's entries are indexed");
+        assert_eq!(sc.len(), 2);
+        let hit = sc.get("tell me the capital city of france", "gpt-4o", "openai").unwrap();
+        assert!(hit.is_some());
+        let miss = sc.get("what is the capital of spain", "other-model", "openai").unwrap();
+        assert!(miss.is_none(), "other models' entries are not indexed");
     }
 
     #[test]

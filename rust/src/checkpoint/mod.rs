@@ -7,7 +7,7 @@
 //! granularity: as the scheduler finishes a task, its row results are
 //! spilled to a run directory together with a manifest record, both
 //! published with the same atomic first-writer-wins discipline as the
-//! deltalite transaction log ([`crate::util::fsx`]).
+//! Delta transaction log ([`crate::util::fsx`]).
 //!
 //! Layout (one run directory, one subdirectory per checkpointed stage):
 //!

@@ -98,6 +98,11 @@ pub struct InferenceConfig {
     /// Global tokens-per-minute budget split across executors.
     pub rate_limit_tpm: f64,
     pub cache_policy: CachePolicy,
+    /// Stats-based data skipping for cache lookups: consult per-file
+    /// min/max `prompt_hash` stats from the Delta log and decompress only
+    /// files whose range can contain the key. Results are bit-identical
+    /// either way; off forces a full file probe (diagnostics).
+    pub cache_skipping: bool,
     /// Retry attempts for recoverable errors (429/5xx).
     pub max_retries: usize,
     /// Base delay (seconds) for exponential backoff.
@@ -120,6 +125,7 @@ impl Default for InferenceConfig {
             rate_limit_rpm: 10_000.0,
             rate_limit_tpm: 2_000_000.0,
             cache_policy: CachePolicy::Enabled,
+            cache_skipping: true,
             max_retries: 3,
             retry_delay: 1.0,
             adaptive_rate_limits: false,
@@ -481,6 +487,7 @@ impl EvalTask {
                     ("rate_limit_rpm", Json::num(self.inference.rate_limit_rpm)),
                     ("rate_limit_tpm", Json::num(self.inference.rate_limit_tpm)),
                     ("cache_policy", Json::str(self.inference.cache_policy.as_str())),
+                    ("cache_skipping", Json::Bool(self.inference.cache_skipping)),
                     ("max_retries", Json::num(self.inference.max_retries as f64)),
                     ("retry_delay", Json::num(self.inference.retry_delay)),
                     ("adaptive_rate_limits", Json::Bool(self.inference.adaptive_rate_limits)),
@@ -590,6 +597,7 @@ impl EvalTask {
                 rate_limit_rpm: i.f64_or("rate_limit_rpm", 10_000.0),
                 rate_limit_tpm: i.f64_or("rate_limit_tpm", 2_000_000.0),
                 cache_policy: CachePolicy::from_str(i.str_or("cache_policy", "enabled"))?,
+                cache_skipping: i.bool_or("cache_skipping", true),
                 max_retries: i.usize_or("max_retries", 3),
                 retry_delay: i.f64_or("retry_delay", 1.0),
                 adaptive_rate_limits: i.bool_or("adaptive_rate_limits", false),
@@ -921,6 +929,24 @@ mod tests {
         let mut bad = EvalTask::default();
         bad.inference.concurrency = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn cache_skipping_round_trips_and_defaults_on() {
+        let mut task = EvalTask::default();
+        assert!(task.inference.cache_skipping, "skipping is the default read path");
+        task.inference.cache_skipping = false;
+        let restored = EvalTask::from_json(&task.to_json()).unwrap();
+        assert_eq!(task, restored);
+
+        // A task file that predates the field parses with skipping on.
+        let mut json = task.to_json();
+        if let Json::Obj(map) = &mut json {
+            if let Some(Json::Obj(inf)) = map.get_mut("inference") {
+                inf.remove("cache_skipping");
+            }
+        }
+        assert!(EvalTask::from_json(&json).unwrap().inference.cache_skipping);
     }
 
     #[test]

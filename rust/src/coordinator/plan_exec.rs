@@ -14,7 +14,7 @@
 //! - **out of process** (`slleval worker`): [`PlanHost::from_plan`]
 //!   reconstructs the environment from the plan — its own clock, its own
 //!   simulated provider endpoint (deterministic content draws make the
-//!   responses identical), its own cache connection (deltalite commits
+//!   responses identical), its own cache connection (Delta commits
 //!   are multi-writer safe).
 //!
 //! Completed tasks spill **worker-side** into the plan's checkpoint
@@ -75,6 +75,11 @@ impl PlanHost {
             )),
             _ => None,
         };
+        // Inference plans carry the task's data-skipping switch; the
+        // worker's own cache connection honours it like the driver's.
+        if let (Some(cache), PlanWork::Inference(p)) = (&cache, &plan.work) {
+            cache.set_skipping(p.inference.cache_skipping);
+        }
         Ok(PlanHost { clock, service, cache })
     }
 }

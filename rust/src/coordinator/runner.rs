@@ -305,6 +305,11 @@ impl EvalRunner {
         task: &EvalTask,
         stopping: Option<&StoppingDriver>,
     ) -> Result<(Vec<RowInference>, InferenceStats)> {
+        // The task's data-skipping switch applies to every lookup this
+        // stage makes, whichever backend executes it.
+        if let Some(cache) = &self.cache {
+            cache.set_skipping(task.inference.cache_skipping);
+        }
         if task.backend != BackendKind::Thread {
             return self.run_inference_backend(prompts, task, stopping);
         }
@@ -1338,6 +1343,9 @@ impl EvalRunner {
         // lint:allow(determinism): reported wall_secs is wall-clock telemetry
         let wall0 = std::time::Instant::now();
         let cache = self.cache.clone();
+        if let Some(cache) = &cache {
+            cache.set_skipping(task.inference.cache_skipping);
+        }
         let model_cfg = task.model.clone();
 
         // Same stage fingerprint as run_inference — over the FULL prompt

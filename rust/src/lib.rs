@@ -36,6 +36,7 @@ pub mod sched;
 pub mod serve;
 pub mod sim;
 pub mod stats;
+pub mod storage;
 pub mod template;
 pub mod tracking;
 pub mod util;

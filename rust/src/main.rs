@@ -15,6 +15,9 @@
 //! slleval sim       --executors 8 --n 10000 [--rpm 10000]
 //! slleval checkpoint compact <run_dir>
 //! slleval checkpoint ls <run_dir>
+//! slleval cache ls <dir> [--json] [--keys]
+//! slleval cache optimize <dir> [--target-bytes N]
+//! slleval cache vacuum <dir> [--dry-run] [--retain-hours N]
 //! slleval lint      [--baseline lint-baseline.json] [--json]
 //! slleval serve     --listen 127.0.0.1:7464 [--config serve.json]
 //!                   [--cache-dir .slleval-cache] [--fast]
@@ -94,6 +97,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("tables") => cmd_tables(args),
         Some("sim") => cmd_sim(args),
         Some("checkpoint") => cmd_checkpoint(args),
+        Some("cache") => cmd_cache(args),
         Some("lint") => cmd_lint(args),
         // Hidden: the process-backend executor entry point. Spawned by
         // the driver with stdin/stdout pipes — never invoked by hand.
@@ -104,7 +108,7 @@ fn dispatch(args: &Args) -> Result<()> {
         // Eval-as-a-service: the resident HTTP driver daemon.
         Some("serve") => cmd_serve(args),
         Some(other) => bail!(
-            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim, checkpoint, lint, serve, serve-worker)"
+            "unknown subcommand '{other}' (try: generate, run, compare, replay, rescore, tables, sim, checkpoint, cache, lint, serve, serve-worker)"
         ),
         None => {
             print_usage();
@@ -122,6 +126,9 @@ fn print_usage() {
     println!("  rescore: recompute metrics from a cache/checkpoint, zero inference calls");
     println!("  checkpoint compact <run_dir>: coalesce per-task manifest records per stage");
     println!("  checkpoint ls <run_dir>: list each stage's fingerprint and spilled coverage");
+    println!("  cache ls <dir> [--json] [--keys]: inspect a Delta cache table");
+    println!("  cache optimize <dir> [--target-bytes N]: range-cluster small data files");
+    println!("  cache vacuum <dir> [--dry-run] [--retain-hours N]: reclaim dead data files");
     println!("  lint [--baseline <file>] [--json]: static analysis of this repo's invariants");
     println!(
         "  serve --listen <addr> [--cache-dir d] [--fast]: resident HTTP eval driver \
@@ -462,6 +469,151 @@ fn cmd_checkpoint(args: &Args) -> Result<()> {
             Ok(())
         }
         _ => bail!("usage: slleval checkpoint <compact|ls> <run_dir>"),
+    }
+}
+
+/// `slleval cache <ls|optimize|vacuum> <dir>` — inspect and maintain a
+/// Delta cache table (any table written by [`spark_llm_eval::storage`],
+/// not just response caches). Opening the table migrates a legacy
+/// deltalite `_log/` directory in place first, so these commands also
+/// serve as the migration entry point for old caches.
+fn cmd_cache(args: &Args) -> Result<()> {
+    use spark_llm_eval::storage::{self, DeltaTable};
+    use spark_llm_eval::util::json::Json;
+
+    let usage = "usage: slleval cache <ls|optimize|vacuum> <dir>";
+    let sub = args.positional.first().map(String::as_str).context(usage)?;
+    let dir = args.positional.get(1).context(usage)?;
+    let table = DeltaTable::open(Path::new(dir))?;
+    match sub {
+        "ls" => {
+            let state = table.state(None)?;
+            let as_json = args.has_flag("json");
+            let Some(state) = state else {
+                if as_json {
+                    println!("{}", Json::obj(vec![("version", Json::Null)]));
+                } else {
+                    println!("{dir}: empty table (no commits)");
+                }
+                return Ok(());
+            };
+            let with_stats = state.files.iter().filter(|f| f.stats.is_some()).count();
+            let coverage = if state.files.is_empty() {
+                1.0
+            } else {
+                with_stats as f64 / state.files.len() as f64
+            };
+            // Row count from per-file stats when complete, else a scan.
+            let rows = match state.num_records() {
+                Some(n) => n as usize,
+                None => table.snapshot(None)?.len(),
+            };
+            let mut last_optimize = None;
+            let mut last_vacuum = None;
+            for (_, op, ts) in table.history()? {
+                match op.as_str() {
+                    "OPTIMIZE" => last_optimize = Some(ts),
+                    "VACUUM END" => last_vacuum = Some(ts),
+                    _ => {}
+                }
+            }
+            if as_json {
+                let mut fields = vec![
+                    ("version", Json::num(state.version as f64)),
+                    ("files", Json::num(state.files.len() as f64)),
+                    ("bytes", Json::num(state.live_bytes() as f64)),
+                    ("rows", Json::num(rows as f64)),
+                    ("tombstones", Json::num(state.tombstones.len() as f64)),
+                    ("stats_coverage", Json::num(coverage)),
+                    ("last_optimize", last_optimize.map(Json::num).unwrap_or(Json::Null)),
+                    ("last_vacuum", last_vacuum.map(Json::num).unwrap_or(Json::Null)),
+                ];
+                if args.has_flag("keys") {
+                    let key_col = &table.effective_stats_columns(state.metadata.as_ref())[0];
+                    let keys: Vec<Json> = table
+                        .snapshot_by_key(key_col, None)?
+                        .into_keys()
+                        .map(|k| Json::str(k))
+                        .collect();
+                    fields.push(("keys", Json::arr(keys)));
+                }
+                println!("{}", Json::obj(fields));
+            } else {
+                let fmt_ts = |ts: Option<f64>| match ts {
+                    Some(t) => format!("{t:.0}s"),
+                    None => "never".to_string(),
+                };
+                println!(
+                    "{dir}: version {} | {} live file(s), {} bytes, {} row(s) | \
+                     stats coverage {:.0}% | {} tombstone(s) | last optimize {} | last vacuum {}",
+                    state.version,
+                    state.files.len(),
+                    state.live_bytes(),
+                    rows,
+                    coverage * 100.0,
+                    state.tombstones.len(),
+                    fmt_ts(last_optimize),
+                    fmt_ts(last_vacuum),
+                );
+            }
+            Ok(())
+        }
+        "optimize" => {
+            let target =
+                args.get_usize("target-bytes", storage::maintain::DEFAULT_TARGET_BYTES as usize)
+                    as u64;
+            // Racing appends conflict the whole rewrite; retry afresh.
+            let mut outcome = None;
+            for _ in 0..8 {
+                match storage::optimize(&table, target) {
+                    Ok(o) => {
+                        outcome = Some(o);
+                        break;
+                    }
+                    Err(e) if storage::is_commit_conflict(&e) => continue,
+                    Err(e) => return Err(e),
+                }
+            }
+            let outcome = outcome.context("optimize kept losing commit races; try again")?;
+            match outcome.version {
+                Some(v) => println!(
+                    "optimized {dir} at version {v}: {}",
+                    outcome.metrics.to_json().to_pretty()
+                ),
+                None => println!("{dir}: nothing to optimize"),
+            }
+            Ok(())
+        }
+        "vacuum" => {
+            let retain_hours =
+                args.get_f64("retain-hours", storage::DEFAULT_RETAIN_HOURS);
+            if retain_hours < 0.0 {
+                bail!("--retain-hours must be >= 0");
+            }
+            let dry_run = args.has_flag("dry-run");
+            let retain_ms = (retain_hours * 3_600_000.0) as u64;
+            let outcome = storage::vacuum(&table, retain_ms, dry_run)?;
+            if dry_run {
+                for (path, size) in &outcome.to_delete {
+                    println!("would delete {path} ({size} bytes)");
+                }
+                println!(
+                    "{dir}: dry run — {} file(s) eligible, {}",
+                    outcome.to_delete.len(),
+                    outcome.start_metrics()
+                );
+            } else {
+                println!(
+                    "vacuumed {dir}: {} file(s) deleted, {} bytes reclaimed | start {} | end {}",
+                    outcome.deleted_files,
+                    outcome.reclaimed_bytes,
+                    outcome.start_metrics(),
+                    outcome.end_metrics(),
+                );
+            }
+            Ok(())
+        }
+        other => bail!("unknown cache subcommand '{other}' ({usage})"),
     }
 }
 

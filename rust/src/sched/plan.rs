@@ -176,6 +176,7 @@ fn inference_cfg_to_json(i: &InferenceConfig) -> Json {
         ("rate_limit_rpm", Json::num(i.rate_limit_rpm)),
         ("rate_limit_tpm", Json::num(i.rate_limit_tpm)),
         ("cache_policy", Json::str(i.cache_policy.as_str())),
+        ("cache_skipping", Json::Bool(i.cache_skipping)),
         ("max_retries", Json::num(i.max_retries as f64)),
         ("retry_delay", Json::num(i.retry_delay)),
         ("adaptive_rate_limits", Json::Bool(i.adaptive_rate_limits)),
@@ -191,6 +192,7 @@ fn inference_cfg_from_json(v: &Json) -> Result<InferenceConfig> {
         rate_limit_rpm: v.f64_or("rate_limit_rpm", d.rate_limit_rpm),
         rate_limit_tpm: v.f64_or("rate_limit_tpm", d.rate_limit_tpm),
         cache_policy: CachePolicy::from_str(v.str_or("cache_policy", "enabled"))?,
+        cache_skipping: v.bool_or("cache_skipping", d.cache_skipping),
         max_retries: v.usize_or("max_retries", d.max_retries),
         retry_delay: v.f64_or("retry_delay", d.retry_delay),
         adaptive_rate_limits: v.bool_or("adaptive_rate_limits", false),

@@ -1,0 +1,546 @@
+//! Delta transaction-protocol actions (paper §3.2: "cache backed by Delta
+//! Lake").
+//!
+//! Every commit file under `_delta_log/` is newline-delimited JSON, one
+//! action object per line, each wrapped in a single-key envelope naming the
+//! action type — exactly the shape the Delta reference implementations
+//! parse:
+//!
+//! ```text
+//! {"protocol":{"minReaderVersion":1,"minWriterVersion":2}}
+//! {"metaData":{"id":"...","schemaString":"...","partitionValues":...}}
+//! {"add":{"path":"data/part-...jsonl.gz","stats":"{\"numRecords\":12,...}"}}
+//! {"remove":{"path":"...","deletionTimestamp":1700000000000,...}}
+//! {"commitInfo":{"operation":"OPTIMIZE","operationMetrics":{...}}}
+//! ```
+//!
+//! Field names are the spec's camelCase, timestamps are epoch milliseconds,
+//! and `stats` is a JSON *string* embedding `numRecords`/`minValues`/
+//! `maxValues`/`nullCount` — the per-file index that data skipping reads.
+//! Unknown envelope keys (`txn`, `cdc`, ...) are skipped on parse so logs
+//! written by richer engines still replay.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Reader/writer feature gates we emit. minReaderVersion 1 / minWriterVersion
+/// 2 is the plain append/remove protocol every Delta client supports.
+pub const MIN_READER_VERSION: u64 = 1;
+pub const MIN_WRITER_VERSION: u64 = 2;
+
+/// `{"protocol": ...}` — the feature-gate action, first line of commit 0.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Protocol {
+    pub min_reader_version: u64,
+    pub min_writer_version: u64,
+}
+
+impl Protocol {
+    pub fn current() -> Protocol {
+        Protocol { min_reader_version: MIN_READER_VERSION, min_writer_version: MIN_WRITER_VERSION }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("minReaderVersion", Json::num(self.min_reader_version as f64)),
+            ("minWriterVersion", Json::num(self.min_writer_version as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Protocol {
+        Protocol {
+            min_reader_version: v.f64_or("minReaderVersion", 1.0) as u64,
+            min_writer_version: v.f64_or("minWriterVersion", 2.0) as u64,
+        }
+    }
+}
+
+/// `{"metaData": ...}` — table identity, schema, and configuration.
+///
+/// `schema_string` is a Spark `StructType` JSON document (the spec stores it
+/// pre-serialized, as a string field). `configuration` carries the
+/// `slleval.statsColumns` key so reopening the table recovers which columns
+/// its files are indexed on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MetaData {
+    pub id: String,
+    pub name: String,
+    pub schema_string: String,
+    pub partition_columns: Vec<String>,
+    pub configuration: BTreeMap<String, String>,
+    pub created_time_ms: u64,
+}
+
+impl MetaData {
+    /// Columns this table computes per-file stats over, from configuration.
+    pub fn stats_columns(&self) -> Vec<String> {
+        self.configuration
+            .get("slleval.statsColumns")
+            .map(|s| s.split(',').filter(|c| !c.is_empty()).map(String::from).collect())
+            .unwrap_or_default()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("name", Json::str(&self.name)),
+            (
+                "format",
+                Json::obj(vec![
+                    ("provider", Json::str("jsonl")),
+                    ("options", Json::obj(vec![("compression", Json::str("gzip"))])),
+                ]),
+            ),
+            ("schemaString", Json::str(&self.schema_string)),
+            (
+                "partitionColumns",
+                Json::arr(self.partition_columns.iter().map(Json::str).collect()),
+            ),
+            (
+                "configuration",
+                Json::Obj(
+                    self.configuration
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::str(v)))
+                        .collect(),
+                ),
+            ),
+            ("createdTime", Json::num(self.created_time_ms as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<MetaData> {
+        let configuration = match v.opt("configuration") {
+            Some(Json::Obj(o)) => o
+                .iter()
+                .map(|(k, val)| (k.clone(), val.as_str().unwrap_or("").to_string()))
+                .collect(),
+            _ => BTreeMap::new(),
+        };
+        Ok(MetaData {
+            id: v.str_or("id", "").to_string(),
+            name: v.str_or("name", "").to_string(),
+            schema_string: v.str_or("schemaString", "").to_string(),
+            partition_columns: match v.opt("partitionColumns") {
+                Some(Json::Arr(a)) => {
+                    a.iter().filter_map(|c| c.as_str().ok().map(String::from)).collect()
+                }
+                _ => Vec::new(),
+            },
+            configuration,
+            created_time_ms: v.f64_or("createdTime", 0.0) as u64,
+        })
+    }
+}
+
+/// Per-file column statistics, serialized into `add.stats` as a JSON string.
+///
+/// This is the data-skipping index: a lookup for key `k` on column `c` can
+/// skip any file where `k < minValues[c]` or `k > maxValues[c]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileStats {
+    pub num_records: u64,
+    pub min_values: BTreeMap<String, Json>,
+    pub max_values: BTreeMap<String, Json>,
+    pub null_count: BTreeMap<String, u64>,
+}
+
+/// Total order over the Json scalars stats track: numbers numerically,
+/// strings lexicographically. Mixed/other types are incomparable (None) —
+/// the caller then widens the file's range to "may contain anything".
+fn scalar_cmp(a: &Json, b: &Json) -> Option<std::cmp::Ordering> {
+    match (a, b) {
+        (Json::Num(x), Json::Num(y)) => x.partial_cmp(y),
+        (Json::Str(x), Json::Str(y)) => Some(x.as_str().cmp(y.as_str())),
+        _ => None,
+    }
+}
+
+impl FileStats {
+    /// Compute stats for `rows` over `columns`. A column whose values are
+    /// not consistently comparable scalars gets a null count but no
+    /// min/max (so skipping treats the file as a candidate for it).
+    pub fn compute(rows: &[Json], columns: &[String]) -> FileStats {
+        let mut stats = FileStats {
+            num_records: rows.len() as u64,
+            min_values: BTreeMap::new(),
+            max_values: BTreeMap::new(),
+            null_count: BTreeMap::new(),
+        };
+        for col in columns {
+            let mut nulls = 0u64;
+            let mut min: Option<Json> = None;
+            let mut max: Option<Json> = None;
+            let mut comparable = true;
+            for row in rows {
+                let val = match row.opt(col) {
+                    None | Some(Json::Null) => {
+                        nulls += 1;
+                        continue;
+                    }
+                    Some(v) => v,
+                };
+                match &min {
+                    None => {
+                        min = Some(val.clone());
+                        max = Some(val.clone());
+                        comparable = matches!(val, Json::Num(_) | Json::Str(_));
+                    }
+                    Some(m) => {
+                        let hi_bound = max.as_ref().unwrap_or(m);
+                        match (scalar_cmp(val, m), scalar_cmp(val, hi_bound)) {
+                            (Some(lo), Some(hi)) => {
+                                if lo == std::cmp::Ordering::Less {
+                                    min = Some(val.clone());
+                                }
+                                if hi == std::cmp::Ordering::Greater {
+                                    max = Some(val.clone());
+                                }
+                            }
+                            _ => comparable = false,
+                        }
+                    }
+                }
+            }
+            stats.null_count.insert(col.clone(), nulls);
+            if comparable {
+                if let (Some(lo), Some(hi)) = (min, max) {
+                    stats.min_values.insert(col.clone(), lo);
+                    stats.max_values.insert(col.clone(), hi);
+                }
+            }
+        }
+        stats
+    }
+
+    /// Can this file contain a row whose `col` equals the string `probe`?
+    /// Missing stats for the column mean "maybe" — skipping must never skip
+    /// a file it cannot prove empty for the probe.
+    pub fn may_contain_str(&self, col: &str, probe: &str) -> bool {
+        let (Some(lo), Some(hi)) = (self.min_values.get(col), self.max_values.get(col)) else {
+            return true;
+        };
+        let (Ok(lo), Ok(hi)) = (lo.as_str(), hi.as_str()) else {
+            return true;
+        };
+        lo <= probe && probe <= hi
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("numRecords", Json::num(self.num_records as f64)),
+            ("minValues", Json::Obj(self.min_values.clone().into_iter().collect())),
+            ("maxValues", Json::Obj(self.max_values.clone().into_iter().collect())),
+            (
+                "nullCount",
+                Json::Obj(
+                    self.null_count
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// The spec serializes stats as a JSON string inside the add action.
+    pub fn to_stats_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn parse(text: &str) -> Result<FileStats> {
+        let v = Json::parse(text).context("parsing add.stats")?;
+        let scalar_map = |key: &str| -> BTreeMap<String, Json> {
+            match v.opt(key) {
+                Some(Json::Obj(o)) => o.clone().into_iter().collect(),
+                _ => BTreeMap::new(),
+            }
+        };
+        let null_count = match v.opt("nullCount") {
+            Some(Json::Obj(o)) => o
+                .iter()
+                .map(|(k, val)| (k.clone(), val.as_f64().unwrap_or(0.0) as u64))
+                .collect(),
+            _ => BTreeMap::new(),
+        };
+        Ok(FileStats {
+            num_records: v.f64_or("numRecords", 0.0) as u64,
+            min_values: scalar_map("minValues"),
+            max_values: scalar_map("maxValues"),
+            null_count,
+        })
+    }
+}
+
+/// `{"add": ...}` — a data file entering the table at this version.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Add {
+    /// Path relative to the table root, e.g. `data/part-...jsonl.gz`.
+    pub path: String,
+    pub size: u64,
+    pub modification_time_ms: u64,
+    pub data_change: bool,
+    pub stats: Option<FileStats>,
+}
+
+impl Add {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("path", Json::str(&self.path)),
+            ("partitionValues", Json::Obj(BTreeMap::new())),
+            ("size", Json::num(self.size as f64)),
+            ("modificationTime", Json::num(self.modification_time_ms as f64)),
+            ("dataChange", Json::Bool(self.data_change)),
+        ];
+        if let Some(stats) = &self.stats {
+            pairs.push(("stats", Json::str(stats.to_stats_string())));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(v: &Json) -> Result<Add> {
+        let stats = match v.opt("stats") {
+            Some(Json::Str(s)) if !s.is_empty() => Some(FileStats::parse(s)?),
+            _ => None,
+        };
+        Ok(Add {
+            path: v.get("path")?.as_str()?.to_string(),
+            size: v.f64_or("size", 0.0) as u64,
+            modification_time_ms: v.f64_or("modificationTime", 0.0) as u64,
+            data_change: v.bool_or("dataChange", true),
+            stats,
+        })
+    }
+}
+
+/// `{"remove": ...}` — a data file leaving the table at this version. The
+/// file stays on disk as a tombstone (time travel) until `vacuum` reclaims
+/// it after the retention window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Remove {
+    pub path: String,
+    pub deletion_timestamp_ms: u64,
+    pub data_change: bool,
+    pub size: Option<u64>,
+}
+
+impl Remove {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("path", Json::str(&self.path)),
+            ("deletionTimestamp", Json::num(self.deletion_timestamp_ms as f64)),
+            ("dataChange", Json::Bool(self.data_change)),
+        ];
+        if let Some(size) = self.size {
+            pairs.push(("size", Json::num(size as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(v: &Json) -> Result<Remove> {
+        Ok(Remove {
+            path: v.get("path")?.as_str()?.to_string(),
+            deletion_timestamp_ms: v.f64_or("deletionTimestamp", 0.0) as u64,
+            data_change: v.bool_or("dataChange", true),
+            size: v.opt("size").and_then(|s| s.as_f64().ok()).map(|s| s as u64),
+        })
+    }
+}
+
+/// `{"commitInfo": ...}` — provenance: operation name, parameters, metrics.
+/// Informational in the spec (replay ignores it); `history` and the
+/// maintenance commands read it back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommitInfo {
+    pub timestamp_ms: u64,
+    pub operation: String,
+    pub operation_parameters: Json,
+    pub operation_metrics: Option<Json>,
+}
+
+impl CommitInfo {
+    pub fn new(timestamp_ms: u64, operation: &str, parameters: Vec<(&str, Json)>) -> CommitInfo {
+        CommitInfo {
+            timestamp_ms,
+            operation: operation.to_string(),
+            operation_parameters: Json::obj(parameters),
+            operation_metrics: None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("timestamp", Json::num(self.timestamp_ms as f64)),
+            ("operation", Json::str(&self.operation)),
+            ("operationParameters", self.operation_parameters.clone()),
+        ];
+        if let Some(metrics) = &self.operation_metrics {
+            pairs.push(("operationMetrics", metrics.clone()));
+        }
+        pairs.push(("engineInfo", Json::str("slleval")));
+        Json::obj(pairs)
+    }
+
+    fn from_json(v: &Json) -> CommitInfo {
+        CommitInfo {
+            timestamp_ms: v.f64_or("timestamp", 0.0) as u64,
+            operation: v.str_or("operation", "").to_string(),
+            operation_parameters: v
+                .opt("operationParameters")
+                .cloned()
+                .unwrap_or_else(|| Json::Obj(BTreeMap::new())),
+            operation_metrics: v.opt("operationMetrics").cloned(),
+        }
+    }
+}
+
+/// One line of a `_delta_log` file.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    Protocol(Protocol),
+    MetaData(MetaData),
+    Add(Add),
+    Remove(Remove),
+    CommitInfo(CommitInfo),
+}
+
+impl Action {
+    /// The single-key envelope form, serialized compact (one line).
+    pub fn to_line(&self) -> String {
+        let (key, body) = match self {
+            Action::Protocol(p) => ("protocol", p.to_json()),
+            Action::MetaData(m) => ("metaData", m.to_json()),
+            Action::Add(a) => ("add", a.to_json()),
+            Action::Remove(r) => ("remove", r.to_json()),
+            Action::CommitInfo(c) => ("commitInfo", c.to_json()),
+        };
+        Json::obj(vec![(key, body)]).to_string()
+    }
+
+    /// Parse one log line. Unknown envelope keys return `Ok(None)` so logs
+    /// with `txn`/`cdc`/checkpoint-only actions written by other engines
+    /// still replay; a malformed line is a hard error.
+    pub fn parse_line(line: &str) -> Result<Option<Action>> {
+        let v = Json::parse(line).context("parsing _delta_log line")?;
+        let obj = v.as_obj().context("_delta_log line is not an object")?;
+        let Some((key, body)) = obj.iter().next() else {
+            bail!("_delta_log line is an empty object");
+        };
+        if obj.len() != 1 {
+            bail!("_delta_log line must wrap exactly one action, got {}", obj.len());
+        }
+        Ok(match key.as_str() {
+            "protocol" => Some(Action::Protocol(Protocol::from_json(body))),
+            "metaData" => Some(Action::MetaData(MetaData::from_json(body)?)),
+            "add" => Some(Action::Add(Add::from_json(body)?)),
+            "remove" => Some(Action::Remove(Remove::from_json(body)?)),
+            "commitInfo" => Some(Action::CommitInfo(CommitInfo::from_json(body))),
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_rows() -> Vec<Json> {
+        vec![
+            Json::obj(vec![("k", Json::str("banana")), ("n", Json::num(3.0))]),
+            Json::obj(vec![("k", Json::str("apple")), ("n", Json::num(7.0))]),
+            Json::obj(vec![("k", Json::str("cherry")), ("n", Json::Null)]),
+        ]
+    }
+
+    #[test]
+    fn stats_compute_min_max_null() {
+        let s = FileStats::compute(&sample_rows(), &["k".into(), "n".into(), "missing".into()]);
+        assert_eq!(s.num_records, 3);
+        assert_eq!(s.min_values["k"].as_str().unwrap(), "apple");
+        assert_eq!(s.max_values["k"].as_str().unwrap(), "cherry");
+        assert_eq!(s.min_values["n"].as_f64().unwrap(), 3.0);
+        assert_eq!(s.max_values["n"].as_f64().unwrap(), 7.0);
+        assert_eq!(s.null_count["n"], 1);
+        assert_eq!(s.null_count["missing"], 3);
+        assert!(!s.min_values.contains_key("missing"));
+    }
+
+    #[test]
+    fn stats_round_trip_through_string() {
+        let s = FileStats::compute(&sample_rows(), &["k".into(), "n".into()]);
+        let parsed = FileStats::parse(&s.to_stats_string()).unwrap();
+        assert_eq!(parsed, s);
+    }
+
+    #[test]
+    fn may_contain_respects_range_and_absence() {
+        let s = FileStats::compute(&sample_rows(), &["k".into()]);
+        assert!(s.may_contain_str("k", "apple"));
+        assert!(s.may_contain_str("k", "baobab"));
+        assert!(!s.may_contain_str("k", "aardvark"));
+        assert!(!s.may_contain_str("k", "durian"));
+        // No stats for the column ⇒ must be a candidate.
+        assert!(s.may_contain_str("unindexed", "anything"));
+    }
+
+    #[test]
+    fn action_lines_use_spec_field_names() {
+        let add = Action::Add(Add {
+            path: "data/part-0.jsonl.gz".into(),
+            size: 128,
+            modification_time_ms: 1_700_000_000_000,
+            data_change: true,
+            stats: Some(FileStats::compute(&sample_rows(), &["k".into()])),
+        });
+        let line = add.to_line();
+        for field in [
+            "\"add\":",
+            "\"partitionValues\":{}",
+            "\"modificationTime\":1700000000000",
+            "\"dataChange\":true",
+            "\"stats\":\"{",
+        ] {
+            assert!(line.contains(field), "{field} missing from {line}");
+        }
+        assert!(!line.contains('\n'));
+        let proto = Action::Protocol(Protocol::current()).to_line();
+        assert_eq!(proto, "{\"protocol\":{\"minReaderVersion\":1,\"minWriterVersion\":2}}");
+        let remove = Action::Remove(Remove {
+            path: "data/old.jsonl.gz".into(),
+            deletion_timestamp_ms: 1_700_000_000_001,
+            data_change: true,
+            size: Some(64),
+        })
+        .to_line();
+        assert!(remove.contains("\"deletionTimestamp\":1700000000001"), "{remove}");
+    }
+
+    #[test]
+    fn parse_round_trip_and_unknown_actions() {
+        let actions = vec![
+            Action::Protocol(Protocol::current()),
+            Action::Add(Add {
+                path: "data/a.jsonl.gz".into(),
+                size: 10,
+                modification_time_ms: 5,
+                data_change: true,
+                stats: None,
+            }),
+            Action::Remove(Remove {
+                path: "data/a.jsonl.gz".into(),
+                deletion_timestamp_ms: 9,
+                data_change: true,
+                size: None,
+            }),
+            Action::CommitInfo(CommitInfo::new(7, "WRITE", vec![("mode", Json::str("Append"))])),
+        ];
+        for a in &actions {
+            let back = Action::parse_line(&a.to_line()).unwrap().unwrap();
+            assert_eq!(&back, a);
+        }
+        // Foreign engines may write txn/cdc actions: skipped, not fatal.
+        assert!(Action::parse_line("{\"txn\":{\"appId\":\"x\",\"version\":1}}").unwrap().is_none());
+        assert!(Action::parse_line("not json").is_err());
+    }
+}

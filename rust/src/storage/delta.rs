@@ -1,0 +1,909 @@
+//! Delta-protocol table: `_delta_log` commits, stats-indexed data files,
+//! log-replay snapshots, and periodic log compaction.
+//!
+//! On-disk layout (readable by any Delta log replayer; data files are
+//! gzip JSONL, declared as such in `metaData.format`):
+//!
+//! ```text
+//! <table>/
+//!   _delta_log/00000000000000000000.json     commit 0: protocol, metaData,
+//!   _delta_log/00000000000000000001.json       add/remove/commitInfo actions
+//!   _delta_log/00000000000000000000.00000000000000000015.compacted.json
+//!   data/part-<version>-<part>-<writer>.jsonl.gz
+//! ```
+//!
+//! Commits are claimed with [`crate::util::fsx::publish_exclusive`] —
+//! `link(2)` first-writer-wins — so exactly one of any number of racing
+//! writers owns each version and losers get a retryable "commit conflict"
+//! (the TOCTOU discipline the checkpoint store also uses). Every
+//! [`LOG_COMPACT_EVERY`] commits the writer additionally publishes a
+//! `<start>.<end>.compacted.json` file holding the folded state of that
+//! commit range (protocol + metaData + live adds + still-relevant remove
+//! tombstones), so opening a 10k-commit table replays one compacted file
+//! plus at most [`LOG_COMPACT_EVERY`] tail commits instead of 10k files.
+//! Commit files themselves are never deleted (they serve time travel and
+//! `history`); compaction only short-circuits replay.
+
+use super::actions::{Action, Add, CommitInfo, FileStats, MetaData, Protocol, Remove};
+use crate::util::fsx::{self, Publish};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+use flate2::Compression;
+use sha2::{Digest, Sha256};
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+/// Columns the response cache indexes per-file stats on: the content
+/// address (skipping key), the model (semantic-cache rebuild scoping), and
+/// the write time (freshness diagnostics).
+pub const DEFAULT_STATS_COLUMNS: &[&str] = &["prompt_hash", "model_name", "created_at"];
+
+/// A compacted log file is published after every commit whose version is
+/// the last of a block this long.
+pub const LOG_COMPACT_EVERY: u64 = 16;
+
+/// Does `err` denote a commit conflict — a writer losing the optimistic-
+/// concurrency race for its version? Callers retry these (the next attempt
+/// re-reads the log and targets the next free version); any other error is
+/// a real failure. The vendored `anyhow` shim has no `downcast`, so
+/// conflicts travel as a message marker — this helper is the one place
+/// allowed to know that.
+pub fn is_commit_conflict(err: &anyhow::Error) -> bool {
+    err.chain().any(|m| m.contains("commit conflict"))
+}
+
+/// A live data file in a [`TableState`], with its skipping index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileMeta {
+    /// Path relative to the table root (`data/part-...jsonl.gz`).
+    pub path: String,
+    pub size: u64,
+    pub stats: Option<FileStats>,
+}
+
+impl FileMeta {
+    /// Can this file contain a row with `col == probe`? Files without
+    /// stats (foreign writers) are always candidates.
+    pub fn may_contain_str(&self, col: &str, probe: &str) -> bool {
+        self.stats.as_ref().map_or(true, |s| s.may_contain_str(col, probe))
+    }
+}
+
+/// The folded table state at one version: what log replay produces.
+#[derive(Debug, Clone)]
+pub struct TableState {
+    pub version: u64,
+    pub protocol: Protocol,
+    pub metadata: Option<MetaData>,
+    /// Live files, path-sorted (paths embed the version, so this is also
+    /// commit order — insertion order for snapshot reads).
+    pub files: Vec<FileMeta>,
+    /// Files removed at or before this version whose remove action is
+    /// still in the replayed log (vacuum's work list).
+    pub tombstones: Vec<Remove>,
+}
+
+impl TableState {
+    /// Live files whose stats admit `probe` on `col`, in path order.
+    pub fn candidates(&self, col: &str, probe: &str) -> Vec<&FileMeta> {
+        self.files.iter().filter(|f| f.may_contain_str(col, probe)).collect()
+    }
+
+    /// Total live rows, if every live file carries stats (the one-file-
+    /// per-key upsert invariant makes this the live key count too).
+    pub fn num_records(&self) -> Option<u64> {
+        self.files
+            .iter()
+            .map(|f| f.stats.as_ref().map(|s| s.num_records))
+            .sum::<Option<u64>>()
+    }
+
+    /// Live bytes (log-recorded sizes; no filesystem stat calls).
+    pub fn live_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.size).sum()
+    }
+}
+
+/// A versioned Delta-protocol table rooted at a directory.
+pub struct DeltaTable {
+    root: PathBuf,
+    /// Stats columns used when *creating* a table (persisted into
+    /// `metaData.configuration`); an existing table's persisted choice
+    /// wins on reopen.
+    stats_columns: Vec<String>,
+    /// Fixture hooks: when set, commit timestamps and data-file writer
+    /// discriminators are pinned so the golden `_delta_log` fixture is
+    /// byte-reproducible. Never set on production paths.
+    pinned_clock_ms: Option<u64>,
+    pinned_writer: Option<String>,
+}
+
+impl DeltaTable {
+    /// Open or create the table with the cache's default stats columns.
+    /// An old deltalite `_log/` table found at `root` is migrated to a v0
+    /// `_delta_log` commit first (one-way; see [`super::migrate`]).
+    pub fn open(root: &Path) -> Result<DeltaTable> {
+        DeltaTable::open_with_stats(root, DEFAULT_STATS_COLUMNS)
+    }
+
+    /// Open or create with explicit stats columns (tables whose key column
+    /// is not `prompt_hash`, e.g. tests and benches).
+    pub fn open_with_stats(root: &Path, stats_columns: &[&str]) -> Result<DeltaTable> {
+        std::fs::create_dir_all(root.join("_delta_log"))
+            .with_context(|| format!("creating {root:?}/_delta_log"))?;
+        std::fs::create_dir_all(root.join("data"))?;
+        let table = DeltaTable {
+            root: root.to_path_buf(),
+            stats_columns: stats_columns.iter().map(|c| c.to_string()).collect(),
+            pinned_clock_ms: None,
+            pinned_writer: None,
+        };
+        super::migrate::migrate_legacy_log(&table)?;
+        Ok(table)
+    }
+
+    /// Pin the clock and writer discriminator for byte-reproducible
+    /// fixtures. Test/fixture infrastructure only: pinning the writer
+    /// forfeits the unique-temp-name guarantee concurrent writers rely on.
+    pub fn pin_for_fixtures(&mut self, clock_ms: u64, writer: &str) {
+        self.pinned_clock_ms = Some(clock_ms);
+        self.pinned_writer = Some(writer.to_string());
+    }
+
+    /// The table's root directory (cache relocation, worker handoff).
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub(crate) fn log_dir(&self) -> PathBuf {
+        self.root.join("_delta_log")
+    }
+
+    pub(crate) fn data_dir(&self) -> PathBuf {
+        self.root.join("data")
+    }
+
+    pub(crate) fn now_ms(&self) -> u64 {
+        self.pinned_clock_ms.unwrap_or_else(|| (crate::util::unix_ts() * 1000.0) as u64)
+    }
+
+    fn writer_suffix(&self) -> String {
+        self.pinned_writer.clone().unwrap_or_else(fsx::unique_suffix)
+    }
+
+    fn commit_path(&self, version: u64) -> PathBuf {
+        self.log_dir().join(format!("{version:020}.json"))
+    }
+
+    /// One directory listing: committed versions (sorted) and compacted
+    /// ranges. Temp files and foreign names parse-fail and are ignored.
+    fn list_log(&self) -> Result<(Vec<u64>, Vec<(u64, u64)>)> {
+        let mut commits = Vec::new();
+        let mut compacted = Vec::new();
+        for entry in std::fs::read_dir(self.log_dir())? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            let Some(stem) = name.strip_suffix(".json") else { continue };
+            if let Some(range) = stem.strip_suffix(".compacted") {
+                let parts: Vec<&str> = range.split('.').collect();
+                if let [start, end] = parts[..] {
+                    if let (Ok(s), Ok(e)) = (start.parse::<u64>(), end.parse::<u64>()) {
+                        compacted.push((s, e));
+                    }
+                }
+            } else if let Ok(v) = stem.parse::<u64>() {
+                commits.push(v);
+            }
+        }
+        commits.sort_unstable();
+        Ok((commits, compacted))
+    }
+
+    /// Latest committed version, or None for an empty table.
+    pub fn current_version(&self) -> Result<Option<u64>> {
+        Ok(self.list_log()?.0.last().copied())
+    }
+
+    pub(crate) fn next_version(&self) -> Result<u64> {
+        Ok(self.current_version()?.map_or(0, |v| v + 1))
+    }
+
+    fn read_actions(&self, path: &Path) -> Result<Vec<Action>> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading log file {path:?}"))?;
+        let mut actions = Vec::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            if let Some(action) =
+                Action::parse_line(line).with_context(|| format!("in log file {path:?}"))?
+            {
+                actions.push(action);
+            }
+        }
+        Ok(actions)
+    }
+
+    /// Fold the log into the table state at `version` (None = latest).
+    /// Returns None for a table with no commits. Replay starts from the
+    /// newest compacted file covering `0..=e` with `e <= version`, then
+    /// applies tail commits — the "don't read 10k files" path.
+    pub fn state(&self, version: Option<u64>) -> Result<Option<TableState>> {
+        let (commits, compacted) = self.list_log()?;
+        let Some(&latest) = commits.last() else {
+            return Ok(None);
+        };
+        let upper = match version {
+            Some(v) if v > latest => bail!("version {v} does not exist (latest {latest})"),
+            Some(v) => v,
+            None => latest,
+        };
+        let mut actions = Vec::new();
+        let mut start = 0u64;
+        if let Some(&(s, e)) =
+            compacted.iter().filter(|(s, e)| *s == 0 && *e <= upper).max_by_key(|(_, e)| *e)
+        {
+            let path = self.log_dir().join(format!("{s:020}.{e:020}.compacted.json"));
+            actions.extend(self.read_actions(&path)?);
+            start = e + 1;
+        }
+        for v in start..=upper {
+            actions.extend(self.read_actions(&self.commit_path(v))?);
+        }
+
+        let mut protocol = Protocol::current();
+        let mut metadata = None;
+        let mut files: BTreeMap<String, FileMeta> = BTreeMap::new();
+        let mut tombstones: BTreeMap<String, Remove> = BTreeMap::new();
+        for action in actions {
+            match action {
+                Action::Protocol(p) => protocol = p,
+                Action::MetaData(m) => metadata = Some(m),
+                Action::Add(a) => {
+                    tombstones.remove(&a.path);
+                    files.insert(
+                        a.path.clone(),
+                        FileMeta { path: a.path, size: a.size, stats: a.stats },
+                    );
+                }
+                Action::Remove(r) => {
+                    files.remove(&r.path);
+                    tombstones.insert(r.path.clone(), r);
+                }
+                Action::CommitInfo(_) => {}
+            }
+        }
+        if protocol.min_reader_version > super::actions::MIN_READER_VERSION {
+            bail!(
+                "table requires reader protocol {} (this reader supports {})",
+                protocol.min_reader_version,
+                super::actions::MIN_READER_VERSION
+            );
+        }
+        Ok(Some(TableState {
+            version: upper,
+            protocol,
+            metadata,
+            files: files.into_values().collect(),
+            tombstones: tombstones.into_values().collect(),
+        }))
+    }
+
+    /// Read one data file (path relative to the table root).
+    pub fn read_file(&self, rel_path: &str) -> Result<Vec<Json>> {
+        let path = self.root.join(rel_path);
+        let file = std::fs::File::open(&path).with_context(|| format!("reading {path:?}"))?;
+        let reader = BufReader::new(GzDecoder::new(file));
+        let mut rows = Vec::new();
+        for line in reader.lines() {
+            let line = line?;
+            if !line.trim().is_empty() {
+                rows.push(Json::parse(&line)?);
+            }
+        }
+        Ok(rows)
+    }
+
+    /// Stats columns in effect: the persisted table configuration when
+    /// present, else this handle's (creation-time) choice. The first
+    /// column is the table's primary key (`prompt_hash` for response
+    /// caches) — the column upserts and point lookups key on.
+    pub fn effective_stats_columns(&self, metadata: Option<&MetaData>) -> Vec<String> {
+        match metadata.map(|m| m.stats_columns()) {
+            Some(cols) if !cols.is_empty() => cols,
+            _ => self.stats_columns.clone(),
+        }
+    }
+
+    /// Write rows as a new `data/` file and return its add action. The
+    /// name carries the version, a part index, and a per-writer
+    /// discriminator so racing writers never clobber each other's files;
+    /// a losing commit leaves an orphan the next vacuum reclaims.
+    pub(crate) fn write_data_file(
+        &self,
+        version: u64,
+        part: usize,
+        rows: &[Json],
+        stats_columns: &[String],
+    ) -> Result<Add> {
+        let name = format!("part-{version:020}-{part:04}-{}.jsonl.gz", self.writer_suffix());
+        let path = self.data_dir().join(&name);
+        let file = std::fs::File::create(&path)?;
+        let mut enc = GzEncoder::new(file, Compression::fast());
+        for row in rows {
+            writeln!(enc, "{row}")?;
+        }
+        enc.finish()?;
+        let size = std::fs::metadata(&path)?.len();
+        Ok(Add {
+            path: format!("data/{name}"),
+            size,
+            modification_time_ms: self.now_ms(),
+            data_change: true,
+            stats: Some(FileStats::compute(rows, stats_columns)),
+        })
+    }
+
+    /// Commit `actions` at exactly `version` via first-writer-wins
+    /// `link(2)` publication: exactly one racing writer wins the slot,
+    /// losers get a hard "commit conflict". The version is computed once
+    /// by the calling operation — never between naming a data file and
+    /// claiming the log slot — so a commit can only reference data files
+    /// written for that same version.
+    pub(crate) fn commit(&self, version: u64, actions: &[Action]) -> Result<u64> {
+        let mut body = String::new();
+        for action in actions {
+            body.push_str(&action.to_line());
+            body.push('\n');
+        }
+        match fsx::publish_exclusive(&self.commit_path(version), body.as_bytes())? {
+            Publish::Committed => {
+                self.maybe_compact_log(version);
+                Ok(version)
+            }
+            Publish::Conflict => bail!("commit conflict at version {version}"),
+        }
+    }
+
+    /// After winning the last commit of a [`LOG_COMPACT_EVERY`] block,
+    /// publish `0.<version>.compacted.json`: the folded state (protocol,
+    /// metaData, live adds, tombstones whose files still exist on disk).
+    /// Best-effort — the commit itself is already durable, and a reader
+    /// that never sees a compacted file just replays more commits.
+    fn maybe_compact_log(&self, version: u64) {
+        if (version + 1) % LOG_COMPACT_EVERY != 0 {
+            return;
+        }
+        let Ok(Some(state)) = self.state(Some(version)) else {
+            return;
+        };
+        let mut body = String::new();
+        body.push_str(&Action::Protocol(state.protocol).to_line());
+        body.push('\n');
+        if let Some(meta) = state.metadata {
+            body.push_str(&Action::MetaData(meta).to_line());
+            body.push('\n');
+        }
+        for f in state.files {
+            let add = Add {
+                path: f.path,
+                size: f.size,
+                modification_time_ms: self.now_ms(),
+                data_change: false,
+                stats: f.stats,
+            };
+            body.push_str(&Action::Add(add).to_line());
+            body.push('\n');
+        }
+        for t in state.tombstones {
+            // Tombstones for files vacuum already deleted are dropped —
+            // that is what bounds compacted-file growth.
+            if self.root.join(&t.path).exists() {
+                body.push_str(&Action::Remove(t).to_line());
+                body.push('\n');
+            }
+        }
+        let path = self.log_dir().join(format!("{:020}.{version:020}.compacted.json", 0));
+        let _ = fsx::write_atomic(&path, body.as_bytes());
+    }
+
+    /// Protocol + metaData actions for commit 0, with schema inferred
+    /// from the first batch and stats columns persisted in configuration.
+    pub(crate) fn creation_actions(&self, rows: &[Json], stats_columns: &[String]) -> Vec<Action> {
+        let created = self.now_ms();
+        let schema = infer_schema_string(rows);
+        let mut hasher = Sha256::new();
+        hasher.update(schema.as_bytes());
+        hasher.update(created.to_le_bytes());
+        hasher.update(self.writer_suffix().as_bytes());
+        let digest = hasher.finalize();
+        let hex: String = digest.iter().take(16).map(|b| format!("{b:02x}")).collect();
+        let id = format!(
+            "{}-{}-{}-{}-{}",
+            &hex[0..8],
+            &hex[8..12],
+            &hex[12..16],
+            &hex[16..20],
+            &hex[20..32]
+        );
+        let name = self
+            .root
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "slleval-table".to_string());
+        let mut configuration = BTreeMap::new();
+        configuration.insert("slleval.statsColumns".to_string(), stats_columns.join(","));
+        vec![
+            Action::Protocol(Protocol::current()),
+            Action::MetaData(MetaData {
+                id,
+                name,
+                schema_string: schema,
+                partition_columns: Vec::new(),
+                configuration,
+                created_time_ms: created,
+            }),
+        ]
+    }
+
+    /// Append rows as a new version. Returns the version. A concurrent
+    /// writer claiming the same version first surfaces as a
+    /// "commit conflict"; retrying re-reads the log and targets the next
+    /// free version.
+    pub fn append(&self, rows: &[Json]) -> Result<u64> {
+        let version = self.next_version()?;
+        let state = self.state(None)?;
+        let cols = self.effective_stats_columns(state.as_ref().and_then(|s| s.metadata.as_ref()));
+        let mut actions = Vec::new();
+        if version == 0 {
+            actions.extend(self.creation_actions(rows, &cols));
+        }
+        let add = self.write_data_file(version, 0, rows, &cols)?;
+        let records = rows.len() as u64;
+        let bytes = add.size;
+        actions.push(Action::Add(add));
+        let mut info =
+            CommitInfo::new(self.now_ms(), "WRITE", vec![("mode", Json::str("Append"))]);
+        info.operation_metrics = Some(Json::obj(vec![
+            ("numFiles", Json::str("1")),
+            ("numOutputRows", Json::str(format!("{records}"))),
+            ("numOutputBytes", Json::str(format!("{bytes}"))),
+        ]));
+        actions.push(Action::CommitInfo(info));
+        self.commit(version, &actions)
+    }
+
+    /// Upsert rows keyed on `key_col`: rows with existing keys replace the
+    /// old rows (files containing them are rewritten minus those rows),
+    /// new keys append. Stats prune the rewrite scan: only files whose
+    /// `key_col` range intersects the incoming keys are decompressed.
+    pub fn upsert(&self, rows: &[Json], key_col: &str) -> Result<u64> {
+        // Claim the target version *before* scanning live files: any
+        // commit landing mid-rewrite makes our claim conflict instead of
+        // us committing a rewrite based on a stale snapshot.
+        let version = self.next_version()?;
+        let new_keys: BTreeSet<String> = rows
+            .iter()
+            .filter_map(|r| r.opt(key_col).and_then(|k| k.as_str().ok()).map(String::from))
+            .collect();
+        if new_keys.len() != rows.len() {
+            bail!("upsert rows must all carry a unique string '{key_col}'");
+        }
+
+        let state = self.state(None)?;
+        let cols = self.effective_stats_columns(state.as_ref().and_then(|s| s.metadata.as_ref()));
+        let mut removes = Vec::new();
+        let mut rewritten: Vec<Json> = Vec::new();
+        let deletion_ts = self.now_ms();
+        if let Some(state) = &state {
+            for meta in &state.files {
+                if !new_keys.iter().any(|k| meta.may_contain_str(key_col, k)) {
+                    continue;
+                }
+                let file_rows = self.read_file(&meta.path)?;
+                let has_conflict = file_rows.iter().any(|r| {
+                    r.opt(key_col)
+                        .and_then(|k| k.as_str().ok())
+                        .map(|k| new_keys.contains(k))
+                        .unwrap_or(false)
+                });
+                if has_conflict {
+                    removes.push(Remove {
+                        path: meta.path.clone(),
+                        deletion_timestamp_ms: deletion_ts,
+                        data_change: true,
+                        size: Some(meta.size),
+                    });
+                    rewritten.extend(file_rows.into_iter().filter(|r| {
+                        r.opt(key_col)
+                            .and_then(|k| k.as_str().ok())
+                            .map(|k| !new_keys.contains(k))
+                            .unwrap_or(true)
+                    }));
+                }
+            }
+        }
+
+        let mut actions = Vec::new();
+        if version == 0 {
+            actions.extend(self.creation_actions(rows, &cols));
+        }
+        let mut adds = Vec::new();
+        if !rewritten.is_empty() {
+            adds.push(self.write_data_file(version, 1, &rewritten, &cols)?);
+        }
+        adds.push(self.write_data_file(version, 0, rows, &cols)?);
+        let out_rows: u64 = rows.len() as u64 + rewritten.len() as u64;
+        let num_removed = removes.len();
+        let num_added = adds.len();
+        actions.extend(adds.into_iter().map(Action::Add));
+        actions.extend(removes.into_iter().map(Action::Remove));
+        let mut info = CommitInfo::new(
+            self.now_ms(),
+            "MERGE",
+            vec![("predicate", Json::str(format!("target.{key_col} = source.{key_col}")))],
+        );
+        info.operation_metrics = Some(Json::obj(vec![
+            ("numTargetFilesAdded", Json::str(format!("{num_added}"))),
+            ("numTargetFilesRemoved", Json::str(format!("{num_removed}"))),
+            ("numOutputRows", Json::str(format!("{out_rows}"))),
+        ]));
+        actions.push(Action::CommitInfo(info));
+        self.commit(version, &actions)
+    }
+
+    /// Full snapshot at `version` (None = latest): rows from all live
+    /// files in path (= commit) order.
+    pub fn snapshot(&self, version: Option<u64>) -> Result<Vec<Json>> {
+        let mut rows = Vec::new();
+        if let Some(state) = self.state(version)? {
+            for f in &state.files {
+                rows.extend(self.read_file(&f.path)?);
+            }
+        }
+        Ok(rows)
+    }
+
+    /// Snapshot as a key → row map (last write wins within file order).
+    pub fn snapshot_by_key(
+        &self,
+        key_col: &str,
+        version: Option<u64>,
+    ) -> Result<BTreeMap<String, Json>> {
+        let mut map = BTreeMap::new();
+        for row in self.snapshot(version)? {
+            if let Some(k) = row.opt(key_col).and_then(|k| k.as_str().ok()) {
+                map.insert(k.to_string(), row.clone());
+            }
+        }
+        Ok(map)
+    }
+
+    /// Rewrite all live data into a single file: `optimize` with an
+    /// unbounded target. Kept for the cache's legacy `compact()` surface.
+    pub fn compact(&self) -> Result<u64> {
+        let outcome = super::maintain::optimize(self, u64::MAX)?;
+        match outcome.version {
+            Some(v) => Ok(v),
+            // Nothing to bin-pack (zero or one live file): report the
+            // current version unchanged.
+            None => Ok(self.current_version()?.unwrap_or(0)),
+        }
+    }
+
+    /// Total bytes of live data files, from log-recorded sizes
+    /// (storage-overhead accounting, §5.3).
+    pub fn storage_bytes(&self) -> Result<u64> {
+        Ok(self.state(None)?.map_or(0, |s| s.live_bytes()))
+    }
+
+    /// History of (version, operation, timestamp-seconds) from commitInfo
+    /// actions, oldest first. Reads every commit file — diagnostics only.
+    pub fn history(&self) -> Result<Vec<(u64, String, f64)>> {
+        let (commits, _) = self.list_log()?;
+        let mut out = Vec::new();
+        for v in commits {
+            let mut op = String::new();
+            let mut ts = 0.0;
+            for action in self.read_actions(&self.commit_path(v))? {
+                if let Action::CommitInfo(info) = action {
+                    op = info.operation;
+                    ts = info.timestamp_ms as f64 / 1000.0;
+                }
+            }
+            out.push((v, op, ts));
+        }
+        Ok(out)
+    }
+}
+
+/// Spark `StructType` JSON for the union of columns in `rows`. Integer-
+/// valued numbers are `long`, others `double` (widened on conflict);
+/// non-scalar values fall back to `string` (they are stored as JSON text
+/// either way). Schema is inferred once at table creation.
+fn infer_schema_string(rows: &[Json]) -> String {
+    let mut types: BTreeMap<String, &'static str> = BTreeMap::new();
+    for row in rows {
+        if let Ok(obj) = row.as_obj() {
+            for (k, v) in obj {
+                let t = match v {
+                    Json::Str(_) => "string",
+                    Json::Bool(_) => "boolean",
+                    Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => "long",
+                    Json::Num(_) => "double",
+                    _ => "string",
+                };
+                let slot = types.entry(k.clone()).or_insert(t);
+                if *slot != t {
+                    *slot = match (*slot, t) {
+                        ("long", "double") | ("double", "long") => "double",
+                        _ => "string",
+                    };
+                }
+            }
+        }
+    }
+    let fields: Vec<Json> = types
+        .into_iter()
+        .map(|(name, ty)| {
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("type", Json::str(ty)),
+                ("nullable", Json::Bool(true)),
+                ("metadata", Json::Obj(BTreeMap::new())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("type", Json::str("struct")), ("fields", Json::arr(fields))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tmp_table(name: &str) -> DeltaTable {
+        let dir = std::env::temp_dir()
+            .join("slleval-storage-test")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        DeltaTable::open_with_stats(&dir, &["key", "value"]).unwrap()
+    }
+
+    pub(crate) fn row(k: &str, v: f64) -> Json {
+        Json::obj(vec![("key", Json::str(k)), ("value", Json::num(v))])
+    }
+
+    #[test]
+    fn append_and_snapshot() {
+        let t = tmp_table("append");
+        assert_eq!(t.current_version().unwrap(), None);
+        t.append(&[row("a", 1.0), row("b", 2.0)]).unwrap();
+        t.append(&[row("c", 3.0)]).unwrap();
+        assert_eq!(t.current_version().unwrap(), Some(1));
+        assert_eq!(t.snapshot(None).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn commit_zero_declares_protocol_and_metadata() {
+        let t = tmp_table("creation");
+        t.append(&[row("a", 1.0)]).unwrap();
+        let state = t.state(None).unwrap().unwrap();
+        assert_eq!(state.protocol, Protocol::current());
+        let meta = state.metadata.unwrap();
+        assert_eq!(meta.stats_columns(), vec!["key", "value"]);
+        assert!(meta.schema_string.contains("\"name\":\"key\""));
+        assert!(meta.schema_string.contains("\"type\":\"struct\""));
+        assert_eq!(meta.partition_columns, Vec::<String>::new());
+    }
+
+    #[test]
+    fn time_travel() {
+        let t = tmp_table("timetravel");
+        t.append(&[row("a", 1.0)]).unwrap(); // v0
+        t.append(&[row("b", 2.0)]).unwrap(); // v1
+        t.upsert(&[row("a", 99.0)], "key").unwrap(); // v2
+        assert_eq!(t.snapshot(Some(0)).unwrap().len(), 1);
+        assert_eq!(t.snapshot(Some(1)).unwrap().len(), 2);
+        let v1 = t.snapshot_by_key("key", Some(1)).unwrap();
+        assert_eq!(v1["a"].get("value").unwrap().as_f64().unwrap(), 1.0);
+        let v2 = t.snapshot_by_key("key", None).unwrap();
+        assert_eq!(v2["a"].get("value").unwrap().as_f64().unwrap(), 99.0);
+        assert!(t.snapshot(Some(99)).is_err());
+    }
+
+    #[test]
+    fn upsert_replaces_and_appends() {
+        let t = tmp_table("upsert");
+        t.append(&[row("a", 1.0), row("b", 2.0)]).unwrap();
+        t.upsert(&[row("b", 20.0), row("c", 3.0)], "key").unwrap();
+        let snap = t.snapshot_by_key("key", None).unwrap();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap["b"].get("value").unwrap().as_f64().unwrap(), 20.0);
+        assert_eq!(snap["a"].get("value").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn upsert_requires_unique_keys() {
+        let t = tmp_table("upsert-dup");
+        assert!(t.upsert(&[row("a", 1.0), row("a", 2.0)], "key").is_err());
+    }
+
+    #[test]
+    fn adds_carry_stats_and_removes_carry_deletion_timestamps() {
+        let t = tmp_table("actions");
+        t.append(&[row("m", 1.0), row("a", 2.0), row("z", 3.0)]).unwrap();
+        let state = t.state(None).unwrap().unwrap();
+        let stats = state.files[0].stats.as_ref().unwrap();
+        assert_eq!(stats.num_records, 3);
+        assert_eq!(stats.min_values["key"].as_str().unwrap(), "a");
+        assert_eq!(stats.max_values["key"].as_str().unwrap(), "z");
+        t.upsert(&[row("m", 9.0)], "key").unwrap();
+        let state = t.state(None).unwrap().unwrap();
+        assert_eq!(state.tombstones.len(), 1);
+        assert!(state.tombstones[0].deletion_timestamp_ms > 0);
+        assert_eq!(state.num_records(), Some(3));
+    }
+
+    #[test]
+    fn candidates_prune_by_key_range() {
+        let t = tmp_table("candidates");
+        t.append(&[row("a", 1.0), row("c", 2.0)]).unwrap();
+        t.append(&[row("m", 3.0), row("p", 4.0)]).unwrap();
+        t.append(&[row("x", 5.0), row("z", 6.0)]).unwrap();
+        let state = t.state(None).unwrap().unwrap();
+        assert_eq!(state.files.len(), 3);
+        assert_eq!(state.candidates("key", "n").len(), 1);
+        assert_eq!(state.candidates("key", "a").len(), 1);
+        // Out of every range: no candidates at all.
+        assert_eq!(state.candidates("key", "zz").len(), 0);
+        // Unindexed column: every file is a candidate.
+        assert_eq!(state.candidates("other", "q").len(), 3);
+    }
+
+    #[test]
+    fn log_compaction_short_circuits_replay() {
+        let t = tmp_table("logcompact");
+        let total = LOG_COMPACT_EVERY + 4;
+        for i in 0..total {
+            t.append(&[row(&format!("k{i:03}"), i as f64)]).unwrap();
+        }
+        let compacted =
+            t.log_dir().join(format!("{:020}.{:020}.compacted.json", 0, LOG_COMPACT_EVERY - 1));
+        assert!(compacted.exists(), "compacted log file must be published");
+        // Deleting the compacted range's commit files proves replay uses
+        // the compacted file (this is what external log cleanup would do).
+        for v in 0..LOG_COMPACT_EVERY {
+            std::fs::remove_file(t.commit_path(v)).unwrap();
+        }
+        let snap = t.snapshot_by_key("key", None).unwrap();
+        assert_eq!(snap.len(), total as usize);
+        // Metadata survives compaction too.
+        let state = t.state(None).unwrap().unwrap();
+        assert!(state.metadata.is_some());
+    }
+
+    #[test]
+    fn same_version_commit_conflicts_hard() {
+        let t = tmp_table("conflict");
+        t.append(&[row("a", 1.0)]).unwrap(); // claims version 0
+        // A stale writer that still believes version 0 is free must get a
+        // hard conflict, not silently clobber the committed entry.
+        let add = t
+            .write_data_file(0, 0, &[row("stale", 9.0)], &["key".to_string()])
+            .unwrap();
+        let err = t.commit(0, &[Action::Add(add)]).unwrap_err();
+        assert!(is_commit_conflict(&err), "{err:#}");
+        let snap = t.snapshot_by_key("key", None).unwrap();
+        assert_eq!(snap["a"].get("value").unwrap().as_f64().unwrap(), 1.0);
+        assert!(!snap.contains_key("stale"));
+    }
+
+    #[test]
+    fn two_racing_writers_exactly_one_wins_each_version() {
+        let dir = std::env::temp_dir()
+            .join("slleval-storage-test")
+            .join(format!("race-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        DeltaTable::open_with_stats(&dir, &["key"]).unwrap();
+
+        const PER_WRITER: usize = 12;
+        let committed: Vec<u64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2)
+                .map(|w| {
+                    let dir = dir.clone();
+                    scope.spawn(move || {
+                        // Each writer has its own table handle (two
+                        // processes in miniature) and retries conflicts.
+                        let t = DeltaTable::open_with_stats(&dir, &["key"]).unwrap();
+                        let mut versions = Vec::new();
+                        for i in 0..PER_WRITER {
+                            let r = [row(&format!("w{w}-{i}"), i as f64)];
+                            loop {
+                                match t.append(&r) {
+                                    Ok(v) => {
+                                        versions.push(v);
+                                        break;
+                                    }
+                                    Err(e) => {
+                                        assert!(
+                                            is_commit_conflict(&e),
+                                            "only conflicts are expected: {e:#}"
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        versions
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+
+        let mut versions = committed;
+        versions.sort_unstable();
+        let expected: Vec<u64> = (0..2 * PER_WRITER as u64).collect();
+        assert_eq!(versions, expected, "each version must have exactly one winner");
+
+        let t = DeltaTable::open_with_stats(&dir, &["key"]).unwrap();
+        assert_eq!(t.current_version().unwrap(), Some(2 * PER_WRITER as u64 - 1));
+        let snap = t.snapshot_by_key("key", None).unwrap();
+        assert_eq!(snap.len(), 2 * PER_WRITER);
+        let ops: Vec<String> =
+            t.history().unwrap().into_iter().map(|(_, op, _)| op).collect();
+        assert!(ops.iter().all(|op| op == "WRITE"), "{ops:?}");
+    }
+
+    #[test]
+    fn reopen_sees_committed_state() {
+        let dir = std::env::temp_dir()
+            .join("slleval-storage-test")
+            .join(format!("reopen-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let t = DeltaTable::open_with_stats(&dir, &["key"]).unwrap();
+            t.append(&[row("a", 1.0)]).unwrap();
+        }
+        // Reopening with different creation-time stats columns must not
+        // matter: the persisted configuration wins.
+        let t2 = DeltaTable::open(&dir).unwrap();
+        assert_eq!(t2.snapshot(None).unwrap().len(), 1);
+        t2.append(&[row("b", 2.0)]).unwrap();
+        let state = t2.state(None).unwrap().unwrap();
+        let newest = state.files.iter().max_by_key(|f| f.path.clone()).unwrap();
+        let stats = newest.stats.as_ref().unwrap();
+        assert!(stats.min_values.contains_key("key"), "persisted stats columns must win");
+    }
+
+    #[test]
+    fn history_records_operations() {
+        let t = tmp_table("history");
+        t.append(&[row("a", 1.0)]).unwrap();
+        t.upsert(&[row("a", 2.0)], "key").unwrap();
+        t.compact().unwrap();
+        let ops: Vec<String> = t.history().unwrap().into_iter().map(|(_, op, _)| op).collect();
+        assert_eq!(ops, vec!["WRITE", "MERGE", "OPTIMIZE"]);
+    }
+
+    #[test]
+    fn storage_bytes_positive_and_shrinks_on_compact() {
+        let t = tmp_table("storage");
+        for i in 0..10 {
+            let rows: Vec<Json> = (0..20).map(|j| row(&format!("k{i}-{j}"), j as f64)).collect();
+            t.append(&rows).unwrap();
+        }
+        let before = t.storage_bytes().unwrap();
+        assert!(before > 0);
+        t.compact().unwrap();
+        let after = t.storage_bytes().unwrap();
+        assert!(after <= before, "compaction must not grow live storage");
+        let state = t.state(None).unwrap().unwrap();
+        assert_eq!(state.files.len(), 1, "compact folds everything into one file");
+        // Old snapshots stay readable after compaction (time travel).
+        assert_eq!(t.snapshot(Some(2)).unwrap().len(), 60);
+    }
+}

@@ -1,0 +1,478 @@
+//! Table maintenance: `OPTIMIZE` (range-cluster small files) and `VACUUM`
+//! (reclaim dead files), with Delta-shaped operation metrics.
+//!
+//! Optimize does not merely concatenate: it sorts the rewritten rows by
+//! the table's first stats column (the primary key — `prompt_hash` for
+//! response caches) and splits them into `target_bytes` files. Freshly
+//! flushed files each span nearly the whole key space (content-address
+//! keys are uniform), so their min/max stats prune nothing; after
+//! clustering, file ranges are narrow and disjoint and stats-based data
+//! skipping answers a point lookup from one file. This is the same reason
+//! Delta pairs OPTIMIZE with Z-ordering.
+//!
+//! Safety under concurrent writers:
+//!
+//! - **optimize** claims its version before scanning, rewrites only files
+//!   live at that scan, and publishes adds+removes in ONE commit under the
+//!   link-claim scheme — a concurrent append/upsert that wins the version
+//!   first turns the whole optimize into a retryable "commit conflict";
+//!   nothing was deleted, nothing is lost.
+//! - **vacuum** only ever deletes two classes of file: (a) *tombstoned*
+//!   files — paths with a `remove` action in the log. Data-file names are
+//!   never reused (they embed version + writer discriminator), so a
+//!   tombstoned path can never become live again: deleting it past the
+//!   retention window is always safe, it only forfeits time travel to
+//!   versions older than the remove. (b) *orphans* — files no log entry
+//!   references (losers of commit races, crashed writers, fsx temp
+//!   litter). An orphan might be an in-flight writer's data file whose
+//!   commit has not landed yet, so orphans are only deleted once older
+//!   than `max(retention, ORPHAN_GRACE_MS)`; a writer that takes an hour
+//!   between writing a data file and committing it has lost the race in
+//!   any case (its commit conflicts and retries with a fresh file).
+
+use super::actions::{Action, CommitInfo, Remove};
+use super::delta::{is_commit_conflict, DeltaTable, FileMeta};
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Default vacuum retention, matching Delta's 7-day default.
+pub const DEFAULT_RETAIN_HOURS: f64 = 168.0;
+
+/// Orphaned (never-referenced) files younger than this are never deleted,
+/// regardless of retention: they may belong to an in-flight commit.
+pub const ORPHAN_GRACE_MS: u64 = 3_600_000;
+
+/// Default optimize target file size.
+pub const DEFAULT_TARGET_BYTES: u64 = 64 * 1024 * 1024;
+
+/// `DeltaOperationMetricsOptimize`: the metrics object embedded in the
+/// OPTIMIZE commitInfo (and printed by `slleval cache optimize`).
+/// `filesAdded`/`filesRemoved` are JSON strings holding a size histogram,
+/// as Spark emits them.
+#[derive(Debug, Clone, Default)]
+pub struct OptimizeMetrics {
+    pub added_sizes: Vec<u64>,
+    pub removed_sizes: Vec<u64>,
+    pub num_batches: u64,
+    pub total_considered_files: u64,
+    pub total_files_skipped: u64,
+}
+
+fn size_histogram(sizes: &[u64]) -> String {
+    let total: u64 = sizes.iter().sum();
+    let n = sizes.len() as u64;
+    Json::obj(vec![
+        ("avg", Json::num(if n == 0 { 0.0 } else { total as f64 / n as f64 })),
+        ("max", Json::num(sizes.iter().max().copied().unwrap_or(0) as f64)),
+        ("min", Json::num(sizes.iter().min().copied().unwrap_or(0) as f64)),
+        ("totalFiles", Json::num(n as f64)),
+        ("totalSize", Json::num(total as f64)),
+    ])
+    .to_string()
+}
+
+impl OptimizeMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("filesAdded", Json::str(size_histogram(&self.added_sizes))),
+            ("filesRemoved", Json::str(size_histogram(&self.removed_sizes))),
+            ("numBatches", Json::num(self.num_batches as f64)),
+            ("numFilesAdded", Json::num(self.added_sizes.len() as f64)),
+            ("numFilesRemoved", Json::num(self.removed_sizes.len() as f64)),
+            ("partitionsOptimized", Json::num(0.0)),
+            // Rows are re-sorted by the cluster column, like Z-ordered
+            // OPTIMIZE in Spark.
+            ("preserveInsertionOrder", Json::Bool(false)),
+            ("totalConsideredFiles", Json::num(self.total_considered_files as f64)),
+            ("totalFilesSkipped", Json::num(self.total_files_skipped as f64)),
+        ])
+    }
+}
+
+/// Result of an optimize pass. `version` is None when nothing needed
+/// rewriting (no commit was made).
+#[derive(Debug)]
+pub struct OptimizeOutcome {
+    pub version: Option<u64>,
+    pub metrics: OptimizeMetrics,
+}
+
+/// Rewrite live files smaller than `target_bytes` into range-clustered
+/// files of up to `target_bytes`: rows are sorted by the table's first
+/// stats column and split at the target size, and the rewrite is
+/// published as one add+remove commit. A concurrent commit winning the
+/// version surfaces as "commit conflict" — retry from scratch.
+pub fn optimize(table: &DeltaTable, target_bytes: u64) -> Result<OptimizeOutcome> {
+    // Claim the target version before scanning (same TOCTOU discipline as
+    // upsert): a commit landing mid-rewrite conflicts our claim.
+    let version = table.next_version()?;
+    let Some(state) = table.state(None)? else {
+        return Ok(OptimizeOutcome { version: None, metrics: OptimizeMetrics::default() });
+    };
+    let cols = table.effective_stats_columns(state.metadata.as_ref());
+
+    let mut metrics = OptimizeMetrics {
+        total_considered_files: state.files.len() as u64,
+        ..OptimizeMetrics::default()
+    };
+    let mut small: Vec<&FileMeta> = Vec::new();
+    for f in &state.files {
+        if f.size >= target_bytes {
+            metrics.total_files_skipped += 1;
+        } else {
+            small.push(f);
+        }
+    }
+    // A lone small file is already optimal — rewriting it would churn.
+    if small.len() < 2 {
+        metrics.total_files_skipped += small.len() as u64;
+        return Ok(OptimizeOutcome { version: None, metrics });
+    }
+
+    let deletion_ts = table.now_ms();
+    let mut rows = Vec::new();
+    let mut removes = Vec::new();
+    for f in &small {
+        rows.extend(table.read_file(&f.path)?);
+        metrics.removed_sizes.push(f.size);
+        removes.push(Remove {
+            path: f.path.clone(),
+            deletion_timestamp_ms: deletion_ts,
+            data_change: false,
+            size: Some(f.size),
+        });
+    }
+    // Cluster on the primary stats column so output file ranges are
+    // narrow and disjoint; stable sort keeps insertion order within ties.
+    if let Some(cluster_col) = cols.first() {
+        rows.sort_by(|a, b| {
+            let ka = a.opt(cluster_col).and_then(|v| v.as_str().ok()).unwrap_or("");
+            let kb = b.opt(cluster_col).and_then(|v| v.as_str().ok()).unwrap_or("");
+            ka.cmp(kb)
+        });
+    }
+    // Split at target size, estimated from the uncompressed JSONL bytes
+    // (the gzip container stores deflate blocks uncompressed, so the
+    // on-disk size tracks this within a few header bytes per file).
+    let mut chunks: Vec<Vec<Json>> = Vec::new();
+    let mut chunk: Vec<Json> = Vec::new();
+    let mut chunk_bytes = 0u64;
+    for row in rows {
+        let row_bytes = row.to_string().len() as u64 + 1;
+        if !chunk.is_empty() && chunk_bytes.saturating_add(row_bytes) > target_bytes {
+            chunks.push(std::mem::take(&mut chunk));
+            chunk_bytes = 0;
+        }
+        chunk.push(row);
+        chunk_bytes = chunk_bytes.saturating_add(row_bytes);
+    }
+    if !chunk.is_empty() {
+        chunks.push(chunk);
+    }
+
+    let mut actions = Vec::new();
+    metrics.num_batches = chunks.len() as u64;
+    for (part, chunk) in chunks.iter().enumerate() {
+        let add = table.write_data_file(version, part, chunk, &cols)?;
+        metrics.added_sizes.push(add.size);
+        actions.push(Action::Add(super::actions::Add { data_change: false, ..add }));
+    }
+    actions.extend(removes.into_iter().map(Action::Remove));
+    let mut info = CommitInfo::new(
+        table.now_ms(),
+        "OPTIMIZE",
+        vec![("targetSize", Json::str(format!("{target_bytes}")))],
+    );
+    info.operation_metrics = Some(metrics.to_json());
+    actions.push(Action::CommitInfo(info));
+    let version = table.commit(version, &actions)?;
+    Ok(OptimizeOutcome { version: Some(version), metrics })
+}
+
+/// Result of a vacuum pass.
+#[derive(Debug)]
+pub struct VacuumOutcome {
+    pub dry_run: bool,
+    /// (table-relative path, size) of every file eligible for deletion.
+    pub to_delete: Vec<(String, u64)>,
+    /// Files actually unlinked (0 on dry runs).
+    pub deleted_files: u64,
+    pub reclaimed_bytes: u64,
+}
+
+impl VacuumOutcome {
+    /// `DeltaOperationMetricsVacuumStart` shape.
+    pub fn start_metrics(&self) -> Json {
+        let bytes: u64 = self.to_delete.iter().map(|(_, s)| s).sum();
+        Json::obj(vec![
+            ("numFilesToDelete", Json::str(format!("{}", self.to_delete.len()))),
+            ("sizeOfDataToDelete", Json::str(format!("{bytes}"))),
+        ])
+    }
+
+    /// `DeltaOperationMetricsVacuumEnd` shape.
+    pub fn end_metrics(&self) -> Json {
+        Json::obj(vec![
+            ("numDeletedFiles", Json::str(format!("{}", self.deleted_files))),
+            ("numVacuumedDirectories", Json::str("0")),
+        ])
+    }
+}
+
+/// Delete dead data files older than the retention window. Writes
+/// `VACUUM START` / `VACUUM END` commits (with Delta-shaped metrics)
+/// around the deletions unless `dry_run` or nothing qualifies. Retention
+/// below the table's time-travel needs trades old snapshots for space —
+/// exactly Delta's own vacuum contract.
+pub fn vacuum(table: &DeltaTable, retain_ms: u64, dry_run: bool) -> Result<VacuumOutcome> {
+    let now = table.now_ms();
+    let state = table.state(None)?;
+    let mut live = std::collections::BTreeSet::new();
+    let mut tombstones = std::collections::BTreeMap::new();
+    if let Some(state) = &state {
+        for f in &state.files {
+            live.insert(f.path.clone());
+        }
+        for t in &state.tombstones {
+            tombstones.insert(t.path.clone(), t.deletion_timestamp_ms);
+        }
+    }
+
+    let mut outcome =
+        VacuumOutcome { dry_run, to_delete: Vec::new(), deleted_files: 0, reclaimed_bytes: 0 };
+    for entry in std::fs::read_dir(table.data_dir())? {
+        let entry = entry?;
+        if !entry.file_type()?.is_file() {
+            continue;
+        }
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let rel = format!("data/{name}");
+        if live.contains(&rel) {
+            continue;
+        }
+        let meta = entry.metadata()?;
+        let eligible = match tombstones.get(&rel) {
+            // Tombstoned: the path can never become live again (names are
+            // never reused), so age it from its deletionTimestamp.
+            Some(deleted_at) => now.saturating_sub(*deleted_at) >= retain_ms,
+            // Orphan: possibly an in-flight commit's data file — grace
+            // period applies on top of retention.
+            None => {
+                let age_ms = file_age_ms(&meta, now);
+                age_ms >= retain_ms.max(ORPHAN_GRACE_MS)
+            }
+        };
+        if eligible {
+            outcome.to_delete.push((rel, meta.len()));
+        }
+    }
+    outcome.to_delete.sort();
+    if dry_run || outcome.to_delete.is_empty() {
+        return Ok(outcome);
+    }
+
+    // Bracket the deletions with START/END commits when the log exists
+    // (an uninitialized table has no protocol action to follow, and a
+    // commitInfo-only commit 0 would be spec-invalid).
+    let log_exists = state.is_some();
+    if log_exists {
+        commit_info_only(table, "VACUUM START", outcome.start_metrics())?;
+    }
+    for (rel, size) in &outcome.to_delete {
+        if std::fs::remove_file(table.root().join(rel)).is_ok() {
+            outcome.deleted_files += 1;
+            outcome.reclaimed_bytes += size;
+        }
+    }
+    if log_exists {
+        commit_info_only(table, "VACUUM END", outcome.end_metrics())?;
+    }
+    Ok(outcome)
+}
+
+/// Age of a file from its mtime. The wall clock is the right clock here:
+/// vacuum reasons about real elapsed time for foreign writers, not the
+/// virtual evaluation clock.
+fn file_age_ms(meta: &std::fs::Metadata, now_ms: u64) -> u64 {
+    let mtime_ms = meta
+        .modified()
+        .ok()
+        .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(now_ms);
+    now_ms.saturating_sub(mtime_ms)
+}
+
+/// Publish a commitInfo-only commit, retrying version conflicts: racing
+/// appends can keep claiming versions ahead of us, but each retry targets
+/// the next free slot, so this terminates unless the table is under
+/// pathological sustained write pressure.
+fn commit_info_only(table: &DeltaTable, operation: &str, metrics: Json) -> Result<u64> {
+    for _ in 0..64 {
+        let version = table.next_version()?;
+        let mut info = CommitInfo::new(table.now_ms(), operation, vec![]);
+        info.operation_metrics = Some(metrics.clone());
+        match table.commit(version, &[Action::CommitInfo(info)]) {
+            Ok(v) => return Ok(v),
+            Err(e) if is_commit_conflict(&e) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    bail!("{operation} could not claim a log version after 64 attempts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_table(name: &str) -> DeltaTable {
+        let dir = std::env::temp_dir()
+            .join("slleval-maintain-test")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        DeltaTable::open_with_stats(&dir, &["key"]).unwrap()
+    }
+
+    fn row(k: &str, v: f64) -> Json {
+        Json::obj(vec![("key", Json::str(k)), ("value", Json::num(v))])
+    }
+
+    #[test]
+    fn optimize_binpacks_small_files_into_one_commit() {
+        let t = tmp_table("optimize");
+        for i in 0..6 {
+            t.append(&[row(&format!("k{i}"), i as f64)]).unwrap();
+        }
+        let before = t.snapshot_by_key("key", None).unwrap();
+        let outcome = optimize(&t, u64::MAX).unwrap();
+        assert!(outcome.version.is_some());
+        assert_eq!(outcome.metrics.removed_sizes.len(), 6);
+        assert_eq!(outcome.metrics.added_sizes.len(), 1);
+        assert_eq!(outcome.metrics.num_batches, 1);
+        assert_eq!(outcome.metrics.total_considered_files, 6);
+        let state = t.state(None).unwrap().unwrap();
+        assert_eq!(state.files.len(), 1);
+        assert_eq!(t.snapshot_by_key("key", None).unwrap(), before);
+        // Metrics land in the commitInfo, histogram fields as JSON strings.
+        let (_, op, _) = t.history().unwrap().into_iter().last().unwrap();
+        assert_eq!(op, "OPTIMIZE");
+        let parsed = Json::parse(&size_histogram(&outcome.metrics.added_sizes)).unwrap();
+        assert_eq!(parsed.f64_or("totalFiles", 0.0), 1.0);
+    }
+
+    #[test]
+    fn optimize_skips_files_at_or_above_target() {
+        let t = tmp_table("optimize-skip");
+        let big: Vec<Json> = (0..200).map(|i| row(&format!("big{i:04}"), i as f64)).collect();
+        t.append(&big).unwrap();
+        t.append(&[row("s1", 1.0)]).unwrap();
+        t.append(&[row("s2", 2.0)]).unwrap();
+        let big_size = t.state(None).unwrap().unwrap().files.iter().map(|f| f.size).max().unwrap();
+        let outcome = optimize(&t, big_size).unwrap();
+        assert!(outcome.version.is_some());
+        assert_eq!(outcome.metrics.total_files_skipped, 1, "large file left alone");
+        assert_eq!(outcome.metrics.removed_sizes.len(), 2);
+        assert_eq!(t.state(None).unwrap().unwrap().files.len(), 2);
+    }
+
+    #[test]
+    fn optimize_range_clusters_rows_for_skipping() {
+        let t = tmp_table("optimize-cluster");
+        // Four files whose key ranges all overlap: stats prune nothing.
+        t.append(&[row("a", 1.0), row("z", 2.0)]).unwrap();
+        t.append(&[row("b", 3.0), row("y", 4.0)]).unwrap();
+        t.append(&[row("c", 5.0), row("x", 6.0)]).unwrap();
+        t.append(&[row("d", 7.0), row("w", 8.0)]).unwrap();
+        let before = t.snapshot_by_key("key", None).unwrap();
+        let pre = t.state(None).unwrap().unwrap();
+        assert_eq!(pre.candidates("key", "a").len(), 4, "unclustered: every file matches");
+
+        // A target around half the table splits the sorted rows in two.
+        let outcome = optimize(&t, 100).unwrap();
+        assert!(outcome.version.is_some());
+        assert_eq!(outcome.metrics.num_batches, 2);
+        let state = t.state(None).unwrap().unwrap();
+        assert_eq!(state.files.len(), 2);
+        // Clustered: point lookups hit exactly one file, and probes
+        // between the two ranges hit none.
+        assert_eq!(state.candidates("key", "a").len(), 1);
+        assert_eq!(state.candidates("key", "z").len(), 1);
+        assert_ne!(
+            state.candidates("key", "a")[0].path,
+            state.candidates("key", "z")[0].path
+        );
+        assert_eq!(state.candidates("key", "m").len(), 0);
+        assert_eq!(t.snapshot_by_key("key", None).unwrap(), before);
+    }
+
+    #[test]
+    fn optimize_without_packable_files_commits_nothing() {
+        let t = tmp_table("optimize-noop");
+        t.append(&[row("a", 1.0)]).unwrap();
+        let v_before = t.current_version().unwrap();
+        let outcome = optimize(&t, u64::MAX).unwrap();
+        assert!(outcome.version.is_none());
+        assert_eq!(outcome.metrics.total_files_skipped, 1);
+        assert_eq!(t.current_version().unwrap(), v_before);
+    }
+
+    #[test]
+    fn vacuum_dry_run_deletes_nothing() {
+        let t = tmp_table("vacuum-dry");
+        t.append(&[row("a", 1.0)]).unwrap();
+        t.upsert(&[row("a", 2.0)], "key").unwrap(); // tombstones v0's file
+        let v_before = t.current_version().unwrap();
+        let outcome = vacuum(&t, 0, true).unwrap();
+        assert_eq!(outcome.to_delete.len(), 1);
+        assert_eq!(outcome.deleted_files, 0);
+        assert_eq!(t.current_version().unwrap(), v_before, "dry run must not commit");
+        let dead = t.root().join(&outcome.to_delete[0].0);
+        assert!(dead.exists());
+    }
+
+    #[test]
+    fn vacuum_respects_retention_then_reclaims() {
+        let t = tmp_table("vacuum-retention");
+        t.append(&[row("a", 1.0)]).unwrap();
+        t.upsert(&[row("a", 2.0)], "key").unwrap();
+        // Retention far in the future: the fresh tombstone survives.
+        let kept = vacuum(&t, u64::MAX, false).unwrap();
+        assert_eq!(kept.to_delete.len(), 0);
+        // Retention zero: the tombstoned file goes; live data unaffected.
+        let before = t.snapshot_by_key("key", None).unwrap();
+        let outcome = vacuum(&t, 0, false).unwrap();
+        assert_eq!(outcome.deleted_files, 1);
+        assert!(outcome.reclaimed_bytes > 0);
+        assert_eq!(t.snapshot_by_key("key", None).unwrap(), before);
+        // START/END commits with metrics are in the history.
+        let ops: Vec<String> = t.history().unwrap().into_iter().map(|(_, op, _)| op).collect();
+        assert_eq!(ops[ops.len() - 2..], ["VACUUM START".to_string(), "VACUUM END".to_string()]);
+        assert_eq!(outcome.start_metrics().str_or("numFilesToDelete", ""), "1");
+        assert_eq!(outcome.end_metrics().str_or("numDeletedFiles", ""), "1");
+    }
+
+    #[test]
+    fn vacuum_protects_fresh_orphans() {
+        let t = tmp_table("vacuum-orphan");
+        t.append(&[row("a", 1.0)]).unwrap();
+        // An in-flight writer's data file: referenced by no commit yet.
+        let orphan = t.data_dir().join("part-inflight-0000.jsonl.gz");
+        std::fs::write(&orphan, b"not yet committed").unwrap();
+        let outcome = vacuum(&t, 0, false).unwrap();
+        assert_eq!(outcome.to_delete.len(), 0, "fresh orphan is inside the grace window");
+        assert!(orphan.exists());
+    }
+
+    #[test]
+    fn vacuum_forfeits_time_travel_past_retention() {
+        let t = tmp_table("vacuum-tt");
+        t.append(&[row("a", 1.0)]).unwrap(); // v0
+        t.upsert(&[row("a", 2.0)], "key").unwrap(); // v1 rewrites v0's file
+        assert_eq!(t.snapshot(Some(0)).unwrap().len(), 1);
+        vacuum(&t, 0, false).unwrap();
+        // v0's data file is gone: time travel to v0 now errors (documented
+        // Delta semantics of sub-retention vacuums).
+        assert!(t.snapshot(Some(0)).is_err());
+        assert_eq!(t.snapshot(None).unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,226 @@
+//! One-way migration from the legacy "deltalite" private log format.
+//!
+//! Before this subsystem, cache tables kept their transaction log in
+//! `_log/<version %08d>.json` files holding flat `add`/`remove` filename
+//! arrays — a format no external tool could read. [`migrate_legacy_log`]
+//! (invoked by every `DeltaTable::open`) detects such a table, replays the
+//! old log to its live file set, and republishes that state as `_delta_log`
+//! commit 0 — protocol, metaData, and one stats-bearing `add` per live file.
+//! Data files are NOT rewritten: the old `data/` files are referenced
+//! as-is, so migration costs one read pass (for stats) and no data IO.
+//!
+//! The migration is one-way and collapses history: old versions predate
+//! the new log, so time travel starts at the migrated commit 0. The legacy
+//! log is renamed to `_log.migrated` (kept for forensics), and because the
+//! rename happens only *after* commit 0 is durable, a crash mid-migration
+//! re-runs it idempotently on the next open; a concurrent open racing on
+//! commit 0 loses the link-claim and treats the table as migrated.
+
+use super::actions::{Action, Add, CommitInfo, FileStats};
+use super::delta::{is_commit_conflict, DeltaTable};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeSet;
+
+/// Migrate `root` if it holds a legacy `_log/` table and no `_delta_log`
+/// commits yet. Returns the number of rows migrated, None when there was
+/// nothing to migrate.
+pub(crate) fn migrate_legacy_log(table: &DeltaTable) -> Result<Option<u64>> {
+    let legacy_dir = table.root().join("_log");
+    if !legacy_dir.is_dir() || table.current_version()?.is_some() {
+        return Ok(None);
+    }
+
+    // Replay the legacy log: removes then adds per commit, version order.
+    let mut versions: Vec<u64> = Vec::new();
+    for entry in std::fs::read_dir(&legacy_dir)? {
+        let name = entry?.file_name();
+        let name = name.to_string_lossy();
+        if let Some(stem) = name.strip_suffix(".json") {
+            if let Ok(v) = stem.parse::<u64>() {
+                versions.push(v);
+            }
+        }
+    }
+    if versions.is_empty() {
+        return Ok(None);
+    }
+    versions.sort_unstable();
+    let mut live: BTreeSet<String> = BTreeSet::new();
+    for v in versions {
+        let path = legacy_dir.join(format!("{v:08}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading legacy commit {path:?}"))?;
+        let commit = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        for r in commit.get("remove")?.as_arr()? {
+            live.remove(r.as_str()?);
+        }
+        for a in commit.get("add")?.as_arr()? {
+            live.insert(a.as_str()?.to_string());
+        }
+    }
+
+    // One stats-bearing add per live file; rows read once for stats and
+    // schema inference, files left untouched.
+    let cols = table.effective_stats_columns(None);
+    let mut adds = Vec::new();
+    let mut all_rows = Vec::new();
+    let now = table.now_ms();
+    for name in &live {
+        let rel = format!("data/{name}");
+        let rows = table
+            .read_file(&rel)
+            .with_context(|| format!("reading legacy data file {rel} during migration"))?;
+        let size = std::fs::metadata(table.root().join(&rel))?.len();
+        adds.push(Add {
+            path: rel,
+            size,
+            modification_time_ms: now,
+            data_change: true,
+            stats: Some(FileStats::compute(&rows, &cols)),
+        });
+        all_rows.extend(rows);
+    }
+    let num_rows = all_rows.len() as u64;
+
+    let mut actions = table.creation_actions(&all_rows, &cols);
+    let num_files = adds.len();
+    actions.extend(adds.into_iter().map(Action::Add));
+    let mut info =
+        CommitInfo::new(now, "MIGRATE", vec![("source", Json::str("deltalite-log-v0"))]);
+    info.operation_metrics = Some(Json::obj(vec![
+        ("numFiles", Json::str(format!("{num_files}"))),
+        ("numRows", Json::str(format!("{num_rows}"))),
+    ]));
+    actions.push(Action::CommitInfo(info));
+
+    match table.commit(0, &actions) {
+        Ok(_) => {}
+        // Another process migrated the same table first: its commit 0 is
+        // equivalent (same live set), ours is discarded.
+        Err(e) if is_commit_conflict(&e) => {}
+        Err(e) => return Err(e),
+    }
+    // Only after commit 0 is durable: retire the legacy log so the next
+    // open skips migration. Best-effort — a failed rename just means one
+    // redundant (conflicting, harmless) migration attempt later.
+    let _ = std::fs::rename(&legacy_dir, table.root().join("_log.migrated"));
+    Ok(Some(num_rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use flate2::write::GzEncoder;
+    use flate2::Compression;
+    use std::io::Write;
+    use std::path::Path;
+
+    fn write_legacy_data_file(root: &Path, name: &str, rows: &[Json]) {
+        let file = std::fs::File::create(root.join("data").join(name)).unwrap();
+        let mut enc = GzEncoder::new(file, Compression::fast());
+        for row in rows {
+            writeln!(enc, "{row}").unwrap();
+        }
+        enc.finish().unwrap();
+    }
+
+    fn write_legacy_commit(root: &Path, version: u64, adds: &[&str], removes: &[&str]) {
+        let entry = Json::obj(vec![
+            ("version", Json::num(version as f64)),
+            ("op", Json::str("append")),
+            ("timestamp", Json::num(1.0)),
+            ("add", Json::arr(adds.iter().map(|a| Json::str(*a)).collect())),
+            ("remove", Json::arr(removes.iter().map(|r| Json::str(*r)).collect())),
+        ]);
+        std::fs::write(root.join("_log").join(format!("{version:08}.json")), entry.to_pretty())
+            .unwrap();
+    }
+
+    fn row(k: &str, v: f64) -> Json {
+        Json::obj(vec![("key", Json::str(k)), ("value", Json::num(v))])
+    }
+
+    /// A legacy table: v0 adds two files, v1 upserts (removes one file,
+    /// adds its rewrite) — exactly the shape deltalite wrote.
+    fn legacy_table(name: &str) -> std::path::PathBuf {
+        let root = std::env::temp_dir()
+            .join("slleval-migrate-test")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join("_log")).unwrap();
+        std::fs::create_dir_all(root.join("data")).unwrap();
+        write_legacy_data_file(&root, "00000000-0000-1-0.jsonl.gz", &[row("a", 1.0)]);
+        write_legacy_data_file(&root, "00000000-0001-1-1.jsonl.gz", &[row("b", 2.0)]);
+        write_legacy_commit(
+            &root,
+            0,
+            &["00000000-0000-1-0.jsonl.gz", "00000000-0001-1-1.jsonl.gz"],
+            &[],
+        );
+        write_legacy_data_file(&root, "00000001-0000-1-2.jsonl.gz", &[row("a", 9.0)]);
+        write_legacy_commit(
+            &root,
+            1,
+            &["00000001-0000-1-2.jsonl.gz"],
+            &["00000000-0000-1-0.jsonl.gz"],
+        );
+        root
+    }
+
+    #[test]
+    fn migrates_legacy_table_to_v0_commit() {
+        let root = legacy_table("basic");
+        let t = DeltaTable::open_with_stats(&root, &["key"]).unwrap();
+        // The migrated table reports exactly the legacy live rows.
+        let snap = t.snapshot_by_key("key", None).unwrap();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap["a"].get("value").unwrap().as_f64().unwrap(), 9.0);
+        assert_eq!(snap["b"].get("value").unwrap().as_f64().unwrap(), 2.0);
+        // Spec-shaped v0: protocol + metaData + stats-bearing adds.
+        assert_eq!(t.current_version().unwrap(), Some(0));
+        let state = t.state(None).unwrap().unwrap();
+        assert!(state.metadata.is_some());
+        assert_eq!(state.files.len(), 2);
+        for f in &state.files {
+            let stats = f.stats.as_ref().expect("migrated adds carry stats");
+            assert_eq!(stats.num_records, 1);
+            assert!(stats.min_values.contains_key("key"));
+        }
+        // Legacy log retired, data files untouched in place.
+        assert!(root.join("_log.migrated").is_dir());
+        assert!(!root.join("_log").exists());
+        assert!(root.join("data/00000001-0000-1-2.jsonl.gz").exists());
+        // History shows the migration provenance.
+        let ops: Vec<String> = t.history().unwrap().into_iter().map(|(_, op, _)| op).collect();
+        assert_eq!(ops, vec!["MIGRATE"]);
+    }
+
+    #[test]
+    fn reopen_after_migration_is_stable() {
+        let root = legacy_table("reopen");
+        let first = DeltaTable::open_with_stats(&root, &["key"]).unwrap();
+        let snap1 = first.snapshot_by_key("key", None).unwrap();
+        drop(first);
+        let again = DeltaTable::open_with_stats(&root, &["key"]).unwrap();
+        assert_eq!(again.current_version().unwrap(), Some(0), "no second migration commit");
+        assert_eq!(again.snapshot_by_key("key", None).unwrap(), snap1);
+        // And the table keeps working as a normal Delta table afterwards.
+        again.upsert(&[row("a", 100.0)], "key").unwrap();
+        let snap = again.snapshot_by_key("key", None).unwrap();
+        assert_eq!(snap["a"].get("value").unwrap().as_f64().unwrap(), 100.0);
+        assert_eq!(snap.len(), 2);
+    }
+
+    #[test]
+    fn plain_new_table_is_untouched_by_migration_probe() {
+        let root = std::env::temp_dir()
+            .join("slleval-migrate-test")
+            .join(format!("fresh-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let t = DeltaTable::open_with_stats(&root, &["key"]).unwrap();
+        t.append(&[row("x", 1.0)]).unwrap();
+        assert!(!root.join("_log.migrated").exists());
+        assert_eq!(t.snapshot(None).unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,27 @@
+//! Delta-protocol storage subsystem (paper §3.2: the response cache is
+//! "backed by Delta Lake").
+//!
+//! - [`actions`] — the spec-shaped transaction-log actions: `protocol`,
+//!   `metaData`, `add` (with per-file min/max/nullCount `stats`),
+//!   `remove` (with `deletionTimestamp`), `commitInfo`.
+//! - [`delta`] — [`delta::DeltaTable`]: `_delta_log/<version>.json`
+//!   commits under the `util/fsx` link-claim scheme, log-replay
+//!   snapshots, time travel, periodic log compaction, and stats-based
+//!   data skipping via [`delta::TableState::candidates`].
+//! - [`maintain`] — `OPTIMIZE` (bin-pack small files) and `VACUUM`
+//!   (reclaim dead files), with Delta-shaped operation metrics.
+//! - [`migrate`] — one-way migration of legacy deltalite `_log/` tables
+//!   into a v0 `_delta_log` commit, run transparently on open.
+//!
+//! Because the log is the real Delta transaction protocol, external
+//! readers (Spark, delta-rs, or the stdlib-only `python/read_delta_log.py`
+//! interop checker in CI) can replay our cache tables directly.
+
+pub mod actions;
+pub mod delta;
+pub mod maintain;
+pub mod migrate;
+
+pub use actions::{Action, Add, CommitInfo, FileStats, MetaData, Protocol, Remove};
+pub use delta::{is_commit_conflict, DeltaTable, FileMeta, TableState, DEFAULT_STATS_COLUMNS};
+pub use maintain::{optimize, vacuum, OptimizeOutcome, VacuumOutcome, DEFAULT_RETAIN_HOURS};

@@ -1,4 +1,4 @@
-//! Crash-safe filesystem publication primitives, shared by the deltalite
+//! Crash-safe filesystem publication primitives, shared by the Delta-protocol
 //! transaction log and the run-checkpoint store.
 //!
 //! The discipline: content is always written to a hidden temp file in the

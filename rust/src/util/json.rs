@@ -1,7 +1,7 @@
 //! Minimal self-contained JSON parser / writer.
 //!
 //! The offline crate set has no `serde_json`, so the config system, the
-//! deltalite transaction log, the artifact manifest, and the tracking store
+//! Delta transaction log, the artifact manifest, and the tracking store
 //! all share this implementation. Supports the full JSON grammar plus
 //! pretty-printing; numbers are kept as f64 with an i64 fast path.
 

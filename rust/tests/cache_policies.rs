@@ -1,4 +1,4 @@
-//! Cache-policy matrix + deltalite durability tests over the live
+//! Cache-policy matrix + Delta-table durability tests over the live
 //! pipeline: every policy × (cold, warm) cache state, plus time travel
 //! and storage accounting (paper §3.2, §5.3).
 
@@ -67,12 +67,13 @@ fn read_only_never_writes() {
     assert!(r.inference.api_calls > 0);
     // Reopen: still only the originally-warmed entries.
     let cache = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
-    let warmed_entries = cache.len();
+    let warmed_entries = cache.len().unwrap();
     let mut runner2 = fast_runner();
     runner2.open_cache(&dir, CachePolicy::ReadOnly).unwrap();
     let r2 = runner2.evaluate(&df2, &task_with(CachePolicy::ReadOnly)).unwrap();
     assert!(r2.inference.api_calls > 0, "still misses after read-only run");
-    assert_eq!(ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap().len(), warmed_entries);
+    let reopened = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+    assert_eq!(reopened.len().unwrap(), warmed_entries);
     let _ = df;
 }
 
@@ -145,7 +146,7 @@ fn time_travel_reproduces_first_population() {
         .current_version()
         .unwrap()
         .unwrap();
-    let len_v1 = ResponseCache::open_at_version(&dir, v1).unwrap().len();
+    let len_v1 = ResponseCache::open_at_version(&dir, v1).unwrap().len().unwrap();
 
     // Population 2 extends the cache.
     let df2 = synth::generate_default(30, 75);
@@ -155,9 +156,9 @@ fn time_travel_reproduces_first_population() {
 
     // Historical read sees exactly the first population.
     let old = ResponseCache::open_at_version(&dir, v1).unwrap();
-    assert_eq!(old.len(), len_v1);
+    assert_eq!(old.len().unwrap(), len_v1);
     let new = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
-    assert!(new.len() > old.len());
+    assert!(new.len().unwrap() > old.len().unwrap());
 }
 
 #[test]

@@ -1,0 +1,204 @@
+//! Cache + storage integration over the live pipeline: legacy `_log/`
+//! tables migrate transparently through `ResponseCache::open`, the
+//! `inference.cache_skipping` toggle is bit-identical end to end, and
+//! optimize → vacuum preserves replay (paper §3.2, §5.3).
+
+use flate2::write::GzEncoder;
+use flate2::Compression;
+use spark_llm_eval::cache::{cache_key, CacheEntry, ResponseCache};
+use spark_llm_eval::config::{CachePolicy, EvalTask, MetricConfig};
+use spark_llm_eval::coordinator::EvalRunner;
+use spark_llm_eval::data::synth;
+use spark_llm_eval::providers::simulated::SimServiceConfig;
+use spark_llm_eval::ratelimit::VirtualClock;
+use spark_llm_eval::util::json::Json;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("slleval-skipping-test")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn fast_runner() -> EvalRunner {
+    let mut r = EvalRunner::with_clock(VirtualClock::new());
+    r.service_config = SimServiceConfig {
+        server_error_rate: 0.0,
+        unparseable_rate: 0.0,
+        sleep_latency: false,
+        ..Default::default()
+    };
+    r
+}
+
+fn task_with(policy: CachePolicy) -> EvalTask {
+    let mut t = EvalTask::default();
+    t.inference.cache_policy = policy;
+    t.metrics = vec![MetricConfig::new("exact_match", "lexical")];
+    t
+}
+
+fn legacy_entry(prompt: &str) -> CacheEntry {
+    CacheEntry {
+        prompt_hash: cache_key(prompt, "m", "prov", 0.0, 100),
+        model_name: "m".into(),
+        provider: "prov".into(),
+        prompt_text: prompt.into(),
+        response_text: format!("legacy:{prompt}"),
+        input_tokens: 10,
+        output_tokens: 5,
+        latency_ms: 100.0,
+        created_at: 1000.0,
+        ttl_days: None,
+    }
+}
+
+fn write_legacy_data_file(root: &Path, name: &str, entries: &[CacheEntry]) {
+    let file = std::fs::File::create(root.join("data").join(name)).unwrap();
+    let mut enc = GzEncoder::new(file, Compression::fast());
+    for e in entries {
+        writeln!(enc, "{}", e.to_json()).unwrap();
+    }
+    enc.finish().unwrap();
+}
+
+/// A cache dir in the pre-subsystem deltalite format: `_log/%08d.json`
+/// commits holding flat add/remove filename arrays.
+fn write_legacy_commit(root: &Path, version: u64, adds: &[&str], removes: &[&str]) {
+    let entry = Json::obj(vec![
+        ("version", Json::num(version as f64)),
+        ("op", Json::str("append")),
+        ("timestamp", Json::num(1.0)),
+        ("add", Json::arr(adds.iter().map(|a| Json::str(*a)).collect())),
+        ("remove", Json::arr(removes.iter().map(|r| Json::str(*r)).collect())),
+    ]);
+    std::fs::write(root.join("_log").join(format!("{version:08}.json")), entry.to_pretty())
+        .unwrap();
+}
+
+/// Opening an old-format cache through `ResponseCache::open` migrates it
+/// one-way to a `_delta_log` v0 commit: every legacy entry stays
+/// retrievable, the new log carries stats (so skipping works immediately),
+/// and the table keeps working as a writable Delta table.
+#[test]
+fn legacy_log_cache_migrates_through_open() {
+    let dir = tmp("legacy-migrate");
+    std::fs::create_dir_all(dir.join("_log")).unwrap();
+    std::fs::create_dir_all(dir.join("data")).unwrap();
+    let old = legacy_entry("stale-prompt");
+    let kept: Vec<CacheEntry> = (0..5).map(|i| legacy_entry(&format!("prompt-{i}"))).collect();
+    write_legacy_data_file(&dir, "00000000-0000.jsonl.gz", &[old.clone()]);
+    write_legacy_data_file(&dir, "00000001-0000.jsonl.gz", &kept);
+    write_legacy_commit(&dir, 0, &["00000000-0000.jsonl.gz"], &[]);
+    // The legacy v1 superseded v0's file — only `kept` is live.
+    write_legacy_commit(&dir, 1, &["00000001-0000.jsonl.gz"], &["00000000-0000.jsonl.gz"]);
+
+    let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+    assert_eq!(cache.len().unwrap(), 5);
+    assert_eq!(cache.current_version().unwrap(), Some(0), "migration is one v0 commit");
+    assert!(dir.join("_log.migrated").is_dir(), "legacy log retired, kept for forensics");
+    assert!(dir.join("_delta_log").join(format!("{:020}.json", 0)).exists());
+    for e in &kept {
+        let hit = cache.get(&e.prompt_text, "m", "prov", 0.0, 100).unwrap().unwrap();
+        assert_eq!(hit.response_text, e.response_text);
+    }
+    assert!(
+        cache.get(&old.prompt_text, "m", "prov", 0.0, 100).unwrap().is_none(),
+        "entries dead in the legacy log stay dead"
+    );
+
+    // Migrated adds carry stats on the cache's columns, so skipping works
+    // from the very first post-migration probe.
+    let fresh = ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap();
+    let state = fresh.table().state(None).unwrap().unwrap();
+    assert_eq!(state.files.len(), 1);
+    let stats = state.files[0].stats.as_ref().expect("migrated adds carry stats");
+    assert_eq!(stats.num_records, 5);
+    assert!(stats.min_values.contains_key("prompt_hash"));
+    assert!(stats.max_values.contains_key("model_name"));
+
+    // And the migrated table is a normal writable Delta table.
+    let resp = spark_llm_eval::providers::InferenceResponse {
+        text: "new".into(),
+        input_tokens: 1,
+        output_tokens: 1,
+        latency_ms: 1.0,
+        cost_usd: 0.0,
+    };
+    cache.put("post-migration", "m", "prov", 0.0, 100, &resp).unwrap();
+    cache.flush().unwrap();
+    assert_eq!(ResponseCache::open(&dir, CachePolicy::ReadOnly).unwrap().len().unwrap(), 6);
+}
+
+/// `inference.cache_skipping` rides the task through the full runner
+/// path; on or off, a warmed replay is bit-identical (all hits, no API
+/// calls, same metric values).
+#[test]
+fn task_skipping_toggle_is_bit_identical_end_to_end() {
+    let dir = tmp("toggle");
+    let df = synth::generate_default(80, 71);
+    let mut warm = fast_runner();
+    warm.open_cache(&dir, CachePolicy::Enabled).unwrap();
+    let r0 = warm.evaluate(&df, &task_with(CachePolicy::Enabled)).unwrap();
+    drop(warm); // flush
+
+    let mut on = task_with(CachePolicy::Replay);
+    on.inference.cache_skipping = true;
+    let mut off = task_with(CachePolicy::Replay);
+    off.inference.cache_skipping = false;
+    let mut results = Vec::new();
+    for task in [&on, &off] {
+        let mut runner = fast_runner();
+        runner.open_cache(&dir, CachePolicy::Replay).unwrap();
+        let r = runner.evaluate(&df, task).unwrap();
+        assert_eq!(r.inference.api_calls, 0);
+        assert_eq!(r.inference.cache_hits as usize, df.len());
+        results.push(r.metric("exact_match").unwrap().value);
+    }
+    assert_eq!(results[0], r0.metric("exact_match").unwrap().value);
+    assert_eq!(results[0], results[1], "skipping must not change any metric");
+}
+
+/// Full maintenance cycle against a runner-warmed cache: optimize
+/// range-clusters the flush files, vacuum reclaims the superseded ones,
+/// and a replay run afterwards is still all-hits with identical metrics.
+#[test]
+fn optimize_vacuum_cycle_preserves_replay() {
+    let dir = tmp("maintenance-cycle");
+    // Two warm runs → at least two flush files, so optimize has real work.
+    let df1 = synth::generate_default(60, 71);
+    let df2 = synth::generate_default(60, 72);
+    let mut w1 = fast_runner();
+    w1.open_cache(&dir, CachePolicy::Enabled).unwrap();
+    let r0 = w1.evaluate(&df1, &task_with(CachePolicy::Enabled)).unwrap();
+    drop(w1);
+    let mut w2 = fast_runner();
+    w2.open_cache(&dir, CachePolicy::Enabled).unwrap();
+    w2.evaluate(&df2, &task_with(CachePolicy::Enabled)).unwrap();
+    drop(w2);
+
+    let cache = ResponseCache::open(&dir, CachePolicy::Enabled).unwrap();
+    assert!(cache.table().state(None).unwrap().unwrap().files.len() >= 2);
+    let outcome = cache.optimize(u64::MAX).unwrap();
+    assert!(outcome.version.is_some());
+    assert!(outcome.metrics.removed_sizes.len() >= 2);
+    let vacuumed = cache.vacuum(0, false).unwrap();
+    assert!(vacuumed.deleted_files >= 2, "superseded flush files reclaimed");
+    assert!(vacuumed.reclaimed_bytes > 0);
+    drop(cache);
+
+    let mut replay = fast_runner();
+    replay.open_cache(&dir, CachePolicy::Replay).unwrap();
+    let r1 = replay.evaluate(&df1, &task_with(CachePolicy::Replay)).unwrap();
+    assert_eq!(r1.inference.api_calls, 0);
+    assert_eq!(
+        r1.metric("exact_match").unwrap().value,
+        r0.metric("exact_match").unwrap().value,
+        "maintenance must not change replayed metrics"
+    );
+    let r2 = replay.evaluate(&df2, &task_with(CachePolicy::Replay)).unwrap();
+    assert_eq!(r2.inference.api_calls, 0);
+}
